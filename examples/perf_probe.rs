@@ -1,0 +1,50 @@
+//! Profiling probe for the search hot path (used during the §Perf pass).
+use std::time::Instant;
+use toast::coordinator::experiments::{build_model, BenchScale};
+use toast::cost::CostModel;
+use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::models::ModelKind;
+use toast::nda::Nda;
+use toast::search::*;
+use toast::sharding::{partition, ShardingSpec};
+
+fn main() {
+    let func = build_model(ModelKind::T2B, BenchScale::Bench);
+    let mesh = Mesh::grid(&[("data", 4), ("model", 4)]);
+    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let nda = Nda::analyze(&func);
+    let actions = build_actions(&func, &nda, &mesh, &ActionSpaceConfig::default());
+    println!("{} actions, {} instrs", actions.len(), func.instrs.len());
+
+    // breakdown: spec clone, apply, partition, cost
+    let t0 = Instant::now();
+    let spec = ShardingSpec::unsharded(&func);
+    for _ in 0..1000 { std::hint::black_box(spec.clone()); }
+    println!("spec clone:      {:>10.1?}/it", t0.elapsed() / 1000);
+
+    let t0 = Instant::now();
+    for _ in 0..1000 {
+        let mut s = spec.clone();
+        s.apply_assignment(&func, &mesh, &actions[0].assignment, actions[0].axis).unwrap();
+    }
+    println!("clone+apply:     {:>10.1?}/it", t0.elapsed() / 1000);
+
+    // legal_actions-equivalent cost: probe all actions against a spec
+    let t0 = Instant::now();
+    for _ in 0..100 {
+        for a in &actions {
+            let mut s = spec.clone();
+            std::hint::black_box(s.apply_assignment(&func, &mesh, &a.assignment, a.axis).is_ok());
+        }
+    }
+    println!("probe-all ({}):  {:>10.1?}/it", actions.len(), t0.elapsed() / 100);
+
+    let t0 = Instant::now();
+    for _ in 0..100 { std::hint::black_box(partition(&func, &spec, &mesh).unwrap()); }
+    println!("partition:       {:>10.1?}/it", t0.elapsed() / 100);
+
+    // full search timing
+    let t0 = Instant::now();
+    let out = search(&func, &mesh, &model, &actions, &SearchConfig { budget: 150, seed: 1, ..Default::default() });
+    println!("search(150):     {:>10.1?} total, {} evals, rel {:.4}", t0.elapsed(), out.evals, out.relative);
+}

@@ -1,0 +1,46 @@
+//! Mini Figure-8 sweep: partition the paper's evaluation models with all
+//! four methods on one platform and print the comparison table.
+//!
+//! Run: `cargo run --release --example sweep_models`
+//! (Use `toast bench --experiment fig8` for the full grid.)
+
+use toast::baselines::Method;
+use toast::coordinator::experiments::{format_fig8, format_fig9, run_grid, BenchScale};
+use toast::mesh::HardwareKind;
+use toast::models::ModelKind;
+
+fn main() {
+    let models = [ModelKind::T2B, ModelKind::Gns, ModelKind::Itx];
+    println!(
+        "sweeping {:?} x {:?} x {:?} (bench scale — structure-preserving shrink)\n",
+        models.iter().map(|m| m.name()).collect::<Vec<_>>(),
+        ["A100"],
+        Method::all().iter().map(|m| m.name()).collect::<Vec<_>>(),
+    );
+    let rows = run_grid(BenchScale::Bench, &models, &[HardwareKind::A100], &Method::all());
+    print!("{}", format_fig8(&rows));
+    println!();
+    print!("{}", format_fig9(&rows));
+
+    // The paper's headline: TOAST at least matches every baseline.
+    for mk in models {
+        let toast_row = rows
+            .iter()
+            .find(|r| r.model == mk && r.method == Method::Toast)
+            .expect("toast row");
+        for r in rows.iter().filter(|r| r.model == mk && r.method != Method::Toast) {
+            if !toast_row.oom && !r.oom {
+                let slack = toast_row.step_ms / r.step_ms;
+                println!(
+                    "{:>6}: TOAST {:>9.3} ms vs {:<8} {:>9.3} ms ({}{:.0}%)",
+                    mk.name(),
+                    toast_row.step_ms,
+                    r.method.name(),
+                    r.step_ms,
+                    if slack <= 1.0 { "-" } else { "+" },
+                    (slack - 1.0).abs() * 100.0
+                );
+            }
+        }
+    }
+}

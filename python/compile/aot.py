@@ -1,0 +1,166 @@
+"""AOT pipeline: lower the L2 model's step functions to HLO **text**
+artifacts for the Rust PJRT runtime.
+
+HLO text — not ``HloModuleProto.serialize()`` — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts (all under ``artifacts/``):
+
+* ``fwd.hlo.txt``       — logits = forward(params…, tokens)
+* ``grad.hlo.txt``      — (loss, grads…) = value_and_grad on a local batch
+* ``adam.hlo.txt``      — (params', m', v') = adam(params…, m…, v…, grads…)
+* ``kernel_attn.hlo.txt`` — the Pallas attention kernel standalone
+* ``manifest.json``     — parameter order/shapes + entry signatures
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model as M  # noqa: E402
+from compile.kernels.attention import blocked_attention  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="primary artifact path; siblings land next to it")
+    ap.add_argument("--large", action="store_true",
+                    help="use the ~100M-parameter e2e_large config")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = M.Config.e2e_large() if args.large else M.Config.e2e()
+    params = M.init_params(cfg)
+    names = sorted(params.keys())
+    flat = [params[n] for n in names]
+    specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in flat]
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+
+    def write(name: str, text: str) -> str:
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {name}: {len(text) / 1e6:.2f} MB")
+        return path
+
+    # ---- forward --------------------------------------------------------
+    def fwd_flat(*args):
+        ps = dict(zip(names, args[: len(names)]))
+        return (M.forward(cfg, ps, args[len(names)]),)
+
+    lowered = jax.jit(fwd_flat).lower(*specs, tok_spec)
+    write("fwd.hlo.txt", to_hlo_text(lowered))
+
+    # ---- local gradient step ---------------------------------------------
+    # Exported per data-parallel degree: the device-local executable of a
+    # batch-sharded partition has a smaller leading batch dim (exactly what
+    # the Rust partitioner's batch sharding prescribes).
+    grad_fn = M.local_grad_step(cfg)
+
+    def grad_flat(*args):
+        ps = dict(zip(names, args[: len(names)]))
+        tokens, targets = args[len(names)], args[len(names) + 1]
+        loss, grads = grad_fn(ps, tokens, targets)
+        return (loss, *[grads[n] for n in names])
+
+    for dp in (1, 2, 4):
+        if cfg.batch % dp != 0:
+            continue
+        local = jax.ShapeDtypeStruct((cfg.batch // dp, cfg.seq), jnp.int32)
+        lowered = jax.jit(grad_flat).lower(*specs, local, local)
+        name = "grad.hlo.txt" if dp == 1 else f"grad_dp{dp}.hlo.txt"
+        write(name, to_hlo_text(lowered))
+
+    # ---- adam apply -------------------------------------------------------
+    adam_fn = M.adam_apply(lr=5e-3)
+
+    def adam_flat(*args):
+        n = len(names)
+        ps = dict(zip(names, args[:n]))
+        m = dict(zip(names, args[n : 2 * n]))
+        v = dict(zip(names, args[2 * n : 3 * n]))
+        g = dict(zip(names, args[3 * n : 4 * n]))
+        np_, nm, nv = adam_fn(ps, m, v, g)
+        return tuple(
+            [np_[k] for k in names] + [nm[k] for k in names] + [nv[k] for k in names]
+        )
+
+    lowered = jax.jit(adam_flat).lower(*(specs * 4))
+    write("adam.hlo.txt", to_hlo_text(lowered))
+
+    # ---- standalone attention kernel ----------------------------------------
+    q_spec = jax.ShapeDtypeStruct(
+        (cfg.batch, cfg.heads, cfg.seq, cfg.key_size), jnp.float32
+    )
+    lowered = jax.jit(lambda q, k, v: (blocked_attention(q, k, v),)).lower(
+        q_spec, q_spec, q_spec
+    )
+    write("kernel_attn.hlo.txt", to_hlo_text(lowered))
+
+    # ---- manifest --------------------------------------------------------------
+    manifest = {
+        "config": {
+            "d_model": cfg.d_model,
+            "layers": cfg.layers,
+            "hidden": cfg.hidden,
+            "heads": cfg.heads,
+            "key_size": cfg.key_size,
+            "vocab": cfg.vocab,
+            "batch": cfg.batch,
+            "seq": cfg.seq,
+            "param_count": cfg.param_count(),
+        },
+        "param_names": names,
+        "param_shapes": {n: list(params[n].shape) for n in names},
+        "entries": {
+            "fwd": {"file": "fwd.hlo.txt", "inputs": "params + tokens", "outputs": "(logits,)"},
+            "grad": {
+                "file": "grad.hlo.txt",
+                "inputs": "params + tokens + targets",
+                "outputs": "(loss, grads...)",
+            },
+            "adam": {
+                "file": "adam.hlo.txt",
+                "inputs": "params + m + v + grads",
+                "outputs": "(params', m', v')",
+            },
+            "kernel_attn": {
+                "file": "kernel_attn.hlo.txt",
+                "inputs": "q, k, v [batch, heads, seq, key]",
+                "outputs": "(out,)",
+            },
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+    # keep the Makefile's primary target fresh
+    with open(args.out, "w") as f:
+        f.write("# see sibling artifacts: fwd/grad/adam/kernel_attn .hlo.txt\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""L1: Pallas blocked attention kernel (online softmax / flash-attention
+style), the compute hot-spot of the transformer model TOAST partitions.
+
+TPU thinking (DESIGN.md §Hardware-Adaptation): Q is tiled into
+``(BLOCK_Q, d)`` VMEM blocks via the grid; K/V stream through VMEM in
+``BLOCK_KV`` chunks inside the kernel; the S×S score tile never
+materializes in HBM — the sequence dimension is exactly the dimension
+whose sharding conflict TOAST's NDA resolves (paper §3.3), so the kernel's
+KV-blocking matches the `all_gather k` / `reduce_scatter z` decomposition
+of Figure 5b. Block sizes target MXU-friendly multiples; ``interpret=True``
+is mandatory on CPU (real TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. On a real TPU these would be 128-multiples to fill
+# the MXU systolic array; kept adaptive so tiny test shapes work in
+# interpret mode.
+BLOCK_Q = 128
+BLOCK_KV = 128
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_kv: int, scale: float):
+    """One (batch*head, q-block) grid cell: online-softmax accumulation
+    over KV blocks. q_ref: [bq, d]; k_ref/v_ref: [S, d]; o_ref: [bq, d].
+    """
+    q = q_ref[...].astype(jnp.float32) * scale
+    seq = k_ref.shape[0]
+    bq, d = q.shape
+    n_kv = seq // block_kv
+
+    def body(i, carry):
+        acc, m_prev, l_prev = carry
+        k = pl.load(k_ref, (pl.dslice(i * block_kv, block_kv), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(i * block_kv, block_kv), slice(None)))
+        s = q @ k.astype(jnp.float32).T  # [bq, block_kv]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_kv, body, (acc0, m0, l0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _attention_ref_for_vjp(q, k, v):
+    """f32 reference used for the backward pass (Pallas interpret-mode
+    kernels do not support reverse-mode autodiff; pairing a fused forward
+    kernel with a recomputing backward is standard flash-attention
+    practice)."""
+    d = q.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def blocked_attention(q, k, v, block_q: int = BLOCK_Q, block_kv: int = BLOCK_KV):
+    """Multi-head attention via the Pallas kernel.
+
+    Shapes: q/k/v ``[batch, heads, seq, d]`` -> ``[batch, heads, seq, d]``.
+    Causal masking is omitted (matches the paper's Figure 5 formulation).
+    """
+    b, h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0, "seq must divide blocks"
+    scale = 1.0 / (d ** 0.5)
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    kernel = functools.partial(_attn_kernel, block_kv=block_kv, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+def vmem_estimate_bytes(block_q: int, block_kv: int, d: int, dtype_bytes: int = 4) -> int:
+    """Estimated per-core VMEM footprint of one grid cell: the Q tile, one
+    K and one V tile, the score tile, and the f32 accumulators. Used by
+    DESIGN.md §Perf to pick block sizes under the ~16 MiB VMEM budget."""
+    q_tile = block_q * d * dtype_bytes
+    kv_tiles = 2 * block_kv * d * dtype_bytes
+    score = block_q * block_kv * 4
+    acc = block_q * d * 4 + 2 * block_q * 4
+    return q_tile + kv_tiles + score + acc
+
+
+def mxu_utilization_estimate(block_q: int, block_kv: int, d: int) -> float:
+    """Fraction of 128x128 MXU tiles usefully filled by the two matmuls of
+    one KV step (structure-level estimate; interpret-mode wallclock is not
+    a TPU proxy)."""
+    def eff(m, n, k):
+        pad = lambda x: ((x + 127) // 128) * 128
+        return (m * n * k) / (pad(m) * pad(n) * pad(k))
+
+    # s = q @ k^T : [bq, d] x [d, bkv]; acc += p @ v : [bq, bkv] x [bkv, d]
+    return 0.5 * (eff(block_q, block_kv, d) + eff(block_q, d, block_kv))
+
+
+def _blocked_attention_fwd(q, k, v, block_q, block_kv):
+    return blocked_attention(q, k, v, block_q, block_kv), (q, k, v)
+
+
+def _blocked_attention_bwd(block_q, block_kv, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(_attention_ref_for_vjp, q, k, v)
+    return vjp(g)
+
+
+blocked_attention.defvjp(_blocked_attention_fwd, _blocked_attention_bwd)

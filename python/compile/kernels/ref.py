@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must match its reference here to float32
+tolerance across the hypothesis-swept shape/dtype grid in
+``python/tests/test_kernel.py``.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """Reference multi-head attention: q/k/v [batch, heads, seq, d]."""
+    d = q.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    """RMSNorm over the last dim."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jnp.reciprocal(jnp.sqrt(var + eps)) * scale).astype(x.dtype)
+
+
+def mlp_ref(x, w_gate, w_up, w_down):
+    """GeGLU MLP block reference."""
+    gate = x @ w_gate
+    up = x @ w_up
+    act = gate * (1.0 / (1.0 + jnp.exp(-1.702 * gate)))  # gelu approx
+    return (act * up) @ w_down

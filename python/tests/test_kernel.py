@@ -1,0 +1,102 @@
+"""L1 correctness: the Pallas attention kernel vs the pure-jnp oracle,
+hypothesis-swept across shapes and dtypes — the core correctness signal
+for the compile path."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (
+    blocked_attention,
+    mxu_utilization_estimate,
+    vmem_estimate_bytes,
+)
+from compile.kernels.ref import attention_ref, mlp_ref, rmsnorm_ref
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    batch=st.sampled_from([1, 2]),
+    heads=st.sampled_from([1, 2, 4]),
+    seq=st.sampled_from([64, 128, 256]),
+    d=st.sampled_from([16, 32, 64]),
+    block_q=st.sampled_from([32, 64, 128]),
+    block_kv=st.sampled_from([32, 64]),
+)
+def test_attention_matches_ref_shapes(batch, heads, seq, d, block_q, block_kv):
+    q = rand(1, (batch, heads, seq, d), jnp.float32)
+    k = rand(2, (batch, heads, seq, d), jnp.float32)
+    v = rand(3, (batch, heads, seq, d), jnp.float32)
+    out = blocked_attention(q, k, v, block_q=block_q, block_kv=block_kv)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5), (jnp.bfloat16, 3e-2)])
+def test_attention_dtypes(dtype, atol):
+    q = rand(4, (2, 2, 128, 32), dtype)
+    k = rand(5, (2, 2, 128, 32), dtype)
+    v = rand(6, (2, 2, 128, 32), dtype)
+    out = blocked_attention(q, k, v)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=atol, rtol=atol
+    )
+
+
+def test_attention_rows_are_convex_combinations():
+    # attention output must lie within the convex hull of V rows
+    q = rand(7, (1, 1, 64, 16), jnp.float32)
+    k = rand(8, (1, 1, 64, 16), jnp.float32)
+    v = jnp.ones((1, 1, 64, 16), jnp.float32) * 3.0
+    out = blocked_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), 3.0, atol=1e-5)
+
+
+def test_single_kv_block_degenerates_to_softmax():
+    q = rand(9, (1, 1, 32, 8), jnp.float32)
+    k = rand(10, (1, 1, 32, 8), jnp.float32)
+    v = rand(11, (1, 1, 32, 8), jnp.float32)
+    out = blocked_attention(q, k, v, block_q=32, block_kv=32)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_vmem_estimate_under_budget():
+    # DESIGN.md §Perf: the default block shapes must fit TPU VMEM (~16 MiB)
+    assert vmem_estimate_bytes(128, 128, 256) < 16 * 1024 * 1024
+    assert vmem_estimate_bytes(512, 512, 256) < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_prefers_aligned_blocks():
+    aligned = mxu_utilization_estimate(128, 128, 128)
+    ragged = mxu_utilization_estimate(100, 100, 100)
+    assert aligned == 1.0
+    assert ragged < aligned
+
+
+def test_rmsnorm_ref_unit_variance():
+    x = rand(12, (4, 64), jnp.float32)
+    out = rmsnorm_ref(x, jnp.ones((64,)))
+    rms = np.sqrt(np.mean(np.square(np.asarray(out)), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_mlp_ref_shapes():
+    x = rand(13, (4, 8), jnp.float32)
+    wg = rand(14, (8, 32), jnp.float32)
+    wu = rand(15, (8, 32), jnp.float32)
+    wd = rand(16, (32, 8), jnp.float32)
+    out = mlp_ref(x, wg, wu, wd)
+    assert out.shape == (4, 8)

@@ -1,0 +1,62 @@
+//! Ablation benches over TOAST's design choices (DESIGN.md §7):
+//! conflict-resolution enumeration (§4.2), parameter-group mirroring
+//! (§4.4), and the action-space pruning threshold.
+//!
+//! Run: `cargo bench --bench ablations`
+
+mod bench_harness;
+
+use toast::coordinator::experiments::{build_model, BenchScale};
+use toast::cost::CostModel;
+use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::models::ModelKind;
+use toast::nda::Nda;
+use toast::search::{auto_partition, build_actions, ActionSpaceConfig, SearchConfig};
+
+fn main() {
+    let scale = match std::env::var("TOAST_SCALE").as_deref() {
+        Ok("tiny") => BenchScale::Tiny,
+        Ok("paper") => BenchScale::Paper,
+        _ => BenchScale::Bench,
+    };
+    let model_kinds = [ModelKind::T2B, ModelKind::Gns];
+    let mesh = Mesh::grid(&[("data", 4), ("model", 4)]);
+    let cost = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let scfg = SearchConfig { budget: scale.budget(), seed: 5, ..Default::default() };
+
+    let variants: Vec<(&str, ActionSpaceConfig)> = vec![
+        ("full", ActionSpaceConfig::default()),
+        (
+            "-resolutions",
+            ActionSpaceConfig { enumerate_resolutions: false, ..Default::default() },
+        ),
+        (
+            "-mirroring",
+            ActionSpaceConfig { mirror_param_groups: false, ..Default::default() },
+        ),
+        ("prune=1", ActionSpaceConfig { min_color_dims: 1, ..Default::default() }),
+        ("prune=50", ActionSpaceConfig { min_color_dims: 50, ..Default::default() }),
+    ];
+
+    println!(
+        "{:<8} {:<14} {:>8} {:>10} {:>10} {:>8}",
+        "model", "variant", "actions", "rel cost", "search_s", "evals"
+    );
+    for kind in model_kinds {
+        let func = build_model(kind, scale);
+        for (name, acfg) in &variants {
+            let nda = Nda::analyze(&func);
+            let n_actions = build_actions(&func, &nda, &mesh, acfg).len();
+            let out = auto_partition(&func, &mesh, &cost, acfg, &scfg);
+            println!(
+                "{:<8} {:<14} {:>8} {:>10.4} {:>10.2} {:>8}",
+                kind.name(),
+                name,
+                n_actions,
+                out.relative,
+                out.wall.as_secs_f64(),
+                out.evals
+            );
+        }
+    }
+}

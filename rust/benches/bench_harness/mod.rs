@@ -1,0 +1,50 @@
+//! Minimal bench harness shared by the figure benches (criterion is
+//! unavailable in this offline environment; this provides warmup +
+//! repeated timing with mean/min/max reporting, plus table output that
+//! mirrors the paper's figures).
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics of repeated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn display(&self) -> String {
+        format!(
+            "mean {:>10.3?}  min {:>10.3?}  max {:>10.3?}  ({} iters)",
+            self.mean, self.min, self.max, self.iters
+        )
+    }
+}
+
+/// Time `f` with one warmup run and up to `iters` measured runs (capped
+/// by a soft time budget so slow benches stay bounded).
+pub fn bench<T>(name: &str, iters: usize, budget: Duration, mut f: impl FnMut() -> T) -> Stats {
+    let _warm = f();
+    let mut times = Vec::with_capacity(iters);
+    let start = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let out = f();
+        times.push(t0.elapsed());
+        std::hint::black_box(&out);
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    let total: Duration = times.iter().sum();
+    let stats = Stats {
+        mean: total / times.len() as u32,
+        min: *times.iter().min().unwrap(),
+        max: *times.iter().max().unwrap(),
+        iters: times.len(),
+    };
+    println!("{name:<52} {}", stats.display());
+    stats
+}

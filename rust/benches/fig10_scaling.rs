@@ -1,0 +1,40 @@
+//! Figure 10 reproduction: T2B sequence-length scaling on a 3-D
+//! Batch×Seq×Model mesh — step time (10a) and search time (10b) per
+//! method, with OOM markers. The claim under test (§5.4): TOAST stays
+//! feasible (via conflict-resolution ordering, i.e. sequence sharding) at
+//! sequence lengths where Alpa/AutoMap OOM or degrade, matching Manual.
+//!
+//! Run: `cargo bench --bench fig10_scaling`
+
+mod bench_harness;
+
+use toast::baselines::Method;
+use toast::coordinator::experiments::{format_fig10, run_seq_scaling, BenchScale};
+
+fn main() {
+    let scale = match std::env::var("TOAST_SCALE").as_deref() {
+        Ok("tiny") => BenchScale::Tiny,
+        Ok("paper") => BenchScale::Paper,
+        _ => BenchScale::Bench,
+    };
+    println!("fig10: sequence scaling, scale {scale:?}");
+    let t0 = std::time::Instant::now();
+    let points = run_seq_scaling(scale);
+    println!("sweep completed in {:?}\n", t0.elapsed());
+    print!("{}", format_fig10(&points));
+
+    // Shape check: TOAST must not OOM at the longest sequence length.
+    if let Some((seq, _, rows)) = points.last() {
+        let toast = rows.iter().find(|r| r.method == Method::Toast).unwrap();
+        println!(
+            "\nat seq {}: TOAST {} (peak {:.2} GiB); baselines OOM: {:?}",
+            seq,
+            if toast.oom { "OOM!" } else { "fits" },
+            toast.peak_gib,
+            rows.iter()
+                .filter(|r| r.oom)
+                .map(|r| r.method.name())
+                .collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! Figure 8 reproduction: partitioned model step time per model ×
+//! platform × method (16 devices). Prints the paper-style table and a
+//! JSON dump for EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench fig8_step_time`
+//! Env: `TOAST_SCALE=tiny|bench|paper` (default bench).
+
+mod bench_harness;
+
+use toast::baselines::Method;
+use toast::coordinator::experiments::{format_fig8, grid_json, run_grid, BenchScale};
+use toast::mesh::HardwareKind;
+use toast::models::ModelKind;
+
+fn scale_from_env() -> BenchScale {
+    match std::env::var("TOAST_SCALE").as_deref() {
+        Ok("tiny") => BenchScale::Tiny,
+        Ok("paper") => BenchScale::Paper,
+        _ => BenchScale::Bench,
+    }
+}
+
+fn main() {
+    let scale = scale_from_env();
+    let models = ModelKind::paper_eval_set();
+    println!("fig8: step time, scale {scale:?}, models {:?}", models.map(|m| m.name()));
+    let t0 = std::time::Instant::now();
+    let rows = run_grid(scale, &models, &HardwareKind::all(), &Method::all());
+    println!("grid completed in {:?}\n", t0.elapsed());
+    print!("{}", format_fig8(&rows));
+
+    // Shape checks mirroring the paper's claims (§5.2): TOAST never OOMs
+    // and is never far behind the best baseline.
+    let mut violations = 0;
+    for &mk in &models {
+        for &hw in &HardwareKind::all() {
+            let get = |m: Method| {
+                rows.iter().find(|r| r.model == mk && r.hardware == hw && r.method == m)
+            };
+            let Some(t) = get(Method::Toast) else { continue };
+            if t.oom {
+                println!("!! TOAST OOM on {} / {}", mk.name(), hw.name());
+                violations += 1;
+            }
+            for m in [Method::Manual, Method::Alpa, Method::AutoMap] {
+                if let Some(b) = get(m) {
+                    if !b.oom && !t.oom && t.step_ms > b.step_ms * 1.10 {
+                        println!(
+                            "!! TOAST {:.3}ms > {} {:.3}ms (+10%) on {}/{}",
+                            t.step_ms,
+                            m.name(),
+                            b.step_ms,
+                            mk.name(),
+                            hw.name()
+                        );
+                        violations += 1;
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "\nheadline check: {} violations of 'TOAST within 10% of best, no OOM'",
+        violations
+    );
+    println!("\nJSON: {}", grid_json(&rows));
+}

@@ -1,0 +1,48 @@
+//! Figure 9 reproduction: auto-sharding search time per model × platform
+//! × method. The claims under test (§5.3): TOAST and AutoMap are
+//! platform-agnostic, Alpa is much slower on GPU profiles than TPU, and
+//! AutoMap's per-action propagation makes it the slowest overall on deep
+//! models.
+//!
+//! Run: `cargo bench --bench fig9_search_time`
+
+mod bench_harness;
+
+use toast::baselines::Method;
+use toast::coordinator::experiments::{format_fig9, grid_json, run_grid, BenchScale};
+use toast::mesh::HardwareKind;
+use toast::models::ModelKind;
+
+fn main() {
+    let scale = match std::env::var("TOAST_SCALE").as_deref() {
+        Ok("tiny") => BenchScale::Tiny,
+        Ok("paper") => BenchScale::Paper,
+        _ => BenchScale::Bench,
+    };
+    let models = [ModelKind::T2B, ModelKind::Gns, ModelKind::UNet];
+    println!("fig9: search time, scale {scale:?}");
+    let rows = run_grid(scale, &models, &HardwareKind::all(), &Method::all());
+    print!("{}", format_fig9(&rows));
+
+    // §5.3 shape checks.
+    let mean = |method: Method, hw: Option<HardwareKind>| -> f64 {
+        let sel: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.method == method && hw.map(|h| r.hardware == h).unwrap_or(true))
+            .map(|r| r.search_s)
+            .collect();
+        sel.iter().sum::<f64>() / sel.len().max(1) as f64
+    };
+    let alpa_gpu = mean(Method::Alpa, Some(HardwareKind::A100))
+        .max(mean(Method::Alpa, Some(HardwareKind::P100)));
+    let alpa_tpu = mean(Method::Alpa, Some(HardwareKind::TPUv3));
+    println!(
+        "\nAlpa GPU/TPU search-time ratio: {:.2}x (paper: GPU significantly slower)",
+        alpa_gpu / alpa_tpu.max(1e-9)
+    );
+    println!(
+        "AutoMap/TOAST search-time ratio: {:.2}x (paper: up to 25x on deep models)",
+        mean(Method::AutoMap, None) / mean(Method::Toast, None).max(1e-9)
+    );
+    println!("\nJSON: {}", grid_json(&rows));
+}

@@ -1,0 +1,92 @@
+//! Microbenchmarks of the search hot path (DESIGN.md §Perf / EXPERIMENTS
+//! §Perf):
+//!
+//! * NDA analysis time per model (target: T7B-shape < 1 s);
+//! * one MCTS state evaluation — spec build + partition + cost
+//!   (target: < 5 ms at bench scale);
+//! * action-space construction;
+//! * the interpreter on the tiny transformer (sanity floor).
+//!
+//! Run: `cargo bench --bench microbench`
+
+mod bench_harness;
+
+use bench_harness::bench;
+use std::time::Duration;
+use toast::coordinator::experiments::{build_model, BenchScale};
+use toast::cost::CostModel;
+use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::models::ModelKind;
+use toast::nda::Nda;
+use toast::search::{build_actions, ActionSpaceConfig};
+use toast::sharding::{partition, ShardingSpec};
+
+fn main() {
+    let budget = Duration::from_secs(20);
+    let mesh = Mesh::grid(&[("data", 4), ("model", 4)]);
+    let cost = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+
+    // --- NDA analysis
+    for kind in [ModelKind::T2B, ModelKind::T7B, ModelKind::Gns, ModelKind::UNet] {
+        let func = kind.build_paper();
+        let n = func.instrs.len();
+        let s = bench(
+            &format!("nda/{} ({} instrs, paper scale)", kind.name(), n),
+            10,
+            budget,
+            || Nda::analyze(&func),
+        );
+        assert!(
+            s.mean < Duration::from_secs(1),
+            "NDA of {} must stay under 1s",
+            kind.name()
+        );
+    }
+
+    // --- action space construction
+    let func = build_model(ModelKind::T2B, BenchScale::Bench);
+    let nda = Nda::analyze(&func);
+    bench("actions/T2B bench scale", 10, budget, || {
+        build_actions(&func, &nda, &mesh, &ActionSpaceConfig::default())
+    });
+
+    // --- one search evaluation (apply + partition + cost)
+    let actions = build_actions(&func, &nda, &mesh, &ActionSpaceConfig::default());
+    let a = &actions[0];
+    bench("evaluate/T2B bench scale (1 action)", 30, budget, || {
+        let mut spec = ShardingSpec::unsharded(&func);
+        spec.apply_assignment(&func, &mesh, &a.assignment, a.axis).unwrap();
+        let (local, _) = partition(&func, &spec, &mesh).unwrap();
+        cost.evaluate(&local, &mesh)
+    });
+
+    // --- identity partition (pure rewrite overhead)
+    bench("partition/identity T2B bench scale", 30, budget, || {
+        let spec = ShardingSpec::unsharded(&func);
+        partition(&func, &spec, &mesh).unwrap()
+    });
+
+    // --- cost model alone
+    let spec = ShardingSpec::unsharded(&func);
+    let (local, _) = partition(&func, &spec, &mesh).unwrap();
+    bench("cost/T2B bench scale", 50, budget, || cost.evaluate(&local, &mesh));
+
+    // --- interpreter sanity (tiny transformer forward)
+    let tiny = ModelKind::T2B.build_scaled();
+    let inputs: Vec<toast::ir::interp::Tensor> = tiny
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let shape: Vec<usize> = p.ty.shape.iter().map(|&d| d as usize).collect();
+            if p.ty.dtype == toast::ir::DType::I32 {
+                toast::ir::interp::Tensor::zeros(shape)
+            } else {
+                toast::ir::interp::Tensor::randn(shape, i as u64)
+            }
+        })
+        .collect();
+    bench("interp/tiny transformer train step", 5, budget, || {
+        toast::ir::interp::eval_func(&tiny, &inputs).unwrap()
+    });
+}

@@ -1,0 +1,133 @@
+//! The paper's comparison methods (§5): expert/manual strategies,
+//! AutoMap-like propagation search, and Alpa-like per-op assignment.
+//!
+//! These are faithful *functional simulacra* of the closed-source
+//! comparators: each reproduces the defining algorithmic structure and
+//! cost asymmetry the paper measures —
+//!
+//! * **Manual** (§5.1.1): expert strategy templates (FSDP, Megatron,
+//!   sequence parallelism, edge sharding, MQA sharding) exhaustively
+//!   combined and scored with the shared cost model.
+//! * **AutoMap** [3, 36]: shards *parameters* only and invokes a
+//!   GSPMD-style propagation sweep over the whole module after **every**
+//!   action — the per-action propagation is exactly why its search time
+//!   blows up on deep models (§5.3, 25× on U-Net/GNS).
+//! * **Alpa** [47]: enumerates per-op sharding strategies and solves the
+//!   assignment by iterated local relaxation (standing in for its ILP);
+//!   its cost constraints are TPU-tuned, so on GPU profiles the solver
+//!   needs many more sweeps to converge (§5.3) and it cannot express
+//!   conflict-resolution orders (§5.2's OOMs at long sequence lengths).
+//!
+//! All methods share the cost model and the SPMD partitioner, so step-time
+//! comparisons isolate *search quality*, exactly as in the paper.
+
+pub mod alpa;
+pub mod automap;
+pub mod manual;
+
+use crate::cost::{Cost, CostModel};
+use crate::ir::Func;
+use crate::mesh::Mesh;
+use crate::models::ModelKind;
+use crate::search::{ActionSpaceConfig, SearchConfig};
+use crate::sharding::{partition, ShardingSpec};
+use std::time::Duration;
+
+/// A partitioning method under evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Manual,
+    Alpa,
+    AutoMap,
+    Toast,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Manual => "Manual",
+            Method::Alpa => "Alpa",
+            Method::AutoMap => "AutoMap",
+            Method::Toast => "TOAST",
+        }
+    }
+
+    pub fn all() -> [Method; 4] {
+        [Method::Manual, Method::Alpa, Method::AutoMap, Method::Toast]
+    }
+}
+
+/// Outcome of one method on one (model, mesh, hardware) point.
+#[derive(Clone, Debug)]
+pub struct MethodResult {
+    pub method: Method,
+    /// Estimated per-step time of the partitioned module, seconds.
+    pub step_time_s: f64,
+    /// Relative cost C(s) (§4.5).
+    pub relative: f64,
+    pub cost: Cost,
+    pub base: Cost,
+    /// Search wall-clock.
+    pub search_time: Duration,
+    /// True if the best found solution still exceeds device memory.
+    pub oom: bool,
+    pub spec: ShardingSpec,
+}
+
+/// Evaluate a spec into a [`MethodResult`].
+pub fn finish(
+    method: Method,
+    func: &Func,
+    mesh: &Mesh,
+    model: &CostModel,
+    spec: ShardingSpec,
+    search_time: Duration,
+) -> MethodResult {
+    let base = {
+        let unsharded = ShardingSpec::unsharded(func);
+        let (local, _) = partition(func, &unsharded, mesh).expect("identity partition");
+        model.evaluate(&local, mesh)
+    };
+    let (local, _) = partition(func, &spec, mesh).expect("spec partitions");
+    let cost = model.evaluate(&local, mesh);
+    MethodResult {
+        method,
+        step_time_s: cost.runtime_s,
+        relative: model.relative(&cost, &base),
+        oom: !model.fits(&cost),
+        cost,
+        base,
+        search_time,
+        spec,
+    }
+}
+
+/// Run `method` on `(func, mesh, hardware)`.
+pub fn run_method(
+    method: Method,
+    kind: ModelKind,
+    func: &Func,
+    mesh: &Mesh,
+    model: &CostModel,
+    budget: usize,
+    seed: u64,
+) -> MethodResult {
+    match method {
+        Method::Manual => manual::run(kind, func, mesh, model),
+        Method::Alpa => alpa::run(func, mesh, model, budget),
+        Method::AutoMap => automap::run(func, mesh, model, budget, seed),
+        Method::Toast => {
+            let t0 = std::time::Instant::now();
+            let out = crate::search::auto_partition(
+                func,
+                mesh,
+                model,
+                &ActionSpaceConfig { min_color_dims: 4, ..Default::default() },
+                &SearchConfig { budget, seed, ..Default::default() },
+            );
+            let mut r = finish(Method::Toast, func, mesh, model, out.spec, t0.elapsed());
+            r.search_time = t0.elapsed();
+            r
+        }
+    }
+}

@@ -1,0 +1,373 @@
+//! Experiment runners regenerating the paper's evaluation (§5):
+//!
+//! * **Fig 8** — partitioned model step time (ms), per model × platform ×
+//!   method, 16 devices.
+//! * **Fig 9** — auto-sharding search time (s), same grid.
+//! * **Fig 10** — T2B sequence-length scaling on a 3-D Batch×Seq×Model
+//!   mesh: step time and search time vs sequence length/devices.
+//! * **Ablations** — conflict-resolution actions, action-space pruning
+//!   threshold, and parameter-group mirroring (the DESIGN.md §7 switches).
+//!
+//! Absolute milliseconds come from the shared analytic cost model (this
+//! testbed has no accelerators); the *shape* of the comparison — who
+//! wins, where OOMs appear, how search time scales — is the
+//! reproduction target (DESIGN.md §3).
+
+use crate::baselines::{run_method, Method, MethodResult};
+use crate::cost::CostModel;
+use crate::ir::Func;
+use crate::mesh::{HardwareKind, HardwareProfile, Mesh};
+use crate::models::{gns, itx, transformer, unet, ModelKind};
+use crate::util::json::Json;
+
+/// How big the experiment models are.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BenchScale {
+    /// Interpreter-sized (seconds; used by tests).
+    Tiny,
+    /// Structure-preserving mid-size (default for `cargo bench`).
+    Bench,
+    /// The paper's full-size IR (minutes).
+    Paper,
+}
+
+impl BenchScale {
+    pub fn budget(self) -> usize {
+        match self {
+            BenchScale::Tiny => 60,
+            BenchScale::Bench => 150,
+            BenchScale::Paper => 300,
+        }
+    }
+}
+
+/// Which experiment to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Experiment {
+    Fig8,
+    Fig9,
+    Fig10,
+    Ablations,
+}
+
+impl std::str::FromStr for Experiment {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "fig8" => Ok(Experiment::Fig8),
+            "fig9" => Ok(Experiment::Fig9),
+            "fig10" => Ok(Experiment::Fig10),
+            "ablations" => Ok(Experiment::Ablations),
+            other => Err(format!("unknown experiment '{other}' (fig8|fig9|fig10|ablations)")),
+        }
+    }
+}
+
+/// Build a model at the requested scale (structure-preserving shrink for
+/// `Bench`).
+pub fn build_model(kind: ModelKind, scale: BenchScale) -> Func {
+    match scale {
+        BenchScale::Tiny => kind.build_scaled(),
+        BenchScale::Paper => kind.build_paper(),
+        BenchScale::Bench => match kind {
+            ModelKind::T2B => transformer::training_step(&transformer::TransformerConfig {
+                d_model: 512,
+                layers: 4,
+                hidden: 2048,
+                heads: 8,
+                key_size: 64,
+                vocab: 8192,
+                batch: 16,
+                seq: 512,
+                training: true,
+            }),
+            ModelKind::T7B => transformer::training_step(&transformer::TransformerConfig {
+                d_model: 768,
+                layers: 6,
+                hidden: 3072,
+                heads: 12,
+                key_size: 64,
+                vocab: 8192,
+                batch: 16,
+                seq: 512,
+                training: true,
+            }),
+            ModelKind::Gns => gns::training_step(&gns::GnsConfig {
+                n_nodes: 512,
+                n_edges: 2048,
+                latent: 256,
+                hidden: 128,
+                steps: 8,
+                training: true,
+            }),
+            ModelKind::UNet => unet::training_step(&unet::UNetConfig {
+                batch: 8,
+                size: 32,
+                in_channels: 4,
+                base_channels: 64,
+                channel_mults: vec![1, 2],
+                down_blocks_per_level: 2,
+                up_blocks_per_level: 2,
+                attn_heads: 8,
+                training: true,
+            }),
+            ModelKind::Itx => itx::inference_step(&itx::ItxConfig {
+                d_model: 256,
+                layers: 6,
+                hidden: 1024,
+                heads: 8,
+                vocab: 8192,
+                batch: 8,
+                cache_len: 512,
+            }),
+            other => other.build_scaled(),
+        },
+    }
+}
+
+/// One grid point result.
+#[derive(Clone, Debug)]
+pub struct GridRow {
+    pub model: ModelKind,
+    pub hardware: HardwareKind,
+    pub method: Method,
+    pub step_ms: f64,
+    pub search_s: f64,
+    pub oom: bool,
+    pub relative: f64,
+    pub peak_gib: f64,
+}
+
+impl GridRow {
+    fn from(model: ModelKind, hardware: HardwareKind, r: &MethodResult) -> GridRow {
+        GridRow {
+            model,
+            hardware,
+            method: r.method,
+            step_ms: r.step_time_s * 1e3,
+            search_s: r.search_time.as_secs_f64(),
+            oom: r.oom,
+            relative: r.relative,
+            peak_gib: r.cost.peak_bytes as f64 / (1u64 << 30) as f64,
+        }
+    }
+
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::s(self.model.name())),
+            ("hardware", Json::s(self.hardware.name())),
+            ("method", Json::s(self.method.name())),
+            ("step_ms", Json::n(self.step_ms)),
+            ("search_s", Json::n(self.search_s)),
+            ("oom", Json::Bool(self.oom)),
+            ("relative", Json::n(self.relative)),
+            ("peak_gib", Json::n(self.peak_gib)),
+        ])
+    }
+}
+
+/// The Fig 8/9 grid: models × platforms × methods on a 16-device 2-D mesh.
+pub fn run_grid(
+    scale: BenchScale,
+    models: &[ModelKind],
+    hardware: &[HardwareKind],
+    methods: &[Method],
+) -> Vec<GridRow> {
+    let mut rows = Vec::new();
+    for &mk in models {
+        let func = build_model(mk, scale);
+        for &hw in hardware {
+            let mesh = Mesh::grid(&[("data", 4), ("model", 4)]);
+            let model = CostModel::new(HardwareProfile::new(hw));
+            for &method in methods {
+                let r = run_method(method, mk, &func, &mesh, &model, scale.budget(), 17);
+                rows.push(GridRow::from(mk, hw, &r));
+            }
+        }
+    }
+    rows
+}
+
+/// Fig 10: T2B sequence scaling on a 3-D mesh (Batch × Seq × Model).
+/// Returns `(seq_len, mesh description, rows)` triples.
+pub fn run_seq_scaling(scale: BenchScale) -> Vec<(i64, String, Vec<GridRow>)> {
+    // (seq, mesh) pairs; paper goes to 32k over 2x32x2 = 128 devices.
+    let points: Vec<(i64, Vec<(&str, usize)>)> = match scale {
+        BenchScale::Tiny => vec![
+            (256, vec![("batch", 2), ("seq", 2), ("model", 2)]),
+            (512, vec![("batch", 2), ("seq", 4), ("model", 2)]),
+        ],
+        BenchScale::Bench => vec![
+            (1024, vec![("batch", 2), ("seq", 4), ("model", 2)]),
+            (4096, vec![("batch", 2), ("seq", 8), ("model", 2)]),
+            (8192, vec![("batch", 2), ("seq", 16), ("model", 2)]),
+        ],
+        BenchScale::Paper => vec![
+            (2048, vec![("batch", 2), ("seq", 8), ("model", 2)]),
+            (8192, vec![("batch", 2), ("seq", 16), ("model", 2)]),
+            (16384, vec![("batch", 2), ("seq", 32), ("model", 2)]),
+            (32768, vec![("batch", 2), ("seq", 32), ("model", 2)]),
+        ],
+    };
+    let methods = [Method::Manual, Method::Alpa, Method::AutoMap, Method::Toast];
+    let mut out = Vec::new();
+    for (seq, axes) in points {
+        // T2B dims at Bench scale shrink everything but the sequence.
+        let cfg = match scale {
+            BenchScale::Paper => transformer::TransformerConfig {
+                seq,
+                batch: 4,
+                ..transformer::TransformerConfig::t2b()
+            },
+            _ => transformer::TransformerConfig {
+                d_model: 256,
+                layers: 2,
+                hidden: 1024,
+                heads: 8,
+                key_size: 32,
+                vocab: 4096,
+                batch: 4,
+                seq,
+                training: true,
+            },
+        };
+        let func = transformer::training_step(&cfg);
+        let mesh = Mesh::grid(&axes);
+        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let mut rows = Vec::new();
+        for method in methods {
+            let r =
+                run_method(method, ModelKind::T2B, &func, &mesh, &model, scale.budget(), 29);
+            rows.push(GridRow::from(ModelKind::T2B, HardwareKind::A100, &r));
+        }
+        out.push((seq, mesh.describe(), rows));
+    }
+    out
+}
+
+/// Render a Fig-8-style table (step time).
+pub fn format_fig8(rows: &[GridRow]) -> String {
+    format_grid(
+        rows,
+        |r| {
+            if r.oom {
+                format!("{:>10}", "OOM")
+            } else if r.step_ms < 0.1 {
+                format!("{:>8.2}us", r.step_ms * 1e3)
+            } else {
+                format!("{:>8.3}ms", r.step_ms)
+            }
+        },
+        "step time, 16 devices — Figure 8",
+    )
+}
+
+/// Render a Fig-9-style table (search time).
+pub fn format_fig9(rows: &[GridRow]) -> String {
+    format_grid(rows, |r| format!("{:>10.2}", r.search_s), "search time (s) — Figure 9")
+}
+
+fn format_grid(
+    rows: &[GridRow],
+    cell: impl Fn(&GridRow) -> String,
+    title: &str,
+) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==");
+    let methods: Vec<Method> = {
+        let mut v: Vec<Method> = Vec::new();
+        for r in rows {
+            if !v.contains(&r.method) {
+                v.push(r.method);
+            }
+        }
+        v
+    };
+    let _ = write!(out, "{:<10} {:<7}", "model", "hw");
+    for m in &methods {
+        let _ = write!(out, " {:>10}", m.name());
+    }
+    let _ = writeln!(out);
+    let mut seen = Vec::new();
+    for r in rows {
+        let key = (r.model, r.hardware);
+        if seen.contains(&key) {
+            continue;
+        }
+        seen.push(key);
+        let _ = write!(out, "{:<10} {:<7}", r.model.name(), r.hardware.name());
+        for m in &methods {
+            if let Some(row) =
+                rows.iter().find(|x| x.model == r.model && x.hardware == r.hardware && x.method == *m)
+            {
+                let _ = write!(out, " {}", cell(row));
+            } else {
+                let _ = write!(out, " {:>10}", "-");
+            }
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+/// Render the Fig-10 table.
+pub fn format_fig10(points: &[(i64, String, Vec<GridRow>)]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "== T2B sequence scaling (step ms / search s) — Figure 10 ==");
+    let _ = writeln!(
+        out,
+        "{:<8} {:<28} {:>16} {:>16} {:>16} {:>16}",
+        "seq", "mesh", "Manual", "Alpa", "AutoMap", "TOAST"
+    );
+    for (seq, mesh, rows) in points {
+        let _ = write!(out, "{seq:<8} {mesh:<28}");
+        for m in [Method::Manual, Method::Alpa, Method::AutoMap, Method::Toast] {
+            if let Some(r) = rows.iter().find(|r| r.method == m) {
+                let cellstr = if r.oom {
+                    format!("OOM/{:.1}s", r.search_s)
+                } else {
+                    format!("{:.2}ms/{:.1}s", r.step_ms, r.search_s)
+                };
+                let _ = write!(out, " {cellstr:>16}");
+            }
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+/// Rows → JSON array for EXPERIMENTS.md bookkeeping.
+pub fn grid_json(rows: &[GridRow]) -> String {
+    Json::Arr(rows.iter().map(|r| r.json()).collect()).render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_grid_runs_all_methods() {
+        let rows = run_grid(
+            BenchScale::Tiny,
+            &[ModelKind::Mlp],
+            &[HardwareKind::A100],
+            &Method::all(),
+        );
+        assert_eq!(rows.len(), 4);
+        let table = format_fig8(&rows);
+        assert!(table.contains("TOAST"));
+        assert!(table.contains("mlp"));
+        let json = grid_json(&rows);
+        assert!(json.contains("\"method\":\"TOAST\""));
+    }
+
+    #[test]
+    fn seq_scaling_tiny_runs() {
+        let points = run_seq_scaling(BenchScale::Tiny);
+        assert_eq!(points.len(), 2);
+        let table = format_fig10(&points);
+        assert!(table.contains("sequence scaling"));
+    }
+}

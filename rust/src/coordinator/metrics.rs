@@ -1,0 +1,76 @@
+//! Service metrics: lock-free counters + latency aggregation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Aggregated service metrics. All methods are thread-safe.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub oom_solutions: AtomicU64,
+    /// Total search time in microseconds (mean = total / completed).
+    pub search_us_total: AtomicU64,
+    /// Total state evaluations across searches.
+    pub evaluations: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_completion(&self, search: Duration, evals: u64, oom: bool) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.search_us_total.fetch_add(search.as_micros() as u64, Ordering::Relaxed);
+        self.evaluations.fetch_add(evals, Ordering::Relaxed);
+        if oom {
+            self.oom_solutions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_failure(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn mean_search_ms(&self) -> f64 {
+        let done = self.completed.load(Ordering::Relaxed);
+        if done == 0 {
+            return 0.0;
+        }
+        self.search_us_total.load(Ordering::Relaxed) as f64 / 1e3 / done as f64
+    }
+
+    pub fn snapshot(&self) -> String {
+        format!(
+            "requests={} completed={} failed={} oom={} mean_search={:.1}ms evals={}",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.oom_solutions.load(Ordering::Relaxed),
+            self.mean_search_ms(),
+            self.evaluations.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_aggregate() {
+        let m = Metrics::default();
+        m.record_request();
+        m.record_request();
+        m.record_completion(Duration::from_millis(10), 100, false);
+        m.record_completion(Duration::from_millis(30), 200, true);
+        m.record_failure();
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.oom_solutions.load(Ordering::Relaxed), 1);
+        assert!((m.mean_search_ms() - 20.0).abs() < 0.5);
+        assert!(m.snapshot().contains("completed=2"));
+    }
+}

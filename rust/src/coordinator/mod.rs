@@ -1,0 +1,15 @@
+//! L3 coordinator: the partition service, its metrics, and the
+//! experiment runners that regenerate the paper's figures.
+//!
+//! TOAST is a compiler-side system, so the coordinator's job is a
+//! partition-request service: clients submit `(model, mesh, hardware,
+//! method, budget)` requests; a worker pool runs the analysis + search and
+//! returns sharding specs with cost reports. The CLI (`toast serve`,
+//! `toast partition`, `toast bench`) fronts this service.
+
+pub mod experiments;
+pub mod metrics;
+pub mod service;
+
+pub use experiments::{BenchScale, Experiment};
+pub use service::{PartitionRequest, PartitionResponse, Service};

@@ -1,0 +1,348 @@
+//! Analytic roofline cost model (§4.5).
+//!
+//! An abstract interpreter over a *device-local* function accumulates
+//! runtime along the (straight-line) critical path:
+//!
+//! * matrix-multiplication ops (`dot_general`, `conv2d`) cost
+//!   `flops / effective_flops`, floored by their HBM traffic;
+//! * all other compute ops are memory-bound: `bytes / hbm_bandwidth`;
+//! * collectives use ring-algorithm estimates with per-axis link
+//!   bandwidth and per-hop latency;
+//!
+//! plus a live-range analysis that approximates peak per-device memory.
+//!
+//! The search layer only consumes *relative* cost: `C(s) = RT(s) + MP(s)`
+//! where `RT` is runtime relative to the unsharded module and `MP`
+//! penalizes exceeding device memory (zero below the limit).
+
+use crate::ir::{Func, OpKind};
+use crate::mesh::{HardwareProfile, Mesh};
+
+/// Absolute cost estimate of a device-local function.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cost {
+    /// Estimated per-step runtime, seconds (compute + communication).
+    pub runtime_s: f64,
+    /// Compute-only component, seconds.
+    pub compute_s: f64,
+    /// Communication-only component, seconds.
+    pub comm_s: f64,
+    /// Peak per-device memory, bytes.
+    pub peak_bytes: u64,
+    /// Total matmul FLOPs executed per device.
+    pub flops: f64,
+    /// Total bytes moved by collectives per device.
+    pub comm_bytes: f64,
+}
+
+/// The cost model: hardware profile + tuning constants.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub hw: HardwareProfile,
+    /// Memory-penalty constant `C` of §4.5.
+    pub mem_penalty: f64,
+}
+
+impl CostModel {
+    pub fn new(hw: HardwareProfile) -> Self {
+        CostModel { hw, mem_penalty: 10.0 }
+    }
+
+    /// Evaluate a device-local function on `mesh`.
+    pub fn evaluate(&self, f: &Func, mesh: &Mesh) -> Cost {
+        let mut cost = Cost::default();
+
+        // ---- live ranges: last use per value --------------------------
+        let n_values = f.num_values();
+        let mut last_use = vec![0usize; n_values];
+        for (ii, instr) in f.instrs.iter().enumerate() {
+            for &o in &instr.operands {
+                last_use[o.index()] = ii;
+            }
+        }
+        for &r in &f.results {
+            last_use[r.index()] = f.instrs.len(); // results live to the end
+        }
+        // Parameters stay resident (weights/optimizer state live across
+        // the whole step).
+        let param_bytes: u64 = f.param_bytes();
+        let mut live: u64 = param_bytes;
+        let mut peak: u64 = live;
+
+        for (ii, instr) in f.instrs.iter().enumerate() {
+            // runtime
+            let (c, m) = self.instr_cost(f, instr, mesh);
+            cost.compute_s += c;
+            cost.comm_s += m.0;
+            cost.comm_bytes += m.1;
+            if let OpKind::DotGeneral { .. } | OpKind::Conv2d { .. } = instr.kind {
+                cost.flops += matmul_flops(f, instr);
+            }
+
+            // memory
+            live += instr.ty.bytes();
+            peak = peak.max(live);
+            for &o in &instr.operands {
+                let oi = o.index();
+                if last_use[oi] == ii && oi >= f.params.len() && !f.results.contains(&o) {
+                    // free intermediate at its last use (params + results
+                    // stay resident)
+                    live = live.saturating_sub(f.ty(o).bytes());
+                }
+            }
+        }
+        cost.peak_bytes = peak;
+        cost.runtime_s = cost.compute_s + cost.comm_s;
+        cost
+    }
+
+    /// `(compute_seconds, (comm_seconds, comm_bytes))` for one instruction.
+    fn instr_cost(&self, f: &Func, instr: &crate::ir::Instr, mesh: &Mesh) -> (f64, (f64, f64)) {
+        let out_bytes = instr.ty.bytes() as f64;
+        let in_bytes: f64 =
+            instr.operands.iter().map(|&o| f.ty(o).bytes() as f64).sum();
+        match &instr.kind {
+            OpKind::DotGeneral { .. } | OpKind::Conv2d { .. } => {
+                let flops = matmul_flops(f, instr);
+                let t_compute = flops / self.hw.effective_flops();
+                let t_mem = (in_bytes + out_bytes) / self.hw.hbm_bandwidth;
+                (t_compute.max(t_mem), (0.0, 0.0))
+            }
+            OpKind::AllReduce { axes, .. } => {
+                // ring all-reduce per axis, sequentially.
+                let mut t = 0.0;
+                let mut bytes = 0.0;
+                for &a in axes {
+                    let n = mesh.axis_size(a) as f64;
+                    if n <= 1.0 {
+                        continue;
+                    }
+                    let moved = 2.0 * out_bytes * (n - 1.0) / n;
+                    t += moved / self.hw.axis_bandwidth(a)
+                        + 2.0 * (n - 1.0) * self.hw.link_latency;
+                    bytes += moved;
+                }
+                (0.0, (t, bytes))
+            }
+            OpKind::AllGather { axis, .. } => {
+                let n = mesh.axis_size(*axis) as f64;
+                if n <= 1.0 {
+                    return (0.0, (0.0, 0.0));
+                }
+                // each device ends with out_bytes, receives (n-1)/n of it
+                let moved = out_bytes * (n - 1.0) / n;
+                (
+                    0.0,
+                    (
+                        moved / self.hw.axis_bandwidth(*axis)
+                            + (n - 1.0) * self.hw.link_latency,
+                        moved,
+                    ),
+                )
+            }
+            OpKind::ReduceScatter { axis, .. } => {
+                let n = mesh.axis_size(*axis) as f64;
+                if n <= 1.0 {
+                    return (0.0, (0.0, 0.0));
+                }
+                // input is the full partial tensor
+                let moved = in_bytes * (n - 1.0) / n;
+                (
+                    0.0,
+                    (
+                        moved / self.hw.axis_bandwidth(*axis)
+                            + (n - 1.0) * self.hw.link_latency,
+                        moved,
+                    ),
+                )
+            }
+            OpKind::AllToAll { axis, .. } => {
+                let n = mesh.axis_size(*axis) as f64;
+                if n <= 1.0 {
+                    return (0.0, (0.0, 0.0));
+                }
+                let moved = in_bytes * (n - 1.0) / n;
+                (
+                    0.0,
+                    (
+                        moved / self.hw.axis_bandwidth(*axis)
+                            + (n - 1.0) * self.hw.link_latency,
+                        moved,
+                    ),
+                )
+            }
+            OpKind::ShardSlice { .. } => {
+                // zero communication; local copy
+                (out_bytes / self.hw.hbm_bandwidth, (0.0, 0.0))
+            }
+            // memory-bound elementwise / data-movement ops
+            _ => ((in_bytes + out_bytes) / self.hw.hbm_bandwidth, (0.0, 0.0)),
+        }
+    }
+
+    /// Relative cost `C(s) = RT(s) + MP(s)` (§4.5). `base` is the
+    /// unsharded module's cost; `dm` the per-device memory.
+    pub fn relative(&self, sharded: &Cost, base: &Cost) -> f64 {
+        let rt = sharded.runtime_s / base.runtime_s.max(1e-12);
+        let dm = self.hw.memory_bytes as f64;
+        let mp = if (sharded.peak_bytes as f64) > dm {
+            self.mem_penalty * ((sharded.peak_bytes as f64) - dm)
+                / (base.peak_bytes as f64).max(1.0)
+        } else {
+            0.0
+        };
+        rt + mp
+    }
+
+    /// Does the sharded module fit in device memory?
+    pub fn fits(&self, cost: &Cost) -> bool {
+        cost.peak_bytes <= self.hw.memory_bytes
+    }
+}
+
+/// FLOPs of a matmul-like op (2 * output elems * contraction size).
+pub fn matmul_flops(f: &Func, instr: &crate::ir::Instr) -> f64 {
+    match &instr.kind {
+        OpKind::DotGeneral { lhs_contract, .. } => {
+            let lt = f.ty(instr.operands[0]);
+            let k: f64 = lhs_contract.iter().map(|&d| lt.shape[d] as f64).product();
+            2.0 * instr.ty.elems() as f64 * k
+        }
+        OpKind::Conv2d { .. } => {
+            let kt = f.ty(instr.operands[1]);
+            // 2 * out_elems * Kh*Kw*Ci
+            let k = (kt.shape[0] * kt.shape[1] * kt.shape[2]) as f64;
+            2.0 * instr.ty.elems() as f64 * k
+        }
+        _ => 0.0,
+    }
+}
+
+/// Summary used by reports: estimate of one value's contribution.
+pub fn describe_cost(c: &Cost) -> String {
+    format!(
+        "runtime {:.3} ms (compute {:.3} ms, comm {:.3} ms), peak mem {:.2} GiB, {:.1} GFLOP",
+        c.runtime_s * 1e3,
+        c.compute_s * 1e3,
+        c.comm_s * 1e3,
+        c.peak_bytes as f64 / (1u64 << 30) as f64,
+        c.flops / 1e9,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{FuncBuilder, ReduceKind, TensorType, ValueId};
+
+    use crate::mesh::HardwareKind;
+    use crate::sharding::{partition, ShardingSpec};
+
+    fn mlp(batch: i64, din: i64, dh: i64, dout: i64) -> Func {
+        let mut b = FuncBuilder::new("mlp");
+        let x = b.param("x", TensorType::f32(vec![batch, din]));
+        let w1 = b.param("w1", TensorType::f32(vec![din, dh]));
+        let w2 = b.param("w2", TensorType::f32(vec![dh, dout]));
+        let y = b.matmul(x, w1);
+        let z = b.relu(y);
+        let w = b.matmul(z, w2);
+        b.build(vec![w])
+    }
+
+    fn model() -> CostModel {
+        CostModel::new(HardwareProfile::new(HardwareKind::A100))
+    }
+
+    #[test]
+    fn flops_accounting() {
+        let f = mlp(256, 32, 64, 16);
+        let mesh = Mesh::grid(&[("d", 1)]);
+        let c = model().evaluate(&f, &mesh);
+        let expect = 2.0 * 256.0 * 32.0 * 64.0 + 2.0 * 256.0 * 64.0 * 16.0;
+        assert_eq!(c.flops, expect);
+        assert!(c.runtime_s > 0.0);
+        assert_eq!(c.comm_s, 0.0);
+    }
+
+    #[test]
+    fn batch_sharding_reduces_runtime_roughly_linearly() {
+        let f = mlp(4096, 1024, 4096, 1024);
+        let mesh = Mesh::grid(&[("b", 4)]);
+        let m = model();
+        let base = m.evaluate(&f, &mesh);
+        let mut spec = ShardingSpec::unsharded(&f);
+        spec.apply_assignment(
+            &f,
+            &mesh,
+            &[(ValueId(0), 0), (ValueId(3), 0), (ValueId(4), 0), (ValueId(5), 0)],
+            0,
+        )
+        .unwrap();
+        let (local, _) = partition(&f, &spec, &mesh).unwrap();
+        let sharded = m.evaluate(&local, &mesh);
+        let ratio = sharded.runtime_s / base.runtime_s;
+        assert!(ratio < 0.3, "expected ~4x speedup, ratio {ratio}");
+        assert!(m.relative(&sharded, &base) < 1.0);
+    }
+
+    #[test]
+    fn all_reduce_costs_time_and_bytes() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![1024, 1024]));
+        let r = b.all_reduce(x, vec![0], ReduceKind::Add);
+        let f = b.build(vec![r]);
+        let mesh = Mesh::grid(&[("d", 8)]);
+        let c = model().evaluate(&f, &mesh);
+        assert!(c.comm_s > 0.0);
+        assert!(c.comm_bytes > 0.0);
+        // single-device mesh: free
+        let mesh1 = Mesh::grid(&[("d", 1)]);
+        let c1 = model().evaluate(&f, &mesh1);
+        assert_eq!(c1.comm_s, 0.0);
+    }
+
+    #[test]
+    fn peak_memory_tracks_params_and_intermediates() {
+        let f = mlp(256, 32, 64, 16);
+        let mesh = Mesh::grid(&[("d", 1)]);
+        let c = model().evaluate(&f, &mesh);
+        let params = (256 * 32 + 32 * 64 + 64 * 16) * 4;
+        assert!(c.peak_bytes >= params as u64);
+        // peak includes at least y (256x64) on top of params
+        assert!(c.peak_bytes >= params as u64 + 256 * 64 * 4);
+    }
+
+    #[test]
+    fn memory_penalty_applies_above_limit() {
+        let mut m = model();
+        m.hw.memory_bytes = 1; // force overflow
+        let f = mlp(256, 32, 64, 16);
+        let mesh = Mesh::grid(&[("d", 1)]);
+        let c = m.evaluate(&f, &mesh);
+        let rel = m.relative(&c, &c);
+        assert!(rel > 1.0, "penalized relative cost must exceed RT=1, got {rel}");
+        assert!(!m.fits(&c));
+    }
+
+    #[test]
+    fn contract_sharding_tradeoff_visible() {
+        // Megatron sharding halves matmul time but adds an all_reduce.
+        let f = mlp(512, 512, 2048, 512);
+        let mesh = Mesh::grid(&[("m", 4)]);
+        let m = model();
+        let base = m.evaluate(&f, &mesh);
+        let mut spec = ShardingSpec::unsharded(&f);
+        spec.apply_assignment(
+            &f,
+            &mesh,
+            &[(ValueId(1), 1), (ValueId(3), 1), (ValueId(4), 1), (ValueId(2), 0)],
+            0,
+        )
+        .unwrap();
+        let (local, stats) = partition(&f, &spec, &mesh).unwrap();
+        assert_eq!(stats.all_reduce, 1);
+        let sharded = m.evaluate(&local, &mesh);
+        assert!(sharded.compute_s < base.compute_s);
+        assert!(sharded.comm_s > 0.0);
+    }
+}

@@ -1,0 +1,519 @@
+//! Shape-inferring builder for [`Func`].
+//!
+//! Every `push_*` method checks operand types, infers the result type and
+//! appends an instruction; builders panic on ill-typed programs (model
+//! constructors are trusted code — the [`super::verifier`] re-checks
+//! invariants independently).
+
+use super::*;
+
+/// Builder for a straight-line [`Func`].
+pub struct FuncBuilder {
+    name: String,
+    params: Vec<Param>,
+    instrs: Vec<Instr>,
+    sealed: bool,
+}
+
+impl FuncBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        FuncBuilder { name: name.into(), params: Vec::new(), instrs: Vec::new(), sealed: false }
+    }
+
+    /// Declare a parameter. Must be called before any instruction is added.
+    pub fn param(&mut self, name: impl Into<String>, ty: TensorType) -> ValueId {
+        assert!(!self.sealed, "params must be declared before instructions");
+        let id = ValueId(self.params.len() as u32);
+        self.params.push(Param { name: name.into(), ty });
+        id
+    }
+
+    fn ty(&self, v: ValueId) -> &TensorType {
+        let i = v.index();
+        if i < self.params.len() {
+            &self.params[i].ty
+        } else {
+            &self.instrs[i - self.params.len()].ty
+        }
+    }
+
+    /// Shape of a value.
+    pub fn shape(&self, v: ValueId) -> Vec<i64> {
+        self.ty(v).shape.clone()
+    }
+
+    /// Dtype of a value.
+    pub fn dtype(&self, v: ValueId) -> DType {
+        self.ty(v).dtype
+    }
+
+    fn push(&mut self, kind: OpKind, operands: Vec<ValueId>, ty: TensorType) -> ValueId {
+        self.sealed = true;
+        let result = ValueId((self.params.len() + self.instrs.len()) as u32);
+        self.instrs.push(Instr { result, kind, operands, ty });
+        result
+    }
+
+    /// Splat constant.
+    pub fn constant(&mut self, value: f64, ty: TensorType) -> ValueId {
+        self.push(OpKind::Constant { value }, vec![], ty)
+    }
+
+    /// Scalar constant (rank-0).
+    pub fn scalar(&mut self, value: f64, dtype: DType) -> ValueId {
+        self.constant(value, TensorType::new(vec![], dtype))
+    }
+
+    pub fn iota(&mut self, dim: usize, ty: TensorType) -> ValueId {
+        assert!(dim < ty.rank(), "iota dim out of range");
+        self.push(OpKind::Iota { dim }, vec![], ty)
+    }
+
+    pub fn unary(&mut self, op: UnaryOp, x: ValueId) -> ValueId {
+        let ty = self.ty(x).clone();
+        self.push(OpKind::Unary(op), vec![x], ty)
+    }
+
+    pub fn relu(&mut self, x: ValueId) -> ValueId {
+        self.unary(UnaryOp::Relu, x)
+    }
+
+    pub fn exp(&mut self, x: ValueId) -> ValueId {
+        self.unary(UnaryOp::Exp, x)
+    }
+
+    pub fn binary(&mut self, op: BinaryOp, a: ValueId, b: ValueId) -> ValueId {
+        let ta = self.ty(a).clone();
+        let tb = self.ty(b);
+        assert_eq!(
+            ta.shape, tb.shape,
+            "binary {:?}: shape mismatch {:?} vs {:?} (broadcast explicitly)",
+            op, ta.shape, tb.shape
+        );
+        self.push(OpKind::Binary(op), vec![a, b], ta)
+    }
+
+    pub fn add(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.binary(BinaryOp::Add, a, b)
+    }
+
+    pub fn sub(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.binary(BinaryOp::Sub, a, b)
+    }
+
+    pub fn mul(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.binary(BinaryOp::Mul, a, b)
+    }
+
+    pub fn div(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.binary(BinaryOp::Div, a, b)
+    }
+
+    pub fn maximum(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.binary(BinaryOp::Max, a, b)
+    }
+
+    /// Plain 2-D matmul: `[m,k] x [k,n] -> [m,n]`.
+    pub fn matmul(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.dot_general(a, b, &[], &[], &[1], &[0])
+    }
+
+    /// Batched matmul: `[b..,m,k] x [b..,k,n] -> [b..,m,n]` where the
+    /// leading `a.rank()-2` dims of both operands are batch dims.
+    pub fn batch_matmul(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        let ra = self.ty(a).rank();
+        let rb = self.ty(b).rank();
+        assert_eq!(ra, rb, "batch_matmul rank mismatch");
+        assert!(ra >= 2);
+        let batch: Vec<usize> = (0..ra - 2).collect();
+        self.dot_general(a, b, &batch, &batch, &[ra - 1], &[rb - 2])
+    }
+
+    /// Generalized dot product. Result dims: batch (lhs order), lhs free,
+    /// rhs free.
+    pub fn dot_general(
+        &mut self,
+        lhs: ValueId,
+        rhs: ValueId,
+        lhs_batch: &[usize],
+        rhs_batch: &[usize],
+        lhs_contract: &[usize],
+        rhs_contract: &[usize],
+    ) -> ValueId {
+        let lt = self.ty(lhs).clone();
+        let rt = self.ty(rhs).clone();
+        assert_eq!(lhs_batch.len(), rhs_batch.len(), "dot_general: batch arity mismatch");
+        assert_eq!(lhs_contract.len(), rhs_contract.len(), "dot_general: contract arity mismatch");
+        for (&lb, &rb) in lhs_batch.iter().zip(rhs_batch) {
+            assert_eq!(lt.shape[lb], rt.shape[rb], "dot_general: batch dim size mismatch");
+        }
+        for (&lc, &rc) in lhs_contract.iter().zip(rhs_contract) {
+            assert_eq!(lt.shape[lc], rt.shape[rc], "dot_general: contract dim size mismatch");
+        }
+        let mut shape: Vec<i64> = lhs_batch.iter().map(|&d| lt.shape[d]).collect();
+        for (d, &s) in lt.shape.iter().enumerate() {
+            if !lhs_batch.contains(&d) && !lhs_contract.contains(&d) {
+                shape.push(s);
+            }
+        }
+        for (d, &s) in rt.shape.iter().enumerate() {
+            if !rhs_batch.contains(&d) && !rhs_contract.contains(&d) {
+                shape.push(s);
+            }
+        }
+        let ty = TensorType::new(shape, lt.dtype);
+        self.push(
+            OpKind::DotGeneral {
+                lhs_batch: lhs_batch.to_vec(),
+                rhs_batch: rhs_batch.to_vec(),
+                lhs_contract: lhs_contract.to_vec(),
+                rhs_contract: rhs_contract.to_vec(),
+            },
+            vec![lhs, rhs],
+            ty,
+        )
+    }
+
+    pub fn transpose(&mut self, x: ValueId, perm: &[usize]) -> ValueId {
+        let t = self.ty(x).clone();
+        assert_eq!(perm.len(), t.rank(), "transpose perm rank mismatch");
+        let shape: Vec<i64> = perm.iter().map(|&p| t.shape[p]).collect();
+        self.push(OpKind::Transpose { perm: perm.to_vec() }, vec![x], TensorType::new(shape, t.dtype))
+    }
+
+    pub fn reduce(&mut self, x: ValueId, dims: &[usize], kind: ReduceKind) -> ValueId {
+        let t = self.ty(x).clone();
+        let mut sorted = dims.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), dims.len(), "reduce dims must be unique");
+        let shape: Vec<i64> = t
+            .shape
+            .iter()
+            .enumerate()
+            .filter(|(d, _)| !sorted.contains(d))
+            .map(|(_, &s)| s)
+            .collect();
+        self.push(OpKind::Reduce { dims: sorted, kind }, vec![x], TensorType::new(shape, t.dtype))
+    }
+
+    pub fn reduce_sum(&mut self, x: ValueId, dims: &[usize]) -> ValueId {
+        self.reduce(x, dims, ReduceKind::Add)
+    }
+
+    pub fn reduce_max(&mut self, x: ValueId, dims: &[usize]) -> ValueId {
+        self.reduce(x, dims, ReduceKind::Max)
+    }
+
+    /// `broadcast_in_dim`: map input dim `i` to output dim `dims[i]`.
+    pub fn broadcast(&mut self, x: ValueId, out_shape: &[i64], dims: &[usize]) -> ValueId {
+        let t = self.ty(x).clone();
+        assert_eq!(dims.len(), t.rank(), "broadcast dims arity mismatch");
+        for (i, &d) in dims.iter().enumerate() {
+            assert!(d < out_shape.len(), "broadcast dim out of range");
+            assert_eq!(t.shape[i], out_shape[d], "broadcast dim size mismatch");
+        }
+        self.push(
+            OpKind::Broadcast { dims: dims.to_vec() },
+            vec![x],
+            TensorType::new(out_shape.to_vec(), t.dtype),
+        )
+    }
+
+    pub fn reshape(&mut self, x: ValueId, out_shape: &[i64]) -> ValueId {
+        let t = self.ty(x).clone();
+        let in_elems: i64 = t.shape.iter().product();
+        let out_elems: i64 = out_shape.iter().product();
+        assert_eq!(in_elems, out_elems, "reshape element count mismatch");
+        self.push(OpKind::Reshape, vec![x], TensorType::new(out_shape.to_vec(), t.dtype))
+    }
+
+    pub fn concat(&mut self, xs: &[ValueId], dim: usize) -> ValueId {
+        assert!(!xs.is_empty());
+        let t0 = self.ty(xs[0]).clone();
+        let mut total = 0i64;
+        for &x in xs {
+            let t = self.ty(x);
+            assert_eq!(t.rank(), t0.rank(), "concat rank mismatch");
+            for d in 0..t.rank() {
+                if d != dim {
+                    assert_eq!(t.shape[d], t0.shape[d], "concat non-concat dim mismatch");
+                }
+            }
+            total += t.shape[dim];
+        }
+        let mut shape = t0.shape.clone();
+        shape[dim] = total;
+        self.push(OpKind::Concat { dim }, xs.to_vec(), TensorType::new(shape, t0.dtype))
+    }
+
+    pub fn slice(&mut self, x: ValueId, starts: &[i64], limits: &[i64], strides: &[i64]) -> ValueId {
+        let t = self.ty(x).clone();
+        assert_eq!(starts.len(), t.rank());
+        assert_eq!(limits.len(), t.rank());
+        assert_eq!(strides.len(), t.rank());
+        let mut shape = Vec::with_capacity(t.rank());
+        for d in 0..t.rank() {
+            assert!(0 <= starts[d] && starts[d] <= limits[d] && limits[d] <= t.shape[d], "slice bounds");
+            assert!(strides[d] >= 1);
+            shape.push((limits[d] - starts[d] + strides[d] - 1) / strides[d]);
+        }
+        self.push(
+            OpKind::Slice {
+                starts: starts.to_vec(),
+                limits: limits.to_vec(),
+                strides: strides.to_vec(),
+            },
+            vec![x],
+            TensorType::new(shape, t.dtype),
+        )
+    }
+
+    /// 2-D convolution: input `[N,H,W,Ci]`, kernel `[Kh,Kw,Ci,Co]` →
+    /// output `[N,Ho,Wo,Co]`.
+    pub fn conv2d(&mut self, input: ValueId, kernel: ValueId, stride: (usize, usize), padding: (usize, usize)) -> ValueId {
+        let it = self.ty(input).clone();
+        let kt = self.ty(kernel).clone();
+        assert_eq!(it.rank(), 4, "conv2d input must be NHWC");
+        assert_eq!(kt.rank(), 4, "conv2d kernel must be HWIO");
+        assert_eq!(it.shape[3], kt.shape[2], "conv2d channel mismatch");
+        let ho = (it.shape[1] + 2 * padding.0 as i64 - kt.shape[0]) / stride.0 as i64 + 1;
+        let wo = (it.shape[2] + 2 * padding.1 as i64 - kt.shape[1]) / stride.1 as i64 + 1;
+        assert!(ho > 0 && wo > 0, "conv2d produces empty output");
+        let ty = TensorType::new(vec![it.shape[0], ho, wo, kt.shape[3]], it.dtype);
+        self.push(OpKind::Conv2d { stride, padding }, vec![input, kernel], ty)
+    }
+
+    /// `take(operand, indices, axis)`.
+    pub fn gather(&mut self, operand: ValueId, indices: ValueId, axis: usize) -> ValueId {
+        let ot = self.ty(operand).clone();
+        let it = self.ty(indices).clone();
+        assert!(axis < ot.rank(), "gather axis out of range");
+        assert_eq!(it.dtype, DType::I32, "gather indices must be i32");
+        let mut shape: Vec<i64> = ot.shape[..axis].to_vec();
+        shape.extend_from_slice(&it.shape);
+        shape.extend_from_slice(&ot.shape[axis + 1..]);
+        self.push(OpKind::Gather { axis }, vec![operand, indices], TensorType::new(shape, ot.dtype))
+    }
+
+    /// `scatter(operand, indices, updates, axis)` with combiner `kind`.
+    /// `indices` is rank-1 with length = `updates.shape[axis]`.
+    pub fn scatter(
+        &mut self,
+        operand: ValueId,
+        indices: ValueId,
+        updates: ValueId,
+        axis: usize,
+        kind: ReduceKind,
+    ) -> ValueId {
+        let ot = self.ty(operand).clone();
+        let it = self.ty(indices).clone();
+        let ut = self.ty(updates).clone();
+        assert_eq!(it.rank(), 1, "scatter indices must be rank-1");
+        assert_eq!(it.dtype, DType::I32, "scatter indices must be i32");
+        assert_eq!(ut.rank(), ot.rank(), "scatter updates rank mismatch");
+        assert_eq!(ut.shape[axis], it.shape[0], "scatter updates/indices length mismatch");
+        for d in 0..ot.rank() {
+            if d != axis {
+                assert_eq!(ut.shape[d], ot.shape[d], "scatter non-axis dim mismatch");
+            }
+        }
+        self.push(OpKind::Scatter { axis, kind }, vec![operand, indices, updates], ot)
+    }
+
+    pub fn convert(&mut self, x: ValueId, dtype: DType) -> ValueId {
+        let t = self.ty(x).clone();
+        self.push(OpKind::Convert, vec![x], TensorType::new(t.shape, dtype))
+    }
+
+    pub fn select(&mut self, pred: ValueId, on_true: ValueId, on_false: ValueId) -> ValueId {
+        let pt = self.ty(pred).clone();
+        let tt = self.ty(on_true).clone();
+        let ft = self.ty(on_false);
+        assert_eq!(pt.shape, tt.shape);
+        assert_eq!(tt.shape, ft.shape);
+        self.push(OpKind::Select, vec![pred, on_true, on_false], tt)
+    }
+
+    pub fn compare(&mut self, op: CompareOp, a: ValueId, b: ValueId) -> ValueId {
+        let ta = self.ty(a).clone();
+        let tb = self.ty(b);
+        assert_eq!(ta.shape, tb.shape);
+        self.push(OpKind::Compare(op), vec![a, b], TensorType::new(ta.shape, DType::Bool))
+    }
+
+    // ---- collectives (used by the partitioner when building device-local IR)
+
+    pub fn all_reduce(&mut self, x: ValueId, axes: Vec<AxisId>, kind: ReduceKind) -> ValueId {
+        let ty = self.ty(x).clone();
+        self.push(OpKind::AllReduce { axes, kind }, vec![x], ty)
+    }
+
+    /// `all_gather` multiplies `dim` by the axis size (provided by caller).
+    pub fn all_gather(&mut self, x: ValueId, axis: AxisId, dim: usize, axis_size: i64) -> ValueId {
+        let mut ty = self.ty(x).clone();
+        ty.shape[dim] *= axis_size;
+        self.push(OpKind::AllGather { axis, dim }, vec![x], ty)
+    }
+
+    /// `reduce_scatter` divides `dim` by the axis size.
+    pub fn reduce_scatter(
+        &mut self,
+        x: ValueId,
+        axis: AxisId,
+        dim: usize,
+        axis_size: i64,
+        kind: ReduceKind,
+    ) -> ValueId {
+        let mut ty = self.ty(x).clone();
+        assert_eq!(ty.shape[dim] % axis_size, 0, "reduce_scatter dim not divisible");
+        ty.shape[dim] /= axis_size;
+        self.push(OpKind::ReduceScatter { axis, dim, kind }, vec![x], ty)
+    }
+
+    pub fn all_to_all(
+        &mut self,
+        x: ValueId,
+        axis: AxisId,
+        split_dim: usize,
+        concat_dim: usize,
+        axis_size: i64,
+    ) -> ValueId {
+        let mut ty = self.ty(x).clone();
+        assert_eq!(ty.shape[split_dim] % axis_size, 0, "all_to_all split dim not divisible");
+        ty.shape[split_dim] /= axis_size;
+        ty.shape[concat_dim] *= axis_size;
+        self.push(OpKind::AllToAll { axis, split_dim, concat_dim }, vec![x], ty)
+    }
+
+    /// Device-local shard slice: keep this device's block along `dim`.
+    pub fn shard_slice(&mut self, x: ValueId, axis: AxisId, dim: usize, axis_size: i64) -> ValueId {
+        let mut ty = self.ty(x).clone();
+        assert_eq!(ty.shape[dim] % axis_size, 0, "shard_slice dim not divisible");
+        ty.shape[dim] /= axis_size;
+        self.push(OpKind::ShardSlice { axis, dim }, vec![x], ty)
+    }
+
+    /// Softmax over the last dimension, built from primitives (the paper's
+    /// §3.3 "mock softmax" pattern plus max-subtraction for stability).
+    pub fn softmax_last(&mut self, x: ValueId) -> ValueId {
+        let t = self.ty(x).clone();
+        let r = t.rank();
+        let last = r - 1;
+        let m = self.reduce_max(x, &[last]);
+        let dims: Vec<usize> = (0..r - 1).collect();
+        let mb = self.broadcast(m, &t.shape, &dims);
+        let centered = self.sub(x, mb);
+        let e = self.exp(centered);
+        let s = self.reduce_sum(e, &[last]);
+        let sb = self.broadcast(s, &t.shape, &dims);
+        self.div(e, sb)
+    }
+
+    /// Finish the function.
+    pub fn build(self, results: Vec<ValueId>) -> Func {
+        for &r in &results {
+            assert!(r.index() < self.params.len() + self.instrs.len(), "result out of range");
+        }
+        Func { name: self.name, params: self.params, instrs: self.instrs, results }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Figure 2a MLP.
+    fn mlp() -> Func {
+        let mut b = FuncBuilder::new("mlp");
+        let x = b.param("x", TensorType::f32(vec![256, 32]));
+        let w1 = b.param("w1", TensorType::f32(vec![32, 64]));
+        let w2 = b.param("w2", TensorType::f32(vec![64, 16]));
+        let y = b.matmul(x, w1);
+        let z = b.relu(y);
+        let w = b.matmul(z, w2);
+        b.build(vec![w])
+    }
+
+    #[test]
+    fn mlp_shapes() {
+        let f = mlp();
+        assert_eq!(f.instrs.len(), 3);
+        assert_eq!(f.ty(f.results[0]).shape, vec![256, 16]);
+        assert_eq!(f.ty(ValueId(3)).shape, vec![256, 64]); // y
+    }
+
+    #[test]
+    fn dot_general_batched() {
+        let mut b = FuncBuilder::new("f");
+        let q = b.param("q", TensorType::f32(vec![4, 128, 64]));
+        let k = b.param("k", TensorType::f32(vec![4, 128, 64]));
+        // scores[b, s, t] = sum_d q[b,s,d] * k[b,t,d]
+        let s = b.dot_general(q, k, &[0], &[0], &[2], &[2]);
+        assert_eq!(b.shape(s), vec![4, 128, 128]);
+    }
+
+    #[test]
+    fn transpose_reduce_broadcast() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![8, 16]));
+        let t = b.transpose(x, &[1, 0]);
+        assert_eq!(b.shape(t), vec![16, 8]);
+        let r = b.reduce_sum(t, &[1]);
+        assert_eq!(b.shape(r), vec![16]);
+        let bc = b.broadcast(r, &[16, 8], &[0]);
+        assert_eq!(b.shape(bc), vec![16, 8]);
+    }
+
+    #[test]
+    fn softmax_shape() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![4, 10]));
+        let s = b.softmax_last(x);
+        assert_eq!(b.shape(s), vec![4, 10]);
+    }
+
+    #[test]
+    fn conv2d_shape() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![2, 32, 32, 3]));
+        let k = b.param("k", TensorType::f32(vec![3, 3, 3, 8]));
+        let y = b.conv2d(x, k, (1, 1), (1, 1));
+        assert_eq!(b.shape(y), vec![2, 32, 32, 8]);
+        let y2 = b.conv2d(x, k, (2, 2), (1, 1));
+        assert_eq!(b.shape(y2), vec![2, 16, 16, 8]);
+    }
+
+    #[test]
+    fn gather_scatter_shapes() {
+        let mut b = FuncBuilder::new("f");
+        let nodes = b.param("nodes", TensorType::f32(vec![100, 64]));
+        let idx = b.param("idx", TensorType::new(vec![500], DType::I32));
+        let upd = b.param("upd", TensorType::f32(vec![500, 64]));
+        let g = b.gather(nodes, idx, 0);
+        assert_eq!(b.shape(g), vec![500, 64]);
+        let s = b.scatter(nodes, idx, upd, 0, ReduceKind::Add);
+        assert_eq!(b.shape(s), vec![100, 64]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn binary_shape_mismatch_panics() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![2, 3]));
+        let y = b.param("y", TensorType::f32(vec![3, 2]));
+        b.add(x, y);
+    }
+
+    #[test]
+    fn collective_shapes() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![8, 16]));
+        let g = b.all_gather(x, 0, 0, 4);
+        assert_eq!(b.shape(g), vec![32, 16]);
+        let rs = b.reduce_scatter(g, 0, 0, 4, ReduceKind::Add);
+        assert_eq!(b.shape(rs), vec![8, 16]);
+        let a2a = b.all_to_all(x, 1, 0, 1, 2);
+        assert_eq!(b.shape(a2a), vec![4, 32]);
+    }
+}

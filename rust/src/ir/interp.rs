@@ -1,0 +1,835 @@
+//! Reference interpreter for the IR.
+//!
+//! Two entry points:
+//!
+//! * [`eval_func`] — evaluate a logical (single-device) function on host
+//!   tensors. This is the numeric oracle.
+//! * [`eval_spmd`] — evaluate a *device-local* function for every device
+//!   of a mesh in lock-step, implementing collectives by exchanging data
+//!   across the simulated devices. Together with [`eval_func`] this
+//!   validates that partitioner rewrites are semantics-preserving.
+//!
+//! All arithmetic is f32 (integer tensors hold exact small integers in
+//! f32, which is lossless below 2^24 — plenty for indices in tests).
+
+use super::*;
+use crate::mesh::Mesh;
+use anyhow::{bail, Result};
+
+/// Dense row-major host tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "tensor data length mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn splat(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    /// Deterministic pseudo-random tensor in [-1, 1) (xorshift; no rand
+    /// dependency needed on the hot path).
+    pub fn randn(shape: Vec<usize>, seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            data.push(((s >> 11) as f32 / (1u64 << 53) as f32) * 2.0 - 1.0);
+        }
+        Tensor { shape, data }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        strides_of(&self.shape)
+    }
+
+    /// Linear offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        let st = self.strides();
+        idx.iter().zip(&st).map(|(i, s)| i * s).sum()
+    }
+
+    pub fn get(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    /// Extract a contiguous block: `starts[d]..starts[d]+sizes[d]`.
+    pub fn block(&self, starts: &[usize], sizes: &[usize]) -> Tensor {
+        let mut out = Tensor::zeros(sizes.to_vec());
+        let n = out.elems();
+        let ost = out.strides();
+        let mut idx = vec![0usize; sizes.len()];
+        for lin in 0..n {
+            let mut rem = lin;
+            for d in 0..sizes.len() {
+                idx[d] = starts[d] + rem / ost[d];
+                rem %= ost[d];
+            }
+            out.data[lin] = self.get(&idx);
+        }
+        out
+    }
+
+    /// Max |a-b| between two tensors of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "max_abs_diff shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+fn strides_of(shape: &[usize]) -> Vec<usize> {
+    let mut st = vec![1usize; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        st[d] = st[d + 1] * shape[d + 1];
+    }
+    st
+}
+
+fn shape_usize(t: &TensorType) -> Vec<usize> {
+    t.shape.iter().map(|&d| d as usize).collect()
+}
+
+fn reduce_apply(kind: ReduceKind, acc: f32, v: f32) -> f32 {
+    match kind {
+        ReduceKind::Add => acc + v,
+        ReduceKind::Max => acc.max(v),
+        ReduceKind::Min => acc.min(v),
+        ReduceKind::Mul => acc * v,
+    }
+}
+
+fn reduce_init(kind: ReduceKind) -> f32 {
+    match kind {
+        ReduceKind::Add => 0.0,
+        ReduceKind::Max => f32::NEG_INFINITY,
+        ReduceKind::Min => f32::INFINITY,
+        ReduceKind::Mul => 1.0,
+    }
+}
+
+/// Evaluate a logical function on host tensors.
+pub fn eval_func(f: &Func, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    if inputs.len() != f.params.len() {
+        bail!("expected {} inputs, got {}", f.params.len(), inputs.len());
+    }
+    let mut values: Vec<Tensor> = inputs.to_vec();
+    values.reserve(f.instrs.len());
+    for instr in &f.instrs {
+        if instr.kind.is_device_local_only() {
+            bail!("{} in single-device evaluation", instr.kind.mnemonic());
+        }
+        let t = eval_instr(instr, &values)?;
+        values.push(t);
+    }
+    Ok(f.results.iter().map(|&r| values[r.index()].clone()).collect())
+}
+
+/// Evaluate one (non-collective) instruction.
+fn eval_instr(instr: &Instr, values: &[Tensor]) -> Result<Tensor> {
+    let op = |i: usize| &values[instr.operands[i].index()];
+    let out_shape = shape_usize(&instr.ty);
+    Ok(match &instr.kind {
+        OpKind::Constant { value } => Tensor::splat(out_shape, *value as f32),
+        OpKind::Iota { dim } => {
+            let mut t = Tensor::zeros(out_shape);
+            let st = t.strides();
+            let sz = t.shape[*dim];
+            for lin in 0..t.elems() {
+                t.data[lin] = ((lin / st[*dim]) % sz) as f32;
+            }
+            t
+        }
+        OpKind::Unary(u) => {
+            let x = op(0);
+            let g: fn(f32) -> f32 = match u {
+                UnaryOp::Neg => |v| -v,
+                UnaryOp::Relu => |v| v.max(0.0),
+                UnaryOp::Exp => f32::exp,
+                UnaryOp::Log => f32::ln,
+                UnaryOp::Tanh => f32::tanh,
+                UnaryOp::Sqrt => f32::sqrt,
+                UnaryOp::Rsqrt => |v| 1.0 / v.sqrt(),
+                UnaryOp::Abs => f32::abs,
+                UnaryOp::Sigmoid => |v| 1.0 / (1.0 + (-v).exp()),
+                UnaryOp::Cos => f32::cos,
+                UnaryOp::Sin => f32::sin,
+            };
+            Tensor::new(x.shape.clone(), x.data.iter().map(|&v| g(v)).collect())
+        }
+        OpKind::Binary(b) => {
+            let x = op(0);
+            let y = op(1);
+            let g: fn(f32, f32) -> f32 = match b {
+                BinaryOp::Add => |a, b| a + b,
+                BinaryOp::Sub => |a, b| a - b,
+                BinaryOp::Mul => |a, b| a * b,
+                BinaryOp::Div => |a, b| a / b,
+                BinaryOp::Max => f32::max,
+                BinaryOp::Min => f32::min,
+                BinaryOp::Pow => f32::powf,
+            };
+            Tensor::new(
+                x.shape.clone(),
+                x.data.iter().zip(&y.data).map(|(&a, &b)| g(a, b)).collect(),
+            )
+        }
+        OpKind::Convert => op(0).clone(),
+        OpKind::Select => {
+            let p = op(0);
+            let t = op(1);
+            let f_ = op(2);
+            Tensor::new(
+                t.shape.clone(),
+                p.data
+                    .iter()
+                    .zip(t.data.iter().zip(&f_.data))
+                    .map(|(&c, (&a, &b))| if c != 0.0 { a } else { b })
+                    .collect(),
+            )
+        }
+        OpKind::Compare(c) => {
+            let x = op(0);
+            let y = op(1);
+            let g: fn(f32, f32) -> bool = match c {
+                CompareOp::Lt => |a, b| a < b,
+                CompareOp::Le => |a, b| a <= b,
+                CompareOp::Gt => |a, b| a > b,
+                CompareOp::Ge => |a, b| a >= b,
+                CompareOp::Eq => |a, b| a == b,
+                CompareOp::Ne => |a, b| a != b,
+            };
+            Tensor::new(
+                x.shape.clone(),
+                x.data
+                    .iter()
+                    .zip(&y.data)
+                    .map(|(&a, &b)| if g(a, b) { 1.0 } else { 0.0 })
+                    .collect(),
+            )
+        }
+        OpKind::DotGeneral { lhs_batch, rhs_batch, lhs_contract, rhs_contract } => {
+            dot_general(op(0), op(1), lhs_batch, rhs_batch, lhs_contract, rhs_contract)
+        }
+        OpKind::Transpose { perm } => {
+            let x = op(0);
+            let mut out = Tensor::zeros(out_shape);
+            let ost = out.strides();
+            let mut idx = vec![0usize; x.rank()];
+            for lin in 0..out.elems() {
+                let mut rem = lin;
+                for d in 0..out.rank() {
+                    let od = rem / ost[d];
+                    rem %= ost[d];
+                    idx[perm[d]] = od;
+                }
+                out.data[lin] = x.get(&idx);
+            }
+            out
+        }
+        OpKind::Reduce { dims, kind } => {
+            let x = op(0);
+            let mut out = Tensor::splat(out_shape, reduce_init(*kind));
+            let xst = x.strides();
+            let ost = out.strides();
+            let kept: Vec<usize> = (0..x.rank()).filter(|d| !dims.contains(d)).collect();
+            let mut xidx = vec![0usize; x.rank()];
+            for lin in 0..x.elems() {
+                let mut rem = lin;
+                for d in 0..x.rank() {
+                    xidx[d] = rem / xst[d];
+                    rem %= xst[d];
+                }
+                let mut olin = 0;
+                for (k, &d) in kept.iter().enumerate() {
+                    olin += xidx[d] * ost[k];
+                }
+                out.data[olin] = reduce_apply(*kind, out.data[olin], x.data[lin]);
+            }
+            out
+        }
+        OpKind::Broadcast { dims } => {
+            let x = op(0);
+            let mut out = Tensor::zeros(out_shape);
+            let ost = out.strides();
+            let mut xidx = vec![0usize; x.rank()];
+            for lin in 0..out.elems() {
+                let mut rem = lin;
+                let mut oidx = vec![0usize; out.rank()];
+                for d in 0..out.rank() {
+                    oidx[d] = rem / ost[d];
+                    rem %= ost[d];
+                }
+                for (i, &d) in dims.iter().enumerate() {
+                    xidx[i] = oidx[d];
+                }
+                out.data[lin] = x.get(&xidx);
+            }
+            out
+        }
+        OpKind::Reshape => Tensor::new(out_shape, op(0).data.clone()),
+        OpKind::Concat { dim } => {
+            let mut out = Tensor::zeros(out_shape.clone());
+            let ost = out.strides();
+            let mut base = 0usize;
+            for &o in &instr.operands {
+                let x = &values[o.index()];
+                let xst = x.strides();
+                let mut idx = vec![0usize; x.rank()];
+                for lin in 0..x.elems() {
+                    let mut rem = lin;
+                    for d in 0..x.rank() {
+                        idx[d] = rem / xst[d];
+                        rem %= xst[d];
+                    }
+                    let mut olin = 0;
+                    for d in 0..x.rank() {
+                        let od = if d == *dim { idx[d] + base } else { idx[d] };
+                        olin += od * ost[d];
+                    }
+                    out.data[olin] = x.data[lin];
+                }
+                base += x.shape[*dim];
+            }
+            out
+        }
+        OpKind::Slice { starts, limits: _, strides } => {
+            let x = op(0);
+            let mut out = Tensor::zeros(out_shape);
+            let ost = out.strides();
+            let mut xidx = vec![0usize; x.rank()];
+            for lin in 0..out.elems() {
+                let mut rem = lin;
+                for d in 0..out.rank() {
+                    let od = rem / ost[d];
+                    rem %= ost[d];
+                    xidx[d] = starts[d] as usize + od * strides[d] as usize;
+                }
+                out.data[lin] = x.get(&xidx);
+            }
+            out
+        }
+        OpKind::Conv2d { stride, padding } => {
+            let x = op(0);
+            let k = op(1);
+            let (n, h, w, ci) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+            let (kh, kw, _, co) = (k.shape[0], k.shape[1], k.shape[2], k.shape[3]);
+            let mut out = Tensor::zeros(out_shape);
+            let (ho, wo) = (out.shape[1], out.shape[2]);
+            for ni in 0..n {
+                for oy in 0..ho {
+                    for ox in 0..wo {
+                        for oc in 0..co {
+                            let mut acc = 0.0f32;
+                            for ky in 0..kh {
+                                for kx in 0..kw {
+                                    let iy = (oy * stride.0 + ky) as i64 - padding.0 as i64;
+                                    let ix = (ox * stride.1 + kx) as i64 - padding.1 as i64;
+                                    if iy < 0 || iy >= h as i64 || ix < 0 || ix >= w as i64 {
+                                        continue;
+                                    }
+                                    for ic in 0..ci {
+                                        acc += x.get(&[ni, iy as usize, ix as usize, ic])
+                                            * k.get(&[ky, kx, ic, oc]);
+                                    }
+                                }
+                            }
+                            let off = out.offset(&[ni, oy, ox, oc]);
+                            out.data[off] = acc;
+                        }
+                    }
+                }
+            }
+            out
+        }
+        OpKind::Gather { axis } => {
+            let x = op(0);
+            let idx = op(1);
+            let mut out = Tensor::zeros(out_shape);
+            let ost = out.strides();
+            let ir = idx.rank();
+            let mut xidx = vec![0usize; x.rank()];
+            let mut iidx = vec![0usize; ir];
+            for lin in 0..out.elems() {
+                let mut rem = lin;
+                let mut oidx = vec![0usize; out.rank()];
+                for d in 0..out.rank() {
+                    oidx[d] = rem / ost[d];
+                    rem %= ost[d];
+                }
+                xidx[..*axis].copy_from_slice(&oidx[..*axis]);
+                iidx.copy_from_slice(&oidx[*axis..*axis + ir]);
+                let gathered = idx.get(&iidx) as usize;
+                xidx[*axis] = gathered;
+                for d in axis + 1..x.rank() {
+                    xidx[d] = oidx[d + ir - 1];
+                }
+                out.data[lin] = x.get(&xidx);
+            }
+            out
+        }
+        OpKind::Scatter { axis, kind } => {
+            let x = op(0);
+            let idx = op(1);
+            let upd = op(2);
+            let mut out = x.clone();
+            let ust = upd.strides();
+            let mut uidx = vec![0usize; upd.rank()];
+            for lin in 0..upd.elems() {
+                let mut rem = lin;
+                for d in 0..upd.rank() {
+                    uidx[d] = rem / ust[d];
+                    rem %= ust[d];
+                }
+                let mut oidx = uidx.clone();
+                oidx[*axis] = idx.data[uidx[*axis]] as usize;
+                let o = out.offset(&oidx);
+                out.data[o] = reduce_apply(*kind, out.data[o], upd.data[lin]);
+            }
+            out
+        }
+        OpKind::AllReduce { .. }
+        | OpKind::AllGather { .. }
+        | OpKind::ReduceScatter { .. }
+        | OpKind::AllToAll { .. }
+        | OpKind::ShardSlice { .. } => {
+            unreachable!("device-local-only ops handled by eval_spmd")
+        }
+    })
+}
+
+fn dot_general(
+    lhs: &Tensor,
+    rhs: &Tensor,
+    lhs_batch: &[usize],
+    rhs_batch: &[usize],
+    lhs_contract: &[usize],
+    rhs_contract: &[usize],
+) -> Tensor {
+    let lhs_free: Vec<usize> = (0..lhs.rank())
+        .filter(|d| !lhs_batch.contains(d) && !lhs_contract.contains(d))
+        .collect();
+    let rhs_free: Vec<usize> = (0..rhs.rank())
+        .filter(|d| !rhs_batch.contains(d) && !rhs_contract.contains(d))
+        .collect();
+    let batch_sizes: Vec<usize> = lhs_batch.iter().map(|&d| lhs.shape[d]).collect();
+    let lf_sizes: Vec<usize> = lhs_free.iter().map(|&d| lhs.shape[d]).collect();
+    let rf_sizes: Vec<usize> = rhs_free.iter().map(|&d| rhs.shape[d]).collect();
+    let c_sizes: Vec<usize> = lhs_contract.iter().map(|&d| lhs.shape[d]).collect();
+    let mut out_shape = batch_sizes.clone();
+    out_shape.extend(&lf_sizes);
+    out_shape.extend(&rf_sizes);
+    let mut out = Tensor::zeros(out_shape);
+
+    let lst = lhs.strides();
+    let rst = rhs.strides();
+    let nb: usize = batch_sizes.iter().product();
+    let nl: usize = lf_sizes.iter().product();
+    let nr: usize = rf_sizes.iter().product();
+    let nc: usize = c_sizes.iter().product();
+
+    // Precompute linear offsets contributed by each loop space.
+    let offs = |sizes: &[usize], dims: &[usize], st: &[usize]| -> Vec<usize> {
+        let n: usize = sizes.iter().product();
+        let mut v = Vec::with_capacity(n);
+        let mst = strides_of(sizes);
+        for lin in 0..n {
+            let mut off = 0;
+            let mut rem = lin;
+            for (k, &d) in dims.iter().enumerate() {
+                off += (rem / mst[k]) * st[d];
+                rem %= mst[k];
+            }
+            v.push(off);
+        }
+        v
+    };
+    let lb_off = offs(&batch_sizes, lhs_batch, &lst);
+    let rb_off = offs(&batch_sizes, rhs_batch, &rst);
+    let lf_off = offs(&lf_sizes, &lhs_free, &lst);
+    let rf_off = offs(&rf_sizes, &rhs_free, &rst);
+    let lc_off = offs(&c_sizes, lhs_contract, &lst);
+    let rc_off = offs(&c_sizes, rhs_contract, &rst);
+
+    let mut olin = 0usize;
+    for b in 0..nb {
+        for l in 0..nl {
+            for r in 0..nr {
+                let lbase = lb_off[b] + lf_off[l];
+                let rbase = rb_off[b] + rf_off[r];
+                let mut acc = 0.0f32;
+                for c in 0..nc {
+                    acc += lhs.data[lbase + lc_off[c]] * rhs.data[rbase + rc_off[c]];
+                }
+                out.data[olin] = acc;
+                olin += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Evaluate a device-local function for all devices of `mesh` in
+/// lock-step. `inputs[p][d]` is parameter `p` on device `d`.
+/// Returns `results[r][d]`.
+pub fn eval_spmd(f: &Func, mesh: &Mesh, inputs: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+    let nd = mesh.num_devices();
+    if inputs.len() != f.params.len() {
+        bail!("expected {} inputs, got {}", f.params.len(), inputs.len());
+    }
+    for (p, per_dev) in inputs.iter().enumerate() {
+        if per_dev.len() != nd {
+            bail!("param {} has {} device shards, mesh has {}", p, per_dev.len(), nd);
+        }
+    }
+    // values[v][d]
+    let mut values: Vec<Vec<Tensor>> = inputs.to_vec();
+    for instr in &f.instrs {
+        let next: Vec<Tensor> = if let OpKind::ShardSlice { axis, dim } = &instr.kind {
+            // Zero-communication: each device slices by its own coordinate.
+            let input = &values[instr.operands[0].index()];
+            let n = mesh.axis_size(*axis);
+            (0..nd)
+                .map(|d| {
+                    let coord = mesh.coords(d)[*axis];
+                    let t = &input[d];
+                    let shard = t.shape[*dim] / n;
+                    let mut starts = vec![0usize; t.rank()];
+                    let mut sizes = t.shape.clone();
+                    starts[*dim] = coord * shard;
+                    sizes[*dim] = shard;
+                    t.block(&starts, &sizes)
+                })
+                .collect()
+        } else if instr.kind.is_collective() {
+            eval_collective(instr, &values, mesh)?
+        } else {
+            let mut per_dev = Vec::with_capacity(nd);
+            for d in 0..nd {
+                // View of values for this device.
+                let dev_view: Vec<Tensor> =
+                    values.iter().map(|v| v[d].clone()).collect();
+                per_dev.push(eval_instr(instr, &dev_view)?);
+            }
+            per_dev
+        };
+        values.push(next);
+    }
+    Ok(f.results.iter().map(|&r| values[r.index()].clone()).collect())
+}
+
+fn eval_collective(instr: &Instr, values: &[Vec<Tensor>], mesh: &Mesh) -> Result<Vec<Tensor>> {
+    let nd = mesh.num_devices();
+    let input = &values[instr.operands[0].index()];
+    let mut out: Vec<Option<Tensor>> = vec![None; nd];
+    match &instr.kind {
+        OpKind::AllReduce { axes, kind } => {
+            for group in mesh.groups_multi(axes) {
+                let mut acc = input[group[0]].clone();
+                for &d in &group[1..] {
+                    for (a, b) in acc.data.iter_mut().zip(&input[d].data) {
+                        *a = reduce_apply(*kind, *a, *b);
+                    }
+                }
+                for &d in &group {
+                    out[d] = Some(acc.clone());
+                }
+            }
+        }
+        OpKind::AllGather { axis, dim } => {
+            for group in mesh.groups(*axis) {
+                // Concatenate shards along `dim`, ordered by axis coord.
+                let shard = &input[group[0]];
+                let mut gshape = shard.shape.clone();
+                gshape[*dim] *= group.len();
+                let mut g = Tensor::zeros(gshape);
+                let gst = g.strides();
+                for (k, &d) in group.iter().enumerate() {
+                    let s = &input[d];
+                    let sst = s.strides();
+                    let base = k * s.shape[*dim];
+                    let mut idx = vec![0usize; s.rank()];
+                    for lin in 0..s.elems() {
+                        let mut rem = lin;
+                        for dd in 0..s.rank() {
+                            idx[dd] = rem / sst[dd];
+                            rem %= sst[dd];
+                        }
+                        let mut olin = 0;
+                        for dd in 0..s.rank() {
+                            let od = if dd == *dim { idx[dd] + base } else { idx[dd] };
+                            olin += od * gst[dd];
+                        }
+                        g.data[olin] = s.data[lin];
+                    }
+                }
+                for &d in &group {
+                    out[d] = Some(g.clone());
+                }
+            }
+        }
+        OpKind::ReduceScatter { axis, dim, kind } => {
+            for group in mesh.groups(*axis) {
+                let mut acc = input[group[0]].clone();
+                for &d in &group[1..] {
+                    for (a, b) in acc.data.iter_mut().zip(&input[d].data) {
+                        *a = reduce_apply(*kind, *a, *b);
+                    }
+                }
+                let n = group.len();
+                let shard_sz = acc.shape[*dim] / n;
+                for (k, &d) in group.iter().enumerate() {
+                    let mut starts = vec![0usize; acc.rank()];
+                    let mut sizes = acc.shape.clone();
+                    starts[*dim] = k * shard_sz;
+                    sizes[*dim] = shard_sz;
+                    out[d] = Some(acc.block(&starts, &sizes));
+                }
+            }
+        }
+        OpKind::AllToAll { axis, split_dim, concat_dim } => {
+            for group in mesh.groups(*axis) {
+                let n = group.len();
+                // Device i's local tensor splits along split_dim into n
+                // pieces; piece j goes to group member j; each member
+                // concatenates received pieces along concat_dim.
+                for (j, &dst) in group.iter().enumerate() {
+                    let mut pieces = Vec::with_capacity(n);
+                    for &src in group.iter() {
+                        let t = &input[src];
+                        let piece_sz = t.shape[*split_dim] / n;
+                        let mut starts = vec![0usize; t.rank()];
+                        let mut sizes = t.shape.clone();
+                        starts[*split_dim] = j * piece_sz;
+                        sizes[*split_dim] = piece_sz;
+                        pieces.push(t.block(&starts, &sizes));
+                    }
+                    // concat along concat_dim
+                    let mut cshape = pieces[0].shape.clone();
+                    cshape[*concat_dim] *= n;
+                    let mut c = Tensor::zeros(cshape);
+                    let cst = c.strides();
+                    let mut base = 0;
+                    for p in &pieces {
+                        let pst = p.strides();
+                        let mut idx = vec![0usize; p.rank()];
+                        for lin in 0..p.elems() {
+                            let mut rem = lin;
+                            for dd in 0..p.rank() {
+                                idx[dd] = rem / pst[dd];
+                                rem %= pst[dd];
+                            }
+                            let mut olin = 0;
+                            for dd in 0..p.rank() {
+                                let od =
+                                    if dd == *concat_dim { idx[dd] + base } else { idx[dd] };
+                                olin += od * cst[dd];
+                            }
+                            c.data[olin] = p.data[lin];
+                        }
+                        base += p.shape[*concat_dim];
+                    }
+                    out[dst] = Some(c);
+                }
+            }
+        }
+        _ => unreachable!(),
+    }
+    Ok(out.into_iter().map(|o| o.expect("device not covered by any group")).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::Mesh;
+
+    #[test]
+    fn matmul_numeric() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![2, 2]));
+        let y = b.param("y", TensorType::f32(vec![2, 2]));
+        let z = b.matmul(x, y);
+        let f = b.build(vec![z]);
+        let xt = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let yt = Tensor::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let out = eval_func(&f, &[xt, yt]).unwrap();
+        assert_eq!(out[0].data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn batched_dot_matches_manual() {
+        let mut b = FuncBuilder::new("f");
+        let q = b.param("q", TensorType::f32(vec![2, 3, 4]));
+        let k = b.param("k", TensorType::f32(vec![2, 5, 4]));
+        let s = b.dot_general(q, k, &[0], &[0], &[2], &[2]);
+        let f = b.build(vec![s]);
+        let qt = Tensor::randn(vec![2, 3, 4], 1);
+        let kt = Tensor::randn(vec![2, 5, 4], 2);
+        let out = &eval_func(&f, &[qt.clone(), kt.clone()]).unwrap()[0];
+        assert_eq!(out.shape, vec![2, 3, 5]);
+        for bi in 0..2 {
+            for i in 0..3 {
+                for j in 0..5 {
+                    let mut acc = 0.0;
+                    for d in 0..4 {
+                        acc += qt.get(&[bi, i, d]) * kt.get(&[bi, j, d]);
+                    }
+                    assert!((out.get(&[bi, i, j]) - acc).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![3, 7]));
+        let s = b.softmax_last(x);
+        let f = b.build(vec![s]);
+        let xt = Tensor::randn(vec![3, 7], 3);
+        let out = &eval_func(&f, &[xt]).unwrap()[0];
+        for i in 0..3 {
+            let sum: f32 = (0..7).map(|j| out.get(&[i, j])).sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_reduce_numeric() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![2, 3]));
+        let t = b.transpose(x, &[1, 0]);
+        let r = b.reduce_sum(t, &[1]);
+        let f = b.build(vec![r]);
+        let xt = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let out = &eval_func(&f, &[xt]).unwrap()[0];
+        assert_eq!(out.data, vec![5., 7., 9.]); // column sums
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut b = FuncBuilder::new("f");
+        let nodes = b.param("nodes", TensorType::f32(vec![4, 2]));
+        let idx = b.param("idx", TensorType::new(vec![3], DType::I32));
+        let g = b.gather(nodes, idx, 0);
+        let zeros = b.constant(0.0, TensorType::f32(vec![4, 2]));
+        let s = b.scatter(zeros, idx, g, 0, ReduceKind::Add);
+        let f = b.build(vec![g, s]);
+        let nt = Tensor::new(vec![4, 2], vec![0., 1., 10., 11., 20., 21., 30., 31.]);
+        let it = Tensor::new(vec![3], vec![2.0, 0.0, 2.0]);
+        let out = eval_func(&f, &[nt, it]).unwrap();
+        assert_eq!(out[0].data, vec![20., 21., 0., 1., 20., 21.]);
+        // scatter-add: row2 gets 2x its value, row0 once
+        assert_eq!(out[1].data, vec![0., 1., 0., 0., 40., 42., 0., 0.]);
+    }
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![1, 3, 3, 1]));
+        let k = b.param("k", TensorType::f32(vec![1, 1, 1, 1]));
+        let y = b.conv2d(x, k, (1, 1), (0, 0));
+        let f = b.build(vec![y]);
+        let xt = Tensor::randn(vec![1, 3, 3, 1], 5);
+        let kt = Tensor::new(vec![1, 1, 1, 1], vec![1.0]);
+        let out = &eval_func(&f, &[xt.clone(), kt]).unwrap()[0];
+        assert_eq!(out.data, xt.data);
+    }
+
+    #[test]
+    fn spmd_all_reduce_sums_across_axis() {
+        // mesh 2x2; all_reduce over axis 0 sums pairs of devices that
+        // share the axis-1 coordinate.
+        let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![1]));
+        let r = b.all_reduce(x, vec![0], ReduceKind::Add);
+        let f = b.build(vec![r]);
+        let inputs =
+            vec![(0..4).map(|d| Tensor::new(vec![1], vec![d as f32])).collect::<Vec<_>>()];
+        let out = eval_spmd(&f, &mesh, &inputs).unwrap();
+        // device (i,j) has value 2i+j; group along axis0 = {j, 2+j}
+        let got: Vec<f32> = out[0].iter().map(|t| t.data[0]).collect();
+        assert_eq!(got, vec![2.0, 4.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn spmd_all_gather_restores_full_tensor() {
+        let mesh = Mesh::grid(&[("a", 2)]);
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![2, 2]));
+        let g = b.all_gather(x, 0, 0, 2);
+        let f = b.build(vec![g]);
+        let shard0 = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let shard1 = Tensor::new(vec![2, 2], vec![5., 6., 7., 8.]);
+        let out = eval_spmd(&f, &mesh, &[vec![shard0, shard1]]).unwrap();
+        for d in 0..2 {
+            assert_eq!(out[0][d].shape, vec![4, 2]);
+            assert_eq!(out[0][d].data, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        }
+    }
+
+    #[test]
+    fn spmd_reduce_scatter_is_sum_then_shard() {
+        let mesh = Mesh::grid(&[("a", 2)]);
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![4]));
+        let rs = b.reduce_scatter(x, 0, 0, 2, ReduceKind::Add);
+        let f = b.build(vec![rs]);
+        let d0 = Tensor::new(vec![4], vec![1., 2., 3., 4.]);
+        let d1 = Tensor::new(vec![4], vec![10., 20., 30., 40.]);
+        let out = eval_spmd(&f, &mesh, &[vec![d0, d1]]).unwrap();
+        assert_eq!(out[0][0].data, vec![11., 22.]);
+        assert_eq!(out[0][1].data, vec![33., 44.]);
+    }
+
+    #[test]
+    fn spmd_all_to_all_reshards() {
+        // 2 devices; input sharded on dim0 (each holds [2,4]); output
+        // sharded on dim1: all_to_all(split_dim=1, concat_dim=0).
+        let mesh = Mesh::grid(&[("a", 2)]);
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![2, 4]));
+        let y = b.all_to_all(x, 0, 1, 0, 2);
+        let f = b.build(vec![y]);
+        // full tensor: [[0,1,2,3],[4,5,6,7],[8,9,10,11],[12,13,14,15]]
+        let d0 = Tensor::new(vec![2, 4], (0..8).map(|v| v as f32).collect());
+        let d1 = Tensor::new(vec![2, 4], (8..16).map(|v| v as f32).collect());
+        let out = eval_spmd(&f, &mesh, &[vec![d0, d1]]).unwrap();
+        // device0 should now hold columns 0..2 of all rows
+        assert_eq!(out[0][0].shape, vec![4, 2]);
+        assert_eq!(out[0][0].data, vec![0., 1., 4., 5., 8., 9., 12., 13.]);
+        assert_eq!(out[0][1].data, vec![2., 3., 6., 7., 10., 11., 14., 15.]);
+    }
+}

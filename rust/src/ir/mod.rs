@@ -1,0 +1,437 @@
+//! A StableHLO-like straight-line tensor IR in ANF/SSA form.
+//!
+//! This is the substrate the paper's analysis (§3) operates over. Programs
+//! are single functions of tensor parameters; every instruction produces
+//! exactly one tensor value. There is no control flow — ML training steps
+//! lower to straight-line code at this level (the paper operates on
+//! StableHLO modules post-inlining).
+//!
+//! Collective ops ([`OpKind::AllReduce`] etc.) only appear in
+//! *device-local* modules produced by the SPMD partitioner
+//! ([`crate::sharding`]); the verifier rejects them in logical modules.
+
+pub mod autodiff;
+pub mod builder;
+pub mod interp;
+pub mod printer;
+pub mod verifier;
+
+pub use builder::FuncBuilder;
+
+
+
+/// Element type of a tensor. The reference interpreter computes in f32
+/// regardless; dtype drives byte-size accounting in the cost model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    BF16,
+    F16,
+    I32,
+    Bool,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn bytes(self) -> u64 {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::BF16 | DType::F16 => 2,
+            DType::Bool => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::BF16 => "bf16",
+            DType::F16 => "f16",
+            DType::I32 => "i32",
+            DType::Bool => "i1",
+        }
+    }
+}
+
+/// A tensor type: shape (row-major) and element type.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct TensorType {
+    pub shape: Vec<i64>,
+    pub dtype: DType,
+}
+
+impl TensorType {
+    pub fn new(shape: Vec<i64>, dtype: DType) -> Self {
+        TensorType { shape, dtype }
+    }
+
+    pub fn f32(shape: Vec<i64>) -> Self {
+        TensorType { shape, dtype: DType::F32 }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total number of elements.
+    pub fn elems(&self) -> u64 {
+        self.shape.iter().map(|&d| d.max(0) as u64).product()
+    }
+
+    /// Total size in bytes.
+    pub fn bytes(&self) -> u64 {
+        self.elems() * self.dtype.bytes()
+    }
+}
+
+/// SSA value identifier. Values `0..func.params.len()` are parameters;
+/// the rest are instruction results in program order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ValueId(pub u32);
+
+impl ValueId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Elementwise unary operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UnaryOp {
+    Neg,
+    Relu,
+    Exp,
+    Log,
+    Tanh,
+    Sqrt,
+    Rsqrt,
+    Abs,
+    Sigmoid,
+    Cos,
+    Sin,
+}
+
+/// Elementwise binary operations (operands must have identical shapes;
+/// broadcasting must be made explicit with [`OpKind::Broadcast`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinaryOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Pow,
+}
+
+/// Reduction kinds for `Reduce`, `AllReduce`, `ReduceScatter`, `Scatter`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReduceKind {
+    Add,
+    Max,
+    Min,
+    Mul,
+}
+
+/// Mesh axis reference used by collective ops in device-local IR.
+/// Indexes into the [`crate::mesh::Mesh`] the module was partitioned for.
+pub type AxisId = usize;
+
+/// Operation kinds. Single result per op.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    /// Splat constant filling the result type with `value`.
+    Constant { value: f64 },
+    /// `iota` along `dim`: result[i0..ik] = i_{dim}.
+    Iota { dim: usize },
+    /// Elementwise unary.
+    Unary(UnaryOp),
+    /// Elementwise binary.
+    Binary(BinaryOp),
+    /// Generalized matrix product (StableHLO `dot_general`).
+    /// Result dims: batch dims (in lhs order), then lhs free, then rhs free.
+    DotGeneral {
+        lhs_batch: Vec<usize>,
+        rhs_batch: Vec<usize>,
+        lhs_contract: Vec<usize>,
+        rhs_contract: Vec<usize>,
+    },
+    /// Permute dimensions: `result[d] = operand[perm[d]]`.
+    Transpose { perm: Vec<usize> },
+    /// Reduce over `dims` with `kind`; reduced dims removed from the shape.
+    Reduce { dims: Vec<usize>, kind: ReduceKind },
+    /// StableHLO `broadcast_in_dim`: `dims[i]` is the output dimension that
+    /// input dimension `i` maps to; remaining output dims are new.
+    Broadcast { dims: Vec<usize> },
+    /// Reshape to the result type's shape (same element count).
+    Reshape,
+    /// Concatenate all operands along `dim`.
+    Concat { dim: usize },
+    /// Strided slice.
+    Slice { starts: Vec<i64>, limits: Vec<i64>, strides: Vec<i64> },
+    /// 2-D convolution, input NHWC, kernel HWIO, output NHWC.
+    Conv2d { stride: (usize, usize), padding: (usize, usize) },
+    /// `take(operand, indices, axis)` — output shape is
+    /// `operand.shape[..axis] ++ indices.shape ++ operand.shape[axis+1..]`.
+    Gather { axis: usize },
+    /// `scatter(operand, indices, updates, axis)` with combiner `kind`:
+    /// `out = operand; out[.., indices[i], ..] ⊕= updates[.., i, ..]`.
+    /// `indices` must be rank-1 and index dimension `axis` of the operand.
+    Scatter { axis: usize, kind: ReduceKind },
+    /// Dtype conversion to the result type's dtype.
+    Convert,
+    /// Select(pred, on_true, on_false) — elementwise.
+    Select,
+    /// Compare producing a Bool tensor.
+    Compare(CompareOp),
+    /// Numerically-stable fused ops are built from primitives; `Rem` etc.
+    /// are not needed by the model zoo.
+    ///
+    /// ---- Collectives: device-local IR only (inserted by the partitioner).
+    /// Sum (etc.) across all devices along `axes`; shape unchanged.
+    AllReduce { axes: Vec<AxisId>, kind: ReduceKind },
+    /// Gather shards along mesh axis `axis`, concatenating on tensor
+    /// dimension `dim` (undoes a sharding of `dim` by `axis`).
+    AllGather { axis: AxisId, dim: usize },
+    /// Reduce across `axis` then scatter along tensor dimension `dim`.
+    ReduceScatter { axis: AxisId, dim: usize, kind: ReduceKind },
+    /// Resharding: move the shard axis from `split_dim` (which becomes
+    /// `axis.size()`× larger... i.e. gathered) to `concat_dim` (split).
+    AllToAll { axis: AxisId, split_dim: usize, concat_dim: usize },
+    /// Device-local (zero-communication) resharding: each device keeps its
+    /// own block of a *replicated* tensor along `dim`, indexed by the
+    /// device's coordinate on mesh axis `axis`. GSPMD emits the same
+    /// pattern as a dynamic-slice on the partition id.
+    ShardSlice { axis: AxisId, dim: usize },
+}
+
+/// Comparison predicates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CompareOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+impl OpKind {
+    /// Short mnemonic used by the printer and debugging output.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Constant { .. } => "constant",
+            OpKind::Iota { .. } => "iota",
+            OpKind::Unary(u) => match u {
+                UnaryOp::Neg => "neg",
+                UnaryOp::Relu => "relu",
+                UnaryOp::Exp => "exp",
+                UnaryOp::Log => "log",
+                UnaryOp::Tanh => "tanh",
+                UnaryOp::Sqrt => "sqrt",
+                UnaryOp::Rsqrt => "rsqrt",
+                UnaryOp::Abs => "abs",
+                UnaryOp::Sigmoid => "sigmoid",
+                UnaryOp::Cos => "cos",
+                UnaryOp::Sin => "sin",
+            },
+            OpKind::Binary(b) => match b {
+                BinaryOp::Add => "add",
+                BinaryOp::Sub => "sub",
+                BinaryOp::Mul => "mul",
+                BinaryOp::Div => "div",
+                BinaryOp::Max => "max",
+                BinaryOp::Min => "min",
+                BinaryOp::Pow => "pow",
+            },
+            OpKind::DotGeneral { .. } => "dot_general",
+            OpKind::Transpose { .. } => "transpose",
+            OpKind::Reduce { .. } => "reduce",
+            OpKind::Broadcast { .. } => "broadcast",
+            OpKind::Reshape => "reshape",
+            OpKind::Concat { .. } => "concat",
+            OpKind::Slice { .. } => "slice",
+            OpKind::Conv2d { .. } => "conv2d",
+            OpKind::Gather { .. } => "gather",
+            OpKind::Scatter { .. } => "scatter",
+            OpKind::Convert => "convert",
+            OpKind::Select => "select",
+            OpKind::Compare(_) => "compare",
+            OpKind::AllReduce { .. } => "all_reduce",
+            OpKind::AllGather { .. } => "all_gather",
+            OpKind::ReduceScatter { .. } => "reduce_scatter",
+            OpKind::AllToAll { .. } => "all_to_all",
+            OpKind::ShardSlice { .. } => "shard_slice",
+        }
+    }
+
+    /// True for collective-communication ops (device-local IR only).
+    pub fn is_collective(&self) -> bool {
+        matches!(
+            self,
+            OpKind::AllReduce { .. }
+                | OpKind::AllGather { .. }
+                | OpKind::ReduceScatter { .. }
+                | OpKind::AllToAll { .. }
+        )
+    }
+
+    /// True for ops only valid in device-local (partitioned) modules:
+    /// collectives plus the zero-communication [`OpKind::ShardSlice`].
+    pub fn is_device_local_only(&self) -> bool {
+        self.is_collective() || matches!(self, OpKind::ShardSlice { .. })
+    }
+
+    /// True for elementwise ops (same-shape in/out, dim-preserving).
+    pub fn is_elementwise(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Unary(_)
+                | OpKind::Binary(_)
+                | OpKind::Convert
+                | OpKind::Select
+                | OpKind::Compare(_)
+        )
+    }
+}
+
+/// One instruction: an op applied to operands, producing `result`.
+#[derive(Clone, Debug)]
+pub struct Instr {
+    pub result: ValueId,
+    pub kind: OpKind,
+    pub operands: Vec<ValueId>,
+    pub ty: TensorType,
+}
+
+/// A function parameter.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub ty: TensorType,
+}
+
+/// A straight-line tensor function.
+#[derive(Clone, Debug)]
+pub struct Func {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub instrs: Vec<Instr>,
+    pub results: Vec<ValueId>,
+}
+
+impl Func {
+    /// Number of SSA values (params + instruction results).
+    pub fn num_values(&self) -> usize {
+        self.params.len() + self.instrs.len()
+    }
+
+    /// Type of a value.
+    pub fn ty(&self, v: ValueId) -> &TensorType {
+        let i = v.index();
+        if i < self.params.len() {
+            &self.params[i].ty
+        } else {
+            &self.instrs[i - self.params.len()].ty
+        }
+    }
+
+    /// Is `v` a parameter?
+    pub fn is_param(&self, v: ValueId) -> bool {
+        v.index() < self.params.len()
+    }
+
+    /// The defining instruction of `v`, or `None` for parameters.
+    pub fn def(&self, v: ValueId) -> Option<&Instr> {
+        let i = v.index();
+        if i < self.params.len() {
+            None
+        } else {
+            Some(&self.instrs[i - self.params.len()])
+        }
+    }
+
+    /// Human-readable name of a value (`%name` for params, `%vN` else).
+    pub fn value_name(&self, v: ValueId) -> String {
+        let i = v.index();
+        if i < self.params.len() {
+            format!("%{}", self.params[i].name)
+        } else {
+            format!("%v{}", i - self.params.len())
+        }
+    }
+
+    /// Iterate over `(user_instr_index, operand_index)` for each use.
+    pub fn uses(&self) -> Vec<Vec<(usize, usize)>> {
+        let mut uses = vec![Vec::new(); self.num_values()];
+        for (ii, instr) in self.instrs.iter().enumerate() {
+            for (oi, &op) in instr.operands.iter().enumerate() {
+                uses[op.index()].push((ii, oi));
+            }
+        }
+        uses
+    }
+
+    /// Total bytes of all parameters (model + input footprint).
+    pub fn param_bytes(&self) -> u64 {
+        self.params.iter().map(|p| p.ty.bytes()).sum()
+    }
+
+    /// Count of ops by mnemonic — handy for tests and reporting.
+    pub fn op_histogram(&self) -> std::collections::BTreeMap<&'static str, usize> {
+        let mut h = std::collections::BTreeMap::new();
+        for i in &self.instrs {
+            *h.entry(i.kind.mnemonic()).or_insert(0) += 1;
+        }
+        h
+    }
+}
+
+/// A module: a set of functions. Analysis and partitioning operate on
+/// `main`.
+#[derive(Clone, Debug)]
+pub struct Module {
+    pub funcs: Vec<Func>,
+}
+
+impl Module {
+    pub fn new(main: Func) -> Self {
+        Module { funcs: vec![main] }
+    }
+
+    pub fn main(&self) -> &Func {
+        &self.funcs[0]
+    }
+
+    pub fn main_mut(&mut self) -> &mut Func {
+        &mut self.funcs[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::BF16.bytes(), 2);
+        assert_eq!(DType::Bool.bytes(), 1);
+    }
+
+    #[test]
+    fn tensor_type_accounting() {
+        let t = TensorType::new(vec![256, 32], DType::BF16);
+        assert_eq!(t.rank(), 2);
+        assert_eq!(t.elems(), 256 * 32);
+        assert_eq!(t.bytes(), 256 * 32 * 2);
+    }
+
+    #[test]
+    fn opkind_classification() {
+        assert!(OpKind::Unary(UnaryOp::Relu).is_elementwise());
+        assert!(OpKind::Binary(BinaryOp::Add).is_elementwise());
+        assert!(!OpKind::Reshape.is_elementwise());
+        assert!(OpKind::AllReduce { axes: vec![0], kind: ReduceKind::Add }.is_collective());
+        assert!(!OpKind::Reshape.is_collective());
+    }
+}

@@ -1,0 +1,111 @@
+//! Textual printer for the IR, in the paper's listing style:
+//!
+//! ```text
+//! def mlp(%x : f32[256,32], %w1 : f32[32,64], %w2 : f32[64,16]) {
+//!   %v0 : f32[256,64] = matmul(%x, %w1)
+//!   %v1 : f32[256,64] = relu(%v0)
+//!   %v2 : f32[256,16] = matmul(%v1, %w2)
+//!   return %v2
+//! }
+//! ```
+
+use super::*;
+use std::fmt::Write as _;
+
+fn fmt_ty(t: &TensorType) -> String {
+    let dims: Vec<String> = t.shape.iter().map(|d| d.to_string()).collect();
+    format!("{}[{}]", t.dtype.name(), dims.join(","))
+}
+
+fn fmt_attrs(kind: &OpKind) -> String {
+    match kind {
+        OpKind::Constant { value } => format!(" {{value={value}}}"),
+        OpKind::Iota { dim } => format!(" {{dim={dim}}}"),
+        OpKind::DotGeneral { lhs_batch, rhs_batch, lhs_contract, rhs_contract } => format!(
+            " {{batch=[{:?},{:?}], contract=[{:?},{:?}]}}",
+            lhs_batch, rhs_batch, lhs_contract, rhs_contract
+        ),
+        OpKind::Transpose { perm } => format!(" {{perm={perm:?}}}"),
+        OpKind::Reduce { dims, kind } => format!(" {{dims={dims:?}, kind={kind:?}}}"),
+        OpKind::Broadcast { dims } => format!(" {{dims={dims:?}}}"),
+        OpKind::Concat { dim } => format!(" {{dim={dim}}}"),
+        OpKind::Slice { starts, limits, strides } => {
+            format!(" {{starts={starts:?}, limits={limits:?}, strides={strides:?}}}")
+        }
+        OpKind::Conv2d { stride, padding } => format!(" {{stride={stride:?}, padding={padding:?}}}"),
+        OpKind::Gather { axis } => format!(" {{axis={axis}}}"),
+        OpKind::Scatter { axis, kind } => format!(" {{axis={axis}, kind={kind:?}}}"),
+        OpKind::Compare(op) => format!(" {{op={op:?}}}"),
+        OpKind::AllReduce { axes, kind } => format!(" {{axes={axes:?}, kind={kind:?}}}"),
+        OpKind::AllGather { axis, dim } => format!(" {{axis={axis}, dim={dim}}}"),
+        OpKind::ReduceScatter { axis, dim, kind } => {
+            format!(" {{axis={axis}, dim={dim}, kind={kind:?}}}")
+        }
+        OpKind::AllToAll { axis, split_dim, concat_dim } => {
+            format!(" {{axis={axis}, split={split_dim}, concat={concat_dim}}}")
+        }
+        OpKind::ShardSlice { axis, dim } => format!(" {{axis={axis}, dim={dim}}}"),
+        _ => String::new(),
+    }
+}
+
+/// Render a function as text.
+pub fn print_func(f: &Func) -> String {
+    let mut out = String::new();
+    let params: Vec<String> =
+        f.params.iter().map(|p| format!("%{} : {}", p.name, fmt_ty(&p.ty))).collect();
+    let _ = writeln!(out, "def {}({}) {{", f.name, params.join(", "));
+    for instr in &f.instrs {
+        let ops: Vec<String> = instr.operands.iter().map(|&o| f.value_name(o)).collect();
+        let _ = writeln!(
+            out,
+            "  {} : {} = {}({}){}",
+            f.value_name(instr.result),
+            fmt_ty(&instr.ty),
+            instr.kind.mnemonic(),
+            ops.join(", "),
+            fmt_attrs(&instr.kind),
+        );
+    }
+    let results: Vec<String> = f.results.iter().map(|&r| f.value_name(r)).collect();
+    let _ = writeln!(out, "  return {}", results.join(", "));
+    out.push_str("}\n");
+    out
+}
+
+/// Render a module as text.
+pub fn print_module(m: &Module) -> String {
+    m.funcs.iter().map(print_func).collect::<Vec<_>>().join("\n")
+}
+
+impl std::fmt::Display for Func {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&print_func(self))
+    }
+}
+
+impl std::fmt::Display for Module {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&print_module(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+
+    #[test]
+    fn print_mlp() {
+        let mut b = FuncBuilder::new("mlp");
+        let x = b.param("x", TensorType::f32(vec![256, 32]));
+        let w1 = b.param("w1", TensorType::f32(vec![32, 64]));
+        let y = b.matmul(x, w1);
+        let z = b.relu(y);
+        let f = b.build(vec![z]);
+        let text = format!("{f}");
+        assert!(text.contains("def mlp(%x : f32[256,32], %w1 : f32[32,64])"));
+        assert!(text.contains("%v0 : f32[256,64] = dot_general(%x, %w1)"));
+        assert!(text.contains("%v1 : f32[256,64] = relu(%v0)"));
+        assert!(text.contains("return %v1"));
+    }
+}

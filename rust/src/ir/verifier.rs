@@ -1,0 +1,325 @@
+//! Independent structural verifier for [`Func`]/[`Module`].
+//!
+//! The builder infers shapes when constructing programs; the verifier
+//! re-derives every result type from scratch so that partitioner rewrites
+//! (which construct instructions directly) are independently checked.
+
+use super::*;
+use anyhow::{bail, ensure, Result};
+
+/// Verify a logical (pre-partitioning) function: well-formed SSA, correct
+/// shapes, and no collectives.
+pub fn verify_logical(f: &Func) -> Result<()> {
+    verify(f, false)
+}
+
+/// Verify a device-local (post-partitioning) function; collectives are
+/// permitted. Collective shape changes cannot be checked without the mesh,
+/// so use [`verify_device_local_with`] when a mesh is available.
+pub fn verify_device_local(f: &Func) -> Result<()> {
+    verify(f, true)
+}
+
+/// Verify a device-local function against its mesh (checks collective
+/// shape arithmetic using real axis sizes).
+pub fn verify_device_local_with(f: &Func, mesh: &crate::mesh::Mesh) -> Result<()> {
+    verify(f, true)?;
+    for instr in &f.instrs {
+        if !instr.kind.is_device_local_only() {
+            continue;
+        }
+        let in_ty = f.ty(instr.operands[0]).clone();
+        match &instr.kind {
+            OpKind::AllGather { axis, dim } => {
+                ensure!(*axis < mesh.rank(), "all_gather axis out of mesh range");
+                let sz = mesh.axis_size(*axis) as i64;
+                ensure!(
+                    instr.ty.shape[*dim] == in_ty.shape[*dim] * sz,
+                    "all_gather shape mismatch in {}",
+                    f.value_name(instr.result)
+                );
+            }
+            OpKind::ReduceScatter { axis, dim, .. } => {
+                ensure!(*axis < mesh.rank(), "reduce_scatter axis out of mesh range");
+                let sz = mesh.axis_size(*axis) as i64;
+                ensure!(
+                    instr.ty.shape[*dim] * sz == in_ty.shape[*dim],
+                    "reduce_scatter shape mismatch in {}",
+                    f.value_name(instr.result)
+                );
+            }
+            OpKind::AllToAll { axis, split_dim, concat_dim } => {
+                ensure!(*axis < mesh.rank(), "all_to_all axis out of mesh range");
+                let sz = mesh.axis_size(*axis) as i64;
+                ensure!(
+                    instr.ty.shape[*split_dim] * sz == in_ty.shape[*split_dim],
+                    "all_to_all split mismatch"
+                );
+                ensure!(
+                    instr.ty.shape[*concat_dim] == in_ty.shape[*concat_dim] * sz,
+                    "all_to_all concat mismatch"
+                );
+            }
+            OpKind::AllReduce { axes, .. } => {
+                for a in axes {
+                    ensure!(*a < mesh.rank(), "all_reduce axis out of mesh range");
+                }
+            }
+            OpKind::ShardSlice { axis, dim } => {
+                ensure!(*axis < mesh.rank(), "shard_slice axis out of mesh range");
+                let sz = mesh.axis_size(*axis) as i64;
+                ensure!(
+                    instr.ty.shape[*dim] * sz == in_ty.shape[*dim],
+                    "shard_slice shape mismatch in {}",
+                    f.value_name(instr.result)
+                );
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+fn verify(f: &Func, allow_collectives: bool) -> Result<()> {
+    let n_params = f.params.len();
+    for (ii, instr) in f.instrs.iter().enumerate() {
+        let this = ValueId((n_params + ii) as u32);
+        ensure!(instr.result == this, "instr {} result id out of order", ii);
+        for &op in &instr.operands {
+            ensure!(
+                op.index() < n_params + ii,
+                "instr {} ({}) uses value {:?} not yet defined",
+                ii,
+                instr.kind.mnemonic(),
+                op
+            );
+        }
+        if instr.kind.is_device_local_only() && !allow_collectives {
+            bail!("collective {} in logical module", instr.kind.mnemonic());
+        }
+        check_shapes(f, instr)?;
+    }
+    for &r in &f.results {
+        ensure!(r.index() < f.num_values(), "result {:?} out of range", r);
+    }
+    ensure!(!f.results.is_empty(), "function must return at least one value");
+    Ok(())
+}
+
+fn check_shapes(f: &Func, instr: &Instr) -> Result<()> {
+    let name = f.value_name(instr.result);
+    let ity = |i: usize| f.ty(instr.operands[i]);
+    let n_ops = instr.operands.len();
+    let expect_ops = |n: usize| -> Result<()> {
+        ensure!(n_ops == n, "{name}: expected {n} operands, got {n_ops}");
+        Ok(())
+    };
+    match &instr.kind {
+        OpKind::Constant { .. } => expect_ops(0)?,
+        OpKind::Iota { dim } => {
+            expect_ops(0)?;
+            ensure!(*dim < instr.ty.rank(), "{name}: iota dim out of range");
+        }
+        OpKind::Unary(_) => {
+            expect_ops(1)?;
+            ensure!(ity(0).shape == instr.ty.shape, "{name}: unary shape mismatch");
+        }
+        OpKind::Binary(_) => {
+            expect_ops(2)?;
+            ensure!(ity(0).shape == ity(1).shape, "{name}: binary operand mismatch");
+            ensure!(ity(0).shape == instr.ty.shape, "{name}: binary result mismatch");
+        }
+        OpKind::Convert => {
+            expect_ops(1)?;
+            ensure!(ity(0).shape == instr.ty.shape, "{name}: convert shape mismatch");
+        }
+        OpKind::Select => {
+            expect_ops(3)?;
+            ensure!(ity(0).shape == ity(1).shape && ity(1).shape == ity(2).shape);
+            ensure!(ity(1).shape == instr.ty.shape);
+        }
+        OpKind::Compare(_) => {
+            expect_ops(2)?;
+            ensure!(ity(0).shape == ity(1).shape && ity(0).shape == instr.ty.shape);
+            ensure!(instr.ty.dtype == DType::Bool, "{name}: compare must produce bool");
+        }
+        OpKind::DotGeneral { lhs_batch, rhs_batch, lhs_contract, rhs_contract } => {
+            expect_ops(2)?;
+            let lt = ity(0);
+            let rt = ity(1);
+            ensure!(lhs_batch.len() == rhs_batch.len());
+            ensure!(lhs_contract.len() == rhs_contract.len());
+            for (&lb, &rb) in lhs_batch.iter().zip(rhs_batch) {
+                ensure!(lt.shape[lb] == rt.shape[rb], "{name}: batch size mismatch");
+            }
+            for (&lc, &rc) in lhs_contract.iter().zip(rhs_contract) {
+                ensure!(lt.shape[lc] == rt.shape[rc], "{name}: contract size mismatch");
+            }
+            let mut shape: Vec<i64> = lhs_batch.iter().map(|&d| lt.shape[d]).collect();
+            for (d, &s) in lt.shape.iter().enumerate() {
+                if !lhs_batch.contains(&d) && !lhs_contract.contains(&d) {
+                    shape.push(s);
+                }
+            }
+            for (d, &s) in rt.shape.iter().enumerate() {
+                if !rhs_batch.contains(&d) && !rhs_contract.contains(&d) {
+                    shape.push(s);
+                }
+            }
+            ensure!(shape == instr.ty.shape, "{name}: dot_general result shape mismatch");
+        }
+        OpKind::Transpose { perm } => {
+            expect_ops(1)?;
+            let t = ity(0);
+            ensure!(perm.len() == t.rank(), "{name}: perm rank mismatch");
+            let mut seen = vec![false; perm.len()];
+            for &p in perm {
+                ensure!(p < perm.len() && !seen[p], "{name}: perm not a permutation");
+                seen[p] = true;
+            }
+            let shape: Vec<i64> = perm.iter().map(|&p| t.shape[p]).collect();
+            ensure!(shape == instr.ty.shape, "{name}: transpose result mismatch");
+        }
+        OpKind::Reduce { dims, .. } => {
+            expect_ops(1)?;
+            let t = ity(0);
+            let shape: Vec<i64> = t
+                .shape
+                .iter()
+                .enumerate()
+                .filter(|(d, _)| !dims.contains(d))
+                .map(|(_, &s)| s)
+                .collect();
+            ensure!(shape == instr.ty.shape, "{name}: reduce result mismatch");
+        }
+        OpKind::Broadcast { dims } => {
+            expect_ops(1)?;
+            let t = ity(0);
+            ensure!(dims.len() == t.rank(), "{name}: broadcast dims arity");
+            for (i, &d) in dims.iter().enumerate() {
+                ensure!(d < instr.ty.rank(), "{name}: broadcast dim range");
+                ensure!(t.shape[i] == instr.ty.shape[d], "{name}: broadcast size");
+            }
+        }
+        OpKind::Reshape => {
+            expect_ops(1)?;
+            ensure!(ity(0).elems() == instr.ty.elems(), "{name}: reshape elems mismatch");
+        }
+        OpKind::Concat { dim } => {
+            ensure!(n_ops >= 1);
+            let mut total = 0i64;
+            for i in 0..n_ops {
+                let t = ity(i);
+                ensure!(t.rank() == instr.ty.rank());
+                for d in 0..t.rank() {
+                    if d != *dim {
+                        ensure!(t.shape[d] == instr.ty.shape[d], "{name}: concat dim mismatch");
+                    }
+                }
+                total += t.shape[*dim];
+            }
+            ensure!(total == instr.ty.shape[*dim], "{name}: concat total mismatch");
+        }
+        OpKind::Slice { starts, limits, strides } => {
+            expect_ops(1)?;
+            let t = ity(0);
+            for d in 0..t.rank() {
+                ensure!(0 <= starts[d] && starts[d] <= limits[d] && limits[d] <= t.shape[d]);
+                let sz = (limits[d] - starts[d] + strides[d] - 1) / strides[d];
+                ensure!(sz == instr.ty.shape[d], "{name}: slice size mismatch");
+            }
+        }
+        OpKind::Conv2d { stride, padding } => {
+            expect_ops(2)?;
+            let it = ity(0);
+            let kt = ity(1);
+            ensure!(it.rank() == 4 && kt.rank() == 4);
+            ensure!(it.shape[3] == kt.shape[2], "{name}: conv channel mismatch");
+            let ho = (it.shape[1] + 2 * padding.0 as i64 - kt.shape[0]) / stride.0 as i64 + 1;
+            let wo = (it.shape[2] + 2 * padding.1 as i64 - kt.shape[1]) / stride.1 as i64 + 1;
+            ensure!(
+                instr.ty.shape == vec![it.shape[0], ho, wo, kt.shape[3]],
+                "{name}: conv2d result mismatch"
+            );
+        }
+        OpKind::Gather { axis } => {
+            expect_ops(2)?;
+            let ot = ity(0);
+            let it = ity(1);
+            ensure!(it.dtype == DType::I32, "{name}: gather indices dtype");
+            let mut shape: Vec<i64> = ot.shape[..*axis].to_vec();
+            shape.extend_from_slice(&it.shape);
+            shape.extend_from_slice(&ot.shape[axis + 1..]);
+            ensure!(shape == instr.ty.shape, "{name}: gather result mismatch");
+        }
+        OpKind::Scatter { axis, .. } => {
+            expect_ops(3)?;
+            let ot = ity(0);
+            let it = ity(1);
+            let ut = ity(2);
+            ensure!(it.rank() == 1 && it.dtype == DType::I32);
+            ensure!(ut.shape[*axis] == it.shape[0]);
+            ensure!(ot.shape == instr.ty.shape, "{name}: scatter result mismatch");
+        }
+        // collective shape arithmetic is checked against the mesh in
+        // `verify_device_local_with`.
+        OpKind::AllReduce { .. } => {
+            expect_ops(1)?;
+            ensure!(ity(0).shape == instr.ty.shape, "{name}: all_reduce shape change");
+        }
+        OpKind::AllGather { .. }
+        | OpKind::ReduceScatter { .. }
+        | OpKind::AllToAll { .. }
+        | OpKind::ShardSlice { .. } => {
+            expect_ops(1)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+    use super::*;
+
+    fn mlp() -> Func {
+        let mut b = FuncBuilder::new("mlp");
+        let x = b.param("x", TensorType::f32(vec![256, 32]));
+        let w1 = b.param("w1", TensorType::f32(vec![32, 64]));
+        let w2 = b.param("w2", TensorType::f32(vec![64, 16]));
+        let y = b.matmul(x, w1);
+        let z = b.relu(y);
+        let w = b.matmul(z, w2);
+        b.build(vec![w])
+    }
+
+    #[test]
+    fn mlp_verifies() {
+        verify_logical(&mlp()).unwrap();
+    }
+
+    #[test]
+    fn collective_rejected_in_logical() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![8]));
+        let r = b.all_reduce(x, vec![0], ReduceKind::Add);
+        let f = b.build(vec![r]);
+        assert!(verify_logical(&f).is_err());
+        assert!(verify_device_local(&f).is_ok());
+    }
+
+    #[test]
+    fn corrupted_shape_detected() {
+        let mut f = mlp();
+        f.instrs[0].ty.shape = vec![256, 65];
+        assert!(verify_logical(&f).is_err());
+    }
+
+    #[test]
+    fn use_before_def_detected() {
+        let mut f = mlp();
+        // make the first matmul depend on a later value
+        f.instrs[0].operands[0] = ValueId(5);
+        assert!(verify_logical(&f).is_err());
+    }
+}

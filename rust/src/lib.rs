@@ -1,0 +1,46 @@
+//! # TOAST — The Other Auto-Sharding Tool (reproduction)
+//!
+//! A fast, scalable automatic SPMD partitioner for ML models, reproducing
+//! Alabed et al., *"TOAST: Fast and scalable auto-partitioning based on
+//! principled static analysis"* (2025).
+//!
+//! The library is organised bottom-up:
+//!
+//! * [`ir`] — a StableHLO-like straight-line tensor IR (ANF/SSA) with a
+//!   shape-inferring builder, verifier, printer and a host reference
+//!   interpreter used for numeric validation of partitioner rewrites.
+//! * [`nda`] — the paper's core contribution: the *Named Dimension
+//!   Analysis* (§3), its sharding-conflict detection (§3.3), compatible
+//!   conflicts and compatibility sets (§3.5), and cross-layer grouping
+//!   (§3.6, §4.4).
+//! * [`mesh`] — logical device meshes and hardware profiles (A100, P100,
+//!   TPUv3) used by the cost model.
+//! * [`sharding`] — sharding specs, rule-driven propagation, and the SPMD
+//!   rewriter that emits device-local IR with collectives.
+//! * [`cost`] — the analytic roofline cost model with live-range peak
+//!   memory estimation (§4.5).
+//! * [`search`] — the MCTS partitioner with axis-aware, color-based
+//!   actions and the colors-aware canonical state (§4.1–4.3).
+//! * [`baselines`] — Alpa-like, AutoMap-like and expert/manual
+//!   comparators (§5.1.1).
+//! * [`models`] — IR builders for the paper's evaluation models (§5.1):
+//!   T2B/T7B Gemma-like transformers, GNS, U-Net, ITX.
+//! * [`runtime`] — the PJRT (XLA) execution path for AOT artifacts plus a
+//!   simulated multi-device executor used for end-to-end validation.
+//! * [`coordinator`] — the L3 service: partition-request queue, worker
+//!   pool, metrics, and the CLI entry points.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod cost;
+pub mod ir;
+pub mod mesh;
+pub mod models;
+pub mod nda;
+pub mod runtime;
+pub mod search;
+pub mod sharding;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,421 @@
+//! `toast` — CLI for the TOAST auto-partitioner reproduction.
+//!
+//! Subcommands:
+//! * `analyze`   — run the NDA on a model; print colors/conflicts/groups.
+//! * `partition` — partition a model with a chosen method; print report.
+//! * `validate`  — numerically validate a TOAST partition on the
+//!   reference interpreter (scaled model).
+//! * `bench`     — regenerate the paper's figures (fig8|fig9|fig10|ablations).
+//! * `models`    — list the model zoo with parameter counts.
+//! * `serve`     — run the partition service demo over all models.
+//! * `e2e`       — PJRT data-parallel training over AOT artifacts.
+//!
+//! (Hand-rolled argument parsing: the offline environment provides no
+//! clap; see Cargo.toml.)
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use toast::baselines::Method;
+use toast::coordinator::experiments as exp;
+use toast::coordinator::{PartitionRequest, Service};
+use toast::cost::CostModel;
+use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::models::ModelKind;
+use toast::nda::Nda;
+use toast::search::{ActionSpaceConfig, SearchConfig};
+use toast::sharding::validate_spec;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        usage();
+        return ExitCode::FAILURE;
+    };
+    let flags = parse_flags(&args[1..]);
+    let result = match cmd.as_str() {
+        "analyze" => cmd_analyze(&flags),
+        "partition" => cmd_partition(&flags),
+        "validate" => cmd_validate(&flags),
+        "bench" => cmd_bench(&flags),
+        "models" => cmd_models(),
+        "serve" => cmd_serve(&flags),
+        "e2e" => cmd_e2e(&flags),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            usage();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "toast — auto-partitioning via named-dimension analysis + MCTS
+USAGE: toast <command> [--flag value]...
+  analyze    --model <mlp|attention|t2b|t7b|gns|unet|itx> [--paper]
+  partition  --model M --mesh 4x2 --hw <a100|p100|tpuv3>
+             [--method <toast|alpa|automap|manual>] [--budget N] [--paper]
+  validate   --model M --mesh 2x2 [--budget N]
+  bench      --experiment <fig8|fig9|fig10|ablations> [--scale tiny|bench|paper] [--json]
+  models
+  serve      [--workers N]
+  e2e        [--devices N] [--steps N] [--artifacts DIR]"
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn get_model(flags: &HashMap<String, String>) -> anyhow::Result<ModelKind> {
+    flags
+        .get("model")
+        .map(|s| s.parse().map_err(|e: String| anyhow::anyhow!(e)))
+        .unwrap_or(Ok(ModelKind::Mlp))
+}
+
+fn get_mesh(flags: &HashMap<String, String>) -> anyhow::Result<Mesh> {
+    let spec = flags.get("mesh").map(|s| s.as_str()).unwrap_or("4x2");
+    let names = ["data", "model", "seq", "extra"];
+    let sizes: Vec<usize> = spec
+        .split('x')
+        .map(|p| p.parse().map_err(|_| anyhow::anyhow!("bad mesh '{spec}'")))
+        .collect::<anyhow::Result<_>>()?;
+    let axes: Vec<(&str, usize)> =
+        sizes.iter().enumerate().map(|(i, &s)| (names[i.min(3)], s)).collect();
+    Ok(Mesh::grid(&axes))
+}
+
+fn get_hw(flags: &HashMap<String, String>) -> anyhow::Result<HardwareKind> {
+    flags
+        .get("hw")
+        .map(|s| s.parse().map_err(|e: String| anyhow::anyhow!(e)))
+        .unwrap_or(Ok(HardwareKind::A100))
+}
+
+fn build(kind: ModelKind, flags: &HashMap<String, String>) -> toast::ir::Func {
+    if flags.contains_key("paper") {
+        kind.build_paper()
+    } else {
+        kind.build_scaled()
+    }
+}
+
+fn cmd_analyze(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let kind = get_model(flags)?;
+    let func = build(kind, flags);
+    let t0 = std::time::Instant::now();
+    let nda = Nda::analyze(&func);
+    let dt = t0.elapsed();
+    println!(
+        "model {} ({} instrs, {} params)",
+        kind.name(),
+        func.instrs.len(),
+        func.params.len()
+    );
+    println!("NDA: {:?} — {} dimension names, {} colors", dt, nda.n_dims, nda.num_colors());
+    println!("significant colors (>=10 dims): {}", nda.significant_colors(10).len());
+    println!(
+        "conflicts: {} in {} compatibility sets, {} resolution groups (raw resolutions: {})",
+        nda.conflicts.conflicts.len(),
+        nda.conflicts.compat_sets.len(),
+        nda.conflicts.num_groups(),
+        nda.conflicts.raw_resolution_count(),
+    );
+    println!("parameter groups: {}", nda.param_groups.len());
+    let mut top: Vec<usize> = nda.significant_colors(1);
+    top.sort_by_key(|&c| std::cmp::Reverse(nda.colors[c].members.len()));
+    println!("top colors:");
+    for &c in top.iter().take(8) {
+        let info = &nda.colors[c];
+        println!(
+            "  color {:>4}: {:>5} dims, size {:>6}, touches {:.1} MiB",
+            c,
+            info.members.len(),
+            info.dim_size,
+            info.touched_bytes as f64 / (1 << 20) as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_partition(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let kind = get_model(flags)?;
+    let func = build(kind, flags);
+    let mesh = get_mesh(flags)?;
+    let hw = get_hw(flags)?;
+    let method: Method = match flags.get("method").map(|s| s.as_str()).unwrap_or("toast") {
+        "toast" => Method::Toast,
+        "alpa" => Method::Alpa,
+        "automap" => Method::AutoMap,
+        "manual" => Method::Manual,
+        other => anyhow::bail!("unknown method '{other}'"),
+    };
+    let budget: usize = flags.get("budget").and_then(|s| s.parse().ok()).unwrap_or(300);
+    let model = CostModel::new(HardwareProfile::new(hw));
+    println!("partitioning {} on {} / {}", kind.name(), mesh.describe(), hw.name());
+    let r = toast::baselines::run_method(method, kind, &func, &mesh, &model, budget, 17);
+    println!(
+        "{}: step {:.3} ms (base {:.3} ms, {:.2}x), peak {:.2} GiB{}, search {:.2?}",
+        r.method.name(),
+        r.cost.runtime_s * 1e3,
+        r.base.runtime_s * 1e3,
+        r.base.runtime_s / r.cost.runtime_s.max(1e-12),
+        r.cost.peak_bytes as f64 / (1u64 << 30) as f64,
+        if r.oom { " [OOM]" } else { "" },
+        r.search_time,
+    );
+    println!("parameter shardings (non-replicated):");
+    let mut shown = 0;
+    for (pi, p) in func.params.iter().enumerate() {
+        let d = r.spec.describe_value(&func, &mesh, toast::ir::ValueId(pi as u32));
+        if d.contains('{') {
+            println!("  %{:<16} {}", p.name, d);
+            shown += 1;
+            if shown >= 16 {
+                println!("  ... ({} params total)", func.params.len());
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_validate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let kind = get_model(flags)?;
+    let func = kind.build_scaled();
+    let mesh = get_mesh(flags)?;
+    let budget: usize = flags.get("budget").and_then(|s| s.parse().ok()).unwrap_or(100);
+    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let out = toast::search::auto_partition(
+        &func,
+        &mesh,
+        &model,
+        &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        &SearchConfig { budget, ..Default::default() },
+    );
+    println!(
+        "search: relative cost {:.4}, {} actions, {} evals",
+        out.relative,
+        out.actions.len(),
+        out.evals
+    );
+    let v = validate_spec(&func, &out.spec, &mesh, 7)?;
+    println!(
+        "numeric validation: max |Δ| = {:.3e} across outputs ({} collectives)",
+        v.max_abs_diff,
+        v.stats.total_collectives()
+    );
+    anyhow::ensure!(v.max_abs_diff < 1e-2, "validation diff too large");
+    println!("OK — partitioned module is semantics-preserving");
+    Ok(())
+}
+
+fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let experiment: exp::Experiment = flags
+        .get("experiment")
+        .map(|s| s.parse().map_err(|e: String| anyhow::anyhow!(e)))
+        .unwrap_or(Ok(exp::Experiment::Fig8))?;
+    let scale = match flags.get("scale").map(|s| s.as_str()).unwrap_or("bench") {
+        "tiny" => exp::BenchScale::Tiny,
+        "bench" => exp::BenchScale::Bench,
+        "paper" => exp::BenchScale::Paper,
+        other => anyhow::bail!("unknown scale '{other}'"),
+    };
+    let json = flags.contains_key("json");
+    match experiment {
+        exp::Experiment::Fig8 | exp::Experiment::Fig9 => {
+            let models = if scale == exp::BenchScale::Tiny {
+                vec![ModelKind::Mlp, ModelKind::Attention]
+            } else {
+                ModelKind::paper_eval_set().to_vec()
+            };
+            let rows = exp::run_grid(scale, &models, &HardwareKind::all(), &Method::all());
+            if json {
+                println!("{}", exp::grid_json(&rows));
+            } else if experiment == exp::Experiment::Fig8 {
+                print!("{}", exp::format_fig8(&rows));
+            } else {
+                print!("{}", exp::format_fig9(&rows));
+            }
+        }
+        exp::Experiment::Fig10 => {
+            let points = exp::run_seq_scaling(scale);
+            if json {
+                for (seq, mesh, rows) in &points {
+                    println!(
+                        "{{\"seq\":{seq},\"mesh\":\"{mesh}\",\"rows\":{}}}",
+                        exp::grid_json(rows)
+                    );
+                }
+            } else {
+                print!("{}", exp::format_fig10(&points));
+            }
+        }
+        exp::Experiment::Ablations => {
+            run_ablations(scale);
+        }
+    }
+    Ok(())
+}
+
+/// Ablations over TOAST's own design choices (DESIGN.md §7).
+fn run_ablations(scale: exp::BenchScale) {
+    use toast::search::{auto_partition, build_actions};
+    let func = exp::build_model(ModelKind::T2B, scale);
+    let mesh = Mesh::grid(&[("data", 4), ("model", 4)]);
+    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let scfg = SearchConfig { budget: scale.budget(), ..Default::default() };
+
+    println!("== ablations (T2B @ {:?}, 16 devices, A100) ==", scale);
+    let variants: Vec<(&str, ActionSpaceConfig)> = vec![
+        ("full TOAST", ActionSpaceConfig::default()),
+        (
+            "no conflict resolutions",
+            ActionSpaceConfig { enumerate_resolutions: false, ..Default::default() },
+        ),
+        (
+            "no param-group mirroring",
+            ActionSpaceConfig { mirror_param_groups: false, ..Default::default() },
+        ),
+        ("no pruning (min_dims=1)", ActionSpaceConfig { min_color_dims: 1, ..Default::default() }),
+        (
+            "aggressive pruning (min_dims=50)",
+            ActionSpaceConfig { min_color_dims: 50, ..Default::default() },
+        ),
+    ];
+    println!(
+        "{:<32} {:>10} {:>10} {:>10} {:>8}",
+        "variant", "actions", "rel cost", "search_s", "evals"
+    );
+    for (name, acfg) in variants {
+        let nda = Nda::analyze(&func);
+        let n_actions = build_actions(&func, &nda, &mesh, &acfg).len();
+        let out = auto_partition(&func, &mesh, &model, &acfg, &scfg);
+        println!(
+            "{:<32} {:>10} {:>10.4} {:>10.2} {:>8}",
+            name,
+            n_actions,
+            out.relative,
+            out.wall.as_secs_f64(),
+            out.evals
+        );
+    }
+}
+
+fn cmd_models() -> anyhow::Result<()> {
+    println!("{:<12} {:>10} {:>10}  {}", "model", "instrs", "params", "notes");
+    for kind in ModelKind::all() {
+        let f = kind.build_scaled();
+        let paper_note = match kind {
+            ModelKind::T2B => "Gemma1-2B shapes (§5.1)",
+            ModelKind::T7B => "Gemma1-7B shapes (§5.1)",
+            ModelKind::Gns => "2048 nodes / 24 MP steps (§5.1)",
+            ModelKind::UNet => "9 down / 12 up blocks, 32-head attn (§5.1)",
+            ModelKind::Itx => "KV-cache MQA decode (§5.1)",
+            ModelKind::Mlp => "paper Figure 2 example",
+            ModelKind::Attention => "paper Figure 5 example",
+        };
+        println!("{:<12} {:>10} {:>10}  {}", kind.name(), f.instrs.len(), f.params.len(), paper_note);
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let svc = Service::start(workers);
+    println!("partition service up with {workers} workers; submitting demo workload");
+    let mut n = 0;
+    for kind in ModelKind::paper_eval_set() {
+        for method in [Method::Toast, Method::Manual] {
+            svc.submit(PartitionRequest {
+                id: 0,
+                model: kind,
+                paper_scale: false,
+                mesh: vec![("data".into(), 2), ("model".into(), 2)],
+                hardware: HardwareKind::A100,
+                method,
+                budget: 100,
+                seed: 1,
+            });
+            n += 1;
+        }
+    }
+    for _ in 0..n {
+        let resp = svc.responses.recv()?;
+        match resp.result {
+            Ok(r) => println!(
+                "job {}: {} × {} -> step {:.3} ms ({}), search {:.2?}",
+                resp.id,
+                resp.request.model.name(),
+                r.method.name(),
+                r.step_time_s * 1e3,
+                if r.oom { "OOM" } else { "fits" },
+                r.search_time,
+            ),
+            Err(e) => println!("job {} failed: {e:#}", resp.id),
+        }
+    }
+    println!("metrics: {}", svc.metrics.snapshot());
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_e2e(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let devices: usize = flags.get("devices").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let steps: usize = flags.get("steps").and_then(|s| s.parse().ok()).unwrap_or(30);
+    let dir = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".to_string());
+    let rt = toast::runtime::Runtime::load_dir(&dir)?;
+    println!(
+        "loaded artifacts {:?} (model: {} params)",
+        rt.artifact_names(),
+        rt.manifest.param_names.len()
+    );
+    let mut trainer = toast::runtime::simexec::DataParallelTrainer::new(&rt, devices, 42)?;
+    let report = trainer.train(steps, 4)?;
+    println!(
+        "data-parallel training over {} simulated devices: {} steps, mean step {:.1} ms, {:.0} tokens/s",
+        report.n_devices,
+        report.losses.len(),
+        report.mean_step_ms(),
+        report.throughput_tokens_per_s()
+    );
+    println!(
+        "loss curve: {:?}",
+        report.losses.iter().map(|l| (l * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
+    let k = (steps / 4).max(1);
+    let head: f32 = report.losses[..k].iter().sum::<f32>() / k as f32;
+    let tail: f32 =
+        report.losses[report.losses.len() - k..].iter().sum::<f32>() / k as f32;
+    anyhow::ensure!(tail < head, "loss must decrease (head {head:.4} vs tail {tail:.4})");
+    println!("OK — mean loss decreased from {head:.4} to {tail:.4}");
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! Hardware profiles for the platforms in the paper's evaluation (§5.1):
+//! NVIDIA A100 (NVLink), NVIDIA P100 (PCIe-era NVLink), and Google TPUv3
+//! (ICI). Numbers are public peak specs; the cost model only relies on
+//! *relative* magnitudes (§4.5 uses relative runtime), so modest
+//! inaccuracies do not change method rankings.
+
+
+
+/// Supported accelerator platforms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum HardwareKind {
+    A100,
+    P100,
+    TPUv3,
+}
+
+impl HardwareKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            HardwareKind::A100 => "A100",
+            HardwareKind::P100 => "P100",
+            HardwareKind::TPUv3 => "TPUv3",
+        }
+    }
+
+    pub fn all() -> [HardwareKind; 3] {
+        [HardwareKind::A100, HardwareKind::P100, HardwareKind::TPUv3]
+    }
+}
+
+impl std::str::FromStr for HardwareKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "a100" => Ok(HardwareKind::A100),
+            "p100" => Ok(HardwareKind::P100),
+            "tpuv3" | "tpu" => Ok(HardwareKind::TPUv3),
+            other => Err(format!("unknown hardware '{other}' (a100|p100|tpuv3)")),
+        }
+    }
+}
+
+/// Per-device characteristics plus interconnect parameters.
+#[derive(Clone, Debug)]
+pub struct HardwareProfile {
+    pub kind: HardwareKind,
+    /// Peak dense matmul throughput at the model dtype, FLOP/s.
+    pub flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bandwidth: f64,
+    /// Per-device memory capacity, bytes.
+    pub memory_bytes: u64,
+    /// Interconnect (all-reduce ring) bandwidth per link, bytes/s.
+    /// `link_bandwidth[i]` applies to mesh axis `i`; axes beyond the list
+    /// reuse the last entry (e.g. DCN-ish outer axes are slower).
+    pub link_bandwidth: Vec<f64>,
+    /// Per-hop collective latency, seconds.
+    pub link_latency: f64,
+    /// Achievable fraction of peak FLOPs for large matmuls.
+    pub matmul_efficiency: f64,
+}
+
+impl HardwareProfile {
+    /// Public peak numbers; `link_bandwidth[0]` is the fast inner axis
+    /// (NVLink / ICI), later entries model slower outer axes.
+    pub fn new(kind: HardwareKind) -> Self {
+        match kind {
+            // A100 SXM: 312 TFLOP/s bf16, 2.0 TB/s HBM2e, 80 GB,
+            // NVLink3 600 GB/s total (~300 GB/s per direction).
+            HardwareKind::A100 => HardwareProfile {
+                kind,
+                flops: 312e12,
+                hbm_bandwidth: 2.0e12,
+                memory_bytes: 80 * (1 << 30),
+                link_bandwidth: vec![300e9, 100e9, 25e9],
+                link_latency: 2e-6,
+                matmul_efficiency: 0.55,
+            },
+            // P100: 21.2 TFLOP/s fp16, 732 GB/s HBM2, 16 GB, NVLink1
+            // 160 GB/s total (~80 GB/s per direction).
+            HardwareKind::P100 => HardwareProfile {
+                kind,
+                flops: 21.2e12,
+                hbm_bandwidth: 732e9,
+                memory_bytes: 16 * (1 << 30),
+                link_bandwidth: vec![80e9, 32e9, 12e9],
+                link_latency: 5e-6,
+                matmul_efficiency: 0.50,
+            },
+            // TPUv3: 123 TFLOP/s bf16 per chip, 900 GB/s HBM, 32 GB (16
+            // per core x2), ICI ~70 GB/s per link x multiple links.
+            HardwareKind::TPUv3 => HardwareProfile {
+                kind,
+                flops: 123e12,
+                hbm_bandwidth: 900e9,
+                memory_bytes: 32 * (1 << 30),
+                link_bandwidth: vec![140e9, 140e9, 70e9],
+                link_latency: 1e-6,
+                matmul_efficiency: 0.65,
+            },
+        }
+    }
+
+    /// Link bandwidth for mesh axis `axis`.
+    pub fn axis_bandwidth(&self, axis: usize) -> f64 {
+        *self
+            .link_bandwidth
+            .get(axis)
+            .unwrap_or_else(|| self.link_bandwidth.last().expect("non-empty link_bandwidth"))
+    }
+
+    /// Effective matmul FLOP/s after efficiency derating.
+    pub fn effective_flops(&self) -> f64 {
+        self.flops * self.matmul_efficiency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_are_sane() {
+        for kind in HardwareKind::all() {
+            let p = HardwareProfile::new(kind);
+            assert!(p.flops > 1e12);
+            assert!(p.hbm_bandwidth > 1e11);
+            assert!(p.memory_bytes >= 16 * (1 << 30));
+            assert!(!p.link_bandwidth.is_empty());
+            assert!(p.matmul_efficiency > 0.0 && p.matmul_efficiency <= 1.0);
+        }
+    }
+
+    #[test]
+    fn a100_faster_than_p100() {
+        let a = HardwareProfile::new(HardwareKind::A100);
+        let p = HardwareProfile::new(HardwareKind::P100);
+        assert!(a.effective_flops() > p.effective_flops());
+        assert!(a.axis_bandwidth(0) > p.axis_bandwidth(0));
+    }
+
+    #[test]
+    fn axis_bandwidth_clamps_to_last() {
+        let a = HardwareProfile::new(HardwareKind::A100);
+        assert_eq!(a.axis_bandwidth(7), *a.link_bandwidth.last().unwrap());
+    }
+
+    #[test]
+    fn parse_hardware_kind() {
+        assert_eq!("a100".parse::<HardwareKind>().unwrap(), HardwareKind::A100);
+        assert_eq!("TPUv3".parse::<HardwareKind>().unwrap(), HardwareKind::TPUv3);
+        assert!("h100".parse::<HardwareKind>().is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Logical device meshes and hardware profiles (§2.1, §5.1).
+//!
+//! A mesh is an n-dimensional lattice of devices spanned by named axes
+//! (e.g. `2x32x2` over `batch × seq × model`). Devices are numbered
+//! row-major over the axis coordinates. The [`HardwareProfile`] attaches
+//! per-device compute/memory characteristics and per-axis interconnect
+//! bandwidth, which drive the cost model ([`crate::cost`]).
+
+pub mod hardware;
+
+pub use hardware::{HardwareKind, HardwareProfile};
+
+use crate::ir::AxisId;
+
+
+/// A named mesh axis.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MeshAxis {
+    pub name: String,
+    pub size: usize,
+}
+
+/// An n-dimensional logical device mesh.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mesh {
+    pub axes: Vec<MeshAxis>,
+}
+
+impl Mesh {
+    /// Build a mesh from `(name, size)` pairs.
+    pub fn grid(axes: &[(&str, usize)]) -> Self {
+        assert!(!axes.is_empty(), "mesh needs at least one axis");
+        Mesh {
+            axes: axes
+                .iter()
+                .map(|(n, s)| {
+                    assert!(*s >= 1, "axis size must be >= 1");
+                    MeshAxis { name: n.to_string(), size: *s }
+                })
+                .collect(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.axes.len()
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.axes.iter().map(|a| a.size).product()
+    }
+
+    pub fn axis_size(&self, axis: AxisId) -> usize {
+        self.axes[axis].size
+    }
+
+    pub fn axis_name(&self, axis: AxisId) -> &str {
+        &self.axes[axis].name
+    }
+
+    /// Find an axis by name.
+    pub fn axis_by_name(&self, name: &str) -> Option<AxisId> {
+        self.axes.iter().position(|a| a.name == name)
+    }
+
+    /// Row-major strides over axis coordinates.
+    fn strides(&self) -> Vec<usize> {
+        let mut st = vec![1usize; self.rank()];
+        for d in (0..self.rank().saturating_sub(1)).rev() {
+            st[d] = st[d + 1] * self.axes[d + 1].size;
+        }
+        st
+    }
+
+    /// Coordinates of a device id.
+    pub fn coords(&self, device: usize) -> Vec<usize> {
+        let st = self.strides();
+        let mut c = Vec::with_capacity(self.rank());
+        let mut rem = device;
+        for d in 0..self.rank() {
+            c.push(rem / st[d]);
+            rem %= st[d];
+        }
+        c
+    }
+
+    /// Device id of coordinates.
+    pub fn device_at(&self, coords: &[usize]) -> usize {
+        let st = self.strides();
+        coords.iter().zip(&st).map(|(c, s)| c * s).sum()
+    }
+
+    /// Communication groups along one axis: each group contains the
+    /// devices that differ only in their `axis` coordinate, ordered by
+    /// that coordinate.
+    pub fn groups(&self, axis: AxisId) -> Vec<Vec<usize>> {
+        let n = self.num_devices();
+        let sz = self.axis_size(axis);
+        let mut groups: std::collections::BTreeMap<Vec<usize>, Vec<(usize, usize)>> =
+            std::collections::BTreeMap::new();
+        for d in 0..n {
+            let c = self.coords(d);
+            let mut key = c.clone();
+            let coord = key.remove(axis);
+            groups.entry(key).or_default().push((coord, d));
+        }
+        groups
+            .into_values()
+            .map(|mut v| {
+                v.sort_unstable();
+                debug_assert_eq!(v.len(), sz);
+                v.into_iter().map(|(_, d)| d).collect()
+            })
+            .collect()
+    }
+
+    /// Communication groups across several axes jointly (for `all_reduce`
+    /// over multiple axes): devices that differ only in coordinates of
+    /// the given axes.
+    pub fn groups_multi(&self, axes: &[AxisId]) -> Vec<Vec<usize>> {
+        let n = self.num_devices();
+        let mut groups: std::collections::BTreeMap<Vec<usize>, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for d in 0..n {
+            let c = self.coords(d);
+            let key: Vec<usize> = (0..self.rank())
+                .filter(|dd| !axes.contains(dd))
+                .map(|dd| c[dd])
+                .collect();
+            groups.entry(key).or_default().push(d);
+        }
+        groups.into_values().collect()
+    }
+
+    /// Human-readable description, e.g. `b=2 x m=8 (16 devices)`.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> =
+            self.axes.iter().map(|a| format!("{}={}", a.name, a.size)).collect();
+        format!("{} ({} devices)", parts.join(" x "), self.num_devices())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_roundtrip() {
+        let m = Mesh::grid(&[("a", 2), ("b", 3), ("c", 4)]);
+        assert_eq!(m.num_devices(), 24);
+        for d in 0..24 {
+            assert_eq!(m.device_at(&m.coords(d)), d);
+        }
+    }
+
+    #[test]
+    fn groups_cover_all_devices_once() {
+        let m = Mesh::grid(&[("a", 2), ("b", 4)]);
+        let groups = m.groups(1);
+        assert_eq!(groups.len(), 2);
+        let mut seen: Vec<usize> = groups.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+        for g in &groups {
+            assert_eq!(g.len(), 4);
+            // all share the axis-0 coordinate
+            let c0 = m.coords(g[0])[0];
+            assert!(g.iter().all(|&d| m.coords(d)[0] == c0));
+        }
+    }
+
+    #[test]
+    fn groups_multi_joint() {
+        let m = Mesh::grid(&[("a", 2), ("b", 2), ("c", 2)]);
+        let groups = m.groups_multi(&[0, 2]);
+        assert_eq!(groups.len(), 2); // one per b-coordinate
+        for g in &groups {
+            assert_eq!(g.len(), 4);
+        }
+    }
+
+    #[test]
+    fn one_dim_mesh() {
+        let m = Mesh::grid(&[("d", 8)]);
+        assert_eq!(m.groups(0).len(), 1);
+        assert_eq!(m.groups(0)[0].len(), 8);
+    }
+}

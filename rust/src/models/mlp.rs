@@ -1,0 +1,111 @@
+//! The paper's running example (Figure 2a): a stack of linear layers with
+//! ReLU nonlinearities, optionally as a full Adam training step.
+
+use super::training::{adam_training_step, mean_square_loss, AdamConfig};
+use crate::ir::{Func, FuncBuilder, TensorType};
+
+/// MLP configuration.
+#[derive(Clone, Debug)]
+pub struct MlpConfig {
+    pub batch: i64,
+    pub input: i64,
+    pub hidden: i64,
+    pub output: i64,
+    pub layers: usize,
+    /// Build the full Adam training step instead of just the forward pass.
+    pub training: bool,
+}
+
+impl MlpConfig {
+    /// Exactly the paper's Figure 2a (two matmuls, forward only).
+    pub fn figure2() -> Self {
+        MlpConfig { batch: 256, input: 32, hidden: 64, output: 16, layers: 1, training: false }
+    }
+
+    /// A larger forward+training configuration used in benchmarks.
+    pub fn paper() -> Self {
+        MlpConfig {
+            batch: 4096,
+            input: 1024,
+            hidden: 8192,
+            output: 1024,
+            layers: 4,
+            training: true,
+        }
+    }
+
+    pub fn tiny() -> Self {
+        MlpConfig { batch: 16, input: 8, hidden: 12, output: 4, layers: 2, training: true }
+    }
+}
+
+/// Build the MLP per `cfg`.
+pub fn mlp(cfg: &MlpConfig) -> Func {
+    let (fwd, loss, trainable) = forward(cfg);
+    if cfg.training {
+        adam_training_step(&fwd, loss, &trainable, &AdamConfig::default())
+    } else {
+        fwd
+    }
+}
+
+fn forward(cfg: &MlpConfig) -> (Func, crate::ir::ValueId, Vec<usize>) {
+    let mut b = FuncBuilder::new("mlp");
+    let x0 = b.param("x", TensorType::f32(vec![cfg.batch, cfg.input]));
+    let mut trainable = Vec::new();
+    let mut weights = Vec::new();
+    let mut prev = cfg.input;
+    for l in 0..cfg.layers {
+        let w = b.param(format!("w{}_in", l), TensorType::f32(vec![prev, cfg.hidden]));
+        let w2 = b.param(format!("w{}_out", l), TensorType::f32(vec![cfg.hidden, cfg.output]));
+        trainable.push(1 + 2 * l);
+        trainable.push(2 + 2 * l);
+        weights.push((w, w2));
+        prev = cfg.output;
+    }
+    let mut x = x0;
+    for &(w, w2) in &weights {
+        let y = b.matmul(x, w);
+        let z = b.relu(y);
+        x = b.matmul(z, w2);
+    }
+    let loss = mean_square_loss(&mut b, x);
+    let f = b.build(vec![loss, x]);
+    (f, loss, trainable)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify_logical;
+    use crate::nda::Nda;
+
+    #[test]
+    fn figure2_shape() {
+        let cfg = MlpConfig::figure2();
+        let f = mlp(&cfg);
+        verify_logical(&f).unwrap();
+        assert_eq!(f.ty(f.results[1]).shape, vec![256, 16]);
+    }
+
+    #[test]
+    fn training_step_builds_and_analyzes() {
+        let f = mlp(&MlpConfig::tiny());
+        verify_logical(&f).unwrap();
+        let nda = Nda::analyze(&f);
+        assert!(nda.num_colors() > 0);
+        // batch color should span the forward activations
+        assert!(!nda.significant_colors(3).is_empty());
+    }
+
+    #[test]
+    fn layers_grow_linearly() {
+        let mut cfg = MlpConfig::tiny();
+        cfg.training = false;
+        cfg.layers = 1;
+        let f1 = mlp(&cfg).instrs.len();
+        cfg.layers = 3;
+        let f3 = mlp(&cfg).instrs.len();
+        assert!(f3 >= f1 + 4, "3 layers ({f3} instrs) must exceed 1 layer ({f1})");
+    }
+}

@@ -1,0 +1,111 @@
+//! The evaluation model zoo (§5.1): Gemma-like transformers (T2B/T7B), a
+//! graph network simulator (GNS), a U-Net, and an inference-optimized
+//! transformer with a KV cache (ITX) — plus the paper's worked examples
+//! (two-layer MLP, simplified attention).
+//!
+//! Each model is an IR *builder*: analysis and cost estimation never
+//! materialize tensors, so the paper-size configurations (2B/7B/...)
+//! build cheaply as graphs; `scaled()` variants are small enough to
+//! execute on the reference interpreter for numeric validation.
+//!
+//! Training models are full steps — forward, backward (via
+//! [`crate::ir::autodiff`]) and an Adam update — because that is what the
+//! paper partitions, and the optimizer states are what FSDP-style
+//! shardings must cover.
+
+pub mod gns;
+pub mod itx;
+pub mod mlp;
+pub mod training;
+pub mod transformer;
+pub mod unet;
+
+pub use training::adam_training_step;
+
+use crate::ir::Func;
+
+/// A named model in the zoo.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Mlp,
+    Attention,
+    T2B,
+    T7B,
+    Gns,
+    UNet,
+    Itx,
+}
+
+impl ModelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Mlp => "mlp",
+            ModelKind::Attention => "attention",
+            ModelKind::T2B => "T2B",
+            ModelKind::T7B => "T7B",
+            ModelKind::Gns => "GNS",
+            ModelKind::UNet => "U-Net",
+            ModelKind::Itx => "ITX",
+        }
+    }
+
+    pub fn all() -> [ModelKind; 7] {
+        [
+            ModelKind::Mlp,
+            ModelKind::Attention,
+            ModelKind::T2B,
+            ModelKind::T7B,
+            ModelKind::Gns,
+            ModelKind::UNet,
+            ModelKind::Itx,
+        ]
+    }
+
+    /// The paper's evaluation set (§5.1).
+    pub fn paper_eval_set() -> [ModelKind; 5] {
+        [ModelKind::T2B, ModelKind::T7B, ModelKind::Gns, ModelKind::UNet, ModelKind::Itx]
+    }
+
+    /// Build the model at paper-scale configuration (IR only — cheap).
+    pub fn build_paper(self) -> Func {
+        match self {
+            ModelKind::Mlp => mlp::mlp(&mlp::MlpConfig::paper()),
+            ModelKind::Attention => transformer::simple_attention(4096, 2048, 2048, 2048),
+            ModelKind::T2B => transformer::training_step(&transformer::TransformerConfig::t2b()),
+            ModelKind::T7B => transformer::training_step(&transformer::TransformerConfig::t7b()),
+            ModelKind::Gns => gns::training_step(&gns::GnsConfig::paper()),
+            ModelKind::UNet => unet::training_step(&unet::UNetConfig::paper()),
+            ModelKind::Itx => itx::inference_step(&itx::ItxConfig::paper()),
+        }
+    }
+
+    /// Build a scaled-down variant small enough to execute numerically.
+    pub fn build_scaled(self) -> Func {
+        match self {
+            ModelKind::Mlp => mlp::mlp(&mlp::MlpConfig::tiny()),
+            ModelKind::Attention => transformer::simple_attention(32, 16, 16, 16),
+            ModelKind::T2B | ModelKind::T7B => {
+                transformer::training_step(&transformer::TransformerConfig::tiny())
+            }
+            ModelKind::Gns => gns::training_step(&gns::GnsConfig::tiny()),
+            ModelKind::UNet => unet::training_step(&unet::UNetConfig::tiny()),
+            ModelKind::Itx => itx::inference_step(&itx::ItxConfig::tiny()),
+        }
+    }
+}
+
+impl std::str::FromStr for ModelKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "mlp" => Ok(ModelKind::Mlp),
+            "attention" | "attn" => Ok(ModelKind::Attention),
+            "t2b" => Ok(ModelKind::T2B),
+            "t7b" => Ok(ModelKind::T7B),
+            "gns" => Ok(ModelKind::Gns),
+            "unet" | "u-net" => Ok(ModelKind::UNet),
+            "itx" => Ok(ModelKind::Itx),
+            other => Err(format!("unknown model '{other}'")),
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! U-Net (§5.1): residual convolutional down-sampling blocks, a multi-head
+//! attention layer at the bottleneck, and up-sampling blocks with skip
+//! connections — as an Adam training step.
+//!
+//! Down-sampling uses stride-1 convolutions + 2×2 average pooling
+//! (reshape + reduce), up-sampling uses nearest-neighbour broadcast +
+//! reshape; both are exactly differentiable with the in-tree autodiff and
+//! keep the batch/channel dimensions first-class for the NDA (spatial
+//! partitioning / halo exchange is out of scope, as in the paper's
+//! baselines).
+
+use super::training::{adam_training_step, mean_square_loss, AdamConfig};
+use crate::ir::{Func, FuncBuilder, TensorType, ValueId};
+
+/// U-Net configuration.
+#[derive(Clone, Debug)]
+pub struct UNetConfig {
+    pub batch: i64,
+    pub size: i64,
+    pub in_channels: i64,
+    pub base_channels: i64,
+    /// Channel multiplier per resolution level.
+    pub channel_mults: Vec<i64>,
+    /// Residual blocks per level on the down path (paper: 9 total).
+    pub down_blocks_per_level: usize,
+    /// Residual blocks per level on the up path (paper: 12 total).
+    pub up_blocks_per_level: usize,
+    pub attn_heads: i64,
+    pub training: bool,
+}
+
+impl UNetConfig {
+    /// Paper-shaped: 9 down blocks, 12 up blocks, 32-head bottleneck
+    /// attention, ~3.6B parameters.
+    pub fn paper() -> Self {
+        UNetConfig {
+            batch: 8,
+            size: 64,
+            in_channels: 4,
+            base_channels: 1024,
+            channel_mults: vec![1, 2, 4],
+            down_blocks_per_level: 3,  // 3 levels x 3 = 9
+            up_blocks_per_level: 4,    // 3 levels x 4 = 12
+            attn_heads: 32,
+            training: true,
+        }
+    }
+
+    pub fn tiny() -> Self {
+        UNetConfig {
+            batch: 2,
+            size: 8,
+            in_channels: 3,
+            base_channels: 4,
+            channel_mults: vec![1, 2],
+            down_blocks_per_level: 1,
+            up_blocks_per_level: 1,
+            attn_heads: 2,
+            training: true,
+        }
+    }
+}
+
+/// 2x2 average pool via reshape + reduce.
+fn avg_pool(b: &mut FuncBuilder, x: ValueId) -> ValueId {
+    let s = b.shape(x); // [N,H,W,C]
+    let r = b.reshape(x, &[s[0], s[1] / 2, 2, s[2] / 2, 2, s[3]]);
+    let sum = b.reduce_sum(r, &[2, 4]);
+    let c = b.constant(0.25, TensorType::f32(vec![s[0], s[1] / 2, s[2] / 2, s[3]]));
+    b.mul(sum, c)
+}
+
+/// 2x nearest-neighbour upsample via broadcast + reshape.
+fn upsample(b: &mut FuncBuilder, x: ValueId) -> ValueId {
+    let s = b.shape(x); // [N,H,W,C]
+    let bc = b.broadcast(x, &[s[0], s[1], 2, s[2], 2, s[3]], &[0, 1, 3, 5]);
+    b.reshape(bc, &[s[0], s[1] * 2, s[2] * 2, s[3]])
+}
+
+/// Forward pass; returns `(func, loss, trainable param indices)`.
+pub fn forward(cfg: &UNetConfig) -> (Func, ValueId, Vec<usize>) {
+    let mut b = FuncBuilder::new("unet");
+    let x0 = b.param(
+        "x",
+        TensorType::f32(vec![cfg.batch, cfg.size, cfg.size, cfg.in_channels]),
+    );
+    // Declare all weights up front by doing a dry pass over the structure:
+    // simpler approach — build params lazily is impossible (params must
+    // precede instructions), so we pre-declare via a recorded plan.
+    // Instead: build a parameter-declaration closure per block by walking
+    // the same structure twice.
+    // For code simplicity we run the builder in one pass but declare
+    // every parameter before the first instruction:
+    let mut decl = Vec::new(); // (name, shape)
+    {
+        let mut c_in = cfg.in_channels;
+        for (li, &mult) in cfg.channel_mults.iter().enumerate() {
+            let c_out = cfg.base_channels * mult;
+            for bi in 0..cfg.down_blocks_per_level {
+                decl.push((format!("d{li}_{bi}_k1"), vec![3, 3, c_in, c_out]));
+                decl.push((format!("d{li}_{bi}_k2"), vec![3, 3, c_out, c_out]));
+                if c_in != c_out {
+                    decl.push((format!("d{li}_{bi}_ks"), vec![1, 1, c_in, c_out]));
+                }
+                c_in = c_out;
+            }
+        }
+        let c_mid = cfg.base_channels * cfg.channel_mults.last().unwrap();
+        let key = c_mid / cfg.attn_heads;
+        decl.push(("attn_wq".into(), vec![c_mid, cfg.attn_heads, key]));
+        decl.push(("attn_wk".into(), vec![c_mid, cfg.attn_heads, key]));
+        decl.push(("attn_wv".into(), vec![c_mid, cfg.attn_heads, key]));
+        decl.push(("attn_wo".into(), vec![cfg.attn_heads, key, c_mid]));
+        let mut c_in = c_mid;
+        for (li, &mult) in cfg.channel_mults.iter().enumerate().rev() {
+            let c_out = cfg.base_channels * mult;
+            // after skip-concat the input channels double
+            let c_cat = c_in + c_out;
+            let mut first = c_cat;
+            for bi in 0..cfg.up_blocks_per_level {
+                decl.push((format!("u{li}_{bi}_k1"), vec![3, 3, first, c_out]));
+                decl.push((format!("u{li}_{bi}_k2"), vec![3, 3, c_out, c_out]));
+                if first != c_out {
+                    decl.push((format!("u{li}_{bi}_ks"), vec![1, 1, first, c_out]));
+                }
+                first = c_out;
+            }
+            c_in = c_out;
+        }
+        decl.push(("out_k".into(), vec![1, 1, cfg.base_channels, cfg.in_channels]));
+    }
+    let mut name_to_param = std::collections::HashMap::new();
+    let mut trainable = Vec::new();
+    for (name, shape) in &decl {
+        let v = b.param(name.clone(), TensorType::f32(shape.clone()));
+        trainable.push(v.0 as usize);
+        name_to_param.insert(name.clone(), v);
+    }
+
+    // helper closures over the declared params
+    let get = |name: &str| -> ValueId { name_to_param[name] };
+    let conv_block = |b: &mut FuncBuilder, prefix: &str, x: ValueId, c_out: i64| -> ValueId {
+        let s = b.shape(x);
+        let c_in = s[3];
+        let h1 = b.conv2d(x, get(&format!("{prefix}_k1")), (1, 1), (1, 1));
+        let a1 = b.relu(h1);
+        let h2 = b.conv2d(a1, get(&format!("{prefix}_k2")), (1, 1), (1, 1));
+        let short = if c_in == c_out {
+            x
+        } else {
+            b.conv2d(x, get(&format!("{prefix}_ks")), (1, 1), (0, 0))
+        };
+        b.add(short, h2)
+    };
+
+    // ---- down path
+    let mut x = x0;
+    let mut skips = Vec::new();
+    for (li, &mult) in cfg.channel_mults.iter().enumerate() {
+        let c_out = cfg.base_channels * mult;
+        for bi in 0..cfg.down_blocks_per_level {
+            x = conv_block(&mut b, &format!("d{li}_{bi}"), x, c_out);
+        }
+        skips.push(x);
+        if li + 1 < cfg.channel_mults.len() {
+            x = avg_pool(&mut b, x);
+        }
+    }
+
+    // ---- bottleneck attention
+    {
+        let s = b.shape(x);
+        let (n, hh, ww, c) = (s[0], s[1], s[2], s[3]);
+        let key = c / cfg.attn_heads;
+        let seq = hh * ww;
+        let t = b.reshape(x, &[n, seq, c]);
+        let q = b.dot_general(t, get("attn_wq"), &[], &[], &[2], &[0]);
+        let k = b.dot_general(t, get("attn_wk"), &[], &[], &[2], &[0]);
+        let v = b.dot_general(t, get("attn_wv"), &[], &[], &[2], &[0]);
+        let scores = b.dot_general(q, k, &[0, 2], &[0, 2], &[3], &[3]);
+        let shape = b.shape(scores);
+        let sc = b.constant(1.0 / (key as f64).sqrt(), TensorType::f32(shape));
+        let scaled = b.mul(scores, sc);
+        let probs = b.softmax_last(scaled);
+        let ctx = b.dot_general(probs, v, &[0, 1], &[0, 2], &[3], &[1]);
+        let out = b.dot_general(ctx, get("attn_wo"), &[], &[], &[1, 3], &[0, 1]);
+        let back = b.reshape(out, &[n, hh, ww, c]);
+        x = b.add(x, back);
+    }
+
+    // ---- up path with skip connections
+    for (li, &mult) in cfg.channel_mults.iter().enumerate().rev() {
+        let c_out = cfg.base_channels * mult;
+        if li + 1 < cfg.channel_mults.len() {
+            x = upsample(&mut b, x);
+        }
+        let skip = skips[li];
+        x = b.concat(&[x, skip], 3);
+        for bi in 0..cfg.up_blocks_per_level {
+            x = conv_block(&mut b, &format!("u{li}_{bi}"), x, c_out);
+        }
+    }
+    let out = b.conv2d(x, get("out_k"), (1, 1), (0, 0));
+    let loss = mean_square_loss(&mut b, out);
+    let f = b.build(vec![loss, out]);
+    (f, loss, trainable)
+}
+
+/// Full training step (or forward-only per config).
+pub fn training_step(cfg: &UNetConfig) -> Func {
+    let (fwd, loss, trainable) = forward(cfg);
+    if cfg.training {
+        adam_training_step(&fwd, loss, &trainable, &AdamConfig::default())
+    } else {
+        fwd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::interp::{eval_func, Tensor};
+    use crate::ir::verifier::verify_logical;
+
+    #[test]
+    fn tiny_unet_builds_and_runs() {
+        let cfg = UNetConfig::tiny();
+        let f = training_step(&cfg);
+        verify_logical(&f).unwrap();
+        let inputs: Vec<Tensor> = f
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let shape: Vec<usize> = p.ty.shape.iter().map(|&d| d as usize).collect();
+                let t = Tensor::randn(shape.clone(), 200 + i as u64);
+                Tensor::new(shape, t.data.iter().map(|v| v * 0.1).collect())
+            })
+            .collect();
+        let outs = eval_func(&f, &inputs).unwrap();
+        assert!(outs[0].data[0].is_finite());
+    }
+
+    #[test]
+    fn paper_unet_is_multi_billion_params() {
+        let cfg = UNetConfig::paper();
+        let (f, _, trainable) = forward(&cfg);
+        let params: i64 = trainable
+            .iter()
+            .map(|&pi| f.params[pi].ty.elems() as i64)
+            .sum();
+        assert!(
+            (2.0e9..6.0e9).contains(&(params as f64)),
+            "U-Net params {params}"
+        );
+    }
+
+    #[test]
+    fn pool_upsample_shapes() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![1, 8, 8, 3]));
+        let p = avg_pool(&mut b, x);
+        assert_eq!(b.shape(p), vec![1, 4, 4, 3]);
+        let u = upsample(&mut b, p);
+        assert_eq!(b.shape(u), vec![1, 8, 8, 3]);
+    }
+
+    #[test]
+    fn pool_then_upsample_preserves_constant() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![1, 4, 4, 1]));
+        let p = avg_pool(&mut b, x);
+        let u = upsample(&mut b, p);
+        let f = b.build(vec![u]);
+        let t = Tensor::splat(vec![1, 4, 4, 1], 3.5);
+        let out = &eval_func(&f, &[t]).unwrap()[0];
+        assert!(out.data.iter().all(|&v| (v - 3.5).abs() < 1e-6));
+    }
+}

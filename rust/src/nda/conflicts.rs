@@ -1,0 +1,485 @@
+//! Sharding conflicts (§3.3), compatible conflicts (§3.5), compatibility
+//! sets, and cross-layer resolution groups (§3.6).
+//!
+//! Working with dimension names identified by `I` only, a *conflict* is a
+//! pair of distinct `I`-classes that annotate two dimensions of the same
+//! variable occurrence (definition or use) while belonging to the same
+//! *color* (i.e. `I ∪ M` would identify them). Each conflict can be
+//! resolved two ways — shard one endpoint or the other.
+//!
+//! Conflicts at a definition and at a use of the same variable form a
+//! "box" via the `M` edges (Figure 6); if no other dimension-graph path
+//! crosses the box, the conflicts are *compatible* and are resolved the
+//! same way. Compatibility sets are the transitive closure; isomorphic
+//! compatibility sets (repeated layers) are merged into *resolution
+//! groups*, so a transformer needs only a handful of resolution bits
+//! regardless of depth.
+
+use super::unionfind::ParityUnionFind;
+use super::DimId;
+use crate::ir::{Func, OpKind, ValueId};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+
+/// Where a conflict is observed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Occurrence {
+    /// At the definition of a value (parameter or instruction result).
+    Def(ValueId),
+    /// At operand `operand` of instruction `instr`.
+    Use { instr: usize, operand: usize },
+}
+
+/// A sharding conflict: two `I`-classes that co-annotate tensor
+/// occurrences and share a color.
+#[derive(Clone, Debug)]
+pub struct Conflict {
+    /// Smaller `I`-class representative.
+    pub class_a: u32,
+    /// Larger `I`-class representative.
+    pub class_b: u32,
+    /// `(occurrence, dim with class_a, dim with class_b)` sightings.
+    pub occurrences: Vec<(Occurrence, usize, usize)>,
+}
+
+/// Result of conflict analysis for one function.
+#[derive(Clone, Debug, Default)]
+pub struct ConflictAnalysis {
+    /// All conflicts, deduplicated by class pair (Figure 5d's red edges).
+    pub conflicts: Vec<Conflict>,
+    /// Compatibility sets: conflict indices per set (§3.5).
+    pub compat_sets: Vec<Vec<usize>>,
+    /// For each conflict: its compatibility set.
+    pub conflict_set: Vec<usize>,
+    /// For each conflict: parity relative to its set's canonical
+    /// resolution (0 = aligned: "resolve class_a" means the same choice).
+    pub conflict_parity: Vec<u8>,
+    /// Resolution groups (§3.6): compatibility-set indices grouped by
+    /// structural isomorphism. Bit `g` of an action's resolution order
+    /// picks the resolution for group `g`.
+    pub resolution_groups: Vec<Vec<usize>>,
+    /// For each compatibility set: its resolution group.
+    pub set_group: Vec<usize>,
+    /// Lookup: conflict index by (class_a, class_b).
+    by_pair: HashMap<(u32, u32), usize>,
+}
+
+impl ConflictAnalysis {
+    /// Number of independent resolution bits.
+    pub fn num_groups(&self) -> usize {
+        self.resolution_groups.len()
+    }
+
+    /// Total number of raw resolutions before the heuristics
+    /// (2^#conflicts — the paper's "32 resolutions" for attention).
+    pub fn raw_resolution_count(&self) -> u64 {
+        1u64 << self.conflicts.len().min(63)
+    }
+
+    pub(crate) fn compute(
+        func: &Func,
+        def_dims: &[Vec<DimId>],
+        use_dims: &[Vec<Vec<DimId>>],
+        m_edges: &[(DimId, DimId)],
+        rules_root: &[u32],
+        color: &[usize],
+    ) -> ConflictAnalysis {
+        let mut analysis = ConflictAnalysis::default();
+
+        // ---- 1. collect conflicts over all occurrences -----------------
+        let record =
+            |analysis: &mut ConflictAnalysis, occ: Occurrence, names: &[DimId]| {
+                for i in 0..names.len() {
+                    for j in i + 1..names.len() {
+                        if color[names[i] as usize] != color[names[j] as usize] {
+                            continue;
+                        }
+                        let ca = rules_root[names[i] as usize];
+                        let cb = rules_root[names[j] as usize];
+                        if ca == cb {
+                            // Identified even under I alone: no choice to
+                            // expose (both endpoints are the same name).
+                            continue;
+                        }
+                        let (class_a, class_b, da, db) =
+                            if ca < cb { (ca, cb, i, j) } else { (cb, ca, j, i) };
+                        let idx = *analysis
+                            .by_pair
+                            .entry((class_a, class_b))
+                            .or_insert_with(|| {
+                                analysis.conflicts.push(Conflict {
+                                    class_a,
+                                    class_b,
+                                    occurrences: Vec::new(),
+                                });
+                                analysis.conflicts.len() - 1
+                            });
+                        analysis.conflicts[idx].occurrences.push((occ, da, db));
+                    }
+                }
+            };
+
+        for (v, names) in def_dims.iter().enumerate() {
+            record(&mut analysis, Occurrence::Def(ValueId(v as u32)), names);
+        }
+        for (ii, opnds) in use_dims.iter().enumerate() {
+            for (oi, names) in opnds.iter().enumerate() {
+                record(&mut analysis, Occurrence::Use { instr: ii, operand: oi }, names);
+            }
+        }
+
+        let n_conf = analysis.conflicts.len();
+        if n_conf == 0 {
+            return analysis;
+        }
+
+        // ---- 2. class-level dimension graph ---------------------------
+        // Undirected multigraph over I-classes from M edges.
+        let mut edge_mult: HashMap<(u32, u32), usize> = HashMap::new();
+        let mut adj: HashMap<u32, Vec<u32>> = HashMap::new();
+        for &(a, b) in m_edges {
+            let (ca, cb) = (rules_root[a as usize], rules_root[b as usize]);
+            if ca == cb {
+                continue;
+            }
+            let key = if ca < cb { (ca, cb) } else { (cb, ca) };
+            *edge_mult.entry(key).or_insert(0) += 1;
+            adj.entry(ca).or_default().push(cb);
+            adj.entry(cb).or_default().push(ca);
+        }
+
+        // "Paths going across the box" (Figure 6, middle/right) are
+        // *local*: a direct diagonal edge between box corners, or a
+        // two-hop diagonal through one intermediate node. (Full-component
+        // reachability would disqualify every conflict in a model whose
+        // colors form cycles — e.g. attention, where the S component is
+        // connected end to end — contradicting §3.5's single attention
+        // compatibility set.)
+        let reaches = |from: u32, to: u32, removed: &HashMap<(u32, u32), usize>| -> bool {
+            if from == to {
+                return true;
+            }
+            let live = |n: u32, m: u32| -> bool {
+                let key = if n < m { (n, m) } else { (m, n) };
+                let mult = edge_mult.get(&key).copied().unwrap_or(0);
+                let rem = removed.get(&key).copied().unwrap_or(0);
+                mult > rem
+            };
+            // direct diagonal edge
+            if live(from, to) {
+                return true;
+            }
+            // two-hop diagonal through one intermediate class
+            if let Some(neigh) = adj.get(&from) {
+                let mut seen: HashSet<u32> = HashSet::new();
+                for &mid in neigh {
+                    if mid != from && mid != to && seen.insert(mid) && live(from, mid) && live(mid, to)
+                    {
+                        return true;
+                    }
+                }
+            }
+            false
+        };
+
+        // ---- 3. compatibility ("box") detection ------------------------
+        // For each use of a value whose def has a conflict at the same dim
+        // positions, form a box and check for crossing paths.
+        let mut puf = ParityUnionFind::new(n_conf as u32 as usize);
+        let conflict_at = |analysis: &ConflictAnalysis, na: DimId, nb: DimId| -> Option<(usize, u8)> {
+            let (ca, cb) = (rules_root[na as usize], rules_root[nb as usize]);
+            if ca == cb {
+                return None;
+            }
+            let key = if ca < cb { (ca, cb) } else { (cb, ca) };
+            // parity 0 if na carries class_a
+            analysis.by_pair.get(&key).map(|&i| (i, if ca < cb { 0 } else { 1 }))
+        };
+
+        for (ii, instr) in func.instrs.iter().enumerate() {
+            for (oi, &opnd) in instr.operands.iter().enumerate() {
+                let defs = &def_dims[opnd.index()];
+                let uses = &use_dims[ii][oi];
+                for i in 0..defs.len() {
+                    for j in i + 1..defs.len() {
+                        let (Some((c1, p1)), Some((c2, p2))) = (
+                            conflict_at(&analysis, defs[i], defs[j]),
+                            conflict_at(&analysis, uses[i], uses[j]),
+                        ) else {
+                            continue;
+                        };
+                        if c1 == c2 {
+                            continue;
+                        }
+                        // Box edges: class(def i)~class(use i), class(def j)~class(use j)
+                        let (ni, li) =
+                            (rules_root[defs[i] as usize], rules_root[uses[i] as usize]);
+                        let (nj, lj) =
+                            (rules_root[defs[j] as usize], rules_root[uses[j] as usize]);
+                        let mut removed: HashMap<(u32, u32), usize> = HashMap::new();
+                        if ni != li {
+                            *removed
+                                .entry(if ni < li { (ni, li) } else { (li, ni) })
+                                .or_insert(0) += 1;
+                        }
+                        if nj != lj {
+                            *removed
+                                .entry(if nj < lj { (nj, lj) } else { (lj, nj) })
+                                .or_insert(0) += 1;
+                        }
+                        // Crossing path: any diagonal connectivity left.
+                        let crossing =
+                            reaches(ni, lj, &removed) || reaches(nj, li, &removed);
+                        if crossing {
+                            continue;
+                        }
+                        // Compatible: def dim i pairs with use dim i.
+                        // Relative parity between the conflicts' canonical
+                        // (class_a-first) orientations:
+                        let rel = p1 ^ p2;
+                        puf.union(c1 as u32, c2 as u32, rel);
+                    }
+                }
+            }
+        }
+
+        // ---- 4. compatibility sets --------------------------------------
+        let mut set_of_root: HashMap<u32, usize> = HashMap::new();
+        let mut conflict_set = vec![0usize; n_conf];
+        let mut conflict_parity = vec![0u8; n_conf];
+        let mut compat_sets: Vec<Vec<usize>> = Vec::new();
+        for ci in 0..n_conf {
+            let (root, parity) = puf.find(ci as u32);
+            let si = *set_of_root.entry(root).or_insert_with(|| {
+                compat_sets.push(Vec::new());
+                compat_sets.len() - 1
+            });
+            compat_sets[si].push(ci);
+            conflict_set[ci] = si;
+            conflict_parity[ci] = parity;
+        }
+
+        // ---- 5. cross-layer grouping by structural isomorphism (§3.6) --
+        let op_sig = |occ: &Occurrence| -> u64 {
+            let mut h = DefaultHasher::new();
+            match occ {
+                Occurrence::Def(v) => match func.def(*v) {
+                    Some(instr) => {
+                        0u8.hash(&mut h);
+                        sig_of_kind(&instr.kind).hash(&mut h);
+                    }
+                    None => 1u8.hash(&mut h), // parameter
+                },
+                Occurrence::Use { instr, operand } => {
+                    2u8.hash(&mut h);
+                    sig_of_kind(&func.instrs[*instr].kind).hash(&mut h);
+                    operand.hash(&mut h);
+                }
+            }
+            h.finish()
+        };
+        let mut group_of_sig: HashMap<u64, usize> = HashMap::new();
+        let mut resolution_groups: Vec<Vec<usize>> = Vec::new();
+        let mut set_group = vec![0usize; compat_sets.len()];
+        for (si, confs) in compat_sets.iter().enumerate() {
+            // Signature: sorted multiset of per-conflict signatures.
+            let mut items: Vec<u64> = confs
+                .iter()
+                .map(|&ci| {
+                    let c = &analysis.conflicts[ci];
+                    let mut occ_sigs: Vec<u64> =
+                        c.occurrences.iter().map(|(o, da, db)| {
+                            let mut h = DefaultHasher::new();
+                            op_sig(o).hash(&mut h);
+                            da.hash(&mut h);
+                            db.hash(&mut h);
+                            h.finish()
+                        }).collect();
+                    occ_sigs.sort_unstable();
+                    let mut h = DefaultHasher::new();
+                    occ_sigs.hash(&mut h);
+                    h.finish()
+                })
+                .collect();
+            items.sort_unstable();
+            let mut h = DefaultHasher::new();
+            items.hash(&mut h);
+            let sig = h.finish();
+            let next = resolution_groups.len();
+            let gi = *group_of_sig.entry(sig).or_insert_with(|| {
+                resolution_groups.push(Vec::new());
+                next
+            });
+            resolution_groups[gi].push(si);
+            set_group[si] = gi;
+        }
+
+        analysis.compat_sets = compat_sets;
+        analysis.conflict_set = conflict_set;
+        analysis.conflict_parity = conflict_parity;
+        analysis.resolution_groups = resolution_groups;
+        analysis.set_group = set_group;
+        analysis
+    }
+
+    /// Resolve which of `dims` (≥2 same-colored dims at the definition of
+    /// `v`) gets sharded, under resolution order `order_bits` (bit `g` =
+    /// choice for resolution group `g`).
+    pub fn resolve_def(
+        &self,
+        v: ValueId,
+        dims: &[usize],
+        def_dims: &[Vec<DimId>],
+        rules_root: &[u32],
+        order_bits: u64,
+    ) -> usize {
+        let names = &def_dims[v.index()];
+        let (d0, d1) = (dims[0], dims[1]);
+        let ca = rules_root[names[d0] as usize];
+        let cb = rules_root[names[d1] as usize];
+        if ca == cb {
+            return d0;
+        }
+        let key = if ca < cb { (ca, cb) } else { (cb, ca) };
+        let Some(&ci) = self.by_pair.get(&key) else {
+            return d0;
+        };
+        let gi = self.set_group[self.conflict_set[ci]];
+        let bit = ((order_bits >> (gi as u64 & 63)) & 1) as u8;
+        let effective = bit ^ self.conflict_parity[ci];
+        // effective == 0 -> shard the class_a endpoint.
+        let target_class = if effective == 0 { key.0 } else { key.1 };
+        if rules_root[names[d0] as usize] == target_class {
+            d0
+        } else {
+            d1
+        }
+    }
+
+    /// Conflict index for a class pair, if any.
+    pub fn conflict_for_pair(&self, a: u32, b: u32) -> Option<usize> {
+        let key = if a < b { (a, b) } else { (b, a) };
+        self.by_pair.get(&key).copied()
+    }
+}
+
+/// Structural signature of an op kind (ignores value ids; keeps attrs that
+/// distinguish op behaviour so isomorphism matches across repeated layers).
+fn sig_of_kind(kind: &OpKind) -> u64 {
+    let mut h = DefaultHasher::new();
+    kind.mnemonic().hash(&mut h);
+    match kind {
+        OpKind::Transpose { perm } => perm.hash(&mut h),
+        OpKind::Reduce { dims, .. } => dims.hash(&mut h),
+        OpKind::Broadcast { dims } => dims.hash(&mut h),
+        OpKind::Concat { dim } => dim.hash(&mut h),
+        OpKind::DotGeneral { lhs_batch, rhs_batch, lhs_contract, rhs_contract } => {
+            lhs_batch.hash(&mut h);
+            rhs_batch.hash(&mut h);
+            lhs_contract.hash(&mut h);
+            rhs_contract.hash(&mut h);
+        }
+        OpKind::Gather { axis } | OpKind::Scatter { axis, .. } => axis.hash(&mut h),
+        _ => {}
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+pub mod tests {
+    use crate::ir::{FuncBuilder, TensorType, ValueId};
+    use crate::nda::Nda;
+
+    /// The paper's Figure 5a simplified attention (softmax mocked as
+    /// averaging), exactly as listed.
+    pub fn attn(seq: i64, d: i64, h1: i64, h2: i64) -> crate::ir::Func {
+        let mut b = FuncBuilder::new("attn");
+        let x = b.param("x", TensorType::f32(vec![seq, d]));
+        let wq = b.param("wq", TensorType::f32(vec![d, h1]));
+        let wk = b.param("wk", TensorType::f32(vec![d, h1]));
+        let wv = b.param("wv", TensorType::f32(vec![d, h2]));
+        let k = b.matmul(x, wk);
+        let v = b.matmul(x, wv);
+        let q = b.matmul(x, wq);
+        let qt = b.transpose(q, &[1, 0]);
+        let a = b.matmul(k, qt);
+        let bb = b.reduce_sum(a, &[1]);
+        let c = b.broadcast(bb, &[seq, seq], &[0]);
+        let dd = b.div(a, c);
+        let z = b.matmul(dd, v);
+        b.build(vec![z])
+    }
+
+    #[test]
+    fn attention_conflicts_found() {
+        let f = attn(128, 32, 16, 16);
+        let nda = Nda::analyze(&f);
+        // a : [S, S] has a conflict (both dims same color).
+        let a = ValueId(8); // 4 params + k,v,q,qt then a
+        assert_eq!(f.value_name(a), "%v4");
+        assert_eq!(nda.color_of(a, 0), nda.color_of(a, 1));
+        // Figure 5d: five conflicts in the S component.
+        assert_eq!(nda.conflicts.conflicts.len(), 5);
+        // One compatibility set containing all five (§3.5).
+        assert_eq!(nda.conflicts.compat_sets.len(), 1);
+        assert_eq!(nda.conflicts.compat_sets[0].len(), 5);
+        // One resolution group.
+        assert_eq!(nda.conflicts.num_groups(), 1);
+        // 32 raw resolutions collapse to 2.
+        assert_eq!(nda.conflicts.raw_resolution_count(), 32);
+    }
+
+    #[test]
+    fn attention_resolutions_differ() {
+        let f = attn(128, 32, 16, 16);
+        let nda = Nda::analyze(&f);
+        let a = ValueId(8);
+        let s_color = nda.color_of(a, 0);
+        let assign0 = nda.sharding_assignment(s_color, 0);
+        let assign1 = nda.sharding_assignment(s_color, 1);
+        assert_ne!(assign0, assign1, "the two resolutions must differ");
+        // Both must shard exactly one dim of `a`.
+        let a0: Vec<_> = assign0.iter().filter(|(v, _)| *v == a).collect();
+        let a1: Vec<_> = assign1.iter().filter(|(v, _)| *v == a).collect();
+        assert_eq!(a0.len(), 1);
+        assert_eq!(a1.len(), 1);
+        assert_ne!(a0[0].1, a1[0].1);
+    }
+
+    #[test]
+    fn repeated_layers_group_isomorphically() {
+        // Two stacked attention blocks: compatibility sets should be
+        // isomorphic and share one resolution group (§3.6).
+        let seq = 64;
+        let d = 32;
+        let mut b = FuncBuilder::new("attn2");
+        let x0 = b.param("x", TensorType::f32(vec![seq, d]));
+        let mut params = Vec::new();
+        for l in 0..2 {
+            params.push((
+                b.param(format!("wq{l}"), TensorType::f32(vec![d, d])),
+                b.param(format!("wk{l}"), TensorType::f32(vec![d, d])),
+                b.param(format!("wv{l}"), TensorType::f32(vec![d, d])),
+            ));
+        }
+        let mut x = x0;
+        for l in 0..2 {
+            let (wq, wk, wv) = params[l];
+            let k = b.matmul(x, wk);
+            let v = b.matmul(x, wv);
+            let q = b.matmul(x, wq);
+            let qt = b.transpose(q, &[1, 0]);
+            let a = b.matmul(k, qt);
+            let s = b.reduce_sum(a, &[1]);
+            let c = b.broadcast(s, &[seq, seq], &[0]);
+            let dd = b.div(a, c);
+            x = b.matmul(dd, v);
+        }
+        let f = b.build(vec![x]);
+        let nda = Nda::analyze(&f);
+        // Two layers -> two compatibility sets, isomorphic -> one group.
+        assert_eq!(nda.conflicts.compat_sets.len(), 2);
+        assert_eq!(nda.conflicts.num_groups(), 1);
+    }
+}

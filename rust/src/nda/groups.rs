@@ -1,0 +1,108 @@
+//! Argument grouping (§4.4).
+//!
+//! Repeated layers use their parameters "in the same way". We group
+//! function arguments by a structural key built from all uses of the
+//! argument: the op kind, operand position, argument shape and the result
+//! shape of every user. Actions applied to a dimension of one group
+//! member are mirrored to the corresponding dimensions of all members,
+//! collapsing the per-layer blow-up of the decision space.
+
+use crate::ir::Func;
+use crate::nda::DimId;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+/// Group parameter indices by structural use-key. Singleton groups are
+/// dropped (nothing to mirror).
+pub fn group_params(func: &Func, _use_dims: &[Vec<Vec<DimId>>]) -> Vec<Vec<usize>> {
+    let uses = func.uses();
+    let mut by_key: HashMap<u64, Vec<usize>> = HashMap::new();
+    for (pi, param) in func.params.iter().enumerate() {
+        let mut h = DefaultHasher::new();
+        param.ty.shape.hash(&mut h);
+        (param.ty.dtype.bytes()).hash(&mut h);
+        // Multiset of use descriptors.
+        let mut descs: Vec<u64> = uses[pi]
+            .iter()
+            .map(|&(ii, oi)| {
+                let instr = &func.instrs[ii];
+                let mut uh = DefaultHasher::new();
+                instr.kind.mnemonic().hash(&mut uh);
+                oi.hash(&mut uh);
+                instr.ty.shape.hash(&mut uh);
+                // include the shapes of sibling operands so e.g. a weight
+                // multiplied with an activation of a distinct shape keys
+                // differently
+                for &sib in &instr.operands {
+                    func.ty(sib).shape.hash(&mut uh);
+                }
+                uh.finish()
+            })
+            .collect();
+        descs.sort_unstable();
+        descs.hash(&mut h);
+        by_key.entry(h.finish()).or_default().push(pi);
+    }
+    let mut groups: Vec<Vec<usize>> =
+        by_key.into_values().filter(|g| g.len() > 1).collect();
+    for g in &mut groups {
+        g.sort_unstable();
+    }
+    groups.sort();
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{FuncBuilder, TensorType};
+    use crate::nda::Nda;
+
+    #[test]
+    fn repeated_layer_weights_grouped() {
+        // Stack of 3 identical MLP layers: the per-layer weights of the
+        // same position should land in one group.
+        let mut b = FuncBuilder::new("stack");
+        let x0 = b.param("x", TensorType::f32(vec![64, 32]));
+        let mut ws = Vec::new();
+        for l in 0..3 {
+            ws.push(b.param(format!("w{l}"), TensorType::f32(vec![32, 32])));
+        }
+        let mut x = x0;
+        for l in 0..3 {
+            let y = b.matmul(x, ws[l]);
+            x = b.relu(y);
+        }
+        let f = b.build(vec![x]);
+        let nda = Nda::analyze(&f);
+        assert_eq!(nda.param_groups.len(), 1);
+        assert_eq!(nda.param_groups[0], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn distinct_roles_not_grouped() {
+        // Different shapes -> different groups.
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![64, 32]));
+        let w1 = b.param("w1", TensorType::f32(vec![32, 16]));
+        let w2 = b.param("w2", TensorType::f32(vec![16, 8]));
+        let y = b.matmul(x, w1);
+        let z = b.matmul(y, w2);
+        let f = b.build(vec![z]);
+        let g = group_params(&f, &[]);
+        assert!(g.is_empty());
+    }
+
+    #[test]
+    fn unused_params_group_by_shape() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![4, 4]));
+        let _u1 = b.param("u1", TensorType::f32(vec![9, 9]));
+        let _u2 = b.param("u2", TensorType::f32(vec![9, 9]));
+        let y = b.relu(x);
+        let f = b.build(vec![y]);
+        let g = group_params(&f, &[]);
+        assert_eq!(g, vec![vec![1, 2]]);
+    }
+}

@@ -1,0 +1,389 @@
+//! Named Dimension Analysis (paper §3).
+//!
+//! The NDA assigns *fresh dimension names* to every tensor dimension at
+//! every definition and every use, then records:
+//!
+//! * identities `I` from per-op sharding rules ([`rules`]) — dimensions
+//!   that an op allows to be sharded together, and
+//! * the def-to-use map `M` — dataflow edges between the names of a value
+//!   definition and the names of each of its uses.
+//!
+//! Identifying names with `I ∪ M` (a union-find) yields **colors**: the
+//! sets of dimensions that must be sharded identically (the colored dims
+//! of the paper's Figure 2a). Identifying with `I` only and keeping `M`
+//! as the **dimension graph** exposes **sharding conflicts** — see
+//! [`conflicts`].
+
+pub mod conflicts;
+pub mod groups;
+pub mod rules;
+pub mod unionfind;
+
+pub use conflicts::{Conflict, ConflictAnalysis, Occurrence};
+pub use rules::{op_rule, OpRule};
+
+use crate::ir::{Func, ValueId};
+use unionfind::UnionFind;
+
+/// A fresh dimension name (the paper's `a_i`, `d_i`, ...).
+pub type DimId = u32;
+
+/// A color: an equivalence class of dimension names under `I ∪ M`.
+/// Compact index, stable for a given function.
+pub type ColorId = usize;
+
+/// Per-color summary.
+#[derive(Clone, Debug)]
+pub struct ColorInfo {
+    /// Definition-side members: `(value, dim)` pairs whose def dimension
+    /// carries this color.
+    pub members: Vec<(ValueId, usize)>,
+    /// Common dimension size (identified dims always agree on size).
+    pub dim_size: i64,
+    /// Members that are function parameters: `(param index, dim)`.
+    pub param_dims: Vec<(usize, usize)>,
+    /// Total bytes of the tensors touched by this color (rough measure of
+    /// how much of the model an action on this color shards).
+    pub touched_bytes: u64,
+}
+
+/// The full result of the analysis over one function.
+pub struct Nda {
+    /// Fresh names of each value's definition dims: `def_dims[v][d]`.
+    pub def_dims: Vec<Vec<DimId>>,
+    /// Fresh names of each use: `use_dims[instr][operand][d]`.
+    pub use_dims: Vec<Vec<Vec<DimId>>>,
+    /// The def-to-use map `M`: `(def name, use name)` edges.
+    pub m_edges: Vec<(DimId, DimId)>,
+    /// The identities `I` from op rules.
+    pub identities: Vec<(DimId, DimId)>,
+    /// Total number of dimension names allocated.
+    pub n_dims: usize,
+    /// `I`-only class representative per name (the nodes of the
+    /// dimension graph).
+    pub rules_root: Vec<u32>,
+    /// Color per name (compacted `I ∪ M` class).
+    pub color: Vec<ColorId>,
+    /// Per-color info, indexed by [`ColorId`].
+    pub colors: Vec<ColorInfo>,
+    /// Conflict analysis (§3.3–§3.6).
+    pub conflicts: ConflictAnalysis,
+    /// Parameter groups (§4.4): indices into `func.params`, grouped by
+    /// structural use-key. Singleton groups are omitted.
+    pub param_groups: Vec<Vec<usize>>,
+}
+
+impl Nda {
+    /// Run the analysis on `func`.
+    pub fn analyze(func: &Func) -> Nda {
+        let n_params = func.params.len();
+        let n_values = func.num_values();
+        let mut counter: u32 = 0;
+        let mut fresh = |rank: usize| -> Vec<DimId> {
+            let v: Vec<DimId> = (counter..counter + rank as u32).collect();
+            counter += rank as u32;
+            v
+        };
+
+        let mut def_dims: Vec<Vec<DimId>> = Vec::with_capacity(n_values);
+        for p in &func.params {
+            def_dims.push(fresh(p.ty.rank()));
+        }
+
+        let mut use_dims: Vec<Vec<Vec<DimId>>> = Vec::with_capacity(func.instrs.len());
+        let mut m_edges: Vec<(DimId, DimId)> = Vec::new();
+        let mut identities: Vec<(DimId, DimId)> = Vec::new();
+
+        for (ii, instr) in func.instrs.iter().enumerate() {
+            // VARIABLE USE rule: fresh names per use, M edges from defs.
+            let mut this_uses: Vec<Vec<DimId>> = Vec::with_capacity(instr.operands.len());
+            for &opnd in &instr.operands {
+                let rank = func.ty(opnd).rank();
+                let names = fresh(rank);
+                for d in 0..rank {
+                    m_edges.push((def_dims[opnd.index()][d], names[d]));
+                }
+                this_uses.push(names);
+            }
+            // Result definition names.
+            let res_names = fresh(instr.ty.rank());
+            // Op rule -> identities I.
+            let rule = op_rule(func, instr);
+            for (r, ods) in &rule.maps {
+                for &(oi, od) in ods {
+                    identities.push((res_names[*r], this_uses[oi][od]));
+                }
+            }
+            for (group, _kind) in &rule.contracts {
+                for w in group.windows(2) {
+                    let (oi0, od0) = w[0];
+                    let (oi1, od1) = w[1];
+                    identities.push((this_uses[oi0][od0], this_uses[oi1][od1]));
+                }
+            }
+            debug_assert_eq!(ii, use_dims.len());
+            use_dims.push(this_uses);
+            def_dims.push(res_names);
+        }
+
+        let n_dims = counter as usize;
+
+        // I-only union-find -> dimension-graph nodes.
+        let mut uf_rules = UnionFind::new(n_dims);
+        for &(a, b) in &identities {
+            uf_rules.union(a, b);
+        }
+        let rules_root = uf_rules.roots();
+
+        // I ∪ M union-find -> colors.
+        let mut uf_full = UnionFind::new(n_dims);
+        for &(a, b) in &identities {
+            uf_full.union(a, b);
+        }
+        for &(a, b) in &m_edges {
+            uf_full.union(a, b);
+        }
+        let full_roots = uf_full.roots();
+
+        // Compact roots into ColorIds.
+        let mut color_of_root: std::collections::HashMap<u32, ColorId> =
+            std::collections::HashMap::new();
+        let mut color: Vec<ColorId> = Vec::with_capacity(n_dims);
+        for &r in &full_roots {
+            let next = color_of_root.len();
+            let c = *color_of_root.entry(r).or_insert(next);
+            color.push(c);
+        }
+        let n_colors = color_of_root.len();
+
+        // Per-color info from def-side occurrences.
+        let mut colors: Vec<ColorInfo> = (0..n_colors)
+            .map(|_| ColorInfo {
+                members: Vec::new(),
+                dim_size: 0,
+                param_dims: Vec::new(),
+                touched_bytes: 0,
+            })
+            .collect();
+        for v in 0..n_values {
+            let vid = ValueId(v as u32);
+            let ty = func.ty(vid);
+            for (d, &name) in def_dims[v].iter().enumerate() {
+                let c = color[name as usize];
+                let info = &mut colors[c];
+                info.members.push((vid, d));
+                info.touched_bytes += ty.bytes();
+                let sz = ty.shape[d];
+                if info.dim_size == 0 {
+                    info.dim_size = sz;
+                } else {
+                    // Identified dims agree on size by rule construction.
+                    debug_assert_eq!(
+                        info.dim_size,
+                        sz,
+                        "color size mismatch at {} dim {}",
+                        func.value_name(vid),
+                        d
+                    );
+                }
+                if v < n_params {
+                    info.param_dims.push((v, d));
+                }
+            }
+        }
+
+        let conflicts =
+            ConflictAnalysis::compute(func, &def_dims, &use_dims, &m_edges, &rules_root, &color);
+        let param_groups = groups::group_params(func, &use_dims);
+
+        Nda {
+            def_dims,
+            use_dims,
+            m_edges,
+            identities,
+            n_dims,
+            rules_root,
+            color,
+            colors,
+            conflicts,
+            param_groups,
+        }
+    }
+
+    /// Number of colors.
+    pub fn num_colors(&self) -> usize {
+        self.colors.len()
+    }
+
+    /// Color of a value's definition dimension.
+    pub fn color_of(&self, v: ValueId, dim: usize) -> ColorId {
+        self.color[self.def_dims[v.index()][dim] as usize]
+    }
+
+    /// Colors that include at least `min_dims` definition dimensions —
+    /// the action-space pruning of §4.2.
+    pub fn significant_colors(&self, min_dims: usize) -> Vec<ColorId> {
+        (0..self.colors.len())
+            .filter(|&c| self.colors[c].members.len() >= min_dims)
+            .collect()
+    }
+
+    /// Resolution groups (isomorphism-grouped compatibility sets, §3.6)
+    /// whose conflicts involve `color`. Returns global group indices.
+    pub fn groups_for_color(&self, color: ColorId) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (gi, sets) in self.conflicts.resolution_groups.iter().enumerate() {
+            let touches = sets.iter().any(|&si| {
+                self.conflicts.compat_sets[si].iter().any(|&ci| {
+                    let cf = &self.conflicts.conflicts[ci];
+                    self.color[cf.class_a as usize] == color
+                })
+            });
+            if touches {
+                out.push(gi);
+            }
+        }
+        out
+    }
+
+    /// Compute, for each value, which definition dimension an action on
+    /// `color` shards, resolving conflicts with `order_bits` (bit `g` of
+    /// the string selects the resolution of global resolution group `g`).
+    ///
+    /// Returns `(value, dim)` pairs — the sharding the partitioner applies.
+    pub fn sharding_assignment(&self, color: ColorId, order_bits: u64) -> Vec<(ValueId, usize)> {
+        let mut out = Vec::new();
+        // Group members by value.
+        let mut per_value: std::collections::BTreeMap<ValueId, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for &(v, d) in &self.colors[color].members {
+            per_value.entry(v).or_default().push(d);
+        }
+        for (v, dims) in per_value {
+            if dims.len() == 1 {
+                out.push((v, dims[0]));
+                continue;
+            }
+            // Conflict: consult the resolution machinery.
+            let d = self.conflicts.resolve_def(v, &dims, &self.def_dims, &self.rules_root, order_bits);
+            out.push((v, d));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{FuncBuilder, TensorType};
+
+    /// Paper Figure 2a / Figure 4.
+    fn mlp() -> Func {
+        let mut b = FuncBuilder::new("mlp");
+        let x = b.param("x", TensorType::f32(vec![256, 32]));
+        let w1 = b.param("w1", TensorType::f32(vec![32, 64]));
+        let w2 = b.param("w2", TensorType::f32(vec![64, 16]));
+        let y = b.matmul(x, w1);
+        let z = b.relu(y);
+        let w = b.matmul(z, w2);
+        b.build(vec![w])
+    }
+
+    #[test]
+    fn mlp_colors_match_figure4c() {
+        // After identifying with I and M, mlp has colors:
+        //   B = {x.0, y.0, z.0, w.0}           (batch, yellow)
+        //   X = {x.1, w1.0}
+        //   U = {w1.1, y.1, z.1, w2.0}         (hidden, green)
+        //   W = {w2.1, w.1}
+        let f = mlp();
+        let nda = Nda::analyze(&f);
+        let x = ValueId(0);
+        let w1 = ValueId(1);
+        let w2 = ValueId(2);
+        let y = ValueId(3);
+        let z = ValueId(4);
+        let w = ValueId(5);
+
+        let b_color = nda.color_of(x, 0);
+        assert_eq!(nda.color_of(y, 0), b_color);
+        assert_eq!(nda.color_of(z, 0), b_color);
+        assert_eq!(nda.color_of(w, 0), b_color);
+
+        let u_color = nda.color_of(w1, 1);
+        assert_eq!(nda.color_of(y, 1), u_color);
+        assert_eq!(nda.color_of(z, 1), u_color);
+        assert_eq!(nda.color_of(w2, 0), u_color);
+
+        let x_color = nda.color_of(x, 1);
+        assert_eq!(nda.color_of(w1, 0), x_color);
+
+        let w_color = nda.color_of(w2, 1);
+        assert_eq!(nda.color_of(w, 1), w_color);
+
+        // The four colors are distinct.
+        let mut cs = vec![b_color, u_color, x_color, w_color];
+        cs.sort_unstable();
+        cs.dedup();
+        assert_eq!(cs.len(), 4);
+        assert_eq!(nda.num_colors(), 4);
+
+        // Sizes.
+        assert_eq!(nda.colors[b_color].dim_size, 256);
+        assert_eq!(nda.colors[u_color].dim_size, 64);
+    }
+
+    #[test]
+    fn mlp_has_no_conflicts() {
+        let nda = Nda::analyze(&mlp());
+        assert!(nda.conflicts.conflicts.is_empty());
+    }
+
+    #[test]
+    fn mlp_batch_assignment() {
+        let f = mlp();
+        let nda = Nda::analyze(&f);
+        let b_color = nda.color_of(ValueId(0), 0);
+        let assign = nda.sharding_assignment(b_color, 0);
+        // x, y, z, w sharded on dim 0
+        assert_eq!(assign.len(), 4);
+        assert!(assign.iter().all(|&(_, d)| d == 0));
+    }
+
+    #[test]
+    fn transpose_matmul_conflict_detected() {
+        // Paper §3.3: f(x) = matmul(x, transpose(x)) has a conflict.
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![32, 32]));
+        let y = b.transpose(x, &[1, 0]);
+        let z = b.matmul(x, y);
+        let f = b.build(vec![z]);
+        let nda = Nda::analyze(&f);
+        // z's both dims have the same color (S)
+        let z = ValueId(2);
+        assert_eq!(nda.color_of(z, 0), nda.color_of(z, 1));
+        assert!(!nda.conflicts.conflicts.is_empty());
+    }
+
+    #[test]
+    fn transpose_matmul_rect_no_spurious_merge() {
+        // With a rectangular x:[32,4], S and T colors stay distinct on x.
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![32, 4]));
+        let y = b.transpose(x, &[1, 0]);
+        let z = b.matmul(x, y);
+        let f = b.build(vec![z]);
+        let nda = Nda::analyze(&f);
+        assert_ne!(nda.color_of(ValueId(0), 0), nda.color_of(ValueId(0), 1));
+        assert_eq!(nda.color_of(ValueId(2), 0), nda.color_of(ValueId(2), 1));
+    }
+
+    #[test]
+    fn significant_color_pruning() {
+        let nda = Nda::analyze(&mlp());
+        // every color touches at most 4 def dims here
+        assert!(nda.significant_colors(10).is_empty());
+        assert_eq!(nda.significant_colors(1).len(), 4);
+        assert_eq!(nda.significant_colors(4).len(), 2); // B and U
+    }
+}

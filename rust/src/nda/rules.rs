@@ -1,0 +1,315 @@
+//! Per-op sharding rules (§3.1).
+//!
+//! A rule describes, for one operation, which operand/result dimensions
+//! can be sharded *together* — the identities `I` of the paper's NDA —
+//! plus which operand-dimension groups are *contracted* (sharding them
+//! yields device-local partial results that an `all_reduce` combines,
+//! like the `d2 ≗ c1` identity of the MATMUL rule).
+//!
+//! The same table drives three consumers:
+//! * the NDA (identities between fresh dimension names),
+//! * the SPMD partitioner (required operand shardings + partial-result
+//!   reductions),
+//! * the AutoMap-baseline propagation engine.
+//!
+//! This mirrors how production partitioners (GSPMD, PartIR, Shardy) keep
+//! one op-semantics registry for both propagation and lowering.
+
+use crate::ir::{Func, Instr, OpKind, ReduceKind};
+
+/// An operand dimension: `(operand index, dimension index)`.
+pub type OperandDim = (usize, usize);
+
+/// Sharding rule for one instruction.
+#[derive(Clone, Debug, Default)]
+pub struct OpRule {
+    /// `maps[k] = (result_dim, operand_dims)`: the result dimension is
+    /// computed pointwise across these operand dimensions; sharding all of
+    /// them together partitions the op with no communication.
+    pub maps: Vec<(usize, Vec<OperandDim>)>,
+    /// Contraction groups: operand dims reduced over together. Sharding a
+    /// whole group yields partial results that must be `all_reduce`d
+    /// (kind per group).
+    pub contracts: Vec<(Vec<OperandDim>, ReduceKind)>,
+    /// Result dims that are "free": not tied to any operand (broadcast's
+    /// new dims, constants, iota). They can be sharded locally via
+    /// [`crate::ir::OpKind::ShardSlice`] — except `iota`-like dims listed
+    /// in `replicate_result_dims`, which require computing the full
+    /// result first (still no communication).
+    pub free_result_dims: Vec<usize>,
+    /// Operand dims that *must* be replicated (gathered) before the op:
+    /// everything not mentioned in `maps` or `contracts`.
+    pub gather_operand_dims: Vec<OperandDim>,
+}
+
+impl OpRule {
+    /// All operand dims mentioned by maps or contracts.
+    fn covered(&self) -> Vec<OperandDim> {
+        let mut v: Vec<OperandDim> = self
+            .maps
+            .iter()
+            .flat_map(|(_, ods)| ods.iter().copied())
+            .chain(self.contracts.iter().flat_map(|(g, _)| g.iter().copied()))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Operand dims of the map that computes `result_dim`, if any.
+    pub fn map_for_result_dim(&self, result_dim: usize) -> Option<&[OperandDim]> {
+        self.maps.iter().find(|(r, _)| *r == result_dim).map(|(_, ods)| ods.as_slice())
+    }
+}
+
+/// Compute the sharding rule for `instr` within `func`.
+pub fn op_rule(func: &Func, instr: &Instr) -> OpRule {
+    let rank = |oi: usize| func.ty(instr.operands[oi]).rank();
+    let out_rank = instr.ty.rank();
+    let mut rule = OpRule::default();
+    match &instr.kind {
+        OpKind::Constant { .. } | OpKind::Iota { .. } => {
+            rule.free_result_dims = (0..out_rank).collect();
+        }
+        OpKind::Unary(_) | OpKind::Convert => {
+            rule.maps = (0..out_rank).map(|d| (d, vec![(0, d)])).collect();
+        }
+        OpKind::Binary(_) | OpKind::Compare(_) => {
+            rule.maps = (0..out_rank).map(|d| (d, vec![(0, d), (1, d)])).collect();
+        }
+        OpKind::Select => {
+            rule.maps = (0..out_rank).map(|d| (d, vec![(0, d), (1, d), (2, d)])).collect();
+        }
+        OpKind::DotGeneral { lhs_batch, rhs_batch, lhs_contract, rhs_contract } => {
+            let mut r = 0usize;
+            for (&lb, &rb) in lhs_batch.iter().zip(rhs_batch) {
+                rule.maps.push((r, vec![(0, lb), (1, rb)]));
+                r += 1;
+            }
+            for d in 0..rank(0) {
+                if !lhs_batch.contains(&d) && !lhs_contract.contains(&d) {
+                    rule.maps.push((r, vec![(0, d)]));
+                    r += 1;
+                }
+            }
+            for d in 0..rank(1) {
+                if !rhs_batch.contains(&d) && !rhs_contract.contains(&d) {
+                    rule.maps.push((r, vec![(1, d)]));
+                    r += 1;
+                }
+            }
+            debug_assert_eq!(r, out_rank);
+            for (&lc, &rc) in lhs_contract.iter().zip(rhs_contract) {
+                rule.contracts.push((vec![(0, lc), (1, rc)], ReduceKind::Add));
+            }
+        }
+        OpKind::Transpose { perm } => {
+            rule.maps = (0..out_rank).map(|d| (d, vec![(0, perm[d])])).collect();
+        }
+        OpKind::Reduce { dims, kind } => {
+            let mut r = 0usize;
+            for d in 0..rank(0) {
+                if !dims.contains(&d) {
+                    rule.maps.push((r, vec![(0, d)]));
+                    r += 1;
+                }
+            }
+            // Sharding a reduced dim yields a partial result.
+            for &d in dims {
+                rule.contracts.push((vec![(0, d)], *kind));
+            }
+        }
+        OpKind::Broadcast { dims } => {
+            for (i, &d) in dims.iter().enumerate() {
+                rule.maps.push((d, vec![(0, i)]));
+            }
+            rule.free_result_dims =
+                (0..out_rank).filter(|d| !dims.contains(d)).collect();
+        }
+        OpKind::Reshape => {
+            // Identify leading dims while sizes match exactly; everything
+            // after the first split/merge is opaque (gather + replicate).
+            let in_shape = &func.ty(instr.operands[0]).shape;
+            let out_shape = &instr.ty.shape;
+            let n = in_shape.len().min(out_shape.len());
+            let mut matched = 0usize;
+            while matched < n && in_shape[matched] == out_shape[matched] {
+                rule.maps.push((matched, vec![(0, matched)]));
+                matched += 1;
+            }
+            // Remaining output dims must be produced replicated.
+            rule.free_result_dims.clear();
+        }
+        OpKind::Concat { dim } => {
+            for d in 0..out_rank {
+                if d != *dim {
+                    rule.maps.push((d, (0..instr.operands.len()).map(|oi| (oi, d)).collect()));
+                }
+            }
+        }
+        OpKind::Slice { starts, limits, strides } => {
+            let in_shape = &func.ty(instr.operands[0]).shape;
+            for d in 0..out_rank {
+                let full = starts[d] == 0 && limits[d] == in_shape[d] && strides[d] == 1;
+                if full {
+                    rule.maps.push((d, vec![(0, d)]));
+                }
+            }
+        }
+        OpKind::Conv2d { .. } => {
+            // NHWC x HWIO -> NHWC: batch and out-channel map; in-channel
+            // contracts; spatial dims need halo exchange (out of scope) so
+            // they gather.
+            rule.maps.push((0, vec![(0, 0)]));
+            rule.maps.push((3, vec![(1, 3)]));
+            rule.contracts.push((vec![(0, 3), (1, 2)], ReduceKind::Add));
+        }
+        OpKind::Gather { axis } => {
+            // output = operand[..axis] ++ indices.shape ++ operand[axis+1..]
+            let ir = rank(1);
+            for d in 0..*axis {
+                rule.maps.push((d, vec![(0, d)]));
+            }
+            for d in 0..ir {
+                rule.maps.push((axis + d, vec![(1, d)]));
+            }
+            for d in axis + 1..rank(0) {
+                rule.maps.push((d + ir - 1, vec![(0, d)]));
+            }
+            // the gathered-over operand axis must be fully present
+        }
+        OpKind::Scatter { axis, kind } => {
+            // result dims follow operand dims; non-axis update dims map too
+            for d in 0..out_rank {
+                if d != *axis {
+                    rule.maps.push((d, vec![(0, d), (2, d)]));
+                }
+            }
+            // Sharding the updates/indices dimension scatters a subset per
+            // device: device-local partial results combined by `kind`
+            // (edge-sharding for GNS message passing).
+            rule.contracts.push((vec![(1, 0), (2, *axis)], *kind));
+            // operand's `axis` dim must be fully present locally
+            rule.maps.push((*axis, vec![(0, *axis)]));
+            // remove: operand axis maps BUT indices are global, so the
+            // scattered dim of the result must stay unsharded; drop it.
+            rule.maps.retain(|(r, ods)| !(*r == *axis && ods == &vec![(0, *axis)]));
+            rule.gather_operand_dims.push((0, *axis));
+        }
+        OpKind::AllReduce { .. }
+        | OpKind::AllGather { .. }
+        | OpKind::ReduceScatter { .. }
+        | OpKind::AllToAll { .. }
+        | OpKind::ShardSlice { .. } => {
+            // Collectives never appear in logical modules analyzed by NDA.
+        }
+    }
+    // Everything not covered must be gathered.
+    let covered = rule.covered();
+    for (oi, _) in instr.operands.iter().enumerate() {
+        for d in 0..rank(oi) {
+            if !covered.contains(&(oi, d)) && !rule.gather_operand_dims.contains(&(oi, d)) {
+                rule.gather_operand_dims.push((oi, d));
+            }
+        }
+    }
+    rule
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DType, FuncBuilder, TensorType};
+
+    #[test]
+    fn matmul_rule_matches_paper() {
+        // matmul(x:[d1,d2], y:[c1,c2]) : [a1,a2]
+        // identities: a1 ≗ d1, a2 ≗ c2, d2 ≗ c1 (contract)
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![4, 8]));
+        let y = b.param("y", TensorType::f32(vec![8, 2]));
+        b.matmul(x, y);
+        let f = b.build(vec![crate::ir::ValueId(2)]);
+        let rule = op_rule(&f, &f.instrs[0]);
+        assert_eq!(rule.maps, vec![(0, vec![(0, 0)]), (1, vec![(1, 1)])]);
+        assert_eq!(rule.contracts.len(), 1);
+        assert_eq!(rule.contracts[0].0, vec![(0, 1), (1, 0)]);
+        assert!(rule.gather_operand_dims.is_empty());
+    }
+
+    #[test]
+    fn reduce_rule_keeps_and_contracts() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![4, 8, 2]));
+        let r = b.reduce_sum(x, &[1]);
+        let f = b.build(vec![r]);
+        let rule = op_rule(&f, &f.instrs[0]);
+        assert_eq!(rule.maps, vec![(0, vec![(0, 0)]), (1, vec![(0, 2)])]);
+        assert_eq!(rule.contracts[0].0, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn broadcast_new_dim_is_free() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![4]));
+        let y = b.broadcast(x, &[8, 4], &[1]);
+        let f = b.build(vec![y]);
+        let rule = op_rule(&f, &f.instrs[0]);
+        assert_eq!(rule.maps, vec![(1, vec![(0, 0)])]);
+        assert_eq!(rule.free_result_dims, vec![0]);
+    }
+
+    #[test]
+    fn transpose_rule_permutes() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![4, 8]));
+        let y = b.transpose(x, &[1, 0]);
+        let f = b.build(vec![y]);
+        let rule = op_rule(&f, &f.instrs[0]);
+        assert_eq!(rule.maps, vec![(0, vec![(0, 1)]), (1, vec![(0, 0)])]);
+    }
+
+    #[test]
+    fn gather_rule_maps_indices() {
+        let mut b = FuncBuilder::new("f");
+        let nodes = b.param("nodes", TensorType::f32(vec![100, 64]));
+        let idx = b.param("idx", TensorType::new(vec![500], DType::I32));
+        let g = b.gather(nodes, idx, 0);
+        let f = b.build(vec![g]);
+        let rule = op_rule(&f, &f.instrs[0]);
+        // out dim 0 <- indices dim 0; out dim 1 <- nodes dim 1
+        assert!(rule.maps.contains(&(0, vec![(1, 0)])));
+        assert!(rule.maps.contains(&(1, vec![(0, 1)])));
+        // nodes dim 0 (gathered over) must be replicated
+        assert!(rule.gather_operand_dims.contains(&(0, 0)));
+    }
+
+    #[test]
+    fn scatter_rule_contracts_updates() {
+        let mut b = FuncBuilder::new("f");
+        let base = b.param("base", TensorType::f32(vec![100, 64]));
+        let idx = b.param("idx", TensorType::new(vec![500], DType::I32));
+        let upd = b.param("upd", TensorType::f32(vec![500, 64]));
+        let s = b.scatter(base, idx, upd, 0, ReduceKind::Add);
+        let f = b.build(vec![s]);
+        let rule = op_rule(&f, &f.instrs[0]);
+        assert!(rule.maps.contains(&(1, vec![(0, 1), (2, 1)])));
+        assert_eq!(rule.contracts[0].0, vec![(1, 0), (2, 0)]);
+        assert!(rule.gather_operand_dims.contains(&(0, 0)));
+    }
+
+    #[test]
+    fn dot_general_batched_rule() {
+        let mut b = FuncBuilder::new("f");
+        let q = b.param("q", TensorType::f32(vec![2, 3, 4]));
+        let k = b.param("k", TensorType::f32(vec![2, 5, 4]));
+        let s = b.dot_general(q, k, &[0], &[0], &[2], &[2]);
+        let f = b.build(vec![s]);
+        let rule = op_rule(&f, &f.instrs[0]);
+        assert_eq!(
+            rule.maps,
+            vec![(0, vec![(0, 0), (1, 0)]), (1, vec![(0, 1)]), (2, vec![(1, 1)])]
+        );
+        assert_eq!(rule.contracts[0].0, vec![(0, 2), (1, 2)]);
+    }
+}

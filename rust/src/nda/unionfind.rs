@@ -1,0 +1,163 @@
+//! Union-find (disjoint sets) used to identify dimension names (§3.1-3.2).
+//!
+//! Two variants:
+//! * [`UnionFind`] — plain path-halving + union-by-size; identifies
+//!   dimension names with the identities `I` and (optionally) the
+//!   def-to-use map `M`.
+//! * [`ParityUnionFind`] — additionally tracks an XOR parity between each
+//!   element and its root, used to keep *conflict resolutions* consistent
+//!   across a compatibility set (§3.5): two conflicts in the same set may
+//!   be aligned (parity 0) or swapped (parity 1).
+
+/// Plain union-find over `u32` ids.
+#[derive(Clone, Debug)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n as u32).collect(), size: vec![1; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Root of `x` with path halving.
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let gp = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+        x
+    }
+
+    /// Root of `x` without mutation (no compression; for shared access).
+    pub fn find_const(&self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            x = self.parent[x as usize];
+        }
+        x
+    }
+
+    /// Union the sets of `a` and `b`; returns the new root.
+    pub fn union(&mut self, a: u32, b: u32) -> u32 {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra == rb {
+            return ra;
+        }
+        let (big, small) =
+            if self.size[ra as usize] >= self.size[rb as usize] { (ra, rb) } else { (rb, ra) };
+        self.parent[small as usize] = big;
+        self.size[big as usize] += self.size[small as usize];
+        big
+    }
+
+    pub fn same(&mut self, a: u32, b: u32) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    /// Fully compress and return, for each element, its root.
+    pub fn roots(&mut self) -> Vec<u32> {
+        (0..self.parent.len() as u32).map(|x| self.find(x)).collect()
+    }
+}
+
+/// Union-find with XOR parity relative to the root.
+#[derive(Clone, Debug)]
+pub struct ParityUnionFind {
+    parent: Vec<u32>,
+    /// parity[x] = parity of x relative to parent[x]
+    parity: Vec<u8>,
+    size: Vec<u32>,
+}
+
+impl ParityUnionFind {
+    pub fn new(n: usize) -> Self {
+        ParityUnionFind { parent: (0..n as u32).collect(), parity: vec![0; n], size: vec![1; n] }
+    }
+
+    /// Returns `(root, parity_of_x_relative_to_root)`.
+    pub fn find(&mut self, x: u32) -> (u32, u8) {
+        let p = self.parent[x as usize];
+        if p == x {
+            return (x, 0);
+        }
+        let (root, pp) = self.find(p);
+        let total = self.parity[x as usize] ^ pp;
+        self.parent[x as usize] = root;
+        self.parity[x as usize] = total;
+        (root, total)
+    }
+
+    /// Union `a` and `b` with relative parity `rel` (0 = resolved the same
+    /// way, 1 = resolved opposite ways). Returns `false` on contradiction
+    /// (already unioned with different parity).
+    pub fn union(&mut self, a: u32, b: u32, rel: u8) -> bool {
+        let (ra, pa) = self.find(a);
+        let (rb, pb) = self.find(b);
+        if ra == rb {
+            return pa ^ pb == rel;
+        }
+        let (big, small, par) = if self.size[ra as usize] >= self.size[rb as usize] {
+            // parity of rb relative to ra: pa ^ rel ^ pb
+            (ra, rb, pa ^ rel ^ pb)
+        } else {
+            (rb, ra, pa ^ rel ^ pb)
+        };
+        self.parent[small as usize] = big;
+        self.parity[small as usize] = par;
+        self.size[big as usize] += self.size[small as usize];
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_union_find() {
+        let mut uf = UnionFind::new(10);
+        uf.union(0, 1);
+        uf.union(1, 2);
+        uf.union(5, 6);
+        assert!(uf.same(0, 2));
+        assert!(!uf.same(0, 5));
+        assert_eq!(uf.find_const(2), uf.find(0));
+    }
+
+    #[test]
+    fn roots_partition() {
+        let mut uf = UnionFind::new(6);
+        uf.union(0, 3);
+        uf.union(1, 4);
+        let roots = uf.roots();
+        assert_eq!(roots[0], roots[3]);
+        assert_eq!(roots[1], roots[4]);
+        assert_ne!(roots[0], roots[1]);
+        assert_eq!(roots[2], 2);
+    }
+
+    #[test]
+    fn parity_consistent() {
+        let mut uf = ParityUnionFind::new(4);
+        assert!(uf.union(0, 1, 1)); // opposite
+        assert!(uf.union(1, 2, 1)); // opposite => 0 and 2 same
+        let (r0, p0) = uf.find(0);
+        let (r2, p2) = uf.find(2);
+        assert_eq!(r0, r2);
+        assert_eq!(p0 ^ p2, 0);
+        // contradiction: 0 and 2 opposite
+        assert!(!uf.union(0, 2, 1));
+        assert!(uf.union(0, 2, 0));
+    }
+}

@@ -1,0 +1,194 @@
+//! PJRT execution runtime: load AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from Rust via the `xla`
+//! crate's PJRT CPU client. Python never runs on this path.
+//!
+//! * [`Runtime`] — client + compiled executables, loaded from an
+//!   artifacts directory (`make artifacts`).
+//! * [`simexec`] — the simulated multi-device executor: a data-parallel
+//!   trainer that runs the per-device `grad` artifact on every simulated
+//!   device's batch shard, performs the gradient all-reduce on the host
+//!   (the L3 collective), and applies the `adam` artifact — proving the
+//!   three layers compose end to end.
+
+pub mod simexec;
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Minimal manifest data parsed from `manifest.json` (no serde offline —
+/// a tolerant hand parser for the known structure).
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub param_names: Vec<String>,
+    pub param_shapes: HashMap<String, Vec<usize>>,
+    pub config: HashMap<String, i64>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        if let Some(arr) = extract_array(text, "\"param_names\"") {
+            m.param_names = arr
+                .split(',')
+                .filter_map(|s| {
+                    let t = s.trim().trim_matches(|c| c == '"' || c == '[' || c == ']');
+                    if t.is_empty() {
+                        None
+                    } else {
+                        Some(t.to_string())
+                    }
+                })
+                .collect();
+        }
+        if let Some(obj) = extract_object(text, "\"config\"") {
+            for part in obj.split(',') {
+                let mut kv = part.splitn(2, ':');
+                if let (Some(k), Some(v)) = (kv.next(), kv.next()) {
+                    let key = k.trim().trim_matches(|c| c == '"' || c == '{' || c == '}');
+                    if let Ok(num) = v.trim().trim_matches('}').trim().parse::<i64>() {
+                        m.config.insert(key.to_string(), num);
+                    }
+                }
+            }
+        }
+        if let Some(obj) = extract_object(text, "\"param_shapes\"") {
+            let mut rest = obj;
+            while let Some(q) = rest.find('"') {
+                let after = &rest[q + 1..];
+                let Some(qe) = after.find('"') else { break };
+                let name = &after[..qe];
+                let after2 = &after[qe + 1..];
+                let Some(lb) = after2.find('[') else { break };
+                let Some(rb) = after2.find(']') else { break };
+                let dims: Vec<usize> = after2[lb + 1..rb]
+                    .split(',')
+                    .filter_map(|s| s.trim().parse().ok())
+                    .collect();
+                m.param_shapes.insert(name.to_string(), dims);
+                rest = &after2[rb + 1..];
+            }
+        }
+        if m.param_names.is_empty() {
+            bail!("manifest has no param_names");
+        }
+        Ok(m)
+    }
+}
+
+fn extract_array<'a>(text: &'a str, key: &str) -> Option<&'a str> {
+    let start = text.find(key)? + key.len();
+    let rest = &text[start..];
+    let lb = rest.find('[')?;
+    let rb = rest[lb..].find(']')? + lb;
+    Some(&rest[lb + 1..rb])
+}
+
+fn extract_object<'a>(text: &'a str, key: &str) -> Option<&'a str> {
+    let start = text.find(key)? + key.len();
+    let rest = &text[start..];
+    let lb = rest.find('{')?;
+    let mut depth = 0usize;
+    for (i, c) in rest[lb..].char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&rest[lb + 1..lb + i]);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// A compiled artifact.
+pub struct Artifact {
+    pub name: String,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: a CPU client plus the compiled artifact set.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub artifacts: HashMap<String, Artifact>,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load and compile every `*.hlo.txt` in `dir` (plus `manifest.json`).
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let manifest_text =
+            std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+                format!("read {}/manifest.json (run `make artifacts`)", dir.display())
+            })?;
+        let manifest = Manifest::parse(&manifest_text)?;
+
+        let mut artifacts = HashMap::new();
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            let Some(fname) = path.file_name().and_then(|s| s.to_str()) else { continue };
+            if !fname.ends_with(".hlo.txt") || fname == "model.hlo.txt" {
+                continue;
+            }
+            let name = fname.trim_end_matches(".hlo.txt").to_string();
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("parse {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
+            artifacts.insert(name.clone(), Artifact { name, exe });
+        }
+        if artifacts.is_empty() {
+            bail!("no .hlo.txt artifacts in {} (run `make artifacts`)", dir.display());
+        }
+        Ok(Runtime { client, artifacts, manifest, dir })
+    }
+
+    /// Names of loaded artifacts (sorted).
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Execute an artifact on literals; returns the flattened tuple
+    /// elements (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let art = self
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?;
+        let mut result = art.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.decompose_tuple()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parser_handles_aot_output() {
+        let text = r#"{
+  "config": {"d_model": 128, "layers": 2, "batch": 8, "seq": 128, "vocab": 1024},
+  "param_names": ["embedding", "final_norm", "l0_ln1"],
+  "param_shapes": {"embedding": [1024, 128], "final_norm": [128], "l0_ln1": [128]},
+  "entries": {"fwd": {"file": "fwd.hlo.txt"}}
+}"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.param_names, vec!["embedding", "final_norm", "l0_ln1"]);
+        assert_eq!(m.param_shapes["embedding"], vec![1024, 128]);
+        assert_eq!(m.config["d_model"], 128);
+        assert_eq!(m.config["batch"], 8);
+    }
+
+    #[test]
+    fn manifest_parser_rejects_empty() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

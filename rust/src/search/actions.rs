@@ -1,0 +1,247 @@
+//! Axis-aware, color-based actions (§4.2).
+//!
+//! An action is a triple `dim_name × resolution_order × axis`. The action
+//! space is built once from a model's NDA:
+//!
+//! * one candidate per *significant* color (≥ `min_color_dims` unique
+//!   definition dims, the paper prunes at 10);
+//! * per color, one candidate per combination of resolution bits of the
+//!   resolution groups that touch the color (usually none or one group);
+//! * per candidate, one action per mesh axis (axes of size 1 skipped).
+//!
+//! Each action's *sharding assignment* — the `(value, dim)` pairs it
+//! shards — is precomputed, with parameter-group mirroring (§4.4) folded
+//! in, and duplicates (actions whose expanded assignments coincide)
+//! removed. The MCTS then only ever performs cheap in-memory spec
+//! mutations; nothing is propagated at search time (§5.3).
+
+use crate::ir::{AxisId, Func, ValueId};
+use crate::mesh::Mesh;
+use crate::nda::{ColorId, Nda};
+use std::collections::{BTreeSet, HashMap};
+
+/// One partitioning action.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Action {
+    /// Color (dim_name) this action shards.
+    pub color: ColorId,
+    /// Resolution order: bit `g` selects the resolution of global
+    /// resolution group `g`.
+    pub order_bits: u64,
+    /// Mesh axis to shard along.
+    pub axis: AxisId,
+    /// Precomputed, mirror-expanded `(value, dim)` assignment.
+    pub assignment: Vec<(ValueId, usize)>,
+}
+
+impl Action {
+    /// Short display form, e.g. `C7/o1 @ axis b`.
+    pub fn describe(&self, mesh: &Mesh) -> String {
+        format!(
+            "color {} order {:b} axis {} ({} dims)",
+            self.color,
+            self.order_bits,
+            mesh.axis_name(self.axis),
+            self.assignment.len()
+        )
+    }
+}
+
+/// Configuration for action-space construction.
+#[derive(Clone, Debug)]
+pub struct ActionSpaceConfig {
+    /// Minimum unique definition dims for a color to yield actions (§4.2
+    /// uses 10; small test models want 1).
+    pub min_color_dims: usize,
+    /// Cap on resolution groups enumerated per color (2^k orders).
+    pub max_groups_per_color: usize,
+    /// Enumerate conflict-resolution orders (§4.2). Disabling this is the
+    /// ablation that degrades TOAST to AutoMap-style single-resolution
+    /// actions.
+    pub enumerate_resolutions: bool,
+    /// Mirror actions across parameter groups (§4.4 ablation switch).
+    pub mirror_param_groups: bool,
+}
+
+impl Default for ActionSpaceConfig {
+    fn default() -> Self {
+        ActionSpaceConfig {
+            min_color_dims: 10,
+            max_groups_per_color: 4,
+            enumerate_resolutions: true,
+            mirror_param_groups: true,
+        }
+    }
+}
+
+/// Build the action space for `func` on `mesh`.
+pub fn build_actions(
+    func: &Func,
+    nda: &Nda,
+    mesh: &Mesh,
+    cfg: &ActionSpaceConfig,
+) -> Vec<Action> {
+    // param index -> group members (incl. itself)
+    let mut group_of_param: HashMap<usize, &Vec<usize>> = HashMap::new();
+    for g in &nda.param_groups {
+        for &p in g {
+            group_of_param.insert(p, g);
+        }
+    }
+
+    let mut seen: HashMap<(u64, AxisId), usize> = HashMap::new();
+    let mut actions: Vec<Action> = Vec::new();
+
+    for color in nda.significant_colors(cfg.min_color_dims) {
+        let groups = if cfg.enumerate_resolutions {
+            nda.groups_for_color(color)
+        } else {
+            Vec::new()
+        };
+        let groups = &groups[..groups.len().min(cfg.max_groups_per_color)];
+        let n_orders: u64 = 1 << groups.len();
+        for order_idx in 0..n_orders {
+            // Spread the order index bits onto the global group positions.
+            let mut order_bits = 0u64;
+            for (k, &g) in groups.iter().enumerate() {
+                if (order_idx >> k) & 1 == 1 {
+                    order_bits |= 1 << (g as u64 & 63);
+                }
+            }
+            // Base assignment + mirroring across parameter groups.
+            let base = nda.sharding_assignment(color, order_bits);
+            let mut expanded: BTreeSet<(ValueId, usize)> = base.iter().copied().collect();
+            let mut extra_colors: BTreeSet<ColorId> = BTreeSet::new();
+            for &(v, d) in &base {
+                if !cfg.mirror_param_groups {
+                    break;
+                }
+                let pi = v.index();
+                if pi < func.params.len() {
+                    if let Some(group) = group_of_param.get(&pi) {
+                        for &other in group.iter() {
+                            if other != pi && d < func.params[other].ty.rank() {
+                                let oc = nda.color_of(ValueId(other as u32), d);
+                                if oc != color {
+                                    extra_colors.insert(oc);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            for oc in extra_colors {
+                for pair in nda.sharding_assignment(oc, order_bits) {
+                    expanded.insert(pair);
+                }
+            }
+            let assignment: Vec<(ValueId, usize)> = expanded.into_iter().collect();
+            if assignment.len() < cfg.min_color_dims {
+                continue;
+            }
+            // Fingerprint for dedup (mirrored colors may coincide).
+            let fp = fingerprint(&assignment);
+
+            for axis in 0..mesh.rank() {
+                if mesh.axis_size(axis) <= 1 {
+                    continue;
+                }
+                // Size check: the color's dim must be divisible (cheap
+                // pre-filter; the spec re-checks against stacked axes).
+                if nda.colors[color].dim_size % mesh.axis_size(axis) as i64 != 0 {
+                    continue;
+                }
+                if let Some(&prev) = seen.get(&(fp, axis)) {
+                    let _ = prev; // identical action already present
+                    continue;
+                }
+                seen.insert((fp, axis), actions.len());
+                actions.push(Action {
+                    color,
+                    order_bits,
+                    axis,
+                    assignment: assignment.clone(),
+                });
+            }
+        }
+    }
+    actions
+}
+
+fn fingerprint(assignment: &[(ValueId, usize)]) -> u64 {
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let mut h = DefaultHasher::new();
+    for &(v, d) in assignment {
+        v.0.hash(&mut h);
+        d.hash(&mut h);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{FuncBuilder, TensorType};
+
+    fn mlp() -> Func {
+        let mut b = FuncBuilder::new("mlp");
+        let x = b.param("x", TensorType::f32(vec![256, 32]));
+        let w1 = b.param("w1", TensorType::f32(vec![32, 64]));
+        let w2 = b.param("w2", TensorType::f32(vec![64, 16]));
+        let y = b.matmul(x, w1);
+        let z = b.relu(y);
+        let w = b.matmul(z, w2);
+        b.build(vec![w])
+    }
+
+    #[test]
+    fn mlp_action_space() {
+        let f = mlp();
+        let nda = Nda::analyze(&f);
+        let mesh = Mesh::grid(&[("b", 4), ("m", 2)]);
+        let cfg = ActionSpaceConfig { min_color_dims: 1, ..Default::default() };
+        let actions = build_actions(&f, &nda, &mesh, &cfg);
+        // 4 colors x 2 axes, minus divisibility-filtered ones (none here:
+        // 256, 32, 64, 16 all divide by 4 and 2).
+        assert_eq!(actions.len(), 8);
+        assert!(actions.iter().all(|a| a.order_bits == 0));
+    }
+
+    #[test]
+    fn pruning_threshold_filters() {
+        let f = mlp();
+        let nda = Nda::analyze(&f);
+        let mesh = Mesh::grid(&[("b", 4)]);
+        let cfg = ActionSpaceConfig { min_color_dims: 4, ..Default::default() };
+        let actions = build_actions(&f, &nda, &mesh, &cfg);
+        // only B (4 members) and U (4 members) survive
+        assert_eq!(actions.len(), 2);
+    }
+
+    #[test]
+    fn attention_gets_two_orders() {
+        let f = crate::nda::conflicts::tests::attn(128, 32, 16, 16);
+        let nda = Nda::analyze(&f);
+        let mesh = Mesh::grid(&[("s", 4)]);
+        let cfg = ActionSpaceConfig { min_color_dims: 1, ..Default::default() };
+        let actions = build_actions(&f, &nda, &mesh, &cfg);
+        // The S color must appear with two resolution orders.
+        let s_color = nda.color_of(ValueId(0), 0);
+        let s_actions: Vec<_> = actions.iter().filter(|a| a.color == s_color).collect();
+        assert_eq!(s_actions.len(), 2);
+        assert_ne!(s_actions[0].order_bits, s_actions[1].order_bits);
+        assert_ne!(s_actions[0].assignment, s_actions[1].assignment);
+    }
+
+    #[test]
+    fn indivisible_axis_filtered() {
+        let f = mlp();
+        let nda = Nda::analyze(&f);
+        let mesh = Mesh::grid(&[("b", 3)]);
+        let cfg = ActionSpaceConfig { min_color_dims: 1, ..Default::default() };
+        let actions = build_actions(&f, &nda, &mesh, &cfg);
+        // 32 % 3, 64 % 3, 16 % 3, 256 % 3 all nonzero -> no actions
+        assert!(actions.is_empty());
+    }
+}

@@ -1,0 +1,436 @@
+//! Monte-Carlo Tree Search over partitioning actions (§4.1–4.3).
+//!
+//! * **State** is the colors-aware canonical representation: the sorted
+//!   set of applied action ids. Because each action's sharding assignment
+//!   is precomputed and actions commute (the spec is a set of per-dim
+//!   axis assignments), any action ordering that yields the same sharded
+//!   model hashes to the same state — duplicate-free by construction
+//!   (§4.3), with no transposition handling needed.
+//! * **Selection** is UCT over the available-action set; each state's
+//!   cost is evaluated once (materialize spec → partition → cost model)
+//!   and cached.
+//! * **Termination**: explicit stop action, depth cap (30), or no legal
+//!   actions. Rewards subtract a small per-step penalty to prefer shorter
+//!   trajectories (better credit assignment, §4.1).
+//! * **Early stop**: the search ends when a full round of trajectories
+//!   fails to improve the best-known cost.
+//! * **Parallelism**: rollouts run on worker threads sharing the tree
+//!   behind a mutex; evaluations (the expensive part) run outside the
+//!   lock.
+
+use super::actions::Action;
+use crate::cost::{Cost, CostModel};
+use crate::ir::Func;
+use crate::mesh::Mesh;
+use crate::sharding::{partition, ShardingSpec};
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Search configuration.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    /// Max trajectory depth (paper: 30).
+    pub max_depth: usize,
+    /// Total state-evaluation budget.
+    pub budget: usize,
+    /// Trajectories per round (early-stop granularity).
+    pub round: usize,
+    /// Worker threads.
+    pub threads: usize,
+    /// UCT exploration constant.
+    pub exploration: f64,
+    /// Stop after this many rounds without improvement.
+    pub patience: usize,
+    /// Per-action reward penalty (shorter-trajectory incentive).
+    pub length_penalty: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            max_depth: 30,
+            budget: 2000,
+            round: 64,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            exploration: 0.5,
+            patience: 3,
+            length_penalty: 0.01,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of a search.
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    /// Best action sequence (indices into the action space, applied in
+    /// order).
+    pub actions: Vec<usize>,
+    /// The sharding spec realizing it.
+    pub spec: ShardingSpec,
+    /// Cost of the partitioned module.
+    pub cost: Cost,
+    /// Cost of the unsharded module (baseline for RT).
+    pub base: Cost,
+    /// Relative cost C(s) (§4.5); 1.0 = unsharded.
+    pub relative: f64,
+    /// Number of state evaluations performed.
+    pub evals: usize,
+    /// Wall-clock search time.
+    pub wall: Duration,
+}
+
+/// Canonical state key: sorted applied-action ids.
+fn state_key(applied: &[usize]) -> u64 {
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+    let mut sorted = applied.to_vec();
+    sorted.sort_unstable();
+    let mut h = DefaultHasher::new();
+    sorted.hash(&mut h);
+    h.finish()
+}
+
+#[derive(Clone, Debug, Default)]
+struct NodeStats {
+    visits: f64,
+    value_sum: f64,
+    /// Per-action child statistics: action id -> (visits, value_sum).
+    edges: HashMap<usize, (f64, f64)>,
+}
+
+struct Shared<'a> {
+    func: &'a Func,
+    mesh: &'a Mesh,
+    model: &'a CostModel,
+    actions: &'a [Action],
+    base: Cost,
+    tree: Mutex<HashMap<u64, NodeStats>>,
+    eval_cache: Mutex<HashMap<u64, f64>>,
+    best: Mutex<(f64, Vec<usize>)>,
+    evals: AtomicUsize,
+}
+
+/// Evaluate a state: apply actions → spec; partition; cost; C(s).
+/// Illegal action sequences evaluate to +inf (they are filtered during
+/// selection, but racing threads may still produce them).
+fn evaluate(shared: &Shared, applied: &[usize]) -> (f64, Option<ShardingSpec>) {
+    let mut spec = ShardingSpec::unsharded(shared.func);
+    for &ai in applied {
+        let a = &shared.actions[ai];
+        if spec
+            .apply_assignment(shared.func, shared.mesh, &a.assignment, a.axis)
+            .is_err()
+        {
+            return (f64::INFINITY, None);
+        }
+    }
+    match partition(shared.func, &spec, shared.mesh) {
+        Ok((local, _stats)) => {
+            let cost = shared.model.evaluate(&local, shared.mesh);
+            (shared.model.relative(&cost, &shared.base), Some(spec))
+        }
+        Err(_) => (f64::INFINITY, None),
+    }
+}
+
+/// Legal actions at a state, given the state's realized `spec`
+/// (read-only probes — no clones on the hot path; §Perf).
+fn legal_actions(shared: &Shared, applied: &[usize], spec: &ShardingSpec) -> Vec<usize> {
+    (0..shared.actions.len())
+        .filter(|ai| !applied.contains(ai))
+        .filter(|&ai| {
+            let a = &shared.actions[ai];
+            spec.check_assignment(shared.func, shared.mesh, &a.assignment, a.axis)
+        })
+        .collect()
+}
+
+/// Evaluate (with cache) a state; updates the global best.
+fn eval_cached(shared: &Shared, applied: &[usize], key: u64, evals: &mut usize) -> f64 {
+    let cached = shared.eval_cache.lock().unwrap().get(&key).copied();
+    let c = match cached {
+        Some(c) => c,
+        None => {
+            let (c, _) = evaluate(shared, applied);
+            *evals += 1;
+            shared.evals.fetch_add(1, Ordering::Relaxed);
+            shared.eval_cache.lock().unwrap().insert(key, c);
+            c
+        }
+    };
+    if c.is_finite() {
+        let mut best = shared.best.lock().unwrap();
+        if c < best.0 {
+            *best = (c, applied.to_vec());
+        }
+    }
+    c
+}
+
+/// Run one trajectory; returns the number of evaluations spent.
+///
+/// Unlike textbook MCTS (evaluate only at rollout terminals), every state
+/// visited along the trajectory is evaluated (cached): the cost model is
+/// the value function, evaluations are cheap relative to rollouts, and
+/// per-state evaluation gives the precise credit assignment the paper's
+/// shorter-trajectory heuristic is after (§4.1).
+fn trajectory(shared: &Shared, cfg: &SearchConfig, rng: &mut Rng) -> usize {
+    const STOP: usize = usize::MAX;
+    let mut applied: Vec<usize> = Vec::new();
+    let mut path: Vec<(u64, usize)> = Vec::new(); // (state, action edge)
+    let mut evals = 0usize;
+    let mut min_c = f64::INFINITY;
+    // the running spec is maintained incrementally along the trajectory
+    let mut spec = ShardingSpec::unsharded(shared.func);
+
+    let terminal_reward = |min_c: f64, depth: usize| -> f64 {
+        // Clamp: a catastrophic state (rel cost 77) should not poison the
+        // path statistics more than a merely-bad one.
+        -min_c.min(2.0) - cfg.length_penalty * depth as f64
+    };
+
+    loop {
+        let key = state_key(&applied);
+        let depth = applied.len();
+        // Evaluate the current state (the paper's colors-aware state is
+        // duplicate-free, so the cache hits whenever any action ordering
+        // reaches the same sharding).
+        let c = eval_cached(shared, &applied, key, &mut evals);
+        min_c = min_c.min(c);
+
+        let stop_here = depth >= cfg.max_depth;
+        let candidates =
+            if stop_here { Vec::new() } else { legal_actions(shared, &applied, &spec) };
+
+        // Choose among STOP + candidates by UCT.
+        let chosen = {
+            let tree = shared.tree.lock().unwrap();
+            let node = tree.get(&key).cloned().unwrap_or_default();
+            let total_visits = node.visits.max(1.0);
+            let mut best_a = STOP;
+            let mut best_score = f64::NEG_INFINITY;
+            let mut options: Vec<usize> = Vec::with_capacity(candidates.len() + 1);
+            options.push(STOP);
+            options.extend(&candidates);
+            for &a in &options {
+                let (v, s) = node.edges.get(&a).copied().unwrap_or((0.0, 0.0));
+                // Unexplored edges default to the current state's own
+                // (negated, clamped) cost rather than 0: an optimistic
+                // but calibrated prior.
+                let mean = if v > 0.0 { s / v } else { -c.min(2.0) + 0.05 };
+                let explore =
+                    cfg.exploration * ((total_visits + 1.0).ln() / (v + 1.0)).sqrt();
+                // small jitter breaks ties randomly
+                let score = mean + explore + rng.f64() * 1e-9;
+                if score > best_score {
+                    best_score = score;
+                    best_a = a;
+                }
+            }
+            best_a
+        };
+
+        if chosen == STOP {
+            let reward = terminal_reward(min_c, depth);
+            // Backprop along the path plus the terminal stop edge.
+            let mut tree = shared.tree.lock().unwrap();
+            {
+                let node = tree.entry(key).or_default();
+                node.visits += 1.0;
+                node.value_sum += reward;
+                let e = node.edges.entry(STOP).or_insert((0.0, 0.0));
+                e.0 += 1.0;
+                e.1 += reward;
+            }
+            for &(skey, edge) in path.iter().rev() {
+                let node = tree.entry(skey).or_default();
+                node.visits += 1.0;
+                node.value_sum += reward;
+                let e = node.edges.entry(edge).or_insert((0.0, 0.0));
+                e.0 += 1.0;
+                e.1 += reward;
+            }
+            return evals;
+        }
+
+        path.push((key, chosen));
+        applied.push(chosen);
+        let a = &shared.actions[chosen];
+        // legality was just probed; racing cache writes don't affect spec
+        let _ = spec.apply_assignment(shared.func, shared.mesh, &a.assignment, a.axis);
+    }
+}
+
+/// Run the MCTS search. `actions` comes from
+/// [`super::actions::build_actions`].
+pub fn search(
+    func: &Func,
+    mesh: &Mesh,
+    model: &CostModel,
+    actions: &[Action],
+    cfg: &SearchConfig,
+) -> SearchOutcome {
+    let t0 = Instant::now();
+    let base = {
+        let unsharded = ShardingSpec::unsharded(func);
+        let (local, _) = partition(func, &unsharded, mesh).expect("identity partition");
+        model.evaluate(&local, mesh)
+    };
+    let shared = Shared {
+        func,
+        mesh,
+        model,
+        actions,
+        base,
+        tree: Mutex::new(HashMap::new()),
+        eval_cache: Mutex::new(HashMap::new()),
+        best: Mutex::new((f64::INFINITY, Vec::new())),
+        evals: AtomicUsize::new(0),
+    };
+
+    // Seed: evaluate the empty state so "do nothing" is the floor.
+    let (c0, _) = evaluate(&shared, &[]);
+    shared.eval_cache.lock().unwrap().insert(state_key(&[]), c0);
+    *shared.best.lock().unwrap() = (c0, Vec::new());
+
+    let mut rounds_without_improvement = 0usize;
+    let mut round_idx = 0usize;
+    while shared.evals.load(Ordering::Relaxed) < cfg.budget
+        && rounds_without_improvement < cfg.patience
+    {
+        let best_before = shared.best.lock().unwrap().0;
+        let per_thread = cfg.round.div_ceil(cfg.threads.max(1));
+        std::thread::scope(|scope| {
+            for t in 0..cfg.threads.max(1) {
+                let shared = &shared;
+                let cfg2 = cfg.clone();
+                let seed =
+                    cfg.seed ^ (round_idx as u64) << 32 ^ (t as u64) << 16 ^ 0xABCD;
+                scope.spawn(move || {
+                    let mut rng = Rng::new(seed);
+                    for _ in 0..per_thread {
+                        if shared.evals.load(Ordering::Relaxed) >= cfg2.budget {
+                            break;
+                        }
+                        trajectory(shared, &cfg2, &mut rng);
+                    }
+                });
+            }
+        });
+        let best_after = shared.best.lock().unwrap().0;
+        if best_after + 1e-9 < best_before {
+            rounds_without_improvement = 0;
+        } else {
+            rounds_without_improvement += 1;
+        }
+        round_idx += 1;
+    }
+
+    let (best_cost, best_actions) = shared.best.lock().unwrap().clone();
+    // Rebuild the winning spec.
+    let (rel, spec) = evaluate(&shared, &best_actions);
+    debug_assert!((rel - best_cost).abs() < 1e-9 || !rel.is_finite());
+    let spec = spec.unwrap_or_else(|| ShardingSpec::unsharded(func));
+    let (local, _) = partition(func, &spec, mesh).expect("winning spec partitions");
+    let cost = model.evaluate(&local, mesh);
+
+    SearchOutcome {
+        actions: best_actions,
+        spec,
+        cost,
+        base,
+        relative: best_cost,
+        evals: shared.evals.load(Ordering::Relaxed),
+        wall: t0.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{FuncBuilder, TensorType, ValueId};
+    use crate::mesh::{HardwareKind, HardwareProfile};
+    use crate::nda::Nda;
+    use crate::search::actions::{build_actions, ActionSpaceConfig};
+
+    fn mlp(batch: i64, din: i64, dh: i64, dout: i64) -> Func {
+        let mut b = FuncBuilder::new("mlp");
+        let x = b.param("x", TensorType::f32(vec![batch, din]));
+        let w1 = b.param("w1", TensorType::f32(vec![din, dh]));
+        let w2 = b.param("w2", TensorType::f32(vec![dh, dout]));
+        let y = b.matmul(x, w1);
+        let z = b.relu(y);
+        let w = b.matmul(z, w2);
+        b.build(vec![w])
+    }
+
+    fn quick_cfg() -> SearchConfig {
+        SearchConfig { budget: 200, round: 32, threads: 2, patience: 2, seed: 7, ..Default::default() }
+    }
+
+    #[test]
+    fn finds_batch_sharding_for_mlp() {
+        let f = mlp(4096, 512, 2048, 512);
+        let mesh = Mesh::grid(&[("b", 8)]);
+        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let nda = Nda::analyze(&f);
+        let actions = build_actions(
+            &f,
+            &nda,
+            &mesh,
+            &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        );
+        let out = search(&f, &mesh, &model, &actions, &quick_cfg());
+        assert!(out.relative < 0.5, "expected big win, got {}", out.relative);
+        assert!(!out.actions.is_empty());
+        // batch dim of x must be sharded in the winning spec
+        assert!(!out.spec.dims[0].iter().all(|a| a.is_empty()));
+    }
+
+    #[test]
+    fn two_axis_mesh_uses_both() {
+        let f = mlp(4096, 1024, 8192, 1024);
+        let mesh = Mesh::grid(&[("b", 4), ("m", 4)]);
+        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let nda = Nda::analyze(&f);
+        let actions = build_actions(
+            &f,
+            &nda,
+            &mesh,
+            &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        );
+        let out = search(&f, &mesh, &model, &actions, &quick_cfg());
+        // batch + megatron should both fire: relative well below 1/4.
+        assert!(out.relative < 0.25, "got {}", out.relative);
+        let axes_used: std::collections::BTreeSet<usize> = out
+            .actions
+            .iter()
+            .map(|&ai| actions[ai].axis)
+            .collect();
+        assert_eq!(axes_used.len(), 2, "both mesh axes should be used");
+    }
+
+    #[test]
+    fn empty_action_space_returns_identity() {
+        let f = mlp(17, 13, 11, 7); // primes: nothing divides
+        let mesh = Mesh::grid(&[("b", 4)]);
+        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let nda = Nda::analyze(&f);
+        let actions = build_actions(
+            &f,
+            &nda,
+            &mesh,
+            &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        );
+        assert!(actions.is_empty());
+        let out = search(&f, &mesh, &model, &actions, &quick_cfg());
+        assert_eq!(out.relative, 1.0);
+        assert!(out.actions.is_empty());
+    }
+}

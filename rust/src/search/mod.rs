@@ -1,0 +1,33 @@
+//! TOAST's automatic partitioner: MCTS over NDA-derived actions (§4).
+//!
+//! * [`actions`] — the axis-aware, color-based action space (§4.2) built
+//!   once per model from the NDA, with precomputed conflict resolutions
+//!   and parameter-group mirroring.
+//! * [`mcts`] — the Monte-Carlo Tree Search with the colors-aware
+//!   canonical state (§4.3), early termination, and parallel rollouts.
+//!
+//! The one-call entry point is [`auto_partition`].
+
+pub mod actions;
+pub mod mcts;
+
+pub use actions::{build_actions, Action, ActionSpaceConfig};
+pub use mcts::{search, SearchConfig, SearchOutcome};
+
+use crate::cost::CostModel;
+use crate::ir::Func;
+use crate::mesh::Mesh;
+use crate::nda::Nda;
+
+/// Analyze `func`, build the action space, and run the MCTS search.
+pub fn auto_partition(
+    func: &Func,
+    mesh: &Mesh,
+    model: &CostModel,
+    action_cfg: &ActionSpaceConfig,
+    search_cfg: &SearchConfig,
+) -> SearchOutcome {
+    let nda = Nda::analyze(func);
+    let actions = build_actions(func, &nda, mesh, action_cfg);
+    search(func, mesh, model, &actions, search_cfg)
+}

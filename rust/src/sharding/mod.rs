@@ -1,0 +1,253 @@
+//! Sharding specifications and the SPMD partitioner.
+//!
+//! A [`ShardingSpec`] assigns to every value in a function, per tensor
+//! dimension, the set of mesh axes that shard it (GSPMD-style). Specs are
+//! constructed by applying *actions* — the output of the NDA + search
+//! layers — via [`ShardingSpec::apply_assignment`].
+//!
+//! [`partition::partition`] rewrites a logical function into the
+//! *device-local* function all devices execute, inserting collectives
+//! (`all_reduce`, `all_gather`, `reduce_scatter`, `all_to_all`,
+//! `shard_slice`) exactly where the per-op sharding rules require them.
+//! [`validate::validate_spec`] proves rewrites semantics-preserving by
+//! executing both versions on the reference interpreter.
+
+pub mod partition;
+pub mod validate;
+
+pub use partition::partition;
+pub use validate::validate_spec;
+
+use crate::ir::{AxisId, Func, ValueId};
+use crate::mesh::Mesh;
+use std::fmt;
+
+/// Why an action could not be applied to a spec.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardError {
+    /// Axis already shards some dimension of this value.
+    AxisInUse { value: ValueId, axis: AxisId },
+    /// Dimension size not divisible by the axis size.
+    NotDivisible { value: ValueId, dim: usize, size: i64, axis_size: usize },
+    /// Dimension already sharded by this axis (idempotent re-apply).
+    AlreadySharded { value: ValueId, dim: usize, axis: AxisId },
+}
+
+impl fmt::Display for ShardError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShardError::AxisInUse { value, axis } => {
+                write!(f, "axis {axis} already shards a dim of value {value:?}")
+            }
+            ShardError::NotDivisible { value, dim, size, axis_size } => write!(
+                f,
+                "dim {dim} of {value:?} (size {size}) not divisible by axis size {axis_size}"
+            ),
+            ShardError::AlreadySharded { value, dim, axis } => {
+                write!(f, "dim {dim} of {value:?} already sharded by axis {axis}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+/// Per-value, per-dimension mesh-axis assignment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardingSpec {
+    /// `dims[v][d]` = mesh axes sharding dimension `d` of value `v`,
+    /// in application order.
+    pub dims: Vec<Vec<Vec<AxisId>>>,
+}
+
+impl ShardingSpec {
+    /// Fully-replicated spec for `func`.
+    pub fn unsharded(func: &Func) -> Self {
+        let mut dims = Vec::with_capacity(func.num_values());
+        for v in 0..func.num_values() {
+            let rank = func.ty(ValueId(v as u32)).rank();
+            dims.push(vec![Vec::new(); rank]);
+        }
+        ShardingSpec { dims }
+    }
+
+    /// Axes sharding `(v, d)`.
+    pub fn axes_of(&self, v: ValueId, d: usize) -> &[AxisId] {
+        &self.dims[v.index()][d]
+    }
+
+    /// Is `axis` already used on any dimension of `v`?
+    pub fn axis_used(&self, v: ValueId, axis: AxisId) -> bool {
+        self.dims[v.index()].iter().any(|axes| axes.contains(&axis))
+    }
+
+    /// Total shard count of dimension `d` of `v` (product of axis sizes).
+    pub fn shard_factor(&self, mesh: &Mesh, v: ValueId, d: usize) -> i64 {
+        self.dims[v.index()][d].iter().map(|&a| mesh.axis_size(a) as i64).product()
+    }
+
+    /// Local (per-device) shape of value `v`.
+    pub fn local_shape(&self, func: &Func, mesh: &Mesh, v: ValueId) -> Vec<i64> {
+        let ty = func.ty(v);
+        (0..ty.rank()).map(|d| ty.shape[d] / self.shard_factor(mesh, v, d)).collect()
+    }
+
+    /// Local byte size of value `v`.
+    pub fn local_bytes(&self, func: &Func, mesh: &Mesh, v: ValueId) -> u64 {
+        let ty = func.ty(v);
+        let elems: i64 = self.local_shape(func, mesh, v).iter().product();
+        elems.max(0) as u64 * ty.dtype.bytes()
+    }
+
+    /// Check that sharding `(v, dim)` by `axis` is legal, without applying.
+    pub fn check(
+        &self,
+        func: &Func,
+        mesh: &Mesh,
+        v: ValueId,
+        dim: usize,
+        axis: AxisId,
+    ) -> Result<(), ShardError> {
+        if self.dims[v.index()][dim].contains(&axis) {
+            return Err(ShardError::AlreadySharded { value: v, dim, axis });
+        }
+        if self.axis_used(v, axis) {
+            return Err(ShardError::AxisInUse { value: v, axis });
+        }
+        let size = func.ty(v).shape[dim];
+        let factor = self.shard_factor(mesh, v, dim) * mesh.axis_size(axis) as i64;
+        if size % factor != 0 {
+            return Err(ShardError::NotDivisible {
+                value: v,
+                dim,
+                size,
+                axis_size: mesh.axis_size(axis),
+            });
+        }
+        Ok(())
+    }
+
+    /// Read-only legality check of a whole assignment along `axis`
+    /// (equivalent to `apply_assignment` succeeding, without mutating or
+    /// cloning). Used by the search's hot path.
+    pub fn check_assignment(
+        &self,
+        func: &Func,
+        mesh: &Mesh,
+        assignment: &[(ValueId, usize)],
+        axis: AxisId,
+    ) -> bool {
+        // assignments shard each value at most once (NDA invariant), so
+        // sequential checks against the unmodified spec are exact.
+        assignment.iter().all(|&(v, d)| self.check(func, mesh, v, d, axis).is_ok())
+    }
+
+    /// Apply an NDA sharding assignment (`(value, dim)` pairs from
+    /// [`crate::nda::Nda::sharding_assignment`]) along `axis`.
+    ///
+    /// All-or-nothing: every pair is checked first; on error nothing is
+    /// modified (so the search can probe actions cheaply).
+    pub fn apply_assignment(
+        &mut self,
+        func: &Func,
+        mesh: &Mesh,
+        assignment: &[(ValueId, usize)],
+        axis: AxisId,
+    ) -> Result<(), ShardError> {
+        for &(v, d) in assignment {
+            self.check(func, mesh, v, d, axis)?;
+        }
+        for &(v, d) in assignment {
+            self.dims[v.index()][d].push(axis);
+        }
+        Ok(())
+    }
+
+    /// Human-readable annotation of a value's sharding, e.g. `[256{b}, 32]`.
+    pub fn describe_value(&self, func: &Func, mesh: &Mesh, v: ValueId) -> String {
+        let ty = func.ty(v);
+        let parts: Vec<String> = (0..ty.rank())
+            .map(|d| {
+                let axes = &self.dims[v.index()][d];
+                if axes.is_empty() {
+                    format!("{}", ty.shape[d])
+                } else {
+                    let names: Vec<&str> =
+                        axes.iter().map(|&a| mesh.axis_name(a)).collect();
+                    format!("{}{{{}}}", ty.shape[d], names.join(","))
+                }
+            })
+            .collect();
+        format!("[{}]", parts.join(", "))
+    }
+
+    /// Number of sharded (value, dim) pairs — a cheap state fingerprint
+    /// component.
+    pub fn sharded_dim_count(&self) -> usize {
+        self.dims.iter().flatten().filter(|axes| !axes.is_empty()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{FuncBuilder, TensorType};
+
+    fn mlp() -> Func {
+        let mut b = FuncBuilder::new("mlp");
+        let x = b.param("x", TensorType::f32(vec![256, 32]));
+        let w1 = b.param("w1", TensorType::f32(vec![32, 64]));
+        let w2 = b.param("w2", TensorType::f32(vec![64, 16]));
+        let y = b.matmul(x, w1);
+        let z = b.relu(y);
+        let w = b.matmul(z, w2);
+        b.build(vec![w])
+    }
+
+    #[test]
+    fn apply_batch_assignment() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 4), ("m", 2)]);
+        let mut spec = ShardingSpec::unsharded(&f);
+        let assignment =
+            vec![(ValueId(0), 0), (ValueId(3), 0), (ValueId(4), 0), (ValueId(5), 0)];
+        spec.apply_assignment(&f, &mesh, &assignment, 0).unwrap();
+        assert_eq!(spec.local_shape(&f, &mesh, ValueId(0)), vec![64, 32]);
+        assert_eq!(spec.local_shape(&f, &mesh, ValueId(1)), vec![32, 64]); // w1 replicated
+        assert_eq!(spec.describe_value(&f, &mesh, ValueId(0)), "[256{b}, 32]");
+    }
+
+    #[test]
+    fn axis_reuse_rejected() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 4)]);
+        let mut spec = ShardingSpec::unsharded(&f);
+        spec.apply_assignment(&f, &mesh, &[(ValueId(0), 0)], 0).unwrap();
+        let err = spec.apply_assignment(&f, &mesh, &[(ValueId(0), 1)], 0).unwrap_err();
+        assert!(matches!(err, ShardError::AxisInUse { .. }));
+        // failed apply must not modify the spec
+        assert!(spec.dims[0][1].is_empty());
+    }
+
+    #[test]
+    fn divisibility_enforced() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 3)]);
+        let mut spec = ShardingSpec::unsharded(&f);
+        let err = spec.apply_assignment(&f, &mesh, &[(ValueId(0), 1)], 0).unwrap_err();
+        // 32 % 3 != 0
+        assert!(matches!(err, ShardError::NotDivisible { .. }));
+    }
+
+    #[test]
+    fn multi_axis_same_dim() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 4), ("m", 2)]);
+        let mut spec = ShardingSpec::unsharded(&f);
+        spec.apply_assignment(&f, &mesh, &[(ValueId(0), 0)], 0).unwrap();
+        // second axis on the same dim is allowed (Figure 1 right)
+        spec.apply_assignment(&f, &mesh, &[(ValueId(0), 0)], 1).unwrap();
+        assert_eq!(spec.local_shape(&f, &mesh, ValueId(0)), vec![32, 32]);
+        assert_eq!(spec.describe_value(&f, &mesh, ValueId(0)), "[256{b,m}, 32]");
+    }
+}

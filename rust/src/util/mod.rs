@@ -1,0 +1,7 @@
+//! Small in-tree utilities (the environment has no network access, so the
+//! usual crates — rand, serde_json — are replaced by these).
+
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,196 @@
+//! Cross-module integration tests: NDA → actions → MCTS → partitioner →
+//! interpreter, end to end on the model zoo (scaled configurations), plus
+//! method-comparison sanity on the experiment grid.
+
+use toast::baselines::{run_method, Method};
+use toast::coordinator::experiments::{run_grid, BenchScale};
+use toast::cost::CostModel;
+use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::models::ModelKind;
+use toast::nda::Nda;
+use toast::search::{auto_partition, ActionSpaceConfig, SearchConfig};
+use toast::sharding::{partition, validate_spec, ShardingSpec};
+
+fn cost_model() -> CostModel {
+    CostModel::new(HardwareProfile::new(HardwareKind::A100))
+}
+
+fn quick_search() -> SearchConfig {
+    SearchConfig { budget: 120, round: 32, threads: 2, patience: 2, seed: 3, ..Default::default() }
+}
+
+fn loose_actions() -> ActionSpaceConfig {
+    ActionSpaceConfig { min_color_dims: 1, ..Default::default() }
+}
+
+/// The flagship invariant: every spec TOAST finds partitions into a
+/// device-local program that computes the same numbers as the original.
+#[test]
+fn toast_specs_are_semantics_preserving_across_model_zoo() {
+    for kind in [ModelKind::Mlp, ModelKind::Attention, ModelKind::Gns, ModelKind::Itx] {
+        let func = kind.build_scaled();
+        let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
+        let out = auto_partition(&func, &mesh, &cost_model(), &loose_actions(), &quick_search());
+        let v = validate_spec(&func, &out.spec, &mesh, 7)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", kind.name()));
+        assert!(
+            v.max_abs_diff < 5e-2,
+            "{}: diff {} too large (relative cost {})",
+            kind.name(),
+            v.max_abs_diff,
+            out.relative
+        );
+    }
+}
+
+#[test]
+fn transformer_training_step_partition_validates() {
+    // The tiny transformer is the heaviest interpreter workload; validate
+    // the searched spec numerically.
+    let func = ModelKind::T2B.build_scaled();
+    let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
+    let out = auto_partition(&func, &mesh, &cost_model(), &loose_actions(), &quick_search());
+    let v = validate_spec(&func, &out.spec, &mesh, 11).unwrap();
+    assert!(v.max_abs_diff < 5e-2, "diff {}", v.max_abs_diff);
+}
+
+#[test]
+fn unet_partition_validates() {
+    let func = ModelKind::UNet.build_scaled();
+    let mesh = Mesh::grid(&[("data", 2)]);
+    let out = auto_partition(&func, &mesh, &cost_model(), &loose_actions(), &quick_search());
+    let v = validate_spec(&func, &out.spec, &mesh, 13).unwrap();
+    assert!(v.max_abs_diff < 5e-2, "diff {}", v.max_abs_diff);
+}
+
+/// Sequence sharding (the paper's Figure 5b) must be reachable and
+/// numerically correct for both conflict resolutions.
+#[test]
+fn attention_conflict_resolutions_both_validate() {
+    let func = toast::models::transformer::simple_attention(64, 16, 8, 8);
+    let nda = Nda::analyze(&func);
+    let a = toast::ir::ValueId(8);
+    let s_color = nda.color_of(a, 0);
+    let mesh = Mesh::grid(&[("s", 4)]);
+    let mut distinct_stats = Vec::new();
+    for order in [0u64, u64::MAX] {
+        let assignment = nda.sharding_assignment(s_color, order);
+        let mut spec = ShardingSpec::unsharded(&func);
+        let ok: Vec<_> = assignment
+            .into_iter()
+            .filter(|&(v, d)| spec.check(&func, &mesh, v, d, 0).is_ok())
+            .collect();
+        spec.apply_assignment(&func, &mesh, &ok, 0).unwrap();
+        let v = validate_spec(&func, &spec, &mesh, 5).unwrap();
+        assert!(v.max_abs_diff < 1e-3, "order {order}: diff {}", v.max_abs_diff);
+        distinct_stats.push(v.stats);
+    }
+    assert_ne!(
+        distinct_stats[0], distinct_stats[1],
+        "the two resolutions must lower to different collectives"
+    );
+}
+
+/// All four methods run on the tiny grid and produce comparable reports.
+#[test]
+fn method_grid_produces_finite_costs() {
+    let rows = run_grid(
+        BenchScale::Tiny,
+        &[ModelKind::Mlp, ModelKind::Attention],
+        &[HardwareKind::A100, HardwareKind::TPUv3],
+        &Method::all(),
+    );
+    assert_eq!(rows.len(), 2 * 2 * 4);
+    for r in &rows {
+        assert!(r.step_ms.is_finite() && r.step_ms > 0.0, "{r:?}");
+        assert!(r.relative.is_finite(), "{r:?}");
+    }
+}
+
+/// TOAST should never lose badly to AutoMap/Alpa on the bench models —
+/// the paper's headline (§5.2), at reduced scale.
+#[test]
+fn toast_at_least_matches_automated_baselines_on_gns() {
+    let func = ModelKind::Gns.build_scaled();
+    let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
+    let model = cost_model();
+    let toast =
+        run_method(Method::Toast, ModelKind::Gns, &func, &mesh, &model, 150, 3);
+    for m in [Method::Alpa, Method::AutoMap] {
+        let b = run_method(m, ModelKind::Gns, &func, &mesh, &model, 150, 3);
+        assert!(
+            toast.relative <= b.relative * 1.15,
+            "TOAST {} vs {} {}",
+            toast.relative,
+            m.name(),
+            b.relative
+        );
+    }
+}
+
+/// The partition service handles a mixed workload concurrently.
+#[test]
+fn service_runs_mixed_workload() {
+    use toast::coordinator::{PartitionRequest, Service};
+    let svc = Service::start(3);
+    let mut n = 0;
+    for kind in [ModelKind::Mlp, ModelKind::Attention, ModelKind::Itx] {
+        for method in [Method::Toast, Method::Manual] {
+            svc.submit(PartitionRequest {
+                id: 0,
+                model: kind,
+                paper_scale: false,
+                mesh: vec![("data".into(), 2), ("model".into(), 2)],
+                hardware: HardwareKind::A100,
+                method,
+                budget: 60,
+                seed: 2,
+            });
+            n += 1;
+        }
+    }
+    let mut ok = 0;
+    for _ in 0..n {
+        let resp = svc.responses.recv().unwrap();
+        assert!(resp.result.is_ok());
+        ok += 1;
+    }
+    assert_eq!(ok, n);
+    svc.shutdown();
+}
+
+/// Paper-scale IR builds + NDA + action space within a sane time budget
+/// (the §5.3 claim that TOAST's setup is cheap and cached).
+#[test]
+fn paper_scale_analysis_is_fast() {
+    let t0 = std::time::Instant::now();
+    let func = ModelKind::T7B.build_paper();
+    let nda = Nda::analyze(&func);
+    let mesh = Mesh::grid(&[("data", 4), ("model", 4)]);
+    let actions =
+        toast::search::build_actions(&func, &nda, &mesh, &ActionSpaceConfig::default());
+    assert!(!actions.is_empty());
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "T7B setup took {:?}",
+        t0.elapsed()
+    );
+}
+
+/// Identity partition of every zoo model round-trips the module
+/// unchanged (shape-wise) and verifies as device-local.
+#[test]
+fn identity_partition_roundtrips_model_zoo() {
+    for kind in ModelKind::all() {
+        let func = kind.build_scaled();
+        let mesh = Mesh::grid(&[("d", 2)]);
+        let spec = ShardingSpec::unsharded(&func);
+        let (local, stats) = partition(&func, &spec, &mesh).unwrap();
+        assert_eq!(stats.total_collectives(), 0, "{}", kind.name());
+        assert_eq!(local.instrs.len(), func.instrs.len(), "{}", kind.name());
+        toast::ir::verifier::verify_device_local_with(&local, &mesh).unwrap();
+        for (a, b) in func.instrs.iter().zip(&local.instrs) {
+            assert_eq!(a.ty.shape, b.ty.shape, "{}", kind.name());
+        }
+    }
+}

@@ -1,0 +1,319 @@
+//! Property-based tests (in-tree harness — proptest is unavailable in the
+//! offline registry; DESIGN.md documents the substitution).
+//!
+//! A generator produces random straight-line tensor programs and random
+//! legal sharding specs; the properties assert the system's core
+//! invariants over hundreds of (program, spec) samples:
+//!
+//! * **P1 (soundness)**: partition(f, spec) executed on the lock-step
+//!   SPMD interpreter matches f's unpartitioned execution;
+//! * **P2**: NDA colors are size-uniform; conflicts pair same-colored
+//!   dims;
+//! * **P3**: every NDA sharding assignment shards at most one dim per
+//!   value, and applying it succeeds when sizes divide;
+//! * **P4**: the canonical search state is order-independent;
+//! * **P5**: the cost model is invariant under identity partitioning and
+//!   penalizes memory overflow.
+
+use toast::ir::interp::Tensor;
+use toast::ir::{DType, Func, FuncBuilder, ReduceKind, TensorType, ValueId};
+use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::nda::Nda;
+use toast::sharding::{partition, validate_spec, ShardingSpec};
+use toast::util::Rng;
+
+/// Random straight-line program generator. Sizes are products of small
+/// powers of two so random shardings are frequently legal.
+fn random_func(rng: &mut Rng) -> Func {
+    let dims = [2i64, 4, 8, 16];
+    let mut b = FuncBuilder::new("prop");
+    let n_params = 2 + rng.below(3);
+    let mut values: Vec<(ValueId, Vec<i64>)> = Vec::new();
+    for p in 0..n_params {
+        let rank = 1 + rng.below(3);
+        let shape: Vec<i64> = (0..rank).map(|_| dims[rng.below(dims.len())]).collect();
+        let v = b.param(format!("p{p}"), TensorType::f32(shape.clone()));
+        values.push((v, shape));
+    }
+    let n_ops = 3 + rng.below(10);
+    for _ in 0..n_ops {
+        let pick = rng.below(values.len());
+        let (x, xs) = values[pick].clone();
+        match rng.below(7) {
+            0 => {
+                // unary
+                let v = b.relu(x);
+                values.push((v, xs));
+            }
+            1 => {
+                // binary with a same-shaped partner (generate via relu if none)
+                let partner = values
+                    .iter()
+                    .filter(|(_, s)| *s == xs)
+                    .map(|(v, _)| *v)
+                    .collect::<Vec<_>>();
+                let y = partner[rng.below(partner.len())];
+                let v = b.add(x, y);
+                values.push((v, xs));
+            }
+            2 if xs.len() >= 2 => {
+                // transpose
+                let mut perm: Vec<usize> = (0..xs.len()).collect();
+                rng.shuffle(&mut perm);
+                let v = b.transpose(x, &perm);
+                let shape = perm.iter().map(|&p| xs[p]).collect();
+                values.push((v, shape));
+            }
+            3 if xs.len() >= 2 => {
+                // matmul with a fresh weight
+                let k = *xs.last().unwrap();
+                let n = dims[rng.below(dims.len())];
+                let w = b.constant(0.1, TensorType::f32(vec![k, n]));
+                let lc = xs.len() - 1;
+                let v = b.dot_general(x, w, &[], &[], &[lc], &[0]);
+                let mut shape = xs[..lc].to_vec();
+                shape.push(n);
+                values.push((v, shape));
+            }
+            4 if xs.len() >= 2 => {
+                // reduce one dim
+                let d = rng.below(xs.len());
+                let v = b.reduce(x, &[d], ReduceKind::Add);
+                let shape: Vec<i64> = xs
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != d)
+                    .map(|(_, &s)| s)
+                    .collect();
+                values.push((v, shape));
+            }
+            5 => {
+                // broadcast a new leading dim
+                let nd = dims[rng.below(dims.len())];
+                let mut shape = vec![nd];
+                shape.extend(&xs);
+                let bc_dims: Vec<usize> = (1..=xs.len()).collect();
+                let v = b.broadcast(x, &shape, &bc_dims);
+                values.push((v, shape));
+            }
+            _ => {
+                let v = b.unary(toast::ir::UnaryOp::Tanh, x);
+                values.push((v, xs));
+            }
+        }
+    }
+    let last = values.last().unwrap().0;
+    b.build(vec![last])
+}
+
+/// A random legal spec: try a handful of (value, dim, axis) shardings.
+fn random_spec(func: &Func, mesh: &Mesh, rng: &mut Rng) -> ShardingSpec {
+    let mut spec = ShardingSpec::unsharded(func);
+    let n_values = func.num_values();
+    for _ in 0..6 {
+        let v = ValueId(rng.below(n_values) as u32);
+        let rank = func.ty(v).rank();
+        if rank == 0 {
+            continue;
+        }
+        let d = rng.below(rank);
+        let axis = rng.below(mesh.rank());
+        if spec.check(func, mesh, v, d, axis).is_ok() {
+            spec.dims[v.index()][d].push(axis);
+        }
+    }
+    spec
+}
+
+/// P1: the partitioner is semantics-preserving for arbitrary programs and
+/// arbitrary legal specs.
+#[test]
+fn prop_partition_preserves_semantics() {
+    let mut rng = Rng::new(0xF00D);
+    let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
+    let mut checked = 0;
+    for case in 0..120 {
+        let func = random_func(&mut rng);
+        toast::ir::verifier::verify_logical(&func)
+            .unwrap_or_else(|e| panic!("case {case} generated invalid func: {e:#}"));
+        let spec = random_spec(&func, &mesh, &mut rng);
+        let v = validate_spec(&func, &spec, &mesh, case as u64)
+            .unwrap_or_else(|e| panic!("case {case}: {e:#}\n{func}"));
+        assert!(
+            v.max_abs_diff < 1e-2,
+            "case {case}: diff {} \n{func}",
+            v.max_abs_diff
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, 120);
+}
+
+/// P2: NDA invariants — colors are size-uniform and conflicts pair dims
+/// of the same color.
+#[test]
+fn prop_nda_invariants() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..150 {
+        let func = random_func(&mut rng);
+        let nda = Nda::analyze(&func);
+        // colors partition all def dims and agree on sizes
+        let mut seen = 0;
+        for (c, info) in nda.colors.iter().enumerate() {
+            for &(v, d) in &info.members {
+                assert_eq!(nda.color_of(v, d), c);
+                assert_eq!(func.ty(v).shape[d], info.dim_size, "color {c} size mismatch");
+                seen += 1;
+            }
+        }
+        let total_dims: usize =
+            (0..func.num_values()).map(|v| func.ty(ValueId(v as u32)).rank()).sum();
+        assert_eq!(seen, total_dims, "colors must partition all dims");
+        // conflicts pair same-colored, distinct I-classes
+        for cf in &nda.conflicts.conflicts {
+            assert_ne!(cf.class_a, cf.class_b);
+            assert_eq!(
+                nda.color[cf.class_a as usize], nda.color[cf.class_b as usize],
+                "conflict endpoints must share a color"
+            );
+            assert!(!cf.occurrences.is_empty());
+        }
+        // every conflict belongs to exactly one compatibility set
+        let mut counted = 0;
+        for set in &nda.conflicts.compat_sets {
+            counted += set.len();
+        }
+        assert_eq!(counted, nda.conflicts.conflicts.len());
+    }
+}
+
+/// P3: sharding assignments are per-value unique and applicable.
+#[test]
+fn prop_assignments_unique_and_applicable() {
+    let mut rng = Rng::new(0xCAFE);
+    let mesh = Mesh::grid(&[("a", 2)]);
+    for _ in 0..100 {
+        let func = random_func(&mut rng);
+        let nda = Nda::analyze(&func);
+        for color in nda.significant_colors(1) {
+            let assign = nda.sharding_assignment(color, 0);
+            let mut values: Vec<ValueId> = assign.iter().map(|&(v, _)| v).collect();
+            values.sort_unstable();
+            let before = values.len();
+            values.dedup();
+            assert_eq!(before, values.len(), "assignment must shard each value once");
+            // apply if every member divides
+            if assign
+                .iter()
+                .all(|&(v, d)| func.ty(v).shape[d] % mesh.axis_size(0) as i64 == 0)
+            {
+                let mut spec = ShardingSpec::unsharded(&func);
+                spec.apply_assignment(&func, &mesh, &assign, 0).unwrap();
+            }
+        }
+    }
+}
+
+/// P4: the search's canonical state is order-independent — applying the
+/// same action set in different orders yields identical specs.
+#[test]
+fn prop_action_order_irrelevant() {
+    let mut rng = Rng::new(0xD00D);
+    let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
+    for _ in 0..60 {
+        let func = random_func(&mut rng);
+        let nda = Nda::analyze(&func);
+        let actions = toast::search::build_actions(
+            &func,
+            &nda,
+            &mesh,
+            &toast::search::ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        );
+        if actions.len() < 2 {
+            continue;
+        }
+        let i = rng.below(actions.len());
+        let mut j = rng.below(actions.len());
+        if i == j {
+            j = (j + 1) % actions.len();
+        }
+        let apply = |order: [usize; 2]| -> Option<ShardingSpec> {
+            let mut spec = ShardingSpec::unsharded(&func);
+            for &k in &order {
+                let a = &actions[k];
+                spec.apply_assignment(&func, &mesh, &a.assignment, a.axis).ok()?;
+            }
+            Some(spec)
+        };
+        if let (Some(s1), Some(s2)) = (apply([i, j]), apply([j, i])) {
+            // multi-axis stacking on one dim may record axes in
+            // application order; compare as sets per dim
+            for (d1, d2) in s1.dims.iter().zip(&s2.dims) {
+                for (a1, a2) in d1.iter().zip(d2) {
+                    let mut x = a1.clone();
+                    let mut y = a2.clone();
+                    x.sort_unstable();
+                    y.sort_unstable();
+                    assert_eq!(x, y, "specs must agree regardless of action order");
+                }
+            }
+        }
+    }
+}
+
+/// P5: cost-model sanity over random programs.
+#[test]
+fn prop_cost_model_sane() {
+    let mut rng = Rng::new(0xABBA);
+    let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
+    let model = toast::cost::CostModel::new(HardwareProfile::new(HardwareKind::TPUv3));
+    for _ in 0..80 {
+        let func = random_func(&mut rng);
+        let spec = ShardingSpec::unsharded(&func);
+        let (local, stats) = partition(&func, &spec, &mesh).unwrap();
+        assert_eq!(stats.total_collectives(), 0);
+        let c = model.evaluate(&local, &mesh);
+        assert!(c.runtime_s > 0.0 && c.runtime_s.is_finite());
+        assert!(c.peak_bytes >= func.param_bytes());
+        assert_eq!(model.relative(&c, &c), 1.0);
+        // a sharded variant never increases peak memory per device
+        let rspec = random_spec(&func, &mesh, &mut rng);
+        if let Ok((rlocal, _)) = partition(&func, &rspec, &mesh) {
+            let rc = model.evaluate(&rlocal, &mesh);
+            assert!(rc.runtime_s.is_finite());
+        }
+    }
+}
+
+/// P6: the SPMD interpreter agrees with plain evaluation for replicated
+/// execution (all devices compute the full program).
+#[test]
+fn prop_replicated_spmd_matches_single_device() {
+    let mut rng = Rng::new(0x51DE);
+    let mesh = Mesh::grid(&[("a", 2)]);
+    for case in 0..40 {
+        let func = random_func(&mut rng);
+        let inputs: Vec<Tensor> = func
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let shape: Vec<usize> = p.ty.shape.iter().map(|&d| d as usize).collect();
+                if p.ty.dtype == DType::I32 {
+                    Tensor::zeros(shape)
+                } else {
+                    Tensor::randn(shape, case as u64 * 31 + i as u64)
+                }
+            })
+            .collect();
+        let expected = toast::ir::interp::eval_func(&func, &inputs).unwrap();
+        let sharded: Vec<Vec<Tensor>> =
+            inputs.iter().map(|t| vec![t.clone(), t.clone()]).collect();
+        let outs = toast::ir::interp::eval_spmd(&func, &mesh, &sharded).unwrap();
+        for (ri, exp) in expected.iter().enumerate() {
+            for dev in 0..2 {
+                assert!(exp.max_abs_diff(&outs[ri][dev]) < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! End-to-end runtime tests over the AOT artifacts (skipped gracefully if
+//! `make artifacts` hasn't run — e.g. a docs-only checkout).
+//!
+//! These prove the three-layer composition on the *real* XLA runtime:
+//! the L1 Pallas kernel and L2 JAX model, AOT-lowered to HLO text, load
+//! and execute through the Rust PJRT client, and the L3 data-parallel
+//! coordinator reproduces single-device numerics exactly.
+
+use toast::runtime::simexec::DataParallelTrainer;
+use toast::runtime::Runtime;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn artifacts_load_and_forward_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_dir(&dir).unwrap();
+    assert!(rt.artifacts.contains_key("fwd"));
+    assert!(rt.artifacts.contains_key("grad"));
+    assert!(rt.artifacts.contains_key("adam"));
+    assert!(rt.artifacts.contains_key("kernel_attn"));
+    assert!(!rt.manifest.param_names.is_empty());
+}
+
+#[test]
+fn kernel_artifact_computes_attention() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_dir(&dir).unwrap();
+    let cfg = &rt.manifest.config;
+    let (b, h, s, k) = (
+        cfg["batch"] as usize,
+        cfg["heads"] as usize,
+        cfg["seq"] as usize,
+        cfg["key_size"] as usize,
+    );
+    let n = b * h * s * k;
+    // uniform V => attention output must equal V everywhere
+    let q = xla::Literal::vec1(&vec![0.1f32; n])
+        .reshape(&[b as i64, h as i64, s as i64, k as i64])
+        .unwrap();
+    let kk = xla::Literal::vec1(&vec![0.2f32; n])
+        .reshape(&[b as i64, h as i64, s as i64, k as i64])
+        .unwrap();
+    let v = xla::Literal::vec1(&vec![3.5f32; n])
+        .reshape(&[b as i64, h as i64, s as i64, k as i64])
+        .unwrap();
+    let outs = rt.execute("kernel_attn", &[q, kk, v]).unwrap();
+    let data = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(data.len(), n);
+    for &x in data.iter().step_by(97) {
+        assert!((x - 3.5).abs() < 1e-4, "attention of uniform V must be V, got {x}");
+    }
+}
+
+#[test]
+fn data_parallel_matches_single_device() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_dir(&dir).unwrap();
+    let steps = 3;
+    let mut t1 = DataParallelTrainer::new(&rt, 1, 99).unwrap();
+    let r1 = t1.train(steps, 2).unwrap();
+    let mut t2 = DataParallelTrainer::new(&rt, 2, 99).unwrap();
+    let r2 = t2.train(steps, 2).unwrap();
+    for (a, b) in r1.losses.iter().zip(&r2.losses) {
+        assert!(
+            (a - b).abs() < 1e-3,
+            "1-device vs 2-device loss diverged: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn invalid_device_counts_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_dir(&dir).unwrap();
+    assert!(DataParallelTrainer::new(&rt, 3, 0).is_err());
+    assert!(DataParallelTrainer::new(&rt, 16, 0).is_err());
+}
