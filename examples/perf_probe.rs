@@ -1,6 +1,7 @@
 //! Profiling probe for the search hot path (used during the §Perf pass).
 use std::time::Instant;
-use toast::coordinator::experiments::{build_model, BenchScale};
+use toast::coordinator::experiments::{build_model, measure_eval_throughput, BenchScale};
+use toast::cost::symbolic::SymbolicEvaluator;
 use toast::cost::CostModel;
 use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
 use toast::models::ModelKind;
@@ -16,7 +17,7 @@ fn main() {
     let actions = build_actions(&func, &nda, &mesh, &ActionSpaceConfig::default());
     println!("{} actions, {} instrs", actions.len(), func.instrs.len());
 
-    // breakdown: spec clone, apply, partition, cost
+    // breakdown: spec clone, apply, partition, symbolic eval
     let t0 = Instant::now();
     let spec = ShardingSpec::unsharded(&func);
     for _ in 0..1000 { std::hint::black_box(spec.clone()); }
@@ -33,8 +34,7 @@ fn main() {
     let t0 = Instant::now();
     for _ in 0..100 {
         for a in &actions {
-            let mut s = spec.clone();
-            std::hint::black_box(s.apply_assignment(&func, &mesh, &a.assignment, a.axis).is_ok());
+            std::hint::black_box(spec.check_assignment(&func, &mesh, &a.assignment, a.axis));
         }
     }
     println!("probe-all ({}):  {:>10.1?}/it", actions.len(), t0.elapsed() / 100);
@@ -42,6 +42,16 @@ fn main() {
     let t0 = Instant::now();
     for _ in 0..100 { std::hint::black_box(partition(&func, &spec, &mesh).unwrap()); }
     println!("partition:       {:>10.1?}/it", t0.elapsed() / 100);
+
+    let sym = SymbolicEvaluator::new(&func, &mesh, &model);
+    let t0 = Instant::now();
+    for _ in 0..100 { std::hint::black_box(sym.evaluate(&spec).unwrap()); }
+    println!("symbolic eval:   {:>10.1?}/it", t0.elapsed() / 100);
+
+    // evaluator throughput: the transformer quickstart config, all three
+    // evaluators over the same trajectory of states
+    let tp = measure_eval_throughput(&func, &mesh, &model, &actions, 12, 20);
+    println!("{}", tp.format());
 
     // full search timing
     let t0 = Instant::now();

@@ -14,10 +14,13 @@
 //! reproduction target (DESIGN.md §3).
 
 use crate::baselines::{run_method, Method, MethodResult};
+use crate::cost::symbolic::SymbolicEvaluator;
 use crate::cost::CostModel;
 use crate::ir::Func;
 use crate::mesh::{HardwareKind, HardwareProfile, Mesh};
 use crate::models::{gns, itx, transformer, unet, ModelKind};
+use crate::search::{Action, IncrementalEvaluator};
+use crate::sharding::{partition, ShardingSpec};
 use crate::util::json::Json;
 
 /// How big the experiment models are.
@@ -245,6 +248,132 @@ pub fn run_seq_scaling(scale: BenchScale) -> Vec<(i64, String, Vec<GridRow>)> {
     out
 }
 
+/// Search state-evaluation throughput of the three evaluators over the
+/// same state set (see [`measure_eval_throughput`]).
+#[derive(Clone, Debug)]
+pub struct EvalThroughput {
+    /// States priced per second by materialize-partition-evaluate (the
+    /// validation oracle — the seed implementation's hot path).
+    pub oracle_evals_per_s: f64,
+    /// States priced per second by the full-pass symbolic evaluator.
+    pub symbolic_evals_per_s: f64,
+    /// States priced per second by the incremental engine walking the
+    /// trajectory with its delta API (the search's actual hot path).
+    pub incremental_evals_per_s: f64,
+}
+
+impl EvalThroughput {
+    pub fn symbolic_speedup(&self) -> f64 {
+        self.symbolic_evals_per_s / self.oracle_evals_per_s.max(1e-12)
+    }
+
+    pub fn incremental_speedup(&self) -> f64 {
+        self.incremental_evals_per_s / self.oracle_evals_per_s.max(1e-12)
+    }
+
+    /// One row per evaluator, ready for the perf probe / reports.
+    pub fn format(&self) -> String {
+        format!(
+            "evaluator throughput (evals/sec):\n  \
+             materialize-partition-evaluate {:>12.1}  (1.0x oracle)\n  \
+             symbolic full pass             {:>12.1}  ({:.1}x)\n  \
+             incremental engine             {:>12.1}  ({:.1}x)",
+            self.oracle_evals_per_s,
+            self.symbolic_evals_per_s,
+            self.symbolic_speedup(),
+            self.incremental_evals_per_s,
+            self.incremental_speedup(),
+        )
+    }
+}
+
+/// Measure state-evaluation throughput of the materialized oracle, the
+/// symbolic evaluator, and the incremental engine over an identical
+/// trajectory of states: a deterministic greedy walk applying the first
+/// still-legal action, up to `depth` actions. Each evaluator prices every
+/// prefix state `iters` times.
+pub fn measure_eval_throughput(
+    func: &Func,
+    mesh: &Mesh,
+    model: &CostModel,
+    actions: &[Action],
+    depth: usize,
+    iters: usize,
+) -> EvalThroughput {
+    use std::time::Instant;
+    // Fixed action walk: first legal action at each step.
+    let mut spec = ShardingSpec::unsharded(func);
+    let mut walk: Vec<usize> = Vec::new();
+    for _ in 0..depth {
+        let next = (0..actions.len()).find(|&ai| {
+            !walk.contains(&ai)
+                && spec.check_assignment(func, mesh, &actions[ai].assignment, actions[ai].axis)
+        });
+        let Some(ai) = next else { break };
+        spec.apply_assignment(func, mesh, &actions[ai].assignment, actions[ai].axis)
+            .expect("probed action applies");
+        walk.push(ai);
+    }
+    // Prefix specs (including the unsharded root), truncated at the first
+    // prefix the oracle cannot partition so all three evaluators price the
+    // identical, valid state set.
+    let mut specs: Vec<ShardingSpec> = vec![ShardingSpec::unsharded(func)];
+    let mut ok_walk: Vec<usize> = Vec::new();
+    for &ai in &walk {
+        let mut s = specs.last().unwrap().clone();
+        s.apply_assignment(func, mesh, &actions[ai].assignment, actions[ai].axis).unwrap();
+        if partition(func, &s, mesh).is_err() {
+            break;
+        }
+        ok_walk.push(ai);
+        specs.push(s);
+    }
+    let walk = ok_walk;
+    let n_states = specs.len() * iters;
+
+    let base = {
+        let (local, _) = partition(func, &ShardingSpec::unsharded(func), mesh)
+            .expect("identity partition");
+        model.evaluate(&local, mesh)
+    };
+
+    // Oracle: partition + evaluate per state.
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        for s in &specs {
+            let (local, _) = partition(func, s, mesh).expect("walk spec partitions");
+            std::hint::black_box(model.relative(&model.evaluate(&local, mesh), &base));
+        }
+    }
+    let oracle_evals_per_s = n_states as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    // Symbolic full pass.
+    let sym = SymbolicEvaluator::new(func, mesh, model);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        for s in &specs {
+            std::hint::black_box(sym.relative(s, &base));
+        }
+    }
+    let symbolic_evals_per_s = n_states as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    // Incremental engine: walk the trajectory like the search does.
+    let mut eng = IncrementalEvaluator::new(func, mesh, model, base)
+        .expect("logical module");
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        eng.reset();
+        std::hint::black_box(eng.relative());
+        for &ai in &walk {
+            eng.apply(&actions[ai].assignment, actions[ai].axis).expect("walk action applies");
+            std::hint::black_box(eng.relative());
+        }
+    }
+    let incremental_evals_per_s = n_states as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    EvalThroughput { oracle_evals_per_s, symbolic_evals_per_s, incremental_evals_per_s }
+}
+
 /// Render a Fig-8-style table (step time).
 pub fn format_fig8(rows: &[GridRow]) -> String {
     format_grid(
@@ -361,6 +490,25 @@ mod tests {
         assert!(table.contains("mlp"));
         let json = grid_json(&rows);
         assert!(json.contains("\"method\":\"TOAST\""));
+    }
+
+    #[test]
+    fn eval_throughput_measures_all_three_evaluators() {
+        let func = build_model(ModelKind::Mlp, BenchScale::Tiny);
+        let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
+        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let nda = crate::nda::Nda::analyze(&func);
+        let actions = crate::search::build_actions(
+            &func,
+            &nda,
+            &mesh,
+            &crate::search::ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        );
+        let tp = measure_eval_throughput(&func, &mesh, &model, &actions, 4, 2);
+        assert!(tp.oracle_evals_per_s > 0.0);
+        assert!(tp.symbolic_evals_per_s > 0.0);
+        assert!(tp.incremental_evals_per_s > 0.0);
+        assert!(tp.format().contains("evals/sec"));
     }
 
     #[test]

@@ -14,6 +14,15 @@
 //! The search layer only consumes *relative* cost: `C(s) = RT(s) + MP(s)`
 //! where `RT` is runtime relative to the unsharded module and `MP`
 //! penalizes exceeding device memory (zero below the limit).
+//!
+//! [`symbolic`] evaluates the same cost *directly from the logical
+//! function and a [`crate::sharding::ShardingSpec`]* — no device-local IR
+//! is materialized — by driving the partitioner's rewrite through a
+//! record-only sink and pricing the records with the shared primitives
+//! below ([`CostModel::matmul_time`], [`CostModel::all_reduce_cost`],
+//! ...). Both paths therefore agree to floating-point noise.
+
+pub mod symbolic;
 
 use crate::ir::{Func, OpKind};
 use crate::mesh::{HardwareProfile, Mesh};
@@ -97,6 +106,10 @@ impl CostModel {
     }
 
     /// `(compute_seconds, (comm_seconds, comm_bytes))` for one instruction.
+    ///
+    /// Classification only — the arithmetic lives in the shared pricing
+    /// methods below, which [`symbolic`] reuses so the symbolic evaluator
+    /// prices identically to this materialized path.
     fn instr_cost(&self, f: &Func, instr: &crate::ir::Instr, mesh: &Mesh) -> (f64, (f64, f64)) {
         let out_bytes = instr.ty.bytes() as f64;
         let in_bytes: f64 =
@@ -104,80 +117,86 @@ impl CostModel {
         match &instr.kind {
             OpKind::DotGeneral { .. } | OpKind::Conv2d { .. } => {
                 let flops = matmul_flops(f, instr);
-                let t_compute = flops / self.hw.effective_flops();
-                let t_mem = (in_bytes + out_bytes) / self.hw.hbm_bandwidth;
-                (t_compute.max(t_mem), (0.0, 0.0))
+                (self.matmul_time(flops, in_bytes, out_bytes), (0.0, 0.0))
             }
-            OpKind::AllReduce { axes, .. } => {
-                // ring all-reduce per axis, sequentially.
-                let mut t = 0.0;
-                let mut bytes = 0.0;
-                for &a in axes {
-                    let n = mesh.axis_size(a) as f64;
-                    if n <= 1.0 {
-                        continue;
-                    }
-                    let moved = 2.0 * out_bytes * (n - 1.0) / n;
-                    t += moved / self.hw.axis_bandwidth(a)
-                        + 2.0 * (n - 1.0) * self.hw.link_latency;
-                    bytes += moved;
-                }
-                (0.0, (t, bytes))
-            }
-            OpKind::AllGather { axis, .. } => {
-                let n = mesh.axis_size(*axis) as f64;
-                if n <= 1.0 {
-                    return (0.0, (0.0, 0.0));
-                }
-                // each device ends with out_bytes, receives (n-1)/n of it
-                let moved = out_bytes * (n - 1.0) / n;
-                (
-                    0.0,
-                    (
-                        moved / self.hw.axis_bandwidth(*axis)
-                            + (n - 1.0) * self.hw.link_latency,
-                        moved,
-                    ),
-                )
-            }
+            OpKind::AllReduce { axes, .. } => (0.0, self.all_reduce_cost(axes, mesh, out_bytes)),
+            OpKind::AllGather { axis, .. } => (0.0, self.all_gather_cost(*axis, mesh, out_bytes)),
             OpKind::ReduceScatter { axis, .. } => {
-                let n = mesh.axis_size(*axis) as f64;
-                if n <= 1.0 {
-                    return (0.0, (0.0, 0.0));
-                }
-                // input is the full partial tensor
-                let moved = in_bytes * (n - 1.0) / n;
-                (
-                    0.0,
-                    (
-                        moved / self.hw.axis_bandwidth(*axis)
-                            + (n - 1.0) * self.hw.link_latency,
-                        moved,
-                    ),
-                )
+                (0.0, self.reduce_scatter_cost(*axis, mesh, in_bytes))
             }
-            OpKind::AllToAll { axis, .. } => {
-                let n = mesh.axis_size(*axis) as f64;
-                if n <= 1.0 {
-                    return (0.0, (0.0, 0.0));
-                }
-                let moved = in_bytes * (n - 1.0) / n;
-                (
-                    0.0,
-                    (
-                        moved / self.hw.axis_bandwidth(*axis)
-                            + (n - 1.0) * self.hw.link_latency,
-                        moved,
-                    ),
-                )
-            }
-            OpKind::ShardSlice { .. } => {
-                // zero communication; local copy
-                (out_bytes / self.hw.hbm_bandwidth, (0.0, 0.0))
-            }
+            OpKind::AllToAll { axis, .. } => (0.0, self.all_to_all_cost(*axis, mesh, in_bytes)),
+            OpKind::ShardSlice { .. } => (self.shard_slice_time(out_bytes), (0.0, 0.0)),
             // memory-bound elementwise / data-movement ops
-            _ => ((in_bytes + out_bytes) / self.hw.hbm_bandwidth, (0.0, 0.0)),
+            _ => (self.membound_time(in_bytes, out_bytes), (0.0, 0.0)),
         }
+    }
+
+    // ---- shared pricing primitives (materialized + symbolic paths) ------
+
+    /// Roofline time of a matmul-like op: flops-bound, floored by HBM
+    /// traffic.
+    pub fn matmul_time(&self, flops: f64, in_bytes: f64, out_bytes: f64) -> f64 {
+        let t_compute = flops / self.hw.effective_flops();
+        let t_mem = (in_bytes + out_bytes) / self.hw.hbm_bandwidth;
+        t_compute.max(t_mem)
+    }
+
+    /// Time of a memory-bound op (everything that is not matmul-like or a
+    /// collective).
+    pub fn membound_time(&self, in_bytes: f64, out_bytes: f64) -> f64 {
+        (in_bytes + out_bytes) / self.hw.hbm_bandwidth
+    }
+
+    /// Time of a zero-communication shard slice (local copy).
+    pub fn shard_slice_time(&self, out_bytes: f64) -> f64 {
+        out_bytes / self.hw.hbm_bandwidth
+    }
+
+    /// Ring all-reduce over `axes`, sequentially: `(seconds, bytes)`.
+    pub fn all_reduce_cost(&self, axes: &[usize], mesh: &Mesh, out_bytes: f64) -> (f64, f64) {
+        let mut t = 0.0;
+        let mut bytes = 0.0;
+        for &a in axes {
+            let n = mesh.axis_size(a) as f64;
+            if n <= 1.0 {
+                continue;
+            }
+            let moved = 2.0 * out_bytes * (n - 1.0) / n;
+            t += moved / self.hw.axis_bandwidth(a) + 2.0 * (n - 1.0) * self.hw.link_latency;
+            bytes += moved;
+        }
+        (t, bytes)
+    }
+
+    /// Ring all-gather along `axis`: each device ends with `out_bytes`,
+    /// receiving `(n-1)/n` of it.
+    pub fn all_gather_cost(&self, axis: usize, mesh: &Mesh, out_bytes: f64) -> (f64, f64) {
+        let n = mesh.axis_size(axis) as f64;
+        if n <= 1.0 {
+            return (0.0, 0.0);
+        }
+        let moved = out_bytes * (n - 1.0) / n;
+        (moved / self.hw.axis_bandwidth(axis) + (n - 1.0) * self.hw.link_latency, moved)
+    }
+
+    /// Reduce-scatter along `axis`; `in_bytes` is the full partial tensor.
+    pub fn reduce_scatter_cost(&self, axis: usize, mesh: &Mesh, in_bytes: f64) -> (f64, f64) {
+        let n = mesh.axis_size(axis) as f64;
+        if n <= 1.0 {
+            return (0.0, 0.0);
+        }
+        let moved = in_bytes * (n - 1.0) / n;
+        (moved / self.hw.axis_bandwidth(axis) + (n - 1.0) * self.hw.link_latency, moved)
+    }
+
+    /// All-to-all along `axis`.
+    pub fn all_to_all_cost(&self, axis: usize, mesh: &Mesh, in_bytes: f64) -> (f64, f64) {
+        let n = mesh.axis_size(axis) as f64;
+        if n <= 1.0 {
+            return (0.0, 0.0);
+        }
+        let moved = in_bytes * (n - 1.0) / n;
+        (moved / self.hw.axis_bandwidth(axis) + (n - 1.0) * self.hw.link_latency, moved)
     }
 
     /// Relative cost `C(s) = RT(s) + MP(s)` (§4.5). `base` is the

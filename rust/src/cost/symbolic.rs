@@ -1,0 +1,601 @@
+//! Symbolic cost evaluation: price a sharding spec *without materializing
+//! the device-local function*.
+//!
+//! The materialized path the search originally used —
+//! `partition()` (full `FuncBuilder` IR copy) followed by
+//! [`CostModel::evaluate`] — allocates an entire device-local module per
+//! state evaluation. This module drives the *same* partition rewrite
+//! ([`crate::sharding::partition::run_partition`]) through a record-only
+//! [`PartitionSink`]: each would-be instruction becomes a lightweight
+//! `(price class, operands, local shape)` record, and a single replay
+//! pass prices the records with the cost model's shared primitives and
+//! reproduces [`CostModel::evaluate`]'s live-range peak-memory walk
+//! verbatim.
+//!
+//! Because control flow (reshard decisions via `op_rule`, contract-axis
+//! selection, collective placement, reshard-cache sharing) and pricing
+//! arithmetic are shared with the materialized oracle, the two paths
+//! agree to floating-point noise; the integration/property tests bound
+//! the divergence at 1e-6 relative cost. `partition()` +
+//! `CostModel::evaluate` remain the validation oracle — see
+//! [`crate::sharding::validate::validate_symbolic_cost`].
+
+use super::{Cost, CostModel};
+use crate::ir::{AxisId, DType, Func, Instr, OpKind, ReduceKind, ValueId};
+use crate::mesh::Mesh;
+use crate::nda::rules::{op_rule, OpRule};
+use crate::sharding::partition::{
+    apply_reshard_steps, reshard_steps, run_partition, PartitionSink, PartitionStats, Pctx,
+    ReqInterner,
+};
+use crate::sharding::ShardingSpec;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Element count of a local shape (mirrors [`crate::ir::TensorType::elems`]).
+pub(crate) fn shape_elems(shape: &[i64]) -> u64 {
+    shape.iter().map(|&d| d.max(0) as u64).product()
+}
+
+/// Byte size of a local shape (mirrors [`crate::ir::TensorType::bytes`]).
+pub(crate) fn shape_bytes(shape: &[i64], dtype: DType) -> u64 {
+    shape_elems(shape) * dtype.bytes()
+}
+
+/// Local result shape of a device-local op, inferred from *local* operand
+/// shapes — the symbolic twin of [`crate::ir::FuncBuilder`]'s shape
+/// inference, restricted to the ops the partitioner emits.
+/// `local_result_shape` is the spec-realized shape the rewrite passes to
+/// `local_op` (used by shape-carrying ops and the slice rescale rule).
+pub(crate) fn infer_local_shape(
+    instr: &Instr,
+    operand_shapes: &[Vec<i64>],
+    local_result_shape: &[i64],
+) -> Vec<i64> {
+    match &instr.kind {
+        OpKind::Unary(_) | OpKind::Convert => operand_shapes[0].clone(),
+        OpKind::Binary(_) | OpKind::Compare(_) => operand_shapes[0].clone(),
+        OpKind::Select => operand_shapes[1].clone(),
+        OpKind::DotGeneral { lhs_batch, rhs_batch, lhs_contract, rhs_contract } => {
+            let lt = &operand_shapes[0];
+            let rt = &operand_shapes[1];
+            let mut shape: Vec<i64> = lhs_batch.iter().map(|&d| lt[d]).collect();
+            for (d, &s) in lt.iter().enumerate() {
+                if !lhs_batch.contains(&d) && !lhs_contract.contains(&d) {
+                    shape.push(s);
+                }
+            }
+            for (d, &s) in rt.iter().enumerate() {
+                if !rhs_batch.contains(&d) && !rhs_contract.contains(&d) {
+                    shape.push(s);
+                }
+            }
+            shape
+        }
+        OpKind::Transpose { perm } => perm.iter().map(|&p| operand_shapes[0][p]).collect(),
+        OpKind::Reduce { dims, .. } => operand_shapes[0]
+            .iter()
+            .enumerate()
+            .filter(|(d, _)| !dims.contains(d))
+            .map(|(_, &s)| s)
+            .collect(),
+        OpKind::Broadcast { .. } => local_result_shape.to_vec(),
+        OpKind::Concat { dim } => {
+            let mut shape = operand_shapes[0].clone();
+            shape[*dim] = operand_shapes.iter().map(|s| s[*dim]).sum();
+            shape
+        }
+        OpKind::Slice { starts, limits, strides } => {
+            // Mirror the materialized path's limit rescaling: full-extent
+            // sharded dims slice at local extent.
+            let in_shape = &operand_shapes[0];
+            let st = starts;
+            let mut li = limits.clone();
+            for d in 0..in_shape.len() {
+                if li[d] - st[d] == 0 {
+                    continue;
+                }
+                if st[d] == 0 && strides[d] == 1 && local_result_shape[d] == in_shape[d] {
+                    li[d] = in_shape[d];
+                }
+            }
+            (0..in_shape.len())
+                .map(|d| (li[d] - st[d] + strides[d] - 1) / strides[d])
+                .collect()
+        }
+        OpKind::Conv2d { stride, padding } => {
+            let it = &operand_shapes[0];
+            let kt = &operand_shapes[1];
+            let ho = (it[1] + 2 * padding.0 as i64 - kt[0]) / stride.0 as i64 + 1;
+            let wo = (it[2] + 2 * padding.1 as i64 - kt[1]) / stride.1 as i64 + 1;
+            vec![it[0], ho, wo, kt[3]]
+        }
+        OpKind::Gather { axis } => {
+            let ot = &operand_shapes[0];
+            let it = &operand_shapes[1];
+            let mut shape: Vec<i64> = ot[..*axis].to_vec();
+            shape.extend_from_slice(it);
+            shape.extend_from_slice(&ot[*axis + 1..]);
+            shape
+        }
+        OpKind::Scatter { .. } => operand_shapes[0].clone(),
+        OpKind::Constant { .. } | OpKind::Iota { .. } | OpKind::Reshape => {
+            unreachable!("handled before local_op in the rewrite")
+        }
+        _ => unreachable!("collectives never appear in logical modules"),
+    }
+}
+
+/// FLOPs of the device-local instance of a matmul-like op (the symbolic
+/// twin of [`super::matmul_flops`], over local shapes). Zero for other
+/// ops.
+pub(crate) fn local_flops(
+    instr: &Instr,
+    operand_shapes: &[Vec<i64>],
+    out_shape: &[i64],
+) -> f64 {
+    match &instr.kind {
+        OpKind::DotGeneral { lhs_contract, .. } => {
+            let k: f64 = lhs_contract.iter().map(|&d| operand_shapes[0][d] as f64).product();
+            2.0 * shape_elems(out_shape) as f64 * k
+        }
+        OpKind::Conv2d { .. } => {
+            let kt = &operand_shapes[1];
+            let k = (kt[0] * kt[1] * kt[2]) as f64;
+            2.0 * shape_elems(out_shape) as f64 * k
+        }
+        _ => 0.0,
+    }
+}
+
+/// Pricing class of one symbolic record.
+#[derive(Clone, Debug)]
+pub(crate) enum PriceClass {
+    Matmul { flops: f64 },
+    MemBound,
+    ShardSlice,
+    AllReduce(Vec<AxisId>),
+    AllGather(AxisId),
+    ReduceScatter(AxisId),
+    AllToAll(AxisId),
+}
+
+/// Price one record: `(compute_s, comm_s, comm_bytes, flops)`. Arithmetic
+/// delegates to [`CostModel`]'s shared primitives so the symbolic path is
+/// numerically identical to [`CostModel::evaluate`]'s per-op pricing.
+pub(crate) fn price_record(
+    model: &CostModel,
+    mesh: &Mesh,
+    class: &PriceClass,
+    in_bytes: f64,
+    out_bytes: f64,
+) -> (f64, f64, f64, f64) {
+    match class {
+        PriceClass::Matmul { flops } => {
+            (model.matmul_time(*flops, in_bytes, out_bytes), 0.0, 0.0, *flops)
+        }
+        PriceClass::MemBound => (model.membound_time(in_bytes, out_bytes), 0.0, 0.0, 0.0),
+        PriceClass::ShardSlice => (model.shard_slice_time(out_bytes), 0.0, 0.0, 0.0),
+        PriceClass::AllReduce(axes) => {
+            let (t, b) = model.all_reduce_cost(axes, mesh, out_bytes);
+            (0.0, t, b, 0.0)
+        }
+        PriceClass::AllGather(axis) => {
+            let (t, b) = model.all_gather_cost(*axis, mesh, out_bytes);
+            (0.0, t, b, 0.0)
+        }
+        PriceClass::ReduceScatter(axis) => {
+            let (t, b) = model.reduce_scatter_cost(*axis, mesh, in_bytes);
+            (0.0, t, b, 0.0)
+        }
+        PriceClass::AllToAll(axis) => {
+            let (t, b) = model.all_to_all_cost(*axis, mesh, in_bytes);
+            (0.0, t, b, 0.0)
+        }
+    }
+}
+
+/// Live-range peak-memory walk over a symbolic instruction stream — the
+/// one shared implementation of [`CostModel::evaluate`]'s memory model
+/// for the symbolic paths (full-pass evaluator and incremental replay).
+///
+/// Stream layout: value ids `0..n_params` are parameters; entry `e`
+/// defines value `n_params + e` and consumes the operand ids in
+/// `ops_flat[ops_span[e]]` (duplicates preserved — the oracle frees a
+/// duplicate operand once per occurrence, and this walk mirrors that
+/// exactly). `bytes` holds per-value local byte sizes; `results` are the
+/// mapped function results (resident to the end, like parameters).
+pub(crate) fn memory_walk(
+    n_params: usize,
+    bytes: &[u64],
+    ops_flat: &[u32],
+    ops_span: &[(u32, u32)],
+    results: &[u32],
+) -> u64 {
+    let n_entries = ops_span.len();
+    debug_assert_eq!(bytes.len(), n_params + n_entries);
+    let mut last_use = vec![0usize; bytes.len()];
+    for (e, &(start, len)) in ops_span.iter().enumerate() {
+        for &o in &ops_flat[start as usize..(start + len) as usize] {
+            last_use[o as usize] = e;
+        }
+    }
+    let mut is_result = vec![false; bytes.len()];
+    for &r in results {
+        last_use[r as usize] = n_entries; // results live to the end
+        is_result[r as usize] = true;
+    }
+    let param_bytes: u64 = bytes[..n_params].iter().sum();
+    let mut live: u64 = param_bytes;
+    let mut peak: u64 = live;
+    for (e, &(start, len)) in ops_span.iter().enumerate() {
+        live += bytes[n_params + e];
+        peak = peak.max(live);
+        for &o in &ops_flat[start as usize..(start + len) as usize] {
+            let oi = o as usize;
+            if last_use[oi] == e && oi >= n_params && !is_result[oi] {
+                // free intermediate at its last use (params + results
+                // stay resident)
+                live = live.saturating_sub(bytes[oi]);
+            }
+        }
+    }
+    peak
+}
+
+/// One symbolic device-local value: local shape + dtype + bytes.
+struct SymValue {
+    shape: Vec<i64>,
+    dtype: DType,
+    bytes: u64,
+}
+
+/// One symbolic device-local instruction. Its result value id is
+/// `n_params + record index` (every record defines exactly one value).
+struct SymRecord {
+    class: PriceClass,
+    operands: Vec<u32>,
+}
+
+/// Record-only partition sink. The emission methods have a symbolic twin
+/// in the incremental engine's plan sink
+/// ([`crate::search::incremental`]) over plan-local value refs; keep the
+/// two in lockstep (the P7/P8 property tests pin both to the oracle).
+struct SymSink {
+    values: Vec<SymValue>,
+    records: Vec<SymRecord>,
+    map: Vec<u32>,
+    cache: HashMap<(u32, u32), u32>,
+    interner: ReqInterner,
+    n_params: usize,
+}
+
+impl SymSink {
+    fn new(func: &Func) -> SymSink {
+        SymSink {
+            values: Vec::with_capacity(func.num_values() * 2),
+            records: Vec::with_capacity(func.instrs.len() * 2),
+            map: Vec::with_capacity(func.num_values()),
+            cache: HashMap::new(),
+            interner: ReqInterner::new(),
+            n_params: func.params.len(),
+        }
+    }
+
+    fn push_value(&mut self, shape: Vec<i64>, dtype: DType) -> u32 {
+        let bytes = shape_bytes(&shape, dtype);
+        self.values.push(SymValue { shape, dtype, bytes });
+        (self.values.len() - 1) as u32
+    }
+
+    fn emit(&mut self, class: PriceClass, operands: Vec<u32>, shape: Vec<i64>, dtype: DType) -> u32 {
+        let v = self.push_value(shape, dtype);
+        debug_assert_eq!(v as usize, self.n_params + self.records.len());
+        self.records.push(SymRecord { class, operands });
+        v
+    }
+
+    fn dtype(&self, v: u32) -> DType {
+        self.values[v as usize].dtype
+    }
+
+    /// Price the recorded stream and run the shared [`memory_walk`],
+    /// mirroring [`CostModel::evaluate`] exactly.
+    fn finish(self, model: &CostModel, mesh: &Mesh, results: &[u32]) -> Cost {
+        let bytes: Vec<u64> = self.values.iter().map(|v| v.bytes).collect();
+        let mut ops_flat: Vec<u32> = Vec::new();
+        let mut ops_span: Vec<(u32, u32)> = Vec::with_capacity(self.records.len());
+        let mut cost = Cost::default();
+        for (ri, rec) in self.records.iter().enumerate() {
+            let start = ops_flat.len() as u32;
+            ops_flat.extend_from_slice(&rec.operands);
+            ops_span.push((start, rec.operands.len() as u32));
+            let out_bytes = bytes[self.n_params + ri] as f64;
+            let in_bytes: f64 = rec.operands.iter().map(|&o| bytes[o as usize] as f64).sum();
+            let (c, t, b, fl) = price_record(model, mesh, &rec.class, in_bytes, out_bytes);
+            cost.compute_s += c;
+            cost.comm_s += t;
+            cost.comm_bytes += b;
+            cost.flops += fl;
+        }
+        cost.peak_bytes = memory_walk(self.n_params, &bytes, &ops_flat, &ops_span, results);
+        cost.runtime_s = cost.compute_s + cost.comm_s;
+        cost
+    }
+}
+
+impl PartitionSink for SymSink {
+    type V = u32;
+
+    fn mapped(&self, old: ValueId) -> u32 {
+        self.map[old.index()]
+    }
+
+    fn push_mapped(&mut self, v: u32) {
+        self.map.push(v);
+    }
+
+    fn shape(&self, v: u32) -> Vec<i64> {
+        self.values[v as usize].shape.clone()
+    }
+
+    fn param(&mut self, _name: &str, shape: Vec<i64>, dtype: DType) -> u32 {
+        self.push_value(shape, dtype)
+    }
+
+    fn reshard(
+        &mut self,
+        cx: &Pctx,
+        old: ValueId,
+        required: &[Vec<AxisId>],
+        stats: &mut PartitionStats,
+    ) -> Result<u32> {
+        if cx.spec.dims[old.index()].as_slice() == required {
+            return Ok(self.mapped(old));
+        }
+        let rid = self.interner.intern(required);
+        if let Some(&v) = self.cache.get(&(old.0, rid)) {
+            return Ok(v);
+        }
+        let steps = reshard_steps(cx.func, old, &cx.spec.dims[old.index()], required)?;
+        let v0 = self.mapped(old);
+        let v = apply_reshard_steps(self, cx.mesh, v0, &steps, stats);
+        self.cache.insert((old.0, rid), v);
+        Ok(v)
+    }
+
+    fn constant(&mut self, _value: f64, shape: Vec<i64>, dtype: DType) -> u32 {
+        self.emit(PriceClass::MemBound, Vec::new(), shape, dtype)
+    }
+
+    fn iota(&mut self, _dim: usize, shape: Vec<i64>, dtype: DType) -> u32 {
+        self.emit(PriceClass::MemBound, Vec::new(), shape, dtype)
+    }
+
+    fn local_op(&mut self, instr: &Instr, operands: &[u32], local_result_shape: &[i64]) -> u32 {
+        let operand_shapes: Vec<Vec<i64>> =
+            operands.iter().map(|&o| self.values[o as usize].shape.clone()).collect();
+        let shape = infer_local_shape(instr, &operand_shapes, local_result_shape);
+        let class = match &instr.kind {
+            OpKind::DotGeneral { .. } | OpKind::Conv2d { .. } => {
+                PriceClass::Matmul { flops: local_flops(instr, &operand_shapes, &shape) }
+            }
+            _ => PriceClass::MemBound,
+        };
+        self.emit(class, operands.to_vec(), shape, instr.ty.dtype)
+    }
+
+    fn reshape(&mut self, v: u32, shape: &[i64]) -> u32 {
+        let dtype = self.dtype(v);
+        self.emit(PriceClass::MemBound, vec![v], shape.to_vec(), dtype)
+    }
+
+    fn shard_slice(&mut self, v: u32, _axis: AxisId, dim: usize, axis_size: i64) -> u32 {
+        let mut shape = self.shape(v);
+        shape[dim] /= axis_size;
+        let dtype = self.dtype(v);
+        self.emit(PriceClass::ShardSlice, vec![v], shape, dtype)
+    }
+
+    fn all_gather(&mut self, v: u32, axis: AxisId, dim: usize, axis_size: i64) -> u32 {
+        let mut shape = self.shape(v);
+        shape[dim] *= axis_size;
+        let dtype = self.dtype(v);
+        self.emit(PriceClass::AllGather(axis), vec![v], shape, dtype)
+    }
+
+    fn all_reduce(&mut self, v: u32, axes: Vec<AxisId>, _kind: ReduceKind) -> u32 {
+        let shape = self.shape(v);
+        let dtype = self.dtype(v);
+        self.emit(PriceClass::AllReduce(axes), vec![v], shape, dtype)
+    }
+
+    fn reduce_scatter(
+        &mut self,
+        v: u32,
+        axis: AxisId,
+        dim: usize,
+        axis_size: i64,
+        _kind: ReduceKind,
+    ) -> u32 {
+        let mut shape = self.shape(v);
+        shape[dim] /= axis_size;
+        let dtype = self.dtype(v);
+        self.emit(PriceClass::ReduceScatter(axis), vec![v], shape, dtype)
+    }
+
+    fn all_to_all(
+        &mut self,
+        v: u32,
+        axis: AxisId,
+        split_dim: usize,
+        concat_dim: usize,
+        axis_size: i64,
+    ) -> u32 {
+        let mut shape = self.shape(v);
+        shape[split_dim] /= axis_size;
+        shape[concat_dim] *= axis_size;
+        let dtype = self.dtype(v);
+        self.emit(PriceClass::AllToAll(axis), vec![v], shape, dtype)
+    }
+}
+
+/// Full-pass symbolic evaluator: prices a spec straight from the logical
+/// function, never materializing the device-local IR. Op rules are
+/// computed once at construction and amortized across evaluations.
+pub struct SymbolicEvaluator<'a> {
+    func: &'a Func,
+    mesh: &'a Mesh,
+    model: &'a CostModel,
+    rules: Vec<OpRule>,
+}
+
+impl<'a> SymbolicEvaluator<'a> {
+    pub fn new(func: &'a Func, mesh: &'a Mesh, model: &'a CostModel) -> Self {
+        let rules = func.instrs.iter().map(|i| op_rule(func, i)).collect();
+        SymbolicEvaluator { func, mesh, model, rules }
+    }
+
+    /// Absolute cost + collective statistics of `spec`. Errors exactly
+    /// when `partition()` would (shared control flow).
+    pub fn evaluate(&self, spec: &ShardingSpec) -> Result<(Cost, PartitionStats)> {
+        let mut sink = SymSink::new(self.func);
+        let mut stats = PartitionStats::default();
+        let cx = Pctx { func: self.func, spec, mesh: self.mesh };
+        let results = run_partition(&cx, &self.rules, &mut sink, &mut stats)?;
+        Ok((sink.finish(self.model, self.mesh, &results), stats))
+    }
+
+    /// Relative cost `C(s)` against `base`; `+inf` when the spec cannot
+    /// be partitioned.
+    pub fn relative(&self, spec: &ShardingSpec, base: &Cost) -> f64 {
+        match self.evaluate(spec) {
+            Ok((cost, _)) => self.model.relative(&cost, base),
+            Err(_) => f64::INFINITY,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{FuncBuilder, TensorType};
+    use crate::mesh::{HardwareKind, HardwareProfile};
+    use crate::sharding::partition;
+
+    fn mlp() -> Func {
+        let mut b = FuncBuilder::new("mlp");
+        let x = b.param("x", TensorType::f32(vec![256, 32]));
+        let w1 = b.param("w1", TensorType::f32(vec![32, 64]));
+        let w2 = b.param("w2", TensorType::f32(vec![64, 16]));
+        let y = b.matmul(x, w1);
+        let z = b.relu(y);
+        let w = b.matmul(z, w2);
+        b.build(vec![w])
+    }
+
+    fn model() -> CostModel {
+        CostModel::new(HardwareProfile::new(HardwareKind::A100))
+    }
+
+    fn assert_costs_match(f: &Func, spec: &ShardingSpec, mesh: &Mesh) {
+        let m = model();
+        let (local, mat_stats) = partition(f, spec, mesh).unwrap();
+        let oracle = m.evaluate(&local, mesh);
+        let sym = SymbolicEvaluator::new(f, mesh, &m);
+        let (cost, sym_stats) = sym.evaluate(spec).unwrap();
+        assert_eq!(mat_stats, sym_stats, "collective stats must agree");
+        assert_eq!(cost.peak_bytes, oracle.peak_bytes, "peak bytes must agree");
+        let tol = 1e-9 * oracle.runtime_s.abs().max(1e-30);
+        assert!(
+            (cost.runtime_s - oracle.runtime_s).abs() <= tol,
+            "runtime {} vs oracle {}",
+            cost.runtime_s,
+            oracle.runtime_s
+        );
+        assert_eq!(cost.flops, oracle.flops);
+        assert_eq!(cost.comm_bytes, oracle.comm_bytes);
+    }
+
+    #[test]
+    fn unsharded_matches_oracle() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 4)]);
+        assert_costs_match(&f, &ShardingSpec::unsharded(&f), &mesh);
+    }
+
+    #[test]
+    fn batch_sharding_matches_oracle() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 4)]);
+        let mut spec = ShardingSpec::unsharded(&f);
+        spec.apply_assignment(
+            &f,
+            &mesh,
+            &[(ValueId(0), 0), (ValueId(3), 0), (ValueId(4), 0), (ValueId(5), 0)],
+            0,
+        )
+        .unwrap();
+        assert_costs_match(&f, &spec, &mesh);
+    }
+
+    #[test]
+    fn megatron_sharding_matches_oracle() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 2), ("m", 2)]);
+        let mut spec = ShardingSpec::unsharded(&f);
+        spec.apply_assignment(
+            &f,
+            &mesh,
+            &[(ValueId(0), 0), (ValueId(3), 0), (ValueId(4), 0), (ValueId(5), 0)],
+            0,
+        )
+        .unwrap();
+        spec.apply_assignment(
+            &f,
+            &mesh,
+            &[(ValueId(1), 1), (ValueId(3), 1), (ValueId(4), 1), (ValueId(2), 0)],
+            1,
+        )
+        .unwrap();
+        assert_costs_match(&f, &spec, &mesh);
+    }
+
+    #[test]
+    fn contract_only_matches_oracle() {
+        let mut fb = FuncBuilder::new("f");
+        let x = fb.param("x", TensorType::f32(vec![8, 16]));
+        let w = fb.param("w", TensorType::f32(vec![16, 4]));
+        let y = fb.matmul(x, w);
+        let f = fb.build(vec![y]);
+        let mesh = Mesh::grid(&[("m", 4)]);
+        let mut spec = ShardingSpec::unsharded(&f);
+        spec.apply_assignment(&f, &mesh, &[(ValueId(0), 1), (ValueId(1), 0)], 0).unwrap();
+        assert_costs_match(&f, &spec, &mesh);
+    }
+
+    #[test]
+    fn gathered_transpose_matches_oracle() {
+        let mut fb = FuncBuilder::new("f");
+        let x = fb.param("x", TensorType::f32(vec![8, 8]));
+        let t = fb.transpose(x, &[1, 0]);
+        let y = fb.add(x, t);
+        let f = fb.build(vec![y]);
+        let mesh = Mesh::grid(&[("d", 2)]);
+        let mut spec = ShardingSpec::unsharded(&f);
+        spec.apply_assignment(&f, &mesh, &[(ValueId(0), 0), (ValueId(2), 0)], 0).unwrap();
+        assert_costs_match(&f, &spec, &mesh);
+    }
+
+    #[test]
+    fn relative_of_unsharded_is_one() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 4)]);
+        let m = model();
+        let spec = ShardingSpec::unsharded(&f);
+        let (local, _) = partition(&f, &spec, &mesh).unwrap();
+        let base = m.evaluate(&local, &mesh);
+        let sym = SymbolicEvaluator::new(&f, &mesh, &m);
+        assert_eq!(sym.relative(&spec, &base), m.relative(&base, &base));
+    }
+}

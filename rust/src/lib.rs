@@ -18,9 +18,16 @@
 //! * [`sharding`] — sharding specs, rule-driven propagation, and the SPMD
 //!   rewriter that emits device-local IR with collectives.
 //! * [`cost`] — the analytic roofline cost model with live-range peak
-//!   memory estimation (§4.5).
+//!   memory estimation (§4.5), plus [`cost::symbolic`]: the symbolic
+//!   evaluator that prices a spec straight from the logical function
+//!   (no device-local IR), agreeing with the materialized oracle to
+//!   ≤1e-6 relative cost.
 //! * [`search`] — the MCTS partitioner with axis-aware, color-based
-//!   actions and the colors-aware canonical state (§4.1–4.3).
+//!   actions and the colors-aware canonical state (§4.1–4.3); its hot
+//!   path runs on [`search::incremental`], which re-prices only the
+//!   instructions an action's sharding delta touches (the NDA's
+//!   per-color incidence) and replays cached per-instruction plans
+//!   instead of re-partitioning.
 //! * [`baselines`] — Alpa-like, AutoMap-like and expert/manual
 //!   comparators (§5.1.1).
 //! * [`models`] — IR builders for the paper's evaluation models (§5.1):

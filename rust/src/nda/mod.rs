@@ -228,6 +228,34 @@ impl Nda {
             .collect()
     }
 
+    /// Per-color instruction incidence: for each color, the (sorted,
+    /// deduplicated) indices of instructions whose device-local emission
+    /// depends on a value carrying the color — the defining instruction
+    /// of every member value plus each of its consumers. Applying or
+    /// undoing an action on a color can only change the partition/cost of
+    /// these instructions; the search's incremental evaluator
+    /// ([`crate::search::incremental`]) dirties exactly this set (derived
+    /// per delta from the assignment's values, since mirrored actions
+    /// span several colors). Exposed here for analysis and reporting.
+    pub fn color_instr_incidence(&self, func: &Func) -> Vec<Vec<usize>> {
+        let uses = func.uses();
+        let n_params = func.params.len();
+        let mut out: Vec<Vec<usize>> = vec![Vec::new(); self.colors.len()];
+        for (c, info) in self.colors.iter().enumerate() {
+            let mut set = std::collections::BTreeSet::new();
+            for &(v, _d) in &info.members {
+                if v.index() >= n_params {
+                    set.insert(v.index() - n_params);
+                }
+                for &(ii, _oi) in &uses[v.index()] {
+                    set.insert(ii);
+                }
+            }
+            out[c] = set.into_iter().collect();
+        }
+        out
+    }
+
     /// Resolution groups (isomorphism-grouped compatibility sets, §3.6)
     /// whose conflicts involve `color`. Returns global group indices.
     pub fn groups_for_color(&self, color: ColorId) -> Vec<usize> {
@@ -376,6 +404,21 @@ mod tests {
         let nda = Nda::analyze(&f);
         assert_ne!(nda.color_of(ValueId(0), 0), nda.color_of(ValueId(0), 1));
         assert_eq!(nda.color_of(ValueId(2), 0), nda.color_of(ValueId(2), 1));
+    }
+
+    #[test]
+    fn color_incidence_covers_defs_and_uses() {
+        let f = mlp();
+        let nda = Nda::analyze(&f);
+        let inc = nda.color_instr_incidence(&f);
+        assert_eq!(inc.len(), nda.num_colors());
+        // B = {x.0, y.0, z.0, w.0}: x feeds instr 0; y def 0, use 1;
+        // z def 1, use 2; w def 2 -> incidence {0, 1, 2}.
+        let b_color = nda.color_of(ValueId(0), 0);
+        assert_eq!(inc[b_color], vec![0, 1, 2]);
+        // X = {x.1, w1.0}: both only touch the first matmul.
+        let x_color = nda.color_of(ValueId(0), 1);
+        assert_eq!(inc[x_color], vec![0]);
     }
 
     #[test]

@@ -1,0 +1,738 @@
+//! Incremental state evaluation for the MCTS (the engine behind the
+//! search's ≥5× evals/sec speedup over materialize-partition-evaluate).
+//!
+//! The evaluator keeps, per logical instruction, an **emission plan**:
+//! the priced records the partitioner would emit for that instruction
+//! under the current [`ShardingSpec`] (local op, contract collectives,
+//! spec-realizing slices), with operand references kept *symbolic*
+//! (logical value / shared reshard / plan-local). Reshard chains are
+//! cached separately per `(value, required-sharding)` — mirroring the
+//! partitioner's global reshard cache, so shared reshards are priced
+//! once.
+//!
+//! Extending a trajectory by one action goes through the spec's delta API
+//! ([`ShardingSpec::apply_assignment_delta`] / undo): only instructions
+//! whose operand or result sharding changed are re-planned — the def +
+//! consumers of the delta's values, i.e. exactly the per-color incidence
+//! set the NDA exposes as [`crate::nda::Nda::color_instr_incidence`]
+//! (the engine derives it per delta from the assignment, since mirrored
+//! actions span several colors). Evaluation is then a cheap **replay**:
+//! walk the plans
+//! in program order, splice in reshard chains at first use (exactly where
+//! the partitioner would emit them), sum the pre-priced cost terms, and
+//! run [`crate::cost::CostModel::evaluate`]'s live-range peak-memory walk
+//! over the replayed stream.
+//!
+//! Because plans are built by the *same* rewrite core
+//! ([`rewrite_instr_core`]) and priced by the same primitives as the
+//! materialized oracle, the replayed cost agrees with
+//! `partition()` + `CostModel::evaluate` to floating-point noise (≤1e-6
+//! relative cost, enforced by tests and the search's validation oracle).
+
+use crate::cost::symbolic::{price_record, shape_bytes, PriceClass};
+use crate::cost::{Cost, CostModel};
+use crate::ir::{AxisId, DType, Func, Instr, ValueId};
+use crate::mesh::Mesh;
+use crate::nda::rules::{op_rule, OpRule};
+use crate::sharding::partition::{
+    reshard_steps, rewrite_instr_core, PartitionSink, PartitionStats, Pctx, ReqInterner,
+    ReshardStep,
+};
+use crate::sharding::{ShardError, ShardingSpec, SpecDelta};
+use anyhow::{bail, Result};
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+/// Symbolic operand reference inside a plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PlanRef {
+    /// The current device-local form of logical value `v` (its spec
+    /// sharding).
+    Logical(u32),
+    /// The shared reshard of logical value `v` to interned requirement
+    /// `rid`.
+    Reshard(u32, u32),
+    /// Record `k` of the enclosing plan.
+    Local(u32),
+}
+
+/// One pre-priced would-be device-local instruction.
+#[derive(Clone, Debug)]
+struct PlanRecord {
+    operands: Vec<PlanRef>,
+    shape: Vec<i64>,
+    dtype: DType,
+    out_bytes: u64,
+    compute_s: f64,
+    comm_s: f64,
+    comm_bytes: f64,
+    flops: f64,
+}
+
+/// Emission plan of one logical instruction (reshard chains excluded —
+/// they live in the shared per-(value, requirement) cache).
+#[derive(Clone, Debug)]
+struct InstrPlan {
+    records: Vec<PlanRecord>,
+    /// Index (into `records`) of the instruction's mapped result.
+    out: u32,
+}
+
+/// Cached reshard chain for one `(value, required)` pair. `Local` refs
+/// index into this plan's own records; the chain's input is
+/// `Logical(value)`.
+#[derive(Clone, Debug)]
+struct ReshardPlan {
+    records: Vec<PlanRecord>,
+}
+
+/// Plan-building sink: runs the shared partition rewrite for a single
+/// instruction, recording priced plan records instead of emitting IR.
+///
+/// The emission methods are the symbolic twin of `SymSink` in
+/// [`crate::cost::symbolic`] (same shape transitions, same
+/// `PriceClass`es) over plan-local value refs; keep the two in lockstep.
+/// The property tests (P7/P8) compare both paths against the oracle on
+/// every run, so drift fails deterministically.
+struct PlanSink<'e, 'a> {
+    func: &'a Func,
+    mesh: &'a Mesh,
+    model: &'a CostModel,
+    spec: &'e ShardingSpec,
+    interner: &'e mut ReqInterner,
+    reshard_plans: &'e mut HashMap<(u32, u32), ReshardPlan>,
+    records: Vec<PlanRecord>,
+}
+
+impl<'e, 'a> PlanSink<'e, 'a> {
+    fn ref_shape(&self, r: PlanRef) -> Vec<i64> {
+        match r {
+            PlanRef::Logical(v) => self.spec.local_shape(self.func, self.mesh, ValueId(v)),
+            PlanRef::Reshard(v, rid) => {
+                let full = &self.func.ty(ValueId(v)).shape;
+                let req = self.interner.resolve(rid);
+                (0..full.len())
+                    .map(|d| {
+                        let factor: i64 =
+                            req[d].iter().map(|&a| self.mesh.axis_size(a) as i64).product();
+                        full[d] / factor
+                    })
+                    .collect()
+            }
+            PlanRef::Local(k) => self.records[k as usize].shape.clone(),
+        }
+    }
+
+    fn ref_dtype(&self, r: PlanRef) -> DType {
+        match r {
+            PlanRef::Logical(v) | PlanRef::Reshard(v, _) => self.func.ty(ValueId(v)).dtype,
+            PlanRef::Local(k) => self.records[k as usize].dtype,
+        }
+    }
+
+    fn ref_bytes(&self, r: PlanRef) -> u64 {
+        match r {
+            PlanRef::Local(k) => self.records[k as usize].out_bytes,
+            _ => shape_bytes(&self.ref_shape(r), self.ref_dtype(r)),
+        }
+    }
+
+    fn emit(
+        &mut self,
+        class: PriceClass,
+        operands: Vec<PlanRef>,
+        shape: Vec<i64>,
+        dtype: DType,
+    ) -> PlanRef {
+        let out_bytes = shape_bytes(&shape, dtype);
+        let in_bytes: f64 = operands.iter().map(|&r| self.ref_bytes(r) as f64).sum();
+        let (compute_s, comm_s, comm_bytes, flops) =
+            price_record(self.model, self.mesh, &class, in_bytes, out_bytes as f64);
+        self.records.push(PlanRecord {
+            operands,
+            shape,
+            dtype,
+            out_bytes,
+            compute_s,
+            comm_s,
+            comm_bytes,
+            flops,
+        });
+        PlanRef::Local((self.records.len() - 1) as u32)
+    }
+
+    /// Build (and price) the reshard chain for `(old, required)` with
+    /// plan-local record refs.
+    fn build_reshard_plan(
+        &mut self,
+        old: ValueId,
+        required: &[Vec<AxisId>],
+    ) -> Result<ReshardPlan> {
+        let steps = reshard_steps(self.func, old, &self.spec.dims[old.index()], required)?;
+        let dtype = self.func.ty(old).dtype;
+        let mut shape = self.spec.local_shape(self.func, self.mesh, old);
+        let mut prev = PlanRef::Logical(old.0);
+        let mut prev_bytes = shape_bytes(&shape, dtype);
+        let mut records = Vec::with_capacity(steps.len());
+        for step in steps {
+            step.apply_to_shape(self.mesh, &mut shape);
+            let class = match step {
+                ReshardStep::AllToAll { axis, .. } => PriceClass::AllToAll(axis),
+                ReshardStep::AllGather { axis, .. } => PriceClass::AllGather(axis),
+                ReshardStep::ShardSlice { .. } => PriceClass::ShardSlice,
+            };
+            let out_bytes = shape_bytes(&shape, dtype);
+            let (compute_s, comm_s, comm_bytes, flops) =
+                price_record(self.model, self.mesh, &class, prev_bytes as f64, out_bytes as f64);
+            records.push(PlanRecord {
+                operands: vec![prev],
+                shape: shape.clone(),
+                dtype,
+                out_bytes,
+                compute_s,
+                comm_s,
+                comm_bytes,
+                flops,
+            });
+            prev = PlanRef::Local((records.len() - 1) as u32);
+            prev_bytes = out_bytes;
+        }
+        Ok(ReshardPlan { records })
+    }
+}
+
+impl<'e, 'a> PartitionSink for PlanSink<'e, 'a> {
+    type V = PlanRef;
+
+    fn mapped(&self, old: ValueId) -> PlanRef {
+        PlanRef::Logical(old.0)
+    }
+
+    fn push_mapped(&mut self, _v: PlanRef) {
+        unreachable!("per-instruction planning never maps whole functions");
+    }
+
+    fn shape(&self, v: PlanRef) -> Vec<i64> {
+        self.ref_shape(v)
+    }
+
+    fn param(&mut self, _name: &str, _shape: Vec<i64>, _dtype: DType) -> PlanRef {
+        unreachable!("per-instruction planning never declares params");
+    }
+
+    fn reshard(
+        &mut self,
+        cx: &Pctx,
+        old: ValueId,
+        required: &[Vec<AxisId>],
+        _stats: &mut PartitionStats,
+    ) -> Result<PlanRef> {
+        if cx.spec.dims[old.index()].as_slice() == required {
+            return Ok(PlanRef::Logical(old.0));
+        }
+        let rid = self.interner.intern(required);
+        if !self.reshard_plans.contains_key(&(old.0, rid)) {
+            let plan = self.build_reshard_plan(old, required)?;
+            self.reshard_plans.insert((old.0, rid), plan);
+        }
+        Ok(PlanRef::Reshard(old.0, rid))
+    }
+
+    fn constant(&mut self, _value: f64, shape: Vec<i64>, dtype: DType) -> PlanRef {
+        self.emit(PriceClass::MemBound, Vec::new(), shape, dtype)
+    }
+
+    fn iota(&mut self, _dim: usize, shape: Vec<i64>, dtype: DType) -> PlanRef {
+        self.emit(PriceClass::MemBound, Vec::new(), shape, dtype)
+    }
+
+    fn local_op(
+        &mut self,
+        instr: &Instr,
+        operands: &[PlanRef],
+        local_result_shape: &[i64],
+    ) -> PlanRef {
+        let operand_shapes: Vec<Vec<i64>> =
+            operands.iter().map(|&o| self.ref_shape(o)).collect();
+        let shape = crate::cost::symbolic::infer_local_shape(
+            instr,
+            &operand_shapes,
+            local_result_shape,
+        );
+        let class = match &instr.kind {
+            crate::ir::OpKind::DotGeneral { .. } | crate::ir::OpKind::Conv2d { .. } => {
+                PriceClass::Matmul {
+                    flops: crate::cost::symbolic::local_flops(instr, &operand_shapes, &shape),
+                }
+            }
+            _ => PriceClass::MemBound,
+        };
+        self.emit(class, operands.to_vec(), shape, instr.ty.dtype)
+    }
+
+    fn reshape(&mut self, v: PlanRef, shape: &[i64]) -> PlanRef {
+        let dtype = self.ref_dtype(v);
+        self.emit(PriceClass::MemBound, vec![v], shape.to_vec(), dtype)
+    }
+
+    fn shard_slice(&mut self, v: PlanRef, _axis: AxisId, dim: usize, axis_size: i64) -> PlanRef {
+        let mut shape = self.ref_shape(v);
+        shape[dim] /= axis_size;
+        let dtype = self.ref_dtype(v);
+        self.emit(PriceClass::ShardSlice, vec![v], shape, dtype)
+    }
+
+    fn all_gather(&mut self, v: PlanRef, axis: AxisId, dim: usize, axis_size: i64) -> PlanRef {
+        let mut shape = self.ref_shape(v);
+        shape[dim] *= axis_size;
+        let dtype = self.ref_dtype(v);
+        self.emit(PriceClass::AllGather(axis), vec![v], shape, dtype)
+    }
+
+    fn all_reduce(
+        &mut self,
+        v: PlanRef,
+        axes: Vec<AxisId>,
+        _kind: crate::ir::ReduceKind,
+    ) -> PlanRef {
+        let shape = self.ref_shape(v);
+        let dtype = self.ref_dtype(v);
+        self.emit(PriceClass::AllReduce(axes), vec![v], shape, dtype)
+    }
+
+    fn reduce_scatter(
+        &mut self,
+        v: PlanRef,
+        axis: AxisId,
+        dim: usize,
+        axis_size: i64,
+        _kind: crate::ir::ReduceKind,
+    ) -> PlanRef {
+        let mut shape = self.ref_shape(v);
+        shape[dim] /= axis_size;
+        let dtype = self.ref_dtype(v);
+        self.emit(PriceClass::ReduceScatter(axis), vec![v], shape, dtype)
+    }
+
+    fn all_to_all(
+        &mut self,
+        v: PlanRef,
+        axis: AxisId,
+        split_dim: usize,
+        concat_dim: usize,
+        axis_size: i64,
+    ) -> PlanRef {
+        let mut shape = self.ref_shape(v);
+        shape[split_dim] /= axis_size;
+        shape[concat_dim] *= axis_size;
+        let dtype = self.ref_dtype(v);
+        self.emit(PriceClass::AllToAll(axis), vec![v], shape, dtype)
+    }
+}
+
+/// The incremental state evaluator. One instance per search worker; apply
+/// and undo actions in stack order as the trajectory walks, and call
+/// [`Self::relative`] to price the current state.
+pub struct IncrementalEvaluator<'a> {
+    func: &'a Func,
+    mesh: &'a Mesh,
+    model: &'a CostModel,
+    base: Cost,
+    /// Per-instruction op rules (depend only on `func`; shareable across
+    /// the search's worker engines — see [`Self::with_shared_rules`]).
+    rules: Arc<Vec<OpRule>>,
+    /// value -> deduplicated consumer instruction indices.
+    uses: Vec<Vec<usize>>,
+    spec: ShardingSpec,
+    deltas: Vec<SpecDelta>,
+    plans: Vec<Option<InstrPlan>>,
+    dirty: Vec<bool>,
+    reshard_plans: HashMap<(u32, u32), ReshardPlan>,
+    interner: ReqInterner,
+    /// Total per-instruction plan (re)builds — observability for tests
+    /// and the perf probe (incremental work ≪ full passes).
+    pub plan_builds: u64,
+}
+
+impl<'a> IncrementalEvaluator<'a> {
+    /// Build an evaluator for `func` with `base` as the relative-cost
+    /// denominator (the unsharded module's cost from the oracle).
+    pub fn new(func: &'a Func, mesh: &'a Mesh, model: &'a CostModel, base: Cost) -> Result<Self> {
+        let rules = Arc::new(func.instrs.iter().map(|i| op_rule(func, i)).collect::<Vec<_>>());
+        Self::with_shared_rules(func, mesh, model, base, rules)
+    }
+
+    /// [`Self::new`] with precomputed shared op rules, so the search's
+    /// worker engines skip the per-construction rule pass.
+    pub fn with_shared_rules(
+        func: &'a Func,
+        mesh: &'a Mesh,
+        model: &'a CostModel,
+        base: Cost,
+        rules: Arc<Vec<OpRule>>,
+    ) -> Result<Self> {
+        for instr in &func.instrs {
+            if instr.kind.is_device_local_only() {
+                bail!("incremental evaluation input must be a logical module");
+            }
+        }
+        debug_assert_eq!(rules.len(), func.instrs.len());
+        let uses: Vec<Vec<usize>> = func
+            .uses()
+            .iter()
+            .map(|u| {
+                let mut v: Vec<usize> = u.iter().map(|&(ii, _)| ii).collect();
+                v.dedup();
+                v
+            })
+            .collect();
+        let n = func.instrs.len();
+        Ok(IncrementalEvaluator {
+            func,
+            mesh,
+            model,
+            base,
+            rules,
+            uses,
+            spec: ShardingSpec::unsharded(func),
+            deltas: Vec::new(),
+            plans: (0..n).map(|_| None).collect(),
+            dirty: vec![true; n],
+            reshard_plans: HashMap::new(),
+            interner: ReqInterner::new(),
+            plan_builds: 0,
+        })
+    }
+
+    /// The current spec (for legality probes).
+    pub fn spec(&self) -> &ShardingSpec {
+        &self.spec
+    }
+
+    /// Number of deltas currently applied.
+    pub fn depth(&self) -> usize {
+        self.deltas.len()
+    }
+
+    /// The relative-cost base.
+    pub fn base(&self) -> &Cost {
+        &self.base
+    }
+
+    /// Apply an assignment along `axis`, extending the delta stack.
+    pub fn apply(
+        &mut self,
+        assignment: &[(ValueId, usize)],
+        axis: AxisId,
+    ) -> Result<(), ShardError> {
+        let delta = self.spec.apply_assignment_delta(self.func, self.mesh, assignment, axis)?;
+        self.mark_dirty(&delta);
+        self.deltas.push(delta);
+        Ok(())
+    }
+
+    /// Undo the most recent apply; returns false at the root.
+    pub fn undo(&mut self) -> bool {
+        match self.deltas.pop() {
+            Some(delta) => {
+                self.spec.undo_delta(&delta);
+                self.mark_dirty(&delta);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Undo everything, returning to the unsharded root.
+    pub fn reset(&mut self) {
+        while self.undo() {}
+    }
+
+    fn mark_dirty(&mut self, delta: &SpecDelta) {
+        let p = self.func.params.len();
+        let mut changed: HashSet<u32> = HashSet::new();
+        for &(v, _) in &delta.applied {
+            if changed.insert(v.0) {
+                if v.index() >= p {
+                    self.dirty[v.index() - p] = true;
+                }
+                for &ci in &self.uses[v.index()] {
+                    self.dirty[ci] = true;
+                }
+            }
+        }
+        self.reshard_plans.retain(|k, _| !changed.contains(&k.0));
+    }
+
+    fn build_plan(&mut self, i: usize) -> Result<InstrPlan> {
+        let func = self.func;
+        let instr = &func.instrs[i];
+        let rule = &self.rules[i];
+        self.plan_builds += 1;
+        let mut sink = PlanSink {
+            func,
+            mesh: self.mesh,
+            model: self.model,
+            spec: &self.spec,
+            interner: &mut self.interner,
+            reshard_plans: &mut self.reshard_plans,
+            records: Vec::new(),
+        };
+        let cx = Pctx { func, spec: &self.spec, mesh: self.mesh };
+        let mut scratch = PartitionStats::default();
+        let out = rewrite_instr_core(&cx, instr, rule, &mut sink, &mut scratch)?;
+        let out = match out {
+            PlanRef::Local(k) => k,
+            other => bail!("instruction plan produced non-local result {other:?}"),
+        };
+        Ok(InstrPlan { records: sink.records, out })
+    }
+
+    fn rebuild_dirty(&mut self) -> Result<()> {
+        for i in 0..self.func.instrs.len() {
+            if self.dirty[i] || self.plans[i].is_none() {
+                let plan = self.build_plan(i)?;
+                self.plans[i] = Some(plan);
+                self.dirty[i] = false;
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate the current state's absolute cost.
+    pub fn evaluate(&mut self) -> Result<Cost> {
+        self.rebuild_dirty()?;
+        Ok(self.replay())
+    }
+
+    /// Relative cost `C(s)` of the current state; `+inf` when the spec
+    /// cannot be partitioned.
+    pub fn relative(&mut self) -> f64 {
+        match self.evaluate() {
+            Ok(cost) => self.model.relative(&cost, &self.base),
+            Err(_) => f64::INFINITY,
+        }
+    }
+
+    /// Replay the plans in program order, splicing reshard chains in at
+    /// first use, and reproduce the oracle's pricing + live-range walk.
+    fn replay(&self) -> Cost {
+        let p = self.func.params.len();
+        let n_logical = self.func.num_values();
+
+        // g_bytes[g] = local bytes of global stream value g (params first,
+        // then one value per replayed record).
+        let mut g_bytes: Vec<u64> = Vec::with_capacity(n_logical + 16);
+        let mut mapped: Vec<u32> = vec![u32::MAX; n_logical];
+        for pi in 0..p {
+            g_bytes.push(self.spec.local_bytes(self.func, self.mesh, ValueId(pi as u32)));
+            mapped[pi] = pi as u32;
+        }
+        let mut reshard_pos: HashMap<(u32, u32), u32> = HashMap::new();
+        let mut ops_flat: Vec<u32> = Vec::new();
+        let mut ops_span: Vec<(u32, u32)> = Vec::new();
+        let mut cost = Cost::default();
+        let mut cur_ops: Vec<u32> = Vec::new();
+        let mut l2g: Vec<u32> = Vec::new();
+
+        for (i, plan) in self.plans.iter().enumerate() {
+            let plan = plan.as_ref().expect("plans rebuilt before replay");
+            l2g.clear();
+            for rec in &plan.records {
+                cur_ops.clear();
+                for &op in &rec.operands {
+                    let gid = match op {
+                        PlanRef::Logical(v) => mapped[v as usize],
+                        PlanRef::Local(j) => l2g[j as usize],
+                        PlanRef::Reshard(v, rid) => {
+                            if let Some(&g) = reshard_pos.get(&(v, rid)) {
+                                g
+                            } else {
+                                // First use: splice the chain in here,
+                                // exactly where the partitioner emits it.
+                                let rp = &self.reshard_plans[&(v, rid)];
+                                let mut out = u32::MAX;
+                                let mut rl2g: Vec<u32> =
+                                    Vec::with_capacity(rp.records.len());
+                                for rrec in &rp.records {
+                                    let start = ops_flat.len() as u32;
+                                    for &rop in &rrec.operands {
+                                        let rgid = match rop {
+                                            PlanRef::Logical(w) => mapped[w as usize],
+                                            PlanRef::Local(j) => rl2g[j as usize],
+                                            PlanRef::Reshard(..) => {
+                                                unreachable!("reshard chains are flat")
+                                            }
+                                        };
+                                        ops_flat.push(rgid);
+                                    }
+                                    ops_span
+                                        .push((start, ops_flat.len() as u32 - start));
+                                    let gid = g_bytes.len() as u32;
+                                    g_bytes.push(rrec.out_bytes);
+                                    cost.compute_s += rrec.compute_s;
+                                    cost.comm_s += rrec.comm_s;
+                                    cost.comm_bytes += rrec.comm_bytes;
+                                    cost.flops += rrec.flops;
+                                    rl2g.push(gid);
+                                    out = gid;
+                                }
+                                reshard_pos.insert((v, rid), out);
+                                out
+                            }
+                        }
+                    };
+                    cur_ops.push(gid);
+                }
+                let start = ops_flat.len() as u32;
+                ops_flat.extend_from_slice(&cur_ops);
+                ops_span.push((start, cur_ops.len() as u32));
+                let gid = g_bytes.len() as u32;
+                g_bytes.push(rec.out_bytes);
+                cost.compute_s += rec.compute_s;
+                cost.comm_s += rec.comm_s;
+                cost.comm_bytes += rec.comm_bytes;
+                cost.flops += rec.flops;
+                l2g.push(gid);
+            }
+            mapped[p + i] = l2g[plan.out as usize];
+        }
+
+        // Shared live-range peak-memory walk (the one implementation the
+        // full-pass symbolic evaluator uses too).
+        let results: Vec<u32> =
+            self.func.results.iter().map(|&r| mapped[r.index()]).collect();
+        cost.peak_bytes =
+            crate::cost::symbolic::memory_walk(p, &g_bytes, &ops_flat, &ops_span, &results);
+        cost.runtime_s = cost.compute_s + cost.comm_s;
+        cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::symbolic::SymbolicEvaluator;
+    use crate::ir::{FuncBuilder, TensorType};
+    use crate::mesh::{HardwareKind, HardwareProfile};
+    use crate::sharding::partition;
+
+    fn mlp() -> Func {
+        let mut b = FuncBuilder::new("mlp");
+        let x = b.param("x", TensorType::f32(vec![256, 32]));
+        let w1 = b.param("w1", TensorType::f32(vec![32, 64]));
+        let w2 = b.param("w2", TensorType::f32(vec![64, 16]));
+        let y = b.matmul(x, w1);
+        let z = b.relu(y);
+        let w = b.matmul(z, w2);
+        b.build(vec![w])
+    }
+
+    fn model() -> CostModel {
+        CostModel::new(HardwareProfile::new(HardwareKind::A100))
+    }
+
+    fn oracle_relative(f: &Func, spec: &ShardingSpec, mesh: &Mesh, m: &CostModel, base: &Cost) -> f64 {
+        let (local, _) = partition(f, spec, mesh).unwrap();
+        m.relative(&m.evaluate(&local, mesh), base)
+    }
+
+    fn base_cost(f: &Func, mesh: &Mesh, m: &CostModel) -> Cost {
+        let spec = ShardingSpec::unsharded(f);
+        let (local, _) = partition(f, &spec, mesh).unwrap();
+        m.evaluate(&local, mesh)
+    }
+
+    #[test]
+    fn matches_oracle_through_apply_and_undo() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 2), ("m", 2)]);
+        let m = model();
+        let base = base_cost(&f, &mesh, &m);
+        let mut eng = IncrementalEvaluator::new(&f, &mesh, &m, base.clone()).unwrap();
+
+        let root = eng.relative();
+        assert!((root - 1.0).abs() < 1e-9, "root relative {root}");
+
+        let batch =
+            vec![(ValueId(0), 0), (ValueId(3), 0), (ValueId(4), 0), (ValueId(5), 0)];
+        eng.apply(&batch, 0).unwrap();
+        let got = eng.relative();
+        let want = oracle_relative(&f, eng.spec(), &mesh, &m, &base);
+        assert!((got - want).abs() < 1e-6, "batch: {got} vs {want}");
+
+        let megatron =
+            vec![(ValueId(1), 1), (ValueId(3), 1), (ValueId(4), 1), (ValueId(2), 0)];
+        eng.apply(&megatron, 1).unwrap();
+        let got2 = eng.relative();
+        let want2 = oracle_relative(&f, eng.spec(), &mesh, &m, &base);
+        assert!((got2 - want2).abs() < 1e-6, "megatron: {got2} vs {want2}");
+
+        // undo restores the previous state's value exactly
+        assert!(eng.undo());
+        let got3 = eng.relative();
+        assert!((got3 - got).abs() < 1e-12, "undo: {got3} vs {got}");
+        eng.reset();
+        assert_eq!(eng.depth(), 0);
+        let got4 = eng.relative();
+        assert!((got4 - root).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_full_symbolic_on_reshard_heavy_case() {
+        // transpose/add forces gathers + shard slices with reshard sharing.
+        let mut fb = FuncBuilder::new("f");
+        let x = fb.param("x", TensorType::f32(vec![8, 8]));
+        let t = fb.transpose(x, &[1, 0]);
+        let y = fb.add(x, t);
+        let f = fb.build(vec![y]);
+        let mesh = Mesh::grid(&[("d", 2)]);
+        let m = model();
+        let base = base_cost(&f, &mesh, &m);
+        let mut eng = IncrementalEvaluator::new(&f, &mesh, &m, base.clone()).unwrap();
+        eng.apply(&[(ValueId(0), 0), (ValueId(2), 0)], 0).unwrap();
+
+        let sym = SymbolicEvaluator::new(&f, &mesh, &m);
+        let want = sym.relative(eng.spec(), &base);
+        let got = eng.relative();
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        let oracle = oracle_relative(&f, eng.spec(), &mesh, &m, &base);
+        assert!((got - oracle).abs() < 1e-6, "{got} vs oracle {oracle}");
+    }
+
+    #[test]
+    fn dirty_tracking_replans_only_affected_instructions() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 4)]);
+        let m = model();
+        let base = base_cost(&f, &mesh, &m);
+        let mut eng = IncrementalEvaluator::new(&f, &mesh, &m, base).unwrap();
+        let _ = eng.relative();
+        let after_first = eng.plan_builds;
+        assert_eq!(after_first, 3, "initial pass plans every instruction");
+        // an action on the X color {x.1, w1.0} only touches the first
+        // matmul -> exactly one replan.
+        eng.apply(&[(ValueId(0), 1), (ValueId(1), 0)], 0).unwrap();
+        let _ = eng.relative();
+        assert_eq!(eng.plan_builds, after_first + 1);
+        // evaluating again without changes replans nothing.
+        let _ = eng.relative();
+        assert_eq!(eng.plan_builds, after_first + 1);
+    }
+
+    #[test]
+    fn illegal_apply_is_rejected_and_state_preserved() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 4)]);
+        let m = model();
+        let base = base_cost(&f, &mesh, &m);
+        let mut eng = IncrementalEvaluator::new(&f, &mesh, &m, base).unwrap();
+        eng.apply(&[(ValueId(0), 0)], 0).unwrap();
+        let before = eng.relative();
+        // axis 0 already used on x -> AxisInUse
+        assert!(eng.apply(&[(ValueId(0), 1)], 0).is_err());
+        assert_eq!(eng.depth(), 1);
+        let after = eng.relative();
+        assert!((before - after).abs() < 1e-12);
+    }
+}

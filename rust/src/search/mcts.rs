@@ -1,24 +1,35 @@
 //! Monte-Carlo Tree Search over partitioning actions (§4.1–4.3).
 //!
 //! * **State** is the colors-aware canonical representation: the sorted
-//!   set of applied action ids. Because each action's sharding assignment
-//!   is precomputed and actions commute (the spec is a set of per-dim
-//!   axis assignments), any action ordering that yields the same sharded
-//!   model hashes to the same state — duplicate-free by construction
-//!   (§4.3), with no transposition handling needed.
+//!   set of applied action ids — used *directly* as the tree/eval-cache
+//!   key, so distinct states can never alias (a 64-bit digest could
+//!   collide silently). Because each action's sharding assignment is
+//!   precomputed and actions commute (the spec is a set of per-dim axis
+//!   assignments), any action ordering that yields the same sharded model
+//!   maps to the same state — duplicate-free by construction (§4.3), with
+//!   no transposition handling needed.
 //! * **Selection** is UCT over the available-action set; each state's
-//!   cost is evaluated once (materialize spec → partition → cost model)
-//!   and cached.
+//!   cost is evaluated once and cached. Evaluation runs on the
+//!   [`IncrementalEvaluator`]: costs come straight from the logical
+//!   function + spec (no device-local IR is materialized), and extending
+//!   a trajectory re-prices only the instructions the action's colors
+//!   touch. The materialize-partition-evaluate path is kept as the
+//!   *validation oracle*: debug builds cross-check a sample of states,
+//!   and the final best spec is always re-costed through it.
 //! * **Termination**: explicit stop action, depth cap (30), or no legal
 //!   actions. Rewards subtract a small per-step penalty to prefer shorter
 //!   trajectories (better credit assignment, §4.1).
 //! * **Early stop**: the search ends when a full round of trajectories
 //!   fails to improve the best-known cost.
-//! * **Parallelism**: rollouts run on worker threads sharing the tree
-//!   behind a mutex; evaluations (the expensive part) run outside the
-//!   lock.
+//! * **Parallelism**: rollouts run on worker threads. The tree and eval
+//!   cache are *striped* (lock per hash shard) so workers don't convoy on
+//!   a single mutex; an eval-cache entry is reserved (Pending) before the
+//!   evaluation runs, so two threads can never duplicate the same state
+//!   evaluation — late arrivals block on the stripe's condvar for the
+//!   Done value.
 
 use super::actions::Action;
+use super::incremental::IncrementalEvaluator;
 use crate::cost::{Cost, CostModel};
 use crate::ir::Func;
 use crate::mesh::Mesh;
@@ -26,7 +37,7 @@ use crate::sharding::{partition, ShardingSpec};
 use crate::util::Rng;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Search configuration.
@@ -85,15 +96,27 @@ pub struct SearchOutcome {
     pub wall: Duration,
 }
 
-/// Canonical state key: sorted applied-action ids.
-fn state_key(applied: &[usize]) -> u64 {
-    use std::collections::hash_map::DefaultHasher;
-    use std::hash::{Hash, Hasher};
-    let mut sorted = applied.to_vec();
-    sorted.sort_unstable();
-    let mut h = DefaultHasher::new();
-    sorted.hash(&mut h);
-    h.finish()
+/// Canonical state key: the sorted applied-action ids themselves (exact —
+/// no hash collisions can alias two states).
+type StateKey = Vec<u32>;
+
+fn state_key(applied: &[usize]) -> StateKey {
+    let mut key: Vec<u32> = applied.iter().map(|&a| a as u32).collect();
+    key.sort_unstable();
+    key
+}
+
+/// Number of lock stripes for the shared tree/eval-cache maps.
+const STRIPES: usize = 32;
+
+fn stripe_of(key: &[u32]) -> usize {
+    // FNV-1a over the action ids; only stripe selection, not identity.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &x in key {
+        h ^= x as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    (h % STRIPES as u64) as usize
 }
 
 #[derive(Clone, Debug, Default)]
@@ -104,46 +127,70 @@ struct NodeStats {
     edges: HashMap<usize, (f64, f64)>,
 }
 
+/// Striped tree statistics: lock contention spread over `STRIPES` shards.
+struct StripedTree {
+    shards: Vec<Mutex<HashMap<StateKey, NodeStats>>>,
+}
+
+impl StripedTree {
+    fn new() -> Self {
+        StripedTree { shards: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect() }
+    }
+
+    fn shard(&self, key: &StateKey) -> &Mutex<HashMap<StateKey, NodeStats>> {
+        &self.shards[stripe_of(key)]
+    }
+}
+
+/// Eval-cache slot: reserved before evaluation so racing threads never
+/// evaluate the same state twice.
+#[derive(Clone, Copy, Debug)]
+enum EvalSlot {
+    Pending,
+    Done(f64),
+}
+
+struct EvalCache {
+    shards: Vec<(Mutex<HashMap<StateKey, EvalSlot>>, Condvar)>,
+}
+
+impl EvalCache {
+    fn new() -> Self {
+        EvalCache {
+            shards: (0..STRIPES).map(|_| (Mutex::new(HashMap::new()), Condvar::new())).collect(),
+        }
+    }
+
+    fn shard(&self, key: &StateKey) -> &(Mutex<HashMap<StateKey, EvalSlot>>, Condvar) {
+        &self.shards[stripe_of(key)]
+    }
+
+    fn insert_done(&self, key: StateKey, value: f64) {
+        let (lock, cvar) = self.shard(&key);
+        lock.lock().unwrap().insert(key, EvalSlot::Done(value));
+        cvar.notify_all();
+    }
+}
+
 struct Shared<'a> {
     func: &'a Func,
     mesh: &'a Mesh,
     model: &'a CostModel,
     actions: &'a [Action],
     base: Cost,
-    tree: Mutex<HashMap<u64, NodeStats>>,
-    eval_cache: Mutex<HashMap<u64, f64>>,
+    tree: StripedTree,
+    eval_cache: EvalCache,
     best: Mutex<(f64, Vec<usize>)>,
     evals: AtomicUsize,
 }
 
-/// Evaluate a state: apply actions → spec; partition; cost; C(s).
-/// Illegal action sequences evaluate to +inf (they are filtered during
-/// selection, but racing threads may still produce them).
-fn evaluate(shared: &Shared, applied: &[usize]) -> (f64, Option<ShardingSpec>) {
-    let mut spec = ShardingSpec::unsharded(shared.func);
-    for &ai in applied {
-        let a = &shared.actions[ai];
-        if spec
-            .apply_assignment(shared.func, shared.mesh, &a.assignment, a.axis)
-            .is_err()
-        {
-            return (f64::INFINITY, None);
-        }
-    }
-    match partition(shared.func, &spec, shared.mesh) {
-        Ok((local, _stats)) => {
-            let cost = shared.model.evaluate(&local, shared.mesh);
-            (shared.model.relative(&cost, &shared.base), Some(spec))
-        }
-        Err(_) => (f64::INFINITY, None),
-    }
-}
-
-/// Legal actions at a state, given the state's realized `spec`
-/// (read-only probes — no clones on the hot path; §Perf).
-fn legal_actions(shared: &Shared, applied: &[usize], spec: &ShardingSpec) -> Vec<usize> {
+/// Legal actions at a state: `applied_mask` is the per-trajectory bitset
+/// of already-applied action ids (O(1) membership instead of scanning the
+/// applied list); legality is probed read-only against the trajectory's
+/// realized `spec` — no clones on the hot path (§Perf).
+fn legal_actions(shared: &Shared, applied_mask: &[u64], spec: &ShardingSpec) -> Vec<usize> {
     (0..shared.actions.len())
-        .filter(|ai| !applied.contains(ai))
+        .filter(|&ai| applied_mask[ai >> 6] & (1u64 << (ai & 63)) == 0)
         .filter(|&ai| {
             let a = &shared.actions[ai];
             spec.check_assignment(shared.func, shared.mesh, &a.assignment, a.axis)
@@ -151,26 +198,130 @@ fn legal_actions(shared: &Shared, applied: &[usize], spec: &ShardingSpec) -> Vec
         .collect()
 }
 
-/// Evaluate (with cache) a state; updates the global best.
-fn eval_cached(shared: &Shared, applied: &[usize], key: u64, evals: &mut usize) -> f64 {
-    let cached = shared.eval_cache.lock().unwrap().get(&key).copied();
-    let c = match cached {
-        Some(c) => c,
-        None => {
-            let (c, _) = evaluate(shared, applied);
-            *evals += 1;
-            shared.evals.fetch_add(1, Ordering::Relaxed);
-            shared.eval_cache.lock().unwrap().insert(key, c);
-            c
+/// In debug builds, cross-check a sample of symbolic evaluations against
+/// the materialize-partition-evaluate oracle (≤1e-6 relative divergence).
+#[cfg(debug_assertions)]
+fn oracle_check(shared: &Shared, spec: &ShardingSpec, symbolic: f64) {
+    match partition(shared.func, spec, shared.mesh) {
+        Ok((local, _)) => {
+            let oracle = shared.model.relative(&shared.model.evaluate(&local, shared.mesh), &shared.base);
+            debug_assert!(
+                (oracle - symbolic).abs() <= 1e-6 * oracle.abs().max(1.0),
+                "symbolic evaluator diverged from oracle: {symbolic} vs {oracle}"
+            );
         }
-    };
+        Err(_) => {
+            debug_assert!(
+                symbolic.is_infinite(),
+                "oracle fails to partition but symbolic evaluator priced {symbolic}"
+            );
+        }
+    }
+}
+
+/// Releases a Pending reservation if the evaluating thread panics (e.g.,
+/// an oracle-divergence debug_assert), so waiters observe an infinite
+/// cost and the panic can propagate through scope join instead of the
+/// other workers hanging on the condvar forever.
+struct PendingGuard<'g> {
+    shard: &'g (Mutex<HashMap<StateKey, EvalSlot>>, Condvar),
+    key: &'g StateKey,
+    armed: bool,
+}
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            if let Ok(mut slot) = self.shard.0.lock() {
+                slot.insert(self.key.clone(), EvalSlot::Done(f64::INFINITY));
+            }
+            self.shard.1.notify_all();
+        }
+    }
+}
+
+/// Evaluate (with reservation-based cache) the engine's current state.
+/// The engine must be positioned at the state `key` denotes.
+fn eval_cached(
+    shared: &Shared,
+    key: &StateKey,
+    engine: &mut IncrementalEvaluator,
+    evals: &mut usize,
+) -> f64 {
+    let shard = shared.eval_cache.shard(key);
+    let (lock, cvar) = shard;
+    {
+        let mut slot = lock.lock().unwrap();
+        loop {
+            match slot.get(key).copied() {
+                Some(EvalSlot::Done(c)) => return c,
+                Some(EvalSlot::Pending) => {
+                    // another thread is evaluating this exact state; wait
+                    // for its result instead of duplicating the work.
+                    slot = cvar.wait(slot).unwrap();
+                }
+                None => {
+                    slot.insert(key.clone(), EvalSlot::Pending);
+                    break;
+                }
+            }
+        }
+    }
+    // Reserved: evaluate outside the lock, panic-safe.
+    let mut guard = PendingGuard { shard, key, armed: true };
+    let c = engine.relative();
+    *evals += 1;
+    let n = shared.evals.fetch_add(1, Ordering::Relaxed);
+    #[cfg(debug_assertions)]
+    if n % 61 == 0 {
+        oracle_check(shared, engine.spec(), c);
+    }
+    #[cfg(not(debug_assertions))]
+    let _ = n;
+    guard.armed = false;
+    drop(guard);
+    {
+        let mut slot = lock.lock().unwrap();
+        slot.insert(key.clone(), EvalSlot::Done(c));
+    }
+    cvar.notify_all();
+    c
+}
+
+/// Record `applied` as the best-known trajectory if its cost improves.
+/// (Separate from [`eval_cached`]: the cache only knows the canonical
+/// sorted key, while the best entry stores the ordered action sequence.)
+fn note_best(shared: &Shared, c: f64, applied: &[usize]) {
     if c.is_finite() {
         let mut best = shared.best.lock().unwrap();
         if c < best.0 {
             *best = (c, applied.to_vec());
         }
     }
-    c
+}
+
+/// Backpropagate a terminal reward along the trajectory path (terminal
+/// stop edge included). Stripe locks are taken per node, sequentially.
+fn backprop(shared: &Shared, path: &[(StateKey, usize)], key: &StateKey, reward: f64) {
+    const STOP: usize = usize::MAX;
+    {
+        let mut shard = shared.tree.shard(key).lock().unwrap();
+        let node = shard.entry(key.clone()).or_default();
+        node.visits += 1.0;
+        node.value_sum += reward;
+        let e = node.edges.entry(STOP).or_insert((0.0, 0.0));
+        e.0 += 1.0;
+        e.1 += reward;
+    }
+    for (skey, edge) in path.iter().rev() {
+        let mut shard = shared.tree.shard(skey).lock().unwrap();
+        let node = shard.entry(skey.clone()).or_default();
+        node.visits += 1.0;
+        node.value_sum += reward;
+        let e = node.edges.entry(*edge).or_insert((0.0, 0.0));
+        e.0 += 1.0;
+        e.1 += reward;
+    }
 }
 
 /// Run one trajectory; returns the number of evaluations spent.
@@ -180,14 +331,19 @@ fn eval_cached(shared: &Shared, applied: &[usize], key: u64, evals: &mut usize) 
 /// the value function, evaluations are cheap relative to rollouts, and
 /// per-state evaluation gives the precise credit assignment the paper's
 /// shorter-trajectory heuristic is after (§4.1).
-fn trajectory(shared: &Shared, cfg: &SearchConfig, rng: &mut Rng) -> usize {
+fn trajectory(
+    shared: &Shared,
+    cfg: &SearchConfig,
+    rng: &mut Rng,
+    engine: &mut IncrementalEvaluator,
+) -> usize {
     const STOP: usize = usize::MAX;
     let mut applied: Vec<usize> = Vec::new();
-    let mut path: Vec<(u64, usize)> = Vec::new(); // (state, action edge)
+    let mut applied_mask = vec![0u64; shared.actions.len().div_ceil(64).max(1)];
+    let mut path: Vec<(StateKey, usize)> = Vec::new(); // (state, action edge)
     let mut evals = 0usize;
     let mut min_c = f64::INFINITY;
-    // the running spec is maintained incrementally along the trajectory
-    let mut spec = ShardingSpec::unsharded(shared.func);
+    debug_assert_eq!(engine.depth(), 0, "engine must start at the root");
 
     let terminal_reward = |min_c: f64, depth: usize| -> f64 {
         // Clamp: a catastrophic state (rel cost 77) should not poison the
@@ -201,17 +357,22 @@ fn trajectory(shared: &Shared, cfg: &SearchConfig, rng: &mut Rng) -> usize {
         // Evaluate the current state (the paper's colors-aware state is
         // duplicate-free, so the cache hits whenever any action ordering
         // reaches the same sharding).
-        let c = eval_cached(shared, &applied, key, &mut evals);
+        let c = eval_cached(shared, &key, engine, &mut evals);
+        note_best(shared, c, &applied);
         min_c = min_c.min(c);
 
         let stop_here = depth >= cfg.max_depth;
-        let candidates =
-            if stop_here { Vec::new() } else { legal_actions(shared, &applied, &spec) };
+        let candidates = if stop_here {
+            Vec::new()
+        } else {
+            legal_actions(shared, &applied_mask, engine.spec())
+        };
 
         // Choose among STOP + candidates by UCT.
         let chosen = {
-            let tree = shared.tree.lock().unwrap();
-            let node = tree.get(&key).cloned().unwrap_or_default();
+            let shard = shared.tree.shard(&key).lock().unwrap();
+            let node = shard.get(&key).cloned().unwrap_or_default();
+            drop(shard);
             let total_visits = node.visits.max(1.0);
             let mut best_a = STOP;
             let mut best_score = f64::NEG_INFINITY;
@@ -237,33 +398,23 @@ fn trajectory(shared: &Shared, cfg: &SearchConfig, rng: &mut Rng) -> usize {
         };
 
         if chosen == STOP {
-            let reward = terminal_reward(min_c, depth);
-            // Backprop along the path plus the terminal stop edge.
-            let mut tree = shared.tree.lock().unwrap();
-            {
-                let node = tree.entry(key).or_default();
-                node.visits += 1.0;
-                node.value_sum += reward;
-                let e = node.edges.entry(STOP).or_insert((0.0, 0.0));
-                e.0 += 1.0;
-                e.1 += reward;
-            }
-            for &(skey, edge) in path.iter().rev() {
-                let node = tree.entry(skey).or_default();
-                node.visits += 1.0;
-                node.value_sum += reward;
-                let e = node.edges.entry(edge).or_insert((0.0, 0.0));
-                e.0 += 1.0;
-                e.1 += reward;
-            }
+            backprop(shared, &path, &key, terminal_reward(min_c, depth));
+            engine.reset();
             return evals;
         }
 
+        let a = &shared.actions[chosen];
+        // Legality was just probed against the engine's own spec, so this
+        // apply succeeds; the defensive branch keeps a (hypothetical)
+        // failure from desynchronizing engine state and `applied`.
+        if engine.apply(&a.assignment, a.axis).is_err() {
+            backprop(shared, &path, &key, terminal_reward(min_c, depth));
+            engine.reset();
+            return evals;
+        }
         path.push((key, chosen));
         applied.push(chosen);
-        let a = &shared.actions[chosen];
-        // legality was just probed; racing cache writes don't affect spec
-        let _ = spec.apply_assignment(shared.func, shared.mesh, &a.assignment, a.axis);
+        applied_mask[chosen >> 6] |= 1u64 << (chosen & 63);
     }
 }
 
@@ -288,15 +439,22 @@ pub fn search(
         model,
         actions,
         base,
-        tree: Mutex::new(HashMap::new()),
-        eval_cache: Mutex::new(HashMap::new()),
+        tree: StripedTree::new(),
+        eval_cache: EvalCache::new(),
         best: Mutex::new((f64::INFINITY, Vec::new())),
         evals: AtomicUsize::new(0),
     };
+    // Op rules depend only on `func`: compute once, share across every
+    // worker engine in every round.
+    let rules = std::sync::Arc::new(
+        func.instrs.iter().map(|i| crate::nda::rules::op_rule(func, i)).collect::<Vec<_>>(),
+    );
 
-    // Seed: evaluate the empty state so "do nothing" is the floor.
-    let (c0, _) = evaluate(&shared, &[]);
-    shared.eval_cache.lock().unwrap().insert(state_key(&[]), c0);
+    // Seed: evaluate the empty state so "do nothing" is the floor. The
+    // unsharded module *is* the base, so its relative cost needs no
+    // evaluator run.
+    let c0 = model.relative(&base, &base);
+    shared.eval_cache.insert_done(state_key(&[]), c0);
     *shared.best.lock().unwrap() = (c0, Vec::new());
 
     let mut rounds_without_improvement = 0usize;
@@ -310,15 +468,29 @@ pub fn search(
             for t in 0..cfg.threads.max(1) {
                 let shared = &shared;
                 let cfg2 = cfg.clone();
+                let rules = rules.clone();
                 let seed =
                     cfg.seed ^ (round_idx as u64) << 32 ^ (t as u64) << 16 ^ 0xABCD;
                 scope.spawn(move || {
                     let mut rng = Rng::new(seed);
+                    // A fresh engine per worker per round (rules shared):
+                    // the cold start — one full replan on the first
+                    // evaluation — costs about one trajectory's worth of
+                    // work, amortized over the round's `round / threads`
+                    // trajectories.
+                    let mut engine = IncrementalEvaluator::with_shared_rules(
+                        shared.func,
+                        shared.mesh,
+                        shared.model,
+                        shared.base,
+                        rules,
+                    )
+                    .expect("search input is a logical module");
                     for _ in 0..per_thread {
                         if shared.evals.load(Ordering::Relaxed) >= cfg2.budget {
                             break;
                         }
-                        trajectory(shared, &cfg2, &mut rng);
+                        trajectory(shared, &cfg2, &mut rng, &mut engine);
                     }
                 });
             }
@@ -332,13 +504,47 @@ pub fn search(
         round_idx += 1;
     }
 
-    let (best_cost, best_actions) = shared.best.lock().unwrap().clone();
-    // Rebuild the winning spec.
-    let (rel, spec) = evaluate(&shared, &best_actions);
-    debug_assert!((rel - best_cost).abs() < 1e-9 || !rel.is_finite());
-    let spec = spec.unwrap_or_else(|| ShardingSpec::unsharded(func));
-    let (local, _) = partition(func, &spec, mesh).expect("winning spec partitions");
-    let cost = model.evaluate(&local, mesh);
+    let (mut best_cost, mut best_actions) = shared.best.lock().unwrap().clone();
+    // Rebuild the winning spec and re-cost it through the materialized
+    // oracle (partition + CostModel::evaluate). A best trajectory that
+    // fails to re-apply or materialize would indicate a latent
+    // symbolic/oracle divergence: degrade to a *consistent* unsharded
+    // outcome (spec, cost, actions and relative all reset) rather than
+    // aborting a release search; debug builds assert.
+    let mut spec = ShardingSpec::unsharded(func);
+    let mut reapply_ok = true;
+    for &ai in &best_actions {
+        let a = &actions[ai];
+        if spec.apply_assignment(func, mesh, &a.assignment, a.axis).is_err() {
+            reapply_ok = false;
+            break;
+        }
+    }
+    if !reapply_ok {
+        debug_assert!(false, "best trajectory actions fail to re-apply");
+        spec = ShardingSpec::unsharded(func);
+        best_actions = Vec::new();
+        best_cost = model.relative(&base, &base);
+    }
+    let cost = match partition(func, &spec, mesh) {
+        Ok((local, _)) => model.evaluate(&local, mesh),
+        Err(e) => {
+            debug_assert!(false, "winning spec fails to partition: {e:#}");
+            let _ = &e; // used only by the debug assertion
+            spec = ShardingSpec::unsharded(func);
+            best_actions = Vec::new();
+            best_cost = model.relative(&base, &base);
+            base // the unsharded module's cost
+        }
+    };
+    // Validation oracle: the symbolic relative cost the search tracked
+    // must agree with the materialized one on the final spec.
+    let oracle_rel = model.relative(&cost, &base);
+    debug_assert!(
+        !best_cost.is_finite()
+            || (oracle_rel - best_cost).abs() <= 1e-6 * oracle_rel.abs().max(1.0),
+        "final spec: symbolic {best_cost} vs oracle {oracle_rel}"
+    );
 
     SearchOutcome {
         actions: best_actions,
@@ -354,7 +560,7 @@ pub fn search(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::{FuncBuilder, TensorType, ValueId};
+    use crate::ir::{FuncBuilder, TensorType};
     use crate::mesh::{HardwareKind, HardwareProfile};
     use crate::nda::Nda;
     use crate::search::actions::{build_actions, ActionSpaceConfig};
@@ -432,5 +638,24 @@ mod tests {
         let out = search(&f, &mesh, &model, &actions, &quick_cfg());
         assert_eq!(out.relative, 1.0);
         assert!(out.actions.is_empty());
+    }
+
+    #[test]
+    fn search_with_fixed_seed_is_reproducible() {
+        let f = mlp(2048, 512, 2048, 512);
+        let mesh = Mesh::grid(&[("b", 4)]);
+        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let nda = Nda::analyze(&f);
+        let actions = build_actions(
+            &f,
+            &nda,
+            &mesh,
+            &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        );
+        let cfg = SearchConfig { threads: 1, ..quick_cfg() };
+        let a = search(&f, &mesh, &model, &actions, &cfg);
+        let b = search(&f, &mesh, &model, &actions, &cfg);
+        assert_eq!(a.relative, b.relative);
+        assert_eq!(a.actions, b.actions);
     }
 }

@@ -5,13 +5,20 @@
 //!   and parameter-group mirroring.
 //! * [`mcts`] — the Monte-Carlo Tree Search with the colors-aware
 //!   canonical state (§4.3), early termination, and parallel rollouts.
+//! * [`incremental`] — the incremental state evaluator the rollouts use:
+//!   per-instruction emission plans re-priced only where an action's
+//!   NDA-color incidence touches, replayed without materializing
+//!   device-local IR. The materialize-partition-evaluate path remains the
+//!   validation oracle.
 //!
 //! The one-call entry point is [`auto_partition`].
 
 pub mod actions;
+pub mod incremental;
 pub mod mcts;
 
 pub use actions::{build_actions, Action, ActionSpaceConfig};
+pub use incremental::IncrementalEvaluator;
 pub use mcts::{search, SearchConfig, SearchOutcome};
 
 use crate::cost::CostModel;

@@ -15,8 +15,8 @@
 pub mod partition;
 pub mod validate;
 
-pub use partition::partition;
-pub use validate::validate_spec;
+pub use partition::{partition, partition_with_rules};
+pub use validate::{validate_spec, validate_symbolic_cost};
 
 use crate::ir::{AxisId, Func, ValueId};
 use crate::mesh::Mesh;
@@ -58,6 +58,18 @@ pub struct ShardingSpec {
     /// `dims[v][d]` = mesh axes sharding dimension `d` of value `v`,
     /// in application order.
     pub dims: Vec<Vec<Vec<AxisId>>>,
+}
+
+/// Reversible record of one applied assignment (see
+/// [`ShardingSpec::apply_assignment_delta`]). The affected `(value, dim)`
+/// pairs double as the dirty set the incremental evaluator uses to decide
+/// which instructions need re-costing.
+#[derive(Clone, Debug)]
+pub struct SpecDelta {
+    /// Mesh axis the assignment sharded along.
+    pub axis: AxisId,
+    /// The `(value, dim)` pairs that gained the axis.
+    pub applied: Vec<(ValueId, usize)>,
 }
 
 impl ShardingSpec {
@@ -154,13 +166,38 @@ impl ShardingSpec {
         assignment: &[(ValueId, usize)],
         axis: AxisId,
     ) -> Result<(), ShardError> {
+        self.apply_assignment_delta(func, mesh, assignment, axis).map(|_| ())
+    }
+
+    /// [`Self::apply_assignment`], returning a [`SpecDelta`] that
+    /// [`Self::undo_delta`] reverses. This is the delta API the search's
+    /// incremental evaluator uses to extend/retract a trajectory without
+    /// rebuilding the spec from scratch.
+    pub fn apply_assignment_delta(
+        &mut self,
+        func: &Func,
+        mesh: &Mesh,
+        assignment: &[(ValueId, usize)],
+        axis: AxisId,
+    ) -> Result<SpecDelta, ShardError> {
         for &(v, d) in assignment {
             self.check(func, mesh, v, d, axis)?;
         }
         for &(v, d) in assignment {
             self.dims[v.index()][d].push(axis);
         }
-        Ok(())
+        Ok(SpecDelta { axis, applied: assignment.to_vec() })
+    }
+
+    /// Reverse a delta produced by [`Self::apply_assignment_delta`].
+    /// Deltas applied in stack (LIFO) order restore the spec exactly.
+    pub fn undo_delta(&mut self, delta: &SpecDelta) {
+        for &(v, d) in &delta.applied {
+            let axes = &mut self.dims[v.index()][d];
+            if let Some(pos) = axes.iter().rposition(|&a| a == delta.axis) {
+                axes.remove(pos);
+            }
+        }
     }
 
     /// Human-readable annotation of a value's sharding, e.g. `[256{b}, 32]`.
@@ -237,6 +274,42 @@ mod tests {
         let err = spec.apply_assignment(&f, &mesh, &[(ValueId(0), 1)], 0).unwrap_err();
         // 32 % 3 != 0
         assert!(matches!(err, ShardError::NotDivisible { .. }));
+    }
+
+    #[test]
+    fn delta_apply_undo_roundtrips() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 4), ("m", 2)]);
+        let mut spec = ShardingSpec::unsharded(&f);
+        let before = spec.clone();
+        let batch =
+            vec![(ValueId(0), 0), (ValueId(3), 0), (ValueId(4), 0), (ValueId(5), 0)];
+        let megatron =
+            vec![(ValueId(1), 1), (ValueId(3), 1), (ValueId(4), 1), (ValueId(2), 0)];
+        let d1 = spec.apply_assignment_delta(&f, &mesh, &batch, 0).unwrap();
+        let mid = spec.clone();
+        let d2 = spec.apply_assignment_delta(&f, &mesh, &megatron, 1).unwrap();
+        assert_ne!(spec, mid);
+        spec.undo_delta(&d2);
+        assert_eq!(spec, mid);
+        spec.undo_delta(&d1);
+        assert_eq!(spec, before);
+    }
+
+    #[test]
+    fn delta_failed_apply_leaves_spec_unchanged() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 4)]);
+        let mut spec = ShardingSpec::unsharded(&f);
+        spec.apply_assignment(&f, &mesh, &[(ValueId(0), 0)], 0).unwrap();
+        let before = spec.clone();
+        // second pair re-uses the axis already bound on x -> AxisInUse;
+        // the valid first pair must not be applied either.
+        let err = spec
+            .apply_assignment_delta(&f, &mesh, &[(ValueId(3), 0), (ValueId(0), 1)], 0)
+            .unwrap_err();
+        assert!(matches!(err, ShardError::AxisInUse { .. }));
+        assert_eq!(spec, before);
     }
 
     #[test]

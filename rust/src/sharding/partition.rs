@@ -13,13 +13,29 @@
 //!   device-local partial result, then `all_reduce` — or `reduce_scatter`
 //!   when the result spec wants that axis on one of its dims (the
 //!   sequence-sharding pattern of Figure 5b).
+//!
+//! ## Architecture: one rewrite, many sinks
+//!
+//! The rewrite control flow is generic over a [`PartitionSink`]: the same
+//! decision logic (contract-axis selection, operand requirements, reshard
+//! chains, spec realization) drives
+//!
+//! * [`IrSink`] (private) — materializes the device-local [`Func`] via
+//!   [`FuncBuilder`]; this is what [`partition`] uses;
+//! * the symbolic cost sink in [`crate::cost::symbolic`] — prices the
+//!   would-be device-local program without building IR;
+//! * the plan sink in [`crate::search::incremental`] — caches per-instr
+//!   emission plans for incremental re-costing during search.
+//!
+//! Because every consumer shares this module's control flow, the symbolic
+//! evaluators agree with the materialize-partition-evaluate oracle by
+//! construction (the integration and property tests enforce ≤ 1e-6
+//! relative-cost divergence).
 
 use super::ShardingSpec;
-use crate::ir::{
-    AxisId, Func, FuncBuilder, Instr, OpKind, TensorType, ValueId,
-};
+use crate::ir::{AxisId, DType, Func, FuncBuilder, Instr, OpKind, TensorType, ValueId};
 use crate::mesh::Mesh;
-use crate::nda::rules::op_rule;
+use crate::nda::rules::{op_rule, OpRule};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 
@@ -39,72 +55,288 @@ impl PartitionStats {
     }
 }
 
-/// Partition `func` under `spec` for `mesh`. Returns the device-local
-/// function (identical on all devices; collectives reference mesh axes)
-/// and collective statistics.
-pub fn partition(func: &Func, spec: &ShardingSpec, mesh: &Mesh) -> Result<(Func, PartitionStats)> {
-    let mut stats = PartitionStats::default();
-    let mut b = FuncBuilder::new(format!("{}_local", func.name));
+/// Shared read-only context threaded through the generic rewrite.
+pub struct Pctx<'a> {
+    pub func: &'a Func,
+    pub spec: &'a ShardingSpec,
+    pub mesh: &'a Mesh,
+}
 
-    // Map old value -> new value carrying the *spec* sharding of the old
-    // value.
-    let mut map: Vec<ValueId> = Vec::with_capacity(func.num_values());
-    for (pi, p) in func.params.iter().enumerate() {
-        let local = spec.local_shape(func, mesh, ValueId(pi as u32));
-        map.push(b.param(p.name.clone(), TensorType::new(local, p.ty.dtype)));
+/// Interner for required-sharding vectors (`dim -> axes`), so reshard
+/// caches key on a compact `u32` instead of cloning `Vec<Vec<AxisId>>`
+/// on every operand lookup.
+#[derive(Default)]
+pub struct ReqInterner {
+    map: HashMap<Vec<Vec<AxisId>>, u32>,
+    rev: Vec<Vec<Vec<AxisId>>>,
+}
+
+impl ReqInterner {
+    pub fn new() -> Self {
+        ReqInterner::default()
     }
 
-    // Reshard cache: (old value, required sharding) -> new value.
-    let mut reshard_cache: HashMap<(u32, Vec<Vec<AxisId>>), ValueId> = HashMap::new();
+    /// Intern `req`, cloning only on first sight.
+    pub fn intern(&mut self, req: &[Vec<AxisId>]) -> u32 {
+        if let Some(&id) = self.map.get(req) {
+            return id;
+        }
+        let id = self.rev.len() as u32;
+        self.map.insert(req.to_vec(), id);
+        self.rev.push(req.to_vec());
+        id
+    }
 
-    for instr in &func.instrs {
+    /// The interned requirement.
+    pub fn resolve(&self, id: u32) -> &[Vec<AxisId>] {
+        &self.rev[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.rev.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rev.is_empty()
+    }
+}
+
+/// One step of a reshard chain (pure description; sinks turn steps into
+/// collectives).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReshardStep {
+    /// Move `axis` wholesale: `split_dim` gets split, `concat_dim` gathered.
+    AllToAll { axis: AxisId, split_dim: usize, concat_dim: usize },
+    /// Drop the innermost subdivision of `dim` by `axis`.
+    AllGather { axis: AxisId, dim: usize },
+    /// Subdivide `dim` by `axis` (zero communication).
+    ShardSlice { axis: AxisId, dim: usize },
+}
+
+impl ReshardStep {
+    /// The step's local-shape transition (the single definition every
+    /// symbolic consumer shares; [`crate::ir::FuncBuilder`]'s collective
+    /// inference is the materialized twin).
+    pub fn apply_to_shape(&self, mesh: &Mesh, shape: &mut [i64]) {
+        match *self {
+            ReshardStep::AllToAll { axis, split_dim, concat_dim } => {
+                let n = mesh.axis_size(axis) as i64;
+                shape[split_dim] /= n;
+                shape[concat_dim] *= n;
+            }
+            ReshardStep::AllGather { axis, dim } => {
+                shape[dim] *= mesh.axis_size(axis) as i64;
+            }
+            ReshardStep::ShardSlice { axis, dim } => {
+                shape[dim] /= mesh.axis_size(axis) as i64;
+            }
+        }
+    }
+}
+
+/// Compute the collective chain resharding a value laid out as `cur0`
+/// into `required`. Axis lists record subdivision order (outermost
+/// first); only the *innermost* (last-applied) axis can be gathered
+/// directly, so mismatched dims unwind down to their longest common
+/// prefix with the requirement, innermost-first. A single stray axis
+/// moving wholesale to a dim where it becomes the innermost subdivision
+/// is one `all_to_all`.
+pub fn reshard_steps(
+    func: &Func,
+    old: ValueId,
+    cur0: &[Vec<AxisId>],
+    required: &[Vec<AxisId>],
+) -> Result<Vec<ReshardStep>> {
+    let rank = cur0.len();
+    let mut cur: Vec<Vec<AxisId>> = cur0.to_vec();
+    let mut steps = Vec::new();
+    // Pass 1: unwind mismatched dims.
+    for i in 0..rank {
+        if cur[i] == required[i] {
+            continue;
+        }
+        if cur[i].len() == 1 && required[i].is_empty() {
+            let a = cur[i][0];
+            let target = (0..rank).find(|&j| {
+                j != i
+                    && required[j].last() == Some(&a)
+                    && cur[j].as_slice() == &required[j][..required[j].len() - 1]
+            });
+            if let Some(j) = target {
+                // all_to_all: dim j gets split, dim i gets gathered.
+                steps.push(ReshardStep::AllToAll { axis: a, split_dim: j, concat_dim: i });
+                cur[i].clear();
+                cur[j].push(a);
+                continue;
+            }
+        }
+        let common =
+            cur[i].iter().zip(&required[i]).take_while(|(a, b)| a == b).count();
+        let to_gather: Vec<AxisId> = cur[i][common..].to_vec();
+        for &a in to_gather.iter().rev() {
+            steps.push(ReshardStep::AllGather { axis: a, dim: i });
+            cur[i].pop();
+        }
+    }
+    // Pass 2: shard replicated dims the requirement wants sharded,
+    // appending axes in requirement (outer-to-inner) order.
+    for j in 0..rank {
+        let start = cur[j].len();
+        for k in start..required[j].len() {
+            let a = required[j][k];
+            if cur.iter().any(|axes| axes.contains(&a)) {
+                bail!(
+                    "reshard of {}: axis {a} required on dim {j} but still \
+                     bound elsewhere",
+                    func.value_name(old)
+                );
+            }
+            steps.push(ReshardStep::ShardSlice { axis: a, dim: j });
+            cur[j].push(a);
+        }
+    }
+    if cur.as_slice() != required {
+        bail!(
+            "reshard of {} failed to reach requirement: {:?} vs {:?}",
+            func.value_name(old),
+            cur,
+            required
+        );
+    }
+    Ok(steps)
+}
+
+/// Emit a precomputed reshard chain through a sink, updating `stats`.
+pub fn apply_reshard_steps<S: PartitionSink>(
+    sink: &mut S,
+    mesh: &Mesh,
+    mut v: S::V,
+    steps: &[ReshardStep],
+    stats: &mut PartitionStats,
+) -> S::V {
+    for step in steps {
+        match *step {
+            ReshardStep::AllToAll { axis, split_dim, concat_dim } => {
+                v = sink.all_to_all(v, axis, split_dim, concat_dim, mesh.axis_size(axis) as i64);
+                stats.all_to_all += 1;
+            }
+            ReshardStep::AllGather { axis, dim } => {
+                v = sink.all_gather(v, axis, dim, mesh.axis_size(axis) as i64);
+                stats.all_gather += 1;
+            }
+            ReshardStep::ShardSlice { axis, dim } => {
+                v = sink.shard_slice(v, axis, dim, mesh.axis_size(axis) as i64);
+                stats.shard_slice += 1;
+            }
+        }
+    }
+    v
+}
+
+/// Abstract emission target of the partition rewrite. `V` names a
+/// device-local value in whatever representation the sink maintains
+/// (IR `ValueId`, symbolic value index, plan reference).
+pub trait PartitionSink {
+    type V: Copy;
+
+    /// The current device-local form of logical value `old` (carrying
+    /// `spec`'s sharding of it).
+    fn mapped(&self, old: ValueId) -> Self::V;
+    /// Record the device-local form of the next logical value (params
+    /// first, then each instruction result, in order).
+    fn push_mapped(&mut self, v: Self::V);
+    /// Local shape of `v`.
+    fn shape(&self, v: Self::V) -> Vec<i64>;
+
+    /// Declare a device-local parameter.
+    fn param(&mut self, name: &str, shape: Vec<i64>, dtype: DType) -> Self::V;
+    /// Reshard logical value `old` to the `required` sharding (cached per
+    /// `(old, required)`; identity reshards return `mapped(old)`).
+    fn reshard(
+        &mut self,
+        cx: &Pctx,
+        old: ValueId,
+        required: &[Vec<AxisId>],
+        stats: &mut PartitionStats,
+    ) -> Result<Self::V>;
+
+    fn constant(&mut self, value: f64, shape: Vec<i64>, dtype: DType) -> Self::V;
+    fn iota(&mut self, dim: usize, shape: Vec<i64>, dtype: DType) -> Self::V;
+    /// Emit the device-local version of `instr` on already-resharded
+    /// operands. `local_result_shape` is the spec-realized result shape
+    /// (used by shape-carrying ops like broadcast; other ops infer their
+    /// local shape from local operands).
+    fn local_op(&mut self, instr: &Instr, operands: &[Self::V], local_result_shape: &[i64]) -> Self::V;
+    fn reshape(&mut self, v: Self::V, shape: &[i64]) -> Self::V;
+    fn shard_slice(&mut self, v: Self::V, axis: AxisId, dim: usize, axis_size: i64) -> Self::V;
+    fn all_gather(&mut self, v: Self::V, axis: AxisId, dim: usize, axis_size: i64) -> Self::V;
+    fn all_reduce(&mut self, v: Self::V, axes: Vec<AxisId>, kind: crate::ir::ReduceKind) -> Self::V;
+    fn reduce_scatter(
+        &mut self,
+        v: Self::V,
+        axis: AxisId,
+        dim: usize,
+        axis_size: i64,
+        kind: crate::ir::ReduceKind,
+    ) -> Self::V;
+    fn all_to_all(
+        &mut self,
+        v: Self::V,
+        axis: AxisId,
+        split_dim: usize,
+        concat_dim: usize,
+        axis_size: i64,
+    ) -> Self::V;
+}
+
+/// Run the full partition rewrite through `sink`; returns the sink values
+/// of the function results.
+pub fn run_partition<S: PartitionSink>(
+    cx: &Pctx,
+    rules: &[OpRule],
+    sink: &mut S,
+    stats: &mut PartitionStats,
+) -> Result<Vec<S::V>> {
+    for (pi, p) in cx.func.params.iter().enumerate() {
+        let local = cx.spec.local_shape(cx.func, cx.mesh, ValueId(pi as u32));
+        let v = sink.param(&p.name, local, p.ty.dtype);
+        sink.push_mapped(v);
+    }
+    for (ii, instr) in cx.func.instrs.iter().enumerate() {
         if instr.kind.is_device_local_only() {
             bail!("partition input must be a logical module");
         }
-        let rewritten = rewrite_instr(
-            func,
-            spec,
-            mesh,
-            instr,
-            &mut b,
-            &map,
-            &mut reshard_cache,
-            &mut stats,
-        )?;
-        map.push(rewritten);
+        let v = rewrite_instr_core(cx, instr, &rules[ii], sink, stats)?;
+        sink.push_mapped(v);
     }
-
-    let results = func.results.iter().map(|&r| map[r.index()]).collect();
-    Ok((b.build(results), stats))
+    Ok(cx.func.results.iter().map(|&r| sink.mapped(r)).collect())
 }
 
-#[allow(clippy::too_many_arguments)]
-fn rewrite_instr(
-    func: &Func,
-    spec: &ShardingSpec,
-    mesh: &Mesh,
+/// Rewrite one instruction through `sink`. Exposed for the incremental
+/// engine, which (re)builds per-instruction emission plans.
+pub fn rewrite_instr_core<S: PartitionSink>(
+    cx: &Pctx,
     instr: &Instr,
-    b: &mut FuncBuilder,
-    map: &[ValueId],
-    reshard_cache: &mut HashMap<(u32, Vec<Vec<AxisId>>), ValueId>,
+    rule: &OpRule,
+    sink: &mut S,
     stats: &mut PartitionStats,
-) -> Result<ValueId> {
+) -> Result<S::V> {
+    let (func, spec, mesh) = (cx.func, cx.spec, cx.mesh);
     let result = instr.result;
     let out_spec: &Vec<Vec<AxisId>> = &spec.dims[result.index()];
-    let rule = op_rule(func, instr);
 
     // ---- special cases with explicit output shapes -----------------------
     match &instr.kind {
         OpKind::Constant { value } => {
             // Splat constants shard for free: just emit the local shape.
             let local = spec.local_shape(func, mesh, result);
-            return Ok(b.constant(*value, TensorType::new(local, instr.ty.dtype)));
+            return Ok(sink.constant(*value, local, instr.ty.dtype));
         }
         OpKind::Iota { dim } => {
             let sharded_iota_dim = !out_spec[*dim].is_empty();
             if !sharded_iota_dim {
                 let local = spec.local_shape(func, mesh, result);
-                return Ok(b.iota(*dim, TensorType::new(local, instr.ty.dtype)));
+                return Ok(sink.iota(*dim, local, instr.ty.dtype));
             }
             // Compute at full size along `dim` (other dims local), then
             // shard_slice the iota dim: values differ per device, so the
@@ -115,15 +347,15 @@ fn rewrite_instr(
                     *s /= spec.shard_factor(mesh, result, d);
                 }
             }
-            let mut v = b.iota(*dim, TensorType::new(shape, instr.ty.dtype));
+            let mut v = sink.iota(*dim, shape, instr.ty.dtype);
             for &axis in &out_spec[*dim] {
-                v = b.shard_slice(v, axis, *dim, mesh.axis_size(axis) as i64);
+                v = sink.shard_slice(v, axis, *dim, mesh.axis_size(axis) as i64);
                 stats.shard_slice += 1;
             }
             return Ok(v);
         }
         OpKind::Reshape => {
-            return rewrite_reshape(func, spec, mesh, instr, b, map, stats);
+            return rewrite_reshape_core(cx, instr, sink, stats);
         }
         _ => {}
     }
@@ -188,22 +420,12 @@ fn rewrite_instr(
     }
 
     // ---- reshard operands ---------------------------------------------------
-    let mut new_operands = Vec::with_capacity(n_ops);
+    let mut new_operands: Vec<S::V> = Vec::with_capacity(n_ops);
     for (oi, &opnd) in instr.operands.iter().enumerate() {
-        let v = reshard(
-            func,
-            spec,
-            mesh,
-            b,
-            map[opnd.index()],
-            opnd,
-            &req[oi],
-            reshard_cache,
-            stats,
-        )?;
+        let v = sink.reshard(cx, opnd, &req[oi], stats)?;
         // Invariant: the resharded operand's local shape must match the
         // requirement exactly.
-        let got = b.shape(v);
+        let got = sink.shape(v);
         let full = &func.ty(opnd).shape;
         for d in 0..full.len() {
             let factor: i64 =
@@ -242,17 +464,17 @@ fn rewrite_instr(
             s
         })
         .collect();
-    let mut new_v = emit_local_op(b, instr, &new_operands, &local_result_shape);
+    let mut new_v = sink.local_op(instr, &new_operands, &local_result_shape);
 
     // ---- post-process contracted axes ---------------------------------------
     for &(gi, a) in &used_contract_axes {
         let kind = rule.contracts[gi].1;
         // reduce_scatter if the result spec wants this axis on some dim.
         if let Some(r) = (0..instr.ty.rank()).find(|&r| out_spec[r].contains(&a)) {
-            new_v = b.reduce_scatter(new_v, a, r, mesh.axis_size(a) as i64, kind);
+            new_v = sink.reduce_scatter(new_v, a, r, mesh.axis_size(a) as i64, kind);
             stats.reduce_scatter += 1;
         } else {
-            new_v = b.all_reduce(new_v, vec![a], kind);
+            new_v = sink.all_reduce(new_v, vec![a], kind);
             stats.all_reduce += 1;
         }
     }
@@ -263,7 +485,7 @@ fn rewrite_instr(
     // at full size from gathered operands — i.e. replicated — so a
     // zero-communication shard_slice realizes the spec there.
     {
-        let got = b.shape(new_v);
+        let got = sink.shape(new_v);
         for d in 0..instr.ty.rank() {
             let expected = instr.ty.shape[d] / spec.shard_factor(mesh, instr.result, d);
             if got[d] == expected {
@@ -273,7 +495,7 @@ fn rewrite_instr(
             for &a in out_spec[d].iter().rev() {
                 let sz = mesh.axis_size(a) as i64;
                 if remaining > 1 && remaining % sz == 0 {
-                    new_v = b.shard_slice(new_v, a, d, sz);
+                    new_v = sink.shard_slice(new_v, a, d, sz);
                     stats.shard_slice += 1;
                     remaining /= sz;
                 }
@@ -290,170 +512,17 @@ fn rewrite_instr(
     Ok(new_v)
 }
 
-/// Reshard `new_v` (the device-local realization of old value `old`, laid
-/// out per `spec`) to the `required` sharding.
-#[allow(clippy::too_many_arguments)]
-fn reshard(
-    func: &Func,
-    spec: &ShardingSpec,
-    mesh: &Mesh,
-    b: &mut FuncBuilder,
-    new_v: ValueId,
-    old: ValueId,
-    required: &[Vec<AxisId>],
-    cache: &mut HashMap<(u32, Vec<Vec<AxisId>>), ValueId>,
-    stats: &mut PartitionStats,
-) -> Result<ValueId> {
-    let cur: Vec<Vec<AxisId>> = spec.dims[old.index()].clone();
-    if cur == *required {
-        return Ok(new_v);
-    }
-    let key = (old.0, required.to_vec());
-    if let Some(&v) = cache.get(&key) {
-        return Ok(v);
-    }
-
-    let rank = cur.len();
-    let mut cur = cur;
-    let mut v = new_v;
-    // Pass 1: unwind mismatched dims. Axis lists record subdivision order
-    // (outermost first); only the *innermost* (last-applied) axis can be
-    // gathered directly, so unwind each dim down to its longest common
-    // prefix with the requirement, innermost-first.
-    for i in 0..rank {
-        if cur[i] == required[i] {
-            continue;
-        }
-        // Fast path: a single stray axis moving wholesale to a dim where
-        // it would become the innermost subdivision — one all_to_all.
-        if cur[i].len() == 1 && required[i].is_empty() {
-            let a = cur[i][0];
-            let target = (0..rank).find(|&j| {
-                j != i
-                    && required[j].last() == Some(&a)
-                    && cur[j].as_slice() == &required[j][..required[j].len() - 1]
-            });
-            if let Some(j) = target {
-                // all_to_all: dim j gets split, dim i gets gathered.
-                v = b.all_to_all(v, a, j, i, mesh.axis_size(a) as i64);
-                stats.all_to_all += 1;
-                cur[i].clear();
-                cur[j].push(a);
-                continue;
-            }
-        }
-        let common =
-            cur[i].iter().zip(&required[i]).take_while(|(a, b)| a == b).count();
-        let to_gather: Vec<AxisId> = cur[i][common..].to_vec();
-        for &a in to_gather.iter().rev() {
-            v = b.all_gather(v, a, i, mesh.axis_size(a) as i64);
-            stats.all_gather += 1;
-            cur[i].pop();
-        }
-    }
-    // Pass 2: shard replicated dims the requirement wants sharded,
-    // appending axes in requirement (outer-to-inner) order.
-    for j in 0..rank {
-        let start = cur[j].len();
-        for k in start..required[j].len() {
-            let a = required[j][k];
-            if cur.iter().any(|axes| axes.contains(&a)) {
-                bail!(
-                    "reshard of {}: axis {a} required on dim {j} but still \
-                     bound elsewhere",
-                    func.value_name(old)
-                );
-            }
-            v = b.shard_slice(v, a, j, mesh.axis_size(a) as i64);
-            stats.shard_slice += 1;
-            cur[j].push(a);
-        }
-    }
-    if &cur != required {
-        bail!(
-            "reshard of {} failed to reach requirement: {:?} vs {:?}",
-            func.value_name(old),
-            cur,
-            required
-        );
-    }
-    cache.insert(key, v);
-    Ok(v)
-}
-
-/// Emit the op with local shapes. Most ops infer their local result shape
-/// from local operands; ops with explicit shape attributes are rebuilt.
-fn emit_local_op(
-    b: &mut FuncBuilder,
-    instr: &Instr,
-    operands: &[ValueId],
-    local_result_shape: &[i64],
-) -> ValueId {
-    match &instr.kind {
-        OpKind::Broadcast { dims } => {
-            b.broadcast(operands[0], local_result_shape, dims)
-        }
-        OpKind::Slice { starts, limits, strides } => {
-            // Sharded dims are full-extent by the rule; rescale their
-            // limits to the local size.
-            let in_shape = b.shape(operands[0]);
-            let st = starts.clone();
-            let mut li = limits.clone();
-            for d in 0..in_shape.len() {
-                if li[d] - st[d] == 0 {
-                    continue;
-                }
-                // full-extent sharded dim: local extent
-                if st[d] == 0 && strides[d] == 1 && local_result_shape[d] == in_shape[d] {
-                    li[d] = in_shape[d];
-                }
-            }
-            b.slice(operands[0], &st, &li, strides)
-        }
-        OpKind::DotGeneral { lhs_batch, rhs_batch, lhs_contract, rhs_contract } => b
-            .dot_general(
-                operands[0],
-                operands[1],
-                lhs_batch,
-                rhs_batch,
-                lhs_contract,
-                rhs_contract,
-            ),
-        OpKind::Transpose { perm } => b.transpose(operands[0], perm),
-        OpKind::Reduce { dims, kind } => b.reduce(operands[0], dims, *kind),
-        OpKind::Concat { dim } => b.concat(operands, *dim),
-        OpKind::Conv2d { stride, padding } => {
-            b.conv2d(operands[0], operands[1], *stride, *padding)
-        }
-        OpKind::Gather { axis } => b.gather(operands[0], operands[1], *axis),
-        OpKind::Scatter { axis, kind } => {
-            b.scatter(operands[0], operands[1], operands[2], *axis, *kind)
-        }
-        OpKind::Unary(u) => b.unary(*u, operands[0]),
-        OpKind::Binary(op) => b.binary(*op, operands[0], operands[1]),
-        OpKind::Convert => b.convert(operands[0], instr.ty.dtype),
-        OpKind::Select => b.select(operands[0], operands[1], operands[2]),
-        OpKind::Compare(c) => b.compare(*c, operands[0], operands[1]),
-        OpKind::Constant { .. } | OpKind::Iota { .. } | OpKind::Reshape => {
-            unreachable!("handled in rewrite_instr")
-        }
-        _ => unreachable!("collectives never appear in logical modules"),
-    }
-}
-
 /// Reshape: leading dims with exactly matching sizes shard through; if any
 /// later output dim is sharded, fall back to gather-all → full reshape →
 /// shard-slice (the universal fallback every partitioner needs for
 /// split/merge reshapes).
-fn rewrite_reshape(
-    func: &Func,
-    spec: &ShardingSpec,
-    mesh: &Mesh,
+fn rewrite_reshape_core<S: PartitionSink>(
+    cx: &Pctx,
     instr: &Instr,
-    b: &mut FuncBuilder,
-    map: &[ValueId],
+    sink: &mut S,
     stats: &mut PartitionStats,
-) -> Result<ValueId> {
+) -> Result<S::V> {
+    let (func, spec, mesh) = (cx.func, cx.spec, cx.mesh);
     let opnd = instr.operands[0];
     let in_shape = &func.ty(opnd).shape;
     let out_shape = &instr.ty.shape;
@@ -467,20 +536,20 @@ fn rewrite_reshape(
     let opnd_tail_sharded =
         (matched..in_shape.len()).any(|d| !spec.dims[opnd.index()][d].is_empty());
 
-    let mut v = map[opnd.index()];
     if tail_sharded || opnd_tail_sharded {
         // Gather operand fully, reshape at full size, reslice result.
+        let mut v = sink.mapped(opnd);
         for d in 0..in_shape.len() {
-            for &a in spec.dims[opnd.index()][d].clone().iter() {
-                v = b.all_gather(v, a, d, mesh.axis_size(a) as i64);
+            for &a in spec.dims[opnd.index()][d].iter() {
+                v = sink.all_gather(v, a, d, mesh.axis_size(a) as i64);
                 stats.all_gather += 1;
             }
         }
         let mut local_out = out_shape.clone();
-        v = b.reshape(v, &local_out);
+        v = sink.reshape(v, &local_out);
         for (d, axes) in out_spec.iter().enumerate() {
             for &a in axes {
-                v = b.shard_slice(v, a, d, mesh.axis_size(a) as i64);
+                v = sink.shard_slice(v, a, d, mesh.axis_size(a) as i64);
                 stats.shard_slice += 1;
                 local_out[d] /= mesh.axis_size(a) as i64;
             }
@@ -494,13 +563,188 @@ fn rewrite_reshape(
             *axes = out_spec[d].clone();
         }
         // drop stray axes / add missing ones via the generic machinery
-        let mut cache = HashMap::new();
-        v = reshard(func, spec, mesh, b, v, opnd, &required, &mut cache, stats)?;
+        let v = sink.reshard(cx, opnd, &required, stats)?;
         let local_out: Vec<i64> = (0..out_shape.len())
             .map(|d| out_shape[d] / spec.shard_factor(mesh, instr.result, d))
             .collect();
-        Ok(b.reshape(v, &local_out))
+        Ok(sink.reshape(v, &local_out))
     }
+}
+
+/// IR-materializing sink: builds the device-local [`Func`].
+struct IrSink {
+    b: FuncBuilder,
+    map: Vec<ValueId>,
+    cache: HashMap<(u32, u32), ValueId>,
+    interner: ReqInterner,
+}
+
+impl PartitionSink for IrSink {
+    type V = ValueId;
+
+    fn mapped(&self, old: ValueId) -> ValueId {
+        self.map[old.index()]
+    }
+
+    fn push_mapped(&mut self, v: ValueId) {
+        self.map.push(v);
+    }
+
+    fn shape(&self, v: ValueId) -> Vec<i64> {
+        self.b.shape(v)
+    }
+
+    fn param(&mut self, name: &str, shape: Vec<i64>, dtype: DType) -> ValueId {
+        self.b.param(name.to_string(), TensorType::new(shape, dtype))
+    }
+
+    fn reshard(
+        &mut self,
+        cx: &Pctx,
+        old: ValueId,
+        required: &[Vec<AxisId>],
+        stats: &mut PartitionStats,
+    ) -> Result<ValueId> {
+        if cx.spec.dims[old.index()].as_slice() == required {
+            return Ok(self.mapped(old));
+        }
+        let rid = self.interner.intern(required);
+        if let Some(&v) = self.cache.get(&(old.0, rid)) {
+            return Ok(v);
+        }
+        let steps = reshard_steps(cx.func, old, &cx.spec.dims[old.index()], required)?;
+        let v0 = self.mapped(old);
+        let v = apply_reshard_steps(self, cx.mesh, v0, &steps, stats);
+        self.cache.insert((old.0, rid), v);
+        Ok(v)
+    }
+
+    fn constant(&mut self, value: f64, shape: Vec<i64>, dtype: DType) -> ValueId {
+        self.b.constant(value, TensorType::new(shape, dtype))
+    }
+
+    fn iota(&mut self, dim: usize, shape: Vec<i64>, dtype: DType) -> ValueId {
+        self.b.iota(dim, TensorType::new(shape, dtype))
+    }
+
+    fn local_op(&mut self, instr: &Instr, operands: &[ValueId], local_result_shape: &[i64]) -> ValueId {
+        let b = &mut self.b;
+        match &instr.kind {
+            OpKind::Broadcast { dims } => b.broadcast(operands[0], local_result_shape, dims),
+            OpKind::Slice { starts, limits, strides } => {
+                // Sharded dims are full-extent by the rule; rescale their
+                // limits to the local size.
+                let in_shape = b.shape(operands[0]);
+                let st = starts.clone();
+                let mut li = limits.clone();
+                for d in 0..in_shape.len() {
+                    if li[d] - st[d] == 0 {
+                        continue;
+                    }
+                    // full-extent sharded dim: local extent
+                    if st[d] == 0 && strides[d] == 1 && local_result_shape[d] == in_shape[d] {
+                        li[d] = in_shape[d];
+                    }
+                }
+                b.slice(operands[0], &st, &li, strides)
+            }
+            OpKind::DotGeneral { lhs_batch, rhs_batch, lhs_contract, rhs_contract } => b
+                .dot_general(
+                    operands[0],
+                    operands[1],
+                    lhs_batch,
+                    rhs_batch,
+                    lhs_contract,
+                    rhs_contract,
+                ),
+            OpKind::Transpose { perm } => b.transpose(operands[0], perm),
+            OpKind::Reduce { dims, kind } => b.reduce(operands[0], dims, *kind),
+            OpKind::Concat { dim } => b.concat(operands, *dim),
+            OpKind::Conv2d { stride, padding } => {
+                b.conv2d(operands[0], operands[1], *stride, *padding)
+            }
+            OpKind::Gather { axis } => b.gather(operands[0], operands[1], *axis),
+            OpKind::Scatter { axis, kind } => {
+                b.scatter(operands[0], operands[1], operands[2], *axis, *kind)
+            }
+            OpKind::Unary(u) => b.unary(*u, operands[0]),
+            OpKind::Binary(op) => b.binary(*op, operands[0], operands[1]),
+            OpKind::Convert => b.convert(operands[0], instr.ty.dtype),
+            OpKind::Select => b.select(operands[0], operands[1], operands[2]),
+            OpKind::Compare(c) => b.compare(*c, operands[0], operands[1]),
+            OpKind::Constant { .. } | OpKind::Iota { .. } | OpKind::Reshape => {
+                unreachable!("handled in rewrite_instr_core")
+            }
+            _ => unreachable!("collectives never appear in logical modules"),
+        }
+    }
+
+    fn reshape(&mut self, v: ValueId, shape: &[i64]) -> ValueId {
+        self.b.reshape(v, shape)
+    }
+
+    fn shard_slice(&mut self, v: ValueId, axis: AxisId, dim: usize, axis_size: i64) -> ValueId {
+        self.b.shard_slice(v, axis, dim, axis_size)
+    }
+
+    fn all_gather(&mut self, v: ValueId, axis: AxisId, dim: usize, axis_size: i64) -> ValueId {
+        self.b.all_gather(v, axis, dim, axis_size)
+    }
+
+    fn all_reduce(&mut self, v: ValueId, axes: Vec<AxisId>, kind: crate::ir::ReduceKind) -> ValueId {
+        self.b.all_reduce(v, axes, kind)
+    }
+
+    fn reduce_scatter(
+        &mut self,
+        v: ValueId,
+        axis: AxisId,
+        dim: usize,
+        axis_size: i64,
+        kind: crate::ir::ReduceKind,
+    ) -> ValueId {
+        self.b.reduce_scatter(v, axis, dim, axis_size, kind)
+    }
+
+    fn all_to_all(
+        &mut self,
+        v: ValueId,
+        axis: AxisId,
+        split_dim: usize,
+        concat_dim: usize,
+        axis_size: i64,
+    ) -> ValueId {
+        self.b.all_to_all(v, axis, split_dim, concat_dim, axis_size)
+    }
+}
+
+/// Partition `func` under `spec` for `mesh`. Returns the device-local
+/// function (identical on all devices; collectives reference mesh axes)
+/// and collective statistics.
+pub fn partition(func: &Func, spec: &ShardingSpec, mesh: &Mesh) -> Result<(Func, PartitionStats)> {
+    let rules: Vec<OpRule> = func.instrs.iter().map(|i| op_rule(func, i)).collect();
+    partition_with_rules(func, spec, mesh, &rules)
+}
+
+/// [`partition`] with precomputed per-instruction [`OpRule`]s (rules
+/// depend only on `func`, so repeated callers — the search oracle, the
+/// throughput probes — can amortize them).
+pub fn partition_with_rules(
+    func: &Func,
+    spec: &ShardingSpec,
+    mesh: &Mesh,
+    rules: &[OpRule],
+) -> Result<(Func, PartitionStats)> {
+    let mut stats = PartitionStats::default();
+    let mut sink = IrSink {
+        b: FuncBuilder::new(format!("{}_local", func.name)),
+        map: Vec::with_capacity(func.num_values()),
+        cache: HashMap::new(),
+        interner: ReqInterner::new(),
+    };
+    let cx = Pctx { func, spec, mesh };
+    let results = run_partition(&cx, rules, &mut sink, &mut stats)?;
+    Ok((sink.b.build(results), stats))
 }
 
 #[cfg(test)]
@@ -620,24 +864,53 @@ mod tests {
         let f = fb.build(vec![y]);
         let mesh = Mesh::grid(&[("d", 2)]);
         let mut spec = ShardingSpec::unsharded(&f);
-        // x sharded dim0; y replicated; w sharded on dim... shard w dim0 and
-        // x dim1 => contraction sharded; but give x's spec dim0 so the
-        // partitioner must move x's axis from dim0 to dim1: craft spec
-        // directly.
         spec.dims[0][0] = vec![0]; // x dim0 sharded
         spec.dims[1][0] = vec![0]; // w dim0 sharded (contract)
-        // y replicated
-        // For the matmul, contract group wants axis 0 on x.1 and w.0; x has
-        // it on dim0 -> all_to_all 0 -> 1.
-        // NOTE: contract selection looks at x's spec dim1 which is empty, so
-        // the contract won't fire; instead w gets gathered and x stays; to
-        // exercise all_to_all, shard x.1 in the spec and place the axis on
-        // dim0 "physically" — covered by reshard unit behaviour below.
+        // y replicated: the rule maps y.0 <- x.0, so x's dim0 axis must be
+        // dropped (gathered); the contract doesn't fire because x.1 is
+        // unsharded in the spec.
         let (local, stats) = partition(&f, &spec, &mesh).unwrap();
-        // x's dim0 axis must be dropped (gathered) because y is replicated
-        // and the rule maps y.0 <- x.0.
         assert!(stats.all_gather >= 1);
         verify_device_local_with(&local, &mesh).unwrap();
         let _ = stats.all_to_all;
+    }
+
+    #[test]
+    fn reshard_steps_move_and_unwind() {
+        let mut fb = FuncBuilder::new("f");
+        let x = fb.param("x", TensorType::f32(vec![8, 8]));
+        let f = fb.build(vec![x]);
+        // single stray axis moving wholesale -> one all_to_all
+        let cur = vec![vec![0usize], vec![]];
+        let req = vec![vec![], vec![0usize]];
+        let steps = reshard_steps(&f, ValueId(0), &cur, &req).unwrap();
+        assert_eq!(
+            steps,
+            vec![ReshardStep::AllToAll { axis: 0, split_dim: 1, concat_dim: 0 }]
+        );
+        // unwind innermost-first then reshard
+        let cur = vec![vec![0usize, 1], vec![]];
+        let req = vec![vec![0usize], vec![1usize]];
+        let steps = reshard_steps(&f, ValueId(0), &cur, &req).unwrap();
+        assert_eq!(
+            steps,
+            vec![
+                ReshardStep::AllGather { axis: 1, dim: 0 },
+                ReshardStep::ShardSlice { axis: 1, dim: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn req_interner_dedups() {
+        let mut i = ReqInterner::new();
+        let a = vec![vec![0usize], vec![]];
+        let b = vec![vec![], vec![1usize]];
+        let ia = i.intern(&a);
+        let ib = i.intern(&b);
+        assert_ne!(ia, ib);
+        assert_eq!(i.intern(&a), ia);
+        assert_eq!(i.resolve(ib), b.as_slice());
+        assert_eq!(i.len(), 2);
     }
 }

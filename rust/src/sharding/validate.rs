@@ -1,8 +1,12 @@
 //! Numeric validation: prove a partitioner rewrite is semantics-preserving
 //! by executing the logical function and the device-local function (on the
-//! lock-step SPMD interpreter) and comparing outputs.
+//! lock-step SPMD interpreter) and comparing outputs — plus the cost-side
+//! oracle check ([`validate_symbolic_cost`]) that the symbolic evaluator
+//! agrees with materialize-partition-evaluate on a given spec.
 
 use super::{partition, ShardingSpec};
+use crate::cost::symbolic::SymbolicEvaluator;
+use crate::cost::CostModel;
 use crate::ir::interp::{eval_func, eval_spmd, Tensor};
 use crate::ir::{DType, Func};
 use crate::mesh::Mesh;
@@ -126,6 +130,26 @@ pub fn validate_spec(func: &Func, spec: &ShardingSpec, mesh: &Mesh, seed: u64) -
     Ok(Validation { max_abs_diff: max_diff, stats })
 }
 
+/// Cross-check the symbolic cost evaluator against the
+/// materialize-partition-evaluate oracle on one spec. Returns
+/// `|relative_symbolic - relative_oracle|`; the search asserts this stays
+/// below `1e-6` on every validated state.
+pub fn validate_symbolic_cost(
+    func: &Func,
+    spec: &ShardingSpec,
+    mesh: &Mesh,
+    model: &CostModel,
+) -> Result<f64> {
+    let unsharded = ShardingSpec::unsharded(func);
+    let (base_local, _) = partition(func, &unsharded, mesh)?;
+    let base = model.evaluate(&base_local, mesh);
+    let (local, _) = partition(func, spec, mesh)?;
+    let oracle_rel = model.relative(&model.evaluate(&local, mesh), &base);
+    let sym = SymbolicEvaluator::new(func, mesh, model);
+    let sym_rel = sym.relative(spec, &base);
+    Ok((sym_rel - oracle_rel).abs())
+}
+
 /// Upper bound for index values of i32 parameter `pi`: the size of the
 /// gathered/scattered axis of any consumer, so random indices stay valid.
 fn index_cap(func: &Func, pi: usize) -> usize {
@@ -204,6 +228,32 @@ mod tests {
         let v = validate_spec(&f, &spec, &mesh, 42).unwrap();
         assert!(v.max_abs_diff < 1e-5, "diff {}", v.max_abs_diff);
         assert_eq!(v.stats.total_collectives(), 0);
+    }
+
+    #[test]
+    fn symbolic_cost_agrees_on_mlp_specs() {
+        use crate::mesh::{HardwareKind, HardwareProfile};
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 2), ("m", 2)]);
+        let model = crate::cost::CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let mut spec = ShardingSpec::unsharded(&f);
+        assert!(validate_symbolic_cost(&f, &spec, &mesh, &model).unwrap() < 1e-6);
+        spec.apply_assignment(
+            &f,
+            &mesh,
+            &[(ValueId(0), 0), (ValueId(3), 0), (ValueId(4), 0), (ValueId(5), 0)],
+            0,
+        )
+        .unwrap();
+        assert!(validate_symbolic_cost(&f, &spec, &mesh, &model).unwrap() < 1e-6);
+        spec.apply_assignment(
+            &f,
+            &mesh,
+            &[(ValueId(1), 1), (ValueId(3), 1), (ValueId(4), 1), (ValueId(2), 0)],
+            1,
+        )
+        .unwrap();
+        assert!(validate_symbolic_cost(&f, &spec, &mesh, &model).unwrap() < 1e-6);
     }
 
     #[test]

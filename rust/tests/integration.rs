@@ -63,6 +63,23 @@ fn unet_partition_validates() {
     assert!(v.max_abs_diff < 5e-2, "diff {}", v.max_abs_diff);
 }
 
+/// Every spec the search returns must price identically (≤1e-6 relative
+/// cost) under the symbolic evaluator and the materialized oracle — the
+/// tentpole invariant of the incremental evaluation engine.
+#[test]
+fn searched_specs_symbolic_cost_matches_oracle() {
+    for kind in [ModelKind::Mlp, ModelKind::Attention, ModelKind::Gns] {
+        let func = kind.build_scaled();
+        let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
+        let model = cost_model();
+        let out = auto_partition(&func, &mesh, &model, &loose_actions(), &quick_search());
+        let diff =
+            toast::sharding::validate_symbolic_cost(&func, &out.spec, &mesh, &model)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", kind.name()));
+        assert!(diff < 1e-6, "{}: symbolic/oracle divergence {diff}", kind.name());
+    }
+}
+
 /// Sequence sharding (the paper's Figure 5b) must be reachable and
 /// numerically correct for both conflict resolutions.
 #[test]

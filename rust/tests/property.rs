@@ -15,10 +15,14 @@
 //! * **P5**: the cost model is invariant under identity partitioning and
 //!   penalizes memory overflow.
 
+use toast::cost::symbolic::SymbolicEvaluator;
+use toast::cost::CostModel;
 use toast::ir::interp::Tensor;
 use toast::ir::{DType, Func, FuncBuilder, ReduceKind, TensorType, ValueId};
 use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::models::ModelKind;
 use toast::nda::Nda;
+use toast::search::IncrementalEvaluator;
 use toast::sharding::{partition, validate_spec, ShardingSpec};
 use toast::util::Rng;
 
@@ -281,6 +285,126 @@ fn prop_cost_model_sane() {
         if let Ok((rlocal, _)) = partition(&func, &rspec, &mesh) {
             let rc = model.evaluate(&rlocal, &mesh);
             assert!(rc.runtime_s.is_finite());
+        }
+    }
+}
+
+/// Oracle relative cost of `spec` (`+inf` when partitioning fails).
+fn oracle_relative(
+    func: &Func,
+    spec: &ShardingSpec,
+    mesh: &Mesh,
+    model: &CostModel,
+    base: &toast::cost::Cost,
+) -> f64 {
+    match partition(func, spec, mesh) {
+        Ok((local, _)) => model.relative(&model.evaluate(&local, mesh), base),
+        Err(_) => f64::INFINITY,
+    }
+}
+
+fn oracle_base(func: &Func, mesh: &Mesh, model: &CostModel) -> toast::cost::Cost {
+    let unsharded = ShardingSpec::unsharded(func);
+    let (local, _) = partition(func, &unsharded, mesh).unwrap();
+    model.evaluate(&local, mesh)
+}
+
+/// P7: the symbolic cost evaluator agrees with the
+/// materialize-partition-evaluate oracle within 1e-6 relative cost across
+/// random specs on the zoo models (MLP / Transformer / U-Net) and random
+/// programs.
+#[test]
+fn prop_symbolic_cost_matches_materialized() {
+    let mut rng = Rng::new(0x70A57);
+    let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
+    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    for kind in [ModelKind::Mlp, ModelKind::T2B, ModelKind::UNet] {
+        let func = kind.build_scaled();
+        let base = oracle_base(&func, &mesh, &model);
+        let sym = SymbolicEvaluator::new(&func, &mesh, &model);
+        for case in 0..25 {
+            let spec = random_spec(&func, &mesh, &mut rng);
+            let oracle = oracle_relative(&func, &spec, &mesh, &model, &base);
+            let s = sym.relative(&spec, &base);
+            if oracle.is_finite() {
+                assert!(
+                    (s - oracle).abs() <= 1e-6 * oracle.max(1.0),
+                    "{} case {case}: symbolic {s} vs oracle {oracle}",
+                    kind.name()
+                );
+            } else {
+                assert!(s.is_infinite(), "{} case {case}: oracle failed, symbolic {s}", kind.name());
+            }
+        }
+    }
+    // ...and across random straight-line programs.
+    for case in 0..60 {
+        let func = random_func(&mut rng);
+        let base = oracle_base(&func, &mesh, &model);
+        let sym = SymbolicEvaluator::new(&func, &mesh, &model);
+        let spec = random_spec(&func, &mesh, &mut rng);
+        let oracle = oracle_relative(&func, &spec, &mesh, &model, &base);
+        let s = sym.relative(&spec, &base);
+        if oracle.is_finite() {
+            assert!(
+                (s - oracle).abs() <= 1e-6 * oracle.max(1.0),
+                "random case {case}: symbolic {s} vs oracle {oracle}\n{func}"
+            );
+        } else {
+            assert!(s.is_infinite(), "random case {case}: oracle failed, symbolic {s}");
+        }
+    }
+}
+
+/// P8: the incremental engine tracks the oracle through realistic action
+/// walks (apply/undo on the real action space).
+#[test]
+fn prop_incremental_matches_oracle_on_action_walks() {
+    let mut rng = Rng::new(0x17C4);
+    let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
+    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    for kind in [ModelKind::Mlp, ModelKind::T2B, ModelKind::UNet] {
+        let func = kind.build_scaled();
+        let nda = Nda::analyze(&func);
+        let actions = toast::search::build_actions(
+            &func,
+            &nda,
+            &mesh,
+            &toast::search::ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        );
+        if actions.is_empty() {
+            continue;
+        }
+        let base = oracle_base(&func, &mesh, &model);
+        let mut eng = IncrementalEvaluator::new(&func, &mesh, &model, base).unwrap();
+        for _walk in 0..4 {
+            eng.reset();
+            for _step in 0..4 {
+                let a = &actions[rng.below(actions.len())];
+                if eng.spec().check_assignment(&func, &mesh, &a.assignment, a.axis) {
+                    eng.apply(&a.assignment, a.axis).unwrap();
+                }
+                let got = eng.relative();
+                let oracle = oracle_relative(&func, eng.spec(), &mesh, &model, &base);
+                if oracle.is_finite() {
+                    assert!(
+                        (got - oracle).abs() <= 1e-6 * oracle.max(1.0),
+                        "{}: incremental {got} vs oracle {oracle}",
+                        kind.name()
+                    );
+                } else {
+                    assert!(got.is_infinite());
+                }
+            }
+            // unwinding one step restores the previous state's cost
+            if eng.depth() > 0 {
+                eng.undo();
+                let got = eng.relative();
+                let oracle = oracle_relative(&func, eng.spec(), &mesh, &model, &base);
+                if oracle.is_finite() {
+                    assert!((got - oracle).abs() <= 1e-6 * oracle.max(1.0));
+                }
+            }
         }
     }
 }

@@ -1,0 +1,198 @@
+//! Offline stub of the `xla` (xla-rs) API surface used by
+//! [`toast::runtime`].
+//!
+//! The build image has no XLA/PJRT shared libraries and no network, so
+//! this crate provides the exact types and signatures the runtime layer
+//! compiles against. Every entry point that would touch PJRT returns a
+//! clear "runtime unavailable" error; the e2e tests skip gracefully when
+//! no artifacts directory exists, so these paths are never exercised in
+//! CI. Swapping this for the real `xla` crate (same API subset) enables
+//! the hardware path without source changes.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?` conversion
+/// into `anyhow::Error`.
+#[derive(Debug, Clone)]
+pub struct XlaError {
+    message: String,
+}
+
+impl XlaError {
+    pub fn new(message: impl Into<String>) -> XlaError {
+        XlaError { message: message.into() }
+    }
+
+    fn unavailable(what: &str) -> XlaError {
+        XlaError::new(format!(
+            "{what}: PJRT runtime unavailable (offline xla stub; link the real xla crate)"
+        ))
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+/// `Result` alias matching the real crate.
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// Element types of literals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Pred,
+}
+
+/// Native Rust types storable in a [`Literal`].
+pub trait NativeType: Copy + Default + fmt::Debug + 'static {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+/// Array shape: dimensions plus element type.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host literal (stub: shape metadata only; device execution is
+/// unavailable, so element data is never materialized).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    shape: ArrayShape,
+}
+
+impl Literal {
+    /// Rank-1 literal from host data.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { shape: ArrayShape { dims: vec![data.len() as i64], ty: T::TY } }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = self.shape.dims.iter().product();
+        let m: i64 = dims.iter().product();
+        if n != m {
+            return Err(XlaError::new(format!("reshape element mismatch: {n} vs {m}")));
+        }
+        Ok(Literal { shape: ArrayShape { dims: dims.to_vec(), ty: self.shape.ty } })
+    }
+
+    /// Copy the elements out to a host vector (unavailable in the stub).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(XlaError::unavailable("Literal::to_vec"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(self.shape.clone())
+    }
+
+    /// Split a tuple literal into its elements (unavailable in the stub).
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(XlaError::unavailable("Literal::decompose_tuple"))
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(XlaError::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from a proto.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_shape_roundtrip() {
+        let l = Literal::vec1(&[1.0f32; 12]);
+        let r = l.reshape(&[3, 4]).unwrap();
+        let s = r.array_shape().unwrap();
+        assert_eq!(s.dims(), &[3, 4]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert!(l.reshape(&[5, 5]).is_err());
+    }
+}
