@@ -1,75 +1,83 @@
-//! End-to-end driver over all three layers (DESIGN.md E7):
+//! End-to-end differential validation of the SPMD runtime.
 //!
-//! 1. load the AOT artifacts (`make artifacts`): the L2 JAX transformer —
-//!    whose attention runs through the L1 Pallas kernel — lowered to HLO
-//!    text and compiled on the PJRT CPU client;
-//! 2. train data-parallel across N simulated devices: per-device `grad`
-//!    executions, host gradient all-reduce (the L3 collective), `adam`
-//!    apply — logging the loss curve;
-//! 3. validate that N-device training matches single-device training
-//!    numerically (same losses), proving the partitioned execution is
-//!    semantics-preserving on the *real* XLA runtime, not just the
-//!    in-crate interpreter;
-//! 4. report step latency and token throughput per device count.
+//! Exercises the two-executor architecture over the whole scaled model
+//! zoo with fixed seeds:
 //!
-//! Run: `make artifacts && cargo run --release --example e2e_validate`
+//! 1. **Differential sweep** — every scaled zoo model × four mesh shapes
+//!    (two 1-D, one 2-D, one 2-D with a singleton axis) × three sharding
+//!    specs (unsharded sanity, a greedy NDA action walk, a seeded random
+//!    legal spec). Each triple is partitioned, executed on the SPMD
+//!    simulator, and compared to the interpreter oracle; the run fails
+//!    if any triple diverges beyond 1e-4 relative error.
+//! 2. **Search validation** — the MCTS auto-partitioner runs on scaled
+//!    MLP and Transformer with `validate_best` set, proving the
+//!    *winning* spec of a real search is semantics-preserving, not just
+//!    hand-picked ones.
+//!
+//! No artifacts or accelerators are needed — this is the pure-Rust
+//! correctness gate CI's `differential` job runs on every push.
+//!
+//! Run: `cargo run --release --example e2e_validate`
 
-use toast::runtime::simexec::DataParallelTrainer;
-use toast::runtime::Runtime;
+use toast::coordinator::experiments::{format_differential, run_differential_suite};
+use toast::cost::CostModel;
+use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::models::ModelKind;
+use toast::runtime::diff::DEFAULT_REL_TOL;
+use toast::search::{auto_partition, ActionSpaceConfig, SearchConfig};
 
 fn main() -> anyhow::Result<()> {
-    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
-    let rt = Runtime::load_dir(&dir)?;
-    let cfg = &rt.manifest.config;
+    // ---- differential sweep over the scaled zoo ---------------------------
+    let models = ModelKind::all();
     println!(
-        "model: d_model={} layers={} vocab={} batch={} seq={} ({} artifacts)",
-        cfg["d_model"], cfg["layers"], cfg["vocab"], cfg["batch"], cfg["seq"],
-        rt.artifacts.len()
+        "differential sweep: {} scaled models x 4 meshes x up to 3 specs (tol {:.1e})",
+        models.len(),
+        DEFAULT_REL_TOL
+    );
+    let rows = run_differential_suite(&models, 0xE2E, DEFAULT_REL_TOL);
+    print!("{}", format_differential(&rows, DEFAULT_REL_TOL));
+    let failed = rows.iter().filter(|r| !r.pass).count();
+    anyhow::ensure!(failed == 0, "{failed} differential triples diverged");
+    let with_collectives = rows.iter().filter(|r| r.collectives > 0).count();
+    anyhow::ensure!(
+        with_collectives > 0,
+        "sweep exercised no collectives — specs degenerated to replication"
+    );
+    println!(
+        "OK — {} triples agree with the oracle ({} executed real collectives)\n",
+        rows.len(),
+        with_collectives
     );
 
-    // ---- numeric equivalence: 1 device vs 4 devices -----------------------
-    let steps = 6;
-    let mut t1 = DataParallelTrainer::new(&rt, 1, 42)?;
-    let r1 = t1.train(steps, 4)?;
-    let mut t4 = DataParallelTrainer::new(&rt, 4, 42)?;
-    let r4 = t4.train(steps, 4)?;
-    println!("\nloss parity (1 device vs 4 devices, same seed):");
-    let mut max_diff = 0.0f32;
-    for (s, (a, b)) in r1.losses.iter().zip(&r4.losses).enumerate() {
-        println!("  step {s}: {a:.6} vs {b:.6}");
-        max_diff = max_diff.max((a - b).abs());
-    }
-    anyhow::ensure!(max_diff < 1e-3, "data-parallel training diverged: {max_diff}");
-    println!("max loss divergence: {max_diff:.2e} — partitioned run is semantics-preserving");
-
-    // ---- the training curve (the E7 headline artifact) --------------------
-    let train_steps = 30;
-    let mut trainer = DataParallelTrainer::new(&rt, 4, 7)?;
-    let report = trainer.train(train_steps, 8)?;
-    println!("\ntraining {} steps on 4 simulated devices:", train_steps);
-    for (s, l) in report.losses.iter().enumerate() {
-        if s % 5 == 0 || s == train_steps - 1 {
-            println!("  step {s:>3}: loss {l:.4}");
-        }
-    }
-    let k = (train_steps / 4).max(1);
-    let head: f32 = report.losses[..k].iter().sum::<f32>() / k as f32;
-    let tail: f32 =
-        report.losses[report.losses.len() - k..].iter().sum::<f32>() / k as f32;
-    anyhow::ensure!(tail < head, "loss must decrease ({head:.4} -> {tail:.4})");
-
-    // ---- throughput scaling ------------------------------------------------
-    println!("\nthroughput (tokens/s) by simulated device count:");
-    for devices in [1usize, 2, 4] {
-        let mut t = DataParallelTrainer::new(&rt, devices, 3)?;
-        let r = t.train(5, 2)?;
+    // ---- search --validate-best on MLP and Transformer --------------------
+    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    for (kind, mesh) in [
+        (ModelKind::Mlp, Mesh::grid(&[("data", 2), ("model", 2)])),
+        (ModelKind::T2B, Mesh::grid(&[("data", 2), ("model", 2)])),
+    ] {
+        let func = kind.build_scaled();
+        let out = auto_partition(
+            &func,
+            &mesh,
+            &model,
+            &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+            &SearchConfig { budget: 150, seed: 7, validate_best: true, ..Default::default() },
+        );
+        let v = out.validation.expect("validate_best was set");
         println!(
-            "  {} device(s): {:>8.1} ms/step, {:>9.0} tokens/s",
-            devices,
-            r.mean_step_ms(),
-            r.throughput_tokens_per_s()
+            "search {} on {}: relative cost {:.4}, {} actions, best-spec divergence {:.3e}",
+            kind.name(),
+            mesh.describe(),
+            out.relative,
+            out.actions.len(),
+            v
+        );
+        anyhow::ensure!(
+            v <= DEFAULT_REL_TOL as f64,
+            "{}: winning spec diverged from the oracle ({v:.3e})",
+            kind.name()
         );
     }
-    println!("\nOK — three-layer stack (Pallas kernel → JAX model → Rust PJRT coordinator) composes.");
+    println!("\nOK — search winners execute correctly on the SPMD runtime");
     Ok(())
 }

@@ -22,6 +22,7 @@ use crate::models::{gns, itx, transformer, unet, ModelKind};
 use crate::search::{Action, IncrementalEvaluator};
 use crate::sharding::{partition, ShardingSpec};
 use crate::util::json::Json;
+use crate::util::Rng;
 
 /// How big the experiment models are.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,6 +52,9 @@ pub enum Experiment {
     Fig9,
     Fig10,
     Ablations,
+    /// Differential-validation sweep: SPMD simulator vs. interpreter
+    /// oracle over the scaled zoo (see [`run_differential_suite`]).
+    Differential,
 }
 
 impl std::str::FromStr for Experiment {
@@ -61,7 +65,10 @@ impl std::str::FromStr for Experiment {
             "fig9" => Ok(Experiment::Fig9),
             "fig10" => Ok(Experiment::Fig10),
             "ablations" => Ok(Experiment::Ablations),
-            other => Err(format!("unknown experiment '{other}' (fig8|fig9|fig10|ablations)")),
+            "differential" | "diff" => Ok(Experiment::Differential),
+            other => Err(format!(
+                "unknown experiment '{other}' (fig8|fig9|fig10|ablations|differential)"
+            )),
         }
     }
 }
@@ -301,34 +308,9 @@ pub fn measure_eval_throughput(
     iters: usize,
 ) -> EvalThroughput {
     use std::time::Instant;
-    // Fixed action walk: first legal action at each step.
-    let mut spec = ShardingSpec::unsharded(func);
-    let mut walk: Vec<usize> = Vec::new();
-    for _ in 0..depth {
-        let next = (0..actions.len()).find(|&ai| {
-            !walk.contains(&ai)
-                && spec.check_assignment(func, mesh, &actions[ai].assignment, actions[ai].axis)
-        });
-        let Some(ai) = next else { break };
-        spec.apply_assignment(func, mesh, &actions[ai].assignment, actions[ai].axis)
-            .expect("probed action applies");
-        walk.push(ai);
-    }
-    // Prefix specs (including the unsharded root), truncated at the first
-    // prefix the oracle cannot partition so all three evaluators price the
-    // identical, valid state set.
-    let mut specs: Vec<ShardingSpec> = vec![ShardingSpec::unsharded(func)];
-    let mut ok_walk: Vec<usize> = Vec::new();
-    for &ai in &walk {
-        let mut s = specs.last().unwrap().clone();
-        s.apply_assignment(func, mesh, &actions[ai].assignment, actions[ai].axis).unwrap();
-        if partition(func, &s, mesh).is_err() {
-            break;
-        }
-        ok_walk.push(ai);
-        specs.push(s);
-    }
-    let walk = ok_walk;
+    // Deterministic greedy walk; all three evaluators price the
+    // identical, valid state set (every prefix spec partitions).
+    let (walk, specs) = greedy_action_walk(func, mesh, actions, depth);
     let n_states = specs.len() * iters;
 
     let base = {
@@ -372,6 +354,199 @@ pub fn measure_eval_throughput(
     let incremental_evals_per_s = n_states as f64 / t0.elapsed().as_secs_f64().max(1e-9);
 
     EvalThroughput { oracle_evals_per_s, symbolic_evals_per_s, incremental_evals_per_s }
+}
+
+/// One row of the differential-validation suite: a `(model, mesh, spec)`
+/// triple executed on both executors.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub model: ModelKind,
+    pub mesh: String,
+    /// How the spec was produced: `unsharded`, `action-walk`, `random`.
+    pub spec_kind: &'static str,
+    /// Sharded (value, dim) pairs in the spec.
+    pub sharded_dims: usize,
+    /// Collectives in the executed device-local module.
+    pub collectives: usize,
+    /// Worst relative divergence across results.
+    pub max_rel_err: f64,
+    /// Within tolerance?
+    pub pass: bool,
+    /// Partition/execution error, when the triple never produced a
+    /// comparison (shown in the table so CI failures carry the cause).
+    pub error: Option<String>,
+}
+
+/// The mesh shapes every scaled zoo model is validated under: two 1-D
+/// meshes, a 2-D mesh, and a 2-D mesh with a singleton axis (degenerate
+/// subgroups).
+pub fn differential_meshes() -> Vec<Mesh> {
+    vec![
+        Mesh::grid(&[("d", 2)]),
+        Mesh::grid(&[("d", 4)]),
+        Mesh::grid(&[("a", 2), ("b", 2)]),
+        Mesh::grid(&[("a", 1), ("b", 2)]),
+    ]
+}
+
+/// Deterministic greedy action walk — the single shared trajectory
+/// generator behind [`measure_eval_throughput`] and the differential
+/// suite's `action-walk` specs: repeatedly apply the first still-legal
+/// action, stopping at `depth` actions or at the first prefix the
+/// partitioner rejects. Returns the applied action ids and every prefix
+/// spec (unsharded root included); each returned spec partitions.
+pub fn greedy_action_walk(
+    func: &Func,
+    mesh: &Mesh,
+    actions: &[Action],
+    depth: usize,
+) -> (Vec<usize>, Vec<ShardingSpec>) {
+    let mut specs: Vec<ShardingSpec> = vec![ShardingSpec::unsharded(func)];
+    let mut walk: Vec<usize> = Vec::new();
+    for _ in 0..depth {
+        let spec = specs.last().unwrap();
+        let next = (0..actions.len()).find(|&ai| {
+            !walk.contains(&ai)
+                && spec.check_assignment(func, mesh, &actions[ai].assignment, actions[ai].axis)
+        });
+        let Some(ai) = next else { break };
+        let mut s = spec.clone();
+        s.apply_assignment(func, mesh, &actions[ai].assignment, actions[ai].axis)
+            .expect("probed action applies");
+        if partition(func, &s, mesh).is_err() {
+            break;
+        }
+        walk.push(ai);
+        specs.push(s);
+    }
+    (walk, specs)
+}
+
+/// A partitioner-realistic spec for the differential suite: the end
+/// state of [`greedy_action_walk`] over the model's NDA action space.
+/// The NDA is mesh-independent, so sweeps analyze once per model.
+fn action_walk_spec(
+    func: &Func,
+    nda: &crate::nda::Nda,
+    mesh: &Mesh,
+    depth: usize,
+) -> ShardingSpec {
+    let actions = crate::search::build_actions(
+        func,
+        nda,
+        mesh,
+        &crate::search::ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+    );
+    let (_, specs) = greedy_action_walk(func, mesh, &actions, depth);
+    specs.last().unwrap().clone()
+}
+
+/// Run the differential-validation suite: every model × every mesh from
+/// [`differential_meshes`] × three spec sources (unsharded sanity, a
+/// greedy NDA action walk, a seeded random legal spec). Each triple
+/// partitions, executes on both executors, and must agree within `tol`
+/// relative error. Partition-rejected random specs retry with fresh
+/// seeds (a rejected spec has nothing to compare).
+pub fn run_differential_suite(models: &[ModelKind], seed: u64, tol: f32) -> Vec<DiffRow> {
+    let mut rows = Vec::new();
+    for &mk in models {
+        let func = mk.build_scaled();
+        // Inputs, the oracle run and the NDA depend only on (func, seed):
+        // compute once per model, amortized over every (mesh, spec) pair.
+        let inputs = crate::runtime::diff::random_inputs(&func, seed);
+        let expected = match crate::ir::interp::eval_func(&func, &inputs) {
+            Ok(e) => e,
+            Err(e) => {
+                rows.push(DiffRow {
+                    model: mk,
+                    mesh: "-".to_string(),
+                    spec_kind: "oracle",
+                    sharded_dims: 0,
+                    collectives: 0,
+                    max_rel_err: f64::INFINITY,
+                    pass: false,
+                    error: Some(format!("oracle execution failed: {e:#}")),
+                });
+                continue;
+            }
+        };
+        let nda = crate::nda::Nda::analyze(&func);
+        for mesh in differential_meshes() {
+            let mut specs: Vec<(&'static str, ShardingSpec)> =
+                vec![("unsharded", ShardingSpec::unsharded(&func))];
+            specs.push(("action-walk", action_walk_spec(&func, &nda, &mesh, 4)));
+            let mut rng = Rng::new(seed ^ ((mk as u64) << 8) ^ mesh.num_devices() as u64);
+            // A rejected random spec has nothing to compare — retry a few
+            // seeds, keeping the first the partitioner accepts.
+            for _attempt in 0..5 {
+                let cand = crate::runtime::diff::random_legal_spec(&func, &mesh, &mut rng);
+                if partition(&func, &cand, &mesh).is_ok() {
+                    specs.push(("random", cand));
+                    break;
+                }
+            }
+            for (kind, spec) in specs {
+                let row = match crate::runtime::diff::differential_test_against(
+                    &func, &spec, &mesh, &inputs, &expected,
+                ) {
+                    Ok(r) => DiffRow {
+                        model: mk,
+                        mesh: mesh.describe(),
+                        spec_kind: kind,
+                        sharded_dims: spec.sharded_dim_count(),
+                        collectives: r.stats.total_collectives(),
+                        max_rel_err: r.max_rel_err as f64,
+                        pass: r.max_rel_err <= tol,
+                        error: None,
+                    },
+                    Err(e) => DiffRow {
+                        model: mk,
+                        mesh: mesh.describe(),
+                        spec_kind: kind,
+                        sharded_dims: spec.sharded_dim_count(),
+                        collectives: 0,
+                        max_rel_err: f64::INFINITY,
+                        pass: false,
+                        error: Some(format!("{e:#}")),
+                    },
+                };
+                rows.push(row);
+            }
+        }
+    }
+    rows
+}
+
+/// Render the differential suite as a table. `tol` must be the
+/// tolerance the rows' pass/FAIL column was computed with.
+pub fn format_differential(rows: &[DiffRow], tol: f32) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "== differential validation (SPMD simulator vs. interpreter oracle) ==");
+    let _ = writeln!(
+        out,
+        "{:<10} {:<22} {:<12} {:>6} {:>6} {:>12} {:>6}",
+        "model", "mesh", "spec", "dims", "colls", "max_rel_err", "ok"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<10} {:<22} {:<12} {:>6} {:>6} {:>12.3e} {:>6}",
+            r.model.name(),
+            r.mesh,
+            r.spec_kind,
+            r.sharded_dims,
+            r.collectives,
+            r.max_rel_err,
+            if r.pass { "pass" } else { "FAIL" }
+        );
+        if let Some(err) = &r.error {
+            let _ = writeln!(out, "    ^ {err}");
+        }
+    }
+    let failed = rows.iter().filter(|r| !r.pass).count();
+    let _ = writeln!(out, "{} triples, {} failed (tol {:.1e})", rows.len(), failed, tol);
+    out
 }
 
 /// Render a Fig-8-style table (step time).
@@ -509,6 +684,20 @@ mod tests {
         assert!(tp.symbolic_evals_per_s > 0.0);
         assert!(tp.incremental_evals_per_s > 0.0);
         assert!(tp.format().contains("evals/sec"));
+    }
+
+    #[test]
+    fn differential_suite_mlp_passes() {
+        use crate::runtime::diff::DEFAULT_REL_TOL;
+        let rows = run_differential_suite(&[ModelKind::Mlp], 11, DEFAULT_REL_TOL);
+        // 4 meshes x at least (unsharded + action-walk)
+        assert!(rows.len() >= 8, "rows {}", rows.len());
+        assert!(
+            rows.iter().all(|r| r.pass),
+            "differential suite failed:\n{}",
+            format_differential(&rows, DEFAULT_REL_TOL)
+        );
+        assert!(format_differential(&rows, DEFAULT_REL_TOL).contains("differential validation"));
     }
 
     #[test]

@@ -1,19 +1,24 @@
-//! Reference interpreter for the IR.
-//!
-//! Two entry points:
+//! Reference interpreter for the IR — the *oracle* half of the
+//! two-executor architecture.
 //!
 //! * [`eval_func`] — evaluate a logical (single-device) function on host
-//!   tensors. This is the numeric oracle.
-//! * [`eval_spmd`] — evaluate a *device-local* function for every device
-//!   of a mesh in lock-step, implementing collectives by exchanging data
-//!   across the simulated devices. Together with [`eval_func`] this
-//!   validates that partitioner rewrites are semantics-preserving.
+//!   tensors. This is the numeric ground truth every partitioner rewrite
+//!   is differentially validated against.
+//! * [`eval_op`] — the shared op-evaluation kernel: one instruction on
+//!   already-resolved operand tensors. Both this oracle and the SPMD
+//!   simulator ([`crate::runtime::spmd`]) evaluate device-local compute
+//!   through this single implementation, so the two executors cannot
+//!   drift apart on op semantics; only data movement (collectives, shard
+//!   extraction) lives in the simulator.
+//!
+//! Collectives and [`OpKind::ShardSlice`] are *not* handled here: they
+//! describe cross-device data movement, which only the multi-device
+//! executor in [`crate::runtime::spmd`] can give meaning to.
 //!
 //! All arithmetic is f32 (integer tensors hold exact small integers in
 //! f32, which is lossless below 2^24 — plenty for indices in tests).
 
 use super::*;
-use crate::mesh::Mesh;
 use anyhow::{bail, Result};
 
 /// Dense row-major host tensor.
@@ -98,13 +103,53 @@ impl Tensor {
         out
     }
 
-    /// Max |a-b| between two tensors of identical shape.
+    /// Elementwise divergence with NaN/Inf handled *strictly*: pairs of
+    /// bitwise-equal infinities agree (0 divergence), any other
+    /// non-finite element — including NaN on either side, which would
+    /// otherwise vanish inside `f32::max` — is an infinite divergence.
+    /// Without this, a broken collective producing NaN would *pass* the
+    /// differential gate (`NaN.max(x)` keeps `x`).
+    fn elem_div(a: f32, b: f32) -> f32 {
+        if !a.is_finite() || !b.is_finite() {
+            if a == b {
+                0.0
+            } else {
+                f32::INFINITY
+            }
+        } else {
+            (a - b).abs()
+        }
+    }
+
+    /// Max |a-b| between two tensors of identical shape (NaN-aware; see
+    /// [`Self::max_rel_err`]).
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
         assert_eq!(self.shape, other.shape, "max_abs_diff shape mismatch");
         self.data
             .iter()
             .zip(&other.data)
-            .map(|(a, b)| (a - b).abs())
+            .map(|(&a, &b)| Self::elem_div(a, b))
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Max elementwise relative error `|a-b| / max(|a|, |b|, 1)` between
+    /// two tensors of identical shape. The denominator floor of 1 makes
+    /// the metric behave like absolute error for small magnitudes instead
+    /// of amplifying noise around zero; non-finite elements are an
+    /// infinite divergence unless bitwise-equal infinities.
+    pub fn max_rel_err(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "max_rel_err shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = Self::elem_div(a, b);
+                if d.is_finite() {
+                    d / a.abs().max(b.abs()).max(1.0)
+                } else {
+                    d
+                }
+            })
             .fold(0.0f32, f32::max)
     }
 }
@@ -121,7 +166,7 @@ fn shape_usize(t: &TensorType) -> Vec<usize> {
     t.shape.iter().map(|&d| d as usize).collect()
 }
 
-fn reduce_apply(kind: ReduceKind, acc: f32, v: f32) -> f32 {
+pub(crate) fn reduce_apply(kind: ReduceKind, acc: f32, v: f32) -> f32 {
     match kind {
         ReduceKind::Add => acc + v,
         ReduceKind::Max => acc.max(v),
@@ -130,7 +175,7 @@ fn reduce_apply(kind: ReduceKind, acc: f32, v: f32) -> f32 {
     }
 }
 
-fn reduce_init(kind: ReduceKind) -> f32 {
+pub(crate) fn reduce_init(kind: ReduceKind) -> f32 {
     match kind {
         ReduceKind::Add => 0.0,
         ReduceKind::Max => f32::NEG_INFINITY,
@@ -150,15 +195,21 @@ pub fn eval_func(f: &Func, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         if instr.kind.is_device_local_only() {
             bail!("{} in single-device evaluation", instr.kind.mnemonic());
         }
-        let t = eval_instr(instr, &values)?;
+        let ops: Vec<&Tensor> = instr.operands.iter().map(|o| &values[o.index()]).collect();
+        let t = eval_op(instr, &ops)?;
         values.push(t);
     }
     Ok(f.results.iter().map(|&r| values[r.index()].clone()).collect())
 }
 
-/// Evaluate one (non-collective) instruction.
-fn eval_instr(instr: &Instr, values: &[Tensor]) -> Result<Tensor> {
-    let op = |i: usize| &values[instr.operands[i].index()];
+/// Evaluate one (non-collective) instruction on resolved operand tensors.
+///
+/// This is the shared op-evaluation kernel: the single-device oracle
+/// passes its value environment, the SPMD simulator passes one device's
+/// local tensors. Device-local-only ops (collectives, `shard_slice`) are
+/// rejected — they are data movement, not compute.
+pub fn eval_op(instr: &Instr, ops: &[&Tensor]) -> Result<Tensor> {
+    let op = |i: usize| ops[i];
     let out_shape = shape_usize(&instr.ty);
     Ok(match &instr.kind {
         OpKind::Constant { value } => Tensor::splat(out_shape, *value as f32),
@@ -303,8 +354,7 @@ fn eval_instr(instr: &Instr, values: &[Tensor]) -> Result<Tensor> {
             let mut out = Tensor::zeros(out_shape.clone());
             let ost = out.strides();
             let mut base = 0usize;
-            for &o in &instr.operands {
-                let x = &values[o.index()];
+            for &x in ops {
                 let xst = x.strides();
                 let mut idx = vec![0usize; x.rank()];
                 for lin in 0..x.elems() {
@@ -424,7 +474,11 @@ fn eval_instr(instr: &Instr, values: &[Tensor]) -> Result<Tensor> {
         | OpKind::ReduceScatter { .. }
         | OpKind::AllToAll { .. }
         | OpKind::ShardSlice { .. } => {
-            unreachable!("device-local-only ops handled by eval_spmd")
+            bail!(
+                "{} is data movement, not compute — only the SPMD simulator \
+                 (runtime::spmd) can evaluate it",
+                instr.kind.mnemonic()
+            )
         }
     })
 }
@@ -500,179 +554,9 @@ fn dot_general(
     out
 }
 
-/// Evaluate a device-local function for all devices of `mesh` in
-/// lock-step. `inputs[p][d]` is parameter `p` on device `d`.
-/// Returns `results[r][d]`.
-pub fn eval_spmd(f: &Func, mesh: &Mesh, inputs: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
-    let nd = mesh.num_devices();
-    if inputs.len() != f.params.len() {
-        bail!("expected {} inputs, got {}", f.params.len(), inputs.len());
-    }
-    for (p, per_dev) in inputs.iter().enumerate() {
-        if per_dev.len() != nd {
-            bail!("param {} has {} device shards, mesh has {}", p, per_dev.len(), nd);
-        }
-    }
-    // values[v][d]
-    let mut values: Vec<Vec<Tensor>> = inputs.to_vec();
-    for instr in &f.instrs {
-        let next: Vec<Tensor> = if let OpKind::ShardSlice { axis, dim } = &instr.kind {
-            // Zero-communication: each device slices by its own coordinate.
-            let input = &values[instr.operands[0].index()];
-            let n = mesh.axis_size(*axis);
-            (0..nd)
-                .map(|d| {
-                    let coord = mesh.coords(d)[*axis];
-                    let t = &input[d];
-                    let shard = t.shape[*dim] / n;
-                    let mut starts = vec![0usize; t.rank()];
-                    let mut sizes = t.shape.clone();
-                    starts[*dim] = coord * shard;
-                    sizes[*dim] = shard;
-                    t.block(&starts, &sizes)
-                })
-                .collect()
-        } else if instr.kind.is_collective() {
-            eval_collective(instr, &values, mesh)?
-        } else {
-            let mut per_dev = Vec::with_capacity(nd);
-            for d in 0..nd {
-                // View of values for this device.
-                let dev_view: Vec<Tensor> =
-                    values.iter().map(|v| v[d].clone()).collect();
-                per_dev.push(eval_instr(instr, &dev_view)?);
-            }
-            per_dev
-        };
-        values.push(next);
-    }
-    Ok(f.results.iter().map(|&r| values[r.index()].clone()).collect())
-}
-
-fn eval_collective(instr: &Instr, values: &[Vec<Tensor>], mesh: &Mesh) -> Result<Vec<Tensor>> {
-    let nd = mesh.num_devices();
-    let input = &values[instr.operands[0].index()];
-    let mut out: Vec<Option<Tensor>> = vec![None; nd];
-    match &instr.kind {
-        OpKind::AllReduce { axes, kind } => {
-            for group in mesh.groups_multi(axes) {
-                let mut acc = input[group[0]].clone();
-                for &d in &group[1..] {
-                    for (a, b) in acc.data.iter_mut().zip(&input[d].data) {
-                        *a = reduce_apply(*kind, *a, *b);
-                    }
-                }
-                for &d in &group {
-                    out[d] = Some(acc.clone());
-                }
-            }
-        }
-        OpKind::AllGather { axis, dim } => {
-            for group in mesh.groups(*axis) {
-                // Concatenate shards along `dim`, ordered by axis coord.
-                let shard = &input[group[0]];
-                let mut gshape = shard.shape.clone();
-                gshape[*dim] *= group.len();
-                let mut g = Tensor::zeros(gshape);
-                let gst = g.strides();
-                for (k, &d) in group.iter().enumerate() {
-                    let s = &input[d];
-                    let sst = s.strides();
-                    let base = k * s.shape[*dim];
-                    let mut idx = vec![0usize; s.rank()];
-                    for lin in 0..s.elems() {
-                        let mut rem = lin;
-                        for dd in 0..s.rank() {
-                            idx[dd] = rem / sst[dd];
-                            rem %= sst[dd];
-                        }
-                        let mut olin = 0;
-                        for dd in 0..s.rank() {
-                            let od = if dd == *dim { idx[dd] + base } else { idx[dd] };
-                            olin += od * gst[dd];
-                        }
-                        g.data[olin] = s.data[lin];
-                    }
-                }
-                for &d in &group {
-                    out[d] = Some(g.clone());
-                }
-            }
-        }
-        OpKind::ReduceScatter { axis, dim, kind } => {
-            for group in mesh.groups(*axis) {
-                let mut acc = input[group[0]].clone();
-                for &d in &group[1..] {
-                    for (a, b) in acc.data.iter_mut().zip(&input[d].data) {
-                        *a = reduce_apply(*kind, *a, *b);
-                    }
-                }
-                let n = group.len();
-                let shard_sz = acc.shape[*dim] / n;
-                for (k, &d) in group.iter().enumerate() {
-                    let mut starts = vec![0usize; acc.rank()];
-                    let mut sizes = acc.shape.clone();
-                    starts[*dim] = k * shard_sz;
-                    sizes[*dim] = shard_sz;
-                    out[d] = Some(acc.block(&starts, &sizes));
-                }
-            }
-        }
-        OpKind::AllToAll { axis, split_dim, concat_dim } => {
-            for group in mesh.groups(*axis) {
-                let n = group.len();
-                // Device i's local tensor splits along split_dim into n
-                // pieces; piece j goes to group member j; each member
-                // concatenates received pieces along concat_dim.
-                for (j, &dst) in group.iter().enumerate() {
-                    let mut pieces = Vec::with_capacity(n);
-                    for &src in group.iter() {
-                        let t = &input[src];
-                        let piece_sz = t.shape[*split_dim] / n;
-                        let mut starts = vec![0usize; t.rank()];
-                        let mut sizes = t.shape.clone();
-                        starts[*split_dim] = j * piece_sz;
-                        sizes[*split_dim] = piece_sz;
-                        pieces.push(t.block(&starts, &sizes));
-                    }
-                    // concat along concat_dim
-                    let mut cshape = pieces[0].shape.clone();
-                    cshape[*concat_dim] *= n;
-                    let mut c = Tensor::zeros(cshape);
-                    let cst = c.strides();
-                    let mut base = 0;
-                    for p in &pieces {
-                        let pst = p.strides();
-                        let mut idx = vec![0usize; p.rank()];
-                        for lin in 0..p.elems() {
-                            let mut rem = lin;
-                            for dd in 0..p.rank() {
-                                idx[dd] = rem / pst[dd];
-                                rem %= pst[dd];
-                            }
-                            let mut olin = 0;
-                            for dd in 0..p.rank() {
-                                let od =
-                                    if dd == *concat_dim { idx[dd] + base } else { idx[dd] };
-                                olin += od * cst[dd];
-                            }
-                            c.data[olin] = p.data[lin];
-                        }
-                        base += p.shape[*concat_dim];
-                    }
-                    out[dst] = Some(c);
-                }
-            }
-        }
-        _ => unreachable!(),
-    }
-    Ok(out.into_iter().map(|o| o.expect("device not covered by any group")).collect())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mesh::Mesh;
 
     #[test]
     fn matmul_numeric() {
@@ -767,69 +651,4 @@ mod tests {
         assert_eq!(out.data, xt.data);
     }
 
-    #[test]
-    fn spmd_all_reduce_sums_across_axis() {
-        // mesh 2x2; all_reduce over axis 0 sums pairs of devices that
-        // share the axis-1 coordinate.
-        let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
-        let mut b = FuncBuilder::new("f");
-        let x = b.param("x", TensorType::f32(vec![1]));
-        let r = b.all_reduce(x, vec![0], ReduceKind::Add);
-        let f = b.build(vec![r]);
-        let inputs =
-            vec![(0..4).map(|d| Tensor::new(vec![1], vec![d as f32])).collect::<Vec<_>>()];
-        let out = eval_spmd(&f, &mesh, &inputs).unwrap();
-        // device (i,j) has value 2i+j; group along axis0 = {j, 2+j}
-        let got: Vec<f32> = out[0].iter().map(|t| t.data[0]).collect();
-        assert_eq!(got, vec![2.0, 4.0, 2.0, 4.0]);
-    }
-
-    #[test]
-    fn spmd_all_gather_restores_full_tensor() {
-        let mesh = Mesh::grid(&[("a", 2)]);
-        let mut b = FuncBuilder::new("f");
-        let x = b.param("x", TensorType::f32(vec![2, 2]));
-        let g = b.all_gather(x, 0, 0, 2);
-        let f = b.build(vec![g]);
-        let shard0 = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
-        let shard1 = Tensor::new(vec![2, 2], vec![5., 6., 7., 8.]);
-        let out = eval_spmd(&f, &mesh, &[vec![shard0, shard1]]).unwrap();
-        for d in 0..2 {
-            assert_eq!(out[0][d].shape, vec![4, 2]);
-            assert_eq!(out[0][d].data, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
-        }
-    }
-
-    #[test]
-    fn spmd_reduce_scatter_is_sum_then_shard() {
-        let mesh = Mesh::grid(&[("a", 2)]);
-        let mut b = FuncBuilder::new("f");
-        let x = b.param("x", TensorType::f32(vec![4]));
-        let rs = b.reduce_scatter(x, 0, 0, 2, ReduceKind::Add);
-        let f = b.build(vec![rs]);
-        let d0 = Tensor::new(vec![4], vec![1., 2., 3., 4.]);
-        let d1 = Tensor::new(vec![4], vec![10., 20., 30., 40.]);
-        let out = eval_spmd(&f, &mesh, &[vec![d0, d1]]).unwrap();
-        assert_eq!(out[0][0].data, vec![11., 22.]);
-        assert_eq!(out[0][1].data, vec![33., 44.]);
-    }
-
-    #[test]
-    fn spmd_all_to_all_reshards() {
-        // 2 devices; input sharded on dim0 (each holds [2,4]); output
-        // sharded on dim1: all_to_all(split_dim=1, concat_dim=0).
-        let mesh = Mesh::grid(&[("a", 2)]);
-        let mut b = FuncBuilder::new("f");
-        let x = b.param("x", TensorType::f32(vec![2, 4]));
-        let y = b.all_to_all(x, 0, 1, 0, 2);
-        let f = b.build(vec![y]);
-        // full tensor: [[0,1,2,3],[4,5,6,7],[8,9,10,11],[12,13,14,15]]
-        let d0 = Tensor::new(vec![2, 4], (0..8).map(|v| v as f32).collect());
-        let d1 = Tensor::new(vec![2, 4], (8..16).map(|v| v as f32).collect());
-        let out = eval_spmd(&f, &mesh, &[vec![d0, d1]]).unwrap();
-        // device0 should now hold columns 0..2 of all rows
-        assert_eq!(out[0][0].shape, vec![4, 2]);
-        assert_eq!(out[0][0].data, vec![0., 1., 4., 5., 8., 9., 12., 13.]);
-        assert_eq!(out[0][1].data, vec![2., 3., 6., 7., 10., 11., 14., 15.]);
-    }
 }

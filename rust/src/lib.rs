@@ -32,8 +32,13 @@
 //!   comparators (§5.1.1).
 //! * [`models`] — IR builders for the paper's evaluation models (§5.1):
 //!   T2B/T7B Gemma-like transformers, GNS, U-Net, ITX.
-//! * [`runtime`] — the PJRT (XLA) execution path for AOT artifacts plus a
-//!   simulated multi-device executor used for end-to-end validation.
+//! * [`runtime`] — the two-executor correctness subsystem: the SPMD
+//!   simulation runtime ([`runtime::spmd`]) executes partitioned modules
+//!   on simulated device states with real collective semantics, and the
+//!   differential harness ([`runtime::diff`]) asserts
+//!   tolerance-equivalence against the interpreter oracle (both share
+//!   [`ir::interp::eval_op`] for compute) — plus the PJRT (XLA)
+//!   execution path for AOT artifacts.
 //! * [`coordinator`] — the L3 service: partition-request queue, worker
 //!   pool, metrics, and the CLI entry points.
 

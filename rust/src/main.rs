@@ -3,9 +3,14 @@
 //! Subcommands:
 //! * `analyze`   — run the NDA on a model; print colors/conflicts/groups.
 //! * `partition` — partition a model with a chosen method; print report.
+//! * `search`    — run the MCTS auto-partitioner on a scaled model; with
+//!   `--validate-best`, differentially execute the winning spec on the
+//!   SPMD simulator against the interpreter oracle.
 //! * `validate`  — numerically validate a TOAST partition on the
 //!   reference interpreter (scaled model).
-//! * `bench`     — regenerate the paper's figures (fig8|fig9|fig10|ablations).
+//! * `bench`     — regenerate the paper's figures
+//!   (fig8|fig9|fig10|ablations) or run the differential-validation
+//!   sweep (differential).
 //! * `models`    — list the model zoo with parameter counts.
 //! * `serve`     — run the partition service demo over all models.
 //! * `e2e`       — PJRT data-parallel training over AOT artifacts.
@@ -36,6 +41,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "analyze" => cmd_analyze(&flags),
         "partition" => cmd_partition(&flags),
+        "search" => cmd_search(&flags),
         "validate" => cmd_validate(&flags),
         "bench" => cmd_bench(&flags),
         "models" => cmd_models(),
@@ -67,8 +73,10 @@ USAGE: toast <command> [--flag value]...
   analyze    --model <mlp|attention|t2b|t7b|gns|unet|itx> [--paper]
   partition  --model M --mesh 4x2 --hw <a100|p100|tpuv3>
              [--method <toast|alpa|automap|manual>] [--budget N] [--paper]
+  search     --model M --mesh 2x2 [--budget N] [--validate-best]
   validate   --model M --mesh 2x2 [--budget N]
-  bench      --experiment <fig8|fig9|fig10|ablations> [--scale tiny|bench|paper] [--json]
+  bench      --experiment <fig8|fig9|fig10|ablations|differential>
+             [--scale tiny|bench|paper] [--json]
   models
   serve      [--workers N]
   e2e        [--devices N] [--steps N] [--artifacts DIR]"
@@ -208,6 +216,42 @@ fn cmd_partition(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let kind = get_model(flags)?;
+    let func = kind.build_scaled();
+    let mesh = get_mesh(flags)?;
+    let budget: usize = flags.get("budget").and_then(|s| s.parse().ok()).unwrap_or(150);
+    let validate_best = flags.contains_key("validate-best");
+    let model = CostModel::new(HardwareProfile::new(get_hw(flags)?));
+    println!("searching {} (scaled) on {}", kind.name(), mesh.describe());
+    let out = toast::search::auto_partition(
+        &func,
+        &mesh,
+        &model,
+        &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        &SearchConfig { budget, validate_best, ..Default::default() },
+    );
+    println!(
+        "search: relative cost {:.4}, {} actions, {} evals, {:.2?}",
+        out.relative,
+        out.actions.len(),
+        out.evals,
+        out.wall
+    );
+    if let Some(v) = out.validation {
+        let tol = toast::runtime::diff::DEFAULT_REL_TOL as f64;
+        println!(
+            "validate-best: max relative divergence vs. interpreter oracle {v:.3e} (tol {tol:.1e})"
+        );
+        anyhow::ensure!(
+            v <= tol,
+            "best spec diverged from the interpreter oracle: {v:.3e}"
+        );
+        println!("OK — winning spec is semantics-preserving end to end");
+    }
+    Ok(())
+}
+
 fn cmd_validate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let kind = get_model(flags)?;
     let func = kind.build_scaled();
@@ -281,6 +325,18 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         }
         exp::Experiment::Ablations => {
             run_ablations(scale);
+        }
+        exp::Experiment::Differential => {
+            let models = if scale == exp::BenchScale::Tiny {
+                vec![ModelKind::Mlp, ModelKind::Attention]
+            } else {
+                ModelKind::all().to_vec()
+            };
+            let tol = toast::runtime::diff::DEFAULT_REL_TOL;
+            let rows = exp::run_differential_suite(&models, 17, tol);
+            print!("{}", exp::format_differential(&rows, tol));
+            let failed = rows.iter().filter(|r| !r.pass).count();
+            anyhow::ensure!(failed == 0, "{failed} differential triples failed");
         }
     }
     Ok(())

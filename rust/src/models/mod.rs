@@ -84,8 +84,11 @@ impl ModelKind {
         match self {
             ModelKind::Mlp => mlp::mlp(&mlp::MlpConfig::tiny()),
             ModelKind::Attention => transformer::simple_attention(32, 16, 16, 16),
-            ModelKind::T2B | ModelKind::T7B => {
+            ModelKind::T2B => {
                 transformer::training_step(&transformer::TransformerConfig::tiny())
+            }
+            ModelKind::T7B => {
+                transformer::training_step(&transformer::TransformerConfig::tiny7b())
             }
             ModelKind::Gns => gns::training_step(&gns::GnsConfig::tiny()),
             ModelKind::UNet => unet::training_step(&unet::UNetConfig::tiny()),

@@ -73,6 +73,23 @@ impl TransformerConfig {
         }
     }
 
+    /// Interpreter-sized T7B stand-in: structurally distinct from
+    /// [`Self::tiny`] (deeper, wider, more heads) so the scaled zoo
+    /// exercises two different transformer shapes in numeric validation.
+    pub fn tiny7b() -> Self {
+        TransformerConfig {
+            d_model: 16,
+            layers: 3,
+            hidden: 32,
+            heads: 4,
+            key_size: 4,
+            vocab: 32,
+            batch: 2,
+            seq: 8,
+            training: true,
+        }
+    }
+
     /// Approximate parameter count.
     pub fn param_count(&self) -> i64 {
         let attn = 3 * self.d_model * self.heads * self.key_size

@@ -1,0 +1,379 @@
+//! Differential validation: the glue between the two executors.
+//!
+//! [`differential_test`] takes any `(Func, ShardingSpec, Mesh)` triple,
+//! partitions the function, executes it *unsharded* on the interpreter
+//! oracle ([`crate::ir::interp::eval_func`]) and *sharded* on the SPMD
+//! simulator ([`crate::runtime::spmd`]) from the same random inputs, and
+//! reports the worst absolute and relative divergence across all
+//! results. A partitioner rewrite is semantics-preserving exactly when
+//! the relative divergence stays within float-reassociation noise
+//! ([`DEFAULT_REL_TOL`]).
+//!
+//! On failure, [`shrink_failure`] minimizes the triple — shortest
+//! failing program prefix, then fewest sharded dims — and renders a
+//! readable reproduction report, so property tests (P9) fail with a
+//! small `(program, spec, mesh)` instead of a 15-op random program.
+
+use crate::ir::interp::{eval_func, Tensor};
+use crate::ir::{DType, Func, OpKind, ValueId};
+use crate::mesh::Mesh;
+use crate::sharding::partition::{partition_exec, PartitionStats};
+use crate::sharding::ShardingSpec;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Relative tolerance under which the two executors are considered
+/// equivalent: generous enough for f32 reassociation across simulated
+/// devices, tight enough to catch any real data-movement bug.
+pub const DEFAULT_REL_TOL: f32 = 1e-4;
+
+/// Per-result divergence.
+#[derive(Clone, Copy, Debug)]
+pub struct ResultDiff {
+    /// Max |oracle - simulated| over the result's elements.
+    pub abs: f32,
+    /// Max |oracle - simulated| / max(|oracle|, |simulated|, 1).
+    pub rel: f32,
+}
+
+/// Outcome of one differential run.
+#[derive(Clone, Debug)]
+pub struct DiffReport {
+    /// Worst absolute divergence across all results.
+    pub max_abs_diff: f32,
+    /// Worst relative divergence across all results.
+    pub max_rel_err: f32,
+    /// Per-result divergences, in `func.results` order.
+    pub per_result: Vec<ResultDiff>,
+    /// Collective statistics of the executed device-local module.
+    pub stats: PartitionStats,
+}
+
+impl DiffReport {
+    /// Did the run stay within `tol` relative error?
+    pub fn within(&self, tol: f32) -> bool {
+        self.max_rel_err <= tol
+    }
+}
+
+/// Deterministic random inputs for `func`: uniform in [-1, 1) for float
+/// parameters; valid small non-negative integers for i32 (index)
+/// parameters, capped by the gathered/scattered extent of any consumer.
+pub fn random_inputs(func: &Func, seed: u64) -> Vec<Tensor> {
+    func.params
+        .iter()
+        .enumerate()
+        .map(|(pi, p)| {
+            let shape: Vec<usize> = p.ty.shape.iter().map(|&d| d as usize).collect();
+            if p.ty.dtype == DType::I32 {
+                let t = Tensor::randn(shape.clone(), seed + pi as u64);
+                let cap = index_cap(func, pi);
+                Tensor::new(
+                    shape,
+                    t.data.iter().map(|v| ((v.abs() * 1e4) as usize % cap) as f32).collect(),
+                )
+            } else {
+                Tensor::randn(shape, seed + pi as u64)
+            }
+        })
+        .collect()
+}
+
+/// A random *legal* sharding spec for `func` on `mesh`: a handful of
+/// `(value, dim, axis)` sharding attempts, keeping each one the
+/// legality check admits. The single generator behind both the P9
+/// property suite and the experiment sweep, so their coverage can never
+/// silently diverge.
+pub fn random_legal_spec(func: &Func, mesh: &Mesh, rng: &mut Rng) -> ShardingSpec {
+    let mut spec = ShardingSpec::unsharded(func);
+    for _ in 0..6 {
+        let v = ValueId(rng.below(func.num_values()) as u32);
+        let rank = func.ty(v).rank();
+        if rank == 0 {
+            continue;
+        }
+        let d = rng.below(rank);
+        let axis = rng.below(mesh.rank());
+        if spec.check(func, mesh, v, d, axis).is_ok() {
+            spec.dims[v.index()][d].push(axis);
+        }
+    }
+    spec
+}
+
+/// Upper bound for index values of i32 parameter `pi`: the size of the
+/// gathered/scattered axis of any consumer, so random indices stay valid.
+fn index_cap(func: &Func, pi: usize) -> usize {
+    let uses = func.uses();
+    let mut cap = usize::MAX;
+    for &(ii, oi) in &uses[pi] {
+        let instr = &func.instrs[ii];
+        match &instr.kind {
+            OpKind::Gather { axis } if oi == 1 => {
+                cap = cap.min(func.ty(instr.operands[0]).shape[*axis] as usize);
+            }
+            OpKind::Scatter { axis, .. } if oi == 1 => {
+                cap = cap.min(func.ty(instr.operands[0]).shape[*axis] as usize);
+            }
+            _ => {}
+        }
+    }
+    if cap == usize::MAX {
+        16
+    } else {
+        cap
+    }
+}
+
+/// Partition `func` under `spec`, execute both ways from the same
+/// seeded random inputs, and report the divergence. Errors if the
+/// partitioner rejects the spec or either executor fails.
+pub fn differential_test(
+    func: &Func,
+    spec: &ShardingSpec,
+    mesh: &Mesh,
+    seed: u64,
+) -> Result<DiffReport> {
+    let inputs = random_inputs(func, seed);
+    let expected = eval_func(func, &inputs)?;
+    differential_test_against(func, spec, mesh, &inputs, &expected)
+}
+
+/// [`differential_test`] against a *precomputed* oracle run: sweeps
+/// that try many `(spec, mesh)` pairs per function amortize the input
+/// generation and the oracle execution, which depend only on
+/// `(func, seed)`, across every pair.
+pub fn differential_test_against(
+    func: &Func,
+    spec: &ShardingSpec,
+    mesh: &Mesh,
+    inputs: &[Tensor],
+    expected: &[Tensor],
+) -> Result<DiffReport> {
+    let pm = partition_exec(func, spec, mesh)?;
+    crate::ir::verifier::verify_device_local_with(&pm.local, mesh)?;
+    let actual = super::spmd::run_sharded(&pm, mesh, inputs)?;
+    let mut per_result = Vec::with_capacity(expected.len());
+    let mut max_abs = 0.0f32;
+    let mut max_rel = 0.0f32;
+    for (e, a) in expected.iter().zip(&actual) {
+        let d = ResultDiff { abs: e.max_abs_diff(a), rel: e.max_rel_err(a) };
+        max_abs = max_abs.max(d.abs);
+        max_rel = max_rel.max(d.rel);
+        per_result.push(d);
+    }
+    Ok(DiffReport { max_abs_diff: max_abs, max_rel_err: max_rel, per_result, stats: pm.stats })
+}
+
+/// A minimized failing `(program, spec)` pair plus a readable report.
+/// (The mesh is never shrunk — it is part of the reproduction key.)
+#[derive(Clone, Debug)]
+pub struct Shrunk {
+    pub func: Func,
+    pub spec: ShardingSpec,
+    pub report: String,
+}
+
+/// How a differential triple fails. Tracked through shrinking so a
+/// numeric-divergence reproduction can never degrade into an unrelated
+/// partition-rejection (which would send the reader debugging spec
+/// legality instead of the data-movement bug actually caught).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FailKind {
+    /// Both executors ran; results diverged beyond tolerance.
+    Divergence,
+    /// Partitioning, verification or execution errored outright.
+    Error,
+}
+
+/// The triple's failure kind, or `None` if it passes within `tol`.
+fn failure_kind(
+    func: &Func,
+    spec: &ShardingSpec,
+    mesh: &Mesh,
+    seed: u64,
+    tol: f32,
+) -> Option<FailKind> {
+    match differential_test(func, spec, mesh, seed) {
+        Ok(r) => {
+            if r.within(tol) {
+                None
+            } else {
+                Some(FailKind::Divergence)
+            }
+        }
+        Err(_) => Some(FailKind::Error),
+    }
+}
+
+/// Truncate `func` to its first `k` instructions, returning the last
+/// instruction's value as the sole result, with `spec` truncated to the
+/// surviving values.
+fn truncate(func: &Func, spec: &ShardingSpec, k: usize) -> (Func, ShardingSpec) {
+    let n_params = func.params.len();
+    let f = Func {
+        name: func.name.clone(),
+        params: func.params.clone(),
+        instrs: func.instrs[..k].to_vec(),
+        results: vec![ValueId((n_params + k - 1) as u32)],
+    };
+    let s = ShardingSpec { dims: spec.dims[..n_params + k].to_vec() };
+    (f, s)
+}
+
+/// Shrink a failing differential triple: find the shortest failing
+/// program prefix, then greedily clear sharded dims that are not needed
+/// to reproduce the failure. Returns the minimized pair and a report
+/// naming the mesh, the surviving shardings and the program.
+pub fn shrink_failure(
+    func: &Func,
+    spec: &ShardingSpec,
+    mesh: &Mesh,
+    seed: u64,
+    tol: f32,
+) -> Shrunk {
+    let mut best_f = func.clone();
+    let mut best_s = spec.clone();
+    if let Some(kind) = failure_kind(&best_f, &best_s, mesh, seed, tol) {
+        // Shortest prefix failing the *same way* (the original results
+        // may hide the first divergent value; prefixes expose it).
+        for k in 1..=func.instrs.len() {
+            let (f, s) = truncate(func, spec, k);
+            if failure_kind(&f, &s, mesh, seed, tol) == Some(kind) {
+                best_f = f;
+                best_s = s;
+                break;
+            }
+        }
+        // Fewest sharded dims: clear one (value, dim) at a time, keeping
+        // the clear only if the same failure kind survives.
+        for v in 0..best_s.dims.len() {
+            for d in 0..best_s.dims[v].len() {
+                if best_s.dims[v][d].is_empty() {
+                    continue;
+                }
+                let saved = std::mem::take(&mut best_s.dims[v][d]);
+                if failure_kind(&best_f, &best_s, mesh, seed, tol) != Some(kind) {
+                    best_s.dims[v][d] = saved;
+                }
+            }
+        }
+    }
+    let mut shardings = String::new();
+    for v in 0..best_s.dims.len() {
+        let vid = ValueId(v as u32);
+        if best_s.dims[v].iter().any(|axes| !axes.is_empty()) {
+            shardings.push_str(&format!(
+                "  {} : {}\n",
+                best_f.value_name(vid),
+                best_s.describe_value(&best_f, mesh, vid)
+            ));
+        }
+    }
+    let outcome = match differential_test(&best_f, &best_s, mesh, seed) {
+        Ok(r) => format!(
+            "max_rel_err {:.3e} (abs {:.3e}), {} collectives",
+            r.max_rel_err,
+            r.max_abs_diff,
+            r.stats.total_collectives()
+        ),
+        Err(e) => format!("error: {e:#}"),
+    };
+    let report = format!(
+        "differential failure (seed {seed}, tol {tol:.1e})\n\
+         mesh: {}\n\
+         outcome: {}\n\
+         shardings:\n{}\
+         program:\n{}",
+        mesh.describe(),
+        outcome,
+        if shardings.is_empty() { "  (none)\n".to_string() } else { shardings },
+        best_f
+    );
+    Shrunk { func: best_f, spec: best_s, report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{FuncBuilder, TensorType};
+
+    fn mlp() -> Func {
+        let mut b = FuncBuilder::new("mlp");
+        let x = b.param("x", TensorType::f32(vec![16, 8]));
+        let w1 = b.param("w1", TensorType::f32(vec![8, 12]));
+        let w2 = b.param("w2", TensorType::f32(vec![12, 4]));
+        let y = b.matmul(x, w1);
+        let z = b.relu(y);
+        let w = b.matmul(z, w2);
+        b.build(vec![w])
+    }
+
+    #[test]
+    fn unsharded_diff_is_exact() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("a", 2)]);
+        let spec = ShardingSpec::unsharded(&f);
+        let r = differential_test(&f, &spec, &mesh, 1).unwrap();
+        assert_eq!(r.max_abs_diff, 0.0);
+        assert_eq!(r.stats.total_collectives(), 0);
+        assert!(r.within(DEFAULT_REL_TOL));
+    }
+
+    #[test]
+    fn megatron_diff_within_tolerance() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 2), ("m", 2)]);
+        let mut spec = ShardingSpec::unsharded(&f);
+        spec.apply_assignment(
+            &f,
+            &mesh,
+            &[(ValueId(0), 0), (ValueId(3), 0), (ValueId(4), 0), (ValueId(5), 0)],
+            0,
+        )
+        .unwrap();
+        spec.apply_assignment(
+            &f,
+            &mesh,
+            &[(ValueId(1), 1), (ValueId(3), 1), (ValueId(4), 1), (ValueId(2), 0)],
+            1,
+        )
+        .unwrap();
+        let r = differential_test(&f, &spec, &mesh, 2).unwrap();
+        assert!(r.within(DEFAULT_REL_TOL), "rel {}", r.max_rel_err);
+        assert_eq!(r.stats.all_reduce, 1);
+        assert_eq!(r.per_result.len(), f.results.len());
+    }
+
+    #[test]
+    fn shrink_reports_non_failing_triple_verbatim() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("a", 2)]);
+        let spec = ShardingSpec::unsharded(&f);
+        let s = shrink_failure(&f, &spec, &mesh, 3, DEFAULT_REL_TOL);
+        assert_eq!(s.func.instrs.len(), f.instrs.len());
+        assert!(s.report.contains("mesh:"));
+        assert!(s.report.contains("program:"));
+    }
+
+    #[test]
+    fn shrink_minimizes_a_seeded_failure() {
+        // Manufacture a "failure" with an absurd tolerance of -1 (every
+        // triple fails), and check the shrinker reduces to the 1-instr
+        // prefix with no shardings.
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 2)]);
+        let mut spec = ShardingSpec::unsharded(&f);
+        spec.apply_assignment(
+            &f,
+            &mesh,
+            &[(ValueId(0), 0), (ValueId(3), 0), (ValueId(4), 0), (ValueId(5), 0)],
+            0,
+        )
+        .unwrap();
+        let s = shrink_failure(&f, &spec, &mesh, 4, -1.0);
+        assert_eq!(s.func.instrs.len(), 1, "shortest prefix");
+        assert!(s.spec.dims.iter().all(|v| v.iter().all(|a| a.is_empty())));
+        assert!(s.report.contains("differential failure"));
+    }
+}

@@ -1,16 +1,40 @@
-//! PJRT execution runtime: load AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and execute them from Rust via the `xla`
-//! crate's PJRT CPU client. Python never runs on this path.
+//! Execution runtimes — home of the **two-executor architecture** that
+//! gives every partitioner rewrite a numeric ground truth:
+//!
+//! 1. **The interpreter oracle** ([`crate::ir::interp::eval_func`])
+//!    executes the *logical* (unpartitioned) function on host tensors.
+//!    It defines what the program means.
+//! 2. **The SPMD simulator** ([`spmd`]) executes the *device-local*
+//!    function the partitioner emits, on one simulated device state per
+//!    mesh device, with real data-movement semantics for every
+//!    collective (`all_reduce`, `all_gather`, `reduce_scatter`,
+//!    `all_to_all`) and zero-communication `shard_slice` — plus shard
+//!    extraction from global inputs and global-result reassembly.
+//!
+//! Both executors evaluate device-local *compute* through the single
+//! shared kernel [`crate::ir::interp::eval_op`], so any divergence the
+//! differential harness ([`diff`]) observes is attributable to the
+//! partitioner's rewrite or the simulated data movement — never to two
+//! drifting op implementations. [`diff::differential_test`] is the
+//! correctness gate every scaling refactor regresses against; on
+//! failure [`diff::shrink_failure`] minimizes the `(program, spec,
+//! mesh)` reproduction.
+//!
+//! The PJRT path below is the *hardware-backed* third executor: load
+//! AOT HLO-text artifacts produced by `python/compile/aot.py` and
+//! execute them via the `xla` crate's PJRT CPU client. Python never
+//! runs on this path.
 //!
 //! * [`Runtime`] — client + compiled executables, loaded from an
 //!   artifacts directory (`make artifacts`).
-//! * [`simexec`] — the simulated multi-device executor: a data-parallel
-//!   trainer that runs the per-device `grad` artifact on every simulated
-//!   device's batch shard, performs the gradient all-reduce on the host
-//!   (the L3 collective), and applies the `adam` artifact — proving the
-//!   three layers compose end to end.
+//! * [`simexec`] — the artifact-driven data-parallel trainer: runs the
+//!   per-device `grad` artifact on every simulated device's batch
+//!   shard, performs the gradient all-reduce on the host, and applies
+//!   the `adam` artifact.
 
+pub mod diff;
 pub mod simexec;
+pub mod spmd;
 
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;

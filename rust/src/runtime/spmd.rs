@@ -1,0 +1,574 @@
+//! The SPMD simulation executor — the *simulator* half of the
+//! two-executor architecture.
+//!
+//! Runs a partitioned, device-local [`Func`] on `mesh.num_devices()`
+//! simulated device states in lock-step over an arbitrary n-dimensional
+//! [`Mesh`], with real data-movement semantics for every collective the
+//! partitioner emits:
+//!
+//! * [`all_reduce`] — elementwise reduction across every device of each
+//!   subgroup spanned by the named mesh axes; all members receive the
+//!   reduced value.
+//! * [`all_gather`] — concatenation of the subgroup's shards along a
+//!   tensor dimension, ordered by the devices' coordinate on the axis.
+//! * [`reduce_scatter`] — subgroup reduction followed by re-sharding of
+//!   the reduced value along a tensor dimension.
+//! * [`all_to_all`] — each device splits its tensor along `split_dim`
+//!   and sends piece *j* to subgroup member *j*, which concatenates the
+//!   received pieces along `concat_dim` (axis moves between dims).
+//! * [`shard_slice`] — zero-communication re-sharding: each device keeps
+//!   the block of a replicated dimension indexed by its own coordinate.
+//!
+//! Subgroups come from [`Mesh::groups`] / [`Mesh::groups_multi`]
+//! (devices differing only in the collective's axis coordinates, ordered
+//! by that coordinate), so the same row-major device→coordinate mapping
+//! drives partitioning, cost modeling and execution.
+//!
+//! Device-local *compute* is evaluated through the interpreter's shared
+//! kernel [`eval_op`] — one implementation of op semantics for both the
+//! single-device oracle ([`crate::ir::interp::eval_func`]) and this
+//! simulator, so the differential harness ([`crate::runtime::diff`])
+//! only ever tests the partitioner's rewrite + the data movement here.
+//!
+//! The global-tensor boundary is handled by [`shard_tensor`] (extract
+//! each device's shard from a global input per a dim→axes assignment)
+//! and [`unshard_tensor`] (reassemble a global result from shards);
+//! [`run_sharded`] strings extraction → lock-step execution →
+//! reassembly together over a [`PartitionedModule`].
+
+use crate::ir::interp::{eval_op, reduce_apply, Tensor};
+use crate::ir::{AxisId, Func, Instr, OpKind, ReduceKind};
+use crate::mesh::Mesh;
+use crate::sharding::partition::PartitionedModule;
+use anyhow::{bail, Result};
+
+/// Elementwise-accumulate `src` into `acc` with `kind`.
+fn accumulate(kind: ReduceKind, acc: &mut Tensor, src: &Tensor) {
+    debug_assert_eq!(acc.shape, src.shape, "collective operand shape mismatch");
+    for (a, b) in acc.data.iter_mut().zip(&src.data) {
+        *a = reduce_apply(kind, *a, *b);
+    }
+}
+
+/// Copy `src` into `dst` with its origin at multi-index `starts`.
+fn write_block(dst: &mut Tensor, starts: &[usize], src: &Tensor) {
+    let dst_st = dst.strides();
+    let src_st = src.strides();
+    let rank = src.rank();
+    let mut idx = vec![0usize; rank];
+    for lin in 0..src.elems() {
+        let mut rem = lin;
+        for d in 0..rank {
+            idx[d] = rem / src_st[d];
+            rem %= src_st[d];
+        }
+        let mut olin = 0;
+        for d in 0..rank {
+            olin += (starts[d] + idx[d]) * dst_st[d];
+        }
+        dst.data[olin] = src.data[lin];
+    }
+}
+
+fn unwrap_all(out: Vec<Option<Tensor>>) -> Vec<Tensor> {
+    out.into_iter()
+        .map(|o| o.expect("mesh groups must cover every device exactly once"))
+        .collect()
+}
+
+/// `all_reduce` over the joint subgroups of `axes`: every device of a
+/// subgroup receives the reduction of all members' tensors, reduced in
+/// subgroup (coordinate) order. `input[d]` is device `d`'s local tensor.
+pub fn all_reduce(mesh: &Mesh, axes: &[AxisId], kind: ReduceKind, input: &[Tensor]) -> Vec<Tensor> {
+    let mut out: Vec<Option<Tensor>> = vec![None; mesh.num_devices()];
+    for group in mesh.groups_multi(axes) {
+        let mut acc = input[group[0]].clone();
+        for &d in &group[1..] {
+            accumulate(kind, &mut acc, &input[d]);
+        }
+        for &d in &group {
+            out[d] = Some(acc.clone());
+        }
+    }
+    unwrap_all(out)
+}
+
+/// `all_gather` along mesh axis `axis`: each subgroup concatenates its
+/// members' shards on tensor dimension `dim`, ordered by axis
+/// coordinate; every member receives the gathered tensor.
+pub fn all_gather(mesh: &Mesh, axis: AxisId, dim: usize, input: &[Tensor]) -> Vec<Tensor> {
+    let mut out: Vec<Option<Tensor>> = vec![None; mesh.num_devices()];
+    for group in mesh.groups(axis) {
+        let shard = &input[group[0]];
+        let mut gshape = shard.shape.clone();
+        gshape[dim] *= group.len();
+        let mut g = Tensor::zeros(gshape);
+        for (k, &d) in group.iter().enumerate() {
+            let mut starts = vec![0usize; shard.rank()];
+            starts[dim] = k * input[d].shape[dim];
+            write_block(&mut g, &starts, &input[d]);
+        }
+        for &d in &group {
+            out[d] = Some(g.clone());
+        }
+    }
+    unwrap_all(out)
+}
+
+/// `reduce_scatter` along mesh axis `axis`: reduce across the subgroup,
+/// then member `k` keeps block `k` of the reduced tensor along `dim`.
+pub fn reduce_scatter(
+    mesh: &Mesh,
+    axis: AxisId,
+    dim: usize,
+    kind: ReduceKind,
+    input: &[Tensor],
+) -> Vec<Tensor> {
+    let mut out: Vec<Option<Tensor>> = vec![None; mesh.num_devices()];
+    for group in mesh.groups(axis) {
+        let mut acc = input[group[0]].clone();
+        for &d in &group[1..] {
+            accumulate(kind, &mut acc, &input[d]);
+        }
+        let shard_sz = acc.shape[dim] / group.len();
+        for (k, &d) in group.iter().enumerate() {
+            let mut starts = vec![0usize; acc.rank()];
+            let mut sizes = acc.shape.clone();
+            starts[dim] = k * shard_sz;
+            sizes[dim] = shard_sz;
+            out[d] = Some(acc.block(&starts, &sizes));
+        }
+    }
+    unwrap_all(out)
+}
+
+/// `all_to_all` along mesh axis `axis`: device *i* of a subgroup splits
+/// its tensor into `n` pieces along `split_dim` and sends piece *j* to
+/// member *j*; each member concatenates its received pieces along
+/// `concat_dim` in sender-coordinate order.
+pub fn all_to_all(
+    mesh: &Mesh,
+    axis: AxisId,
+    split_dim: usize,
+    concat_dim: usize,
+    input: &[Tensor],
+) -> Vec<Tensor> {
+    let mut out: Vec<Option<Tensor>> = vec![None; mesh.num_devices()];
+    for group in mesh.groups(axis) {
+        let n = group.len();
+        for (j, &dst) in group.iter().enumerate() {
+            let t0 = &input[group[0]];
+            let piece_sz = t0.shape[split_dim] / n;
+            let mut cshape = t0.shape.clone();
+            cshape[split_dim] = piece_sz;
+            cshape[concat_dim] *= n;
+            let mut c = Tensor::zeros(cshape);
+            let mut base = 0usize;
+            for &src in group.iter() {
+                let t = &input[src];
+                let mut starts = vec![0usize; t.rank()];
+                let mut sizes = t.shape.clone();
+                starts[split_dim] = j * piece_sz;
+                sizes[split_dim] = piece_sz;
+                let piece = t.block(&starts, &sizes);
+                let mut dst_starts = vec![0usize; t.rank()];
+                dst_starts[concat_dim] = base;
+                write_block(&mut c, &dst_starts, &piece);
+                base += piece.shape[concat_dim];
+            }
+            out[dst] = Some(c);
+        }
+    }
+    unwrap_all(out)
+}
+
+/// Zero-communication `shard_slice`: each device keeps its own block of
+/// a replicated dimension, indexed by its coordinate on `axis`.
+pub fn shard_slice(mesh: &Mesh, axis: AxisId, dim: usize, input: &[Tensor]) -> Vec<Tensor> {
+    let n = mesh.axis_size(axis);
+    (0..mesh.num_devices())
+        .map(|d| {
+            let coord = mesh.coords(d)[axis];
+            let t = &input[d];
+            let shard = t.shape[dim] / n;
+            let mut starts = vec![0usize; t.rank()];
+            let mut sizes = t.shape.clone();
+            starts[dim] = coord * shard;
+            sizes[dim] = shard;
+            t.block(&starts, &sizes)
+        })
+        .collect()
+}
+
+/// Execute one instruction across all device states. `values[v][d]` is
+/// SSA value `v` on device `d`.
+fn step_instr(instr: &Instr, values: &[Vec<Tensor>], mesh: &Mesh) -> Result<Vec<Tensor>> {
+    let nd = mesh.num_devices();
+    Ok(match &instr.kind {
+        OpKind::ShardSlice { axis, dim } => {
+            shard_slice(mesh, *axis, *dim, &values[instr.operands[0].index()])
+        }
+        OpKind::AllReduce { axes, kind } => {
+            all_reduce(mesh, axes, *kind, &values[instr.operands[0].index()])
+        }
+        OpKind::AllGather { axis, dim } => {
+            all_gather(mesh, *axis, *dim, &values[instr.operands[0].index()])
+        }
+        OpKind::ReduceScatter { axis, dim, kind } => {
+            reduce_scatter(mesh, *axis, *dim, *kind, &values[instr.operands[0].index()])
+        }
+        OpKind::AllToAll { axis, split_dim, concat_dim } => all_to_all(
+            mesh,
+            *axis,
+            *split_dim,
+            *concat_dim,
+            &values[instr.operands[0].index()],
+        ),
+        _ => {
+            // Device-local compute: the interpreter's shared kernel, once
+            // per device on that device's operand tensors.
+            let mut per_dev = Vec::with_capacity(nd);
+            for d in 0..nd {
+                let ops: Vec<&Tensor> =
+                    instr.operands.iter().map(|o| &values[o.index()][d]).collect();
+                per_dev.push(eval_op(instr, &ops)?);
+            }
+            per_dev
+        }
+    })
+}
+
+/// Evaluate a device-local function for all devices of `mesh` in
+/// lock-step. `inputs[p][d]` is parameter `p`'s shard on device `d`.
+/// Returns `results[r][d]`.
+pub fn eval_spmd(f: &Func, mesh: &Mesh, inputs: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+    let nd = mesh.num_devices();
+    if inputs.len() != f.params.len() {
+        bail!("expected {} inputs, got {}", f.params.len(), inputs.len());
+    }
+    for (p, per_dev) in inputs.iter().enumerate() {
+        if per_dev.len() != nd {
+            bail!("param {} has {} device shards, mesh has {}", p, per_dev.len(), nd);
+        }
+    }
+    // values[v][d]
+    let mut values: Vec<Vec<Tensor>> = inputs.to_vec();
+    values.reserve(f.instrs.len());
+    for instr in &f.instrs {
+        let next = step_instr(instr, &values, mesh)?;
+        values.push(next);
+    }
+    Ok(f.results.iter().map(|&r| values[r.index()].clone()).collect())
+}
+
+/// Extract every device's shard of a global host tensor per the
+/// dim→axes assignment (successive axes subdivide the current block, so
+/// the axis list order matches [`crate::sharding::ShardingSpec`]'s
+/// outermost-first subdivision order). Devices whose coordinates only
+/// differ on unlisted axes receive identical replicas.
+pub fn shard_tensor(t: &Tensor, axes_per_dim: &[Vec<AxisId>], mesh: &Mesh) -> Vec<Tensor> {
+    let nd = mesh.num_devices();
+    (0..nd)
+        .map(|dev| {
+            let coords = mesh.coords(dev);
+            let mut starts = vec![0usize; t.rank()];
+            let mut sizes = t.shape.clone();
+            for (d, axes) in axes_per_dim.iter().enumerate() {
+                for &a in axes {
+                    let n = mesh.axis_size(a);
+                    sizes[d] /= n;
+                    // successive axes subdivide the current block
+                    starts[d] += coords[a] * sizes[d];
+                }
+            }
+            t.block(&starts, &sizes)
+        })
+        .collect()
+}
+
+/// Reassemble the full tensor from device shards (inverse of
+/// [`shard_tensor`]); uses the last-writing replica for unsharded axes
+/// (replicas agree when the executed module is correct).
+pub fn unshard_tensor(
+    shards: &[Tensor],
+    full_shape: &[usize],
+    axes_per_dim: &[Vec<AxisId>],
+    mesh: &Mesh,
+) -> Tensor {
+    let mut out = Tensor::zeros(full_shape.to_vec());
+    for (dev, shard) in shards.iter().enumerate() {
+        let coords = mesh.coords(dev);
+        let mut starts = vec![0usize; shard.rank()];
+        let mut sizes = full_shape.to_vec();
+        for (d, axes) in axes_per_dim.iter().enumerate() {
+            for &a in axes {
+                let n = mesh.axis_size(a);
+                sizes[d] /= n;
+                starts[d] += coords[a] * sizes[d];
+            }
+        }
+        write_block(&mut out, &starts, shard);
+    }
+    out
+}
+
+/// Run a partitioned module end to end on *global* host inputs: shard
+/// extraction per the module's [`PartitionedModule::param_sharding`],
+/// lock-step SPMD execution, and global-result reassembly per
+/// [`PartitionedModule::result_sharding`].
+pub fn run_sharded(
+    pm: &PartitionedModule,
+    mesh: &Mesh,
+    global_inputs: &[Tensor],
+) -> Result<Vec<Tensor>> {
+    if global_inputs.len() != pm.local.params.len() {
+        bail!(
+            "expected {} global inputs, got {}",
+            pm.local.params.len(),
+            global_inputs.len()
+        );
+    }
+    let sharded: Vec<Vec<Tensor>> = global_inputs
+        .iter()
+        .enumerate()
+        .map(|(p, t)| shard_tensor(t, &pm.param_sharding[p], mesh))
+        .collect();
+    let outs = eval_spmd(&pm.local, mesh, &sharded)?;
+    Ok(outs
+        .iter()
+        .enumerate()
+        .map(|(ri, per_dev)| {
+            let full: Vec<usize> =
+                pm.result_types[ri].shape.iter().map(|&d| d as usize).collect();
+            unshard_tensor(per_dev, &full, &pm.result_sharding[ri], mesh)
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{FuncBuilder, TensorType};
+    use crate::sharding::partition::reshard_steps;
+    use crate::sharding::partition::ReshardStep;
+
+    #[test]
+    fn spmd_all_reduce_sums_across_axis() {
+        // mesh 2x2; all_reduce over axis 0 sums pairs of devices that
+        // share the axis-1 coordinate.
+        let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![1]));
+        let r = b.all_reduce(x, vec![0], crate::ir::ReduceKind::Add);
+        let f = b.build(vec![r]);
+        let inputs =
+            vec![(0..4).map(|d| Tensor::new(vec![1], vec![d as f32])).collect::<Vec<_>>()];
+        let out = eval_spmd(&f, &mesh, &inputs).unwrap();
+        // device (i,j) has value 2i+j; group along axis0 = {j, 2+j}
+        let got: Vec<f32> = out[0].iter().map(|t| t.data[0]).collect();
+        assert_eq!(got, vec![2.0, 4.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn spmd_all_gather_restores_full_tensor() {
+        let mesh = Mesh::grid(&[("a", 2)]);
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![2, 2]));
+        let g = b.all_gather(x, 0, 0, 2);
+        let f = b.build(vec![g]);
+        let shard0 = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let shard1 = Tensor::new(vec![2, 2], vec![5., 6., 7., 8.]);
+        let out = eval_spmd(&f, &mesh, &[vec![shard0, shard1]]).unwrap();
+        for d in 0..2 {
+            assert_eq!(out[0][d].shape, vec![4, 2]);
+            assert_eq!(out[0][d].data, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        }
+    }
+
+    #[test]
+    fn spmd_reduce_scatter_is_sum_then_shard() {
+        let mesh = Mesh::grid(&[("a", 2)]);
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![4]));
+        let rs = b.reduce_scatter(x, 0, 0, 2, crate::ir::ReduceKind::Add);
+        let f = b.build(vec![rs]);
+        let d0 = Tensor::new(vec![4], vec![1., 2., 3., 4.]);
+        let d1 = Tensor::new(vec![4], vec![10., 20., 30., 40.]);
+        let out = eval_spmd(&f, &mesh, &[vec![d0, d1]]).unwrap();
+        assert_eq!(out[0][0].data, vec![11., 22.]);
+        assert_eq!(out[0][1].data, vec![33., 44.]);
+    }
+
+    #[test]
+    fn spmd_all_to_all_reshards() {
+        // 2 devices; input sharded on dim0 (each holds [2,4]); output
+        // sharded on dim1: all_to_all(split_dim=1, concat_dim=0).
+        let mesh = Mesh::grid(&[("a", 2)]);
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![2, 4]));
+        let y = b.all_to_all(x, 0, 1, 0, 2);
+        let f = b.build(vec![y]);
+        // full tensor: [[0,1,2,3],[4,5,6,7],[8,9,10,11],[12,13,14,15]]
+        let d0 = Tensor::new(vec![2, 4], (0..8).map(|v| v as f32).collect());
+        let d1 = Tensor::new(vec![2, 4], (8..16).map(|v| v as f32).collect());
+        let out = eval_spmd(&f, &mesh, &[vec![d0, d1]]).unwrap();
+        // device0 should now hold columns 0..2 of all rows
+        assert_eq!(out[0][0].shape, vec![4, 2]);
+        assert_eq!(out[0][0].data, vec![0., 1., 4., 5., 8., 9., 12., 13.]);
+        assert_eq!(out[0][1].data, vec![2., 3., 6., 7., 10., 11., 14., 15.]);
+    }
+
+    #[test]
+    fn all_reduce_is_ring_order_independent() {
+        // Summing a group's tensors in any rotation of the member order
+        // must give the same result for exactly-representable values —
+        // the simulated collective may not depend on a privileged ring
+        // start.
+        let mesh = Mesh::grid(&[("a", 4)]);
+        let input: Vec<Tensor> = (0..4)
+            .map(|d| Tensor::new(vec![2], vec![d as f32 + 1.0, (d * d) as f32]))
+            .collect();
+        let baseline = all_reduce(&mesh, &[0], crate::ir::ReduceKind::Add, &input);
+        for rot in 1..4usize {
+            // rotate which device holds which shard; the reduction result
+            // every device receives must be unchanged.
+            let rotated: Vec<Tensor> =
+                (0..4).map(|d| input[(d + rot) % 4].clone()).collect();
+            let out = all_reduce(&mesh, &[0], crate::ir::ReduceKind::Add, &rotated);
+            for d in 0..4 {
+                assert_eq!(out[d].data, baseline[d].data, "rotation {rot} device {d}");
+            }
+        }
+        // all devices agree
+        for d in 1..4 {
+            assert_eq!(baseline[d].data, baseline[0].data);
+        }
+    }
+
+    #[test]
+    fn collective_subgroups_on_2d_mesh() {
+        // On a 2x3 mesh, an all_gather along axis 1 must only mix the 3
+        // devices sharing an axis-0 coordinate.
+        let mesh = Mesh::grid(&[("a", 2), ("b", 3)]);
+        let input: Vec<Tensor> = (0..6)
+            .map(|d| Tensor::new(vec![1], vec![100.0 * mesh.coords(d)[0] as f32 + d as f32]))
+            .collect();
+        let out = all_gather(&mesh, 1, 0, &input);
+        for d in 0..6 {
+            let row = mesh.coords(d)[0];
+            assert_eq!(out[d].shape, vec![3]);
+            let expected: Vec<f32> = (0..3)
+                .map(|j| 100.0 * row as f32 + mesh.device_at(&[row, j]) as f32)
+                .collect();
+            assert_eq!(out[d].data, expected, "device {d}");
+        }
+        // ...and an all_reduce along axis 0 only mixes the 2 devices
+        // sharing an axis-1 coordinate.
+        let red = all_reduce(&mesh, &[0], crate::ir::ReduceKind::Add, &input);
+        for d in 0..6 {
+            let col = mesh.coords(d)[1];
+            let a = mesh.device_at(&[0, col]);
+            let b = mesh.device_at(&[1, col]);
+            assert_eq!(red[d].data[0], input[a].data[0] + input[b].data[0]);
+        }
+    }
+
+    #[test]
+    fn all_to_all_split_concat_roundtrip() {
+        // all_to_all(split d1, concat d0) then all_to_all(split d0,
+        // concat d1) restores every device's original tensor.
+        let mesh = Mesh::grid(&[("a", 4)]);
+        let input: Vec<Tensor> =
+            (0..4).map(|d| Tensor::randn(vec![4, 8], 42 + d as u64)).collect();
+        let moved = all_to_all(&mesh, 0, 1, 0, &input);
+        for t in &moved {
+            assert_eq!(t.shape, vec![16, 2]);
+        }
+        let back = all_to_all(&mesh, 0, 0, 1, &moved);
+        for d in 0..4 {
+            assert_eq!(back[d].shape, input[d].shape);
+            assert_eq!(back[d].data, input[d].data, "device {d}");
+        }
+    }
+
+    #[test]
+    fn shard_unshard_roundtrip() {
+        let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
+        let t = Tensor::randn(vec![8, 4], 7);
+        let axes = vec![vec![0], vec![1]];
+        let shards = shard_tensor(&t, &axes, &mesh);
+        assert_eq!(shards.len(), 4);
+        assert_eq!(shards[0].shape, vec![4, 2]);
+        let back = unshard_tensor(&shards, &[8, 4], &axes, &mesh);
+        assert_eq!(back.data, t.data);
+    }
+
+    #[test]
+    fn reshard_chain_composition_reaches_target_layout() {
+        // compute_reshard (reshard_steps) applied step-by-step through
+        // the simulated collectives must turn shard_tensor(t, cur) into
+        // shard_tensor(t, required), for a mix of unwind / move / slice
+        // chains on 1D and 2D meshes.
+        let cases: Vec<(Mesh, Vec<Vec<AxisId>>, Vec<Vec<AxisId>>)> = vec![
+            // move axis between dims (one all_to_all)
+            (Mesh::grid(&[("a", 2)]), vec![vec![0], vec![]], vec![vec![], vec![0]]),
+            // unwind innermost then reshard elsewhere
+            (
+                Mesh::grid(&[("a", 2), ("b", 2)]),
+                vec![vec![0, 1], vec![]],
+                vec![vec![0], vec![1]],
+            ),
+            // gather everything (to replicated)
+            (Mesh::grid(&[("a", 2), ("b", 2)]), vec![vec![0], vec![1]], vec![vec![], vec![]]),
+            // slice a replicated tensor onto both axes of one dim
+            (Mesh::grid(&[("a", 2), ("b", 2)]), vec![vec![], vec![]], vec![vec![0, 1], vec![]]),
+            // swap the axes of two dims
+            (Mesh::grid(&[("a", 2), ("b", 2)]), vec![vec![0], vec![1]], vec![vec![1], vec![0]]),
+        ];
+        for (ci, (mesh, cur, required)) in cases.iter().enumerate() {
+            let t = Tensor::randn(vec![8, 8], 90 + ci as u64);
+            // a 1-param func so reshard_steps can name the value
+            let mut b = FuncBuilder::new("f");
+            b.param("x", TensorType::f32(vec![8, 8]));
+            let f = b.build(vec![crate::ir::ValueId(0)]);
+            let steps =
+                reshard_steps(&f, crate::ir::ValueId(0), cur, required).unwrap();
+            let mut shards = shard_tensor(&t, cur, mesh);
+            for step in &steps {
+                shards = match *step {
+                    ReshardStep::AllToAll { axis, split_dim, concat_dim } => {
+                        all_to_all(mesh, axis, split_dim, concat_dim, &shards)
+                    }
+                    ReshardStep::AllGather { axis, dim } => {
+                        all_gather(mesh, axis, dim, &shards)
+                    }
+                    ReshardStep::ShardSlice { axis, dim } => {
+                        shard_slice(mesh, axis, dim, &shards)
+                    }
+                };
+            }
+            let expected = shard_tensor(&t, required, mesh);
+            for (d, (got, want)) in shards.iter().zip(&expected).enumerate() {
+                assert_eq!(got.shape, want.shape, "case {ci} device {d}");
+                assert_eq!(got.data, want.data, "case {ci} device {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn singleton_axes_are_harmless() {
+        // A mesh axis of size 1 makes every collective an identity (or a
+        // trivial slice); shard/unshard must round-trip too.
+        let mesh = Mesh::grid(&[("a", 1), ("b", 2)]);
+        let t = Tensor::randn(vec![4, 4], 3);
+        let axes = vec![vec![0], vec![1]];
+        let shards = shard_tensor(&t, &axes, &mesh);
+        assert_eq!(shards[0].shape, vec![4, 2]);
+        let back = unshard_tensor(&shards, &[4, 4], &axes, &mesh);
+        assert_eq!(back.data, t.data);
+        let red = all_reduce(&mesh, &[0], crate::ir::ReduceKind::Add, &shards);
+        for (a, b) in red.iter().zip(&shards) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+}

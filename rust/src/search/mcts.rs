@@ -59,6 +59,13 @@ pub struct SearchConfig {
     pub length_penalty: f64,
     /// RNG seed.
     pub seed: u64,
+    /// End-to-end validate the best spec after the search: partition it,
+    /// execute sharded (SPMD simulator) and unsharded (interpreter
+    /// oracle), and record the max relative divergence in
+    /// [`SearchOutcome::validation`]. Only meaningful for
+    /// interpreter-sized (scaled) models — executing a paper-scale IR
+    /// would take hours.
+    pub validate_best: bool,
 }
 
 impl Default for SearchConfig {
@@ -72,6 +79,7 @@ impl Default for SearchConfig {
             patience: 3,
             length_penalty: 0.01,
             seed: 0,
+            validate_best: false,
         }
     }
 }
@@ -94,6 +102,12 @@ pub struct SearchOutcome {
     pub evals: usize,
     /// Wall-clock search time.
     pub wall: Duration,
+    /// Max relative divergence between the SPMD-simulated execution of
+    /// the best spec and the interpreter oracle, when
+    /// [`SearchConfig::validate_best`] is set (`+inf` if the partitioned
+    /// module failed to execute); `None` when validation was not
+    /// requested.
+    pub validation: Option<f64>,
 }
 
 /// Canonical state key: the sorted applied-action ids themselves (exact —
@@ -546,6 +560,23 @@ pub fn search(
         "final spec: symbolic {best_cost} vs oracle {oracle_rel}"
     );
 
+    // Optional end-to-end validation of the winning spec: differential
+    // execution against the interpreter oracle (see runtime::diff).
+    let validation = if cfg.validate_best {
+        Some(match crate::runtime::diff::differential_test(func, &spec, mesh, cfg.seed ^ 0xD1FF) {
+            Ok(r) => r.max_rel_err as f64,
+            Err(e) => {
+                // Surface the cause (partition rejection, verifier or
+                // executor failure) — the infinite divergence alone would
+                // send the caller debugging the wrong layer.
+                eprintln!("validate_best: best spec failed to execute: {e:#}");
+                f64::INFINITY
+            }
+        })
+    } else {
+        None
+    };
+
     SearchOutcome {
         actions: best_actions,
         spec,
@@ -554,6 +585,7 @@ pub fn search(
         relative: best_cost,
         evals: shared.evals.load(Ordering::Relaxed),
         wall: t0.elapsed(),
+        validation,
     }
 }
 
@@ -638,6 +670,29 @@ mod tests {
         let out = search(&f, &mesh, &model, &actions, &quick_cfg());
         assert_eq!(out.relative, 1.0);
         assert!(out.actions.is_empty());
+    }
+
+    #[test]
+    fn validate_best_runs_differential_check() {
+        // Interpreter-sized MLP: the winning spec must execute on the
+        // SPMD simulator within float noise of the oracle.
+        let f = mlp(64, 16, 32, 8);
+        let mesh = Mesh::grid(&[("b", 4)]);
+        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let nda = Nda::analyze(&f);
+        let actions = build_actions(
+            &f,
+            &nda,
+            &mesh,
+            &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        );
+        let cfg = SearchConfig { validate_best: true, ..quick_cfg() };
+        let out = search(&f, &mesh, &model, &actions, &cfg);
+        let v = out.validation.expect("validation requested");
+        assert!(v < 1e-4, "best spec diverged from the oracle: {v}");
+        // ...and stays None when not requested.
+        let out2 = search(&f, &mesh, &model, &actions, &quick_cfg());
+        assert!(out2.validation.is_none());
     }
 
     #[test]

@@ -15,7 +15,7 @@
 pub mod partition;
 pub mod validate;
 
-pub use partition::{partition, partition_with_rules};
+pub use partition::{partition, partition_exec, partition_with_rules, PartitionedModule};
 pub use validate::{validate_spec, validate_symbolic_cost};
 
 use crate::ir::{AxisId, Func, ValueId};

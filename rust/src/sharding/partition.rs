@@ -718,6 +718,44 @@ impl PartitionSink for IrSink {
     }
 }
 
+/// A device-local module bundled with the *shard-extraction metadata*
+/// the SPMD executor ([`crate::runtime::spmd`]) needs to run it on
+/// global host tensors: how each parameter's device shard is extracted
+/// from the global input, and how each global result is reassembled
+/// from the per-device outputs. The metadata is the spec's dim→axes
+/// assignment at the module boundary, captured at partition time so the
+/// executor never needs the originating [`ShardingSpec`].
+#[derive(Clone, Debug)]
+pub struct PartitionedModule {
+    /// The device-local function every device executes.
+    pub local: Func,
+    /// Collective statistics of the rewrite.
+    pub stats: PartitionStats,
+    /// Per-parameter dim→axes sharding (outermost-first subdivision).
+    pub param_sharding: Vec<Vec<Vec<AxisId>>>,
+    /// Per-result dim→axes sharding.
+    pub result_sharding: Vec<Vec<Vec<AxisId>>>,
+    /// Global (logical) result types, for reassembly.
+    pub result_types: Vec<TensorType>,
+}
+
+/// [`partition`] plus the shard-extraction metadata needed to execute
+/// the device-local module on global inputs.
+pub fn partition_exec(
+    func: &Func,
+    spec: &ShardingSpec,
+    mesh: &Mesh,
+) -> Result<PartitionedModule> {
+    let (local, stats) = partition(func, spec, mesh)?;
+    let param_sharding: Vec<Vec<Vec<AxisId>>> =
+        (0..func.params.len()).map(|p| spec.dims[p].clone()).collect();
+    let result_sharding: Vec<Vec<Vec<AxisId>>> =
+        func.results.iter().map(|&r| spec.dims[r.index()].clone()).collect();
+    let result_types: Vec<TensorType> =
+        func.results.iter().map(|&r| func.ty(r).clone()).collect();
+    Ok(PartitionedModule { local, stats, param_sharding, result_sharding, result_types })
+}
+
 /// Partition `func` under `spec` for `mesh`. Returns the device-local
 /// function (identical on all devices; collectives reference mesh axes)
 /// and collective statistics.

@@ -1,82 +1,31 @@
 //! Numeric validation: prove a partitioner rewrite is semantics-preserving
 //! by executing the logical function and the device-local function (on the
-//! lock-step SPMD interpreter) and comparing outputs — plus the cost-side
-//! oracle check ([`validate_symbolic_cost`]) that the symbolic evaluator
-//! agrees with materialize-partition-evaluate on a given spec.
+//! SPMD simulator) and comparing outputs — plus the cost-side oracle
+//! check ([`validate_symbolic_cost`]) that the symbolic evaluator agrees
+//! with materialize-partition-evaluate on a given spec.
+//!
+//! The execution machinery lives in [`crate::runtime`] (see the
+//! two-executor architecture there); this module keeps the historical
+//! [`validate_spec`] entry point as a thin facade over
+//! [`crate::runtime::diff::differential_test`].
 
 use super::{partition, ShardingSpec};
 use crate::cost::symbolic::SymbolicEvaluator;
 use crate::cost::CostModel;
-use crate::ir::interp::{eval_func, eval_spmd, Tensor};
-use crate::ir::{DType, Func};
+use crate::ir::Func;
 use crate::mesh::Mesh;
 use anyhow::Result;
 
-/// Shard a host tensor for every device per the dim→axes assignment.
-pub fn shard_tensor(t: &Tensor, axes_per_dim: &[Vec<usize>], mesh: &Mesh) -> Vec<Tensor> {
-    let nd = mesh.num_devices();
-    (0..nd)
-        .map(|dev| {
-            let coords = mesh.coords(dev);
-            let mut starts = vec![0usize; t.rank()];
-            let mut sizes = t.shape.clone();
-            for (d, axes) in axes_per_dim.iter().enumerate() {
-                for &a in axes {
-                    let n = mesh.axis_size(a);
-                    sizes[d] /= n;
-                    // successive axes subdivide the current block
-                    starts[d] += coords[a] * sizes[d];
-                }
-            }
-            t.block(&starts, &sizes)
-        })
-        .collect()
-}
-
-/// Reassemble the full tensor from device shards (inverse of
-/// [`shard_tensor`]); uses device 0's replicas for unsharded axes.
-pub fn unshard_tensor(
-    shards: &[Tensor],
-    full_shape: &[usize],
-    axes_per_dim: &[Vec<usize>],
-    mesh: &Mesh,
-) -> Tensor {
-    let mut out = Tensor::zeros(full_shape.to_vec());
-    let ost = out.strides();
-    for (dev, shard) in shards.iter().enumerate() {
-        let coords = mesh.coords(dev);
-        let mut starts = vec![0usize; shard.rank()];
-        let mut sizes = full_shape.to_vec();
-        for (d, axes) in axes_per_dim.iter().enumerate() {
-            for &a in axes {
-                let n = mesh.axis_size(a);
-                sizes[d] /= n;
-                starts[d] += coords[a] * sizes[d];
-            }
-        }
-        let sst = shard.strides();
-        let mut idx = vec![0usize; shard.rank()];
-        for lin in 0..shard.elems() {
-            let mut rem = lin;
-            for d in 0..shard.rank() {
-                idx[d] = rem / sst[d];
-                rem %= sst[d];
-            }
-            let mut olin = 0;
-            for d in 0..shard.rank() {
-                olin += (starts[d] + idx[d]) * ost[d];
-            }
-            out.data[olin] = shard.data[lin];
-        }
-    }
-    out
-}
+pub use crate::runtime::spmd::{shard_tensor, unshard_tensor};
 
 /// Outcome of a validation run.
 #[derive(Clone, Debug)]
 pub struct Validation {
     /// Max |expected - actual| across all outputs.
     pub max_abs_diff: f32,
+    /// Max relative error across all outputs (see
+    /// [`crate::ir::interp::Tensor::max_rel_err`]).
+    pub max_rel_err: f32,
     /// Collective statistics of the device-local function.
     pub stats: super::partition::PartitionStats,
 }
@@ -84,50 +33,12 @@ pub struct Validation {
 /// Execute `func` unpartitioned and partitioned-under-`spec` on random
 /// inputs and compare outputs elementwise.
 pub fn validate_spec(func: &Func, spec: &ShardingSpec, mesh: &Mesh, seed: u64) -> Result<Validation> {
-    // Random full inputs (indices get valid small integer values).
-    let inputs: Vec<Tensor> = func
-        .params
-        .iter()
-        .enumerate()
-        .map(|(pi, p)| {
-            let shape: Vec<usize> = p.ty.shape.iter().map(|&d| d as usize).collect();
-            if p.ty.dtype == DType::I32 {
-                // index-looking params: small non-negative ints
-                let t = Tensor::randn(shape.clone(), seed + pi as u64);
-                let cap = index_cap(func, pi);
-                Tensor::new(
-                    shape,
-                    t.data.iter().map(|v| ((v.abs() * 1e4) as usize % cap) as f32).collect(),
-                )
-            } else {
-                Tensor::randn(shape, seed + pi as u64)
-            }
-        })
-        .collect();
-
-    let expected = eval_func(func, &inputs)?;
-
-    let (local, stats) = partition(func, spec, mesh)?;
-    crate::ir::verifier::verify_device_local_with(&local, mesh)?;
-
-    // Shard inputs per spec.
-    let sharded: Vec<Vec<Tensor>> = inputs
-        .iter()
-        .enumerate()
-        .map(|(pi, t)| shard_tensor(t, &spec.dims[pi], mesh))
-        .collect();
-
-    let outs = eval_spmd(&local, mesh, &sharded)?;
-
-    let mut max_diff = 0.0f32;
-    for (ri, &rv) in func.results.iter().enumerate() {
-        let full_shape: Vec<usize> =
-            func.ty(rv).shape.iter().map(|&d| d as usize).collect();
-        let actual =
-            unshard_tensor(&outs[ri], &full_shape, &spec.dims[rv.index()], mesh);
-        max_diff = max_diff.max(expected[ri].max_abs_diff(&actual));
-    }
-    Ok(Validation { max_abs_diff: max_diff, stats })
+    let r = crate::runtime::diff::differential_test(func, spec, mesh, seed)?;
+    Ok(Validation {
+        max_abs_diff: r.max_abs_diff,
+        max_rel_err: r.max_rel_err,
+        stats: r.stats,
+    })
 }
 
 /// Cross-check the symbolic cost evaluator against the
@@ -150,33 +61,10 @@ pub fn validate_symbolic_cost(
     Ok((sym_rel - oracle_rel).abs())
 }
 
-/// Upper bound for index values of i32 parameter `pi`: the size of the
-/// gathered/scattered axis of any consumer, so random indices stay valid.
-fn index_cap(func: &Func, pi: usize) -> usize {
-    let uses = func.uses();
-    let mut cap = usize::MAX;
-    for &(ii, oi) in &uses[pi] {
-        let instr = &func.instrs[ii];
-        match &instr.kind {
-            crate::ir::OpKind::Gather { axis } if oi == 1 => {
-                cap = cap.min(func.ty(instr.operands[0]).shape[*axis] as usize);
-            }
-            crate::ir::OpKind::Scatter { axis, .. } if oi == 1 => {
-                cap = cap.min(func.ty(instr.operands[0]).shape[*axis] as usize);
-            }
-            _ => {}
-        }
-    }
-    if cap == usize::MAX {
-        16
-    } else {
-        cap
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::interp::Tensor;
     use crate::ir::{FuncBuilder, TensorType, ValueId};
 
     fn mlp() -> Func {

@@ -1,0 +1,142 @@
+//! Golden-snapshot tests pinning the §3 static analysis across the
+//! model zoo: per-model color count, conflict count, compatibility-set
+//! count, resolution-group count and parameter-group count.
+//!
+//! The snapshot lives at `rust/tests/golden/nda_zoo.snap`. On first run
+//! (or with `GOLDEN_BLESS=1`) the current analysis is written out and
+//! the test passes; afterwards any refactor that shifts the analysis
+//! fails with a per-model, per-metric diff naming exactly what moved —
+//! re-bless deliberately with `GOLDEN_BLESS=1 cargo test --test
+//! golden_nda` after confirming the shift is intended.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use toast::models::ModelKind;
+use toast::nda::Nda;
+
+const METRICS: [&str; 5] =
+    ["colors", "conflicts", "compat_sets", "resolution_groups", "param_groups"];
+
+fn snapshot_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/nda_zoo.snap")
+}
+
+/// One model's metric line, e.g.
+/// `mlp colors=12 conflicts=3 compat_sets=2 resolution_groups=1 param_groups=4`.
+fn summarize(kind: ModelKind) -> BTreeMap<&'static str, usize> {
+    let func = kind.build_scaled();
+    let nda = Nda::analyze(&func);
+    let mut m = BTreeMap::new();
+    m.insert("colors", nda.num_colors());
+    m.insert("conflicts", nda.conflicts.conflicts.len());
+    m.insert("compat_sets", nda.conflicts.compat_sets.len());
+    m.insert("resolution_groups", nda.conflicts.num_groups());
+    m.insert("param_groups", nda.param_groups.len());
+    m
+}
+
+fn render() -> String {
+    let mut out = String::new();
+    for kind in ModelKind::all() {
+        let m = summarize(kind);
+        let _ = write!(out, "{}", kind.name());
+        for key in METRICS {
+            let _ = write!(out, " {}={}", key, m[key]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn parse(text: &str) -> BTreeMap<String, BTreeMap<String, usize>> {
+    let mut models = BTreeMap::new();
+    for line in text.lines() {
+        let mut parts = line.split_whitespace();
+        let Some(model) = parts.next() else { continue };
+        let mut metrics = BTreeMap::new();
+        for kv in parts {
+            if let Some((k, v)) = kv.split_once('=') {
+                if let Ok(n) = v.parse::<usize>() {
+                    metrics.insert(k.to_string(), n);
+                }
+            }
+        }
+        models.insert(model.to_string(), metrics);
+    }
+    models
+}
+
+/// Readable diff between two snapshots; empty when identical.
+fn diff(golden: &str, current: &str) -> String {
+    let g = parse(golden);
+    let c = parse(current);
+    let mut out = String::new();
+    for (model, gm) in &g {
+        match c.get(model) {
+            None => {
+                let _ = writeln!(out, "  model {model}: missing from current analysis");
+            }
+            Some(cm) => {
+                for key in METRICS {
+                    let gv = gm.get(key).copied().unwrap_or(0);
+                    let cv = cm.get(key).copied().unwrap_or(0);
+                    if gv != cv {
+                        let _ = writeln!(
+                            out,
+                            "  model {model}: {key} {gv} -> {cv} ({:+})",
+                            cv as i64 - gv as i64
+                        );
+                    }
+                }
+            }
+        }
+    }
+    for model in c.keys() {
+        if !g.contains_key(model) {
+            let _ = writeln!(out, "  model {model}: new in current analysis");
+        }
+    }
+    out
+}
+
+/// The analysis itself must be deterministic run-to-run, or a snapshot
+/// is meaningless.
+#[test]
+fn nda_zoo_summary_is_deterministic() {
+    assert_eq!(render(), render(), "NDA summary differs between two in-process runs");
+}
+
+#[test]
+fn nda_zoo_matches_golden_snapshot() {
+    let path = snapshot_path();
+    let current = render();
+    let bless = std::env::var("GOLDEN_BLESS")
+        .map(|v| v != "0" && !v.is_empty())
+        .unwrap_or(false);
+    let golden = if bless { None } else { std::fs::read_to_string(&path).ok() };
+    match golden {
+        None => {
+            std::fs::create_dir_all(path.parent().unwrap())
+                .expect("create golden snapshot directory");
+            std::fs::write(&path, &current).expect("write golden snapshot");
+            eprintln!(
+                "blessed NDA golden snapshot at {} ({} models){}",
+                path.display(),
+                current.lines().count(),
+                if bless { " [GOLDEN_BLESS]" } else { " [first run]" }
+            );
+        }
+        Some(golden) => {
+            let d = diff(&golden, &current);
+            assert!(
+                d.is_empty(),
+                "§3 static analysis shifted from the golden snapshot \
+                 ({}):\n{}\nIf intended, re-bless with GOLDEN_BLESS=1.",
+                path.display(),
+                d
+            );
+        }
+    }
+}

@@ -1,28 +1,55 @@
-//! End-to-end runtime tests over the AOT artifacts (skipped gracefully if
-//! `make artifacts` hasn't run — e.g. a docs-only checkout).
+//! End-to-end runtime tests over the AOT artifacts.
 //!
 //! These prove the three-layer composition on the *real* XLA runtime:
 //! the L1 Pallas kernel and L2 JAX model, AOT-lowered to HLO text, load
 //! and execute through the Rust PJRT client, and the L3 data-parallel
 //! coordinator reproduces single-device numerics exactly.
+//!
+//! They require the artifacts produced by `make artifacts`, which a
+//! plain checkout does not have — so they are `#[ignore]`d by default
+//! and CI output reports them as *ignored*, never as spuriously passed
+//! (the old behavior returned early with an `eprintln!`, which counted
+//! as success). Opting in takes both halves — the env var asserts the
+//! environment is prepared, `--include-ignored` actually selects the
+//! tests:
+//!
+//! ```text
+//! make artifacts
+//! PALLAS_E2E=1 cargo test --test runtime_e2e -- --include-ignored
+//! ```
+//!
+//! Once selected, anything short of a fully prepared environment
+//! (unset `PALLAS_E2E`, missing artifact directory) is a hard failure
+//! with instructions — never a silent skip.
 
 use toast::runtime::simexec::DataParallelTrainer;
 use toast::runtime::Runtime;
 
-fn artifacts_dir() -> Option<std::path::PathBuf> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("skipping: no artifacts (run `make artifacts`)");
-        None
-    }
+/// Enforce the opt-in contract and resolve the artifacts directory, or
+/// fail loudly. `PALLAS_E2E_DIR` overrides the default
+/// `<manifest>/artifacts` location.
+fn artifacts_dir() -> std::path::PathBuf {
+    assert!(
+        std::env::var("PALLAS_E2E").map(|v| v != "0" && !v.is_empty()).unwrap_or(false),
+        "runtime_e2e tests are opt-in: set PALLAS_E2E=1 (after `make artifacts`) \
+         and run with --include-ignored"
+    );
+    let dir = match std::env::var("PALLAS_E2E_DIR") {
+        Ok(d) => std::path::PathBuf::from(d),
+        Err(_) => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    };
+    assert!(
+        dir.join("manifest.json").exists(),
+        "PALLAS_E2E=1 but no AOT artifacts at {} — run `make artifacts` first",
+        dir.display()
+    );
+    dir
 }
 
 #[test]
+#[ignore = "needs AOT artifacts (PALLAS_E2E=1 + make artifacts); see module docs"]
 fn artifacts_load_and_forward_runs() {
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load_dir(&dir).unwrap();
+    let rt = Runtime::load_dir(artifacts_dir()).unwrap();
     assert!(rt.artifacts.contains_key("fwd"));
     assert!(rt.artifacts.contains_key("grad"));
     assert!(rt.artifacts.contains_key("adam"));
@@ -31,9 +58,9 @@ fn artifacts_load_and_forward_runs() {
 }
 
 #[test]
+#[ignore = "needs AOT artifacts (PALLAS_E2E=1 + make artifacts); see module docs"]
 fn kernel_artifact_computes_attention() {
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load_dir(&dir).unwrap();
+    let rt = Runtime::load_dir(artifacts_dir()).unwrap();
     let cfg = &rt.manifest.config;
     let (b, h, s, k) = (
         cfg["batch"] as usize,
@@ -61,9 +88,9 @@ fn kernel_artifact_computes_attention() {
 }
 
 #[test]
+#[ignore = "needs AOT artifacts (PALLAS_E2E=1 + make artifacts); see module docs"]
 fn data_parallel_matches_single_device() {
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load_dir(&dir).unwrap();
+    let rt = Runtime::load_dir(artifacts_dir()).unwrap();
     let steps = 3;
     let mut t1 = DataParallelTrainer::new(&rt, 1, 99).unwrap();
     let r1 = t1.train(steps, 2).unwrap();
@@ -78,9 +105,9 @@ fn data_parallel_matches_single_device() {
 }
 
 #[test]
+#[ignore = "needs AOT artifacts (PALLAS_E2E=1 + make artifacts); see module docs"]
 fn invalid_device_counts_rejected() {
-    let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load_dir(&dir).unwrap();
+    let rt = Runtime::load_dir(artifacts_dir()).unwrap();
     assert!(DataParallelTrainer::new(&rt, 3, 0).is_err());
     assert!(DataParallelTrainer::new(&rt, 16, 0).is_err());
 }
