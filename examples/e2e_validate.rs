@@ -9,8 +9,8 @@
 //!    legal spec). Each triple is partitioned, executed on the SPMD
 //!    simulator, and compared to the interpreter oracle; the run fails
 //!    if any triple diverges beyond 1e-4 relative error.
-//! 2. **Search validation** — the MCTS auto-partitioner runs on scaled
-//!    MLP and Transformer with `validate_best` set, proving the
+//! 2. **Search validation** — validated partitioning sessions
+//!    (`.validate(true)`) run on scaled MLP and Transformer, proving the
 //!    *winning* spec of a real search is semantics-preserving, not just
 //!    hand-picked ones.
 //!
@@ -19,12 +19,12 @@
 //!
 //! Run: `cargo run --release --example e2e_validate`
 
+use toast::api::CompiledModel;
 use toast::coordinator::experiments::{format_differential, run_differential_suite};
-use toast::cost::CostModel;
-use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::mesh::Mesh;
 use toast::models::ModelKind;
 use toast::runtime::diff::DEFAULT_REL_TOL;
-use toast::search::{auto_partition, ActionSpaceConfig, SearchConfig};
+use toast::search::ActionSpaceConfig;
 
 fn main() -> anyhow::Result<()> {
     // ---- differential sweep over the scaled zoo ---------------------------
@@ -49,33 +49,32 @@ fn main() -> anyhow::Result<()> {
         with_collectives
     );
 
-    // ---- search --validate-best on MLP and Transformer --------------------
-    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    // ---- validated search sessions on MLP and Transformer -----------------
     for (kind, mesh) in [
         (ModelKind::Mlp, Mesh::grid(&[("data", 2), ("model", 2)])),
         (ModelKind::T2B, Mesh::grid(&[("data", 2), ("model", 2)])),
     ] {
-        let func = kind.build_scaled();
-        let out = auto_partition(
-            &func,
-            &mesh,
-            &model,
-            &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
-            &SearchConfig { budget: 150, seed: 7, validate_best: true, ..Default::default() },
-        );
-        let v = out.validation.expect("validate_best was set");
+        let compiled = CompiledModel::from_kind(kind, false)?;
+        let sol = compiled
+            .partition(&mesh)
+            .action_config(ActionSpaceConfig { min_color_dims: 1, ..Default::default() })
+            .budget(150)
+            .seed(7)
+            .validate(true)
+            .run()?;
+        let v = sol.validation.as_ref().expect("session ran with validate(true)");
         println!(
-            "search {} on {}: relative cost {:.4}, {} actions, best-spec divergence {:.3e}",
+            "search {} on {}: relative cost {:.4}, best-spec divergence {:.3e}",
             kind.name(),
             mesh.describe(),
-            out.relative,
-            out.actions.len(),
-            v
+            sol.relative,
+            v.max_rel_err
         );
         anyhow::ensure!(
-            v <= DEFAULT_REL_TOL as f64,
-            "{}: winning spec diverged from the oracle ({v:.3e})",
-            kind.name()
+            v.pass,
+            "{}: winning spec diverged from the oracle ({:.3e})",
+            kind.name(),
+            v.max_rel_err
         );
     }
     println!("\nOK — search winners execute correctly on the SPMD runtime");

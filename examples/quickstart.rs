@@ -1,15 +1,21 @@
-//! Quickstart: analyze and auto-partition the paper's running example
-//! (the two-layer MLP of Figure 2) end to end, then numerically validate
-//! the partitioned program.
+//! Quickstart: the session API end to end on the paper's running
+//! example (the two-layer MLP of Figure 2).
+//!
+//! 1. build the model IR;
+//! 2. **compile once** — verify + Named Dimension Analysis (§3);
+//! 3. run a partitioning **session** on a mesh (MCTS, §4);
+//! 4. ship the resulting `Solution` artifact through its JSON wire
+//!    format and prove the round-trip is exact;
+//! 5. apply the reloaded spec and numerically validate it against the
+//!    interpreter oracle (differential execution on the SPMD simulator).
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use toast::cost::CostModel;
+use toast::api::{CompiledModel, Solution};
 use toast::ir::{FuncBuilder, TensorType, ValueId};
-use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
-use toast::nda::Nda;
-use toast::search::{auto_partition, ActionSpaceConfig, SearchConfig};
-use toast::sharding::{partition, validate_spec};
+use toast::mesh::Mesh;
+use toast::search::ActionSpaceConfig;
+use toast::sharding::partition;
 
 fn main() -> anyhow::Result<()> {
     // ---- the model (paper Figure 2a) -------------------------------------
@@ -23,52 +29,59 @@ fn main() -> anyhow::Result<()> {
     let func = b.build(vec![w]);
     println!("{func}");
 
-    // ---- the Named Dimension Analysis (paper §3) --------------------------
-    let nda = Nda::analyze(&func);
+    // ---- compile once: verifier + NDA (paper §3) --------------------------
+    let compiled = CompiledModel::compile(func)?;
+    let nda = compiled.nda();
     println!("NDA found {} colors:", nda.num_colors());
     for c in 0..nda.num_colors() {
         let info = &nda.colors[c];
         let members: Vec<String> = info
             .members
             .iter()
-            .map(|&(v, d)| format!("{}.{d}", func.value_name(v)))
+            .map(|&(v, d)| format!("{}.{d}", compiled.func().value_name(v)))
             .collect();
         println!("  color {c} (size {:>4}): {}", info.dim_size, members.join(", "));
     }
 
-    // ---- auto-partition over a 4x2 mesh (paper Figure 2c is b x m) --------
+    // ---- a partitioning session over a 4x2 mesh (Figure 2c is b x m) ------
     let mesh = Mesh::grid(&[("b", 4), ("m", 2)]);
-    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
-    let out = auto_partition(
-        &func,
-        &mesh,
-        &model,
-        &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
-        &SearchConfig { budget: 200, seed: 7, ..Default::default() },
-    );
-    println!(
-        "\nMCTS found {} actions (relative cost {:.3}, {} evaluations, {:?}):",
-        out.actions.len(),
-        out.relative,
-        out.evals,
-        out.wall
-    );
-    for (pi, p) in func.params.iter().enumerate() {
+    let solution = compiled
+        .partition(&mesh)
+        .action_config(ActionSpaceConfig { min_color_dims: 1, ..Default::default() })
+        .budget(200)
+        .seed(7)
+        .validate(true) // differentially execute the winning spec
+        .run()?;
+    println!("\nsession outcome: {}", solution.summarize());
+    for (pi, p) in compiled.func().params.iter().enumerate() {
         println!(
             "  %{:<4} {}",
             p.name,
-            out.spec.describe_value(&func, &mesh, ValueId(pi as u32))
+            solution.spec.describe_value(compiled.func(), &mesh, ValueId(pi as u32))
         );
     }
 
-    // ---- the device-local program (paper Figure 2b/2c) --------------------
-    let (local, stats) = partition(&func, &out.spec, &mesh)?;
+    // ---- the artifact crosses a process boundary --------------------------
+    let wire = solution.to_json_string();
+    println!("\nserialized solution: {} bytes of JSON", wire.len());
+    let reloaded = Solution::from_json_str(&wire)?;
+    assert_eq!(reloaded, solution, "wire round-trip must be exact");
+    println!("round-trip OK — spec, cost report and validation record identical");
+
+    // ---- apply the reloaded spec (paper Figure 2b/2c) ---------------------
+    // (through the session compiler: wire-loaded IR re-passes the verifier)
+    let applied = CompiledModel::from_source(&reloaded.model)?;
+    reloaded.spec.check_against(applied.func(), &reloaded.mesh)?;
+    let (local, stats) = partition(applied.func(), &reloaded.spec, &reloaded.mesh)?;
     println!("\ndevice-local program ({stats:?}):\n{local}");
 
-    // ---- numeric proof -----------------------------------------------------
-    let v = validate_spec(&func, &out.spec, &mesh, 3)?;
-    println!("numeric validation: max |Δ| = {:.3e}", v.max_abs_diff);
-    assert!(v.max_abs_diff < 1e-3);
+    // ---- the numeric proof came with the artifact -------------------------
+    let v = reloaded.validation.expect("session ran with validate(true)");
+    println!(
+        "differential validation: max relative divergence {:.3e} (tol {:.1e})",
+        v.max_rel_err, v.tol
+    );
+    assert!(v.pass);
     println!("OK — sharded execution matches the unsharded program.");
     Ok(())
 }

@@ -6,12 +6,11 @@
 
 mod bench_harness;
 
+use toast::api::CompiledModel;
 use toast::coordinator::experiments::{build_model, BenchScale};
-use toast::cost::CostModel;
-use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::mesh::Mesh;
 use toast::models::ModelKind;
-use toast::nda::Nda;
-use toast::search::{auto_partition, build_actions, ActionSpaceConfig, SearchConfig};
+use toast::search::ActionSpaceConfig;
 
 fn main() {
     let scale = match std::env::var("TOAST_SCALE").as_deref() {
@@ -21,8 +20,6 @@ fn main() {
     };
     let model_kinds = [ModelKind::T2B, ModelKind::Gns];
     let mesh = Mesh::grid(&[("data", 4), ("model", 4)]);
-    let cost = CostModel::new(HardwareProfile::new(HardwareKind::A100));
-    let scfg = SearchConfig { budget: scale.budget(), seed: 5, ..Default::default() };
 
     let variants: Vec<(&str, ActionSpaceConfig)> = vec![
         ("full", ActionSpaceConfig::default()),
@@ -43,19 +40,29 @@ fn main() {
         "model", "variant", "actions", "rel cost", "search_s", "evals"
     );
     for kind in model_kinds {
-        let func = build_model(kind, scale);
+        let compiled = CompiledModel::compile_annotated(
+            build_model(kind, scale),
+            Some(kind),
+            scale == BenchScale::Paper,
+        )
+        .expect("bench model compiles");
         for (name, acfg) in &variants {
-            let nda = Nda::analyze(&func);
-            let n_actions = build_actions(&func, &nda, &mesh, acfg).len();
-            let out = auto_partition(&func, &mesh, &cost, acfg, &scfg);
+            let n_actions = compiled.actions(&mesh, acfg).len();
+            let sol = compiled
+                .partition(&mesh)
+                .action_config(acfg.clone())
+                .budget(scale.budget())
+                .seed(5)
+                .run()
+                .expect("ablation session runs");
             println!(
                 "{:<8} {:<14} {:>8} {:>10.4} {:>10.2} {:>8}",
                 kind.name(),
                 name,
                 n_actions,
-                out.relative,
-                out.wall.as_secs_f64(),
-                out.evals
+                sol.relative,
+                sol.search_time_s,
+                sol.evals
             );
         }
     }

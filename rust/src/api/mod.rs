@@ -1,0 +1,848 @@
+//! The session-based partitioning API — the crate's public facade.
+//!
+//! The paper's pipeline is *analyze once, then search, validate and
+//! apply* (§3–§4). This module makes that staging explicit instead of
+//! smearing it across ad-hoc entry points:
+//!
+//! * [`CompiledModel`] — a model compiled for partitioning: the verified
+//!   IR plus its Named Dimension Analysis, built **once**; per-mesh
+//!   action spaces are cached inside, so repeated partition calls for
+//!   the same model never re-run the NDA or the action construction.
+//! * [`Partitioner`] — a builder started by [`CompiledModel::partition`]:
+//!   `compiled.partition(&mesh).strategy(...).budget(...).validate(true).run()`.
+//! * [`Strategy`] — the one trait the MCTS search and all three
+//!   baselines implement, so every partitioning method runs through the
+//!   same signature and produces the same artifact.
+//! * [`Solution`] — the serializable result: sharding spec, full cost
+//!   report, and (optionally) the differential-validation record. Every
+//!   artifact here has a JSON wire format with exact round-trip
+//!   semantics ([`wire`]), which is what lets specs cross process
+//!   boundaries — the coordinator's workers return `Solution`s the
+//!   service replays through [`crate::runtime::diff::differential_test`]
+//!   before trusting (trust-but-verify).
+//!
+//! ```no_run
+//! use toast::api::CompiledModel;
+//! use toast::mesh::Mesh;
+//! use toast::models::ModelKind;
+//!
+//! let compiled = CompiledModel::from_kind(ModelKind::Mlp, false).unwrap();
+//! let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
+//! let solution = compiled.partition(&mesh).budget(200).validate(true).run().unwrap();
+//! let wire = solution.to_json_string();           // crosses a process boundary
+//! let back = toast::api::Solution::from_json_str(&wire).unwrap();
+//! assert_eq!(back.spec, solution.spec);
+//! ```
+
+pub mod wire;
+
+use crate::baselines::Method;
+use crate::cost::{Cost, CostModel};
+use crate::ir::Func;
+use crate::mesh::{HardwareKind, HardwareProfile, Mesh};
+use crate::models::ModelKind;
+use crate::nda::Nda;
+use crate::search::{build_actions, Action, ActionSpaceConfig, SearchConfig};
+use crate::sharding::{partition, ShardingSpec};
+use crate::util::json::Json;
+use anyhow::{anyhow, ensure};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Model sources
+// ---------------------------------------------------------------------------
+
+/// Where a model comes from — a zoo name the receiver rebuilds, or the
+/// full serialized IR for models the receiver has never seen. This is
+/// what makes the partition service *model-agnostic*: a request is not
+/// limited to [`ModelKind`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelSource {
+    /// A named zoo model at paper or scaled configuration.
+    Zoo { kind: ModelKind, paper_scale: bool },
+    /// An arbitrary function shipped inline (see [`wire::func_to_json`]).
+    Inline(Func),
+}
+
+impl ModelSource {
+    /// Convenience constructor for scaled zoo models.
+    pub fn zoo(kind: ModelKind) -> ModelSource {
+        ModelSource::Zoo { kind, paper_scale: false }
+    }
+
+    /// Build (or clone) the function this source describes.
+    pub fn build(&self) -> Func {
+        match self {
+            ModelSource::Zoo { kind, paper_scale: true } => kind.build_paper(),
+            ModelSource::Zoo { kind, paper_scale: false } => kind.build_scaled(),
+            ModelSource::Inline(f) => f.clone(),
+        }
+    }
+
+    /// Zoo kind, if this is a zoo model.
+    pub fn kind(&self) -> Option<ModelKind> {
+        match self {
+            ModelSource::Zoo { kind, .. } => Some(*kind),
+            ModelSource::Inline(_) => None,
+        }
+    }
+
+    /// True for paper-size IR (too large to execute numerically — the
+    /// verification gate skips those).
+    pub fn is_paper_scale(&self) -> bool {
+        matches!(self, ModelSource::Zoo { paper_scale: true, .. })
+    }
+
+    /// Display name.
+    pub fn name(&self) -> String {
+        match self {
+            ModelSource::Zoo { kind, paper_scale } => {
+                format!("{}{}", kind.name(), if *paper_scale { " (paper)" } else { "" })
+            }
+            ModelSource::Inline(f) => format!("inline:{}", f.name),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ModelSource::Zoo { kind, paper_scale } => Json::obj(vec![
+                ("zoo", Json::s(kind.name())),
+                ("paper_scale", Json::Bool(*paper_scale)),
+            ]),
+            ModelSource::Inline(f) => Json::obj(vec![("inline", wire::func_to_json(f))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<ModelSource> {
+        if let Some(name) = j.get("zoo") {
+            let name = name.as_str().ok_or_else(|| anyhow!("model source: 'zoo' not a string"))?;
+            let kind: ModelKind = name.parse().map_err(|e: String| anyhow!(e))?;
+            let paper_scale = wire::bool_field(j, "paper_scale", "model source")?;
+            Ok(ModelSource::Zoo { kind, paper_scale })
+        } else if let Some(f) = j.get("inline") {
+            Ok(ModelSource::Inline(wire::func_from_json(f)?))
+        } else {
+            Err(anyhow!("model source: expected 'zoo' or 'inline'"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CompiledModel
+// ---------------------------------------------------------------------------
+
+/// Key for the per-mesh action-space cache: the mesh's axis layout plus
+/// every [`ActionSpaceConfig`] knob.
+type ActionKey = (Vec<(String, usize)>, usize, usize, bool, bool);
+
+/// Per-key cell: the map lock is only held to find the cell; the build
+/// runs inside `OnceLock`, so concurrent sessions on *other* meshes (or
+/// cache hits) never wait behind one mesh's action construction.
+type ActionCell = Arc<std::sync::OnceLock<Arc<Vec<Action>>>>;
+
+fn action_key(mesh: &Mesh, cfg: &ActionSpaceConfig) -> ActionKey {
+    (
+        mesh.axes.iter().map(|a| (a.name.clone(), a.size)).collect(),
+        cfg.min_color_dims,
+        cfg.max_groups_per_color,
+        cfg.enumerate_resolutions,
+        cfg.mirror_param_groups,
+    )
+}
+
+/// A model compiled for partitioning: verified IR + NDA, built once,
+/// with per-mesh action spaces cached inside. Everything is immutable
+/// after construction (the cache is interior-mutable and thread-safe),
+/// so a `CompiledModel` can sit in an `Arc` and serve concurrent
+/// partition sessions — exactly how [`crate::coordinator::Service`]
+/// uses it.
+pub struct CompiledModel {
+    source_kind: Option<ModelKind>,
+    paper_scale: bool,
+    /// True only when `func` *is* the zoo build for `source_kind` —
+    /// annotated custom funcs (bench-scale variants) must ship their IR
+    /// inline, or a serialized solution would reference a model the spec
+    /// was never computed for.
+    zoo_build: bool,
+    func: Func,
+    nda: Nda,
+    actions: Mutex<HashMap<ActionKey, ActionCell>>,
+}
+
+impl CompiledModel {
+    /// Compile an arbitrary (inline) function: verify, then analyze.
+    pub fn compile(func: Func) -> crate::Result<CompiledModel> {
+        Self::compile_annotated(func, None, false)
+    }
+
+    /// Compile a zoo model.
+    pub fn from_kind(kind: ModelKind, paper_scale: bool) -> crate::Result<CompiledModel> {
+        let func = if paper_scale { kind.build_paper() } else { kind.build_scaled() };
+        let mut compiled = Self::compile_annotated(func, Some(kind), paper_scale)?;
+        compiled.zoo_build = true; // func is exactly the zoo build
+        Ok(compiled)
+    }
+
+    /// Compile from a wire-level source descriptor.
+    pub fn from_source(source: &ModelSource) -> crate::Result<CompiledModel> {
+        match source {
+            ModelSource::Zoo { kind, paper_scale } => Self::from_kind(*kind, *paper_scale),
+            ModelSource::Inline(f) => Self::compile(f.clone()),
+        }
+    }
+
+    /// Compile a custom function while remembering which zoo model it is
+    /// a variant of (bench-scale experiment builds use this so the
+    /// Manual strategy can still pick its per-model expert template).
+    pub fn compile_annotated(
+        func: Func,
+        kind: Option<ModelKind>,
+        paper_scale: bool,
+    ) -> crate::Result<CompiledModel> {
+        crate::ir::verifier::verify_logical(&func)?;
+        let nda = Nda::analyze(&func);
+        Ok(CompiledModel {
+            source_kind: kind,
+            paper_scale,
+            zoo_build: false,
+            func,
+            nda,
+            actions: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn func(&self) -> &Func {
+        &self.func
+    }
+
+    pub fn nda(&self) -> &Nda {
+        &self.nda
+    }
+
+    pub fn kind(&self) -> Option<ModelKind> {
+        self.source_kind
+    }
+
+    pub fn paper_scale(&self) -> bool {
+        self.paper_scale
+    }
+
+    /// Can this model afford numeric execution (interpreter oracle +
+    /// SPMD simulator)? False for paper-scale zoo builds and for any
+    /// model — zoo or inline — whose parameter footprint says it is a
+    /// production-size IR. This is what the validation paths gate on, so
+    /// a client cannot stall a worker for hours by shipping a
+    /// paper-scale model as inline IR with verification enabled.
+    pub fn interpreter_sized(&self) -> bool {
+        const MAX_EXEC_PARAM_BYTES: u64 = 256 << 20; // far above every scaled zoo model
+        !self.paper_scale && self.func.param_bytes() <= MAX_EXEC_PARAM_BYTES
+    }
+
+    /// The wire-level descriptor of this model. Only exact zoo builds
+    /// are referenced by name; custom funcs — even ones annotated with a
+    /// zoo kind for the Manual templates — ship their full IR inline, so
+    /// a reloaded artifact always rebuilds the model the spec was
+    /// actually computed for.
+    pub fn source(&self) -> ModelSource {
+        match self.source_kind {
+            Some(kind) if self.zoo_build => {
+                ModelSource::Zoo { kind, paper_scale: self.paper_scale }
+            }
+            _ => ModelSource::Inline(self.func.clone()),
+        }
+    }
+
+    /// The action space for `mesh` under `cfg`, built on first use and
+    /// cached. Two sessions racing on the same uncached key: one builds,
+    /// the other blocks on that key's cell only — never on the map lock.
+    pub fn actions(&self, mesh: &Mesh, cfg: &ActionSpaceConfig) -> Arc<Vec<Action>> {
+        let cell: ActionCell = {
+            let mut cache = self.actions.lock().unwrap();
+            Arc::clone(cache.entry(action_key(mesh, cfg)).or_default())
+        };
+        Arc::clone(
+            cell.get_or_init(|| Arc::new(build_actions(&self.func, &self.nda, mesh, cfg))),
+        )
+    }
+
+    /// Number of distinct (mesh, config) action spaces currently cached.
+    pub fn cached_action_spaces(&self) -> usize {
+        self.actions.lock().unwrap().len()
+    }
+
+    /// Start a partitioning session on `mesh`. Defaults: MCTS strategy,
+    /// A100 hardware, budget 300, seed 0, no post-hoc validation, and
+    /// the service's action-space pruning (`min_color_dims = 4`).
+    pub fn partition(&self, mesh: &Mesh) -> Partitioner<'_> {
+        Partitioner {
+            model: self,
+            mesh: mesh.clone(),
+            hardware: HardwareKind::A100,
+            strategy: Box::new(MctsStrategy::default()),
+            action_cfg: ActionSpaceConfig { min_color_dims: 4, ..Default::default() },
+            budget: 300,
+            seed: 0,
+            validate: false,
+            validate_seed: 7,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Strategy
+// ---------------------------------------------------------------------------
+
+/// Everything a partitioning strategy may consult. Action spaces are
+/// fetched lazily ([`StrategyContext::actions`]) so strategies that do
+/// not use them (the baselines) never pay for their construction.
+pub struct StrategyContext<'a> {
+    pub model: &'a CompiledModel,
+    pub mesh: &'a Mesh,
+    pub cost: &'a CostModel,
+    pub action_cfg: &'a ActionSpaceConfig,
+    /// Search budget (state evaluations / sweeps — strategy-defined).
+    pub budget: usize,
+    pub seed: u64,
+}
+
+impl<'a> StrategyContext<'a> {
+    pub fn func(&self) -> &'a Func {
+        self.model.func()
+    }
+
+    pub fn nda(&self) -> &'a Nda {
+        self.model.nda()
+    }
+
+    /// Zoo kind, when known (the Manual strategy keys its expert
+    /// templates off this).
+    pub fn kind(&self) -> Option<ModelKind> {
+        self.model.kind()
+    }
+
+    /// The cached action space for this session's mesh.
+    pub fn actions(&self) -> Arc<Vec<Action>> {
+        self.model.actions(self.mesh, self.action_cfg)
+    }
+}
+
+/// What a strategy hands back: the spec, plus how much work it did.
+#[derive(Clone, Debug)]
+pub struct StrategyOutcome {
+    pub spec: ShardingSpec,
+    /// State evaluations performed (0 when the notion does not apply).
+    pub evals: usize,
+}
+
+/// A partitioning method: consumes a compiled model + session context,
+/// produces a sharding spec. The MCTS search and all three baselines
+/// implement this, which is what lets the service, the experiment
+/// runners and the CLI treat every method identically.
+pub trait Strategy: Send + Sync {
+    /// Stable display name (matches [`Method::name`] for the built-ins).
+    fn name(&self) -> &'static str;
+
+    fn solve(&self, cx: &StrategyContext<'_>) -> crate::Result<StrategyOutcome>;
+}
+
+/// TOAST's own method: MCTS over the cached NDA action space (§4).
+/// `template.budget`/`template.seed` are overridden by the session's.
+#[derive(Clone, Debug, Default)]
+pub struct MctsStrategy {
+    pub template: SearchConfig,
+}
+
+impl Strategy for MctsStrategy {
+    fn name(&self) -> &'static str {
+        Method::Toast.name()
+    }
+
+    fn solve(&self, cx: &StrategyContext<'_>) -> crate::Result<StrategyOutcome> {
+        let actions = cx.actions();
+        let cfg = SearchConfig { budget: cx.budget, seed: cx.seed, ..self.template.clone() };
+        let out = crate::search::search(cx.func(), cx.mesh, cx.cost, &actions, &cfg);
+        Ok(StrategyOutcome { spec: out.spec, evals: out.evals })
+    }
+}
+
+/// Expert/manual templates (§5.1.1). Needs a zoo kind to pick the
+/// template; generic models fall back to the transformer-style stack.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ManualStrategy;
+
+impl Strategy for ManualStrategy {
+    fn name(&self) -> &'static str {
+        Method::Manual.name()
+    }
+
+    fn solve(&self, cx: &StrategyContext<'_>) -> crate::Result<StrategyOutcome> {
+        let spec =
+            crate::baselines::manual::solve(cx.kind(), cx.func(), cx.nda(), cx.mesh, cx.cost);
+        Ok(StrategyOutcome { spec, evals: 0 })
+    }
+}
+
+/// Alpa-like per-op enumeration + iterated relaxation (§5.1.1).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AlpaStrategy;
+
+impl Strategy for AlpaStrategy {
+    fn name(&self) -> &'static str {
+        Method::Alpa.name()
+    }
+
+    fn solve(&self, cx: &StrategyContext<'_>) -> crate::Result<StrategyOutcome> {
+        let (spec, evals) = crate::baselines::alpa::solve(cx.func(), cx.mesh, cx.cost, cx.budget);
+        Ok(StrategyOutcome { spec, evals })
+    }
+}
+
+/// AutoMap-like parameter-sharding search with per-action propagation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AutoMapStrategy;
+
+impl Strategy for AutoMapStrategy {
+    fn name(&self) -> &'static str {
+        Method::AutoMap.name()
+    }
+
+    fn solve(&self, cx: &StrategyContext<'_>) -> crate::Result<StrategyOutcome> {
+        let (spec, evals) =
+            crate::baselines::automap::solve(cx.func(), cx.mesh, cx.cost, cx.budget, cx.seed);
+        Ok(StrategyOutcome { spec, evals })
+    }
+}
+
+/// The built-in strategy for a legacy [`Method`] tag.
+pub fn strategy_for(method: Method) -> Box<dyn Strategy> {
+    match method {
+        Method::Toast => Box::new(MctsStrategy::default()),
+        Method::Manual => Box::new(ManualStrategy),
+        Method::Alpa => Box::new(AlpaStrategy),
+        Method::AutoMap => Box::new(AutoMapStrategy),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Partitioner (session builder)
+// ---------------------------------------------------------------------------
+
+/// A staged partitioning session. Construct with
+/// [`CompiledModel::partition`], configure with the chained setters, and
+/// finish with [`Partitioner::run`].
+pub struct Partitioner<'a> {
+    model: &'a CompiledModel,
+    mesh: Mesh,
+    hardware: HardwareKind,
+    strategy: Box<dyn Strategy>,
+    action_cfg: ActionSpaceConfig,
+    budget: usize,
+    seed: u64,
+    validate: bool,
+    validate_seed: u64,
+}
+
+impl<'a> Partitioner<'a> {
+    /// Use a custom strategy object.
+    pub fn strategy(mut self, s: impl Strategy + 'static) -> Self {
+        self.strategy = Box::new(s);
+        self
+    }
+
+    /// Use the built-in strategy for a [`Method`] tag.
+    pub fn method(mut self, m: Method) -> Self {
+        self.strategy = strategy_for(m);
+        self
+    }
+
+    pub fn hardware(mut self, hw: HardwareKind) -> Self {
+        self.hardware = hw;
+        self
+    }
+
+    pub fn budget(mut self, budget: usize) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn action_config(mut self, cfg: ActionSpaceConfig) -> Self {
+        self.action_cfg = cfg;
+        self
+    }
+
+    /// Differentially validate the winning spec against the interpreter
+    /// oracle before returning (records a [`ValidationRecord`] in the
+    /// solution). Only sensible for interpreter-sized models.
+    pub fn validate(mut self, on: bool) -> Self {
+        self.validate = on;
+        self
+    }
+
+    pub fn validate_seed(mut self, seed: u64) -> Self {
+        self.validate_seed = seed;
+        self
+    }
+
+    /// Run the session: solve, price through the materialized oracle,
+    /// optionally validate, and package the [`Solution`].
+    pub fn run(self) -> crate::Result<Solution> {
+        // Fail before the search, not after it: validation executes the
+        // model numerically, which production-size IR cannot afford.
+        anyhow::ensure!(
+            !self.validate || self.model.interpreter_sized(),
+            "validate(true) executes the model numerically; this IR is production-size \
+             and would take hours — validate a scaled build instead"
+        );
+        let func = self.model.func();
+        let cost_model = CostModel::new(HardwareProfile::new(self.hardware));
+        let t0 = Instant::now();
+        let cx = StrategyContext {
+            model: self.model,
+            mesh: &self.mesh,
+            cost: &cost_model,
+            action_cfg: &self.action_cfg,
+            budget: self.budget,
+            seed: self.seed,
+        };
+        let out = self.strategy.solve(&cx)?;
+        let search_time_s = t0.elapsed().as_secs_f64();
+
+        let (cost, base, relative) = price_spec(func, &out.spec, &self.mesh, &cost_model)?;
+        let oom = !cost_model.fits(&cost);
+
+        let validation = if self.validate {
+            Some(validate_solution_spec(func, &out.spec, &self.mesh, self.validate_seed)?)
+        } else {
+            None
+        };
+
+        Ok(Solution {
+            model: self.model.source(),
+            mesh: self.mesh,
+            hardware: self.hardware,
+            strategy: self.strategy.name().to_string(),
+            spec: out.spec,
+            cost,
+            base,
+            relative,
+            oom,
+            evals: out.evals,
+            search_time_s,
+            validation,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Solution
+// ---------------------------------------------------------------------------
+
+/// Differential-validation record: the spec was partitioned, executed on
+/// the SPMD simulator, and compared against the interpreter oracle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ValidationRecord {
+    /// Worst relative divergence across results (∞ if execution failed).
+    pub max_rel_err: f64,
+    /// Worst absolute divergence across results.
+    pub max_abs_diff: f64,
+    /// Collectives executed by the device-local module.
+    pub collectives: usize,
+    /// Tolerance the verdict was computed with.
+    pub tol: f64,
+    /// `max_rel_err <= tol`.
+    pub pass: bool,
+    /// Input seed of the replay.
+    pub seed: u64,
+}
+
+impl ValidationRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_rel_err", Json::n(self.max_rel_err)),
+            ("max_abs_diff", Json::n(self.max_abs_diff)),
+            ("collectives", Json::n(self.collectives as f64)),
+            ("tol", Json::n(self.tol)),
+            ("pass", Json::Bool(self.pass)),
+            ("seed", wire::u64_to_json(self.seed)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<ValidationRecord> {
+        let ctx = "validation record";
+        // Non-finite divergences render as JSON null; read them back as ∞.
+        let inf_or = |key: &str| -> crate::Result<f64> {
+            let v = wire::field(j, key, ctx)?;
+            if v.is_null() {
+                Ok(f64::INFINITY)
+            } else {
+                v.as_f64().ok_or_else(|| anyhow!("{ctx}: '{key}' is not a number"))
+            }
+        };
+        Ok(ValidationRecord {
+            max_rel_err: inf_or("max_rel_err")?,
+            max_abs_diff: inf_or("max_abs_diff")?,
+            collectives: wire::usize_field(j, "collectives", ctx)?,
+            tol: wire::f64_field(j, "tol", ctx)?,
+            pass: wire::bool_field(j, "pass", ctx)?,
+            seed: wire::u64_field(j, "seed", ctx)?,
+        })
+    }
+}
+
+/// Price `spec` through the materialized oracle: partition the
+/// unsharded and sharded modules, evaluate both, and return
+/// `(cost, base, relative)`. The single pricing path shared by
+/// [`Partitioner::run`] and `toast apply`'s exact-reproduction gate —
+/// one implementation, so a serialized solution always re-prices through
+/// the same arithmetic that produced it.
+pub fn price_spec(
+    func: &Func,
+    spec: &ShardingSpec,
+    mesh: &Mesh,
+    model: &CostModel,
+) -> crate::Result<(Cost, Cost, f64)> {
+    let (local, _) = partition(func, &ShardingSpec::unsharded(func), mesh)?;
+    let base = model.evaluate(&local, mesh);
+    let (local, _) = partition(func, spec, mesh)?;
+    let cost = model.evaluate(&local, mesh);
+    let relative = model.relative(&cost, &base);
+    Ok((cost, base, relative))
+}
+
+/// Replay `spec` through the differential harness and summarize as a
+/// [`ValidationRecord`] — the trust-but-verify gate the coordinator runs
+/// on every accepted spec.
+pub fn validate_solution_spec(
+    func: &Func,
+    spec: &ShardingSpec,
+    mesh: &Mesh,
+    seed: u64,
+) -> crate::Result<ValidationRecord> {
+    use crate::runtime::diff::{differential_test, DEFAULT_REL_TOL};
+    spec.check_against(func, mesh)?;
+    let r = differential_test(func, spec, mesh, seed)?;
+    Ok(ValidationRecord {
+        max_rel_err: r.max_rel_err as f64,
+        max_abs_diff: r.max_abs_diff as f64,
+        collectives: r.stats.total_collectives(),
+        tol: DEFAULT_REL_TOL as f64,
+        pass: r.within(DEFAULT_REL_TOL),
+        seed,
+    })
+}
+
+/// The serializable outcome of a partitioning session: everything needed
+/// to ship, audit, replay and apply the decision elsewhere.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Solution {
+    /// The model the spec was computed for (zoo reference or inline IR).
+    pub model: ModelSource,
+    pub mesh: Mesh,
+    pub hardware: HardwareKind,
+    /// Display name of the strategy that produced the spec.
+    pub strategy: String,
+    pub spec: ShardingSpec,
+    /// Cost of the partitioned module.
+    pub cost: Cost,
+    /// Cost of the unsharded module (baseline for relative cost).
+    pub base: Cost,
+    /// Relative cost C(s) (§4.5); 1.0 = unsharded.
+    pub relative: f64,
+    /// Best found solution still exceeds device memory.
+    pub oom: bool,
+    /// State evaluations performed by the strategy.
+    pub evals: usize,
+    /// Strategy wall-clock, seconds.
+    pub search_time_s: f64,
+    /// Differential-validation record, when the session validated.
+    pub validation: Option<ValidationRecord>,
+}
+
+/// Wire-format tag; bump on breaking changes to [`Solution::to_json`].
+pub const SOLUTION_FORMAT: &str = "toast.solution/v1";
+
+impl Solution {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::s(SOLUTION_FORMAT)),
+            ("model", self.model.to_json()),
+            ("mesh", self.mesh.to_json()),
+            ("hardware", Json::s(self.hardware.name())),
+            ("strategy", Json::s(self.strategy.clone())),
+            ("spec", self.spec.to_json()),
+            ("cost", self.cost.to_json()),
+            ("base", self.base.to_json()),
+            ("relative", Json::n(self.relative)),
+            ("oom", Json::Bool(self.oom)),
+            ("evals", Json::n(self.evals as f64)),
+            ("search_time_s", Json::n(self.search_time_s)),
+            (
+                "validation",
+                match &self.validation {
+                    Some(v) => v.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Solution> {
+        let ctx = "solution";
+        let format = wire::str_field(j, "format", ctx)?;
+        ensure!(
+            format == SOLUTION_FORMAT,
+            "{ctx}: unsupported format '{format}' (expected '{SOLUTION_FORMAT}')"
+        );
+        let validation = match wire::field(j, "validation", ctx)? {
+            Json::Null => None,
+            v => Some(ValidationRecord::from_json(v)?),
+        };
+        Ok(Solution {
+            model: ModelSource::from_json(wire::field(j, "model", ctx)?)?,
+            mesh: Mesh::from_json(wire::field(j, "mesh", ctx)?)?,
+            hardware: wire::str_field(j, "hardware", ctx)?
+                .parse()
+                .map_err(|e: String| anyhow!(e))?,
+            strategy: wire::str_field(j, "strategy", ctx)?.to_string(),
+            spec: ShardingSpec::from_json(wire::field(j, "spec", ctx)?)?,
+            cost: Cost::from_json(wire::field(j, "cost", ctx)?)?,
+            base: Cost::from_json(wire::field(j, "base", ctx)?)?,
+            relative: wire::f64_field(j, "relative", ctx)?,
+            oom: wire::bool_field(j, "oom", ctx)?,
+            evals: wire::usize_field(j, "evals", ctx)?,
+            search_time_s: wire::f64_field(j, "search_time_s", ctx)?,
+            validation,
+        })
+    }
+
+    /// Render as a JSON document (the `toast partition --out` format).
+    pub fn to_json_string(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Parse a JSON document produced by [`Solution::to_json_string`].
+    pub fn from_json_str(s: &str) -> crate::Result<Solution> {
+        Solution::from_json(&Json::parse(s)?)
+    }
+
+    /// One-line summary for logs and the CLI.
+    pub fn summarize(&self) -> String {
+        format!(
+            "{} × {}: step {:.3} ms (base {:.3} ms, relative {:.4}){}, {} evals, search {:.2}s{}",
+            self.model.name(),
+            self.strategy,
+            self.cost.runtime_s * 1e3,
+            self.base.runtime_s * 1e3,
+            self.relative,
+            if self.oom { " [OOM]" } else { "" },
+            self.evals,
+            self.search_time_s,
+            match &self.validation {
+                Some(v) if v.pass => " [verified]".to_string(),
+                Some(v) => format!(" [DIVERGED {:.2e}]", v.max_rel_err),
+                None => String::new(),
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{FuncBuilder, TensorType};
+
+    fn tiny_mlp() -> Func {
+        let mut b = FuncBuilder::new("mlp");
+        let x = b.param("x", TensorType::f32(vec![16, 8]));
+        let w1 = b.param("w1", TensorType::f32(vec![8, 12]));
+        let w2 = b.param("w2", TensorType::f32(vec![12, 4]));
+        let y = b.matmul(x, w1);
+        let z = b.relu(y);
+        let w = b.matmul(z, w2);
+        b.build(vec![w])
+    }
+
+    #[test]
+    fn session_compiles_once_and_caches_actions() {
+        let compiled = CompiledModel::compile(tiny_mlp()).unwrap();
+        let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
+        assert_eq!(compiled.cached_action_spaces(), 0);
+        // Single-threaded sessions so the two runs are exactly
+        // deterministic (parallel rollouts race benignly on the tree).
+        let single = || MctsStrategy {
+            template: SearchConfig { threads: 1, ..Default::default() },
+        };
+        let s1 =
+            compiled.partition(&mesh).strategy(single()).budget(40).seed(1).run().unwrap();
+        assert_eq!(compiled.cached_action_spaces(), 1);
+        let s2 =
+            compiled.partition(&mesh).strategy(single()).budget(40).seed(1).run().unwrap();
+        // same mesh + config -> the cached action space is reused
+        assert_eq!(compiled.cached_action_spaces(), 1);
+        assert_eq!(s1.spec, s2.spec, "same seed/budget must be deterministic");
+        let other = Mesh::grid(&[("a", 4)]);
+        let _ = compiled.partition(&other).budget(40).run().unwrap();
+        assert_eq!(compiled.cached_action_spaces(), 2);
+    }
+
+    #[test]
+    fn all_methods_run_through_the_strategy_trait() {
+        let compiled = CompiledModel::from_kind(ModelKind::Mlp, false).unwrap();
+        let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
+        for method in Method::all() {
+            let sol = compiled
+                .partition(&mesh)
+                .method(method)
+                .budget(40)
+                .seed(3)
+                .run()
+                .unwrap_or_else(|e| panic!("{} failed: {e:#}", method.name()));
+            assert_eq!(sol.strategy, method.name());
+            assert!(sol.relative.is_finite());
+            assert!(sol.cost.runtime_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn validated_session_records_the_replay() {
+        let compiled = CompiledModel::compile(tiny_mlp()).unwrap();
+        let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
+        let sol = compiled.partition(&mesh).budget(60).validate(true).run().unwrap();
+        let v = sol.validation.as_ref().expect("validation requested");
+        assert!(v.pass, "winning spec diverged: {:.3e}", v.max_rel_err);
+        assert!(v.tol > 0.0);
+    }
+
+    #[test]
+    fn solution_roundtrips_through_json() {
+        let compiled = CompiledModel::from_kind(ModelKind::Mlp, false).unwrap();
+        let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
+        let sol =
+            compiled.partition(&mesh).budget(40).seed(5).validate(true).run().unwrap();
+        let text = sol.to_json_string();
+        let back = Solution::from_json_str(&text).unwrap();
+        assert_eq!(back, sol, "wire round-trip must be exact");
+        // And the reloaded spec re-prices to the identical relative cost.
+        let func = back.model.build();
+        let cost_model = CostModel::new(HardwareProfile::new(back.hardware));
+        let (_, _, relative) = price_spec(&func, &back.spec, &back.mesh, &cost_model).unwrap();
+        assert_eq!(relative, back.relative, "re-priced relative cost must match exactly");
+    }
+
+    #[test]
+    fn inline_solution_ships_the_ir() {
+        let compiled = CompiledModel::compile(tiny_mlp()).unwrap();
+        let mesh = Mesh::grid(&[("a", 2)]);
+        let sol = compiled.partition(&mesh).budget(30).run().unwrap();
+        let back = Solution::from_json_str(&sol.to_json_string()).unwrap();
+        let rebuilt = CompiledModel::from_source(&back.model).unwrap();
+        assert_eq!(rebuilt.func(), compiled.func());
+    }
+}

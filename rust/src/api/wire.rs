@@ -1,0 +1,600 @@
+//! Wire format for IR-level artifacts: [`Func`] (and its op kinds and
+//! tensor types) to and from [`Json`].
+//!
+//! This is what lets a partition request carry an *arbitrary* model
+//! across a process boundary instead of a zoo `ModelKind` — the
+//! model-agnostic half of the session API. Deserialized functions are
+//! structurally checked here (operand/result ids in range) but must
+//! still pass the real verifier; [`crate::api::CompiledModel::compile`]
+//! runs it, so a `Func` that arrived off the wire is never analyzed or
+//! partitioned unverified.
+//!
+//! Round-trip guarantee: `func_from_json(&func_to_json(f)) == f` for
+//! every verifier-accepted function (covered by the P10 property test).
+
+use crate::ir::{
+    BinaryOp, CompareOp, DType, Func, Instr, OpKind, Param, ReduceKind, TensorType, UnaryOp,
+    ValueId,
+};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, ensure};
+
+// ---- small field helpers (shared by the other to/from_json impls) -------
+
+/// Fetch `key` from an object, with a readable error context.
+pub fn field<'a>(j: &'a Json, key: &str, ctx: &str) -> crate::Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("{ctx}: missing field '{key}'"))
+}
+
+pub fn str_field<'a>(j: &'a Json, key: &str, ctx: &str) -> crate::Result<&'a str> {
+    field(j, key, ctx)?
+        .as_str()
+        .ok_or_else(|| anyhow!("{ctx}: field '{key}' is not a string"))
+}
+
+pub fn f64_field(j: &Json, key: &str, ctx: &str) -> crate::Result<f64> {
+    field(j, key, ctx)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("{ctx}: field '{key}' is not a number"))
+}
+
+pub fn usize_field(j: &Json, key: &str, ctx: &str) -> crate::Result<usize> {
+    field(j, key, ctx)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("{ctx}: field '{key}' is not a non-negative integer"))
+}
+
+/// Serialize a u64 exactly: a plain number while f64-exact (≤ 2^53),
+/// else a decimal string — so seeds and ids survive the wire at full
+/// range instead of silently rounding.
+pub fn u64_to_json(v: u64) -> Json {
+    if v <= (1u64 << 53) {
+        Json::n(v as f64)
+    } else {
+        Json::s(v.to_string())
+    }
+}
+
+/// Inverse of [`u64_to_json`]: accepts either encoding. Plain numbers
+/// above 2^53 are rejected rather than silently rounded — a foreign
+/// producer with a larger id/seed must use the string encoding.
+pub fn u64_field(j: &Json, key: &str, ctx: &str) -> crate::Result<u64> {
+    let v = field(j, key, ctx)?;
+    if let Some(s) = v.as_str() {
+        s.parse::<u64>().map_err(|e| anyhow!("{ctx}: field '{key}': {e}"))
+    } else {
+        v.as_usize()
+            .map(|u| u as u64)
+            .filter(|&u| u <= (1u64 << 53))
+            .ok_or_else(|| {
+                anyhow!("{ctx}: field '{key}' is not a u64 exactly representable as a number")
+            })
+    }
+}
+
+pub fn bool_field(j: &Json, key: &str, ctx: &str) -> crate::Result<bool> {
+    field(j, key, ctx)?
+        .as_bool()
+        .ok_or_else(|| anyhow!("{ctx}: field '{key}' is not a bool"))
+}
+
+pub fn arr_field<'a>(j: &'a Json, key: &str, ctx: &str) -> crate::Result<&'a [Json]> {
+    field(j, key, ctx)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("{ctx}: field '{key}' is not an array"))
+}
+
+/// An array field of non-negative integers (dims, perms, operand ids).
+pub fn usize_arr(j: &Json, key: &str, ctx: &str) -> crate::Result<Vec<usize>> {
+    arr_field(j, key, ctx)?
+        .iter()
+        .map(|v| {
+            v.as_usize()
+                .ok_or_else(|| anyhow!("{ctx}: '{key}' element is not a non-negative integer"))
+        })
+        .collect()
+}
+
+/// An array field of i64s (shapes, slice bounds).
+pub fn i64_arr(j: &Json, key: &str, ctx: &str) -> crate::Result<Vec<i64>> {
+    arr_field(j, key, ctx)?
+        .iter()
+        .map(|v| -> crate::Result<i64> {
+            let f = v.as_f64().ok_or_else(|| anyhow!("{ctx}: '{key}' element not a number"))?;
+            // Strict upper bound: i64::MAX as f64 rounds up to 2^63,
+            // which `as i64` would silently saturate.
+            ensure!(
+                f == f.trunc() && f >= i64::MIN as f64 && f < i64::MAX as f64,
+                "{ctx}: '{key}' not an exactly-representable i64"
+            );
+            Ok(f as i64)
+        })
+        .collect()
+}
+
+pub fn usizes_to_json(vals: &[usize]) -> Json {
+    Json::Arr(vals.iter().map(|&v| Json::n(v as f64)).collect())
+}
+
+pub fn i64s_to_json(vals: &[i64]) -> Json {
+    Json::Arr(vals.iter().map(|&v| Json::n(v as f64)).collect())
+}
+
+// ---- leaf enums ----------------------------------------------------------
+
+pub fn dtype_from_str(s: &str) -> crate::Result<DType> {
+    match s {
+        "f32" => Ok(DType::F32),
+        "bf16" => Ok(DType::BF16),
+        "f16" => Ok(DType::F16),
+        "i32" => Ok(DType::I32),
+        "i1" => Ok(DType::Bool),
+        other => bail!("unknown dtype '{other}'"),
+    }
+}
+
+fn reduce_kind_name(k: ReduceKind) -> &'static str {
+    match k {
+        ReduceKind::Add => "add",
+        ReduceKind::Max => "max",
+        ReduceKind::Min => "min",
+        ReduceKind::Mul => "mul",
+    }
+}
+
+fn reduce_kind_from_str(s: &str) -> crate::Result<ReduceKind> {
+    match s {
+        "add" => Ok(ReduceKind::Add),
+        "max" => Ok(ReduceKind::Max),
+        "min" => Ok(ReduceKind::Min),
+        "mul" => Ok(ReduceKind::Mul),
+        other => bail!("unknown reduce kind '{other}'"),
+    }
+}
+
+fn unary_name(u: UnaryOp) -> &'static str {
+    match u {
+        UnaryOp::Neg => "neg",
+        UnaryOp::Relu => "relu",
+        UnaryOp::Exp => "exp",
+        UnaryOp::Log => "log",
+        UnaryOp::Tanh => "tanh",
+        UnaryOp::Sqrt => "sqrt",
+        UnaryOp::Rsqrt => "rsqrt",
+        UnaryOp::Abs => "abs",
+        UnaryOp::Sigmoid => "sigmoid",
+        UnaryOp::Cos => "cos",
+        UnaryOp::Sin => "sin",
+    }
+}
+
+fn unary_from_str(s: &str) -> crate::Result<UnaryOp> {
+    Ok(match s {
+        "neg" => UnaryOp::Neg,
+        "relu" => UnaryOp::Relu,
+        "exp" => UnaryOp::Exp,
+        "log" => UnaryOp::Log,
+        "tanh" => UnaryOp::Tanh,
+        "sqrt" => UnaryOp::Sqrt,
+        "rsqrt" => UnaryOp::Rsqrt,
+        "abs" => UnaryOp::Abs,
+        "sigmoid" => UnaryOp::Sigmoid,
+        "cos" => UnaryOp::Cos,
+        "sin" => UnaryOp::Sin,
+        other => bail!("unknown unary op '{other}'"),
+    })
+}
+
+fn binary_name(b: BinaryOp) -> &'static str {
+    match b {
+        BinaryOp::Add => "add",
+        BinaryOp::Sub => "sub",
+        BinaryOp::Mul => "mul",
+        BinaryOp::Div => "div",
+        BinaryOp::Max => "max",
+        BinaryOp::Min => "min",
+        BinaryOp::Pow => "pow",
+    }
+}
+
+fn binary_from_str(s: &str) -> crate::Result<BinaryOp> {
+    Ok(match s {
+        "add" => BinaryOp::Add,
+        "sub" => BinaryOp::Sub,
+        "mul" => BinaryOp::Mul,
+        "div" => BinaryOp::Div,
+        "max" => BinaryOp::Max,
+        "min" => BinaryOp::Min,
+        "pow" => BinaryOp::Pow,
+        other => bail!("unknown binary op '{other}'"),
+    })
+}
+
+fn compare_name(c: CompareOp) -> &'static str {
+    match c {
+        CompareOp::Lt => "lt",
+        CompareOp::Le => "le",
+        CompareOp::Gt => "gt",
+        CompareOp::Ge => "ge",
+        CompareOp::Eq => "eq",
+        CompareOp::Ne => "ne",
+    }
+}
+
+fn compare_from_str(s: &str) -> crate::Result<CompareOp> {
+    Ok(match s {
+        "lt" => CompareOp::Lt,
+        "le" => CompareOp::Le,
+        "gt" => CompareOp::Gt,
+        "ge" => CompareOp::Ge,
+        "eq" => CompareOp::Eq,
+        "ne" => CompareOp::Ne,
+        other => bail!("unknown compare op '{other}'"),
+    })
+}
+
+// ---- tensor types --------------------------------------------------------
+
+pub fn tensor_type_to_json(ty: &TensorType) -> Json {
+    Json::obj(vec![
+        ("shape", i64s_to_json(&ty.shape)),
+        ("dtype", Json::s(ty.dtype.name())),
+    ])
+}
+
+pub fn tensor_type_from_json(j: &Json) -> crate::Result<TensorType> {
+    Ok(TensorType {
+        shape: i64_arr(j, "shape", "tensor type")?,
+        dtype: dtype_from_str(str_field(j, "dtype", "tensor type")?)?,
+    })
+}
+
+// ---- op kinds ------------------------------------------------------------
+
+/// Serialize an op as a tagged object `{"op": <tag>, ...payload}`.
+pub fn opkind_to_json(kind: &OpKind) -> Json {
+    match kind {
+        OpKind::Constant { value } => {
+            Json::obj(vec![("op", Json::s("constant")), ("value", Json::n(*value))])
+        }
+        OpKind::Iota { dim } => {
+            Json::obj(vec![("op", Json::s("iota")), ("dim", Json::n(*dim as f64))])
+        }
+        OpKind::Unary(u) => Json::obj(vec![("op", Json::s("unary")), ("f", Json::s(unary_name(*u)))]),
+        OpKind::Binary(b) => {
+            Json::obj(vec![("op", Json::s("binary")), ("f", Json::s(binary_name(*b)))])
+        }
+        OpKind::DotGeneral { lhs_batch, rhs_batch, lhs_contract, rhs_contract } => Json::obj(vec![
+            ("op", Json::s("dot_general")),
+            ("lhs_batch", usizes_to_json(lhs_batch)),
+            ("rhs_batch", usizes_to_json(rhs_batch)),
+            ("lhs_contract", usizes_to_json(lhs_contract)),
+            ("rhs_contract", usizes_to_json(rhs_contract)),
+        ]),
+        OpKind::Transpose { perm } => {
+            Json::obj(vec![("op", Json::s("transpose")), ("perm", usizes_to_json(perm))])
+        }
+        OpKind::Reduce { dims, kind } => Json::obj(vec![
+            ("op", Json::s("reduce")),
+            ("dims", usizes_to_json(dims)),
+            ("kind", Json::s(reduce_kind_name(*kind))),
+        ]),
+        OpKind::Broadcast { dims } => {
+            Json::obj(vec![("op", Json::s("broadcast")), ("dims", usizes_to_json(dims))])
+        }
+        OpKind::Reshape => Json::obj(vec![("op", Json::s("reshape"))]),
+        OpKind::Concat { dim } => {
+            Json::obj(vec![("op", Json::s("concat")), ("dim", Json::n(*dim as f64))])
+        }
+        OpKind::Slice { starts, limits, strides } => Json::obj(vec![
+            ("op", Json::s("slice")),
+            ("starts", i64s_to_json(starts)),
+            ("limits", i64s_to_json(limits)),
+            ("strides", i64s_to_json(strides)),
+        ]),
+        OpKind::Conv2d { stride, padding } => Json::obj(vec![
+            ("op", Json::s("conv2d")),
+            ("stride", usizes_to_json(&[stride.0, stride.1])),
+            ("padding", usizes_to_json(&[padding.0, padding.1])),
+        ]),
+        OpKind::Gather { axis } => {
+            Json::obj(vec![("op", Json::s("gather")), ("axis", Json::n(*axis as f64))])
+        }
+        OpKind::Scatter { axis, kind } => Json::obj(vec![
+            ("op", Json::s("scatter")),
+            ("axis", Json::n(*axis as f64)),
+            ("kind", Json::s(reduce_kind_name(*kind))),
+        ]),
+        OpKind::Convert => Json::obj(vec![("op", Json::s("convert"))]),
+        OpKind::Select => Json::obj(vec![("op", Json::s("select"))]),
+        OpKind::Compare(c) => {
+            Json::obj(vec![("op", Json::s("compare")), ("f", Json::s(compare_name(*c)))])
+        }
+        OpKind::AllReduce { axes, kind } => Json::obj(vec![
+            ("op", Json::s("all_reduce")),
+            ("axes", usizes_to_json(axes)),
+            ("kind", Json::s(reduce_kind_name(*kind))),
+        ]),
+        OpKind::AllGather { axis, dim } => Json::obj(vec![
+            ("op", Json::s("all_gather")),
+            ("axis", Json::n(*axis as f64)),
+            ("dim", Json::n(*dim as f64)),
+        ]),
+        OpKind::ReduceScatter { axis, dim, kind } => Json::obj(vec![
+            ("op", Json::s("reduce_scatter")),
+            ("axis", Json::n(*axis as f64)),
+            ("dim", Json::n(*dim as f64)),
+            ("kind", Json::s(reduce_kind_name(*kind))),
+        ]),
+        OpKind::AllToAll { axis, split_dim, concat_dim } => Json::obj(vec![
+            ("op", Json::s("all_to_all")),
+            ("axis", Json::n(*axis as f64)),
+            ("split_dim", Json::n(*split_dim as f64)),
+            ("concat_dim", Json::n(*concat_dim as f64)),
+        ]),
+        OpKind::ShardSlice { axis, dim } => Json::obj(vec![
+            ("op", Json::s("shard_slice")),
+            ("axis", Json::n(*axis as f64)),
+            ("dim", Json::n(*dim as f64)),
+        ]),
+    }
+}
+
+pub fn opkind_from_json(j: &Json) -> crate::Result<OpKind> {
+    let ctx = "op";
+    let tag = str_field(j, "op", ctx)?;
+    Ok(match tag {
+        "constant" => OpKind::Constant { value: f64_field(j, "value", ctx)? },
+        "iota" => OpKind::Iota { dim: usize_field(j, "dim", ctx)? },
+        "unary" => OpKind::Unary(unary_from_str(str_field(j, "f", ctx)?)?),
+        "binary" => OpKind::Binary(binary_from_str(str_field(j, "f", ctx)?)?),
+        "dot_general" => OpKind::DotGeneral {
+            lhs_batch: usize_arr(j, "lhs_batch", ctx)?,
+            rhs_batch: usize_arr(j, "rhs_batch", ctx)?,
+            lhs_contract: usize_arr(j, "lhs_contract", ctx)?,
+            rhs_contract: usize_arr(j, "rhs_contract", ctx)?,
+        },
+        "transpose" => OpKind::Transpose { perm: usize_arr(j, "perm", ctx)? },
+        "reduce" => OpKind::Reduce {
+            dims: usize_arr(j, "dims", ctx)?,
+            kind: reduce_kind_from_str(str_field(j, "kind", ctx)?)?,
+        },
+        "broadcast" => OpKind::Broadcast { dims: usize_arr(j, "dims", ctx)? },
+        "reshape" => OpKind::Reshape,
+        "concat" => OpKind::Concat { dim: usize_field(j, "dim", ctx)? },
+        "slice" => OpKind::Slice {
+            starts: i64_arr(j, "starts", ctx)?,
+            limits: i64_arr(j, "limits", ctx)?,
+            strides: i64_arr(j, "strides", ctx)?,
+        },
+        "conv2d" => {
+            let s = usize_arr(j, "stride", ctx)?;
+            let p = usize_arr(j, "padding", ctx)?;
+            ensure!(s.len() == 2 && p.len() == 2, "conv2d: stride/padding must be pairs");
+            OpKind::Conv2d { stride: (s[0], s[1]), padding: (p[0], p[1]) }
+        }
+        "gather" => OpKind::Gather { axis: usize_field(j, "axis", ctx)? },
+        "scatter" => OpKind::Scatter {
+            axis: usize_field(j, "axis", ctx)?,
+            kind: reduce_kind_from_str(str_field(j, "kind", ctx)?)?,
+        },
+        "convert" => OpKind::Convert,
+        "select" => OpKind::Select,
+        "compare" => OpKind::Compare(compare_from_str(str_field(j, "f", ctx)?)?),
+        "all_reduce" => OpKind::AllReduce {
+            axes: usize_arr(j, "axes", ctx)?,
+            kind: reduce_kind_from_str(str_field(j, "kind", ctx)?)?,
+        },
+        "all_gather" => OpKind::AllGather {
+            axis: usize_field(j, "axis", ctx)?,
+            dim: usize_field(j, "dim", ctx)?,
+        },
+        "reduce_scatter" => OpKind::ReduceScatter {
+            axis: usize_field(j, "axis", ctx)?,
+            dim: usize_field(j, "dim", ctx)?,
+            kind: reduce_kind_from_str(str_field(j, "kind", ctx)?)?,
+        },
+        "all_to_all" => OpKind::AllToAll {
+            axis: usize_field(j, "axis", ctx)?,
+            split_dim: usize_field(j, "split_dim", ctx)?,
+            concat_dim: usize_field(j, "concat_dim", ctx)?,
+        },
+        "shard_slice" => OpKind::ShardSlice {
+            axis: usize_field(j, "axis", ctx)?,
+            dim: usize_field(j, "dim", ctx)?,
+        },
+        other => bail!("unknown op tag '{other}'"),
+    })
+}
+
+// ---- functions -----------------------------------------------------------
+
+/// Serialize a function. Instruction results are positional (value id =
+/// `params.len() + index`), so only operands and types go on the wire.
+pub fn func_to_json(f: &Func) -> Json {
+    Json::obj(vec![
+        ("name", Json::s(f.name.clone())),
+        (
+            "params",
+            Json::Arr(
+                f.params
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("name", Json::s(p.name.clone())),
+                            ("ty", tensor_type_to_json(&p.ty)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "instrs",
+            Json::Arr(
+                f.instrs
+                    .iter()
+                    .map(|i| {
+                        Json::obj(vec![
+                            ("kind", opkind_to_json(&i.kind)),
+                            (
+                                "operands",
+                                Json::Arr(
+                                    i.operands
+                                        .iter()
+                                        .map(|o| Json::n(o.0 as f64))
+                                        .collect(),
+                                ),
+                            ),
+                            ("ty", tensor_type_to_json(&i.ty)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "results",
+            Json::Arr(f.results.iter().map(|r| Json::n(r.0 as f64)).collect()),
+        ),
+    ])
+}
+
+/// Inverse of [`func_to_json`]. Structurally checked (ids in range,
+/// results non-empty); semantic checking is the verifier's job.
+pub fn func_from_json(j: &Json) -> crate::Result<Func> {
+    let ctx = "func";
+    let name = str_field(j, "name", ctx)?.to_string();
+    let params = arr_field(j, "params", ctx)?
+        .iter()
+        .map(|p| {
+            Ok(Param {
+                name: str_field(p, "name", "param")?.to_string(),
+                ty: tensor_type_from_json(field(p, "ty", "param")?)?,
+            })
+        })
+        .collect::<crate::Result<Vec<_>>>()?;
+    let n_params = params.len();
+    let raw_instrs = arr_field(j, "instrs", ctx)?;
+    let mut instrs = Vec::with_capacity(raw_instrs.len());
+    for (i, ij) in raw_instrs.iter().enumerate() {
+        let operands = usize_arr(ij, "operands", "instr")?
+            .into_iter()
+            .map(|o| {
+                ensure!(o < n_params + i, "instr {i}: operand v{o} not yet defined");
+                Ok(ValueId(o as u32))
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        instrs.push(Instr {
+            result: ValueId((n_params + i) as u32),
+            kind: opkind_from_json(field(ij, "kind", "instr")?)?,
+            operands,
+            ty: tensor_type_from_json(field(ij, "ty", "instr")?)?,
+        });
+    }
+    let n_values = n_params + instrs.len();
+    let results = usize_arr(j, "results", ctx)?
+        .into_iter()
+        .map(|r| {
+            ensure!(r < n_values, "result v{r} out of range ({n_values} values)");
+            Ok(ValueId(r as u32))
+        })
+        .collect::<crate::Result<Vec<_>>>()?;
+    ensure!(!results.is_empty(), "{ctx}: needs at least one result");
+    Ok(Func { name, params, instrs, results })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::FuncBuilder;
+
+    fn sample() -> Func {
+        let mut b = FuncBuilder::new("wire_sample");
+        let x = b.param("x", TensorType::f32(vec![8, 4]));
+        let w = b.param("w", TensorType::f32(vec![4, 16]));
+        let y = b.matmul(x, w);
+        let z = b.relu(y);
+        let t = b.transpose(z, &[1, 0]);
+        let r = b.reduce(t, &[1], ReduceKind::Add);
+        b.build(vec![r])
+    }
+
+    #[test]
+    fn func_roundtrips_through_json() {
+        let f = sample();
+        let text = func_to_json(&f).render();
+        let back = func_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, f);
+        crate::ir::verifier::verify_logical(&back).unwrap();
+    }
+
+    #[test]
+    fn zoo_models_roundtrip() {
+        for kind in [crate::models::ModelKind::Mlp, crate::models::ModelKind::Attention] {
+            let f = kind.build_scaled();
+            let back = func_from_json(&func_to_json(&f)).unwrap();
+            assert_eq!(back, f, "{} drifted through the wire", kind.name());
+        }
+    }
+
+    #[test]
+    fn rejects_forward_references() {
+        let f = sample();
+        let mut j = func_to_json(&f);
+        // Point the first instruction's operand at a later value.
+        if let Json::Obj(fields) = &mut j {
+            for (k, v) in fields.iter_mut() {
+                if k == "instrs" {
+                    if let Json::Arr(instrs) = v {
+                        if let Json::Obj(ifields) = &mut instrs[0] {
+                            for (ik, iv) in ifields.iter_mut() {
+                                if ik == "operands" {
+                                    *iv = Json::Arr(vec![Json::n(99.0)]);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert!(func_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn every_opkind_tag_roundtrips() {
+        use OpKind::*;
+        let kinds = vec![
+            Constant { value: 2.5 },
+            Iota { dim: 1 },
+            Unary(UnaryOp::Rsqrt),
+            Binary(BinaryOp::Pow),
+            DotGeneral {
+                lhs_batch: vec![0],
+                rhs_batch: vec![0],
+                lhs_contract: vec![2],
+                rhs_contract: vec![1],
+            },
+            Transpose { perm: vec![1, 0, 2] },
+            Reduce { dims: vec![0, 2], kind: ReduceKind::Max },
+            Broadcast { dims: vec![1] },
+            Reshape,
+            Concat { dim: 2 },
+            Slice { starts: vec![0, 1], limits: vec![4, 3], strides: vec![1, 1] },
+            Conv2d { stride: (2, 1), padding: (1, 0) },
+            Gather { axis: 1 },
+            Scatter { axis: 0, kind: ReduceKind::Add },
+            Convert,
+            Select,
+            Compare(CompareOp::Ge),
+            AllReduce { axes: vec![0, 1], kind: ReduceKind::Add },
+            AllGather { axis: 1, dim: 0 },
+            ReduceScatter { axis: 0, dim: 1, kind: ReduceKind::Add },
+            AllToAll { axis: 0, split_dim: 1, concat_dim: 0 },
+            ShardSlice { axis: 1, dim: 2 },
+        ];
+        for k in kinds {
+            let back =
+                opkind_from_json(&Json::parse(&opkind_to_json(&k).render()).unwrap()).unwrap();
+            assert_eq!(back, k);
+        }
+    }
+}

@@ -46,8 +46,13 @@ fn spec_from(func: &Func, mesh: &Mesh, choices: &[Choice]) -> ShardingSpec {
 /// Iterated local relaxation: sweep over values; for each, pick the choice
 /// minimizing global cost with all other choices fixed. The full
 /// re-evaluation per candidate mirrors the ILP's global objective.
-pub fn run(func: &Func, mesh: &Mesh, model: &CostModel, budget: usize) -> MethodResult {
-    let t0 = Instant::now();
+/// Returns the best spec and the number of state evaluations spent.
+pub fn solve(
+    func: &Func,
+    mesh: &Mesh,
+    model: &CostModel,
+    budget: usize,
+) -> (ShardingSpec, usize) {
     let base = {
         let unsharded = ShardingSpec::unsharded(func);
         let (local, _) = partition(func, &unsharded, mesh).expect("identity partition");
@@ -135,7 +140,14 @@ pub fn run(func: &Func, mesh: &Mesh, model: &CostModel, budget: usize) -> Method
         }
     }
 
-    let spec = spec_from(func, mesh, &choices);
+    (spec_from(func, mesh, &choices), evals)
+}
+
+/// Legacy one-call entry point; new code goes through the session API
+/// ([`crate::api::AlpaStrategy`]).
+pub fn run(func: &Func, mesh: &Mesh, model: &CostModel, budget: usize) -> MethodResult {
+    let t0 = Instant::now();
+    let (spec, _evals) = solve(func, mesh, model, budget);
     finish(Method::Alpa, func, mesh, model, spec, t0.elapsed())
 }
 

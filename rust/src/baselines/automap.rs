@@ -97,15 +97,15 @@ fn apply(
 }
 
 /// Greedy best-first search with restarts over parameter shardings,
-/// re-propagating after every candidate evaluation.
-pub fn run(
+/// re-propagating after every candidate evaluation. Returns the best
+/// spec and the number of (propagation-sweep) evaluations spent.
+pub fn solve(
     func: &Func,
     mesh: &Mesh,
     model: &CostModel,
     budget: usize,
     seed: u64,
-) -> MethodResult {
-    let t0 = Instant::now();
+) -> (ShardingSpec, usize) {
     let base = {
         let unsharded = ShardingSpec::unsharded(func);
         let (local, _) = partition(func, &unsharded, mesh).expect("identity partition");
@@ -194,6 +194,20 @@ pub fn run(
 
     let spec =
         apply(func, mesh, &best.1).unwrap_or_else(|| ShardingSpec::unsharded(func));
+    (spec, evals)
+}
+
+/// Legacy one-call entry point; new code goes through the session API
+/// ([`crate::api::AutoMapStrategy`]).
+pub fn run(
+    func: &Func,
+    mesh: &Mesh,
+    model: &CostModel,
+    budget: usize,
+    seed: u64,
+) -> MethodResult {
+    let t0 = Instant::now();
+    let (spec, _evals) = solve(func, mesh, model, budget, seed);
     finish(Method::AutoMap, func, mesh, model, spec, t0.elapsed())
 }
 

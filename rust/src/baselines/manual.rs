@@ -105,72 +105,81 @@ fn apply_moves(
 }
 
 /// Expert template per model kind: candidate component stacks; the best
-/// scoring combination wins.
-pub fn run(kind: ModelKind, func: &Func, mesh: &Mesh, model: &CostModel) -> MethodResult {
-    let t0 = Instant::now();
-    let nda = Nda::analyze(func);
+/// scoring combination wins. Takes a precomputed NDA (the session API
+/// analyzes once per model); `kind: None` — an inline model no expert
+/// has a bespoke template for — falls back to the transformer-style
+/// stack (DP + Megatron-ish color moves + FSDP), which is how an expert
+/// approaches an unfamiliar architecture.
+pub fn solve(
+    kind: Option<ModelKind>,
+    func: &Func,
+    nda: &Nda,
+    mesh: &Mesh,
+    model: &CostModel,
+) -> ShardingSpec {
     let data_axis = 0usize;
     let model_axis = if mesh.rank() > 1 { mesh.rank() - 1 } else { 0 };
     let seq_axis = if mesh.rank() > 2 { 1 } else { model_axis };
 
     let mut components: Vec<Vec<Move>> = Vec::new();
-    let batch = activation_color(func, &nda, 0);
+    let batch = activation_color(func, nda, 0);
     match kind {
-        ModelKind::T2B | ModelKind::T7B | ModelKind::Mlp | ModelKind::Attention => {
+        Some(ModelKind::T2B) | Some(ModelKind::T7B) | Some(ModelKind::Mlp)
+        | Some(ModelKind::Attention) | None => {
             // DP over batch
             if let Some(c) = batch {
                 components.push(vec![Move::Color { color: c, order: 0, axis: data_axis }]);
             }
             // Megatron: MLP hidden + attention heads
-            if let Some(c) = color_of_param_dim(func, &nda, "l0_wgate", 1) {
+            if let Some(c) = color_of_param_dim(func, nda, "l0_wgate", 1) {
                 components.push(vec![Move::Color { color: c, order: 0, axis: model_axis }]);
             }
-            if let Some(c) = color_of_param_dim(func, &nda, "l0_wq", 1) {
+            if let Some(c) = color_of_param_dim(func, nda, "l0_wq", 1) {
                 components.push(vec![Move::Color { color: c, order: 0, axis: model_axis }]);
             }
             // Sequence parallelism: the sequence color with both orders
-            if let Some(c) = activation_color(func, &nda, 1) {
+            if let Some(c) = activation_color(func, nda, 1) {
                 components.push(vec![Move::Color { color: c, order: 0, axis: seq_axis }]);
                 components.push(vec![Move::Color { color: c, order: u64::MAX, axis: seq_axis }]);
             }
             // FSDP over the data axis
             components.push(vec![Move::Fsdp { axis: data_axis, min_bytes: 1 << 20 }]);
         }
-        ModelKind::Gns => {
+        Some(ModelKind::Gns) => {
             // edge sharding: senders/receivers length color
             if let Some(pi) = func.params.iter().position(|p| p.name == "senders") {
                 let c = nda.color_of(ValueId(pi as u32), 0);
                 components.push(vec![Move::Color { color: c, order: 0, axis: data_axis }]);
             }
             // Megatron on the per-step MLP hidden dims
-            if let Some(c) = color_of_param_dim(func, &nda, "s0_ew1", 1) {
+            if let Some(c) = color_of_param_dim(func, nda, "s0_ew1", 1) {
                 components.push(vec![Move::Color { color: c, order: 0, axis: model_axis }]);
             }
-            if let Some(c) = color_of_param_dim(func, &nda, "s0_nw1", 1) {
+            if let Some(c) = color_of_param_dim(func, nda, "s0_nw1", 1) {
                 components.push(vec![Move::Color { color: c, order: 0, axis: model_axis }]);
             }
             components.push(vec![Move::Fsdp { axis: data_axis, min_bytes: 1 << 20 }]);
         }
-        ModelKind::UNet => {
+        Some(ModelKind::UNet) => {
             if let Some(c) = batch {
                 components.push(vec![Move::Color { color: c, order: 0, axis: data_axis }]);
             }
             // Megatron: bottleneck attention heads + widest conv channels
-            if let Some(c) = color_of_param_dim(func, &nda, "attn_wq", 1) {
+            if let Some(c) = color_of_param_dim(func, nda, "attn_wq", 1) {
                 components.push(vec![Move::Color { color: c, order: 0, axis: model_axis }]);
             }
             components.push(vec![Move::Fsdp { axis: data_axis, min_bytes: 1 << 20 }]);
         }
-        ModelKind::Itx => {
+        Some(ModelKind::Itx) => {
             if let Some(c) = batch {
                 components.push(vec![Move::Color { color: c, order: 0, axis: data_axis }]);
             }
             // MQA: shard query heads
-            if let Some(c) = color_of_param_dim(func, &nda, "l0_wq", 1) {
+            if let Some(c) = color_of_param_dim(func, nda, "l0_wq", 1) {
                 components.push(vec![Move::Color { color: c, order: 0, axis: model_axis }]);
             }
             // Megatron on the MLP
-            if let Some(c) = color_of_param_dim(func, &nda, "l0_win", 1) {
+            if let Some(c) = color_of_param_dim(func, nda, "l0_win", 1) {
                 components.push(vec![Move::Color { color: c, order: 0, axis: model_axis }]);
             }
         }
@@ -192,7 +201,7 @@ pub fn run(kind: ModelKind, func: &Func, mesh: &Mesh, model: &CostModel) -> Meth
         if moves.is_empty() {
             continue;
         }
-        let Some(spec) = apply_moves(func, &nda, mesh, &moves) else { continue };
+        let Some(spec) = apply_moves(func, nda, mesh, &moves) else { continue };
         let Ok((local, _)) = partition(func, &spec, mesh) else { continue };
         let c = model.evaluate(&local, mesh);
         let rel = model.relative(&c, &base);
@@ -201,7 +210,17 @@ pub fn run(kind: ModelKind, func: &Func, mesh: &Mesh, model: &CostModel) -> Meth
         }
     }
 
-    finish(Method::Manual, func, mesh, model, best.1, t0.elapsed())
+    best.1
+}
+
+/// Legacy one-call entry point: analyze + solve + score. New code goes
+/// through the session API ([`crate::api::ManualStrategy`]), which
+/// shares one NDA across calls.
+pub fn run(kind: ModelKind, func: &Func, mesh: &Mesh, model: &CostModel) -> MethodResult {
+    let t0 = Instant::now();
+    let nda = Nda::analyze(func);
+    let spec = solve(Some(kind), func, &nda, mesh, model);
+    finish(Method::Manual, func, mesh, model, spec, t0.elapsed())
 }
 
 #[cfg(test)]

@@ -20,6 +20,12 @@
 //!
 //! All methods share the cost model and the SPMD partitioner, so step-time
 //! comparisons isolate *search quality*, exactly as in the paper.
+//!
+//! Every method is exposed two ways: a `solve` core (spec in, spec out —
+//! what the [`crate::api::Strategy`] implementations wrap so all methods
+//! run through one trait and one session), and a legacy [`run_method`]
+//! shim kept for existing callers, which re-analyzes per call and is
+//! deprecated in favor of the session API.
 
 pub mod alpa;
 pub mod automap;
@@ -31,7 +37,7 @@ use crate::mesh::Mesh;
 use crate::models::ModelKind;
 use crate::search::{ActionSpaceConfig, SearchConfig};
 use crate::sharding::{partition, ShardingSpec};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// A partitioning method under evaluation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -54,6 +60,19 @@ impl Method {
 
     pub fn all() -> [Method; 4] {
         [Method::Manual, Method::Alpa, Method::AutoMap, Method::Toast]
+    }
+}
+
+impl std::str::FromStr for Method {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "toast" => Ok(Method::Toast),
+            "alpa" => Ok(Method::Alpa),
+            "automap" => Ok(Method::AutoMap),
+            "manual" => Ok(Method::Manual),
+            other => Err(format!("unknown method '{other}' (toast|alpa|automap|manual)")),
+        }
     }
 }
 
@@ -103,6 +122,12 @@ pub fn finish(
 }
 
 /// Run `method` on `(func, mesh, hardware)`.
+///
+/// Legacy shim: re-runs the NDA on every call. The session API builds a
+/// [`crate::api::CompiledModel`] once and runs any
+/// [`crate::api::Strategy`] against it.
+#[deprecated(note = "use toast::api::CompiledModel::partition(..) — the session API \
+                     analyzes once and caches action spaces")]
 pub fn run_method(
     method: Method,
     kind: ModelKind,
@@ -112,22 +137,28 @@ pub fn run_method(
     budget: usize,
     seed: u64,
 ) -> MethodResult {
-    match method {
-        Method::Manual => manual::run(kind, func, mesh, model),
-        Method::Alpa => alpa::run(func, mesh, model, budget),
-        Method::AutoMap => automap::run(func, mesh, model, budget, seed),
+    let t0 = Instant::now();
+    let nda = crate::nda::Nda::analyze(func);
+    let spec = match method {
+        Method::Manual => manual::solve(Some(kind), func, &nda, mesh, model),
+        Method::Alpa => alpa::solve(func, mesh, model, budget).0,
+        Method::AutoMap => automap::solve(func, mesh, model, budget, seed).0,
         Method::Toast => {
-            let t0 = std::time::Instant::now();
-            let out = crate::search::auto_partition(
+            let actions = crate::search::build_actions(
+                func,
+                &nda,
+                mesh,
+                &ActionSpaceConfig { min_color_dims: 4, ..Default::default() },
+            );
+            crate::search::search(
                 func,
                 mesh,
                 model,
-                &ActionSpaceConfig { min_color_dims: 4, ..Default::default() },
+                &actions,
                 &SearchConfig { budget, seed, ..Default::default() },
-            );
-            let mut r = finish(Method::Toast, func, mesh, model, out.spec, t0.elapsed());
-            r.search_time = t0.elapsed();
-            r
+            )
+            .spec
         }
-    }
+    };
+    finish(method, func, mesh, model, spec, t0.elapsed())
 }

@@ -13,11 +13,12 @@
 //! wins, where OOMs appear, how search time scales — is the
 //! reproduction target (DESIGN.md §3).
 
-use crate::baselines::{run_method, Method, MethodResult};
+use crate::api::{CompiledModel, Solution};
+use crate::baselines::Method;
 use crate::cost::symbolic::SymbolicEvaluator;
 use crate::cost::CostModel;
 use crate::ir::Func;
-use crate::mesh::{HardwareKind, HardwareProfile, Mesh};
+use crate::mesh::{HardwareKind, Mesh};
 use crate::models::{gns, itx, transformer, unet, ModelKind};
 use crate::search::{Action, IncrementalEvaluator};
 use crate::sharding::{partition, ShardingSpec};
@@ -149,16 +150,16 @@ pub struct GridRow {
 }
 
 impl GridRow {
-    fn from(model: ModelKind, hardware: HardwareKind, r: &MethodResult) -> GridRow {
+    fn from(model: ModelKind, hardware: HardwareKind, method: Method, s: &Solution) -> GridRow {
         GridRow {
             model,
             hardware,
-            method: r.method,
-            step_ms: r.step_time_s * 1e3,
-            search_s: r.search_time.as_secs_f64(),
-            oom: r.oom,
-            relative: r.relative,
-            peak_gib: r.cost.peak_bytes as f64 / (1u64 << 30) as f64,
+            method,
+            step_ms: s.cost.runtime_s * 1e3,
+            search_s: s.search_time_s,
+            oom: s.oom,
+            relative: s.relative,
+            peak_gib: s.cost.peak_bytes as f64 / (1u64 << 30) as f64,
         }
     }
 
@@ -177,6 +178,10 @@ impl GridRow {
 }
 
 /// The Fig 8/9 grid: models × platforms × methods on a 16-device 2-D mesh.
+///
+/// Each model is compiled **once** (one NDA, one cached action space per
+/// mesh) and every platform × method point runs as a session against the
+/// shared [`CompiledModel`].
 pub fn run_grid(
     scale: BenchScale,
     models: &[ModelKind],
@@ -185,13 +190,24 @@ pub fn run_grid(
 ) -> Vec<GridRow> {
     let mut rows = Vec::new();
     for &mk in models {
-        let func = build_model(mk, scale);
+        let compiled = CompiledModel::compile_annotated(
+            build_model(mk, scale),
+            Some(mk),
+            scale == BenchScale::Paper,
+        )
+        .expect("zoo model compiles");
+        let mesh = Mesh::grid(&[("data", 4), ("model", 4)]);
         for &hw in hardware {
-            let mesh = Mesh::grid(&[("data", 4), ("model", 4)]);
-            let model = CostModel::new(HardwareProfile::new(hw));
             for &method in methods {
-                let r = run_method(method, mk, &func, &mesh, &model, scale.budget(), 17);
-                rows.push(GridRow::from(mk, hw, &r));
+                let sol = compiled
+                    .partition(&mesh)
+                    .method(method)
+                    .hardware(hw)
+                    .budget(scale.budget())
+                    .seed(17)
+                    .run()
+                    .expect("grid point runs");
+                rows.push(GridRow::from(mk, hw, method, &sol));
             }
         }
     }
@@ -241,14 +257,24 @@ pub fn run_seq_scaling(scale: BenchScale) -> Vec<(i64, String, Vec<GridRow>)> {
                 training: true,
             },
         };
-        let func = transformer::training_step(&cfg);
+        let compiled = CompiledModel::compile_annotated(
+            transformer::training_step(&cfg),
+            Some(ModelKind::T2B),
+            false,
+        )
+        .expect("T2B variant compiles");
         let mesh = Mesh::grid(&axes);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
         let mut rows = Vec::new();
         for method in methods {
-            let r =
-                run_method(method, ModelKind::T2B, &func, &mesh, &model, scale.budget(), 29);
-            rows.push(GridRow::from(ModelKind::T2B, HardwareKind::A100, &r));
+            let sol = compiled
+                .partition(&mesh)
+                .method(method)
+                .hardware(HardwareKind::A100)
+                .budget(scale.budget())
+                .seed(29)
+                .run()
+                .expect("scaling point runs");
+            rows.push(GridRow::from(ModelKind::T2B, HardwareKind::A100, method, &sol));
         }
         out.push((seq, mesh.describe(), rows));
     }
@@ -650,6 +676,7 @@ pub fn grid_json(rows: &[GridRow]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mesh::HardwareProfile;
 
     #[test]
     fn tiny_grid_runs_all_methods() {

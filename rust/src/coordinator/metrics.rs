@@ -10,6 +10,13 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub failed: AtomicU64,
     pub oom_solutions: AtomicU64,
+    /// Requests accepted but not yet picked up by a worker (queue depth).
+    pub queued: AtomicU64,
+    /// Solutions that passed the trust-but-verify differential replay.
+    pub verified: AtomicU64,
+    /// Solutions *rejected* by the verify gate (spec diverged from the
+    /// interpreter oracle — returned as failures, never trusted).
+    pub rejected: AtomicU64,
     /// Total search time in microseconds (mean = total / completed).
     pub search_us_total: AtomicU64,
     /// Total state evaluations across searches.
@@ -19,6 +26,27 @@ pub struct Metrics {
 impl Metrics {
     pub fn record_request(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request is about to enter the queue. Called *before* the send so
+    /// a fast worker's matching [`Metrics::record_dequeue`] can never
+    /// observe the queue gauge at 0 and leave it permanently inflated.
+    pub fn record_enqueue(&self) {
+        self.queued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A worker picked a request off the queue.
+    pub fn record_dequeue(&self) {
+        // Saturating: a dequeue without a matching enqueue is a bug, but
+        // metrics must never underflow into u64::MAX.
+        let _ = self.queued.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |q| {
+            Some(q.saturating_sub(1))
+        });
+    }
+
+    /// Requests accepted but not yet picked up by a worker.
+    pub fn queue_depth(&self) -> u64 {
+        self.queued.load(Ordering::Relaxed)
     }
 
     pub fn record_completion(&self, search: Duration, evals: u64, oom: bool) {
@@ -34,6 +62,14 @@ impl Metrics {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_verified(&self) {
+        self.verified.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn mean_search_ms(&self) -> f64 {
         let done = self.completed.load(Ordering::Relaxed);
         if done == 0 {
@@ -44,10 +80,14 @@ impl Metrics {
 
     pub fn snapshot(&self) -> String {
         format!(
-            "requests={} completed={} failed={} oom={} mean_search={:.1}ms evals={}",
+            "requests={} queued={} completed={} failed={} verified={} rejected={} oom={} \
+             mean_search={:.1}ms evals={}",
             self.requests.load(Ordering::Relaxed),
+            self.queue_depth(),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
+            self.verified.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
             self.oom_solutions.load(Ordering::Relaxed),
             self.mean_search_ms(),
             self.evaluations.load(Ordering::Relaxed),
@@ -62,15 +102,32 @@ mod tests {
     #[test]
     fn metrics_aggregate() {
         let m = Metrics::default();
+        m.record_enqueue();
         m.record_request();
+        m.record_enqueue();
         m.record_request();
+        assert_eq!(m.queue_depth(), 2);
+        m.record_dequeue();
+        m.record_dequeue();
+        assert_eq!(m.queue_depth(), 0);
         m.record_completion(Duration::from_millis(10), 100, false);
         m.record_completion(Duration::from_millis(30), 200, true);
         m.record_failure();
+        m.record_verified();
+        m.record_rejected();
         assert_eq!(m.requests.load(Ordering::Relaxed), 2);
         assert_eq!(m.completed.load(Ordering::Relaxed), 2);
         assert_eq!(m.oom_solutions.load(Ordering::Relaxed), 1);
         assert!((m.mean_search_ms() - 20.0).abs() < 0.5);
         assert!(m.snapshot().contains("completed=2"));
+        assert!(m.snapshot().contains("queued=0"));
+        assert!(m.snapshot().contains("verified=1"));
+    }
+
+    #[test]
+    fn queue_depth_never_underflows() {
+        let m = Metrics::default();
+        m.record_dequeue();
+        assert_eq!(m.queue_depth(), 0);
     }
 }

@@ -2,9 +2,14 @@
 //! experiment runners that regenerate the paper's figures.
 //!
 //! TOAST is a compiler-side system, so the coordinator's job is a
-//! partition-request service: clients submit `(model, mesh, hardware,
-//! method, budget)` requests; a worker pool runs the analysis + search and
-//! returns sharding specs with cost reports. The CLI (`toast serve`,
+//! partition-request service: clients submit `(model-source, mesh,
+//! hardware, method, budget)` requests — the model is a zoo name *or* a
+//! serialized `Func` — a worker pool resolves each to a shared
+//! [`crate::api::CompiledModel`] (analysis runs once per model, not per
+//! request), runs the strategy, and returns a serializable
+//! [`crate::api::Solution`]. Accepted specs are replayed through the
+//! differential harness before the service trusts them
+//! (trust-but-verify; see [`service`]). The CLI (`toast serve`,
 //! `toast partition`, `toast bench`) fronts this service.
 
 pub mod experiments;
@@ -12,4 +17,4 @@ pub mod metrics;
 pub mod service;
 
 pub use experiments::{BenchScale, Experiment};
-pub use service::{PartitionRequest, PartitionResponse, Service};
+pub use service::{PartitionRequest, PartitionResponse, Service, ServiceConfig};

@@ -1,15 +1,31 @@
-//! The partition service: a request queue with a worker-thread pool.
+//! The partition service: a request queue with a worker-thread pool,
+//! rebuilt on the session API.
 //!
-//! Requests carry everything a partitioning job needs; workers build the
-//! model IR, run the requested method, and push responses to the shared
-//! response channel. The service is synchronous-friendly (submit then
-//! `recv` responses) and is what `toast serve` wraps.
+//! Requests are *model-agnostic*: they carry a [`ModelSource`] — a zoo
+//! name the workers rebuild, or a fully serialized `Func` for models the
+//! service has never seen. Workers resolve each source to a shared
+//! [`CompiledModel`] (one NDA per distinct model, cached across requests
+//! and threads), run the requested strategy through the one
+//! [`crate::api::Strategy`] signature, and return a serializable
+//! [`Solution`].
+//!
+//! **Trust but verify**: before a solution is accepted, the service
+//! replays its spec through [`crate::runtime::diff::differential_test`]
+//! against the interpreter oracle. A diverging spec is *rejected* —
+//! returned as a failure and counted in
+//! [`super::metrics::Metrics::rejected`] — so no caller ever receives an
+//! unverified sharding claim. (Paper-scale IR is exempt: executing it
+//! numerically would take hours; the exemption is recorded by the
+//! absence of a validation record on the solution.)
 
 use super::metrics::Metrics;
-use crate::baselines::{run_method, Method, MethodResult};
-use crate::cost::CostModel;
-use crate::mesh::{HardwareKind, HardwareProfile, Mesh};
+use crate::api::{validate_solution_spec, CompiledModel, ModelSource, Solution};
+use crate::baselines::Method;
+use crate::mesh::{HardwareKind, Mesh};
 use crate::models::ModelKind;
+use crate::util::json::Json;
+use anyhow::anyhow;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -19,24 +35,120 @@ use std::thread::JoinHandle;
 #[derive(Clone, Debug)]
 pub struct PartitionRequest {
     pub id: u64,
-    pub model: ModelKind,
-    /// Use paper-size IR (true) or the scaled variant (false).
-    pub paper_scale: bool,
-    /// Mesh axes: (name, size) pairs.
-    pub mesh: Vec<(String, usize)>,
+    /// The model to partition: zoo reference or inline IR.
+    pub model: ModelSource,
+    pub mesh: Mesh,
     pub hardware: HardwareKind,
     pub method: Method,
     /// Search budget (state evaluations).
     pub budget: usize,
     pub seed: u64,
+    /// Opt out of the trust-but-verify replay for this request (the
+    /// service may still skip it for paper-scale models).
+    pub verify: bool,
+}
+
+impl PartitionRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", crate::api::wire::u64_to_json(self.id)),
+            ("model", self.model.to_json()),
+            ("mesh", self.mesh.to_json()),
+            ("hardware", Json::s(self.hardware.name())),
+            ("method", Json::s(self.method.name())),
+            ("budget", Json::n(self.budget as f64)),
+            ("seed", crate::api::wire::u64_to_json(self.seed)),
+            ("verify", Json::Bool(self.verify)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<PartitionRequest> {
+        use crate::api::wire;
+        let ctx = "partition request";
+        Ok(PartitionRequest {
+            id: wire::u64_field(j, "id", ctx)?,
+            model: ModelSource::from_json(wire::field(j, "model", ctx)?)?,
+            mesh: Mesh::from_json(wire::field(j, "mesh", ctx)?)?,
+            hardware: wire::str_field(j, "hardware", ctx)?
+                .parse()
+                .map_err(|e: String| anyhow!(e))?,
+            method: wire::str_field(j, "method", ctx)?
+                .parse()
+                .map_err(|e: String| anyhow!(e))?,
+            budget: wire::usize_field(j, "budget", ctx)?,
+            seed: wire::u64_field(j, "seed", ctx)?,
+            verify: wire::bool_field(j, "verify", ctx)?,
+        })
+    }
 }
 
 /// A completed partitioning job.
 pub struct PartitionResponse {
     pub id: u64,
     pub request: PartitionRequest,
-    pub result: anyhow::Result<MethodResult>,
+    pub result: anyhow::Result<Solution>,
 }
+
+impl PartitionResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", crate::api::wire::u64_to_json(self.id)),
+            ("request", self.request.to_json()),
+            (
+                "result",
+                match &self.result {
+                    Ok(sol) => Json::obj(vec![("ok", sol.to_json())]),
+                    Err(e) => Json::obj(vec![("err", Json::s(format!("{e:#}")))]),
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<PartitionResponse> {
+        use crate::api::wire;
+        let ctx = "partition response";
+        let request = PartitionRequest::from_json(wire::field(j, "request", ctx)?)?;
+        let rj = wire::field(j, "result", ctx)?;
+        let result = if let Some(ok) = rj.get("ok") {
+            Ok(Solution::from_json(ok)?)
+        } else if let Some(err) = rj.get("err") {
+            Err(anyhow!(err
+                .as_str()
+                .ok_or_else(|| anyhow!("{ctx}: 'err' is not a string"))?
+                .to_string()))
+        } else {
+            anyhow::bail!("{ctx}: result needs 'ok' or 'err'");
+        };
+        Ok(PartitionResponse { id: wire::u64_field(j, "id", ctx)?, request, result })
+    }
+}
+
+/// Service tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    /// Master switch for the trust-but-verify gate (per-request `verify`
+    /// can only opt *out*, never force verification of paper-scale IR).
+    pub verify: bool,
+    /// Input seed used for verification replays.
+    pub verify_seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { workers: 4, verify: true, verify_seed: 7 }
+    }
+}
+
+/// Cache of compiled zoo models, shared by all workers: the NDA and
+/// action spaces for a given model are built once per service lifetime,
+/// not once per request. The map lock is only held to look up or insert
+/// the per-model cell; the (possibly expensive) compile runs inside the
+/// cell's `OnceLock`, so workers serving other, already-cached models
+/// never wait behind it. Errors are cached as strings (a zoo model that
+/// fails to compile will fail identically every time).
+type ModelCell = Arc<std::sync::OnceLock<Result<Arc<CompiledModel>, String>>>;
+type ModelCache = Mutex<HashMap<(ModelKind, bool), ModelCell>>;
 
 /// The running service.
 pub struct Service {
@@ -48,26 +160,40 @@ pub struct Service {
 }
 
 impl Service {
-    /// Spawn a service with `n_workers` worker threads.
+    /// Spawn a service with `n_workers` worker threads and default
+    /// verification settings.
     pub fn start(n_workers: usize) -> Service {
+        Self::start_with(ServiceConfig { workers: n_workers, ..Default::default() })
+    }
+
+    /// Spawn a service with explicit configuration.
+    pub fn start_with(cfg: ServiceConfig) -> Service {
         let (tx, rx) = channel::<PartitionRequest>();
         let rx = Arc::new(Mutex::new(rx));
         let (resp_tx, responses) = channel::<PartitionResponse>();
         let metrics = Arc::new(Metrics::default());
+        let models: Arc<ModelCache> = Arc::new(Mutex::new(HashMap::new()));
         let mut workers = Vec::new();
-        for _ in 0..n_workers.max(1) {
+        for _ in 0..cfg.workers.max(1) {
             let rx = Arc::clone(&rx);
             let resp_tx = resp_tx.clone();
             let metrics = Arc::clone(&metrics);
+            let models = Arc::clone(&models);
+            let cfg = cfg.clone();
             workers.push(std::thread::spawn(move || loop {
                 let req = {
                     let guard = rx.lock().unwrap();
                     guard.recv()
                 };
                 let Ok(req) = req else { break };
-                let result = handle(&req);
+                metrics.record_dequeue();
+                let result = handle(&req, &models, &cfg, &metrics);
                 match &result {
-                    Ok(r) => metrics.record_completion(r.search_time, 0, r.oom),
+                    Ok(sol) => metrics.record_completion(
+                        std::time::Duration::from_secs_f64(sol.search_time_s),
+                        sol.evals as u64,
+                        sol.oom,
+                    ),
                     Err(_) => metrics.record_failure(),
                 }
                 if resp_tx.send(PartitionResponse { id: req.id, request: req, result }).is_err()
@@ -79,13 +205,22 @@ impl Service {
         Service { tx, responses, metrics, workers, next_id: AtomicU64::new(1) }
     }
 
-    /// Submit a request; returns its id.
-    pub fn submit(&self, mut req: PartitionRequest) -> u64 {
+    /// Submit a request; returns its id, or an error if the service has
+    /// shut down (workers gone / queue closed) — submission after
+    /// shutdown is a caller error, not a panic.
+    pub fn submit(&self, mut req: PartitionRequest) -> crate::Result<u64> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         req.id = id;
+        // Enqueue gauge goes up *before* the send: once the request is in
+        // the channel a worker may dequeue it immediately, and its
+        // decrement must always pair with this increment.
+        self.metrics.record_enqueue();
+        if self.tx.send(req).is_err() {
+            self.metrics.record_dequeue();
+            return Err(anyhow!("partition service is shut down; request {id} dropped"));
+        }
         self.metrics.record_request();
-        self.tx.send(req).expect("service workers alive");
-        id
+        Ok(id)
     }
 
     /// Shut down: close the queue and join workers.
@@ -97,27 +232,94 @@ impl Service {
     }
 }
 
-fn handle(req: &PartitionRequest) -> anyhow::Result<MethodResult> {
-    let func =
-        if req.paper_scale { req.model.build_paper() } else { req.model.build_scaled() };
-    let axes: Vec<(&str, usize)> =
-        req.mesh.iter().map(|(n, s)| (n.as_str(), *s)).collect();
-    let mesh = Mesh::grid(&axes);
-    let model = CostModel::new(HardwareProfile::new(req.hardware));
-    Ok(run_method(req.method, req.model, &func, &mesh, &model, req.budget, req.seed))
+/// Resolve a request's model source to a compiled model. Zoo models are
+/// compiled once and shared across requests and workers; inline models
+/// are compiled per request (the service has no identity to key them
+/// on).
+fn compiled_for(
+    source: &ModelSource,
+    models: &ModelCache,
+) -> crate::Result<Arc<CompiledModel>> {
+    match source {
+        ModelSource::Zoo { kind, paper_scale } => {
+            let cell: ModelCell = {
+                let mut cache = models.lock().unwrap();
+                Arc::clone(cache.entry((*kind, *paper_scale)).or_default())
+            };
+            // Two workers racing on the same *uncompiled* model: one
+            // compiles, the other blocks on the cell — never a duplicate
+            // NDA run, and never the map lock held across a compile.
+            let result = cell.get_or_init(|| {
+                CompiledModel::from_kind(*kind, *paper_scale)
+                    .map(Arc::new)
+                    .map_err(|e| format!("{e:#}"))
+            });
+            result.clone().map_err(|e| anyhow!(e))
+        }
+        ModelSource::Inline(f) => Ok(Arc::new(CompiledModel::compile(f.clone())?)),
+    }
 }
 
-/// Convenience default request.
+fn handle(
+    req: &PartitionRequest,
+    models: &ModelCache,
+    cfg: &ServiceConfig,
+    metrics: &Metrics,
+) -> crate::Result<Solution> {
+    let compiled = compiled_for(&req.model, models)?;
+    let mut sol = compiled
+        .partition(&req.mesh)
+        .method(req.method)
+        .hardware(req.hardware)
+        .budget(req.budget)
+        .seed(req.seed)
+        .run()?;
+    // Trust-but-verify: replay the returned spec through the
+    // differential harness before accepting it. The strategy's own
+    // claims (cost, spec) are not trusted until the executed sharded
+    // module matches the interpreter oracle.
+    if cfg.verify && req.verify && compiled.interpreter_sized() {
+        match validate_solution_spec(compiled.func(), &sol.spec, &req.mesh, cfg.verify_seed) {
+            Ok(record) if record.pass => {
+                metrics.record_verified();
+                sol.validation = Some(record);
+            }
+            Ok(record) => {
+                metrics.record_rejected();
+                anyhow::bail!(
+                    "spec rejected by the verification gate: max relative divergence {:.3e} \
+                     exceeds tol {:.1e} (strategy {})",
+                    record.max_rel_err,
+                    record.tol,
+                    sol.strategy
+                );
+            }
+            // A replay that cannot even run (spec fails the structural
+            // check, partitioning or execution errors) is just as
+            // untrustworthy as a diverging one — count it as rejected.
+            Err(e) => {
+                metrics.record_rejected();
+                return Err(e.context(format!(
+                    "spec rejected by the verification gate: replay failed (strategy {})",
+                    sol.strategy
+                )));
+            }
+        }
+    }
+    Ok(sol)
+}
+
+/// Convenience default request (scaled zoo model, 2x2 mesh, A100).
 pub fn default_request(model: ModelKind, method: Method) -> PartitionRequest {
     PartitionRequest {
         id: 0,
-        model,
-        paper_scale: false,
-        mesh: vec![("data".into(), 2), ("model".into(), 2)],
+        model: ModelSource::zoo(model),
+        mesh: Mesh::grid(&[("data", 2), ("model", 2)]),
         hardware: HardwareKind::A100,
         method,
         budget: 150,
         seed: 0,
+        verify: true,
     }
 }
 
@@ -130,28 +332,87 @@ mod tests {
         let svc = Service::start(2);
         let mut ids = Vec::new();
         for method in [Method::Toast, Method::Manual] {
-            ids.push(svc.submit(default_request(ModelKind::Mlp, method)));
+            ids.push(svc.submit(default_request(ModelKind::Mlp, method)).unwrap());
         }
         let mut got = Vec::new();
         for _ in 0..ids.len() {
             let resp = svc.responses.recv().expect("response");
-            assert!(resp.result.is_ok(), "{:?}", resp.result.err());
+            let sol = resp.result.as_ref().expect("job succeeds");
+            // trust-but-verify ran and passed
+            let v = sol.validation.as_ref().expect("verification record");
+            assert!(v.pass);
             got.push(resp.id);
         }
         got.sort_unstable();
         assert_eq!(got, ids);
-        assert!(svc.metrics.snapshot().contains("completed=2"));
+        let snap = svc.metrics.snapshot();
+        assert!(snap.contains("completed=2"), "{snap}");
+        assert!(snap.contains("verified=2"), "{snap}");
+        assert!(snap.contains("queued=0"), "{snap}");
         svc.shutdown();
     }
 
     #[test]
-    fn failed_jobs_counted() {
-        // A mesh with a bad axis size still works (size 1) — craft a
-        // working request and check metrics coherence instead.
-        let svc = Service::start(1);
-        svc.submit(default_request(ModelKind::Mlp, Method::AutoMap));
-        let resp = svc.responses.recv().unwrap();
-        assert!(resp.result.is_ok());
+    fn submit_after_shutdown_errors_instead_of_panicking() {
+        // A service whose queue receiver is gone behaves exactly like one
+        // whose workers all died: submit must surface an Err, not panic.
+        let (tx, rx) = channel::<PartitionRequest>();
+        drop(rx);
+        let svc = Service {
+            tx,
+            responses: channel::<PartitionResponse>().1,
+            metrics: Arc::new(Metrics::default()),
+            workers: Vec::new(),
+            next_id: AtomicU64::new(1),
+        };
+        let err = svc.submit(default_request(ModelKind::Mlp, Method::Manual));
+        assert!(err.is_err(), "submit after worker death must be an Err, not a panic");
+        assert_eq!(svc.metrics.queue_depth(), 0, "failed submits are not queued");
+        assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 0);
         svc.shutdown();
+    }
+
+    #[test]
+    fn inline_models_are_served() {
+        let mut b = crate::ir::FuncBuilder::new("inline_mlp");
+        let x = b.param("x", crate::ir::TensorType::f32(vec![16, 8]));
+        let w = b.param("w", crate::ir::TensorType::f32(vec![8, 4]));
+        let y = b.matmul(x, w);
+        let func = b.build(vec![y]);
+        let svc = Service::start(1);
+        let mut req = default_request(ModelKind::Mlp, Method::Toast);
+        req.model = ModelSource::Inline(func);
+        req.budget = 40;
+        svc.submit(req).unwrap();
+        let resp = svc.responses.recv().unwrap();
+        let sol = resp.result.expect("inline job succeeds");
+        assert!(sol.validation.expect("verified").pass);
+        assert!(matches!(sol.model, ModelSource::Inline(_)));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn request_and_response_roundtrip_json() {
+        let req = default_request(ModelKind::Attention, Method::Alpa);
+        let jr = Json::parse(&req.to_json().render()).unwrap();
+        let back = PartitionRequest::from_json(&jr).unwrap();
+        assert_eq!(back.model, req.model);
+        assert_eq!(back.mesh, req.mesh);
+        assert_eq!(back.method, req.method);
+        assert_eq!(back.hardware, req.hardware);
+        assert_eq!(back.budget, req.budget);
+        assert_eq!(back.verify, req.verify);
+
+        // An error response survives the wire too.
+        let resp = PartitionResponse {
+            id: 9,
+            request: req,
+            result: Err(anyhow!("strategy exploded")),
+        };
+        let jr = Json::parse(&resp.to_json().render()).unwrap();
+        let back = PartitionResponse::from_json(&jr).unwrap();
+        assert_eq!(back.id, 9);
+        assert!(back.result.is_err());
+        assert!(format!("{:#}", back.result.unwrap_err()).contains("strategy exploded"));
     }
 }

@@ -26,6 +26,7 @@ pub mod symbolic;
 
 use crate::ir::{Func, OpKind};
 use crate::mesh::{HardwareProfile, Mesh};
+use crate::util::json::Json;
 
 /// Absolute cost estimate of a device-local function.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -42,6 +43,39 @@ pub struct Cost {
     pub flops: f64,
     /// Total bytes moved by collectives per device.
     pub comm_bytes: f64,
+}
+
+impl Cost {
+    /// Wire format: every component, so a serialized cost report is a
+    /// complete record (not just the scalar the search optimizes).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("runtime_s", Json::n(self.runtime_s)),
+            ("compute_s", Json::n(self.compute_s)),
+            ("comm_s", Json::n(self.comm_s)),
+            ("peak_bytes", Json::n(self.peak_bytes as f64)),
+            ("flops", Json::n(self.flops)),
+            ("comm_bytes", Json::n(self.comm_bytes)),
+        ])
+    }
+
+    /// Inverse of [`Cost::to_json`]. `peak_bytes` survives exactly for
+    /// values below 2^53 (peak memory is far below that).
+    pub fn from_json(j: &Json) -> crate::Result<Cost> {
+        let f = |key: &str| -> crate::Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("cost: field '{key}' missing or not a number"))
+        };
+        Ok(Cost {
+            runtime_s: f("runtime_s")?,
+            compute_s: f("compute_s")?,
+            comm_s: f("comm_s")?,
+            peak_bytes: f("peak_bytes")? as u64,
+            flops: f("flops")?,
+            comm_bytes: f("comm_bytes")?,
+        })
+    }
 }
 
 /// The cost model: hardware profile + tuning constants.

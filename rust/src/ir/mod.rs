@@ -295,7 +295,7 @@ impl OpKind {
 }
 
 /// One instruction: an op applied to operands, producing `result`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Instr {
     pub result: ValueId,
     pub kind: OpKind,
@@ -304,14 +304,14 @@ pub struct Instr {
 }
 
 /// A function parameter.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Param {
     pub name: String,
     pub ty: TensorType,
 }
 
 /// A straight-line tensor function.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Func {
     pub name: String,
     pub params: Vec<Param>,

@@ -4,8 +4,51 @@
 //! Alabed et al., *"TOAST: Fast and scalable auto-partitioning based on
 //! principled static analysis"* (2025).
 //!
-//! The library is organised bottom-up:
+//! ## The session API
 //!
+//! The public surface is [`api`] — a staged session mirroring the
+//! paper's pipeline (*analyze once; then search, validate, apply*):
+//!
+//! ```no_run
+//! use toast::api::{CompiledModel, Solution};
+//! use toast::mesh::Mesh;
+//! use toast::models::ModelKind;
+//!
+//! // 1. compile once: verify the IR, run the NDA (§3)
+//! let compiled = CompiledModel::from_kind(ModelKind::T2B, false)?;
+//!
+//! // 2. any number of partitioning sessions against the compiled model;
+//! //    per-mesh action spaces are cached inside
+//! let mesh = Mesh::grid(&[("data", 4), ("model", 4)]);
+//! let solution = compiled
+//!     .partition(&mesh)      // builder
+//!     .budget(500)           // search effort
+//!     .validate(true)        // differentially execute the winning spec
+//!     .run()?;
+//!
+//! // 3. the Solution is a serializable artifact: spec + cost report +
+//! //    validation record, with exact JSON round-trip semantics
+//! let wire = solution.to_json_string();
+//! let back = Solution::from_json_str(&wire)?;
+//! assert_eq!(back.spec, solution.spec);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! Every partitioning method — TOAST's MCTS and the three baselines —
+//! implements one trait ([`api::Strategy`]), so the service, the
+//! experiment runners and the CLI drive them identically. The
+//! coordinator's partition service is *trust-but-verify*: worker-returned
+//! specs are replayed through the differential harness
+//! ([`runtime::diff`]) against the interpreter oracle before being
+//! accepted.
+//!
+//! The pre-session entry points ([`search::auto_partition`],
+//! [`baselines::run_method`]) remain as thin deprecated shims.
+//!
+//! ## Layers, bottom-up
+//!
+//! * [`util`] — RNG and the JSON emit/parse layer the wire formats ride
+//!   on (exact f64 round-trips; no serde offline).
 //! * [`ir`] — a StableHLO-like straight-line tensor IR (ANF/SSA) with a
 //!   shape-inferring builder, verifier, printer and a host reference
 //!   interpreter used for numeric validation of partitioner rewrites.
@@ -15,8 +58,9 @@
 //!   (§3.6, §4.4).
 //! * [`mesh`] — logical device meshes and hardware profiles (A100, P100,
 //!   TPUv3) used by the cost model.
-//! * [`sharding`] — sharding specs, rule-driven propagation, and the SPMD
-//!   rewriter that emits device-local IR with collectives.
+//! * [`sharding`] — sharding specs (serializable, with untrusted-input
+//!   structural checking), rule-driven propagation, and the SPMD rewriter
+//!   that emits device-local IR with collectives.
 //! * [`cost`] — the analytic roofline cost model with live-range peak
 //!   memory estimation (§4.5), plus [`cost::symbolic`]: the symbolic
 //!   evaluator that prices a spec straight from the logical function
@@ -29,7 +73,8 @@
 //!   per-color incidence) and replays cached per-instruction plans
 //!   instead of re-partitioning.
 //! * [`baselines`] — Alpa-like, AutoMap-like and expert/manual
-//!   comparators (§5.1.1).
+//!   comparators (§5.1.1), each exposed as a `solve` core wrapped by an
+//!   [`api::Strategy`].
 //! * [`models`] — IR builders for the paper's evaluation models (§5.1):
 //!   T2B/T7B Gemma-like transformers, GNS, U-Net, ITX.
 //! * [`runtime`] — the two-executor correctness subsystem: the SPMD
@@ -39,9 +84,13 @@
 //!   tolerance-equivalence against the interpreter oracle (both share
 //!   [`ir::interp::eval_op`] for compute) — plus the PJRT (XLA)
 //!   execution path for AOT artifacts.
-//! * [`coordinator`] — the L3 service: partition-request queue, worker
-//!   pool, metrics, and the CLI entry points.
+//! * [`api`] — the session facade described above.
+//! * [`coordinator`] — the L3 service: partition-request queue with
+//!   model-agnostic requests, compiled-model cache, worker pool, the
+//!   trust-but-verify acceptance gate, metrics (incl. queue depth), and
+//!   the CLI entry points.
 
+pub mod api;
 pub mod baselines;
 pub mod coordinator;
 pub mod cost;

@@ -2,17 +2,22 @@
 //!
 //! Subcommands:
 //! * `analyze`   — run the NDA on a model; print colors/conflicts/groups.
-//! * `partition` — partition a model with a chosen method; print report.
+//! * `partition` — run a partitioning session (any method) and print the
+//!   report; `--out spec.json` writes the full serializable `Solution`
+//!   artifact (spec + cost report + validation record).
+//! * `apply`     — reload a `Solution` written by `partition --out`,
+//!   re-apply the spec to a freshly built model, and prove it reproduces
+//!   the exact recorded spec and relative cost; `--validate` replays it
+//!   differentially on the SPMD simulator against the interpreter oracle.
 //! * `search`    — run the MCTS auto-partitioner on a scaled model; with
-//!   `--validate-best`, differentially execute the winning spec on the
-//!   SPMD simulator against the interpreter oracle.
+//!   `--validate-best`, differentially execute the winning spec.
 //! * `validate`  — numerically validate a TOAST partition on the
 //!   reference interpreter (scaled model).
 //! * `bench`     — regenerate the paper's figures
 //!   (fig8|fig9|fig10|ablations) or run the differential-validation
 //!   sweep (differential).
 //! * `models`    — list the model zoo with parameter counts.
-//! * `serve`     — run the partition service demo over all models.
+//! * `serve`     — run the trust-but-verify partition service demo.
 //! * `e2e`       — PJRT data-parallel training over AOT artifacts.
 //!
 //! (Hand-rolled argument parsing: the offline environment provides no
@@ -21,15 +26,15 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
+use toast::api::{CompiledModel, Solution};
 use toast::baselines::Method;
 use toast::coordinator::experiments as exp;
-use toast::coordinator::{PartitionRequest, Service};
+use toast::coordinator::{service, Service};
 use toast::cost::CostModel;
 use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
 use toast::models::ModelKind;
 use toast::nda::Nda;
-use toast::search::{ActionSpaceConfig, SearchConfig};
-use toast::sharding::validate_spec;
+use toast::search::ActionSpaceConfig;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -41,6 +46,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "analyze" => cmd_analyze(&flags),
         "partition" => cmd_partition(&flags),
+        "apply" => cmd_apply(&flags),
         "search" => cmd_search(&flags),
         "validate" => cmd_validate(&flags),
         "bench" => cmd_bench(&flags),
@@ -72,13 +78,15 @@ fn usage() {
 USAGE: toast <command> [--flag value]...
   analyze    --model <mlp|attention|t2b|t7b|gns|unet|itx> [--paper]
   partition  --model M --mesh 4x2 --hw <a100|p100|tpuv3>
-             [--method <toast|alpa|automap|manual>] [--budget N] [--paper]
+             [--method <toast|alpa|automap|manual>] [--budget N] [--seed N]
+             [--paper] [--validate] [--out spec.json]
+  apply      --spec spec.json [--validate]
   search     --model M --mesh 2x2 [--budget N] [--validate-best]
   validate   --model M --mesh 2x2 [--budget N]
   bench      --experiment <fig8|fig9|fig10|ablations|differential>
              [--scale tiny|bench|paper] [--json]
   models
-  serve      [--workers N]
+  serve      [--workers N] [--no-verify]
   e2e        [--devices N] [--steps N] [--artifacts DIR]"
     );
 }
@@ -128,17 +136,10 @@ fn get_hw(flags: &HashMap<String, String>) -> anyhow::Result<HardwareKind> {
         .unwrap_or(Ok(HardwareKind::A100))
 }
 
-fn build(kind: ModelKind, flags: &HashMap<String, String>) -> toast::ir::Func {
-    if flags.contains_key("paper") {
-        kind.build_paper()
-    } else {
-        kind.build_scaled()
-    }
-}
-
 fn cmd_analyze(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let kind = get_model(flags)?;
-    let func = build(kind, flags);
+    let func =
+        if flags.contains_key("paper") { kind.build_paper() } else { kind.build_scaled() };
     let t0 = std::time::Instant::now();
     let nda = Nda::analyze(&func);
     let dt = t0.elapsed();
@@ -176,34 +177,38 @@ fn cmd_analyze(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
 fn cmd_partition(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let kind = get_model(flags)?;
-    let func = build(kind, flags);
+    let paper = flags.contains_key("paper");
     let mesh = get_mesh(flags)?;
     let hw = get_hw(flags)?;
-    let method: Method = match flags.get("method").map(|s| s.as_str()).unwrap_or("toast") {
-        "toast" => Method::Toast,
-        "alpa" => Method::Alpa,
-        "automap" => Method::AutoMap,
-        "manual" => Method::Manual,
-        other => anyhow::bail!("unknown method '{other}'"),
-    };
+    let method: Method = flags
+        .get("method")
+        .map(|s| s.parse().map_err(|e: String| anyhow::anyhow!(e)))
+        .unwrap_or(Ok(Method::Toast))?;
     let budget: usize = flags.get("budget").and_then(|s| s.parse().ok()).unwrap_or(300);
-    let model = CostModel::new(HardwareProfile::new(hw));
-    println!("partitioning {} on {} / {}", kind.name(), mesh.describe(), hw.name());
-    let r = toast::baselines::run_method(method, kind, &func, &mesh, &model, budget, 17);
-    println!(
-        "{}: step {:.3} ms (base {:.3} ms, {:.2}x), peak {:.2} GiB{}, search {:.2?}",
-        r.method.name(),
-        r.cost.runtime_s * 1e3,
-        r.base.runtime_s * 1e3,
-        r.base.runtime_s / r.cost.runtime_s.max(1e-12),
-        r.cost.peak_bytes as f64 / (1u64 << 30) as f64,
-        if r.oom { " [OOM]" } else { "" },
-        r.search_time,
+    let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(17);
+    let validate = flags.contains_key("validate");
+    anyhow::ensure!(
+        !(validate && paper),
+        "--validate executes the model numerically; paper-scale IR is too large \
+         (drop --paper or --validate)"
     );
+
+    println!("partitioning {} on {} / {}", kind.name(), mesh.describe(), hw.name());
+    let compiled = CompiledModel::from_kind(kind, paper)?;
+    let sol = compiled
+        .partition(&mesh)
+        .method(method)
+        .hardware(hw)
+        .budget(budget)
+        .seed(seed)
+        .validate(validate)
+        .run()?;
+    println!("{}", sol.summarize());
     println!("parameter shardings (non-replicated):");
+    let func = compiled.func();
     let mut shown = 0;
     for (pi, p) in func.params.iter().enumerate() {
-        let d = r.spec.describe_value(&func, &mesh, toast::ir::ValueId(pi as u32));
+        let d = sol.spec.describe_value(func, &mesh, toast::ir::ValueId(pi as u32));
         if d.contains('{') {
             println!("  %{:<16} {}", p.name, d);
             shown += 1;
@@ -213,39 +218,108 @@ fn cmd_partition(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             }
         }
     }
+    if let Some(path) = flags.get("out") {
+        std::fs::write(path, sol.to_json_string())?;
+        println!("wrote solution artifact to {path} (reload with `toast apply --spec {path}`)");
+    }
+    Ok(())
+}
+
+/// Reload a serialized `Solution`, re-apply its spec to a freshly built
+/// model, and check the round-trip invariants the artifact promises:
+/// the reloaded spec partitions, re-prices to the *exact* recorded
+/// relative cost, and (with `--validate`) still matches the interpreter
+/// oracle when executed.
+fn cmd_apply(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let path = flags
+        .get("spec")
+        .ok_or_else(|| anyhow::anyhow!("apply needs --spec <file.json>"))?;
+    let text = std::fs::read_to_string(path)?;
+    let sol = Solution::from_json_str(&text)?;
+    println!(
+        "loaded solution: {} via {} on {} / {}",
+        sol.model.name(),
+        sol.strategy,
+        sol.mesh.describe(),
+        sol.hardware.name()
+    );
+
+    // Rebuild the model the artifact references — through the session
+    // compiler, so an inline Func off the wire passes the verifier
+    // before anything partitions it — and re-check the spec against it.
+    let compiled = CompiledModel::from_source(&sol.model)?;
+    let func = compiled.func();
+    sol.spec.check_against(func, &sol.mesh)?;
+
+    // Re-price through the same oracle path the producer used.
+    let cost_model = CostModel::new(HardwareProfile::new(sol.hardware));
+    let (cost, _base, relative) = toast::api::price_spec(func, &sol.spec, &sol.mesh, &cost_model)?;
+    println!(
+        "re-applied: relative cost {relative:.6} (recorded {:.6}), step {:.3} ms",
+        sol.relative,
+        cost.runtime_s * 1e3
+    );
+    anyhow::ensure!(
+        relative == sol.relative,
+        "re-priced relative cost {relative} != recorded {} — artifact diverged",
+        sol.relative
+    );
+    anyhow::ensure!(
+        cost == sol.cost,
+        "re-priced cost report differs from the recorded one — artifact diverged"
+    );
+
+    if flags.contains_key("validate") {
+        anyhow::ensure!(
+            !sol.model.is_paper_scale(),
+            "--validate executes the model numerically; this artifact is paper-scale"
+        );
+        // Replay with the artifact's recorded seed so a recorded
+        // validation run is actually reproduced, not merely re-sampled.
+        let seed = sol.validation.as_ref().map(|v| v.seed).unwrap_or(7);
+        let rec = toast::api::validate_solution_spec(func, &sol.spec, &sol.mesh, seed)?;
+        println!(
+            "differential replay (seed {seed}): max relative divergence {:.3e} \
+             (tol {:.1e}, {} collectives)",
+            rec.max_rel_err, rec.tol, rec.collectives
+        );
+        anyhow::ensure!(rec.pass, "reloaded spec diverged from the interpreter oracle");
+    }
+    println!("OK — artifact reloads to the exact same spec and relative cost");
     Ok(())
 }
 
 fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let kind = get_model(flags)?;
-    let func = kind.build_scaled();
     let mesh = get_mesh(flags)?;
     let budget: usize = flags.get("budget").and_then(|s| s.parse().ok()).unwrap_or(150);
     let validate_best = flags.contains_key("validate-best");
-    let model = CostModel::new(HardwareProfile::new(get_hw(flags)?));
+    let acfg = ActionSpaceConfig { min_color_dims: 1, ..Default::default() };
     println!("searching {} (scaled) on {}", kind.name(), mesh.describe());
-    let out = toast::search::auto_partition(
-        &func,
-        &mesh,
-        &model,
-        &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
-        &SearchConfig { budget, validate_best, ..Default::default() },
-    );
+    let compiled = CompiledModel::from_kind(kind, false)?;
+    let sol = compiled
+        .partition(&mesh)
+        .hardware(get_hw(flags)?)
+        .action_config(acfg.clone())
+        .budget(budget)
+        .validate(validate_best)
+        .run()?;
     println!(
-        "search: relative cost {:.4}, {} actions, {} evals, {:.2?}",
-        out.relative,
-        out.actions.len(),
-        out.evals,
-        out.wall
+        "search: relative cost {:.4}, {} actions, {} evals, {:.2}s",
+        sol.relative,
+        compiled.actions(&mesh, &acfg).len(),
+        sol.evals,
+        sol.search_time_s
     );
-    if let Some(v) = out.validation {
-        let tol = toast::runtime::diff::DEFAULT_REL_TOL as f64;
+    if let Some(v) = &sol.validation {
         println!(
-            "validate-best: max relative divergence vs. interpreter oracle {v:.3e} (tol {tol:.1e})"
+            "validate-best: max relative divergence vs. interpreter oracle {:.3e} (tol {:.1e})",
+            v.max_rel_err, v.tol
         );
         anyhow::ensure!(
-            v <= tol,
-            "best spec diverged from the interpreter oracle: {v:.3e}"
+            v.pass,
+            "best spec diverged from the interpreter oracle: {:.3e}",
+            v.max_rel_err
         );
         println!("OK — winning spec is semantics-preserving end to end");
     }
@@ -254,30 +328,22 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
 fn cmd_validate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let kind = get_model(flags)?;
-    let func = kind.build_scaled();
     let mesh = get_mesh(flags)?;
     let budget: usize = flags.get("budget").and_then(|s| s.parse().ok()).unwrap_or(100);
-    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
-    let out = toast::search::auto_partition(
-        &func,
-        &mesh,
-        &model,
-        &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
-        &SearchConfig { budget, ..Default::default() },
-    );
+    let compiled = CompiledModel::from_kind(kind, false)?;
+    let sol = compiled
+        .partition(&mesh)
+        .action_config(ActionSpaceConfig { min_color_dims: 1, ..Default::default() })
+        .budget(budget)
+        .validate(true)
+        .run()?;
+    println!("search: relative cost {:.4}, {} evals", sol.relative, sol.evals);
+    let v = sol.validation.as_ref().expect("validate(true) records a replay");
     println!(
-        "search: relative cost {:.4}, {} actions, {} evals",
-        out.relative,
-        out.actions.len(),
-        out.evals
+        "numeric validation: max relative divergence = {:.3e} across outputs ({} collectives)",
+        v.max_rel_err, v.collectives
     );
-    let v = validate_spec(&func, &out.spec, &mesh, 7)?;
-    println!(
-        "numeric validation: max |Δ| = {:.3e} across outputs ({} collectives)",
-        v.max_abs_diff,
-        v.stats.total_collectives()
-    );
-    anyhow::ensure!(v.max_abs_diff < 1e-2, "validation diff too large");
+    anyhow::ensure!(v.pass, "validation diff too large: {:.3e}", v.max_rel_err);
     println!("OK — partitioned module is semantics-preserving");
     Ok(())
 }
@@ -324,7 +390,7 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             }
         }
         exp::Experiment::Ablations => {
-            run_ablations(scale);
+            run_ablations(scale)?;
         }
         exp::Experiment::Differential => {
             let models = if scale == exp::BenchScale::Tiny {
@@ -342,13 +408,16 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Ablations over TOAST's own design choices (DESIGN.md §7).
-fn run_ablations(scale: exp::BenchScale) {
-    use toast::search::{auto_partition, build_actions};
-    let func = exp::build_model(ModelKind::T2B, scale);
+/// Ablations over TOAST's own design choices (DESIGN.md §7). One
+/// compiled model; each variant is a session with a different
+/// action-space configuration.
+fn run_ablations(scale: exp::BenchScale) -> anyhow::Result<()> {
+    let compiled = CompiledModel::compile_annotated(
+        exp::build_model(ModelKind::T2B, scale),
+        Some(ModelKind::T2B),
+        scale == exp::BenchScale::Paper,
+    )?;
     let mesh = Mesh::grid(&[("data", 4), ("model", 4)]);
-    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
-    let scfg = SearchConfig { budget: scale.budget(), ..Default::default() };
 
     println!("== ablations (T2B @ {:?}, 16 devices, A100) ==", scale);
     let variants: Vec<(&str, ActionSpaceConfig)> = vec![
@@ -372,18 +441,18 @@ fn run_ablations(scale: exp::BenchScale) {
         "variant", "actions", "rel cost", "search_s", "evals"
     );
     for (name, acfg) in variants {
-        let nda = Nda::analyze(&func);
-        let n_actions = build_actions(&func, &nda, &mesh, &acfg).len();
-        let out = auto_partition(&func, &mesh, &model, &acfg, &scfg);
+        let n_actions = compiled.actions(&mesh, &acfg).len();
+        let sol = compiled
+            .partition(&mesh)
+            .action_config(acfg)
+            .budget(scale.budget())
+            .run()?;
         println!(
             "{:<32} {:>10} {:>10.4} {:>10.2} {:>8}",
-            name,
-            n_actions,
-            out.relative,
-            out.wall.as_secs_f64(),
-            out.evals
+            name, n_actions, sol.relative, sol.search_time_s, sol.evals
         );
     }
+    Ok(())
 }
 
 fn cmd_models() -> anyhow::Result<()> {
@@ -406,36 +475,30 @@ fn cmd_models() -> anyhow::Result<()> {
 
 fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(4);
-    let svc = Service::start(workers);
-    println!("partition service up with {workers} workers; submitting demo workload");
+    let verify = !flags.contains_key("no-verify");
+    let svc = Service::start_with(toast::coordinator::ServiceConfig {
+        workers,
+        verify,
+        ..Default::default()
+    });
+    println!(
+        "partition service up with {workers} workers (verify gate {}); submitting demo workload",
+        if verify { "on" } else { "off" }
+    );
     let mut n = 0;
     for kind in ModelKind::paper_eval_set() {
         for method in [Method::Toast, Method::Manual] {
-            svc.submit(PartitionRequest {
-                id: 0,
-                model: kind,
-                paper_scale: false,
-                mesh: vec![("data".into(), 2), ("model".into(), 2)],
-                hardware: HardwareKind::A100,
-                method,
-                budget: 100,
-                seed: 1,
-            });
+            let mut req = service::default_request(kind, method);
+            req.budget = 100;
+            req.seed = 1;
+            svc.submit(req)?;
             n += 1;
         }
     }
     for _ in 0..n {
         let resp = svc.responses.recv()?;
         match resp.result {
-            Ok(r) => println!(
-                "job {}: {} × {} -> step {:.3} ms ({}), search {:.2?}",
-                resp.id,
-                resp.request.model.name(),
-                r.method.name(),
-                r.step_time_s * 1e3,
-                if r.oom { "OOM" } else { "fits" },
-                r.search_time,
-            ),
+            Ok(sol) => println!("job {}: {}", resp.id, sol.summarize()),
             Err(e) => println!("job {} failed: {e:#}", resp.id),
         }
     }

@@ -11,6 +11,7 @@ pub mod hardware;
 pub use hardware::{HardwareKind, HardwareProfile};
 
 use crate::ir::AxisId;
+use crate::util::json::Json;
 
 
 /// A named mesh axis.
@@ -137,6 +138,51 @@ impl Mesh {
             self.axes.iter().map(|a| format!("{}={}", a.name, a.size)).collect();
         format!("{} ({} devices)", parts.join(" x "), self.num_devices())
     }
+
+    /// Wire format: `{"axes":[{"name":"data","size":4},...]}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "axes",
+            Json::Arr(
+                self.axes
+                    .iter()
+                    .map(|a| {
+                        Json::obj(vec![
+                            ("name", Json::s(a.name.clone())),
+                            ("size", Json::n(a.size as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    /// Inverse of [`Mesh::to_json`]; round-trips exactly.
+    pub fn from_json(j: &Json) -> crate::Result<Mesh> {
+        let axes = j
+            .get("axes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("mesh: missing 'axes' array"))?;
+        anyhow::ensure!(!axes.is_empty(), "mesh: needs at least one axis");
+        let axes = axes
+            .iter()
+            .map(|a| {
+                let name = a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("mesh axis: 'name' missing or not a string"))?;
+                let size = a
+                    .get("size")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("mesh axis: 'size' missing or not a non-negative integer")
+                    })?;
+                anyhow::ensure!(size >= 1, "mesh axis '{name}': size must be >= 1");
+                Ok(MeshAxis { name: name.to_string(), size })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Mesh { axes })
+    }
 }
 
 #[cfg(test)]
@@ -183,5 +229,14 @@ mod tests {
         let m = Mesh::grid(&[("d", 8)]);
         assert_eq!(m.groups(0).len(), 1);
         assert_eq!(m.groups(0)[0].len(), 8);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = Mesh::grid(&[("data", 4), ("model", 2), ("seq", 1)]);
+        let back = Mesh::from_json(&Json::parse(&m.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back, m);
+        assert!(Mesh::from_json(&Json::parse("{\"axes\":[]}").unwrap()).is_err());
+        assert!(Mesh::from_json(&Json::parse("{}").unwrap()).is_err());
     }
 }

@@ -11,7 +11,10 @@
 //!   device-local IR. The materialize-partition-evaluate path remains the
 //!   validation oracle.
 //!
-//! The one-call entry point is [`auto_partition`].
+//! The staged entry point is the session API
+//! ([`crate::api::CompiledModel::partition`]), which analyzes once and
+//! caches per-mesh action spaces; the legacy one-call [`auto_partition`]
+//! remains as a thin deprecated shim.
 
 pub mod actions;
 pub mod incremental;
@@ -27,6 +30,12 @@ use crate::mesh::Mesh;
 use crate::nda::Nda;
 
 /// Analyze `func`, build the action space, and run the MCTS search.
+///
+/// Legacy shim: re-runs the NDA and action construction on every call.
+/// The session API ([`crate::api::CompiledModel::partition`]) does both
+/// once per model and returns a serializable [`crate::api::Solution`].
+#[deprecated(note = "use toast::api::CompiledModel::partition(..) — the session API \
+                     analyzes once and caches action spaces")]
 pub fn auto_partition(
     func: &Func,
     mesh: &Mesh,

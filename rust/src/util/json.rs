@@ -1,7 +1,16 @@
-//! Minimal JSON emission for reports (no serde available offline).
+//! Minimal JSON emission *and parsing* for reports and wire artifacts
+//! (no serde available offline).
+//!
+//! Rendering and parsing round-trip exactly: `Json::parse(j.render())`
+//! reconstructs `j` for every finite value (non-finite numbers render as
+//! `null`), and f64s survive because [`Json::render`] emits Rust's
+//! shortest round-trip `Display` form and [`Json::parse`] reads it back
+//! with the correctly-rounded `str::parse::<f64>`. This is what lets
+//! [`crate::api`] guarantee serialized sharding artifacts reload to the
+//! exact same spec and cost.
 
 /// A JSON value builder with string output.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Json {
     Null,
     Bool(bool),
@@ -22,6 +31,74 @@ impl Json {
 
     pub fn obj(fields: Vec<(&str, Json)>) -> Json {
         Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    // ---- accessors (None on kind mismatch) ------------------------------
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Number as usize; None if negative, fractional or not a number.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(v) if *v >= 0.0 && *v == v.trunc() && *v <= u64::MAX as f64 => {
+                Some(*v as usize)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    /// Object field lookup (first match; None for non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    // ---- parsing --------------------------------------------------------
+
+    /// Parse a JSON document. Accepts exactly what [`Json::render`] emits
+    /// plus standard JSON whitespace/escapes; rejects trailing garbage.
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
+        let bytes = text.as_bytes();
+        let mut p = Parser { text, bytes, pos: 0, depth: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != bytes.len() {
+            return Err(p.err("trailing characters after JSON value"));
+        }
+        Ok(v)
     }
 
     pub fn render(&self) -> String {
@@ -85,6 +162,253 @@ impl Json {
     }
 }
 
+/// A JSON parse error with byte position context.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JsonError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "JSON parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+/// Nesting cap for untrusted input: far above any artifact this crate
+/// emits (a `Solution` nests ~6 levels), far below stack exhaustion.
+const MAX_DEPTH: usize = 256;
+
+struct Parser<'a> {
+    text: &'a str,
+    bytes: &'a [u8],
+    pos: usize,
+    depth: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: impl Into<String>) -> JsonError {
+        JsonError { pos: self.pos, msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &str, v: Json) -> Result<Json, JsonError> {
+        if self.text[self.pos..].starts_with(lit) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            Err(self.err(format!("expected '{lit}'")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.depth += 1;
+        let v = match self.peek() {
+            Some(b'n') => self.eat_lit("null", Json::Null),
+            Some(b't') => self.eat_lit("true", Json::Bool(true)),
+            Some(b'f') => self.eat_lit("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(self.err(format!("unexpected character '{}'", c as char))),
+            None => Err(self.err("unexpected end of input")),
+        };
+        self.depth -= 1;
+        v
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        self.text[start..self.pos]
+            .parse::<f64>()
+            .map(Json::Num)
+            .map_err(|e| self.err(format!("bad number '{}': {e}", &self.text[start..self.pos])))
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            // Fast path: copy the longest escape-free run in one go.
+            let run_start = self.pos;
+            while matches!(self.peek(), Some(c) if c != b'"' && c != b'\\') {
+                self.pos += 1;
+            }
+            if self.pos > run_start {
+                // Guard against splitting a UTF-8 sequence: runs end only
+                // at ASCII '"' or '\\', which never occur mid-codepoint.
+                out.push_str(
+                    std::str::from_utf8(&self.bytes[run_start..self.pos])
+                        .map_err(|_| self.err("invalid UTF-8 in string"))?,
+                );
+            }
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = self
+                                .text
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or_else(|| self.err("truncated \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err(format!("bad \\u escape '{hex}'")))?;
+                            self.pos += 4; // now on the last hex digit
+                            if (0xD800..0xDC00).contains(&code) {
+                                // High surrogate: standard JSON encoders
+                                // (serde_json, Python's json) emit non-BMP
+                                // chars as a \uXXXX\uXXXX pair — combine
+                                // with the following low surrogate.
+                                if self.text[self.pos + 1..].starts_with("\\u") {
+                                    if let Some(lo_hex) =
+                                        self.text.get(self.pos + 3..self.pos + 7)
+                                    {
+                                        if let Ok(lo) = u32::from_str_radix(lo_hex, 16) {
+                                            if (0xDC00..0xE000).contains(&lo) {
+                                                let c = 0x10000
+                                                    + ((code - 0xD800) << 10)
+                                                    + (lo - 0xDC00);
+                                                out.push(
+                                                    char::from_u32(c).unwrap_or('\u{fffd}'),
+                                                );
+                                                self.pos += 6;
+                                            } else {
+                                                out.push('\u{fffd}'); // unpaired high
+                                            }
+                                        } else {
+                                            out.push('\u{fffd}');
+                                        }
+                                    } else {
+                                        out.push('\u{fffd}');
+                                    }
+                                } else {
+                                    out.push('\u{fffd}'); // unpaired high surrogate
+                                }
+                            } else {
+                                // Lone low surrogates map to U+FFFD like
+                                // serde's lossy mode; everything else is a
+                                // scalar value.
+                                out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            }
+                        }
+                        _ => return Err(self.err("bad escape sequence")),
+                    }
+                    self.pos += 1;
+                }
+                _ => return Err(self.err("unterminated string")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}' in object")),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,5 +426,88 @@ mod tests {
     #[test]
     fn escapes_strings() {
         assert_eq!(Json::s("a\"b\nc").render(), r#""a\"b\nc""#);
+    }
+
+    #[test]
+    fn parses_what_it_renders() {
+        let j = Json::obj(vec![
+            ("name", Json::s("toast \"quoted\"\n\ttabbed")),
+            ("n", Json::n(3.0)),
+            ("neg", Json::n(-17.25)),
+            ("tiny", Json::n(1.0e-4)),
+            ("pi", Json::n(std::f64::consts::PI)),
+            ("big", Json::n(1.2345678901234567e300)),
+            ("xs", Json::Arr(vec![Json::n(1.5), Json::Bool(true), Json::Null])),
+            ("empty_arr", Json::Arr(vec![])),
+            ("empty_obj", Json::Obj(vec![])),
+        ]);
+        let back = Json::parse(&j.render()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn parses_whitespace_and_escapes() {
+        let j = Json::parse(" { \"a\" : [ 1 , 2.5e1 , \"x\\u0041\" ] , \"b\" : null } ")
+            .unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap()[1].as_f64(), Some(25.0));
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap()[2].as_str(), Some("xA"));
+        assert!(j.get("b").unwrap().is_null());
+        assert!(j.get("missing").is_none());
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        // serde_json/Python emit non-BMP chars as \u pairs: U+1D703.
+        let j = Json::parse(r#""\ud835\udf03x""#).unwrap();
+        assert_eq!(j.as_str(), Some("\u{1D703}x"));
+        // Unpaired surrogates degrade to U+FFFD, not errors.
+        assert_eq!(Json::parse(r#""\ud835""#).unwrap().as_str(), Some("\u{fffd}"));
+        assert_eq!(Json::parse(r#""\udf03""#).unwrap().as_str(), Some("\u{fffd}"));
+        // High surrogate followed by a non-surrogate escape: FFFD + the char.
+        assert_eq!(
+            Json::parse(r#""\ud835A""#).unwrap().as_str(),
+            Some("\u{fffd}A")
+        );
+        // Non-BMP chars also pass through raw and re-render as themselves.
+        let raw = Json::s("\u{1D703}");
+        assert_eq!(Json::parse(&raw.render()).unwrap(), raw);
+    }
+
+    #[test]
+    fn f64_roundtrip_is_exact() {
+        // (-0.0 is excluded: the renderer's integer fast path prints it
+        // as `0`, which reads back as +0.0 — equal, different bits.)
+        for v in [0.1, 1.0 / 3.0, f64::MAX, f64::MIN_POSITIVE, 123456789.0_f64] {
+            let s = Json::n(v).render();
+            let back = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "value {v} via '{s}'");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in ["", "{", "[1,", "{\"a\":}", "tru", "1.2.3", "\"abc", "{}x", "[01]x"] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn nesting_depth_is_bounded() {
+        let deep = "[".repeat(100_000) + &"]".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.msg.contains("nesting too deep"), "{err}");
+        // Reasonable nesting still parses.
+        let ok = "[".repeat(64) + "1" + &"]".repeat(64);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn accessor_kinds() {
+        assert_eq!(Json::n(7.0).as_usize(), Some(7));
+        assert_eq!(Json::n(-1.0).as_usize(), None);
+        assert_eq!(Json::n(1.5).as_usize(), None);
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::s("x").as_f64(), None);
     }
 }

@@ -1,14 +1,16 @@
 //! Cross-module integration tests: NDA → actions → MCTS → partitioner →
-//! interpreter, end to end on the model zoo (scaled configurations), plus
-//! method-comparison sanity on the experiment grid.
+//! interpreter, end to end on the model zoo (scaled configurations) via
+//! the session API, plus method-comparison sanity on the experiment grid
+//! and the legacy-shim compatibility paths.
 
-use toast::baselines::{run_method, Method};
+use toast::api::{CompiledModel, MctsStrategy, Solution};
+use toast::baselines::Method;
 use toast::coordinator::experiments::{run_grid, BenchScale};
 use toast::cost::CostModel;
 use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
 use toast::models::ModelKind;
 use toast::nda::Nda;
-use toast::search::{auto_partition, ActionSpaceConfig, SearchConfig};
+use toast::search::{ActionSpaceConfig, SearchConfig};
 use toast::sharding::{partition, validate_spec, ShardingSpec};
 
 fn cost_model() -> CostModel {
@@ -23,22 +25,35 @@ fn loose_actions() -> ActionSpaceConfig {
     ActionSpaceConfig { min_color_dims: 1, ..Default::default() }
 }
 
+/// A quick MCTS session against a compiled model (the old
+/// `auto_partition` call sites, restaged through the session API).
+fn quick_session(compiled: &CompiledModel, mesh: &Mesh) -> Solution {
+    compiled
+        .partition(mesh)
+        .strategy(MctsStrategy { template: quick_search() })
+        .action_config(loose_actions())
+        .budget(120)
+        .seed(3)
+        .run()
+        .expect("session runs")
+}
+
 /// The flagship invariant: every spec TOAST finds partitions into a
 /// device-local program that computes the same numbers as the original.
 #[test]
 fn toast_specs_are_semantics_preserving_across_model_zoo() {
     for kind in [ModelKind::Mlp, ModelKind::Attention, ModelKind::Gns, ModelKind::Itx] {
-        let func = kind.build_scaled();
+        let compiled = CompiledModel::from_kind(kind, false).unwrap();
         let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
-        let out = auto_partition(&func, &mesh, &cost_model(), &loose_actions(), &quick_search());
-        let v = validate_spec(&func, &out.spec, &mesh, 7)
+        let sol = quick_session(&compiled, &mesh);
+        let v = validate_spec(compiled.func(), &sol.spec, &mesh, 7)
             .unwrap_or_else(|e| panic!("{}: {e:#}", kind.name()));
         assert!(
             v.max_abs_diff < 5e-2,
             "{}: diff {} too large (relative cost {})",
             kind.name(),
             v.max_abs_diff,
-            out.relative
+            sol.relative
         );
     }
 }
@@ -47,19 +62,19 @@ fn toast_specs_are_semantics_preserving_across_model_zoo() {
 fn transformer_training_step_partition_validates() {
     // The tiny transformer is the heaviest interpreter workload; validate
     // the searched spec numerically.
-    let func = ModelKind::T2B.build_scaled();
+    let compiled = CompiledModel::from_kind(ModelKind::T2B, false).unwrap();
     let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
-    let out = auto_partition(&func, &mesh, &cost_model(), &loose_actions(), &quick_search());
-    let v = validate_spec(&func, &out.spec, &mesh, 11).unwrap();
+    let sol = quick_session(&compiled, &mesh);
+    let v = validate_spec(compiled.func(), &sol.spec, &mesh, 11).unwrap();
     assert!(v.max_abs_diff < 5e-2, "diff {}", v.max_abs_diff);
 }
 
 #[test]
 fn unet_partition_validates() {
-    let func = ModelKind::UNet.build_scaled();
+    let compiled = CompiledModel::from_kind(ModelKind::UNet, false).unwrap();
     let mesh = Mesh::grid(&[("data", 2)]);
-    let out = auto_partition(&func, &mesh, &cost_model(), &loose_actions(), &quick_search());
-    let v = validate_spec(&func, &out.spec, &mesh, 13).unwrap();
+    let sol = quick_session(&compiled, &mesh);
+    let v = validate_spec(compiled.func(), &sol.spec, &mesh, 13).unwrap();
     assert!(v.max_abs_diff < 5e-2, "diff {}", v.max_abs_diff);
 }
 
@@ -69,12 +84,12 @@ fn unet_partition_validates() {
 #[test]
 fn searched_specs_symbolic_cost_matches_oracle() {
     for kind in [ModelKind::Mlp, ModelKind::Attention, ModelKind::Gns] {
-        let func = kind.build_scaled();
+        let compiled = CompiledModel::from_kind(kind, false).unwrap();
         let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
         let model = cost_model();
-        let out = auto_partition(&func, &mesh, &model, &loose_actions(), &quick_search());
+        let sol = quick_session(&compiled, &mesh);
         let diff =
-            toast::sharding::validate_symbolic_cost(&func, &out.spec, &mesh, &model)
+            toast::sharding::validate_symbolic_cost(compiled.func(), &sol.spec, &mesh, &model)
                 .unwrap_or_else(|e| panic!("{}: {e:#}", kind.name()));
         assert!(diff < 1e-6, "{}: symbolic/oracle divergence {diff}", kind.name());
     }
@@ -125,16 +140,24 @@ fn method_grid_produces_finite_costs() {
 }
 
 /// TOAST should never lose badly to AutoMap/Alpa on the bench models —
-/// the paper's headline (§5.2), at reduced scale.
+/// the paper's headline (§5.2), at reduced scale. One compiled model
+/// serves all three sessions.
 #[test]
 fn toast_at_least_matches_automated_baselines_on_gns() {
-    let func = ModelKind::Gns.build_scaled();
+    let compiled = CompiledModel::from_kind(ModelKind::Gns, false).unwrap();
     let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
-    let model = cost_model();
-    let toast =
-        run_method(Method::Toast, ModelKind::Gns, &func, &mesh, &model, 150, 3);
+    let run = |m: Method| {
+        compiled
+            .partition(&mesh)
+            .method(m)
+            .budget(150)
+            .seed(3)
+            .run()
+            .unwrap_or_else(|e| panic!("{}: {e:#}", m.name()))
+    };
+    let toast = run(Method::Toast);
     for m in [Method::Alpa, Method::AutoMap] {
-        let b = run_method(m, ModelKind::Gns, &func, &mesh, &model, 150, 3);
+        let b = run(m);
         assert!(
             toast.relative <= b.relative * 1.15,
             "TOAST {} vs {} {}",
@@ -145,9 +168,40 @@ fn toast_at_least_matches_automated_baselines_on_gns() {
     }
 }
 
-/// The partition service handles a mixed workload concurrently.
+/// The deprecated one-call shims still work (compat gate for
+/// out-of-tree callers). Specs are not compared across calls — parallel
+/// MCTS rollouts race benignly, so only single-threaded runs are
+/// bit-deterministic — but every shim must produce a valid, finite,
+/// numerically correct outcome.
+#[test]
+#[allow(deprecated)]
+fn legacy_shims_still_work() {
+    let func = ModelKind::Mlp.build_scaled();
+    let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
+    let model = cost_model();
+    for method in Method::all() {
+        let r = toast::baselines::run_method(method, ModelKind::Mlp, &func, &mesh, &model, 60, 3);
+        assert!(r.relative.is_finite(), "{}: {}", method.name(), r.relative);
+        let v = validate_spec(&func, &r.spec, &mesh, 7).unwrap();
+        assert!(v.max_abs_diff < 5e-2, "{}: diff {}", method.name(), v.max_abs_diff);
+    }
+
+    let out = toast::search::auto_partition(
+        &func,
+        &mesh,
+        &model,
+        &ActionSpaceConfig { min_color_dims: 4, ..Default::default() },
+        &SearchConfig { budget: 60, seed: 3, ..Default::default() },
+    );
+    assert!(out.relative.is_finite());
+    assert!(validate_spec(&func, &out.spec, &mesh, 9).unwrap().max_abs_diff < 5e-2);
+}
+
+/// The partition service handles a mixed workload concurrently, with
+/// the trust-but-verify gate replaying every accepted spec.
 #[test]
 fn service_runs_mixed_workload() {
+    use toast::api::ModelSource;
     use toast::coordinator::{PartitionRequest, Service};
     let svc = Service::start(3);
     let mut n = 0;
@@ -155,24 +209,28 @@ fn service_runs_mixed_workload() {
         for method in [Method::Toast, Method::Manual] {
             svc.submit(PartitionRequest {
                 id: 0,
-                model: kind,
-                paper_scale: false,
-                mesh: vec![("data".into(), 2), ("model".into(), 2)],
+                model: ModelSource::zoo(kind),
+                mesh: Mesh::grid(&[("data", 2), ("model", 2)]),
                 hardware: HardwareKind::A100,
                 method,
                 budget: 60,
                 seed: 2,
-            });
+                verify: true,
+            })
+            .expect("service accepts requests");
             n += 1;
         }
     }
     let mut ok = 0;
     for _ in 0..n {
         let resp = svc.responses.recv().unwrap();
-        assert!(resp.result.is_ok());
+        let sol = resp.result.as_ref().expect("job succeeds");
+        assert!(sol.validation.as_ref().expect("verified").pass);
         ok += 1;
     }
     assert_eq!(ok, n);
+    let snap = svc.metrics.snapshot();
+    assert!(snap.contains(&format!("verified={n}")), "{snap}");
     svc.shutdown();
 }
 

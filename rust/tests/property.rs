@@ -485,3 +485,96 @@ fn prop_replicated_spmd_matches_single_device() {
         }
     }
 }
+
+/// P10: the wire format is lossless — random `ShardingSpec` × `Mesh` ×
+/// `Solution` values round-trip through JSON to *equal* values, and a
+/// reloaded spec prices to the identical symbolic cost (so a spec that
+/// crossed a process boundary is indistinguishable from the original,
+/// the invariant the trust-but-verify service relies on).
+#[test]
+fn prop_wire_roundtrip_p10() {
+    use toast::api::{ModelSource, Solution, ValidationRecord};
+    use toast::util::json::Json;
+    let mut rng = Rng::new(0xF10);
+    let meshes = [
+        Mesh::grid(&[("d", 2)]),
+        Mesh::grid(&[("d", 4)]),
+        Mesh::grid(&[("a", 2), ("b", 2)]),
+        Mesh::grid(&[("a", 1), ("b", 2), ("c", 2)]),
+    ];
+    let model = cost_model_for_wire();
+    for case in 0..60 {
+        let mesh = &meshes[case % meshes.len()];
+        let func = random_func(&mut rng);
+        let spec = random_spec(&func, mesh, &mut rng);
+
+        // -- the function itself survives the wire --
+        let fj = toast::api::wire::func_to_json(&func).render();
+        let func_back =
+            toast::api::wire::func_from_json(&Json::parse(&fj).unwrap()).unwrap();
+        assert_eq!(func_back, func, "case {case}: Func drifted through JSON");
+
+        // -- mesh and spec round-trip exactly --
+        let mesh_back =
+            Mesh::from_json(&Json::parse(&mesh.to_json().render()).unwrap()).unwrap();
+        assert_eq!(&mesh_back, mesh, "case {case}: Mesh drifted");
+        let spec_back =
+            ShardingSpec::from_json(&Json::parse(&spec.to_json().render()).unwrap()).unwrap();
+        assert_eq!(spec_back, spec, "case {case}: ShardingSpec drifted");
+
+        // -- identical symbolic cost on both sides of the wire --
+        let sym = SymbolicEvaluator::new(&func, mesh, &model);
+        let (before, after) = (sym.evaluate(&spec), sym.evaluate(&spec_back));
+        match (before, after) {
+            (Ok((a, _)), Ok((b, _))) => assert_eq!(
+                a.runtime_s.to_bits(),
+                b.runtime_s.to_bits(),
+                "case {case}: symbolic cost changed across the wire"
+            ),
+            (Err(_), Err(_)) => {} // both reject identically
+            (a, b) => panic!(
+                "case {case}: evaluator verdict changed across the wire: {:?} vs {:?}",
+                a.is_ok(),
+                b.is_ok()
+            ),
+        }
+
+        // -- a full Solution artifact (inline model) round-trips -- 
+        let (cost, base) = match (
+            partition(&func, &spec, mesh),
+            partition(&func, &ShardingSpec::unsharded(&func), mesh),
+        ) {
+            (Ok((local, _)), Ok((ubase, _))) => {
+                (model.evaluate(&local, mesh), model.evaluate(&ubase, mesh))
+            }
+            _ => continue, // partitioner rejects this spec: nothing to package
+        };
+        let sol = Solution {
+            model: ModelSource::Inline(func.clone()),
+            mesh: mesh.clone(),
+            hardware: HardwareKind::A100,
+            strategy: "TOAST".to_string(),
+            spec,
+            relative: model.relative(&cost, &base),
+            oom: !model.fits(&cost),
+            cost,
+            base,
+            evals: case,
+            search_time_s: 0.125 * case as f64,
+            validation: (case % 3 == 0).then(|| ValidationRecord {
+                max_rel_err: 1.5e-5,
+                max_abs_diff: 3.0e-6,
+                collectives: case % 7,
+                tol: 1e-4,
+                pass: true,
+                seed: 7,
+            }),
+        };
+        let back = Solution::from_json_str(&sol.to_json_string()).unwrap();
+        assert_eq!(back, sol, "case {case}: Solution drifted through JSON");
+    }
+}
+
+fn cost_model_for_wire() -> CostModel {
+    CostModel::new(HardwareProfile::new(HardwareKind::A100))
+}
