@@ -1,0 +1,129 @@
+//! Distributed partition service demo — the whole socket story in one
+//! process, deterministic enough for CI:
+//!
+//! 1. a `TcpServer` on an ephemeral port (no local worker threads),
+//! 2. two real worker loops (`run_worker_on`) on background threads —
+//!    the same compiled-model-cache + trust-but-verify path the
+//!    `toast worker --connect` process runs,
+//! 3. one deliberately crashing worker that accepts a job and dies
+//!    mid-request, proving heartbeat/EOF liveness detection and the
+//!    front-of-queue requeue,
+//! 4. a `ServiceClient` that submits a zoo workload, collects every
+//!    verified solution, and checks the status counters over the wire.
+//!
+//! Exits nonzero if any response is missing, unverified, or the requeue
+//! accounting is off — CI runs this as an executable spec of the
+//! transport's guarantees.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use toast::api::wire::Message;
+use toast::baselines::Method;
+use toast::coordinator::service::default_request;
+use toast::coordinator::transport::{read_message, run_worker_on, write_message, MAX_FRAME_LEN};
+use toast::coordinator::{
+    Service, ServiceClient, ServiceConfig, TcpServer, TcpServerConfig, WorkerOptions,
+};
+use toast::models::ModelKind;
+
+fn worker_opts(name: &str) -> WorkerOptions {
+    WorkerOptions {
+        name: name.to_string(),
+        service: ServiceConfig { workers: 0, search_threads: 1, ..Default::default() },
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // -- server ------------------------------------------------------------
+    let svc = Service::start_with(ServiceConfig {
+        workers: 0, // every worker arrives over the socket
+        search_threads: 1,
+        ..Default::default()
+    });
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let server =
+        TcpServer::start(svc, listener, TcpServerConfig { dead_after: Duration::from_secs(2) })?;
+    let addr = server.local_addr();
+    println!("server listening on {addr}");
+
+    // -- a worker that will crash mid-request ------------------------------
+    let crasher = std::thread::spawn(move || -> anyhow::Result<u64> {
+        let stream = TcpStream::connect(addr)?;
+        let mut rd = stream.try_clone()?;
+        let mut wr = stream;
+        write_message(&mut wr, &Message::Register { name: "crasher".into() })?;
+        let Some(Message::Registered { worker_id }) = read_message(&mut rd, MAX_FRAME_LEN)?
+        else {
+            anyhow::bail!("no registration ack");
+        };
+        // Take exactly one job, then die without answering.
+        loop {
+            match read_message(&mut rd, MAX_FRAME_LEN)? {
+                Some(Message::Job(req)) => {
+                    println!("crasher (worker #{worker_id}) took request {} and died", req.id);
+                    return Ok(req.id);
+                }
+                Some(_) => continue,
+                None => anyhow::bail!("server closed before dispatching"),
+            }
+        }
+    });
+
+    // -- client: submit the workload while only the crasher is attached ----
+    let mut client = ServiceClient::connect(&addr.to_string())?;
+    let workload: Vec<(ModelKind, Method)> = [ModelKind::Mlp, ModelKind::Attention, ModelKind::Itx]
+        .into_iter()
+        .flat_map(|m| [(m, Method::Toast), (m, Method::Manual)])
+        .collect();
+    let mut expected = Vec::new();
+    for &(model, method) in &workload {
+        let mut req = default_request(model, method);
+        req.budget = 100;
+        req.seed = 1;
+        expected.push(client.submit(req)?);
+    }
+    println!("submitted {} requests", expected.len());
+
+    // The crash happens with a request in flight...
+    let crashed_id = crasher.join().expect("crasher thread")?;
+    println!("request {crashed_id} was in flight when its worker died");
+
+    // ...and two honest workers mop everything up, crashed job included.
+    let survivors: Vec<_> = (0..2)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).expect("connect worker");
+                run_worker_on(stream, &worker_opts(&format!("survivor-{i}"))).expect("worker loop");
+            })
+        })
+        .collect();
+
+    let mut verified = 0;
+    for _ in 0..expected.len() {
+        let resp = client.recv_response()?;
+        let sol = resp.result.map_err(|e| anyhow::anyhow!("job {} failed: {e:#}", resp.id))?;
+        let pass = sol.validation.as_ref().map(|v| v.pass).unwrap_or(false);
+        anyhow::ensure!(pass, "job {} arrived unverified", resp.id);
+        verified += 1;
+        println!("job {:>2}: {}", resp.id, sol.summarize());
+    }
+
+    let report = client.status()?;
+    println!("status: {}", report.render_line());
+    anyhow::ensure!(verified == expected.len(), "missing responses");
+    anyhow::ensure!(report.requeued >= 1, "the crash must have requeued a request");
+    anyhow::ensure!(report.failed == 0, "no request may be lost or failed");
+    anyhow::ensure!(report.queued == 0 && report.in_flight == 0, "queue must drain");
+
+    server.shutdown();
+    for s in survivors {
+        s.join().expect("survivor exits cleanly on shutdown");
+    }
+    println!(
+        "OK — {} requests served over the socket, {} requeued after a worker crash, all verified",
+        expected.len(),
+        report.requeued
+    );
+    Ok(())
+}

@@ -130,6 +130,116 @@ impl ModelSource {
 }
 
 // ---------------------------------------------------------------------------
+// Partition requests / responses — the service's wire-level job unit
+// ---------------------------------------------------------------------------
+
+/// A partitioning request: the job unit the coordinator's service queues
+/// and dispatches. Model-agnostic (a zoo reference *or* inline IR) and
+/// fully serializable, so it crosses process boundaries unchanged —
+/// the in-process worker threads and the `toast worker` processes
+/// consume the exact same type.
+#[derive(Clone, Debug)]
+pub struct PartitionRequest {
+    pub id: u64,
+    /// The model to partition: zoo reference or inline IR.
+    pub model: ModelSource,
+    pub mesh: Mesh,
+    pub hardware: HardwareKind,
+    pub method: Method,
+    /// Search budget (state evaluations).
+    pub budget: usize,
+    pub seed: u64,
+    /// Opt out of the trust-but-verify replay for this request (the
+    /// service may still skip it for paper-scale models).
+    pub verify: bool,
+}
+
+impl PartitionRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", wire::u64_to_json(self.id)),
+            ("model", self.model.to_json()),
+            ("mesh", self.mesh.to_json()),
+            ("hardware", Json::s(self.hardware.name())),
+            ("method", Json::s(self.method.name())),
+            ("budget", Json::n(self.budget as f64)),
+            ("seed", wire::u64_to_json(self.seed)),
+            ("verify", Json::Bool(self.verify)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<PartitionRequest> {
+        let ctx = "partition request";
+        Ok(PartitionRequest {
+            id: wire::u64_field(j, "id", ctx)?,
+            model: ModelSource::from_json(wire::field(j, "model", ctx)?)?,
+            mesh: Mesh::from_json(wire::field(j, "mesh", ctx)?)?,
+            hardware: wire::str_field(j, "hardware", ctx)?
+                .parse()
+                .map_err(|e: String| anyhow!(e))?,
+            method: wire::str_field(j, "method", ctx)?
+                .parse()
+                .map_err(|e: String| anyhow!(e))?,
+            budget: wire::usize_field(j, "budget", ctx)?,
+            seed: wire::u64_field(j, "seed", ctx)?,
+            verify: wire::bool_field(j, "verify", ctx)?,
+        })
+    }
+}
+
+/// A completed partitioning job.
+pub struct PartitionResponse {
+    pub id: u64,
+    pub request: PartitionRequest,
+    pub result: anyhow::Result<Solution>,
+    /// True when the trust-but-verify gate rejected the strategy's spec
+    /// (`result` then holds the rejection error). Carried on the wire so
+    /// the server can account rejections that happened inside a worker
+    /// process exactly like ones from its own threads.
+    pub rejected: bool,
+}
+
+impl PartitionResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", wire::u64_to_json(self.id)),
+            ("request", self.request.to_json()),
+            (
+                "result",
+                match &self.result {
+                    Ok(sol) => Json::obj(vec![("ok", sol.to_json())]),
+                    Err(e) => Json::obj(vec![("err", Json::s(format!("{e:#}")))]),
+                },
+            ),
+            ("rejected", Json::Bool(self.rejected)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<PartitionResponse> {
+        let ctx = "partition response";
+        let request = PartitionRequest::from_json(wire::field(j, "request", ctx)?)?;
+        let rj = wire::field(j, "result", ctx)?;
+        let result = if let Some(ok) = rj.get("ok") {
+            Ok(Solution::from_json(ok)?)
+        } else if let Some(err) = rj.get("err") {
+            Err(anyhow!(err
+                .as_str()
+                .ok_or_else(|| anyhow!("{ctx}: 'err' is not a string"))?
+                .to_string()))
+        } else {
+            anyhow::bail!("{ctx}: result needs 'ok' or 'err'");
+        };
+        Ok(PartitionResponse {
+            id: wire::u64_field(j, "id", ctx)?,
+            request,
+            result,
+            // Absent in pre-socket artifacts; absence means "not rejected".
+            rejected: j.get("rejected").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // CompiledModel
 // ---------------------------------------------------------------------------
 

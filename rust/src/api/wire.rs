@@ -502,6 +502,201 @@ pub fn func_from_json(j: &Json) -> crate::Result<Func> {
     Ok(Func { name, params, instrs, results })
 }
 
+// ---- service wire messages ------------------------------------------------
+
+use super::{PartitionRequest, PartitionResponse};
+
+/// The counters a server reports for a `status` request: the
+/// coordinator's metrics flattened to plain numbers so they survive the
+/// wire without dragging the metrics type across the process boundary.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatusReport {
+    pub requests: u64,
+    /// Accepted but not yet dispatched to any worker.
+    pub queued: u64,
+    /// Dispatched to a worker, response not yet received.
+    pub in_flight: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub verified: u64,
+    pub rejected: u64,
+    /// In-flight requests put back on the queue after their worker died.
+    pub requeued: u64,
+    /// Workers currently attached (threads or live socket connections).
+    pub workers: u64,
+    pub evaluations: u64,
+}
+
+impl StatusReport {
+    const FIELDS: [&'static str; 10] = [
+        "requests",
+        "queued",
+        "in_flight",
+        "completed",
+        "failed",
+        "verified",
+        "rejected",
+        "requeued",
+        "workers",
+        "evaluations",
+    ];
+
+    fn values(&self) -> [u64; 10] {
+        [
+            self.requests,
+            self.queued,
+            self.in_flight,
+            self.completed,
+            self.failed,
+            self.verified,
+            self.rejected,
+            self.requeued,
+            self.workers,
+            self.evaluations,
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            Self::FIELDS
+                .iter()
+                .zip(self.values())
+                .map(|(k, v)| (k.to_string(), u64_to_json(v)))
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<StatusReport> {
+        let ctx = "status report";
+        let g = |key| u64_field(j, key, ctx);
+        Ok(StatusReport {
+            requests: g("requests")?,
+            queued: g("queued")?,
+            in_flight: g("in_flight")?,
+            completed: g("completed")?,
+            failed: g("failed")?,
+            verified: g("verified")?,
+            rejected: g("rejected")?,
+            requeued: g("requeued")?,
+            workers: g("workers")?,
+            evaluations: g("evaluations")?,
+        })
+    }
+
+    /// One log line, `requests=.. queued=.. ...` — what `toast submit
+    /// --status` prints and what the CI service job greps.
+    pub fn render_line(&self) -> String {
+        Self::FIELDS
+            .iter()
+            .zip(self.values())
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// A message on the coordinator's socket protocol. One message per
+/// frame; see [`crate::coordinator::transport`] for the frame layout.
+///
+/// Directions: workers send `Register`/`Heartbeat`/`Result` and receive
+/// `Registered`/`Job`; clients send `Submit`/`Status` and receive
+/// `Submitted`/`Response`/`StatusReport`. `Error` flows server→peer when
+/// a request cannot be honored (and poisons only that connection).
+// Payload variants dominate the control variants by design; messages are
+// transient (decoded, dispatched, dropped), so boxing would buy nothing.
+#[allow(clippy::large_enum_variant)]
+pub enum Message {
+    /// Worker → server: join the worker pool.
+    Register { name: String },
+    /// Server → worker: registration ack with the assigned id.
+    Registered { worker_id: u64 },
+    /// Worker → server: liveness beacon (sent even mid-search).
+    Heartbeat,
+    /// Server → worker: run this request.
+    Job(PartitionRequest),
+    /// Worker → server: the finished job.
+    Result(PartitionResponse),
+    /// Client → server: enqueue a request (the server assigns the id).
+    Submit(PartitionRequest),
+    /// Server → client: submission ack with the assigned id.
+    Submitted { id: u64 },
+    /// Server → client: a completed response for one of its submissions.
+    Response(PartitionResponse),
+    /// Client → server: ask for the metrics counters.
+    Status,
+    /// Server → client: the counters.
+    StatusReport(StatusReport),
+    /// Protocol-level failure report.
+    Error { message: String },
+}
+
+impl Message {
+    /// Stable tag naming the variant (the `"msg"` field on the wire).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Message::Register { .. } => "register",
+            Message::Registered { .. } => "registered",
+            Message::Heartbeat => "heartbeat",
+            Message::Job(_) => "job",
+            Message::Result(_) => "result",
+            Message::Submit(_) => "submit",
+            Message::Submitted { .. } => "submitted",
+            Message::Response(_) => "response",
+            Message::Status => "status",
+            Message::StatusReport(_) => "status_report",
+            Message::Error { .. } => "error",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("msg".to_string(), Json::s(self.tag()))];
+        match self {
+            Message::Register { name } => fields.push(("name".into(), Json::s(name.clone()))),
+            Message::Registered { worker_id } => {
+                fields.push(("worker_id".into(), u64_to_json(*worker_id)))
+            }
+            Message::Heartbeat | Message::Status => {}
+            Message::Job(req) | Message::Submit(req) => {
+                fields.push(("request".into(), req.to_json()))
+            }
+            Message::Result(resp) | Message::Response(resp) => {
+                fields.push(("response".into(), resp.to_json()))
+            }
+            Message::Submitted { id } => fields.push(("id".into(), u64_to_json(*id))),
+            Message::StatusReport(report) => {
+                fields.push(("report".into(), report.to_json()))
+            }
+            Message::Error { message } => {
+                fields.push(("message".into(), Json::s(message.clone())))
+            }
+        }
+        Json::Obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Message> {
+        let ctx = "message";
+        let tag = str_field(j, "msg", ctx)?;
+        Ok(match tag {
+            "register" => Message::Register { name: str_field(j, "name", ctx)?.to_string() },
+            "registered" => Message::Registered { worker_id: u64_field(j, "worker_id", ctx)? },
+            "heartbeat" => Message::Heartbeat,
+            "job" => Message::Job(PartitionRequest::from_json(field(j, "request", ctx)?)?),
+            "result" => Message::Result(PartitionResponse::from_json(field(j, "response", ctx)?)?),
+            "submit" => Message::Submit(PartitionRequest::from_json(field(j, "request", ctx)?)?),
+            "submitted" => Message::Submitted { id: u64_field(j, "id", ctx)? },
+            "response" => {
+                Message::Response(PartitionResponse::from_json(field(j, "response", ctx)?)?)
+            }
+            "status" => Message::Status,
+            "status_report" => {
+                Message::StatusReport(StatusReport::from_json(field(j, "report", ctx)?)?)
+            }
+            "error" => Message::Error { message: str_field(j, "message", ctx)?.to_string() },
+            other => bail!("unknown message tag '{other}'"),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -596,5 +791,64 @@ mod tests {
                 opkind_from_json(&Json::parse(&opkind_to_json(&k).render()).unwrap()).unwrap();
             assert_eq!(back, k);
         }
+    }
+
+    #[test]
+    fn status_report_roundtrips_and_renders() {
+        let report = StatusReport {
+            requests: 9,
+            queued: 1,
+            in_flight: 2,
+            completed: 5,
+            failed: 1,
+            verified: 5,
+            rejected: 0,
+            requeued: 3,
+            workers: 4,
+            evaluations: 12345,
+        };
+        let back =
+            StatusReport::from_json(&Json::parse(&report.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back, report);
+        let line = report.render_line();
+        assert!(line.contains("requeued=3"), "{line}");
+        assert!(line.contains("workers=4"), "{line}");
+    }
+
+    #[test]
+    fn control_messages_roundtrip() {
+        let msgs = [
+            Message::Register { name: "w1".into() },
+            Message::Registered { worker_id: u64::MAX }, // string-encoded id
+            Message::Heartbeat,
+            Message::Submitted { id: 42 },
+            Message::Status,
+            Message::StatusReport(StatusReport { requests: 7, ..Default::default() }),
+            Message::Error { message: "boom \"quoted\"".into() },
+        ];
+        for msg in msgs {
+            let back = Message::from_json(&Json::parse(&msg.to_json().render()).unwrap()).unwrap();
+            assert_eq!(back.tag(), msg.tag());
+            match (&msg, &back) {
+                (Message::Register { name: a }, Message::Register { name: b }) => {
+                    assert_eq!(a, b)
+                }
+                (
+                    Message::Registered { worker_id: a },
+                    Message::Registered { worker_id: b },
+                ) => assert_eq!(a, b),
+                (Message::Submitted { id: a }, Message::Submitted { id: b }) => {
+                    assert_eq!(a, b)
+                }
+                (Message::StatusReport(a), Message::StatusReport(b)) => assert_eq!(a, b),
+                (Message::Error { message: a }, Message::Error { message: b }) => {
+                    assert_eq!(a, b)
+                }
+                (Message::Heartbeat, Message::Heartbeat)
+                | (Message::Status, Message::Status) => {}
+                _ => unreachable!("variant drifted through the wire"),
+            }
+        }
+        assert!(Message::from_json(&Json::parse(r#"{"msg":"warp"}"#).unwrap()).is_err());
     }
 }

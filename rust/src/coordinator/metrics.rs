@@ -1,5 +1,14 @@
 //! Service metrics: lock-free counters + latency aggregation.
+//!
+//! Both transports account through the same two choke points so the
+//! counters cannot drift between modes: [`Metrics::record_dispatch`]
+//! when a request leaves the queue for a worker (thread or socket), and
+//! [`Metrics::record_response`] when the worker's response is received.
+//! [`Metrics::report`] flattens everything into the serializable
+//! [`StatusReport`] a `status` request returns over the wire.
 
+use crate::api::wire::StatusReport;
+use crate::api::PartitionResponse;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
@@ -12,6 +21,14 @@ pub struct Metrics {
     pub oom_solutions: AtomicU64,
     /// Requests accepted but not yet picked up by a worker (queue depth).
     pub queued: AtomicU64,
+    /// Requests dispatched to a worker whose response has not arrived.
+    pub in_flight: AtomicU64,
+    /// In-flight requests put back on the queue after their worker died
+    /// (socket transport: heartbeat timeout, EOF, or a write failure).
+    pub requeued: AtomicU64,
+    /// Workers currently attached: in-process threads plus registered
+    /// socket workers that are still alive.
+    pub workers: AtomicU64,
     /// Solutions that passed the trust-but-verify differential replay.
     pub verified: AtomicU64,
     /// Solutions *rejected* by the verify gate (spec diverged from the
@@ -23,30 +40,84 @@ pub struct Metrics {
     pub evaluations: AtomicU64,
 }
 
+/// Saturating decrement: gauges must never underflow into u64::MAX even
+/// if an accounting bug unbalances an inc/dec pair.
+fn sat_dec(gauge: &AtomicU64) {
+    let _ = gauge.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |g| {
+        Some(g.saturating_sub(1))
+    });
+}
+
 impl Metrics {
     pub fn record_request(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// A request is about to enter the queue. Called *before* the send so
-    /// a fast worker's matching [`Metrics::record_dequeue`] can never
+    /// A request is about to enter the queue. Called *before* the push so
+    /// a fast worker's matching [`Metrics::record_dispatch`] can never
     /// observe the queue gauge at 0 and leave it permanently inflated.
     pub fn record_enqueue(&self) {
         self.queued.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// A worker picked a request off the queue.
-    pub fn record_dequeue(&self) {
-        // Saturating: a dequeue without a matching enqueue is a bug, but
-        // metrics must never underflow into u64::MAX.
-        let _ = self.queued.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |q| {
-            Some(q.saturating_sub(1))
-        });
+    /// Undo of [`Metrics::record_enqueue`] for a submit that failed
+    /// before the request ever reached the queue.
+    pub fn record_unqueue(&self) {
+        sat_dec(&self.queued);
+    }
+
+    /// A worker (thread or socket) took a request off the queue.
+    pub fn record_dispatch(&self) {
+        sat_dec(&self.queued);
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A dispatched request went back on the queue because its worker
+    /// died before answering.
+    pub fn record_requeue(&self) {
+        self.requeued.fetch_add(1, Ordering::Relaxed);
+        sat_dec(&self.in_flight);
+        self.queued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_worker_connected(&self) {
+        self.workers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_worker_lost(&self) {
+        sat_dec(&self.workers);
     }
 
     /// Requests accepted but not yet picked up by a worker.
     pub fn queue_depth(&self) -> u64 {
         self.queued.load(Ordering::Relaxed)
+    }
+
+    /// The single response-side accounting path, shared by the
+    /// in-process worker threads and the socket server: completion or
+    /// failure, verification verdicts, search time and evaluation
+    /// throughput all come off the response itself, so a worker process
+    /// needs no metrics channel of its own.
+    pub fn record_response(&self, resp: &PartitionResponse) {
+        sat_dec(&self.in_flight);
+        match &resp.result {
+            Ok(sol) => {
+                self.record_completion(
+                    Duration::from_secs_f64(sol.search_time_s),
+                    sol.evals as u64,
+                    sol.oom,
+                );
+                if sol.validation.as_ref().is_some_and(|v| v.pass) {
+                    self.record_verified();
+                }
+            }
+            Err(_) => {
+                self.record_failure();
+                if resp.rejected {
+                    self.record_rejected();
+                }
+            }
+        }
     }
 
     pub fn record_completion(&self, search: Duration, evals: u64, oom: bool) {
@@ -78,16 +149,36 @@ impl Metrics {
         self.search_us_total.load(Ordering::Relaxed) as f64 / 1e3 / done as f64
     }
 
+    /// The serializable counter snapshot a `status` request answers with.
+    pub fn report(&self) -> StatusReport {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        StatusReport {
+            requests: g(&self.requests),
+            queued: g(&self.queued),
+            in_flight: g(&self.in_flight),
+            completed: g(&self.completed),
+            failed: g(&self.failed),
+            verified: g(&self.verified),
+            rejected: g(&self.rejected),
+            requeued: g(&self.requeued),
+            workers: g(&self.workers),
+            evaluations: g(&self.evaluations),
+        }
+    }
+
     pub fn snapshot(&self) -> String {
         format!(
-            "requests={} queued={} completed={} failed={} verified={} rejected={} oom={} \
-             mean_search={:.1}ms evals={}",
+            "requests={} queued={} in_flight={} completed={} failed={} verified={} \
+             rejected={} requeued={} workers={} oom={} mean_search={:.1}ms evals={}",
             self.requests.load(Ordering::Relaxed),
             self.queue_depth(),
+            self.in_flight.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.verified.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
+            self.requeued.load(Ordering::Relaxed),
+            self.workers.load(Ordering::Relaxed),
             self.oom_solutions.load(Ordering::Relaxed),
             self.mean_search_ms(),
             self.evaluations.load(Ordering::Relaxed),
@@ -107,9 +198,10 @@ mod tests {
         m.record_enqueue();
         m.record_request();
         assert_eq!(m.queue_depth(), 2);
-        m.record_dequeue();
-        m.record_dequeue();
+        m.record_dispatch();
+        m.record_dispatch();
         assert_eq!(m.queue_depth(), 0);
+        assert_eq!(m.in_flight.load(Ordering::Relaxed), 2);
         m.record_completion(Duration::from_millis(10), 100, false);
         m.record_completion(Duration::from_millis(30), 200, true);
         m.record_failure();
@@ -125,9 +217,40 @@ mod tests {
     }
 
     #[test]
-    fn queue_depth_never_underflows() {
+    fn requeue_moves_a_request_from_in_flight_back_to_the_queue() {
         let m = Metrics::default();
-        m.record_dequeue();
+        m.record_enqueue();
+        m.record_request();
+        m.record_dispatch();
         assert_eq!(m.queue_depth(), 0);
+        m.record_requeue();
+        assert_eq!(m.queue_depth(), 1);
+        assert_eq!(m.in_flight.load(Ordering::Relaxed), 0);
+        assert_eq!(m.requeued.load(Ordering::Relaxed), 1);
+        let report = m.report();
+        assert_eq!(report.requeued, 1);
+        assert_eq!(report.queued, 1);
+        assert_eq!(report.requests, 1);
+    }
+
+    #[test]
+    fn worker_gauge_tracks_connections() {
+        let m = Metrics::default();
+        m.record_worker_connected();
+        m.record_worker_connected();
+        m.record_worker_lost();
+        assert_eq!(m.report().workers, 1);
+        m.record_worker_lost();
+        m.record_worker_lost(); // saturates at 0
+        assert_eq!(m.report().workers, 0);
+    }
+
+    #[test]
+    fn gauges_never_underflow() {
+        let m = Metrics::default();
+        m.record_dispatch();
+        m.record_unqueue();
+        assert_eq!(m.queue_depth(), 0);
+        assert_eq!(m.in_flight.load(Ordering::Relaxed), 1);
     }
 }

@@ -1,5 +1,6 @@
-//! L3 coordinator: the partition service, its metrics, and the
-//! experiment runners that regenerate the paper's figures.
+//! L3 coordinator: the partition service, its two transports, its
+//! metrics, and the experiment runners that regenerate the paper's
+//! figures.
 //!
 //! TOAST is a compiler-side system, so the coordinator's job is a
 //! partition-request service: clients submit `(model-source, mesh,
@@ -7,14 +8,25 @@
 //! serialized `Func` — a worker pool resolves each to a shared
 //! [`crate::api::CompiledModel`] (analysis runs once per model, not per
 //! request), runs the strategy, and returns a serializable
-//! [`crate::api::Solution`]. Accepted specs are replayed through the
-//! differential harness before the service trusts them
-//! (trust-but-verify; see [`service`]). The CLI (`toast serve`,
-//! `toast partition`, `toast bench`) fronts this service.
+//! [`crate::api::PartitionResponse`]. Accepted specs are replayed
+//! through the differential harness before the service trusts them
+//! (trust-but-verify; see [`service`]).
+//!
+//! Two transports, one dispatch/verify path: the default in-process
+//! thread pool ([`Service`]) and the socket mode ([`transport`]) — a
+//! length-prefixed JSON wire protocol over TCP behind `toast serve
+//! --listen`, with workers as OS processes (`toast worker --connect`)
+//! and a submit/status client (`toast submit --connect`). Both pull the
+//! same [`service::JobQueue`], both run [`service::process_request`],
+//! and both account through [`metrics::Metrics::record_response`].
 
 pub mod experiments;
 pub mod metrics;
 pub mod service;
+pub mod transport;
 
 pub use experiments::{BenchScale, Experiment};
-pub use service::{PartitionRequest, PartitionResponse, Service, ServiceConfig};
+pub use service::{
+    JobQueue, ModelCache, PartitionRequest, PartitionResponse, Popped, Service, ServiceConfig,
+};
+pub use transport::{ServiceClient, TcpServer, TcpServerConfig, WorkerOptions};

@@ -1,312 +1,480 @@
-//! The partition service: a request queue with a worker-thread pool,
-//! rebuilt on the session API.
+//! The partition service: queue + dispatch, rebuilt so the in-process
+//! thread mode and the socket mode ([`super::transport`]) share one code
+//! path.
 //!
 //! Requests are *model-agnostic*: they carry a [`ModelSource`] — a zoo
 //! name the workers rebuild, or a fully serialized `Func` for models the
 //! service has never seen. Workers resolve each source to a shared
-//! [`CompiledModel`] (one NDA per distinct model, cached across requests
-//! and threads), run the requested strategy through the one
-//! [`crate::api::Strategy`] signature, and return a serializable
-//! [`Solution`].
+//! [`CompiledModel`] through a [`ModelCache`] (one NDA per distinct
+//! model, cached across requests and threads), run the requested
+//! strategy through the one [`crate::api::Strategy`] signature, and
+//! return a serializable [`PartitionResponse`].
 //!
-//! **Trust but verify**: before a solution is accepted, the service
+//! **One dispatch/verify path for both transports.** Jobs flow through
+//! the [`JobQueue`] whether a worker is a thread in this process or a
+//! `toast worker` process on the other end of a TCP socket; every worker
+//! — local or remote — executes [`process_request`] (compiled-model
+//! cache + strategy + trust-but-verify replay), and every response is
+//! accounted through [`Metrics::record_response`]. The transports differ
+//! only in how bytes move, so they cannot drift semantically.
+//!
+//! **Trust but verify**: before a solution is accepted, the worker
 //! replays its spec through [`crate::runtime::diff::differential_test`]
 //! against the interpreter oracle. A diverging spec is *rejected* —
-//! returned as a failure and counted in
-//! [`super::metrics::Metrics::rejected`] — so no caller ever receives an
-//! unverified sharding claim. (Paper-scale IR is exempt: executing it
-//! numerically would take hours; the exemption is recorded by the
-//! absence of a validation record on the solution.)
+//! returned as a failure, flagged on the response, and counted in
+//! [`Metrics::rejected`] — so no caller ever receives an unverified
+//! sharding claim. (Paper-scale IR is exempt: executing it numerically
+//! would take hours; the exemption is recorded by the absence of a
+//! validation record on the solution.)
 
 use super::metrics::Metrics;
-use crate::api::{validate_solution_spec, CompiledModel, ModelSource, Solution};
+use crate::api::{validate_solution_spec, CompiledModel, MctsStrategy, ModelSource, Solution};
 use crate::baselines::Method;
 use crate::mesh::{HardwareKind, Mesh};
 use crate::models::ModelKind;
-use crate::util::json::Json;
+use crate::search::SearchConfig;
 use anyhow::anyhow;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-/// A partitioning request.
-#[derive(Clone, Debug)]
-pub struct PartitionRequest {
-    pub id: u64,
-    /// The model to partition: zoo reference or inline IR.
-    pub model: ModelSource,
-    pub mesh: Mesh,
-    pub hardware: HardwareKind,
-    pub method: Method,
-    /// Search budget (state evaluations).
-    pub budget: usize,
-    pub seed: u64,
-    /// Opt out of the trust-but-verify replay for this request (the
-    /// service may still skip it for paper-scale models).
-    pub verify: bool,
-}
-
-impl PartitionRequest {
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("id", crate::api::wire::u64_to_json(self.id)),
-            ("model", self.model.to_json()),
-            ("mesh", self.mesh.to_json()),
-            ("hardware", Json::s(self.hardware.name())),
-            ("method", Json::s(self.method.name())),
-            ("budget", Json::n(self.budget as f64)),
-            ("seed", crate::api::wire::u64_to_json(self.seed)),
-            ("verify", Json::Bool(self.verify)),
-        ])
-    }
-
-    pub fn from_json(j: &Json) -> crate::Result<PartitionRequest> {
-        use crate::api::wire;
-        let ctx = "partition request";
-        Ok(PartitionRequest {
-            id: wire::u64_field(j, "id", ctx)?,
-            model: ModelSource::from_json(wire::field(j, "model", ctx)?)?,
-            mesh: Mesh::from_json(wire::field(j, "mesh", ctx)?)?,
-            hardware: wire::str_field(j, "hardware", ctx)?
-                .parse()
-                .map_err(|e: String| anyhow!(e))?,
-            method: wire::str_field(j, "method", ctx)?
-                .parse()
-                .map_err(|e: String| anyhow!(e))?,
-            budget: wire::usize_field(j, "budget", ctx)?,
-            seed: wire::u64_field(j, "seed", ctx)?,
-            verify: wire::bool_field(j, "verify", ctx)?,
-        })
-    }
-}
-
-/// A completed partitioning job.
-pub struct PartitionResponse {
-    pub id: u64,
-    pub request: PartitionRequest,
-    pub result: anyhow::Result<Solution>,
-}
-
-impl PartitionResponse {
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("id", crate::api::wire::u64_to_json(self.id)),
-            ("request", self.request.to_json()),
-            (
-                "result",
-                match &self.result {
-                    Ok(sol) => Json::obj(vec![("ok", sol.to_json())]),
-                    Err(e) => Json::obj(vec![("err", Json::s(format!("{e:#}")))]),
-                },
-            ),
-        ])
-    }
-
-    pub fn from_json(j: &Json) -> crate::Result<PartitionResponse> {
-        use crate::api::wire;
-        let ctx = "partition response";
-        let request = PartitionRequest::from_json(wire::field(j, "request", ctx)?)?;
-        let rj = wire::field(j, "result", ctx)?;
-        let result = if let Some(ok) = rj.get("ok") {
-            Ok(Solution::from_json(ok)?)
-        } else if let Some(err) = rj.get("err") {
-            Err(anyhow!(err
-                .as_str()
-                .ok_or_else(|| anyhow!("{ctx}: 'err' is not a string"))?
-                .to_string()))
-        } else {
-            anyhow::bail!("{ctx}: result needs 'ok' or 'err'");
-        };
-        Ok(PartitionResponse { id: wire::u64_field(j, "id", ctx)?, request, result })
-    }
-}
+// The request/response job unit lives in the API layer (it is a wire
+// artifact); re-exported here so `coordinator::PartitionRequest` keeps
+// working for existing callers.
+pub use crate::api::{PartitionRequest, PartitionResponse};
 
 /// Service tuning knobs.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
+    /// In-process worker threads. `0` is meaningful: a transport-only
+    /// service whose workers all arrive over a socket.
     pub workers: usize,
     /// Master switch for the trust-but-verify gate (per-request `verify`
     /// can only opt *out*, never force verification of paper-scale IR).
     pub verify: bool,
     /// Input seed used for verification replays.
     pub verify_seed: u64,
+    /// Worker threads *inside* one MCTS search (`0` = library default).
+    /// Set to 1 for bit-reproducible solutions: parallel rollouts race
+    /// benignly on the tree, so only single-threaded searches are
+    /// deterministic for a fixed seed — which is what lets CI diff the
+    /// thread mode against the socket mode byte for byte.
+    pub search_threads: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { workers: 4, verify: true, verify_seed: 7 }
+        ServiceConfig { workers: 4, verify: true, verify_seed: 7, search_threads: 0 }
     }
 }
 
-/// Cache of compiled zoo models, shared by all workers: the NDA and
-/// action spaces for a given model are built once per service lifetime,
-/// not once per request. The map lock is only held to look up or insert
-/// the per-model cell; the (possibly expensive) compile runs inside the
-/// cell's `OnceLock`, so workers serving other, already-cached models
-/// never wait behind it. Errors are cached as strings (a zoo model that
-/// fails to compile will fail identically every time).
-type ModelCell = Arc<std::sync::OnceLock<Result<Arc<CompiledModel>, String>>>;
-type ModelCache = Mutex<HashMap<(ModelKind, bool), ModelCell>>;
+// ---------------------------------------------------------------------------
+// JobQueue — the dispatch queue both transports pull from
+// ---------------------------------------------------------------------------
 
-/// The running service.
-pub struct Service {
-    tx: Sender<PartitionRequest>,
-    pub responses: Receiver<PartitionResponse>,
-    pub metrics: Arc<Metrics>,
-    workers: Vec<JoinHandle<()>>,
-    next_id: AtomicU64,
+/// Outcome of a timed queue pop.
+// The job variant dwarfs the control variants; `Popped` values are
+// consumed immediately, so boxing the request would buy nothing.
+#[allow(clippy::large_enum_variant)]
+pub enum Popped {
+    Job(PartitionRequest),
+    /// Timeout elapsed with nothing queued (poll again; used by socket
+    /// feeders that must interleave liveness checks with dispatch).
+    Empty,
+    /// The queue is closed and drained — the service is shutting down.
+    Closed,
 }
 
-impl Service {
-    /// Spawn a service with `n_workers` worker threads and default
-    /// verification settings.
-    pub fn start(n_workers: usize) -> Service {
-        Self::start_with(ServiceConfig { workers: n_workers, ..Default::default() })
+/// An unbounded MPMC queue with head-of-line requeue. Unlike an mpsc
+/// channel, a dispatched request can be *put back at the front* when its
+/// worker dies, which is the heart of the socket transport's
+/// zero-lost-requests guarantee.
+#[derive(Default)]
+pub struct JobQueue {
+    inner: Mutex<JobQueueInner>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct JobQueueInner {
+    jobs: VecDeque<PartitionRequest>,
+    closed: bool,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue::default()
     }
 
-    /// Spawn a service with explicit configuration.
-    pub fn start_with(cfg: ServiceConfig) -> Service {
-        let (tx, rx) = channel::<PartitionRequest>();
-        let rx = Arc::new(Mutex::new(rx));
-        let (resp_tx, responses) = channel::<PartitionResponse>();
-        let metrics = Arc::new(Metrics::default());
-        let models: Arc<ModelCache> = Arc::new(Mutex::new(HashMap::new()));
-        let mut workers = Vec::new();
-        for _ in 0..cfg.workers.max(1) {
-            let rx = Arc::clone(&rx);
-            let resp_tx = resp_tx.clone();
-            let metrics = Arc::clone(&metrics);
-            let models = Arc::clone(&models);
-            let cfg = cfg.clone();
-            workers.push(std::thread::spawn(move || loop {
-                let req = {
-                    let guard = rx.lock().unwrap();
-                    guard.recv()
-                };
-                let Ok(req) = req else { break };
-                metrics.record_dequeue();
-                let result = handle(&req, &models, &cfg, &metrics);
-                match &result {
-                    Ok(sol) => metrics.record_completion(
-                        std::time::Duration::from_secs_f64(sol.search_time_s),
-                        sol.evals as u64,
-                        sol.oom,
-                    ),
-                    Err(_) => metrics.record_failure(),
-                }
-                if resp_tx.send(PartitionResponse { id: req.id, request: req, result }).is_err()
-                {
-                    break;
-                }
-            }));
+    /// Append a request; false if the queue is closed (request dropped).
+    pub fn push(&self, req: PartitionRequest) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return false;
         }
-        Service { tx, responses, metrics, workers, next_id: AtomicU64::new(1) }
+        g.jobs.push_back(req);
+        drop(g);
+        self.cv.notify_one();
+        true
     }
 
-    /// Submit a request; returns its id, or an error if the service has
-    /// shut down (workers gone / queue closed) — submission after
-    /// shutdown is a caller error, not a panic.
-    pub fn submit(&self, mut req: PartitionRequest) -> crate::Result<u64> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        req.id = id;
-        // Enqueue gauge goes up *before* the send: once the request is in
-        // the channel a worker may dequeue it immediately, and its
+    /// Put a request back at the *front* (dead-worker requeue: the
+    /// oldest dispatched work retakes priority over later submissions).
+    pub fn push_front(&self, req: PartitionRequest) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        g.jobs.push_front(req);
+        drop(g);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Block until a job is available or the queue closes.
+    pub fn pop(&self) -> Option<PartitionRequest> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(job) = g.jobs.pop_front() {
+                return Some(job);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Block up to `timeout` for a job.
+    pub fn pop_timeout(&self, timeout: Duration) -> Popped {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(job) = g.jobs.pop_front() {
+                return Popped::Job(job);
+            }
+            if g.closed {
+                return Popped::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Popped::Empty;
+            }
+            g = self.cv.wait_timeout(g, deadline - now).unwrap().0;
+        }
+    }
+
+    /// Close the queue: pending jobs still drain, new pushes fail.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ModelCache — compiled models shared across requests and workers
+// ---------------------------------------------------------------------------
+
+/// Per-model cell: the map lock is only held to look up or insert the
+/// cell; the (possibly expensive) compile runs inside the cell's
+/// `OnceLock`, so workers serving other, already-cached models never
+/// wait behind it. Errors are cached as strings (a zoo model that fails
+/// to compile will fail identically every time).
+type ModelCell = Arc<std::sync::OnceLock<Result<Arc<CompiledModel>, String>>>;
+
+/// Cache of compiled zoo models, shared by all workers of one process:
+/// the NDA and action spaces for a given model are built once per
+/// service (or worker-process) lifetime, not once per request.
+#[derive(Default)]
+pub struct ModelCache {
+    cells: Mutex<HashMap<(ModelKind, bool), ModelCell>>,
+}
+
+impl ModelCache {
+    /// Resolve a request's model source to a compiled model. Zoo models
+    /// are compiled once and shared across requests and workers; inline
+    /// models are compiled per request (the cache has no identity to key
+    /// them on).
+    pub fn resolve(&self, source: &ModelSource) -> crate::Result<Arc<CompiledModel>> {
+        match source {
+            ModelSource::Zoo { kind, paper_scale } => {
+                let cell: ModelCell = {
+                    let mut cache = self.cells.lock().unwrap();
+                    Arc::clone(cache.entry((*kind, *paper_scale)).or_default())
+                };
+                // Two workers racing on the same *uncompiled* model: one
+                // compiles, the other blocks on the cell — never a
+                // duplicate NDA run, and never the map lock held across
+                // a compile.
+                let result = cell.get_or_init(|| {
+                    CompiledModel::from_kind(*kind, *paper_scale)
+                        .map(Arc::new)
+                        .map_err(|e| format!("{e:#}"))
+                });
+                result.clone().map_err(|e| anyhow!(e))
+            }
+            ModelSource::Inline(f) => Ok(Arc::new(CompiledModel::compile(f.clone())?)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// process_request — THE worker code path (threads and processes alike)
+// ---------------------------------------------------------------------------
+
+/// Solve and trust-but-verify one request. This is the entire worker
+/// code path — the in-process worker threads and the `toast worker
+/// --connect` process loop both call it verbatim, which is what keeps
+/// the two transports from drifting. It never touches metrics:
+/// accounting happens where the response is *received*
+/// ([`Metrics::record_response`]), identically for both transports.
+pub fn process_request(
+    req: &PartitionRequest,
+    models: &ModelCache,
+    cfg: &ServiceConfig,
+) -> PartitionResponse {
+    let mut rejected = false;
+    let result = (|| -> crate::Result<Solution> {
+        let compiled = models.resolve(&req.model)?;
+        let mut session = compiled
+            .partition(&req.mesh)
+            .hardware(req.hardware)
+            .budget(req.budget)
+            .seed(req.seed);
+        // Deterministic mode: pin the search's internal thread count so a
+        // fixed (seed, budget) reproduces bit-identical solutions.
+        session = if cfg.search_threads > 0 && req.method == Method::Toast {
+            session.strategy(MctsStrategy {
+                template: SearchConfig { threads: cfg.search_threads, ..Default::default() },
+            })
+        } else {
+            session.method(req.method)
+        };
+        let mut sol = session.run()?;
+        // Trust-but-verify: replay the returned spec through the
+        // differential harness before accepting it. The strategy's own
+        // claims (cost, spec) are not trusted until the executed sharded
+        // module matches the interpreter oracle.
+        if cfg.verify && req.verify && compiled.interpreter_sized() {
+            match validate_solution_spec(compiled.func(), &sol.spec, &req.mesh, cfg.verify_seed)
+            {
+                Ok(record) if record.pass => {
+                    sol.validation = Some(record);
+                }
+                Ok(record) => {
+                    rejected = true;
+                    anyhow::bail!(
+                        "spec rejected by the verification gate: max relative divergence \
+                         {:.3e} exceeds tol {:.1e} (strategy {})",
+                        record.max_rel_err,
+                        record.tol,
+                        sol.strategy
+                    );
+                }
+                // A replay that cannot even run (spec fails the
+                // structural check, partitioning or execution errors) is
+                // just as untrustworthy as a diverging one.
+                Err(e) => {
+                    rejected = true;
+                    return Err(e.context(format!(
+                        "spec rejected by the verification gate: replay failed (strategy {})",
+                        sol.strategy
+                    )));
+                }
+            }
+        }
+        Ok(sol)
+    })();
+    PartitionResponse { id: req.id, request: req.clone(), result, rejected }
+}
+
+// ---------------------------------------------------------------------------
+// Service
+// ---------------------------------------------------------------------------
+
+/// State shared between the service handle, its worker threads, and (in
+/// socket mode) the TCP transport layer.
+pub(crate) struct ServiceShared {
+    pub(crate) queue: JobQueue,
+    pub(crate) metrics: Arc<Metrics>,
+    pub(crate) models: ModelCache,
+    pub(crate) cfg: ServiceConfig,
+    next_id: AtomicU64,
+    pub(crate) next_worker_id: AtomicU64,
+    /// Transport bookkeeping: how many times each request id has been
+    /// requeued after a worker death. Bounds the damage of a poison
+    /// request (one whose search kills its worker) — see
+    /// [`super::transport`]'s `MAX_REQUEUES` guard. Entries are removed
+    /// when a request completes.
+    pub(crate) requeue_counts: Mutex<HashMap<u64, u32>>,
+    /// Master response sender; worker/transport threads clone it. Taken
+    /// (set to `None`) at shutdown so the response channel disconnects
+    /// once the last worker drops its clone.
+    resp_tx: Mutex<Option<Sender<PartitionResponse>>>,
+    /// In-process worker threads still alive (panics decrement too).
+    local_alive: AtomicU64,
+    /// A socket transport is attached, so remote workers may serve the
+    /// queue even when no local thread does.
+    transport_attached: AtomicBool,
+}
+
+impl ServiceShared {
+    pub(crate) fn allocate_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub(crate) fn response_sender(&self) -> Option<Sender<PartitionResponse>> {
+        self.resp_tx.lock().unwrap().clone()
+    }
+
+    pub(crate) fn attach_transport(&self) {
+        self.transport_attached.store(true, Ordering::Relaxed);
+    }
+
+    /// Drop the master response sender so the response channel
+    /// disconnects once the last worker/transport clone is gone.
+    pub(crate) fn take_response_sender(&self) {
+        let _ = self.resp_tx.lock().unwrap().take();
+    }
+
+    /// Queue `req` (its id must already be assigned). Fails — instead of
+    /// silently parking the request forever — when the service has shut
+    /// down or has no way left to process it.
+    pub(crate) fn enqueue(&self, req: PartitionRequest) -> crate::Result<()> {
+        let id = req.id;
+        if self.local_alive.load(Ordering::Relaxed) == 0
+            && !self.transport_attached.load(Ordering::Relaxed)
+        {
+            return Err(anyhow!(
+                "partition service has no workers (threads exited, no transport attached); \
+                 request {id} dropped"
+            ));
+        }
+        // Enqueue gauge goes up *before* the push: once the request is
+        // in the queue a worker may dispatch it immediately, and its
         // decrement must always pair with this increment.
         self.metrics.record_enqueue();
-        if self.tx.send(req).is_err() {
-            self.metrics.record_dequeue();
+        if !self.queue.push(req) {
+            self.metrics.record_unqueue();
             return Err(anyhow!("partition service is shut down; request {id} dropped"));
         }
         self.metrics.record_request();
+        Ok(())
+    }
+}
+
+/// Decrements a liveness gauge when dropped — worker threads hold one so
+/// even a panicking worker is accounted as gone.
+struct AliveGuard {
+    shared: Arc<ServiceShared>,
+}
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.shared.local_alive.fetch_sub(1, Ordering::Relaxed);
+        self.shared.metrics.record_worker_lost();
+    }
+}
+
+/// The running service: a [`JobQueue`], a [`ModelCache`], and zero or
+/// more in-process worker threads. The socket transport
+/// ([`super::transport::TcpServer`]) wraps a `Service` and adds remote
+/// workers pulling from the *same* queue.
+pub struct Service {
+    pub(crate) shared: Arc<ServiceShared>,
+    pub responses: Receiver<PartitionResponse>,
+    pub metrics: Arc<Metrics>,
+    pub(crate) workers: Vec<JoinHandle<()>>,
+}
+
+impl Service {
+    /// Spawn a service with `n_workers` worker threads (at least one)
+    /// and default verification settings.
+    pub fn start(n_workers: usize) -> Service {
+        Self::start_with(ServiceConfig { workers: n_workers.max(1), ..Default::default() })
+    }
+
+    /// Spawn a service with explicit configuration. `cfg.workers == 0`
+    /// starts a transport-only service (no local threads); submissions
+    /// are rejected until a transport is attached.
+    pub fn start_with(cfg: ServiceConfig) -> Service {
+        let (resp_tx, responses) = channel::<PartitionResponse>();
+        let metrics = Arc::new(Metrics::default());
+        let shared = Arc::new(ServiceShared {
+            queue: JobQueue::new(),
+            metrics: Arc::clone(&metrics),
+            models: ModelCache::default(),
+            cfg: cfg.clone(),
+            next_id: AtomicU64::new(1),
+            next_worker_id: AtomicU64::new(1),
+            requeue_counts: Mutex::new(HashMap::new()),
+            resp_tx: Mutex::new(Some(resp_tx)),
+            local_alive: AtomicU64::new(0),
+            transport_attached: AtomicBool::new(false),
+        });
+        let mut workers = Vec::new();
+        for _ in 0..cfg.workers {
+            shared.local_alive.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.record_worker_connected();
+            let tx = shared.response_sender().expect("sender alive at startup");
+            let shared = Arc::clone(&shared);
+            workers.push(std::thread::spawn(move || {
+                let _guard = AliveGuard { shared: Arc::clone(&shared) };
+                while let Some(req) = shared.queue.pop() {
+                    shared.metrics.record_dispatch();
+                    let resp = process_request(&req, &shared.models, &shared.cfg);
+                    shared.metrics.record_response(&resp);
+                    if tx.send(resp).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        Service { shared, responses, metrics, workers }
+    }
+
+    /// Submit a request; returns its id, or an error if the service has
+    /// shut down (queue closed / workers gone) — submission after
+    /// shutdown is a caller error, not a panic.
+    pub fn submit(&self, mut req: PartitionRequest) -> crate::Result<u64> {
+        let id = self.shared.allocate_id();
+        req.id = id;
+        self.shared.enqueue(req)?;
         Ok(id)
     }
 
-    /// Shut down: close the queue and join workers.
+    /// Close the queue without consuming the handle: queued jobs still
+    /// drain, further submits fail.
+    pub fn close(&self) {
+        self.shared.queue.close();
+    }
+
+    /// Shut down: close the queue, release the response channel, and
+    /// join the local workers.
     pub fn shutdown(self) {
-        drop(self.tx);
+        self.shared.queue.close();
+        // Drop the master sender so `responses` disconnects once the
+        // last worker finishes.
+        self.shared.resp_tx.lock().unwrap().take();
         for w in self.workers {
             let _ = w.join();
         }
     }
-}
-
-/// Resolve a request's model source to a compiled model. Zoo models are
-/// compiled once and shared across requests and workers; inline models
-/// are compiled per request (the service has no identity to key them
-/// on).
-fn compiled_for(
-    source: &ModelSource,
-    models: &ModelCache,
-) -> crate::Result<Arc<CompiledModel>> {
-    match source {
-        ModelSource::Zoo { kind, paper_scale } => {
-            let cell: ModelCell = {
-                let mut cache = models.lock().unwrap();
-                Arc::clone(cache.entry((*kind, *paper_scale)).or_default())
-            };
-            // Two workers racing on the same *uncompiled* model: one
-            // compiles, the other blocks on the cell — never a duplicate
-            // NDA run, and never the map lock held across a compile.
-            let result = cell.get_or_init(|| {
-                CompiledModel::from_kind(*kind, *paper_scale)
-                    .map(Arc::new)
-                    .map_err(|e| format!("{e:#}"))
-            });
-            result.clone().map_err(|e| anyhow!(e))
-        }
-        ModelSource::Inline(f) => Ok(Arc::new(CompiledModel::compile(f.clone())?)),
-    }
-}
-
-fn handle(
-    req: &PartitionRequest,
-    models: &ModelCache,
-    cfg: &ServiceConfig,
-    metrics: &Metrics,
-) -> crate::Result<Solution> {
-    let compiled = compiled_for(&req.model, models)?;
-    let mut sol = compiled
-        .partition(&req.mesh)
-        .method(req.method)
-        .hardware(req.hardware)
-        .budget(req.budget)
-        .seed(req.seed)
-        .run()?;
-    // Trust-but-verify: replay the returned spec through the
-    // differential harness before accepting it. The strategy's own
-    // claims (cost, spec) are not trusted until the executed sharded
-    // module matches the interpreter oracle.
-    if cfg.verify && req.verify && compiled.interpreter_sized() {
-        match validate_solution_spec(compiled.func(), &sol.spec, &req.mesh, cfg.verify_seed) {
-            Ok(record) if record.pass => {
-                metrics.record_verified();
-                sol.validation = Some(record);
-            }
-            Ok(record) => {
-                metrics.record_rejected();
-                anyhow::bail!(
-                    "spec rejected by the verification gate: max relative divergence {:.3e} \
-                     exceeds tol {:.1e} (strategy {})",
-                    record.max_rel_err,
-                    record.tol,
-                    sol.strategy
-                );
-            }
-            // A replay that cannot even run (spec fails the structural
-            // check, partitioning or execution errors) is just as
-            // untrustworthy as a diverging one — count it as rejected.
-            Err(e) => {
-                metrics.record_rejected();
-                return Err(e.context(format!(
-                    "spec rejected by the verification gate: replay failed (strategy {})",
-                    sol.strategy
-                )));
-            }
-        }
-    }
-    Ok(sol)
 }
 
 /// Convenience default request (scaled zoo model, 2x2 mesh, A100).
@@ -326,6 +494,7 @@ pub fn default_request(model: ModelKind, method: Method) -> PartitionRequest {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::json::Json;
 
     #[test]
     fn service_processes_requests() {
@@ -349,26 +518,32 @@ mod tests {
         assert!(snap.contains("completed=2"), "{snap}");
         assert!(snap.contains("verified=2"), "{snap}");
         assert!(snap.contains("queued=0"), "{snap}");
+        assert!(snap.contains("in_flight=0"), "{snap}");
         svc.shutdown();
     }
 
     #[test]
-    fn submit_after_shutdown_errors_instead_of_panicking() {
-        // A service whose queue receiver is gone behaves exactly like one
-        // whose workers all died: submit must surface an Err, not panic.
-        let (tx, rx) = channel::<PartitionRequest>();
-        drop(rx);
-        let svc = Service {
-            tx,
-            responses: channel::<PartitionResponse>().1,
-            metrics: Arc::new(Metrics::default()),
-            workers: Vec::new(),
-            next_id: AtomicU64::new(1),
-        };
+    fn submit_after_close_errors_instead_of_panicking() {
+        // A closed service behaves exactly like one whose workers all
+        // died: submit must surface an Err, not panic or hang.
+        let svc = Service::start(1);
+        svc.close();
         let err = svc.submit(default_request(ModelKind::Mlp, Method::Manual));
-        assert!(err.is_err(), "submit after worker death must be an Err, not a panic");
+        assert!(err.is_err(), "submit after close must be an Err, not a panic");
         assert_eq!(svc.metrics.queue_depth(), 0, "failed submits are not queued");
         assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn transport_only_service_rejects_submits_until_attached() {
+        let svc = Service::start_with(ServiceConfig { workers: 0, ..Default::default() });
+        let err = svc.submit(default_request(ModelKind::Mlp, Method::Manual));
+        assert!(err.is_err(), "no workers and no transport: the request could never run");
+        svc.shared.attach_transport();
+        let id = svc.submit(default_request(ModelKind::Mlp, Method::Manual)).unwrap();
+        assert!(id > 0);
+        assert_eq!(svc.metrics.queue_depth(), 1, "request waits for a remote worker");
         svc.shutdown();
     }
 
@@ -403,16 +578,46 @@ mod tests {
         assert_eq!(back.budget, req.budget);
         assert_eq!(back.verify, req.verify);
 
-        // An error response survives the wire too.
+        // An error response survives the wire too, rejection flag and all.
         let resp = PartitionResponse {
             id: 9,
             request: req,
             result: Err(anyhow!("strategy exploded")),
+            rejected: true,
         };
         let jr = Json::parse(&resp.to_json().render()).unwrap();
         let back = PartitionResponse::from_json(&jr).unwrap();
         assert_eq!(back.id, 9);
+        assert!(back.rejected);
         assert!(back.result.is_err());
         assert!(format!("{:#}", back.result.unwrap_err()).contains("strategy exploded"));
+    }
+
+    #[test]
+    fn job_queue_requeues_at_the_front() {
+        let q = JobQueue::new();
+        assert!(q.push(default_request(ModelKind::Mlp, Method::Manual)));
+        assert!(q.push(default_request(ModelKind::Attention, Method::Manual)));
+        let first = q.pop().unwrap();
+        assert_eq!(first.model, ModelSource::zoo(ModelKind::Mlp));
+        // A dead worker's job goes back to the *head* of the line.
+        assert!(q.push_front(first));
+        let again = q.pop().unwrap();
+        assert_eq!(again.model, ModelSource::zoo(ModelKind::Mlp));
+        assert_eq!(q.len(), 1);
+        q.close();
+        assert!(!q.push(default_request(ModelKind::Mlp, Method::Manual)));
+        // Close drains: the remaining job still pops, then Closed.
+        assert!(matches!(q.pop_timeout(Duration::from_millis(10)), Popped::Job(_)));
+        assert!(matches!(q.pop_timeout(Duration::from_millis(10)), Popped::Closed));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn pop_timeout_reports_empty_on_an_open_queue() {
+        let q = JobQueue::new();
+        let t0 = Instant::now();
+        assert!(matches!(q.pop_timeout(Duration::from_millis(30)), Popped::Empty));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
     }
 }

@@ -1,0 +1,978 @@
+//! Socket transport for the partition service: length-prefixed JSON
+//! frames over TCP, the `toast serve --listen` server, the
+//! `toast worker --connect` process loop, and the submit client.
+//!
+//! ## Wire protocol
+//!
+//! A *frame* is a 4-byte big-endian payload length followed by that many
+//! bytes of UTF-8 JSON — one [`Message`] per frame. Frames larger than
+//! [`MAX_FRAME_LEN`] (64 MiB, comfortably above any inline-IR request)
+//! are rejected without reading the payload. Malformed frames and JSON
+//! parse failures poison only their own connection: the handler answers
+//! with a best-effort [`Message::Error`] and closes that one socket; the
+//! listener keeps accepting. Partial reads are handled by the codec
+//! (framing never assumes a frame arrives in one `read`).
+//!
+//! ## Roles
+//!
+//! * **Workers** connect, send `register`, receive `registered`, then
+//!   loop `job` → `result`. A background thread sends `heartbeat` every
+//!   [`HEARTBEAT_INTERVAL`] — even mid-search — so the server can tell a
+//!   long job from a dead process.
+//! * **Clients** connect and send `submit` (acked with `submitted`) and
+//!   `status` (answered with `status_report`); completed `response`
+//!   frames arrive as workers finish.
+//!
+//! ## Liveness and requeue
+//!
+//! The server tracks `last_seen` per worker. A worker that goes silent
+//! for longer than [`TcpServerConfig::dead_after`] — or whose socket
+//! errors or closes — is declared dead: its in-flight request is put
+//! back at the *front* of the shared [`JobQueue`] (counted in
+//! [`Metrics::requeued`]) and completed by a surviving worker, so a
+//! `kill -9` mid-search loses zero requests. A request that keeps
+//! killing its workers is capped at [`MAX_REQUEUES`] retries and then
+//! failed back to its client — one poison request cannot serially take
+//! down the fleet.
+//!
+//! Dispatch and verification share the in-process mode's code path:
+//! remote workers run [`process_request`] (compiled-model cache +
+//! trust-but-verify differential replay) and the server accounts every
+//! response through [`Metrics::record_response`] — exactly what the
+//! thread mode does, so the transports cannot drift.
+
+use super::metrics::Metrics;
+use super::service::{
+    process_request, ModelCache, Popped, Service, ServiceConfig, ServiceShared,
+};
+use crate::api::wire::{Message, StatusReport};
+use crate::api::{PartitionRequest, PartitionResponse};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, ensure, Context as _};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Hard cap on one frame's payload. Large enough for paper-scale inline
+/// IR, small enough that a garbage length prefix cannot make the server
+/// allocate unbounded memory.
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// How often a worker process beacons liveness.
+pub const HEARTBEAT_INTERVAL: Duration = Duration::from_millis(500);
+
+/// Default silence window after which the server declares a worker dead.
+pub const DEFAULT_DEAD_AFTER: Duration = Duration::from_secs(5);
+
+/// Poison-request guard: how many times a request may be requeued after
+/// killing its worker before the server gives up and fails it. Without a
+/// cap, one request whose search crashes the worker process would be
+/// handed to every fresh worker in turn — serially killing the whole
+/// fleet and starving every request queued behind it.
+pub const MAX_REQUEUES: u32 = 2;
+
+// ---------------------------------------------------------------------------
+// Framing codec (pure functions — unit-tested without sockets)
+// ---------------------------------------------------------------------------
+
+/// Encode one frame: 4-byte big-endian length prefix + payload.
+pub fn encode_frame(payload: &[u8]) -> crate::Result<Vec<u8>> {
+    ensure!(
+        payload.len() <= MAX_FRAME_LEN,
+        "frame payload of {} bytes exceeds the {MAX_FRAME_LEN}-byte cap",
+        payload.len()
+    );
+    let mut frame = Vec::with_capacity(4 + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    frame.extend_from_slice(payload);
+    Ok(frame)
+}
+
+/// Write one frame. The prefix and payload go out as a single buffer so
+/// a frame is never interleaved with another writer's bytes as long as
+/// callers serialize on the stream (all writers here hold a mutex).
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> crate::Result<()> {
+    let frame = encode_frame(payload)?;
+    w.write_all(&frame).context("writing frame")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// What a timeout-aware frame read observed.
+pub enum FrameEvent {
+    /// A complete frame's payload.
+    Frame(Vec<u8>),
+    /// The read timed out *before any byte of a frame arrived* — the
+    /// peer is merely quiet, not mid-frame. Only possible on streams
+    /// with a read timeout set.
+    Idle,
+    /// Clean EOF at a frame boundary.
+    Closed,
+}
+
+/// Read one frame, distinguishing "no frame started yet" (`Idle`, on a
+/// timed-out stream) from "peer stalled mid-frame" (an error): once the
+/// first prefix byte arrives the rest of the frame must follow within
+/// the stream's timeout. Handles arbitrarily fragmented delivery — the
+/// length prefix and payload may arrive one byte at a time.
+pub fn read_frame_event(r: &mut impl Read, cap: usize) -> crate::Result<FrameEvent> {
+    let mut prefix = [0u8; 4];
+    loop {
+        match r.read(&mut prefix[..1]) {
+            Ok(0) => return Ok(FrameEvent::Closed),
+            Ok(_) => break,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                return Ok(FrameEvent::Idle)
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(anyhow!(e).context("reading frame prefix")),
+        }
+    }
+    r.read_exact(&mut prefix[1..]).context("frame truncated inside the length prefix")?;
+    let len = u32::from_be_bytes(prefix) as usize;
+    ensure!(len <= cap, "oversized frame: {len} bytes exceeds the {cap}-byte cap");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("frame truncated: expected {len} payload bytes"))?;
+    Ok(FrameEvent::Frame(payload))
+}
+
+/// Blocking frame read: `Ok(None)` on clean EOF at a frame boundary.
+/// (On a stream without a read timeout, `Idle` cannot occur.)
+pub fn read_frame(r: &mut impl Read, cap: usize) -> crate::Result<Option<Vec<u8>>> {
+    match read_frame_event(r, cap)? {
+        FrameEvent::Frame(payload) => Ok(Some(payload)),
+        FrameEvent::Closed => Ok(None),
+        FrameEvent::Idle => bail!("read timed out waiting for a frame"),
+    }
+}
+
+/// Write one [`Message`] as a frame.
+pub fn write_message(w: &mut impl Write, msg: &Message) -> crate::Result<()> {
+    write_frame(w, msg.to_json().render().as_bytes())
+        .with_context(|| format!("sending '{}'", msg.tag()))
+}
+
+/// Read one [`Message`]; `Ok(None)` on clean EOF.
+pub fn read_message(r: &mut impl Read, cap: usize) -> crate::Result<Option<Message>> {
+    match read_frame(r, cap)? {
+        None => Ok(None),
+        Some(bytes) => Ok(Some(Message::from_json(&Json::parse_slice(&bytes)?)?)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Socket-server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct TcpServerConfig {
+    /// Silence window after which a worker is declared dead and its
+    /// in-flight request requeued.
+    pub dead_after: Duration,
+}
+
+impl Default for TcpServerConfig {
+    fn default() -> Self {
+        TcpServerConfig { dead_after: DEFAULT_DEAD_AFTER }
+    }
+}
+
+type SharedWriter = Arc<Mutex<TcpStream>>;
+
+/// Routes completed responses back to the client connection that
+/// submitted them. Responses whose client disconnected are dropped
+/// (their side effects — metrics, verification — already happened).
+#[derive(Default)]
+struct Router {
+    pending: Mutex<HashMap<u64, SharedWriter>>,
+}
+
+impl Router {
+    fn register(&self, id: u64, writer: SharedWriter) {
+        self.pending.lock().unwrap().insert(id, writer);
+    }
+
+    fn deregister(&self, id: u64) {
+        self.pending.lock().unwrap().remove(&id);
+    }
+
+    fn route(&self, resp: PartitionResponse) {
+        let writer = self.pending.lock().unwrap().remove(&resp.id);
+        if let Some(writer) = writer {
+            let mut w = writer.lock().unwrap();
+            let _ = write_message(&mut *w, &Message::Response(resp));
+        }
+    }
+}
+
+/// One registered remote worker, as the server sees it.
+struct RemoteWorker {
+    id: u64,
+    name: String,
+    /// The request dispatched to this worker, if any. `take()` under the
+    /// lock is the exactly-once requeue guard: whichever of the feeder
+    /// or reader observes the death first wins.
+    in_flight: Mutex<Option<PartitionRequest>>,
+    /// Signals the feeder when the slot empties (result arrived) or the
+    /// worker dies.
+    idle_cv: Condvar,
+    dead: AtomicBool,
+    last_seen: Mutex<Instant>,
+}
+
+impl RemoteWorker {
+    fn mark_dead(&self) {
+        self.dead.store(true, Ordering::Relaxed);
+        self.idle_cv.notify_all();
+    }
+
+    fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Relaxed)
+    }
+
+    /// Requeue the in-flight request, if any — exactly once, and at most
+    /// [`MAX_REQUEUES`] times per request: a request that keeps killing
+    /// workers is failed back to its client instead of taking down the
+    /// fleet.
+    fn requeue_in_flight(&self, shared: &ServiceShared) {
+        let taken = self.in_flight.lock().unwrap().take();
+        if let Some(req) = taken {
+            let id = req.id;
+            let attempts = {
+                let mut counts = shared.requeue_counts.lock().unwrap();
+                let c = counts.entry(id).or_insert(0);
+                *c += 1;
+                *c
+            };
+            if attempts > MAX_REQUEUES {
+                shared.requeue_counts.lock().unwrap().remove(&id);
+                eprintln!(
+                    "[serve] request {id} was in flight on {attempts} workers that died — \
+                     failing it (poison request?)"
+                );
+                let resp = PartitionResponse {
+                    id,
+                    request: req,
+                    result: Err(anyhow!(
+                        "request {id} was in flight on {attempts} workers that died; \
+                         giving up after {MAX_REQUEUES} requeues"
+                    )),
+                    rejected: false,
+                };
+                shared.metrics.record_response(&resp);
+                if let Some(tx) = shared.response_sender() {
+                    let _ = tx.send(resp);
+                }
+            } else {
+                shared.metrics.record_requeue();
+                if shared.queue.push_front(req) {
+                    eprintln!(
+                        "[serve] worker #{} ({}) died with request {id} in flight — requeued \
+                         (attempt {attempts}/{MAX_REQUEUES})",
+                        self.id, self.name
+                    );
+                } else {
+                    // Shutdown race: the queue is closed, nothing to do.
+                    shared.metrics.record_unqueue();
+                }
+            }
+            self.idle_cv.notify_all();
+        }
+    }
+}
+
+/// The socket front of a [`Service`]: accepts worker registrations and
+/// client submissions, dispatches the shared queue to live workers, and
+/// answers `status` requests with the coordinator metrics.
+pub struct TcpServer {
+    shared: Arc<ServiceShared>,
+    pub metrics: Arc<Metrics>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    router_thread: Option<JoinHandle<()>>,
+    local_workers: Vec<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Put `svc` behind `listener`. The service's local worker threads
+    /// (if any) keep serving the queue alongside remote workers.
+    pub fn start(
+        svc: Service,
+        listener: TcpListener,
+        cfg: TcpServerConfig,
+    ) -> crate::Result<TcpServer> {
+        let Service { shared, responses, metrics, workers: local_workers } = svc;
+        shared.attach_transport();
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let router = Arc::new(Router::default());
+
+        let router_thread = std::thread::spawn({
+            let router = Arc::clone(&router);
+            move || {
+                // Ends when every response sender is gone (shutdown).
+                for resp in responses.iter() {
+                    router.route(resp);
+                }
+            }
+        });
+
+        let accept_thread = std::thread::spawn({
+            let shared = Arc::clone(&shared);
+            let stop = Arc::clone(&stop);
+            move || accept_loop(listener, shared, router, stop, cfg)
+        });
+
+        Ok(TcpServer {
+            metrics,
+            shared,
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+            router_thread: Some(router_thread),
+            local_workers,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block on the accept loop — the CLI server mode runs here until
+    /// the process is killed.
+    pub fn join(mut self) -> crate::Result<()> {
+        if let Some(t) = self.accept_thread.take() {
+            t.join().map_err(|_| anyhow!("accept loop panicked"))?;
+        }
+        Ok(())
+    }
+
+    /// Stop accepting, close the queue (draining jobs complete), close
+    /// worker sockets, and join the service threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.shared.queue.close();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        for w in self.local_workers.drain(..) {
+            let _ = w.join();
+        }
+        // Release the master response sender so the router drains out
+        // once the last connection thread drops its clone.
+        self.shared.take_response_sender();
+        if let Some(t) = self.router_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<ServiceShared>,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    cfg: TcpServerConfig,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let shared = Arc::clone(&shared);
+                let router = Arc::clone(&router);
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    // A connection failing — malformed frames, protocol
+                    // violations, abrupt closes — must never take the
+                    // listener down with it.
+                    handle_connection(stream, peer, shared, router, cfg);
+                });
+            }
+            // Non-blocking accept: poll so the stop flag is honored.
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+}
+
+fn send_error(writer: &SharedWriter, message: &str) {
+    let mut w = writer.lock().unwrap();
+    let _ = write_message(&mut *w, &Message::Error { message: message.to_string() });
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    peer: SocketAddr,
+    shared: Arc<ServiceShared>,
+    router: Arc<Router>,
+    cfg: TcpServerConfig,
+) {
+    stream.set_nodelay(true).ok();
+    let mut reader = match stream.try_clone() {
+        Ok(r) => r,
+        Err(_) => return,
+    };
+    let writer: SharedWriter = Arc::new(Mutex::new(stream));
+    // The first frame declares the peer's role.
+    match read_message(&mut reader, MAX_FRAME_LEN) {
+        Ok(Some(Message::Register { name })) => worker_connection(name, reader, writer, shared, cfg),
+        Ok(Some(first @ (Message::Submit(_) | Message::Status))) => {
+            client_connection(first, reader, writer, shared, router)
+        }
+        Ok(Some(other)) => send_error(
+            &writer,
+            &format!("protocol error: expected register, submit or status, got '{}'", other.tag()),
+        ),
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("[serve] rejecting {peer}: {e:#}");
+            send_error(&writer, &format!("bad frame: {e:#}"));
+        }
+    }
+}
+
+// ---- worker connections ---------------------------------------------------
+
+fn worker_connection(
+    name: String,
+    reader: TcpStream,
+    writer: SharedWriter,
+    shared: Arc<ServiceShared>,
+    cfg: TcpServerConfig,
+) {
+    let id = shared.next_worker_id.fetch_add(1, Ordering::Relaxed);
+    // Grab the response channel before counting the worker as connected,
+    // so an early return cannot leave the workers gauge inflated.
+    let Some(resp_tx) = shared.response_sender() else {
+        return; // shutting down
+    };
+    {
+        let mut w = writer.lock().unwrap();
+        if write_message(&mut *w, &Message::Registered { worker_id: id }).is_err() {
+            return;
+        }
+    }
+    shared.metrics.record_worker_connected();
+    eprintln!("[serve] worker #{id} ({name}) registered");
+    let worker = Arc::new(RemoteWorker {
+        id,
+        name,
+        in_flight: Mutex::new(None),
+        idle_cv: Condvar::new(),
+        dead: AtomicBool::new(false),
+        last_seen: Mutex::new(Instant::now()),
+    });
+
+    let feeder = std::thread::spawn({
+        let worker = Arc::clone(&worker);
+        let shared = Arc::clone(&shared);
+        let writer = Arc::clone(&writer);
+        move || feeder_loop(&worker, &writer, &shared)
+    });
+    reader_loop(&worker, reader, &shared, resp_tx, cfg.dead_after);
+    // Reader exited (death, protocol violation, or shutdown): make sure
+    // the feeder unblocks and any in-flight request survives.
+    worker.mark_dead();
+    worker.requeue_in_flight(&shared);
+    let _ = feeder.join();
+    shared.metrics.record_worker_lost();
+    eprintln!("[serve] worker #{} ({}) disconnected", worker.id, worker.name);
+}
+
+/// Pulls jobs off the shared queue and ships them to one worker, one at
+/// a time, waiting for each result before dispatching the next.
+fn feeder_loop(worker: &RemoteWorker, writer: &SharedWriter, shared: &ServiceShared) {
+    loop {
+        if worker.is_dead() {
+            break;
+        }
+        match shared.queue.pop_timeout(Duration::from_millis(100)) {
+            Popped::Closed => {
+                // Shutdown: close the socket so the worker process sees
+                // EOF and exits cleanly.
+                let _ = writer.lock().unwrap().shutdown(Shutdown::Both);
+                break;
+            }
+            Popped::Empty => continue,
+            Popped::Job(req) => {
+                shared.metrics.record_dispatch();
+                *worker.in_flight.lock().unwrap() = Some(req.clone());
+                let sent = {
+                    let mut w = writer.lock().unwrap();
+                    write_message(&mut *w, &Message::Job(req)).is_ok()
+                };
+                if !sent {
+                    worker.mark_dead();
+                    worker.requeue_in_flight(shared);
+                    break;
+                }
+                // Wait until the reader clears the slot (result arrived)
+                // or the worker dies.
+                let mut slot = worker.in_flight.lock().unwrap();
+                while slot.is_some() && !worker.is_dead() {
+                    slot = worker
+                        .idle_cv
+                        .wait_timeout(slot, Duration::from_millis(100))
+                        .unwrap()
+                        .0;
+                }
+            }
+        }
+    }
+    // Safety net (exactly-once via the slot's `take`).
+    worker.requeue_in_flight(shared);
+}
+
+/// Consumes one worker's frames: heartbeats refresh liveness, results
+/// clear the in-flight slot and flow into the shared response channel.
+/// Returns when the worker is dead by any definition.
+fn reader_loop(
+    worker: &RemoteWorker,
+    mut reader: TcpStream,
+    shared: &ServiceShared,
+    resp_tx: Sender<PartitionResponse>,
+    dead_after: Duration,
+) {
+    // Wake at least a few times per dead_after window to check liveness;
+    // a timeout before a frame's first byte is just "quiet", mid-frame
+    // it means the peer stalled (handled as an error below).
+    let poll = (dead_after / 4).max(Duration::from_millis(50));
+    if reader.set_read_timeout(Some(poll)).is_err() {
+        return;
+    }
+    loop {
+        match read_frame_event(&mut reader, MAX_FRAME_LEN) {
+            Ok(FrameEvent::Frame(bytes)) => {
+                *worker.last_seen.lock().unwrap() = Instant::now();
+                let msg = match Json::parse_slice(&bytes)
+                    .map_err(anyhow::Error::from)
+                    .and_then(|j| Message::from_json(&j))
+                {
+                    Ok(m) => m,
+                    Err(e) => {
+                        eprintln!("[serve] worker #{}: bad frame: {e:#}", worker.id);
+                        return;
+                    }
+                };
+                match msg {
+                    Message::Heartbeat => {}
+                    Message::Result(resp) => {
+                        let matched = {
+                            let mut slot = worker.in_flight.lock().unwrap();
+                            match slot.as_ref() {
+                                Some(req) if req.id == resp.id => {
+                                    slot.take();
+                                    worker.idle_cv.notify_all();
+                                    true
+                                }
+                                _ => false,
+                            }
+                        };
+                        if matched {
+                            // The request completed; forget any requeue
+                            // history so the poison guard never misfires
+                            // on a recycled id space.
+                            shared.requeue_counts.lock().unwrap().remove(&resp.id);
+                            shared.metrics.record_response(&resp);
+                            let _ = resp_tx.send(resp);
+                        } else {
+                            eprintln!(
+                                "[serve] worker #{}: stray result for request {} — dropped",
+                                worker.id, resp.id
+                            );
+                        }
+                    }
+                    other => {
+                        eprintln!(
+                            "[serve] worker #{}: unexpected '{}' — closing",
+                            worker.id,
+                            other.tag()
+                        );
+                        return;
+                    }
+                }
+            }
+            Ok(FrameEvent::Idle) => {
+                let silent = worker.last_seen.lock().unwrap().elapsed();
+                if silent > dead_after {
+                    eprintln!(
+                        "[serve] worker #{}: no heartbeat for {silent:?} — declaring dead",
+                        worker.id
+                    );
+                    return;
+                }
+            }
+            Ok(FrameEvent::Closed) => return,
+            Err(_) => return,
+        }
+        if worker.is_dead() {
+            return;
+        }
+    }
+}
+
+// ---- client connections ---------------------------------------------------
+
+fn client_connection(
+    first: Message,
+    mut reader: TcpStream,
+    writer: SharedWriter,
+    shared: Arc<ServiceShared>,
+    router: Arc<Router>,
+) {
+    let mut my_ids: Vec<u64> = Vec::new();
+    let mut next = Some(first);
+    loop {
+        let msg = match next.take() {
+            Some(m) => m,
+            None => match read_message(&mut reader, MAX_FRAME_LEN) {
+                Ok(Some(m)) => m,
+                Ok(None) => break,
+                Err(e) => {
+                    send_error(&writer, &format!("bad frame: {e:#}"));
+                    break;
+                }
+            },
+        };
+        match msg {
+            Message::Submit(mut req) => {
+                let id = shared.allocate_id();
+                req.id = id;
+                // Register the route *before* enqueueing: a fast worker
+                // may answer before this thread runs again.
+                router.register(id, Arc::clone(&writer));
+                match shared.enqueue(req) {
+                    Ok(()) => {
+                        my_ids.push(id);
+                        let mut w = writer.lock().unwrap();
+                        if write_message(&mut *w, &Message::Submitted { id }).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        router.deregister(id);
+                        send_error(&writer, &format!("{e:#}"));
+                    }
+                }
+            }
+            Message::Status => {
+                let report = shared.metrics.report();
+                let mut w = writer.lock().unwrap();
+                if write_message(&mut *w, &Message::StatusReport(report)).is_err() {
+                    break;
+                }
+            }
+            other => {
+                send_error(&writer, &format!("unexpected message '{}'", other.tag()));
+                break;
+            }
+        }
+    }
+    // Responses for requests this client abandoned are dropped at the
+    // router instead of piling up against a dead socket.
+    for id in my_ids {
+        router.deregister(id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker process loop
+// ---------------------------------------------------------------------------
+
+/// Worker-process options: a display name plus the same [`ServiceConfig`]
+/// the in-process workers run with (`workers` is ignored; `verify`,
+/// `verify_seed` and `search_threads` steer [`process_request`] exactly
+/// as they do in thread mode).
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    pub name: String,
+    pub service: ServiceConfig,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            name: format!("worker-{}", std::process::id()),
+            service: ServiceConfig::default(),
+        }
+    }
+}
+
+/// Connect to a server and serve jobs until it closes the socket.
+pub fn run_worker(addr: &str, opts: &WorkerOptions) -> crate::Result<()> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting worker to {addr}"))?;
+    run_worker_on(stream, opts)
+}
+
+/// The worker loop over an established stream: register, heartbeat in
+/// the background, and run [`process_request`] — the compiled-model
+/// cache + differential-replay path shared with the in-process threads —
+/// for every job. Returns `Ok(())` when the server closes the
+/// connection.
+pub fn run_worker_on(stream: TcpStream, opts: &WorkerOptions) -> crate::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = stream.try_clone()?;
+    let writer = Arc::new(Mutex::new(stream));
+    {
+        let mut w = writer.lock().unwrap();
+        write_message(&mut *w, &Message::Register { name: opts.name.clone() })?;
+    }
+    let worker_id = match read_message(&mut reader, MAX_FRAME_LEN)? {
+        Some(Message::Registered { worker_id }) => worker_id,
+        Some(Message::Error { message }) => bail!("server rejected registration: {message}"),
+        Some(other) => bail!("expected registration ack, got '{}'", other.tag()),
+        None => bail!("server closed the connection during registration"),
+    };
+    eprintln!("[worker] {} registered as #{worker_id}", opts.name);
+
+    // Heartbeats flow from a dedicated thread so a long search cannot
+    // silence them — the server must be able to tell "busy" from "dead".
+    let stop = Arc::new(AtomicBool::new(false));
+    let heartbeat = std::thread::spawn({
+        let writer = Arc::clone(&writer);
+        let stop = Arc::clone(&stop);
+        move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(HEARTBEAT_INTERVAL);
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let mut w = writer.lock().unwrap();
+                if write_message(&mut *w, &Message::Heartbeat).is_err() {
+                    break;
+                }
+            }
+        }
+    });
+
+    let models = ModelCache::default();
+    let result = (|| {
+        loop {
+            match read_message(&mut reader, MAX_FRAME_LEN)? {
+                None => return Ok(()), // server closed: clean exit
+                Some(Message::Job(req)) => {
+                    eprintln!(
+                        "[worker] #{worker_id}: request {} ({} via {})",
+                        req.id,
+                        req.model.name(),
+                        req.method.name()
+                    );
+                    let resp = process_request(&req, &models, &opts.service);
+                    let mut w = writer.lock().unwrap();
+                    write_message(&mut *w, &Message::Result(resp))?;
+                }
+                Some(other) => bail!("unexpected message '{}' from server", other.tag()),
+            }
+        }
+    })();
+    stop.store(true, Ordering::Relaxed);
+    let _ = heartbeat.join();
+    result
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// A submit/status client over one connection. Responses arrive in
+/// completion order and may interleave with acks, so reads buffer
+/// out-of-band responses instead of assuming strict alternation.
+pub struct ServiceClient {
+    reader: TcpStream,
+    writer: TcpStream,
+    buffered: std::collections::VecDeque<PartitionResponse>,
+}
+
+impl ServiceClient {
+    pub fn connect(addr: &str) -> crate::Result<ServiceClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting client to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(ServiceClient {
+            reader: stream.try_clone()?,
+            writer: stream,
+            buffered: std::collections::VecDeque::new(),
+        })
+    }
+
+    fn next_message(&mut self) -> crate::Result<Message> {
+        read_message(&mut self.reader, MAX_FRAME_LEN)?
+            .ok_or_else(|| anyhow!("server closed the connection"))
+    }
+
+    /// Submit a request; returns the id the server assigned.
+    pub fn submit(&mut self, req: PartitionRequest) -> crate::Result<u64> {
+        write_message(&mut self.writer, &Message::Submit(req))?;
+        loop {
+            match self.next_message()? {
+                Message::Submitted { id } => return Ok(id),
+                Message::Response(resp) => self.buffered.push_back(resp),
+                Message::Error { message } => bail!("server refused the submission: {message}"),
+                other => bail!("unexpected '{}' while awaiting submission ack", other.tag()),
+            }
+        }
+    }
+
+    /// Receive the next completed response (blocking).
+    pub fn recv_response(&mut self) -> crate::Result<PartitionResponse> {
+        if let Some(resp) = self.buffered.pop_front() {
+            return Ok(resp);
+        }
+        loop {
+            match self.next_message()? {
+                Message::Response(resp) => return Ok(resp),
+                Message::Error { message } => bail!("server error: {message}"),
+                other => bail!("unexpected '{}' while awaiting a response", other.tag()),
+            }
+        }
+    }
+
+    /// Fetch the server's metrics counters.
+    pub fn status(&mut self) -> crate::Result<StatusReport> {
+        write_message(&mut self.writer, &Message::Status)?;
+        loop {
+            match self.next_message()? {
+                Message::StatusReport(report) => return Ok(report),
+                Message::Response(resp) => self.buffered.push_back(resp),
+                Message::Error { message } => bail!("server error: {message}"),
+                other => bail!("unexpected '{}' while awaiting status", other.tag()),
+            }
+        }
+    }
+}
+
+/// Bind `addr`, print the resolved address (CI parses `listening on
+/// HOST:PORT` off stdout), and serve until killed. The in-process worker
+/// threads configured by `svc_cfg.workers` (commonly 0 in socket mode)
+/// run alongside any workers that connect.
+pub fn serve_listen(
+    addr: &str,
+    svc_cfg: ServiceConfig,
+    tcp_cfg: TcpServerConfig,
+) -> crate::Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    println!("listening on {}", listener.local_addr()?);
+    std::io::stdout().flush().ok();
+    let svc = Service::start_with(svc_cfg);
+    let server = TcpServer::start(svc, listener, tcp_cfg)?;
+    server.join()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    /// A reader that hands out at most one byte per `read` call —
+    /// maximal fragmentation, the worst case for a framing codec.
+    struct Dribble<R> {
+        inner: R,
+    }
+
+    impl<R: Read> Read for Dribble<R> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if buf.is_empty() {
+                return Ok(0);
+            }
+            self.inner.read(&mut buf[..1])
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip_even_one_byte_at_a_time() {
+        let payloads: [&[u8]; 4] =
+            [b"", b"x", br#"{"msg":"heartbeat"}"#, &[0u8; 4096]];
+        for payload in payloads {
+            let mut wire = Vec::new();
+            write_frame(&mut wire, payload).unwrap();
+            assert_eq!(wire.len(), 4 + payload.len());
+            let mut r = Dribble { inner: Cursor::new(wire) };
+            let back = read_frame(&mut r, MAX_FRAME_LEN).unwrap().expect("frame");
+            assert_eq!(back, payload);
+            assert!(read_frame(&mut r, MAX_FRAME_LEN).unwrap().is_none(), "clean EOF");
+        }
+    }
+
+    #[test]
+    fn several_frames_in_one_stream() {
+        let mut wire = Vec::new();
+        for i in 0..10u8 {
+            write_frame(&mut wire, &vec![i; i as usize]).unwrap();
+        }
+        let mut r = Dribble { inner: Cursor::new(wire) };
+        for i in 0..10u8 {
+            assert_eq!(read_frame(&mut r, MAX_FRAME_LEN).unwrap().unwrap(), vec![i; i as usize]);
+        }
+        assert!(read_frame(&mut r, MAX_FRAME_LEN).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_frames_are_rejected_without_reading_the_payload() {
+        // Garbage prefix decoding to ~4 GiB: rejected immediately.
+        let mut r = Cursor::new(vec![0xFF, 0xFF, 0xFF, 0xFF]);
+        let err = read_frame(&mut r, MAX_FRAME_LEN).unwrap_err();
+        assert!(format!("{err:#}").contains("oversized"), "{err:#}");
+        // And the encoder refuses to build one in the first place.
+        let too_big = vec![0u8; MAX_FRAME_LEN + 1];
+        assert!(encode_frame(&too_big).is_err());
+        // A frame just over a small cap is rejected too.
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[7u8; 100]).unwrap();
+        let err = read_frame(&mut Cursor::new(wire), 64).unwrap_err();
+        assert!(format!("{err:#}").contains("oversized"), "{err:#}");
+    }
+
+    #[test]
+    fn truncated_frames_error_instead_of_hanging() {
+        // Prefix promises 100 bytes, stream ends after 3.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&100u32.to_be_bytes());
+        wire.extend_from_slice(b"abc");
+        let err = read_frame(&mut Cursor::new(wire), MAX_FRAME_LEN).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+        // EOF inside the length prefix itself.
+        let err = read_frame(&mut Cursor::new(vec![0u8, 0]), MAX_FRAME_LEN).unwrap_err();
+        assert!(format!("{err:#}").contains("length prefix"), "{err:#}");
+    }
+
+    #[test]
+    fn message_frames_roundtrip() {
+        let mut wire = Vec::new();
+        write_message(&mut wire, &Message::Register { name: "w".into() }).unwrap();
+        write_message(&mut wire, &Message::Heartbeat).unwrap();
+        write_message(&mut wire, &Message::Submitted { id: 3 }).unwrap();
+        let mut r = Dribble { inner: Cursor::new(wire) };
+        assert!(matches!(
+            read_message(&mut r, MAX_FRAME_LEN).unwrap(),
+            Some(Message::Register { .. })
+        ));
+        assert!(matches!(read_message(&mut r, MAX_FRAME_LEN).unwrap(), Some(Message::Heartbeat)));
+        assert!(matches!(
+            read_message(&mut r, MAX_FRAME_LEN).unwrap(),
+            Some(Message::Submitted { id: 3 })
+        ));
+        assert!(read_message(&mut r, MAX_FRAME_LEN).unwrap().is_none());
+    }
+
+    #[test]
+    fn non_json_payloads_are_an_error_not_a_panic() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"definitely not json").unwrap();
+        assert!(read_message(&mut Cursor::new(wire), MAX_FRAME_LEN).is_err());
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[0xFF, 0xFE]).unwrap(); // invalid UTF-8
+        assert!(read_message(&mut Cursor::new(wire), MAX_FRAME_LEN).is_err());
+    }
+}

@@ -84,11 +84,21 @@
 //!   tolerance-equivalence against the interpreter oracle (both share
 //!   [`ir::interp::eval_op`] for compute) — plus the PJRT (XLA)
 //!   execution path for AOT artifacts.
-//! * [`api`] — the session facade described above.
-//! * [`coordinator`] — the L3 service: partition-request queue with
-//!   model-agnostic requests, compiled-model cache, worker pool, the
-//!   trust-but-verify acceptance gate, metrics (incl. queue depth), and
-//!   the CLI entry points.
+//! * [`api`] — the session facade described above, including the
+//!   wire-level job unit ([`api::PartitionRequest`] /
+//!   [`api::PartitionResponse`]) and the socket protocol's message
+//!   envelope ([`api::wire::Message`], [`api::wire::StatusReport`]).
+//! * [`coordinator`] — the L3 service: a partition-request queue with
+//!   model-agnostic requests, a compiled-model cache, the
+//!   trust-but-verify acceptance gate, metrics (queue depth, in-flight,
+//!   requeues, live workers), and **two transports over one
+//!   dispatch/verify path**: the in-process thread pool
+//!   ([`coordinator::Service`], the default) and the socket mode
+//!   ([`coordinator::transport`]) — length-prefixed JSON frames over
+//!   TCP, `toast serve --listen` / `toast worker --connect` /
+//!   `toast submit --connect`, with per-worker heartbeat liveness and
+//!   dead-worker requeue so killing a worker process mid-search loses
+//!   no requests.
 
 pub mod api;
 pub mod baselines;

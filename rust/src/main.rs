@@ -17,8 +17,32 @@
 //!   (fig8|fig9|fig10|ablations) or run the differential-validation
 //!   sweep (differential).
 //! * `models`    — list the model zoo with parameter counts.
-//! * `serve`     — run the trust-but-verify partition service demo.
+//! * `serve`     — run the trust-but-verify partition service: the
+//!   in-process demo by default, or `--listen HOST:PORT` to serve the
+//!   socket protocol (workers and clients connect over TCP; the bound
+//!   address is printed to stdout so `--listen 127.0.0.1:0` works).
+//! * `worker`    — `--connect HOST:PORT`: run the compiled-model-cache +
+//!   differential-replay worker loop as a standalone process against a
+//!   `serve --listen` server.
+//! * `submit`    — submit a batch of zoo requests and collect verified
+//!   solutions, either `--connect HOST:PORT` (socket client) or
+//!   `--workers N` (in-process service) — the same requests either way,
+//!   which is how CI proves the two transports produce byte-identical
+//!   artifacts.
 //! * `e2e`       — PJRT data-parallel training over AOT artifacts.
+//!
+//! ## Wire protocol (socket mode)
+//!
+//! Each frame is a 4-byte big-endian payload length followed by that
+//! many bytes of UTF-8 JSON (one message per frame; 64 MiB cap, so a
+//! garbage prefix cannot trigger unbounded allocation). A message is a
+//! tagged object `{"msg": TAG, ...}`: workers send
+//! `register`/`heartbeat`/`result` and receive `registered`/`job`;
+//! clients send `submit`/`status` and receive
+//! `submitted`/`response`/`status_report`; `error` reports a rejected
+//! frame and poisons only its own connection. Dead workers (no
+//! heartbeat within `--dead-after-ms`, or a closed socket) get their
+//! in-flight request requeued at the front of the shared queue.
 //!
 //! (Hand-rolled argument parsing: the offline environment provides no
 //! clap; see Cargo.toml.)
@@ -29,7 +53,7 @@ use std::process::ExitCode;
 use toast::api::{CompiledModel, Solution};
 use toast::baselines::Method;
 use toast::coordinator::experiments as exp;
-use toast::coordinator::{service, Service};
+use toast::coordinator::{service, Service, ServiceConfig};
 use toast::cost::CostModel;
 use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
 use toast::models::ModelKind;
@@ -52,6 +76,8 @@ fn main() -> ExitCode {
         "bench" => cmd_bench(&flags),
         "models" => cmd_models(),
         "serve" => cmd_serve(&flags),
+        "worker" => cmd_worker(&flags),
+        "submit" => cmd_submit(&flags),
         "e2e" => cmd_e2e(&flags),
         "help" | "--help" | "-h" => {
             usage();
@@ -86,7 +112,13 @@ USAGE: toast <command> [--flag value]...
   bench      --experiment <fig8|fig9|fig10|ablations|differential>
              [--scale tiny|bench|paper] [--json]
   models
-  serve      [--workers N] [--no-verify]
+  serve      [--workers N] [--no-verify] [--search-threads N]
+             [--listen HOST:PORT] [--dead-after-ms N]
+  worker     --connect HOST:PORT [--name ID] [--no-verify] [--search-threads N]
+  submit     (--connect HOST:PORT | --workers N) [--models a,b] [--methods x,y]
+             [--mesh 2x2] [--hw a100] [--budget N] [--seed N]
+             [--search-threads N] [--out-dir DIR] [--canonical]
+             [--expect-verified] [--status]
   e2e        [--devices N] [--steps N] [--artifacts DIR]"
     );
 }
@@ -473,14 +505,39 @@ fn cmd_models() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let workers: usize = flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(4);
-    let verify = !flags.contains_key("no-verify");
-    let svc = Service::start_with(toast::coordinator::ServiceConfig {
-        workers,
-        verify,
+/// The `workers`/`no-verify`/`search-threads` flags shared by `serve`,
+/// `worker` and `submit`, folded into a [`ServiceConfig`].
+fn service_config(flags: &HashMap<String, String>, default_workers: usize) -> ServiceConfig {
+    ServiceConfig {
+        workers: flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(default_workers),
+        verify: !flags.contains_key("no-verify"),
+        search_threads: flags.get("search-threads").and_then(|s| s.parse().ok()).unwrap_or(0),
         ..Default::default()
-    });
+    }
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    if let Some(addr) = flags.get("listen") {
+        // Socket mode: workers arrive over TCP (local threads optional,
+        // default none). Prints `listening on HOST:PORT` and serves
+        // until killed.
+        let svc_cfg = service_config(flags, 0);
+        let dead_after_ms: u64 =
+            flags.get("dead-after-ms").and_then(|s| s.parse().ok()).unwrap_or(5000);
+        let tcp_cfg = toast::coordinator::TcpServerConfig {
+            dead_after: std::time::Duration::from_millis(dead_after_ms),
+        };
+        eprintln!(
+            "socket service: {} local workers, verify gate {}, dead-after {dead_after_ms}ms",
+            svc_cfg.workers,
+            if svc_cfg.verify { "on" } else { "off" }
+        );
+        return toast::coordinator::transport::serve_listen(addr, svc_cfg, tcp_cfg);
+    }
+    let cfg = service_config(flags, 4);
+    let workers = cfg.workers;
+    let verify = cfg.verify;
+    let svc = Service::start_with(cfg);
     println!(
         "partition service up with {workers} workers (verify gate {}); submitting demo workload",
         if verify { "on" } else { "off" }
@@ -504,6 +561,138 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     }
     println!("metrics: {}", svc.metrics.snapshot());
     svc.shutdown();
+    Ok(())
+}
+
+fn cmd_worker(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let addr = flags
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("worker needs --connect HOST:PORT"))?;
+    let opts = toast::coordinator::WorkerOptions {
+        name: flags
+            .get("name")
+            .cloned()
+            .unwrap_or_else(|| format!("worker-{}", std::process::id())),
+        service: service_config(flags, 0),
+    };
+    toast::coordinator::transport::run_worker(addr, &opts)
+}
+
+/// Submit a batch of zoo requests — over a socket (`--connect`) or to a
+/// fresh in-process service (`--workers N`) — then collect, check and
+/// optionally persist every solution. With `--canonical` the artifacts
+/// zero their wall-clock field so two runs (or two transports) of the
+/// same deterministic workload are byte-identical.
+fn cmd_submit(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use toast::coordinator::PartitionResponse;
+
+    let models: Vec<ModelKind> = flags
+        .get("models")
+        .map(|s| s.as_str())
+        .unwrap_or("mlp,attention")
+        .split(',')
+        .map(|m| m.trim().parse().map_err(|e: String| anyhow::anyhow!(e)))
+        .collect::<anyhow::Result<_>>()?;
+    let methods: Vec<Method> = flags
+        .get("methods")
+        .map(|s| s.as_str())
+        .unwrap_or("toast,manual")
+        .split(',')
+        .map(|m| m.trim().parse().map_err(|e: String| anyhow::anyhow!(e)))
+        .collect::<anyhow::Result<_>>()?;
+    let mesh = get_mesh(flags)?;
+    let hw = get_hw(flags)?;
+    let budget: usize = flags.get("budget").and_then(|s| s.parse().ok()).unwrap_or(150);
+    let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(5);
+    let canonical = flags.contains_key("canonical");
+    let expect_verified = flags.contains_key("expect-verified");
+    let out_dir = flags.get("out-dir");
+    if let Some(dir) = out_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+
+    let mut requests = Vec::new();
+    for &model in &models {
+        for &method in &methods {
+            let mut req = service::default_request(model, method);
+            req.mesh = mesh.clone();
+            req.hardware = hw;
+            req.budget = budget;
+            req.seed = seed;
+            requests.push(req);
+        }
+    }
+    let n = requests.len();
+
+    // One closure handles every response identically in both modes.
+    let mut failures = 0usize;
+    let mut handle = |resp: PartitionResponse| -> anyhow::Result<()> {
+        let label = format!(
+            "{}_{}",
+            resp.request.model.kind().map(|k| k.name()).unwrap_or("inline"),
+            resp.request.method.name().to_lowercase()
+        );
+        match resp.result {
+            Ok(mut sol) => {
+                let verified = sol.validation.as_ref().is_some_and(|v| v.pass);
+                println!("job {} ({label}): {}", resp.id, sol.summarize());
+                if expect_verified && !verified {
+                    eprintln!("job {} ({label}): NOT verified", resp.id);
+                    failures += 1;
+                }
+                if let Some(dir) = out_dir {
+                    if canonical {
+                        // Wall-clock is the only nondeterministic field of
+                        // a deterministic (single-threaded, fixed-seed)
+                        // solution; zero it so artifacts diff clean.
+                        sol.search_time_s = 0.0;
+                    }
+                    std::fs::write(format!("{dir}/{label}.json"), sol.to_json_string())?;
+                }
+            }
+            Err(e) => {
+                eprintln!("job {} ({label}) failed: {e:#}", resp.id);
+                failures += 1;
+            }
+        }
+        Ok(())
+    };
+
+    let status_line = if let Some(addr) = flags.get("connect") {
+        if flags.contains_key("search-threads") || flags.contains_key("no-verify") {
+            eprintln!(
+                "note: --search-threads/--no-verify configure the process the search runs in; \
+                 in socket mode pass them to `toast serve`/`toast worker`, not to submit"
+            );
+        }
+        let mut client = toast::coordinator::ServiceClient::connect(addr)?;
+        println!("submitting {n} requests to {addr}");
+        for req in requests {
+            client.submit(req)?;
+        }
+        for _ in 0..n {
+            handle(client.recv_response()?)?;
+        }
+        client.status()?.render_line()
+    } else {
+        let cfg = service_config(flags, 2);
+        println!("submitting {n} requests to an in-process service ({} workers)", cfg.workers);
+        let svc = Service::start_with(cfg);
+        for req in requests {
+            svc.submit(req)?;
+        }
+        for _ in 0..n {
+            handle(svc.responses.recv()?)?;
+        }
+        let line = svc.metrics.report().render_line();
+        svc.shutdown();
+        line
+    };
+    if flags.contains_key("status") {
+        println!("status: {status_line}");
+    }
+    anyhow::ensure!(failures == 0, "{failures}/{n} jobs failed or arrived unverified");
+    println!("OK — {n}/{n} responses arrived{}", if expect_verified { ", all verified" } else { "" });
     Ok(())
 }
 

@@ -101,6 +101,19 @@ impl Json {
         Ok(v)
     }
 
+    /// Parse a JSON document from raw bytes — the framing layer hands
+    /// payloads around as byte buffers. UTF-8 validation happens here so
+    /// callers get a positioned [`JsonError`] instead of a panic.
+    pub fn parse_slice(bytes: &[u8]) -> Result<Json, JsonError> {
+        match std::str::from_utf8(bytes) {
+            Ok(text) => Json::parse(text),
+            Err(e) => Err(JsonError {
+                pos: e.valid_up_to(),
+                msg: "invalid UTF-8 in JSON payload".to_string(),
+            }),
+        }
+    }
+
     pub fn render(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
@@ -500,6 +513,13 @@ mod tests {
         // Reasonable nesting still parses.
         let ok = "[".repeat(64) + "1" + &"]".repeat(64);
         assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn parse_slice_checks_utf8() {
+        assert_eq!(Json::parse_slice(b"{\"a\":1}").unwrap().get("a").unwrap().as_f64(), Some(1.0));
+        let err = Json::parse_slice(&[b'"', 0xFF, b'"']).unwrap_err();
+        assert!(err.msg.contains("UTF-8"), "{err}");
     }
 
     #[test]

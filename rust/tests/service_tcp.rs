@@ -1,0 +1,370 @@
+//! Integration tests for the socket transport: real localhost sockets,
+//! real worker loops, crash-and-requeue semantics, and the
+//! transports-cannot-drift guarantee (thread mode and socket mode
+//! produce identical solutions).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use toast::api::wire::{Message, StatusReport};
+use toast::api::{CompiledModel, ModelSource, PartitionRequest, PartitionResponse, Solution};
+use toast::baselines::Method;
+use toast::coordinator::metrics::Metrics;
+use toast::coordinator::service::default_request;
+use toast::coordinator::transport::{
+    read_frame, read_message, run_worker_on, write_frame, write_message, MAX_FRAME_LEN,
+};
+use toast::coordinator::{
+    Service, ServiceClient, ServiceConfig, TcpServer, TcpServerConfig, WorkerOptions,
+};
+use toast::mesh::{HardwareKind, Mesh};
+use toast::models::ModelKind;
+use toast::util::rng::Rng;
+
+/// Start a socket server over a fresh service. Returns the bound
+/// address, a metrics handle, and the server (shut it down to end the
+/// worker loops cleanly).
+fn start_server(local_workers: usize, dead_after: Duration) -> (SocketAddr, Arc<Metrics>, TcpServer) {
+    let svc = Service::start_with(ServiceConfig {
+        workers: local_workers,
+        search_threads: 1,
+        ..Default::default()
+    });
+    let metrics = Arc::clone(&svc.metrics);
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind an ephemeral port");
+    let server = TcpServer::start(svc, listener, TcpServerConfig { dead_after }).unwrap();
+    (server.local_addr(), metrics, server)
+}
+
+fn deterministic_worker(name: &str) -> WorkerOptions {
+    WorkerOptions {
+        name: name.to_string(),
+        service: ServiceConfig { workers: 0, search_threads: 1, ..Default::default() },
+    }
+}
+
+fn random_request(rng: &mut Rng) -> PartitionRequest {
+    let kinds = ModelKind::all();
+    let meshes = [
+        Mesh::grid(&[("data", 2), ("model", 2)]),
+        Mesh::grid(&[("data", 4)]),
+        Mesh::grid(&[("a", 2), ("b", 2), ("c", 2)]),
+    ];
+    let methods = Method::all();
+    PartitionRequest {
+        id: rng.next_u64(),
+        model: ModelSource::zoo(*rng.choose(&kinds).unwrap()),
+        mesh: rng.choose(&meshes).unwrap().clone(),
+        hardware: *rng.choose(&HardwareKind::all()).unwrap(),
+        method: *rng.choose(&methods).unwrap(),
+        budget: rng.below(2000),
+        // Half the seeds exceed 2^53 to exercise the string encoding.
+        seed: if rng.below(2) == 0 { rng.below(1000) as u64 } else { rng.next_u64() | (1 << 60) },
+        verify: rng.below(2) == 0,
+    }
+}
+
+fn assert_request_eq(a: &PartitionRequest, b: &PartitionRequest) {
+    assert_eq!(a.id, b.id);
+    assert_eq!(a.model, b.model);
+    assert_eq!(a.mesh, b.mesh);
+    assert_eq!(a.hardware, b.hardware);
+    assert_eq!(a.method, b.method);
+    assert_eq!(a.budget, b.budget);
+    assert_eq!(a.seed, b.seed);
+    assert_eq!(a.verify, b.verify);
+}
+
+/// Property-style round-trip of request/response/status frames through a
+/// real localhost socket pair (an echo peer), covering randomized
+/// payloads, a real solution artifact, and an error response.
+#[test]
+fn frames_roundtrip_through_a_real_socket_pair() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let echo = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut rd = stream.try_clone().unwrap();
+        let mut wr = stream;
+        while let Some(bytes) = read_frame(&mut rd, MAX_FRAME_LEN).unwrap() {
+            write_frame(&mut wr, &bytes).unwrap();
+        }
+    });
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut rd = stream.try_clone().unwrap();
+    let mut wr = stream;
+    let mut rng = Rng::new(0xC0FFEE);
+
+    for _ in 0..24 {
+        let req = random_request(&mut rng);
+        write_message(&mut wr, &Message::Submit(req.clone())).unwrap();
+        match read_message(&mut rd, MAX_FRAME_LEN).unwrap().unwrap() {
+            Message::Submit(back) => assert_request_eq(&back, &req),
+            other => panic!("expected submit back, got '{}'", other.tag()),
+        }
+    }
+
+    // A response carrying a real, validated solution round-trips exactly.
+    let compiled = CompiledModel::from_kind(ModelKind::Mlp, false).unwrap();
+    let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
+    let sol = compiled.partition(&mesh).budget(40).seed(3).validate(true).run().unwrap();
+    let resp = PartitionResponse {
+        id: 77,
+        request: default_request(ModelKind::Mlp, Method::Toast),
+        result: Ok(sol.clone()),
+        rejected: false,
+    };
+    write_message(&mut wr, &Message::Result(resp)).unwrap();
+    match read_message(&mut rd, MAX_FRAME_LEN).unwrap().unwrap() {
+        Message::Result(back) => {
+            assert_eq!(back.id, 77);
+            assert_eq!(back.result.unwrap(), sol, "solution drifted through the socket");
+        }
+        other => panic!("expected result back, got '{}'", other.tag()),
+    }
+
+    // An error response and a status report survive too.
+    let resp = PartitionResponse {
+        id: 78,
+        request: default_request(ModelKind::Attention, Method::Alpa),
+        result: Err(anyhow::anyhow!("worker exploded")),
+        rejected: true,
+    };
+    write_message(&mut wr, &Message::Response(resp)).unwrap();
+    match read_message(&mut rd, MAX_FRAME_LEN).unwrap().unwrap() {
+        Message::Response(back) => {
+            assert!(back.rejected);
+            assert!(format!("{:#}", back.result.unwrap_err()).contains("worker exploded"));
+        }
+        other => panic!("expected response back, got '{}'", other.tag()),
+    }
+    let report = StatusReport { requests: 5, requeued: 2, workers: 3, ..Default::default() };
+    write_message(&mut wr, &Message::StatusReport(report)).unwrap();
+    match read_message(&mut rd, MAX_FRAME_LEN).unwrap().unwrap() {
+        Message::StatusReport(back) => assert_eq!(back, report),
+        other => panic!("expected status report back, got '{}'", other.tag()),
+    }
+
+    drop(wr); // close the write half so the echo loop sees EOF
+    drop(rd);
+    echo.join().unwrap();
+}
+
+/// Garbage bytes and oversized frames poison only their own connection:
+/// the listener keeps accepting and a well-formed client still gets a
+/// verified solution afterwards.
+#[test]
+fn garbage_and_oversized_frames_do_not_kill_the_listener() {
+    let (addr, _metrics, server) = start_server(1, Duration::from_secs(5));
+
+    // 1. Raw garbage whose "length prefix" decodes to ~4 GiB.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&[0xFF; 64]).unwrap();
+        // The server answers with an error frame (best effort) and
+        // closes; reading to EOF must terminate.
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+    }
+
+    // 2. A well-framed payload that is not JSON.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write_frame(&mut s, b"not json at all").unwrap();
+        let mut rd = s.try_clone().unwrap();
+        match read_message(&mut rd, MAX_FRAME_LEN).unwrap() {
+            Some(Message::Error { message }) => {
+                assert!(message.contains("bad frame"), "{message}")
+            }
+            other => panic!("expected an error frame, got {:?}", other.map(|m| m.tag())),
+        }
+    }
+
+    // 3. A protocol violation: a client starting with a worker-only tag.
+    {
+        let s = TcpStream::connect(addr).unwrap();
+        let mut rd = s.try_clone().unwrap();
+        let mut wr = s;
+        write_message(&mut wr, &Message::Heartbeat).unwrap();
+        match read_message(&mut rd, MAX_FRAME_LEN).unwrap() {
+            Some(Message::Error { message }) => {
+                assert!(message.contains("protocol error"), "{message}")
+            }
+            other => panic!("expected an error frame, got {:?}", other.map(|m| m.tag())),
+        }
+    }
+
+    // 4. The listener survived all of it: a real request still verifies.
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+    let mut req = default_request(ModelKind::Mlp, Method::Manual);
+    req.budget = 40;
+    let id = client.submit(req).unwrap();
+    let resp = client.recv_response().unwrap();
+    assert_eq!(resp.id, id);
+    let sol = resp.result.expect("job succeeds after the garbage connections");
+    assert!(sol.validation.expect("trust-but-verify ran").pass);
+    server.shutdown();
+}
+
+/// A worker that dies mid-request is detected, its request is requeued
+/// (exactly once) and completed by a surviving worker, and the metrics
+/// show zero lost requests.
+#[test]
+fn dead_worker_requeues_in_flight_and_a_survivor_completes() {
+    let (addr, metrics, server) = start_server(0, Duration::from_millis(1500));
+
+    // A fake worker that registers, accepts the job, then "crashes"
+    // without answering (socket drops on thread exit).
+    let crasher = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut rd = stream.try_clone().unwrap();
+        let mut wr = stream;
+        write_message(&mut wr, &Message::Register { name: "crasher".into() }).unwrap();
+        match read_message(&mut rd, MAX_FRAME_LEN).unwrap() {
+            Some(Message::Registered { .. }) => {}
+            other => panic!("expected registration ack, got {:?}", other.map(|m| m.tag())),
+        }
+        loop {
+            match read_message(&mut rd, MAX_FRAME_LEN).unwrap() {
+                Some(Message::Job(req)) => return req.id,
+                Some(_) => continue,
+                None => panic!("server closed before dispatching the job"),
+            }
+        }
+    });
+
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+    let mut req = default_request(ModelKind::Mlp, Method::Toast);
+    req.budget = 60;
+    req.seed = 4;
+    let id = client.submit(req).unwrap();
+
+    // The crasher owns the only connection, so it must receive the job —
+    // and then it dies.
+    let dispatched_id = crasher.join().unwrap();
+    assert_eq!(dispatched_id, id);
+
+    // A surviving worker (the *real* worker loop) joins and finishes the
+    // requeued request.
+    let survivor = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        run_worker_on(stream, &deterministic_worker("survivor")).unwrap();
+    });
+
+    let resp = client.recv_response().unwrap();
+    assert_eq!(resp.id, id);
+    let sol = resp.result.expect("completed by the survivor");
+    assert!(
+        sol.validation.expect("trust-but-verify ran in the worker process").pass,
+        "requeued request must still arrive verified"
+    );
+
+    let report = client.status().unwrap();
+    assert_eq!(report.requeued, 1, "exactly one requeue: {}", report.render_line());
+    assert_eq!(report.completed, 1, "{}", report.render_line());
+    assert_eq!(report.failed, 0, "{}", report.render_line());
+    assert_eq!(report.queued, 0, "zero lost requests: {}", report.render_line());
+    assert_eq!(report.in_flight, 0, "{}", report.render_line());
+    assert_eq!(report.verified, 1, "{}", report.render_line());
+    assert_eq!(metrics.report().requeued, 1);
+
+    // Shutdown closes the worker socket; the survivor's loop returns Ok.
+    server.shutdown();
+    survivor.join().unwrap();
+}
+
+/// The poison-request guard: a request that keeps killing its workers is
+/// requeued at most `MAX_REQUEUES` times, then failed back to the client
+/// instead of serially destroying the fleet.
+#[test]
+fn poison_request_is_failed_after_the_requeue_cap() {
+    use toast::coordinator::transport::MAX_REQUEUES;
+    let (addr, metrics, server) = start_server(0, Duration::from_secs(5));
+
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+    let id = client.submit(default_request(ModelKind::Mlp, Method::Manual)).unwrap();
+
+    // The request gets MAX_REQUEUES + 1 chances; every worker "crashes".
+    for round in 0..=MAX_REQUEUES {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut rd = stream.try_clone().unwrap();
+        let mut wr = stream;
+        write_message(&mut wr, &Message::Register { name: format!("crasher-{round}") })
+            .unwrap();
+        match read_message(&mut rd, MAX_FRAME_LEN).unwrap() {
+            Some(Message::Registered { .. }) => {}
+            other => panic!("expected registration ack, got {:?}", other.map(|m| m.tag())),
+        }
+        loop {
+            match read_message(&mut rd, MAX_FRAME_LEN).unwrap() {
+                Some(Message::Job(req)) => {
+                    assert_eq!(req.id, id, "the poison request is always dispatched first");
+                    break;
+                }
+                Some(_) => continue,
+                None => panic!("server closed before dispatching (round {round})"),
+            }
+        }
+        // Connection drops here — the worker "crashed" mid-request.
+    }
+
+    let resp = client.recv_response().unwrap();
+    assert_eq!(resp.id, id);
+    let err = resp.result.expect_err("the poison request must fail, not hang or loop");
+    assert!(format!("{err:#}").contains("giving up"), "{err:#}");
+
+    let report = client.status().unwrap();
+    assert_eq!(report.requeued, u64::from(MAX_REQUEUES), "{}", report.render_line());
+    assert_eq!(report.failed, 1, "{}", report.render_line());
+    assert_eq!(report.completed, 0, "{}", report.render_line());
+    assert_eq!(report.queued, 0, "{}", report.render_line());
+    assert_eq!(report.in_flight, 0, "{}", report.render_line());
+    assert_eq!(metrics.report().requeued, u64::from(MAX_REQUEUES));
+    server.shutdown();
+}
+
+/// The acceptance gate in miniature: for a fixed seed and model, the
+/// in-process thread mode and the socket mode produce byte-identical
+/// `Solution` JSON (modulo the wall-clock field both modes zero).
+#[test]
+fn socket_mode_and_thread_mode_produce_identical_solution_json() {
+    let canonical = |mut sol: Solution| {
+        sol.search_time_s = 0.0;
+        sol.to_json_string()
+    };
+    let mut req = default_request(ModelKind::Attention, Method::Toast);
+    req.budget = 80;
+    req.seed = 11;
+
+    // Thread mode, single-threaded search for determinism.
+    let svc = Service::start_with(ServiceConfig {
+        workers: 1,
+        search_threads: 1,
+        ..Default::default()
+    });
+    svc.submit(req.clone()).unwrap();
+    let local = svc.responses.recv().unwrap().result.expect("thread mode succeeds");
+    svc.shutdown();
+
+    // Socket mode with a real worker loop on the other end.
+    let (addr, _metrics, server) = start_server(0, Duration::from_secs(5));
+    let worker = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        run_worker_on(stream, &deterministic_worker("w0")).unwrap();
+    });
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+    client.submit(req).unwrap();
+    let remote = client.recv_response().unwrap().result.expect("socket mode succeeds");
+    server.shutdown();
+    worker.join().unwrap();
+
+    assert!(local.validation.as_ref().is_some_and(|v| v.pass));
+    assert_eq!(
+        canonical(local),
+        canonical(remote),
+        "the two transports drifted — they must share one dispatch/verify path"
+    );
+}
