@@ -42,7 +42,11 @@ use crate::ir::Func;
 use crate::mesh::{HardwareKind, HardwareProfile, Mesh};
 use crate::models::ModelKind;
 use crate::nda::Nda;
-use crate::search::{build_actions, Action, ActionSpaceConfig, SearchConfig};
+use crate::pipeline::{cut_stages, joint_search, schedule, JointSearchConfig};
+use crate::search::{
+    build_actions, build_stage_actions, Action, ActionSpaceConfig, SearchConfig,
+    StageActionConfig,
+};
 use crate::sharding::{partition, ShardingSpec};
 use crate::util::json::Json;
 use anyhow::{anyhow, ensure};
@@ -396,6 +400,7 @@ impl CompiledModel {
             seed: 0,
             validate: false,
             validate_seed: 7,
+            stage_opts: None,
         }
     }
 }
@@ -539,6 +544,30 @@ pub fn strategy_for(method: Method) -> Box<dyn Strategy> {
 // Partitioner (session builder)
 // ---------------------------------------------------------------------------
 
+/// Options for the pipeline-stage dimension of a session (see
+/// [`Partitioner::stages`]).
+#[derive(Clone, Debug)]
+pub struct StageOptions {
+    /// Stage counts offered to the search (unsupported counts are
+    /// skipped).
+    pub counts: Vec<usize>,
+    /// GPipe microbatch count the schedule cost model prices with.
+    pub microbatches: usize,
+    /// Cut-point variants per stage count.
+    pub max_cuts_per_count: usize,
+    /// Require a staged solution: flat states cannot win the search and
+    /// the session errors if no feasible staged state exists. Without
+    /// it, the joint search legitimately returns a flat solution
+    /// whenever staging does not pay for the model at hand.
+    pub require: bool,
+}
+
+impl Default for StageOptions {
+    fn default() -> Self {
+        StageOptions { counts: vec![2, 4], microbatches: 8, max_cuts_per_count: 2, require: false }
+    }
+}
+
 /// A staged partitioning session. Construct with
 /// [`CompiledModel::partition`], configure with the chained setters, and
 /// finish with [`Partitioner::run`].
@@ -552,6 +581,7 @@ pub struct Partitioner<'a> {
     seed: u64,
     validate: bool,
     validate_seed: u64,
+    stage_opts: Option<StageOptions>,
 }
 
 impl<'a> Partitioner<'a> {
@@ -600,6 +630,19 @@ impl<'a> Partitioner<'a> {
         self
     }
 
+    /// Enable the pipeline-stage dimension: the session runs the joint
+    /// (stages × sharding) MCTS ([`crate::pipeline::joint_search`])
+    /// instead of the configured strategy, offering stage-count/cut
+    /// actions alongside the NDA sharding actions. The winning solution
+    /// carries its [`StageAssignment`] (if any stage action won) on the
+    /// wire, prices through the GPipe schedule model, and — with
+    /// [`Partitioner::validate`] — replays end to end on the staged SPMD
+    /// executor against the interpreter oracle.
+    pub fn stages(mut self, opts: StageOptions) -> Self {
+        self.stage_opts = Some(opts);
+        self
+    }
+
     /// Run the session: solve, price through the materialized oracle,
     /// optionally validate, and package the [`Solution`].
     pub fn run(self) -> crate::Result<Solution> {
@@ -610,6 +653,9 @@ impl<'a> Partitioner<'a> {
             "validate(true) executes the model numerically; this IR is production-size \
              and would take hours — validate a scaled build instead"
         );
+        if self.stage_opts.is_some() {
+            return self.run_with_stages();
+        }
         let func = self.model.func();
         let cost_model = CostModel::new(HardwareProfile::new(self.hardware));
         let t0 = Instant::now();
@@ -643,6 +689,82 @@ impl<'a> Partitioner<'a> {
             base,
             relative,
             oom,
+            stages: None,
+            evals: out.evals,
+            search_time_s,
+            validation,
+        })
+    }
+
+    /// The staged session path: joint (stages × sharding) MCTS, schedule
+    /// pricing, staged differential validation.
+    fn run_with_stages(self) -> crate::Result<Solution> {
+        let opts = self.stage_opts.clone().expect("checked by run()");
+        // The staged executor appends the stage axis behind the intra
+        // mesh; fail up front, as an error, rather than panicking deep
+        // inside validation.
+        anyhow::ensure!(
+            self.mesh.axis_by_name(crate::pipeline::STAGE_AXIS_NAME).is_none(),
+            "mesh axis name '{}' is reserved when searching pipeline stages \
+             (the stage axis is appended behind the mesh)",
+            crate::pipeline::STAGE_AXIS_NAME
+        );
+        let func = self.model.func();
+        let cost_model = CostModel::new(HardwareProfile::new(self.hardware));
+        let t0 = Instant::now();
+        let actions = self.model.actions(&self.mesh, &self.action_cfg);
+        let stage_actions = build_stage_actions(
+            func,
+            self.model.nda(),
+            &StageActionConfig {
+                counts: opts.counts.clone(),
+                microbatches: opts.microbatches,
+                max_cuts_per_count: opts.max_cuts_per_count,
+            },
+        );
+        let jcfg = JointSearchConfig {
+            budget: self.budget,
+            seed: self.seed,
+            require_stage: opts.require,
+            ..Default::default()
+        };
+        let out = joint_search(func, &self.mesh, &cost_model, &actions, &stage_actions, &jcfg)?;
+        let search_time_s = t0.elapsed().as_secs_f64();
+
+        let stage_assignment = out.stage_action.map(|i| StageAssignment {
+            boundaries: stage_actions[i].boundaries.clone(),
+            microbatches: stage_actions[i].microbatches,
+        });
+        let (cost, base, relative) = match &stage_assignment {
+            Some(sa) => price_staged_spec(func, &out.spec, sa, &self.mesh, &cost_model)?,
+            None => price_spec(func, &out.spec, &self.mesh, &cost_model)?,
+        };
+        let oom = !cost_model.fits(&cost);
+        let validation = if self.validate {
+            Some(match &stage_assignment {
+                Some(sa) => validate_staged_solution_spec(
+                    func,
+                    &out.spec,
+                    sa,
+                    &self.mesh,
+                    self.validate_seed,
+                )?,
+                None => validate_solution_spec(func, &out.spec, &self.mesh, self.validate_seed)?,
+            })
+        } else {
+            None
+        };
+        Ok(Solution {
+            model: self.model.source(),
+            mesh: self.mesh,
+            hardware: self.hardware,
+            strategy: "TOAST+stages".to_string(),
+            spec: out.spec,
+            cost,
+            base,
+            relative,
+            oom,
+            stages: stage_assignment,
             evals: out.evals,
             search_time_s,
             validation,
@@ -706,6 +828,103 @@ impl ValidationRecord {
     }
 }
 
+/// A pipeline-stage assignment carried by a [`Solution`]: the cut
+/// points of [`crate::pipeline::cut_stages`] plus the microbatch count
+/// the schedule was priced with. Serializable, so stage decisions cross
+/// process boundaries exactly like sharding specs do.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageAssignment {
+    /// Instruction-index cut points (strictly increasing, interior).
+    pub boundaries: Vec<usize>,
+    /// GPipe microbatch count.
+    pub microbatches: usize,
+}
+
+impl StageAssignment {
+    /// Number of pipeline stages.
+    pub fn stages(&self) -> usize {
+        self.boundaries.len() + 1
+    }
+
+    /// Wire format: `{"boundaries":[...],"microbatches":N}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "boundaries",
+                Json::Arr(self.boundaries.iter().map(|&b| Json::n(b as f64)).collect()),
+            ),
+            ("microbatches", Json::n(self.microbatches as f64)),
+        ])
+    }
+
+    /// Inverse of [`StageAssignment::to_json`]; round-trips exactly.
+    pub fn from_json(j: &Json) -> crate::Result<StageAssignment> {
+        let ctx = "stage assignment";
+        let bounds = j
+            .get("boundaries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{ctx}: missing 'boundaries' array"))?;
+        let boundaries = bounds
+            .iter()
+            .map(|b| {
+                b.as_usize()
+                    .ok_or_else(|| anyhow!("{ctx}: boundary not a non-negative integer"))
+            })
+            .collect::<crate::Result<Vec<usize>>>()?;
+        for w in boundaries.windows(2) {
+            ensure!(w[0] < w[1], "{ctx}: boundaries must be strictly increasing");
+        }
+        let microbatches = wire::usize_field(j, "microbatches", ctx)?;
+        ensure!(microbatches >= 1, "{ctx}: microbatches must be >= 1");
+        Ok(StageAssignment { boundaries, microbatches })
+    }
+}
+
+/// Price a *staged* spec through the materialized oracle: cut the
+/// function, partition and evaluate every stage, compose with the GPipe
+/// schedule model, and return `(cost, base, relative)` — `base` stays
+/// the unstaged, unsharded module so staged and flat solutions share one
+/// reference point. The single pricing path shared by the staged session
+/// and `toast apply`'s exact-reproduction gate.
+pub fn price_staged_spec(
+    func: &Func,
+    spec: &ShardingSpec,
+    sa: &StageAssignment,
+    mesh: &Mesh,
+    model: &CostModel,
+) -> crate::Result<(Cost, Cost, f64)> {
+    let (ulocal, _) = partition(func, &ShardingSpec::unsharded(func), mesh)?;
+    let base = model.evaluate(&ulocal, mesh);
+    let sm = cut_stages(func, &sa.boundaries)?;
+    let sc = schedule::price_staged_oracle(&sm, spec, mesh, model, sa.microbatches)?;
+    let relative = model.relative(&sc.cost, &base);
+    Ok((sc.cost, base, relative))
+}
+
+/// Replay a staged spec end to end on the staged SPMD executor
+/// ([`crate::pipeline::run_staged`]) against the interpreter oracle and
+/// summarize as a [`ValidationRecord`] — the staged twin of
+/// [`validate_solution_spec`].
+pub fn validate_staged_solution_spec(
+    func: &Func,
+    spec: &ShardingSpec,
+    sa: &StageAssignment,
+    mesh: &Mesh,
+    seed: u64,
+) -> crate::Result<ValidationRecord> {
+    use crate::runtime::diff::{differential_test_staged, DEFAULT_REL_TOL};
+    spec.check_against(func, mesh)?;
+    let r = differential_test_staged(func, spec, &sa.boundaries, mesh, seed)?;
+    Ok(ValidationRecord {
+        max_rel_err: r.max_rel_err as f64,
+        max_abs_diff: r.max_abs_diff as f64,
+        collectives: r.stats.total_collectives(),
+        tol: DEFAULT_REL_TOL as f64,
+        pass: r.within(DEFAULT_REL_TOL),
+        seed,
+    })
+}
+
 /// Price `spec` through the materialized oracle: partition the
 /// unsharded and sharded modules, evaluate both, and return
 /// `(cost, base, relative)`. The single pricing path shared by
@@ -767,6 +986,10 @@ pub struct Solution {
     pub relative: f64,
     /// Best found solution still exceeds device memory.
     pub oom: bool,
+    /// Pipeline-stage assignment, when the session searched stages and a
+    /// stage action won (`None` for flat SPMD solutions — the wire field
+    /// is also absent in pre-pipeline artifacts, which reload as `None`).
+    pub stages: Option<StageAssignment>,
     /// State evaluations performed by the strategy.
     pub evals: usize,
     /// Strategy wall-clock, seconds.
@@ -791,6 +1014,13 @@ impl Solution {
             ("base", self.base.to_json()),
             ("relative", Json::n(self.relative)),
             ("oom", Json::Bool(self.oom)),
+            (
+                "stages",
+                match &self.stages {
+                    Some(sa) => sa.to_json(),
+                    None => Json::Null,
+                },
+            ),
             ("evals", Json::n(self.evals as f64)),
             ("search_time_s", Json::n(self.search_time_s)),
             (
@@ -814,6 +1044,11 @@ impl Solution {
             Json::Null => None,
             v => Some(ValidationRecord::from_json(v)?),
         };
+        // Absent in pre-pipeline artifacts; absence means "not staged".
+        let stages = match j.get("stages") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(StageAssignment::from_json(v)?),
+        };
         Ok(Solution {
             model: ModelSource::from_json(wire::field(j, "model", ctx)?)?,
             mesh: Mesh::from_json(wire::field(j, "mesh", ctx)?)?,
@@ -826,6 +1061,7 @@ impl Solution {
             base: Cost::from_json(wire::field(j, "base", ctx)?)?,
             relative: wire::f64_field(j, "relative", ctx)?,
             oom: wire::bool_field(j, "oom", ctx)?,
+            stages,
             evals: wire::usize_field(j, "evals", ctx)?,
             search_time_s: wire::f64_field(j, "search_time_s", ctx)?,
             validation,
@@ -845,13 +1081,17 @@ impl Solution {
     /// One-line summary for logs and the CLI.
     pub fn summarize(&self) -> String {
         format!(
-            "{} × {}: step {:.3} ms (base {:.3} ms, relative {:.4}){}, {} evals, search {:.2}s{}",
+            "{} × {}: step {:.3} ms (base {:.3} ms, relative {:.4}){}{}, {} evals, search {:.2}s{}",
             self.model.name(),
             self.strategy,
             self.cost.runtime_s * 1e3,
             self.base.runtime_s * 1e3,
             self.relative,
             if self.oom { " [OOM]" } else { "" },
+            match &self.stages {
+                Some(sa) => format!(" [{} stages, m={}]", sa.stages(), sa.microbatches),
+                None => String::new(),
+            },
             self.evals,
             self.search_time_s,
             match &self.validation {
@@ -944,6 +1184,75 @@ mod tests {
         let cost_model = CostModel::new(HardwareProfile::new(back.hardware));
         let (_, _, relative) = price_spec(&func, &back.spec, &back.mesh, &cost_model).unwrap();
         assert_eq!(relative, back.relative, "re-priced relative cost must match exactly");
+    }
+
+    #[test]
+    fn stage_assignment_json_roundtrips() {
+        let sa = StageAssignment { boundaries: vec![3, 9, 20], microbatches: 8 };
+        assert_eq!(sa.stages(), 4);
+        let back =
+            StageAssignment::from_json(&Json::parse(&sa.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back, sa);
+        // non-increasing boundaries and zero microbatches are rejected
+        assert!(StageAssignment::from_json(
+            &Json::parse("{\"boundaries\":[5,5],\"microbatches\":8}").unwrap()
+        )
+        .is_err());
+        assert!(StageAssignment::from_json(
+            &Json::parse("{\"boundaries\":[1],\"microbatches\":0}").unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn staged_session_roundtrips_and_reprices_exactly() {
+        let compiled = CompiledModel::from_kind(ModelKind::Mlp, false).unwrap();
+        let mesh = Mesh::grid(&[("d", 2)]);
+        // require: the staged (`Some`) wire/pricing/validation path must
+        // be exercised even though staging does not pay on an
+        // interpreter-sized model (hop latency dominates its
+        // microsecond step).
+        let sol = compiled
+            .partition(&mesh)
+            .stages(StageOptions { require: true, ..Default::default() })
+            .action_config(ActionSpaceConfig { min_color_dims: 1, ..Default::default() })
+            .budget(120)
+            .seed(3)
+            .validate(true)
+            .run()
+            .unwrap();
+        assert_eq!(sol.strategy, "TOAST+stages");
+        assert!(sol.stages.is_some(), "require: true must yield a staged artifact");
+        let v = sol.validation.as_ref().expect("validation requested");
+        assert!(v.pass, "staged winner diverged: {:.3e}", v.max_rel_err);
+        let back = Solution::from_json_str(&sol.to_json_string()).unwrap();
+        assert_eq!(back, sol, "staged wire round-trip must be exact");
+        // The reloaded artifact re-prices to the identical cost through
+        // the same staged/flat path the producer used.
+        let func = back.model.build();
+        let cm = CostModel::new(HardwareProfile::new(back.hardware));
+        let (cost, _base, relative) = match &back.stages {
+            Some(sa) => price_staged_spec(&func, &back.spec, sa, &back.mesh, &cm).unwrap(),
+            None => price_spec(&func, &back.spec, &back.mesh, &cm).unwrap(),
+        };
+        assert_eq!(relative, back.relative, "staged re-pricing must be exact");
+        assert_eq!(cost, back.cost);
+    }
+
+    #[test]
+    fn pre_pipeline_artifacts_reload_without_a_stages_field() {
+        // Simulate an artifact written before the pipeline subsystem by
+        // deleting the field: it must reload as an unstaged solution.
+        let compiled = CompiledModel::from_kind(ModelKind::Mlp, false).unwrap();
+        let mesh = Mesh::grid(&[("d", 2)]);
+        let sol = compiled.partition(&mesh).budget(30).run().unwrap();
+        let mut j = Json::parse(&sol.to_json_string()).unwrap();
+        if let Json::Obj(fields) = &mut j {
+            fields.retain(|(k, _)| k != "stages");
+        }
+        let back = Solution::from_json(&j).unwrap();
+        assert_eq!(back.stages, None);
+        assert_eq!(back.spec, sol.spec);
     }
 
     #[test]

@@ -56,6 +56,9 @@ pub enum Experiment {
     /// Differential-validation sweep: SPMD simulator vs. interpreter
     /// oracle over the scaled zoo (see [`run_differential_suite`]).
     Differential,
+    /// Pipeline-stage sweep: staged execution vs. the interpreter oracle
+    /// plus schedule-pricing agreement (see [`run_pipeline_suite`]).
+    Pipeline,
 }
 
 impl std::str::FromStr for Experiment {
@@ -67,8 +70,9 @@ impl std::str::FromStr for Experiment {
             "fig10" => Ok(Experiment::Fig10),
             "ablations" => Ok(Experiment::Ablations),
             "differential" | "diff" => Ok(Experiment::Differential),
+            "pipeline" | "stages" => Ok(Experiment::Pipeline),
             other => Err(format!(
-                "unknown experiment '{other}' (fig8|fig9|fig10|ablations|differential)"
+                "unknown experiment '{other}' (fig8|fig9|fig10|ablations|differential|pipeline)"
             )),
         }
     }
@@ -543,6 +547,161 @@ pub fn run_differential_suite(models: &[ModelKind], seed: u64, tol: f32) -> Vec<
     rows
 }
 
+/// One row of the pipeline-stage sweep: a `(model, stages, mesh, spec)`
+/// combination executed on the staged SPMD runtime and priced through
+/// both schedule paths.
+#[derive(Clone, Debug)]
+pub struct PipeRow {
+    pub model: ModelKind,
+    pub stages: usize,
+    pub mesh: String,
+    pub spec_kind: &'static str,
+    /// Worst relative divergence of staged execution vs. the oracle.
+    pub max_rel_err: f64,
+    /// Relative gap between symbolic and oracle schedule pricing.
+    pub price_gap: f64,
+    pub pass: bool,
+    pub error: Option<String>,
+}
+
+/// Run the pipeline-stage differential sweep: every model × stage count
+/// is cut at compute-balanced NDA-legal boundaries and, for two meshes ×
+/// {unsharded, action-walk} specs, (a) executed end to end on the staged
+/// SPMD simulator against the interpreter oracle (≤ `tol` relative) and
+/// (b) priced through both the symbolic and the simulate-then-price
+/// schedule paths (≤ 1e-6 relative gap). Stage counts a model's legal
+/// boundaries cannot support produce an informational `uncuttable` row
+/// that passes.
+pub fn run_pipeline_suite(
+    models: &[ModelKind],
+    stage_counts: &[usize],
+    seed: u64,
+    tol: f32,
+) -> Vec<PipeRow> {
+    use crate::mesh::HardwareProfile;
+    use crate::pipeline::{self, schedule};
+    let mut rows = Vec::new();
+    let cost_model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    for &mk in models {
+        let func = mk.build_scaled();
+        let nda = crate::nda::Nda::analyze(&func);
+        let legal = pipeline::legal_boundaries(&func, &nda);
+        for &k in stage_counts {
+            let Some(bounds) = pipeline::balanced_boundaries(&func, &legal, k, pipeline::compute_weight)
+            else {
+                rows.push(PipeRow {
+                    model: mk,
+                    stages: k,
+                    mesh: "-".to_string(),
+                    spec_kind: "uncuttable",
+                    max_rel_err: 0.0,
+                    price_gap: 0.0,
+                    pass: true,
+                    error: Some(format!("{} legal boundaries support no {k}-stage cut", legal.len())),
+                });
+                continue;
+            };
+            let sm = match pipeline::cut_stages(&func, &bounds) {
+                Ok(sm) => sm,
+                Err(e) => {
+                    rows.push(PipeRow {
+                        model: mk,
+                        stages: k,
+                        mesh: "-".to_string(),
+                        spec_kind: "cut",
+                        max_rel_err: f64::INFINITY,
+                        price_gap: f64::INFINITY,
+                        pass: false,
+                        error: Some(format!("{e:#}")),
+                    });
+                    continue;
+                }
+            };
+            for mesh in [Mesh::grid(&[("d", 2)]), Mesh::grid(&[("a", 2), ("b", 2)])] {
+                let specs: Vec<(&'static str, ShardingSpec)> = vec![
+                    ("unsharded", ShardingSpec::unsharded(&func)),
+                    ("action-walk", action_walk_spec(&func, &nda, &mesh, 3)),
+                ];
+                for (kind, spec) in specs {
+                    let diff = crate::runtime::diff::differential_test_staged(
+                        &func, &spec, &bounds, &mesh, seed,
+                    );
+                    let price = schedule::price_staged_symbolic(
+                        &sm,
+                        &spec,
+                        &mesh,
+                        &cost_model,
+                        8,
+                    )
+                    .and_then(|a| {
+                        schedule::price_staged_oracle(&sm, &spec, &mesh, &cost_model, 8)
+                            .map(|b| (a, b))
+                    });
+                    let (max_rel_err, diff_err) = match &diff {
+                        Ok(r) => (r.max_rel_err as f64, None),
+                        Err(e) => (f64::INFINITY, Some(format!("{e:#}"))),
+                    };
+                    let (price_gap, price_err) = match &price {
+                        Ok((a, b)) => (
+                            (a.cost.runtime_s - b.cost.runtime_s).abs()
+                                / b.cost.runtime_s.abs().max(1e-30),
+                            None,
+                        ),
+                        Err(e) => (f64::INFINITY, Some(format!("{e:#}"))),
+                    };
+                    let pass = max_rel_err <= tol as f64 && price_gap <= 1e-6;
+                    rows.push(PipeRow {
+                        model: mk,
+                        stages: k,
+                        mesh: mesh.describe(),
+                        spec_kind: kind,
+                        max_rel_err,
+                        price_gap,
+                        pass,
+                        error: diff_err.or(price_err),
+                    });
+                }
+            }
+        }
+    }
+    rows
+}
+
+/// Render the pipeline sweep as a table. `tol` must be the tolerance the
+/// rows' pass/FAIL column was computed with.
+pub fn format_pipeline(rows: &[PipeRow], tol: f32) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "== pipeline stages (staged SPMD vs. oracle + schedule-pricing agreement) =="
+    );
+    let _ = writeln!(
+        out,
+        "{:<10} {:>6} {:<22} {:<12} {:>12} {:>12} {:>6}",
+        "model", "stages", "mesh", "spec", "max_rel_err", "price_gap", "ok"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<10} {:>6} {:<22} {:<12} {:>12.3e} {:>12.3e} {:>6}",
+            r.model.name(),
+            r.stages,
+            r.mesh,
+            r.spec_kind,
+            r.max_rel_err,
+            r.price_gap,
+            if r.pass { "pass" } else { "FAIL" }
+        );
+        if let Some(err) = &r.error {
+            let _ = writeln!(out, "    ^ {err}");
+        }
+    }
+    let failed = rows.iter().filter(|r| !r.pass).count();
+    let _ = writeln!(out, "{} rows, {} failed (exec tol {:.1e}, price tol 1e-6)", rows.len(), failed, tol);
+    out
+}
+
 /// Render the differential suite as a table. `tol` must be the
 /// tolerance the rows' pass/FAIL column was computed with.
 pub fn format_differential(rows: &[DiffRow], tol: f32) -> String {
@@ -725,6 +884,19 @@ mod tests {
             format_differential(&rows, DEFAULT_REL_TOL)
         );
         assert!(format_differential(&rows, DEFAULT_REL_TOL).contains("differential validation"));
+    }
+
+    #[test]
+    fn pipeline_suite_mlp_passes() {
+        use crate::runtime::diff::DEFAULT_REL_TOL;
+        let rows = run_pipeline_suite(&[ModelKind::Mlp], &[2], 11, DEFAULT_REL_TOL);
+        assert!(!rows.is_empty());
+        assert!(
+            rows.iter().all(|r| r.pass),
+            "pipeline suite failed:\n{}",
+            format_pipeline(&rows, DEFAULT_REL_TOL)
+        );
+        assert!(format_pipeline(&rows, DEFAULT_REL_TOL).contains("pipeline stages"));
     }
 
     #[test]

@@ -29,4 +29,4 @@ pub use experiments::{BenchScale, Experiment};
 pub use service::{
     JobQueue, ModelCache, PartitionRequest, PartitionResponse, Popped, Service, ServiceConfig,
 };
-pub use transport::{ServiceClient, TcpServer, TcpServerConfig, WorkerOptions};
+pub use transport::{ReconnectPolicy, ServiceClient, TcpServer, TcpServerConfig, WorkerOptions};

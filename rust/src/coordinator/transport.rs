@@ -18,7 +18,10 @@
 //! * **Workers** connect, send `register`, receive `registered`, then
 //!   loop `job` → `result`. A background thread sends `heartbeat` every
 //!   [`HEARTBEAT_INTERVAL`] — even mid-search — so the server can tell a
-//!   long job from a dead process.
+//!   long job from a dead process. The `toast worker` CLI runs
+//!   [`run_worker_reconnect`]: a lost connection retries with
+//!   exponential backoff ([`ReconnectPolicy`]), so a restarted server
+//!   picks its fleet back up without re-spawning worker processes.
 //! * **Clients** connect and send `submit` (acked with `submitted`) and
 //!   `status` (answered with `status_report`); completed `response`
 //!   frames arrive as workers finish.
@@ -714,6 +717,97 @@ pub fn run_worker(addr: &str, opts: &WorkerOptions) -> crate::Result<()> {
     let stream = TcpStream::connect(addr)
         .with_context(|| format!("connecting worker to {addr}"))?;
     run_worker_on(stream, opts)
+}
+
+/// Reconnect policy for [`run_worker_reconnect`]: exponential backoff
+/// between attempts, giving up after `max_attempts` *consecutive* failed
+/// connection attempts (a successful connect resets both the counter and
+/// the delay).
+#[derive(Clone, Debug)]
+pub struct ReconnectPolicy {
+    /// First retry delay after a failed connect or a lost session.
+    pub initial: Duration,
+    /// Backoff cap (delays double up to this).
+    pub max: Duration,
+    /// Consecutive failed connection attempts before giving up;
+    /// `0` retries forever.
+    pub max_attempts: u32,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        ReconnectPolicy {
+            initial: Duration::from_millis(100),
+            max: Duration::from_secs(5),
+            max_attempts: 10,
+        }
+    }
+}
+
+/// [`run_worker`] with reconnect: when the connection is lost — the
+/// server was killed, restarted, or closed the socket — retry with
+/// exponential backoff instead of exiting, so a restarted server picks
+/// its fleet back up without anyone re-spawning worker processes. The
+/// per-process [`ModelCache`] would be rebuilt per session either way;
+/// what survives is the *process* and its place in the operator's
+/// supervision tree.
+pub fn run_worker_reconnect(
+    addr: &str,
+    opts: &WorkerOptions,
+    policy: &ReconnectPolicy,
+) -> crate::Result<()> {
+    let mut delay = policy.initial;
+    let mut failures: u32 = 0;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                let t0 = Instant::now();
+                let outcome = run_worker_on(stream, opts);
+                // Only a session that actually lived (outlasted the
+                // backoff cap) resets the counters: a connect that is
+                // immediately rejected — wrong endpoint, protocol
+                // mismatch — must keep backing off and eventually give
+                // up, or `max_attempts` would be unreachable.
+                if t0.elapsed() >= policy.max {
+                    failures = 0;
+                    delay = policy.initial;
+                } else {
+                    failures += 1;
+                }
+                match outcome {
+                    Ok(()) => eprintln!(
+                        "[worker] {}: server closed the connection; reconnecting to {addr}",
+                        opts.name
+                    ),
+                    Err(e) => eprintln!(
+                        "[worker] {}: session ended ({e:#}); reconnecting to {addr}",
+                        opts.name
+                    ),
+                }
+                if policy.max_attempts > 0 && failures >= policy.max_attempts {
+                    bail!(
+                        "giving up on {addr} after {failures} consecutive short-lived \
+                         sessions or failed connection attempts"
+                    );
+                }
+            }
+            Err(e) => {
+                failures += 1;
+                if policy.max_attempts > 0 && failures >= policy.max_attempts {
+                    bail!(
+                        "giving up on {addr} after {failures} consecutive failed \
+                         connection attempts: {e}"
+                    );
+                }
+                eprintln!(
+                    "[worker] {}: connect to {addr} failed ({e}); retry {failures} in {delay:?}",
+                    opts.name
+                );
+            }
+        }
+        std::thread::sleep(delay);
+        delay = (delay * 2).min(policy.max);
+    }
 }
 
 /// The worker loop over an established stream: register, heartbeat in

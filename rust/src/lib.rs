@@ -75,6 +75,14 @@
 //! * [`baselines`] — Alpa-like, AutoMap-like and expert/manual
 //!   comparators (§5.1.1), each exposed as a `solve` core wrapped by an
 //!   [`api::Strategy`].
+//! * [`pipeline`] — the pipeline-parallel subsystem: the NDA-driven
+//!   stage cutter ([`pipeline::cut_stages`]), the GPipe schedule cost
+//!   model ([`pipeline::schedule`]) with per-stage memory and
+//!   closed-form bubble overhead, the staged point-to-point SPMD
+//!   executor ([`pipeline::run_staged`]), and the joint
+//!   (stages × sharding) MCTS ([`pipeline::joint_search`]) — reachable
+//!   from sessions via [`api::Partitioner::stages`] and from the CLI via
+//!   `toast partition --stages`.
 //! * [`models`] — IR builders for the paper's evaluation models (§5.1):
 //!   T2B/T7B Gemma-like transformers, GNS, U-Net, ITX.
 //! * [`runtime`] — the two-executor correctness subsystem: the SPMD
@@ -108,6 +116,7 @@ pub mod ir;
 pub mod mesh;
 pub mod models;
 pub mod nda;
+pub mod pipeline;
 pub mod runtime;
 pub mod search;
 pub mod sharding;

@@ -4,7 +4,11 @@
 //! * `analyze`   — run the NDA on a model; print colors/conflicts/groups.
 //! * `partition` — run a partitioning session (any method) and print the
 //!   report; `--out spec.json` writes the full serializable `Solution`
-//!   artifact (spec + cost report + validation record).
+//!   artifact (spec + cost report + validation record). `--stages
+//!   K[,K...]` adds the pipeline dimension: the joint (stages ×
+//!   sharding) MCTS explores stage-count/cut-point actions alongside the
+//!   NDA sharding actions, prices via the GPipe schedule model, and the
+//!   artifact carries the winning stage assignment.
 //! * `apply`     — reload a `Solution` written by `partition --out`,
 //!   re-apply the spec to a freshly built model, and prove it reproduces
 //!   the exact recorded spec and relative cost; `--validate` replays it
@@ -23,7 +27,10 @@
 //!   address is printed to stdout so `--listen 127.0.0.1:0` works).
 //! * `worker`    — `--connect HOST:PORT`: run the compiled-model-cache +
 //!   differential-replay worker loop as a standalone process against a
-//!   `serve --listen` server.
+//!   `serve --listen` server. Lost connections reconnect with
+//!   exponential backoff (`--reconnect-max` consecutive failed attempts
+//!   before giving up; 0 = forever), so a restarted server picks its
+//!   fleet back up.
 //! * `submit`    — submit a batch of zoo requests and collect verified
 //!   solutions, either `--connect HOST:PORT` (socket client) or
 //!   `--workers N` (in-process service) — the same requests either way,
@@ -105,16 +112,21 @@ USAGE: toast <command> [--flag value]...
   analyze    --model <mlp|attention|t2b|t7b|gns|unet|itx> [--paper]
   partition  --model M --mesh 4x2 --hw <a100|p100|tpuv3>
              [--method <toast|alpa|automap|manual>] [--budget N] [--seed N]
+             [--stages K[,K...]] [--microbatches M] [--require-stages]
              [--paper] [--validate] [--out spec.json]
+             (--stages runs the joint stages x sharding MCTS; the mesh is
+              the intra-stage mesh, the stage axis is appended behind it;
+              --require-stages forces a staged solution or errors)
   apply      --spec spec.json [--validate]
   search     --model M --mesh 2x2 [--budget N] [--validate-best]
   validate   --model M --mesh 2x2 [--budget N]
-  bench      --experiment <fig8|fig9|fig10|ablations|differential>
+  bench      --experiment <fig8|fig9|fig10|ablations|differential|pipeline>
              [--scale tiny|bench|paper] [--json]
   models
   serve      [--workers N] [--no-verify] [--search-threads N]
              [--listen HOST:PORT] [--dead-after-ms N]
   worker     --connect HOST:PORT [--name ID] [--no-verify] [--search-threads N]
+             [--reconnect-max N] (0 = retry forever; exponential backoff)
   submit     (--connect HOST:PORT | --workers N) [--models a,b] [--methods x,y]
              [--mesh 2x2] [--hw a100] [--budget N] [--seed N]
              [--search-threads N] [--out-dir DIR] [--canonical]
@@ -227,15 +239,44 @@ fn cmd_partition(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
     println!("partitioning {} on {} / {}", kind.name(), mesh.describe(), hw.name());
     let compiled = CompiledModel::from_kind(kind, paper)?;
-    let sol = compiled
+    let mut session = compiled
         .partition(&mesh)
         .method(method)
         .hardware(hw)
         .budget(budget)
         .seed(seed)
-        .validate(validate)
-        .run()?;
+        .validate(validate);
+    if let Some(spec) = flags.get("stages") {
+        // --stages enables the joint (stages x sharding) search; the
+        // chosen --method is superseded by the joint MCTS.
+        let counts: Vec<usize> = spec
+            .split(',')
+            .map(|p| p.trim().parse().map_err(|_| anyhow::anyhow!("bad --stages '{spec}'")))
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            counts.iter().all(|&k| k >= 2),
+            "--stages wants counts >= 2, got '{spec}'"
+        );
+        let microbatches: usize =
+            flags.get("microbatches").and_then(|s| s.parse().ok()).unwrap_or(8);
+        session = session.stages(toast::api::StageOptions {
+            counts,
+            microbatches,
+            require: flags.contains_key("require-stages"),
+            ..Default::default()
+        });
+    }
+    let sol = session.run()?;
     println!("{}", sol.summarize());
+    if let Some(sa) = &sol.stages {
+        println!(
+            "pipeline: {} stages cut at instruction boundaries {:?}, {} microbatches \
+             (stage axis appended behind the mesh)",
+            sa.stages(),
+            sa.boundaries,
+            sa.microbatches
+        );
+    }
     println!("parameter shardings (non-replicated):");
     let func = compiled.func();
     let mut shown = 0;
@@ -283,9 +324,22 @@ fn cmd_apply(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let func = compiled.func();
     sol.spec.check_against(func, &sol.mesh)?;
 
-    // Re-price through the same oracle path the producer used.
+    // Re-price through the same oracle path the producer used: the GPipe
+    // schedule model for staged artifacts, partition + evaluate for flat
+    // ones.
     let cost_model = CostModel::new(HardwareProfile::new(sol.hardware));
-    let (cost, _base, relative) = toast::api::price_spec(func, &sol.spec, &sol.mesh, &cost_model)?;
+    let (cost, _base, relative) = match &sol.stages {
+        Some(sa) => {
+            println!(
+                "staged artifact: {} stages at {:?}, {} microbatches",
+                sa.stages(),
+                sa.boundaries,
+                sa.microbatches
+            );
+            toast::api::price_staged_spec(func, &sol.spec, sa, &sol.mesh, &cost_model)?
+        }
+        None => toast::api::price_spec(func, &sol.spec, &sol.mesh, &cost_model)?,
+    };
     println!(
         "re-applied: relative cost {relative:.6} (recorded {:.6}), step {:.3} ms",
         sol.relative,
@@ -309,7 +363,12 @@ fn cmd_apply(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         // Replay with the artifact's recorded seed so a recorded
         // validation run is actually reproduced, not merely re-sampled.
         let seed = sol.validation.as_ref().map(|v| v.seed).unwrap_or(7);
-        let rec = toast::api::validate_solution_spec(func, &sol.spec, &sol.mesh, seed)?;
+        let rec = match &sol.stages {
+            Some(sa) => toast::api::validate_staged_solution_spec(
+                func, &sol.spec, sa, &sol.mesh, seed,
+            )?,
+            None => toast::api::validate_solution_spec(func, &sol.spec, &sol.mesh, seed)?,
+        };
         println!(
             "differential replay (seed {seed}): max relative divergence {:.3e} \
              (tol {:.1e}, {} collectives)",
@@ -435,6 +494,20 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             print!("{}", exp::format_differential(&rows, tol));
             let failed = rows.iter().filter(|r| !r.pass).count();
             anyhow::ensure!(failed == 0, "{failed} differential triples failed");
+        }
+        exp::Experiment::Pipeline => {
+            // The staged differential sweep always runs on scaled
+            // (interpreter-sized) builds; scale widens the model set.
+            let models = if scale == exp::BenchScale::Tiny {
+                vec![ModelKind::Mlp, ModelKind::T2B]
+            } else {
+                vec![ModelKind::Mlp, ModelKind::T2B, ModelKind::Attention]
+            };
+            let tol = toast::runtime::diff::DEFAULT_REL_TOL;
+            let rows = exp::run_pipeline_suite(&models, &[2, 4], 17, tol);
+            print!("{}", exp::format_pipeline(&rows, tol));
+            let failed = rows.iter().filter(|r| !r.pass).count();
+            anyhow::ensure!(failed == 0, "{failed} pipeline rows failed");
         }
     }
     Ok(())
@@ -575,7 +648,13 @@ fn cmd_worker(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             .unwrap_or_else(|| format!("worker-{}", std::process::id())),
         service: service_config(flags, 0),
     };
-    toast::coordinator::transport::run_worker(addr, &opts)
+    // Reconnect with exponential backoff by default, so a restarted
+    // server picks its fleet back up without re-spawning workers.
+    let policy = toast::coordinator::transport::ReconnectPolicy {
+        max_attempts: flags.get("reconnect-max").and_then(|s| s.parse().ok()).unwrap_or(10),
+        ..Default::default()
+    };
+    toast::coordinator::transport::run_worker_reconnect(addr, &opts, &policy)
 }
 
 /// Submit a batch of zoo requests — over a socket (`--connect`) or to a

@@ -132,6 +132,22 @@ impl Mesh {
         groups.into_values().collect()
     }
 
+    /// This mesh with one more axis appended *behind* the existing ones:
+    /// every existing axis keeps its [`AxisId`], so sharding specs built
+    /// for `self` apply unchanged to the extended mesh. Used by the
+    /// pipeline subsystem to add the stage axis
+    /// ([`crate::pipeline::staged_mesh`]).
+    pub fn with_axis(&self, name: &str, size: usize) -> Mesh {
+        assert!(size >= 1, "axis size must be >= 1");
+        assert!(
+            self.axis_by_name(name).is_none(),
+            "mesh already has an axis named '{name}'"
+        );
+        let mut axes = self.axes.clone();
+        axes.push(MeshAxis { name: name.to_string(), size });
+        Mesh { axes }
+    }
+
     /// Human-readable description, e.g. `b=2 x m=8 (16 devices)`.
     pub fn describe(&self) -> String {
         let parts: Vec<String> =
@@ -229,6 +245,18 @@ mod tests {
         let m = Mesh::grid(&[("d", 8)]);
         assert_eq!(m.groups(0).len(), 1);
         assert_eq!(m.groups(0)[0].len(), 8);
+    }
+
+    #[test]
+    fn with_axis_appends_behind_existing_axes() {
+        let m = Mesh::grid(&[("a", 2), ("b", 2)]);
+        let e = m.with_axis("stage", 3);
+        assert_eq!(e.rank(), 3);
+        assert_eq!(e.axis_name(0), "a");
+        assert_eq!(e.axis_name(2), "stage");
+        assert_eq!(e.num_devices(), 12);
+        // original mesh untouched
+        assert_eq!(m.rank(), 2);
     }
 
     #[test]

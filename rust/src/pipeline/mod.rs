@@ -1,0 +1,647 @@
+//! Pipeline-parallel partitioning: stage cutting, GPipe-style schedule
+//! pricing and point-to-point staged execution.
+//!
+//! TOAST's decision space (§4) covers intra-op sharding; this subsystem
+//! adds the second axis the composite-strategies literature (Automap,
+//! PartIR) shows is needed for models that OOM under pure SPMD: cutting
+//! the straight-line function into *k contiguous stages* that execute on
+//! disjoint device groups and exchange activations point-to-point.
+//!
+//! * **Stage cutter** ([`cut_stages`]): split a [`Func`] at instruction
+//!   boundaries into per-stage sub-functions. Each stage's parameters are
+//!   the original parameters it consumes (resident on its devices) plus
+//!   *transfer tensors* — values produced upstream, received over the
+//!   mesh's stage axis. Cut points are enumerated from the NDA
+//!   ([`legal_boundaries`]): a boundary is legal only when no sharding
+//!   conflict (§3.3) has occurrences on both sides, so a stage boundary
+//!   never splits a conflict-resolution group — every resolution choice
+//!   the action space exposes stays local to one stage.
+//! * **Schedule cost model** ([`schedule`]): prices GPipe microbatched
+//!   execution — per-stage compute/communication from the existing
+//!   [`crate::cost::CostModel`], point-to-point transfer time over the
+//!   stage axis, closed-form bubble overhead, and per-stage peak memory
+//!   so the §4.5 memory penalty applies per stage.
+//! * **Staged execution** ([`run_staged`]): runs every stage's
+//!   partitioned sub-module on the sub-mesh of devices whose *stage
+//!   coordinate* matches, moving transfer tensors with the simulator's
+//!   [`crate::runtime::spmd::send`]/[`crate::runtime::spmd::recv`]
+//!   point-to-point primitives — validated differentially against the
+//!   interpreter oracle exactly like collectives
+//!   ([`crate::runtime::diff::differential_test_staged`]).
+//! * **Joint search** ([`search`]): MCTS over (stage actions × sharding
+//!   actions) so staging and sharding are explored in one tree, not
+//!   sequenced.
+//!
+//! Stage sub-functions keep the original sharding spec: a value's
+//! dim→axes assignment refers to the *intra* mesh (the mesh the spec was
+//! built for); the stage axis is appended behind it ([`staged_mesh`]), so
+//! sharding decisions and stage decisions compose without renumbering.
+
+pub mod schedule;
+pub mod search;
+
+pub use search::{joint_search, JointOutcome, JointSearchConfig};
+
+use crate::ir::interp::{eval_func, Tensor};
+use crate::ir::{Func, Instr, Param, ValueId};
+use crate::mesh::Mesh;
+use crate::nda::{Nda, Occurrence};
+use crate::sharding::partition::{partition_exec, PartitionStats};
+use crate::sharding::ShardingSpec;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::{BTreeSet, HashMap};
+
+/// Name of the mesh axis [`staged_mesh`] appends for the stage dimension.
+pub const STAGE_AXIS_NAME: &str = "stage";
+
+/// The execution mesh of a `k`-stage module: the spec's intra mesh with
+/// the stage axis appended *last*, so every intra axis keeps its id and
+/// sharding specs for the intra mesh apply unchanged.
+pub fn staged_mesh(intra: &Mesh, stages: usize) -> Mesh {
+    intra.with_axis(STAGE_AXIS_NAME, stages)
+}
+
+/// How a stage sub-function binds one of its parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageInput {
+    /// Original function parameter `p`, resident on the stage's devices.
+    Param(usize),
+    /// A value produced by an upstream stage, received point-to-point
+    /// over the stage axis.
+    Transfer(ValueId),
+}
+
+impl StageInput {
+    /// The original-function value this input binds.
+    pub fn value(&self) -> ValueId {
+        match *self {
+            StageInput::Param(p) => ValueId(p as u32),
+            StageInput::Transfer(v) => v,
+        }
+    }
+}
+
+/// One pipeline stage: a contiguous slice of the original function,
+/// repackaged as a standalone logical [`Func`].
+#[derive(Clone, Debug)]
+pub struct Stage {
+    /// The stage's logical sub-function (verified, collective-free).
+    pub func: Func,
+    /// What each sub-function parameter binds, in parameter order.
+    pub inputs: Vec<StageInput>,
+    /// Original values the sub-function's results correspond to, 1:1
+    /// with `func.results`: everything downstream stages (or the final
+    /// results) consume.
+    pub outputs: Vec<ValueId>,
+    /// Original instruction range `[start, end)` this stage covers.
+    pub range: (usize, usize),
+}
+
+/// A function cut into pipeline stages, plus the transfer plan.
+#[derive(Clone, Debug)]
+pub struct StagedModule {
+    /// The original logical function the stages compose back into.
+    pub func: Func,
+    /// Instruction-index cut points (strictly increasing, interior).
+    pub boundaries: Vec<usize>,
+    pub stages: Vec<Stage>,
+    /// `carries[i]`: original values sent point-to-point across boundary
+    /// `i` (from stage `i` to stage `i+1`), ascending. Values consumed
+    /// deeper in the pipeline hop every intermediate boundary, exactly
+    /// like activations in a real pipeline.
+    pub carries: Vec<Vec<ValueId>>,
+}
+
+impl StagedModule {
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Restrict a whole-function sharding spec to stage `s`'s
+    /// sub-function: stage parameters (original params and transfers)
+    /// and stage instructions keep the original value's dim→axes
+    /// assignment, so one global spec drives every stage consistently.
+    pub fn stage_spec(&self, s: usize, spec: &ShardingSpec) -> ShardingSpec {
+        let stage = &self.stages[s];
+        let n_params = self.func.params.len();
+        let mut dims = Vec::with_capacity(stage.func.num_values());
+        for si in &stage.inputs {
+            dims.push(spec.dims[si.value().index()].clone());
+        }
+        for ii in stage.range.0..stage.range.1 {
+            dims.push(spec.dims[n_params + ii].clone());
+        }
+        ShardingSpec { dims }
+    }
+}
+
+/// Weight of one instruction for cut balancing.
+pub type CutWeight = fn(&Func, &Instr) -> f64;
+
+/// Compute-oriented cut weight: matmul FLOPs plus output bytes (the
+/// default for balancing stage runtimes).
+pub fn compute_weight(func: &Func, instr: &Instr) -> f64 {
+    crate::cost::matmul_flops(func, instr) + instr.ty.bytes() as f64
+}
+
+/// Uniform cut weight: balances instruction counts.
+pub fn unit_weight(_func: &Func, _instr: &Instr) -> f64 {
+    1.0
+}
+
+/// Enumerate the legal stage boundaries of `func` from its NDA: boundary
+/// `b` (a cut between instructions `b-1` and `b`) is legal iff no
+/// sharding conflict (§3.3) has occurrences on both sides. A conflict's
+/// resolution is a single action-space choice; keeping all of its
+/// occurrences in one stage means a stage boundary can never split a
+/// resolution group's sharding decisions across stages.
+pub fn legal_boundaries(func: &Func, nda: &Nda) -> Vec<usize> {
+    let n = func.instrs.len();
+    if n < 2 {
+        return Vec::new();
+    }
+    let n_params = func.params.len();
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    for cf in &nda.conflicts.conflicts {
+        let mut lo = usize::MAX;
+        let mut hi = 0usize;
+        for &(occ, _, _) in &cf.occurrences {
+            let ii = match occ {
+                Occurrence::Def(v) => {
+                    if v.index() < n_params {
+                        continue; // parameter defs precede every stage
+                    }
+                    v.index() - n_params
+                }
+                Occurrence::Use { instr, .. } => instr,
+            };
+            lo = lo.min(ii);
+            hi = hi.max(ii);
+        }
+        if lo != usize::MAX {
+            spans.push((lo, hi));
+        }
+    }
+    (1..n).filter(|&b| spans.iter().all(|&(lo, hi)| !(lo < b && b <= hi))).collect()
+}
+
+/// Pick `k - 1` boundaries from `legal` that balance the cumulative
+/// instruction weight across `k` stages: each cut lands on the legal
+/// boundary nearest its ideal prefix-weight target (strictly after the
+/// previous cut). `None` when `legal` cannot support `k` stages.
+pub fn balanced_boundaries(
+    func: &Func,
+    legal: &[usize],
+    k: usize,
+    weigh: CutWeight,
+) -> Option<Vec<usize>> {
+    if k < 2 || legal.len() < k - 1 {
+        return None;
+    }
+    let n = func.instrs.len();
+    let mut prefix = vec![0.0f64; n + 1];
+    for (ii, instr) in func.instrs.iter().enumerate() {
+        prefix[ii + 1] = prefix[ii] + weigh(func, instr);
+    }
+    let total = prefix[n];
+    let mut out = Vec::with_capacity(k - 1);
+    let mut prev = 0usize;
+    for j in 1..k {
+        // Cuts still to place after this one: only candidates with that
+        // many legal boundaries left behind them are admissible, so a
+        // back-loaded weight profile cannot greedily exhaust the tail
+        // and falsely report the stage count unsupportable.
+        let need_after = k - 1 - j;
+        let target = total * j as f64 / k as f64;
+        let b = legal
+            .iter()
+            .enumerate()
+            .filter(|&(idx, &b)| b > prev && legal.len() - idx - 1 >= need_after)
+            .map(|(_, &b)| b)
+            .min_by(|&a, &b| {
+                (prefix[a] - target)
+                    .abs()
+                    .partial_cmp(&(prefix[b] - target).abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })?;
+        out.push(b);
+        prev = b;
+    }
+    Some(out)
+}
+
+/// Cut `func` at `boundaries` into `boundaries.len() + 1` contiguous
+/// stages. Every stage is a verified logical [`Func`]; the transfer plan
+/// ([`StagedModule::carries`]) records exactly which values hop each
+/// boundary. An empty boundary list yields the single-stage identity.
+pub fn cut_stages(func: &Func, boundaries: &[usize]) -> Result<StagedModule> {
+    let n = func.instrs.len();
+    let n_params = func.params.len();
+    ensure!(n >= 1, "cannot stage an empty function");
+    for (i, &b) in boundaries.iter().enumerate() {
+        ensure!(b >= 1 && b < n, "boundary {b} out of range 1..{n}");
+        if i > 0 {
+            ensure!(boundaries[i - 1] < b, "boundaries must be strictly increasing");
+        }
+    }
+    let k = boundaries.len() + 1;
+    let mut starts = Vec::with_capacity(k);
+    starts.push(0usize);
+    starts.extend_from_slice(boundaries);
+    let stage_of_instr = |ii: usize| -> usize {
+        // Last start <= ii (starts is sorted).
+        match starts.binary_search(&ii) {
+            Ok(s) => s,
+            Err(ins) => ins - 1,
+        }
+    };
+
+    // How long each value must stay materialized: its defining stage, or
+    // later if downstream stages use it; results are needed at stage `k`
+    // (one past the last) so they are carried to the final stage.
+    let mut needed_until = vec![0usize; func.num_values()];
+    for (v, slot) in needed_until.iter_mut().enumerate() {
+        *slot = if v < n_params { 0 } else { stage_of_instr(v - n_params) };
+    }
+    for (ii, instr) in func.instrs.iter().enumerate() {
+        let s = stage_of_instr(ii);
+        for &o in &instr.operands {
+            let slot = &mut needed_until[o.index()];
+            *slot = (*slot).max(s);
+        }
+    }
+    for &r in &func.results {
+        needed_until[r.index()] = k;
+    }
+
+    let mut stages = Vec::with_capacity(k);
+    for s in 0..k {
+        let start = starts[s];
+        let end = if s + 1 < k { starts[s + 1] } else { n };
+        let mut params_used: BTreeSet<usize> = BTreeSet::new();
+        let mut transfers: BTreeSet<ValueId> = BTreeSet::new();
+        for instr in &func.instrs[start..end] {
+            for &o in &instr.operands {
+                if o.index() < n_params {
+                    params_used.insert(o.index());
+                } else if o.index() - n_params < start {
+                    transfers.insert(o);
+                }
+            }
+        }
+        let mut params: Vec<Param> = Vec::new();
+        let mut inputs: Vec<StageInput> = Vec::new();
+        let mut map: HashMap<u32, ValueId> = HashMap::new();
+        for &p in &params_used {
+            map.insert(p as u32, ValueId(params.len() as u32));
+            params.push(func.params[p].clone());
+            inputs.push(StageInput::Param(p));
+        }
+        for &t in &transfers {
+            map.insert(t.0, ValueId(params.len() as u32));
+            params.push(Param {
+                name: format!("xfer_v{}", t.index() - n_params),
+                ty: func.ty(t).clone(),
+            });
+            inputs.push(StageInput::Transfer(t));
+        }
+        let n_in = params.len();
+        let mut instrs = Vec::with_capacity(end - start);
+        for (pos, ii) in (start..end).enumerate() {
+            let orig = &func.instrs[ii];
+            let result = ValueId((n_in + pos) as u32);
+            map.insert(orig.result.0, result);
+            let operands = orig
+                .operands
+                .iter()
+                .map(|o| {
+                    map.get(&o.0).copied().ok_or_else(|| {
+                        anyhow!("stage {s}: operand {:?} not mapped (cutter bug)", o)
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            instrs.push(Instr { result, kind: orig.kind.clone(), operands, ty: orig.ty.clone() });
+        }
+        let mut outputs: Vec<ValueId> = (start..end)
+            .map(|ii| ValueId((n_params + ii) as u32))
+            .filter(|v| needed_until[v.index()] > s)
+            .collect();
+        if outputs.is_empty() {
+            // A stage whose tail is dead downstream still needs a
+            // well-formed result; nothing will consume it.
+            outputs.push(ValueId((n_params + end - 1) as u32));
+        }
+        let results: Vec<ValueId> = outputs.iter().map(|v| map[&v.0]).collect();
+        let sfunc = Func {
+            name: format!("{}_stage{s}", func.name),
+            params,
+            instrs,
+            results,
+        };
+        crate::ir::verifier::verify_logical(&sfunc)?;
+        stages.push(Stage { func: sfunc, inputs, outputs, range: (start, end) });
+    }
+
+    let mut carries: Vec<Vec<ValueId>> = Vec::with_capacity(k.saturating_sub(1));
+    for i in 0..k.saturating_sub(1) {
+        let mut hop: Vec<ValueId> = (n_params..func.num_values())
+            .map(|v| ValueId(v as u32))
+            .filter(|v| stage_of_instr(v.index() - n_params) <= i && needed_until[v.index()] > i)
+            .collect();
+        hop.sort_unstable();
+        carries.push(hop);
+    }
+
+    Ok(StagedModule { func: func.clone(), boundaries: boundaries.to_vec(), stages, carries })
+}
+
+/// Sequentially compose the stages on the reference interpreter: the
+/// oracle-side semantics of a staged module. Bit-identical to
+/// [`eval_func`] on the original function (same instructions, same
+/// order, same kernel).
+pub fn eval_staged_interp(sm: &StagedModule, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    ensure!(
+        inputs.len() == sm.func.params.len(),
+        "expected {} inputs, got {}",
+        sm.func.params.len(),
+        inputs.len()
+    );
+    let mut env: HashMap<ValueId, Tensor> = HashMap::new();
+    for stage in &sm.stages {
+        let sin = stage
+            .inputs
+            .iter()
+            .map(|si| match si {
+                StageInput::Param(p) => Ok(inputs[*p].clone()),
+                StageInput::Transfer(v) => env
+                    .get(v)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("transfer {:?} not produced upstream", v)),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let outs = eval_func(&stage.func, &sin)?;
+        for (&o, t) in stage.outputs.iter().zip(outs) {
+            env.insert(o, t);
+        }
+    }
+    sm.func
+        .results
+        .iter()
+        .map(|&r| {
+            if sm.func.is_param(r) {
+                Ok(inputs[r.index()].clone())
+            } else {
+                env.get(&r).cloned().ok_or_else(|| anyhow!("result {:?} not materialized", r))
+            }
+        })
+        .collect()
+}
+
+/// Execute a staged module end to end on the SPMD simulator: each
+/// stage's partitioned sub-module runs on the devices whose stage
+/// coordinate matches, and transfer tensors hop boundaries through the
+/// simulator's point-to-point [`crate::runtime::spmd::send`] /
+/// [`crate::runtime::spmd::recv`] — ownership moves with the data, so a
+/// stage reading a tensor its devices never received fails loudly.
+///
+/// `spec` shards values over `intra` (the stage axis is appended by
+/// [`staged_mesh`]); `global_inputs` are the original function's host
+/// tensors. Returns the reassembled global results plus the aggregate
+/// collective statistics of all stage rewrites.
+pub fn run_staged(
+    sm: &StagedModule,
+    spec: &ShardingSpec,
+    intra: &Mesh,
+    global_inputs: &[Tensor],
+) -> Result<(Vec<Tensor>, PartitionStats)> {
+    use crate::runtime::spmd::{self, eval_spmd, shard_tensor, unshard_tensor};
+    ensure!(
+        global_inputs.len() == sm.func.params.len(),
+        "expected {} global inputs, got {}",
+        sm.func.params.len(),
+        global_inputs.len()
+    );
+    ensure!(
+        intra.axis_by_name(STAGE_AXIS_NAME).is_none(),
+        "mesh axis name '{STAGE_AXIS_NAME}' is reserved for the appended stage axis \
+         when executing pipeline stages"
+    );
+    let k = sm.num_stages();
+    let full = staged_mesh(intra, k);
+    let stage_axis = intra.rank();
+    let mut stats = PartitionStats::default();
+    // Full-mesh environment: original value -> one slot per device;
+    // `None` on devices whose stage never held (or no longer holds) it.
+    let mut env: HashMap<ValueId, Vec<Option<Tensor>>> = HashMap::new();
+
+    for (s, stage) in sm.stages.iter().enumerate() {
+        let sspec = sm.stage_spec(s, spec);
+        let pm = partition_exec(&stage.func, &sspec, intra)?;
+        crate::ir::verifier::verify_device_local_with(&pm.local, intra)?;
+        stats.absorb(&pm.stats);
+        let mut shard_inputs: Vec<Vec<Tensor>> = Vec::with_capacity(stage.inputs.len());
+        for (pi, si) in stage.inputs.iter().enumerate() {
+            match si {
+                StageInput::Param(p) => {
+                    shard_inputs.push(shard_tensor(
+                        &global_inputs[*p],
+                        &pm.param_sharding[pi],
+                        intra,
+                    ));
+                }
+                StageInput::Transfer(v) => {
+                    let slots = env
+                        .get(v)
+                        .ok_or_else(|| anyhow!("transfer {:?} missing from stage {s}", v))?;
+                    shard_inputs.push(spmd::recv(&full, stage_axis, s, slots)?);
+                }
+            }
+        }
+        let outs = eval_spmd(&pm.local, intra, &shard_inputs)?;
+        for (oi, &ov) in stage.outputs.iter().enumerate() {
+            env.insert(ov, spmd::place(&full, stage_axis, s, &outs[oi]));
+        }
+        if s + 1 < k {
+            for &v in &sm.carries[s] {
+                let slots = env
+                    .remove(&v)
+                    .ok_or_else(|| anyhow!("carry {:?} missing at boundary {s}", v))?;
+                env.insert(v, spmd::send(&full, stage_axis, s, s + 1, slots)?);
+            }
+        }
+    }
+
+    let mut results = Vec::with_capacity(sm.func.results.len());
+    for &r in &sm.func.results {
+        let full_shape: Vec<usize> = sm.func.ty(r).shape.iter().map(|&d| d as usize).collect();
+        let axes = &spec.dims[r.index()];
+        let shards: Vec<Tensor> = if sm.func.is_param(r) {
+            shard_tensor(&global_inputs[r.index()], axes, intra)
+        } else {
+            let slots =
+                env.get(&r).ok_or_else(|| anyhow!("result {:?} not on the final stage", r))?;
+            spmd::recv(&full, stage_axis, k - 1, slots)?
+        };
+        results.push(unshard_tensor(&shards, &full_shape, axes, intra));
+    }
+    Ok((results, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{FuncBuilder, TensorType};
+
+    fn chain_mlp(layers: usize) -> Func {
+        let mut b = FuncBuilder::new("chain");
+        let mut x = b.param("x", TensorType::f32(vec![8, 16]));
+        for l in 0..layers {
+            let w = b.param(format!("w{l}"), TensorType::f32(vec![16, 16]));
+            let y = b.matmul(x, w);
+            x = b.relu(y);
+        }
+        b.build(vec![x])
+    }
+
+    #[test]
+    fn every_boundary_of_a_chain_is_legal() {
+        let f = chain_mlp(3);
+        let nda = Nda::analyze(&f);
+        let legal = legal_boundaries(&f, &nda);
+        // conflict-free chain: every interior boundary is legal
+        assert_eq!(legal, (1..f.instrs.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn conflict_spans_block_boundaries() {
+        // matmul(x, transpose(x)) has a conflict across both instrs —
+        // no boundary may separate them.
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![8, 8]));
+        let t = b.transpose(x, &[1, 0]);
+        let z = b.matmul(x, t);
+        let y = b.relu(z);
+        let f = b.build(vec![y]);
+        let nda = Nda::analyze(&f);
+        assert!(!nda.conflicts.conflicts.is_empty());
+        let legal = legal_boundaries(&f, &nda);
+        // the conflict's occurrences span the transpose (instr 0) and the
+        // matmul (instr 1): the cut between them is illegal, the cut
+        // after the matmul is fine.
+        assert!(!legal.contains(&1), "cut inside the conflict must be illegal: {legal:?}");
+        assert!(legal.contains(&2), "cut behind the conflict stays legal: {legal:?}");
+    }
+
+    #[test]
+    fn cut_and_compose_is_interp_equivalent() {
+        let f = chain_mlp(4);
+        let nda = Nda::analyze(&f);
+        let legal = legal_boundaries(&f, &nda);
+        let inputs = crate::runtime::diff::random_inputs(&f, 3);
+        let expected = eval_func(&f, &inputs).unwrap();
+        for &b in &legal {
+            let sm = cut_stages(&f, &[b]).unwrap();
+            assert_eq!(sm.num_stages(), 2);
+            let got = eval_staged_interp(&sm, &inputs).unwrap();
+            for (e, g) in expected.iter().zip(&got) {
+                assert_eq!(e.data, g.data, "boundary {b} changed the program");
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_boundaries_are_increasing_and_legal() {
+        let f = chain_mlp(6);
+        let nda = Nda::analyze(&f);
+        let legal = legal_boundaries(&f, &nda);
+        for k in [2usize, 3, 4] {
+            let b = balanced_boundaries(&f, &legal, k, compute_weight).unwrap();
+            assert_eq!(b.len(), k - 1);
+            for w in b.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(b.iter().all(|x| legal.contains(x)));
+            let sm = cut_stages(&f, &b).unwrap();
+            assert_eq!(sm.num_stages(), k);
+        }
+        assert!(balanced_boundaries(&f, &legal, 100, compute_weight).is_none());
+    }
+
+    #[test]
+    fn balanced_boundaries_reserve_room_for_remaining_cuts() {
+        // Back-loaded weights pull every target toward the last
+        // boundary; the selection must still leave enough legal
+        // boundaries for the remaining cuts instead of returning None.
+        fn back_loaded(f: &Func, i: &Instr) -> f64 {
+            if i.result.index() == f.num_values() - 1 {
+                100.0
+            } else {
+                1.0
+            }
+        }
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![4, 4]));
+        let a = b.relu(x);
+        let c = b.unary(crate::ir::UnaryOp::Tanh, a);
+        let d = b.unary(crate::ir::UnaryOp::Sigmoid, c);
+        let f = b.build(vec![d]);
+        let legal = legal_boundaries(&f, &Nda::analyze(&f));
+        assert_eq!(legal, vec![1, 2]);
+        let bounds = balanced_boundaries(&f, &legal, 3, back_loaded)
+            .expect("two legal boundaries must support three stages");
+        assert_eq!(bounds, vec![1, 2]);
+    }
+
+    #[test]
+    fn carries_track_skip_connections() {
+        // v0 defined in stage 0 and used in stage 2 must hop both
+        // boundaries.
+        let mut b = FuncBuilder::new("skip");
+        let x = b.param("x", TensorType::f32(vec![4, 4]));
+        let a = b.relu(x); // instr 0 (stage 0)
+        let c = b.unary(crate::ir::UnaryOp::Tanh, a); // instr 1 (stage 1)
+        let d = b.unary(crate::ir::UnaryOp::Tanh, c); // instr 2 (stage 2)
+        let e = b.add(d, a); // instr 3 (stage 2): uses stage-0 value
+        let f = b.build(vec![e]);
+        let sm = cut_stages(&f, &[1, 2]).unwrap();
+        let n_params = f.params.len();
+        let a_id = ValueId(n_params as u32);
+        assert!(sm.carries[0].contains(&a_id), "carries[0] {:?}", sm.carries[0]);
+        assert!(sm.carries[1].contains(&a_id), "carries[1] {:?}", sm.carries[1]);
+        // ...and composition still matches the oracle.
+        let inputs = crate::runtime::diff::random_inputs(&f, 5);
+        let expected = eval_func(&f, &inputs).unwrap();
+        let got = eval_staged_interp(&sm, &inputs).unwrap();
+        assert_eq!(expected[0].data, got[0].data);
+    }
+
+    #[test]
+    fn run_staged_matches_oracle_with_sharding() {
+        let f = chain_mlp(4);
+        let nda = Nda::analyze(&f);
+        let legal = legal_boundaries(&f, &nda);
+        let bounds = balanced_boundaries(&f, &legal, 2, compute_weight).unwrap();
+        let sm = cut_stages(&f, &bounds).unwrap();
+        let intra = Mesh::grid(&[("d", 2)]);
+        // shard the batch color across the intra mesh
+        let batch = nda.color_of(ValueId(0), 0);
+        let mut spec = ShardingSpec::unsharded(&f);
+        spec.apply_assignment(&f, &intra, &nda.sharding_assignment(batch, 0), 0).unwrap();
+        let inputs = crate::runtime::diff::random_inputs(&f, 11);
+        let expected = eval_func(&f, &inputs).unwrap();
+        let (got, _stats) = run_staged(&sm, &spec, &intra, &inputs).unwrap();
+        for (e, g) in expected.iter().zip(&got) {
+            assert!(e.max_rel_err(g) < 1e-4, "rel {}", e.max_rel_err(g));
+        }
+    }
+
+    #[test]
+    fn staged_mesh_appends_the_stage_axis_last() {
+        let intra = Mesh::grid(&[("a", 2), ("b", 2)]);
+        let full = staged_mesh(&intra, 4);
+        assert_eq!(full.rank(), 3);
+        assert_eq!(full.axis_name(2), STAGE_AXIS_NAME);
+        assert_eq!(full.axis_size(2), 4);
+        assert_eq!(full.axis_name(0), "a");
+    }
+}

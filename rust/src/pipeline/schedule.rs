@@ -1,0 +1,320 @@
+//! GPipe-style schedule pricing for staged modules (§4.5 applied per
+//! stage).
+//!
+//! A `k`-stage module runs `m` microbatches through the pipeline. The
+//! slot time of stage `s` is its full-batch runtime (compute +
+//! collectives, from the existing [`CostModel`]) divided by `m`, plus
+//! the per-microbatch point-to-point transfer of its boundary tensors
+//! over the mesh's *stage axis* (bandwidth of the axis behind the intra
+//! mesh, one link latency per hop). The pipeline completes in
+//! `(m + k - 1)` slots of the slowest stage — the closed-form bubble
+//! overhead [`bubble_fraction`]` = (k-1)/(m+k-1)` of the steady-state
+//! rate.
+//!
+//! Memory is modeled per stage: each stage holds only its own
+//! parameters, transfer inputs and activations (GPipe stashes all `m`
+//! microbatch activations before the backward half, so the full-batch
+//! live-range peak of the stage sub-function is the right estimate).
+//! The schedule's `peak_bytes` is the *worst stage*, which is what the
+//! §4.5 memory penalty and the OOM verdict apply to — the mechanism by
+//! which staging makes too-big-for-one-device models feasible.
+//!
+//! Two pricing paths share the composition arithmetic ([`compose`]):
+//!
+//! * [`price_staged_symbolic`] — per-stage costs from the symbolic
+//!   evaluator ([`SymbolicEvaluator`]), no device-local IR; the joint
+//!   search's hot path.
+//! * [`price_staged_oracle`] — per-stage costs from
+//!   materialize-partition-evaluate; the validation oracle and the
+//!   artifact (re-)pricing path.
+//!
+//! Because both delegate per-stage pricing to paths already pinned to
+//! each other (≤1e-6 relative, P7) and share `compose` verbatim, the
+//! two schedule prices agree to the same bound.
+
+use super::StagedModule;
+use crate::cost::symbolic::SymbolicEvaluator;
+use crate::cost::{Cost, CostModel};
+use crate::mesh::Mesh;
+use crate::sharding::{partition, ShardingSpec};
+use anyhow::{ensure, Result};
+
+/// Fraction of pipeline slots spent filling/draining: `(k-1)/(m+k-1)`
+/// for `k` stages and `m` microbatches (GPipe).
+pub fn bubble_fraction(stages: usize, microbatches: usize) -> f64 {
+    if stages <= 1 {
+        return 0.0;
+    }
+    (stages - 1) as f64 / (microbatches + stages - 1) as f64
+}
+
+/// Full-batch point-to-point bytes crossing each boundary under `spec`:
+/// the per-device (local-shard) bytes of every carried value, summed.
+pub fn transfer_bytes(sm: &StagedModule, spec: &ShardingSpec, intra: &Mesh) -> Vec<f64> {
+    sm.carries
+        .iter()
+        .map(|hop| {
+            hop.iter().map(|&v| spec.local_bytes(&sm.func, intra, v) as f64).sum::<f64>()
+        })
+        .collect()
+}
+
+/// A priced schedule: the composed [`Cost`] plus the per-stage and
+/// per-boundary breakdown.
+#[derive(Clone, Debug)]
+pub struct ScheduleCost {
+    /// Composed cost: `runtime_s` is the pipelined wall clock,
+    /// `peak_bytes` the worst stage's peak — the fields
+    /// [`CostModel::relative`] and [`CostModel::fits`] consume.
+    pub cost: Cost,
+    /// Per-stage full-batch costs.
+    pub per_stage: Vec<Cost>,
+    /// Per-boundary full-batch transfer seconds (bytes over the stage
+    /// axis plus `m` hop latencies).
+    pub transfer_s: Vec<f64>,
+    /// Closed-form bubble overhead of this `(stages, microbatches)`.
+    pub bubble_fraction: f64,
+    /// Index of the stage whose slot time bounds the pipeline.
+    pub bottleneck: usize,
+}
+
+/// Compose per-stage costs and boundary transfer bytes into the
+/// schedule price. Pure arithmetic — the single implementation both
+/// pricing paths share, so they can only diverge through the per-stage
+/// costs themselves.
+pub fn compose(
+    model: &CostModel,
+    per_stage: Vec<Cost>,
+    xfer_bytes: Vec<f64>,
+    stage_axis: usize,
+    microbatches: usize,
+) -> ScheduleCost {
+    let k = per_stage.len();
+    debug_assert_eq!(xfer_bytes.len(), k.saturating_sub(1));
+    let m = microbatches.max(1) as f64;
+    let bw = model.hw.axis_bandwidth(stage_axis);
+    let lat = model.hw.link_latency;
+
+    let mut slot = 0.0f64;
+    let mut bottleneck = 0usize;
+    let mut transfer_s = Vec::with_capacity(k.saturating_sub(1));
+    for (s, sc) in per_stage.iter().enumerate() {
+        let (xfer_t, lat_t) = if s + 1 < k { (xfer_bytes[s] / bw, lat) } else { (0.0, 0.0) };
+        if s + 1 < k {
+            transfer_s.push(xfer_t + m * lat_t);
+        }
+        // Per-microbatch slot: 1/m of the stage's work and of its
+        // outgoing transfer, plus one hop latency.
+        let tau = (sc.runtime_s + xfer_t) / m + lat_t;
+        if tau > slot {
+            slot = tau;
+            bottleneck = s;
+        }
+    }
+    let total = (m + (k - 1) as f64) * slot;
+
+    let mut cost = Cost::default();
+    for sc in &per_stage {
+        cost.compute_s += sc.compute_s;
+        cost.comm_s += sc.comm_s;
+        cost.comm_bytes += sc.comm_bytes;
+        cost.flops += sc.flops;
+        cost.peak_bytes = cost.peak_bytes.max(sc.peak_bytes);
+    }
+    for &t in &transfer_s {
+        cost.comm_s += t;
+    }
+    for &b in &xfer_bytes {
+        cost.comm_bytes += b;
+    }
+    // The pipelined wall clock overlaps stages, so runtime_s is NOT
+    // compute_s + comm_s here (those stay per-device work totals).
+    cost.runtime_s = total;
+
+    ScheduleCost {
+        cost,
+        per_stage,
+        transfer_s,
+        bubble_fraction: bubble_fraction(k, microbatches),
+        bottleneck,
+    }
+}
+
+/// Price a staged spec through the symbolic per-stage evaluator — no
+/// device-local IR is materialized. Errors exactly when some stage's
+/// partition rewrite would. One-shot convenience over
+/// [`price_staged_with`]; hot paths that price many specs against one
+/// cut should build the per-stage evaluators once and reuse them.
+pub fn price_staged_symbolic(
+    sm: &StagedModule,
+    spec: &ShardingSpec,
+    intra: &Mesh,
+    model: &CostModel,
+    microbatches: usize,
+) -> Result<ScheduleCost> {
+    let syms = stage_evaluators(sm, intra, model);
+    price_staged_with(sm, &syms, spec, intra, model, microbatches)
+}
+
+/// Build one [`SymbolicEvaluator`] per stage (op rules are derived once
+/// per stage function — the amortization the joint search's hot path
+/// relies on).
+pub fn stage_evaluators<'a>(
+    sm: &'a StagedModule,
+    intra: &'a Mesh,
+    model: &'a CostModel,
+) -> Vec<SymbolicEvaluator<'a>> {
+    sm.stages.iter().map(|st| SymbolicEvaluator::new(&st.func, intra, model)).collect()
+}
+
+/// [`price_staged_symbolic`] with prebuilt per-stage evaluators
+/// (`syms[s]` must evaluate `sm.stages[s].func`).
+pub fn price_staged_with(
+    sm: &StagedModule,
+    syms: &[SymbolicEvaluator<'_>],
+    spec: &ShardingSpec,
+    intra: &Mesh,
+    model: &CostModel,
+    microbatches: usize,
+) -> Result<ScheduleCost> {
+    ensure!(microbatches >= 1, "microbatches must be >= 1");
+    debug_assert_eq!(syms.len(), sm.num_stages());
+    let mut per_stage = Vec::with_capacity(sm.num_stages());
+    for (s, sym) in syms.iter().enumerate() {
+        let sspec = sm.stage_spec(s, spec);
+        let (cost, _stats) = sym.evaluate(&sspec)?;
+        per_stage.push(cost);
+    }
+    Ok(compose(model, per_stage, transfer_bytes(sm, spec, intra), intra.rank(), microbatches))
+}
+
+/// Price a staged spec through the materialized oracle: partition each
+/// stage, evaluate the device-local module with [`CostModel::evaluate`],
+/// compose. The simulate-then-price path `toast apply` re-runs, and the
+/// reference [`price_staged_symbolic`] must match to ≤1e-6 relative.
+pub fn price_staged_oracle(
+    sm: &StagedModule,
+    spec: &ShardingSpec,
+    intra: &Mesh,
+    model: &CostModel,
+    microbatches: usize,
+) -> Result<ScheduleCost> {
+    ensure!(microbatches >= 1, "microbatches must be >= 1");
+    let mut per_stage = Vec::with_capacity(sm.num_stages());
+    for s in 0..sm.num_stages() {
+        let sspec = sm.stage_spec(s, spec);
+        let (local, _stats) = partition(&sm.stages[s].func, &sspec, intra)?;
+        per_stage.push(model.evaluate(&local, intra));
+    }
+    Ok(compose(model, per_stage, transfer_bytes(sm, spec, intra), intra.rank(), microbatches))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{FuncBuilder, TensorType};
+    use crate::mesh::{HardwareKind, HardwareProfile};
+    use crate::nda::Nda;
+    use crate::pipeline::{balanced_boundaries, compute_weight, cut_stages, legal_boundaries};
+
+    // Pricing-only tests: shapes are large enough that per-stage compute
+    // dominates the per-hop link latency (the regime microbatching
+    // helps in), and no tensor data ever materializes.
+    fn chain(layers: usize) -> crate::ir::Func {
+        let mut b = FuncBuilder::new("chain");
+        let mut x = b.param("x", TensorType::f32(vec![512, 2048]));
+        for l in 0..layers {
+            let w = b.param(format!("w{l}"), TensorType::f32(vec![2048, 2048]));
+            let y = b.matmul(x, w);
+            x = b.relu(y);
+        }
+        b.build(vec![x])
+    }
+
+    fn model() -> CostModel {
+        CostModel::new(HardwareProfile::new(HardwareKind::A100))
+    }
+
+    #[test]
+    fn bubble_fraction_closed_form() {
+        assert_eq!(bubble_fraction(1, 8), 0.0);
+        assert_eq!(bubble_fraction(4, 1), 3.0 / 4.0);
+        assert_eq!(bubble_fraction(4, 8), 3.0 / 11.0);
+        // more microbatches -> smaller bubble
+        assert!(bubble_fraction(4, 32) < bubble_fraction(4, 8));
+        // more stages at fixed m -> bigger bubble
+        assert!(bubble_fraction(8, 8) > bubble_fraction(2, 8));
+    }
+
+    #[test]
+    fn symbolic_matches_oracle_pricing() {
+        let f = chain(6);
+        let nda = Nda::analyze(&f);
+        let legal = legal_boundaries(&f, &nda);
+        let intra = Mesh::grid(&[("d", 2)]);
+        let m = model();
+        for k in [2usize, 3] {
+            let bounds = balanced_boundaries(&f, &legal, k, compute_weight).unwrap();
+            let sm = cut_stages(&f, &bounds).unwrap();
+            for spec in [ShardingSpec::unsharded(&f), batch_spec(&f, &nda, &intra)] {
+                let a = price_staged_symbolic(&sm, &spec, &intra, &m, 8).unwrap();
+                let b = price_staged_oracle(&sm, &spec, &intra, &m, 8).unwrap();
+                let tol = 1e-6 * b.cost.runtime_s.abs().max(1e-30);
+                assert!(
+                    (a.cost.runtime_s - b.cost.runtime_s).abs() <= tol,
+                    "k={k}: symbolic {} vs oracle {}",
+                    a.cost.runtime_s,
+                    b.cost.runtime_s
+                );
+                assert_eq!(a.cost.peak_bytes, b.cost.peak_bytes, "k={k}: peaks differ");
+                assert_eq!(a.bottleneck, b.bottleneck);
+            }
+        }
+    }
+
+    fn batch_spec(f: &crate::ir::Func, nda: &Nda, mesh: &Mesh) -> ShardingSpec {
+        let batch = nda.color_of(crate::ir::ValueId(0), 0);
+        let mut spec = ShardingSpec::unsharded(f);
+        spec.apply_assignment(f, mesh, &nda.sharding_assignment(batch, 0), 0).unwrap();
+        spec
+    }
+
+    #[test]
+    fn staging_cuts_per_stage_peak_memory() {
+        let f = chain(8);
+        let nda = Nda::analyze(&f);
+        let legal = legal_boundaries(&f, &nda);
+        let intra = Mesh::grid(&[("d", 2)]);
+        let m = model();
+        let spec = ShardingSpec::unsharded(&f);
+        let (ulocal, _) = partition(&f, &spec, &intra).unwrap();
+        let unstaged = m.evaluate(&ulocal, &intra);
+        let bounds = balanced_boundaries(&f, &legal, 4, compute_weight).unwrap();
+        let sm = cut_stages(&f, &bounds).unwrap();
+        let sc = price_staged_oracle(&sm, &spec, &intra, &m, 8).unwrap();
+        assert!(
+            sc.cost.peak_bytes < unstaged.peak_bytes,
+            "staged worst-stage peak {} must undercut the unstaged peak {}",
+            sc.cost.peak_bytes,
+            unstaged.peak_bytes
+        );
+        // total device work is preserved (same instructions, no reshard
+        // needed for the replicated spec)
+        assert!((sc.cost.flops - unstaged.flops).abs() < 1.0);
+    }
+
+    #[test]
+    fn more_microbatches_shrink_the_pipeline_time() {
+        let f = chain(6);
+        let nda = Nda::analyze(&f);
+        let legal = legal_boundaries(&f, &nda);
+        let intra = Mesh::grid(&[("d", 2)]);
+        let m = model();
+        let spec = ShardingSpec::unsharded(&f);
+        let bounds = balanced_boundaries(&f, &legal, 3, compute_weight).unwrap();
+        let sm = cut_stages(&f, &bounds).unwrap();
+        let t2 = price_staged_oracle(&sm, &spec, &intra, &m, 2).unwrap().cost.runtime_s;
+        let t16 = price_staged_oracle(&sm, &spec, &intra, &m, 16).unwrap().cost.runtime_s;
+        assert!(t16 < t2, "m=16 ({t16}) should beat m=2 ({t2})");
+    }
+}

@@ -1,0 +1,479 @@
+//! Joint (stages × sharding) MCTS: one tree whose actions are the NDA
+//! sharding actions ([`Action`]) *plus* the stage actions
+//! ([`StageAction`]), so the search discovers combinations — e.g.
+//! "4 stages + batch sharding" — that neither axis finds alone (the
+//! Automap / PartIR composite-strategies result the ROADMAP targets).
+//!
+//! The state is the colors-aware canonical state of §4.3 extended with
+//! an optional stage choice: `(stage action | none, sorted sharding
+//! action ids)`. At most one stage action applies per trajectory, and it
+//! may be taken at any depth — staging is explored *with* sharding, not
+//! before or after it.
+//!
+//! Evaluation is symbolic end to end: unstaged states price through
+//! [`SymbolicEvaluator`]; staged states price through
+//! [`schedule::price_staged_symbolic`] — per-stage symbolic costs
+//! composed with the GPipe closed form. The final best state is
+//! re-priced through the materialized oracle
+//! ([`schedule::price_staged_oracle`] / partition + evaluate), exactly
+//! like the flat search validates its winner.
+
+use super::schedule;
+use super::{cut_stages, StagedModule};
+use crate::cost::symbolic::SymbolicEvaluator;
+use crate::cost::{Cost, CostModel};
+use crate::ir::Func;
+use crate::mesh::Mesh;
+use crate::search::actions::{Action, StageAction};
+use crate::sharding::{partition, ShardingSpec};
+use crate::util::Rng;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Joint-search configuration (mirrors the flat search's knobs).
+#[derive(Clone, Debug)]
+pub struct JointSearchConfig {
+    /// Total state-evaluation budget.
+    pub budget: usize,
+    /// Max trajectory depth (stage choice counts as one step).
+    pub max_depth: usize,
+    /// UCT exploration constant.
+    pub exploration: f64,
+    /// Trajectories per round (early-stop granularity).
+    pub round: usize,
+    /// Stop after this many rounds without improvement.
+    pub patience: usize,
+    /// Per-action reward penalty (shorter-trajectory incentive).
+    pub length_penalty: f64,
+    /// RNG seed.
+    pub seed: u64,
+    /// Only staged states may win: the best tracker ignores flat states
+    /// and the search errors if no finite staged state was found.
+    /// For pipeline-mandatory deployments (and the CI staged-artifact
+    /// gate) — without it, a flat trajectory legitimately wins whenever
+    /// staging does not pay for the model at hand.
+    pub require_stage: bool,
+}
+
+impl Default for JointSearchConfig {
+    fn default() -> Self {
+        JointSearchConfig {
+            budget: 400,
+            max_depth: 30,
+            exploration: 0.5,
+            round: 32,
+            patience: 3,
+            length_penalty: 0.01,
+            seed: 0,
+            require_stage: false,
+        }
+    }
+}
+
+/// Result of a joint search. Costs come from the materialized oracle
+/// (per-stage partition + evaluate when staged), so `relative` is what
+/// [`crate::api::price_staged_spec`] reproduces exactly.
+#[derive(Clone, Debug)]
+pub struct JointOutcome {
+    /// Applied sharding action ids, in order.
+    pub actions: Vec<usize>,
+    /// Chosen stage action (index into the stage-action slice), if any.
+    pub stage_action: Option<usize>,
+    /// The sharding spec realizing the best state.
+    pub spec: ShardingSpec,
+    /// Oracle cost of the best state (schedule-composed when staged).
+    pub cost: Cost,
+    /// Cost of the unsharded, unstaged module.
+    pub base: Cost,
+    /// Oracle relative cost `C(s)`.
+    pub relative: f64,
+    /// Best state still exceeds per-device memory.
+    pub oom: bool,
+    /// State evaluations performed.
+    pub evals: usize,
+}
+
+/// Canonical joint state: stage choice (`u32::MAX` = none) + sorted
+/// applied sharding action ids.
+type Key = (u32, Vec<u32>);
+
+const NO_STAGE: u32 = u32::MAX;
+const STOP: usize = usize::MAX;
+
+fn key_of(stage: Option<usize>, applied: &[usize]) -> Key {
+    let mut ids: Vec<u32> = applied.iter().map(|&a| a as u32).collect();
+    ids.sort_unstable();
+    (stage.map(|s| s as u32).unwrap_or(NO_STAGE), ids)
+}
+
+#[derive(Clone, Debug, Default)]
+struct NodeStats {
+    visits: f64,
+    value_sum: f64,
+    /// Edge id -> (visits, value_sum). Sharding action `i` has edge id
+    /// `i`; stage action `j` has edge id `n_shard + j`; STOP is MAX.
+    edges: HashMap<usize, (f64, f64)>,
+}
+
+struct Joint<'a> {
+    func: &'a Func,
+    mesh: &'a Mesh,
+    model: &'a CostModel,
+    actions: &'a [Action],
+    stage_actions: &'a [StageAction],
+    modules: &'a [StagedModule],
+    /// Per-(stage action, stage) symbolic evaluators, built once — op
+    /// rules per stage function are derived a single time, not per
+    /// state evaluation.
+    stage_syms: Vec<Vec<SymbolicEvaluator<'a>>>,
+    sym: SymbolicEvaluator<'a>,
+    base: Cost,
+    tree: HashMap<Key, NodeStats>,
+    eval_cache: HashMap<Key, f64>,
+    best: (f64, Option<usize>, Vec<usize>),
+    evals: usize,
+    require_stage: bool,
+}
+
+impl<'a> Joint<'a> {
+    /// Symbolic relative cost of the current trajectory state.
+    fn evaluate(&mut self, key: &Key, stage: Option<usize>, spec: &ShardingSpec) -> f64 {
+        if let Some(&c) = self.eval_cache.get(key) {
+            return c;
+        }
+        let c = match stage {
+            None => self.sym.relative(spec, &self.base),
+            Some(i) => {
+                let sa = &self.stage_actions[i];
+                match schedule::price_staged_with(
+                    &self.modules[i],
+                    &self.stage_syms[i],
+                    spec,
+                    self.mesh,
+                    self.model,
+                    sa.microbatches,
+                ) {
+                    Ok(sc) => self.model.relative(&sc.cost, &self.base),
+                    Err(_) => f64::INFINITY,
+                }
+            }
+        };
+        self.eval_cache.insert(key.clone(), c);
+        self.evals += 1;
+        c
+    }
+
+    fn note_best(&mut self, c: f64, stage: Option<usize>, applied: &[usize]) {
+        if self.require_stage && stage.is_none() {
+            return;
+        }
+        if c.is_finite() && c < self.best.0 {
+            self.best = (c, stage, applied.to_vec());
+        }
+    }
+}
+
+/// Legal sharding actions at a state (unapplied + spec-legal).
+fn legal_shardings(j: &Joint, applied: &[usize], spec: &ShardingSpec) -> Vec<usize> {
+    (0..j.actions.len())
+        .filter(|ai| !applied.contains(ai))
+        .filter(|&ai| {
+            let a = &j.actions[ai];
+            spec.check_assignment(j.func, j.mesh, &a.assignment, a.axis)
+        })
+        .collect()
+}
+
+fn backprop(j: &mut Joint, path: &[(Key, usize)], terminal: &Key, reward: f64) {
+    {
+        let node = j.tree.entry(terminal.clone()).or_default();
+        node.visits += 1.0;
+        node.value_sum += reward;
+        let e = node.edges.entry(STOP).or_insert((0.0, 0.0));
+        e.0 += 1.0;
+        e.1 += reward;
+    }
+    for (key, edge) in path.iter().rev() {
+        let node = j.tree.entry(key.clone()).or_default();
+        node.visits += 1.0;
+        node.value_sum += reward;
+        let e = node.edges.entry(*edge).or_insert((0.0, 0.0));
+        e.0 += 1.0;
+        e.1 += reward;
+    }
+}
+
+/// One trajectory from the root (same shape as the flat search: every
+/// visited state is evaluated and cached; UCT over STOP + legal edges).
+fn trajectory(j: &mut Joint, cfg: &JointSearchConfig, rng: &mut Rng) {
+    let n_shard = j.actions.len();
+    let mut spec = ShardingSpec::unsharded(j.func);
+    let mut stage: Option<usize> = None;
+    let mut applied: Vec<usize> = Vec::new();
+    let mut path: Vec<(Key, usize)> = Vec::new();
+    let mut min_c = f64::INFINITY;
+
+    loop {
+        let key = key_of(stage, &applied);
+        let c = j.evaluate(&key, stage, &spec);
+        j.note_best(c, stage, &applied);
+        min_c = min_c.min(c);
+        let depth = applied.len() + usize::from(stage.is_some());
+
+        let mut options: Vec<usize> = vec![STOP];
+        if depth < cfg.max_depth {
+            if stage.is_none() {
+                options.extend((0..j.stage_actions.len()).map(|i| n_shard + i));
+            }
+            options.extend(legal_shardings(j, &applied, &spec));
+        }
+
+        let chosen = {
+            let node = j.tree.get(&key);
+            let total_visits = node.map(|n| n.visits).unwrap_or(0.0).max(1.0);
+            let mut best_a = STOP;
+            let mut best_score = f64::NEG_INFINITY;
+            for &a in &options {
+                let (v, s) = node
+                    .and_then(|n| n.edges.get(&a))
+                    .copied()
+                    .unwrap_or((0.0, 0.0));
+                let mean = if v > 0.0 { s / v } else { -c.min(2.0) + 0.05 };
+                let explore = cfg.exploration * ((total_visits + 1.0).ln() / (v + 1.0)).sqrt();
+                let score = mean + explore + rng.f64() * 1e-9;
+                if score > best_score {
+                    best_score = score;
+                    best_a = a;
+                }
+            }
+            best_a
+        };
+
+        if chosen == STOP {
+            let reward = -min_c.min(2.0) - cfg.length_penalty * depth as f64;
+            backprop(j, &path, &key, reward);
+            return;
+        }
+        if chosen >= n_shard {
+            stage = Some(chosen - n_shard);
+        } else {
+            let a = &j.actions[chosen];
+            if spec.apply_assignment(j.func, j.mesh, &a.assignment, a.axis).is_err() {
+                // Legality was just probed; defensive termination keeps
+                // the spec and `applied` in sync if it ever fails.
+                let reward = -min_c.min(2.0) - cfg.length_penalty * depth as f64;
+                backprop(j, &path, &key, reward);
+                return;
+            }
+            applied.push(chosen);
+        }
+        path.push((key, chosen));
+    }
+}
+
+/// Run the joint (stages × sharding) search. `actions` is the NDA
+/// sharding action space; `stage_actions` the cut/count candidates from
+/// [`crate::search::actions::build_stage_actions`]. With an empty
+/// `stage_actions` this degrades to a sequential flat search.
+pub fn joint_search(
+    func: &Func,
+    mesh: &Mesh,
+    model: &CostModel,
+    actions: &[Action],
+    stage_actions: &[StageAction],
+    cfg: &JointSearchConfig,
+) -> Result<JointOutcome> {
+    let base = {
+        let (local, _) = partition(func, &ShardingSpec::unsharded(func), mesh)?;
+        model.evaluate(&local, mesh)
+    };
+    let modules = stage_actions
+        .iter()
+        .map(|sa| cut_stages(func, &sa.boundaries))
+        .collect::<Result<Vec<_>>>()?;
+    let stage_syms: Vec<Vec<SymbolicEvaluator>> =
+        modules.iter().map(|sm| schedule::stage_evaluators(sm, mesh, model)).collect();
+    let c0 = model.relative(&base, &base);
+    // Under require_stage the unstaged root may not win; the best
+    // tracker starts empty and the search must find a staged state.
+    let best0 =
+        if cfg.require_stage { (f64::INFINITY, None, Vec::new()) } else { (c0, None, Vec::new()) };
+    let mut j = Joint {
+        func,
+        mesh,
+        model,
+        actions,
+        stage_actions,
+        modules: &modules,
+        stage_syms,
+        sym: SymbolicEvaluator::new(func, mesh, model),
+        base,
+        tree: HashMap::new(),
+        eval_cache: HashMap::new(),
+        best: best0,
+        evals: 0,
+        require_stage: cfg.require_stage,
+    };
+    j.eval_cache.insert(key_of(None, &[]), c0);
+
+    let mut rng = Rng::new(cfg.seed ^ 0x57A6E5);
+    let mut stale_rounds = 0usize;
+    while j.evals < cfg.budget && stale_rounds < cfg.patience {
+        let before = j.best.0;
+        for _ in 0..cfg.round {
+            if j.evals >= cfg.budget {
+                break;
+            }
+            trajectory(&mut j, cfg, &mut rng);
+        }
+        if j.best.0 + 1e-9 < before {
+            stale_rounds = 0;
+        } else {
+            stale_rounds += 1;
+        }
+    }
+
+    let (_, mut stage_choice, mut best_actions) = j.best.clone();
+    if cfg.require_stage && stage_choice.is_none() {
+        anyhow::bail!(
+            "no feasible staged solution found in {} evaluations \
+             ({} stage actions offered); the model may not support the requested stage counts",
+            j.evals,
+            stage_actions.len()
+        );
+    }
+    // Rebuild the winning spec; degrade consistently on (hypothetical)
+    // re-apply failure, like the flat search.
+    let mut spec = ShardingSpec::unsharded(func);
+    for &ai in &best_actions {
+        let a = &actions[ai];
+        if spec.apply_assignment(func, mesh, &a.assignment, a.axis).is_err() {
+            debug_assert!(false, "best joint trajectory fails to re-apply");
+            spec = ShardingSpec::unsharded(func);
+            best_actions = Vec::new();
+            stage_choice = None;
+            break;
+        }
+    }
+    // Oracle re-pricing of the winner.
+    let cost = match stage_choice {
+        Some(i) => {
+            match schedule::price_staged_oracle(
+                &j.modules[i],
+                &spec,
+                mesh,
+                model,
+                stage_actions[i].microbatches,
+            ) {
+                Ok(sc) => sc.cost,
+                Err(e) => {
+                    debug_assert!(false, "winning staged spec fails to price: {e:#}");
+                    let _ = &e;
+                    spec = ShardingSpec::unsharded(func);
+                    best_actions = Vec::new();
+                    stage_choice = None;
+                    base
+                }
+            }
+        }
+        None => match partition(func, &spec, mesh) {
+            Ok((local, _)) => model.evaluate(&local, mesh),
+            Err(e) => {
+                debug_assert!(false, "winning spec fails to partition: {e:#}");
+                let _ = &e;
+                spec = ShardingSpec::unsharded(func);
+                best_actions = Vec::new();
+                base
+            }
+        },
+    };
+    let relative = model.relative(&cost, &base);
+    let oom = !model.fits(&cost);
+    Ok(JointOutcome {
+        actions: best_actions,
+        stage_action: stage_choice,
+        spec,
+        cost,
+        base,
+        relative,
+        oom,
+        evals: j.evals,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{FuncBuilder, TensorType};
+    use crate::mesh::{HardwareKind, HardwareProfile};
+    use crate::nda::Nda;
+    use crate::search::actions::{build_actions, build_stage_actions};
+    use crate::search::{ActionSpaceConfig, StageActionConfig};
+
+    fn chain(layers: usize, d: i64) -> Func {
+        let mut b = FuncBuilder::new("chain");
+        let mut x = b.param("x", TensorType::f32(vec![16, d]));
+        for l in 0..layers {
+            let w = b.param(format!("w{l}"), TensorType::f32(vec![d, d]));
+            let y = b.matmul(x, w);
+            x = b.relu(y);
+        }
+        b.build(vec![x])
+    }
+
+    fn quick_cfg() -> JointSearchConfig {
+        JointSearchConfig { budget: 250, round: 32, patience: 2, seed: 9, ..Default::default() }
+    }
+
+    #[test]
+    fn joint_search_without_stage_actions_matches_flat_behavior() {
+        let f = chain(4, 64);
+        let mesh = Mesh::grid(&[("b", 2)]);
+        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let nda = Nda::analyze(&f);
+        let actions = build_actions(
+            &f,
+            &nda,
+            &mesh,
+            &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        );
+        let out = joint_search(&f, &mesh, &model, &actions, &[], &quick_cfg()).unwrap();
+        assert!(out.stage_action.is_none());
+        assert!(
+            out.relative <= 1.0 + 1e-9,
+            "sharding must not lose to unsharded: {}",
+            out.relative
+        );
+    }
+
+    // The OOM → feasible acceptance scenario (flat search stays oom,
+    // joint search picks a fitting stage action) lives in the
+    // integration suite — `rust/tests/pipeline.rs::
+    // stage_actions_turn_oom_into_feasible` — on a compute-dominated
+    // model size where pipelining actually pays.
+
+    #[test]
+    fn staged_states_are_explored_and_priced() {
+        // A cheap smoke test that staged states actually enter the tree:
+        // with only stage actions available (no sharding actions), the
+        // best state must be a staged one whenever a cut exists and the
+        // schedule beats the unstaged baseline.
+        let f = chain(6, 64);
+        let mesh = Mesh::grid(&[("b", 2)]);
+        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let nda = Nda::analyze(&f);
+        let stage_actions = build_stage_actions(
+            &f,
+            &nda,
+            &StageActionConfig { counts: vec![4], microbatches: 8, ..Default::default() },
+        );
+        assert!(!stage_actions.is_empty());
+        let out = joint_search(&f, &mesh, &model, &[], &stage_actions, &quick_cfg()).unwrap();
+        assert!(out.actions.is_empty(), "no sharding actions were offered");
+        if out.stage_action.is_some() {
+            assert!(out.relative < 1.0, "a chosen stage action must beat unstaged");
+        } else {
+            assert_eq!(out.relative, 1.0, "no stage action chosen: unstaged baseline");
+        }
+    }
+}

@@ -153,16 +153,43 @@ pub fn differential_test_against(
     let pm = partition_exec(func, spec, mesh)?;
     crate::ir::verifier::verify_device_local_with(&pm.local, mesh)?;
     let actual = super::spmd::run_sharded(&pm, mesh, inputs)?;
+    Ok(compare_results(expected, &actual, pm.stats))
+}
+
+/// Worst-divergence comparison of two result sets (shared by the flat
+/// and the staged differential paths).
+fn compare_results(expected: &[Tensor], actual: &[Tensor], stats: PartitionStats) -> DiffReport {
     let mut per_result = Vec::with_capacity(expected.len());
     let mut max_abs = 0.0f32;
     let mut max_rel = 0.0f32;
-    for (e, a) in expected.iter().zip(&actual) {
+    for (e, a) in expected.iter().zip(actual) {
         let d = ResultDiff { abs: e.max_abs_diff(a), rel: e.max_rel_err(a) };
         max_abs = max_abs.max(d.abs);
         max_rel = max_rel.max(d.rel);
         per_result.push(d);
     }
-    Ok(DiffReport { max_abs_diff: max_abs, max_rel_err: max_rel, per_result, stats: pm.stats })
+    DiffReport { max_abs_diff: max_abs, max_rel_err: max_rel, per_result, stats }
+}
+
+/// The staged twin of [`differential_test`]: cut `func` at `boundaries`
+/// ([`crate::pipeline::cut_stages`]), execute the staged module on the
+/// extended SPMD simulator — every stage's partitioned sub-module on its
+/// stage coordinate, transfers over the point-to-point primitives —
+/// and compare against the *unstaged, unsharded* interpreter oracle from
+/// the same seeded inputs. `stats` aggregates the collectives of every
+/// stage rewrite.
+pub fn differential_test_staged(
+    func: &Func,
+    spec: &ShardingSpec,
+    boundaries: &[usize],
+    intra: &Mesh,
+    seed: u64,
+) -> Result<DiffReport> {
+    let sm = crate::pipeline::cut_stages(func, boundaries)?;
+    let inputs = random_inputs(func, seed);
+    let expected = eval_func(func, &inputs)?;
+    let (actual, stats) = crate::pipeline::run_staged(&sm, spec, intra, &inputs)?;
+    Ok(compare_results(&expected, &actual, stats))
 }
 
 /// A minimized failing `(program, spec)` pair plus a readable report.
@@ -342,6 +369,25 @@ mod tests {
         let r = differential_test(&f, &spec, &mesh, 2).unwrap();
         assert!(r.within(DEFAULT_REL_TOL), "rel {}", r.max_rel_err);
         assert_eq!(r.stats.all_reduce, 1);
+        assert_eq!(r.per_result.len(), f.results.len());
+    }
+
+    #[test]
+    fn staged_mlp_diff_within_tolerance() {
+        let f = mlp();
+        let mesh = Mesh::grid(&[("b", 2)]);
+        let mut spec = ShardingSpec::unsharded(&f);
+        spec.apply_assignment(
+            &f,
+            &mesh,
+            &[(ValueId(0), 0), (ValueId(3), 0), (ValueId(4), 0), (ValueId(5), 0)],
+            0,
+        )
+        .unwrap();
+        // Cut between the two matmuls: the activation hops the stage
+        // boundary point-to-point, sharded on the batch dim.
+        let r = differential_test_staged(&f, &spec, &[2], &mesh, 6).unwrap();
+        assert!(r.within(DEFAULT_REL_TOL), "rel {}", r.max_rel_err);
         assert_eq!(r.per_result.len(), f.results.len());
     }
 

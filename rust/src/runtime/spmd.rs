@@ -30,6 +30,13 @@
 //! simulator, so the differential harness ([`crate::runtime::diff`])
 //! only ever tests the partitioner's rewrite + the data movement here.
 //!
+//! Pipeline stages add a *stage coordinate* to every device (the mesh's
+//! stage axis, appended by [`crate::pipeline::staged_mesh`]) and move
+//! inter-stage transfer tensors with the point-to-point [`send`] /
+//! [`recv`] primitives — ownership moves with the data, so the staged
+//! executor ([`crate::pipeline::run_staged`]) validates transfers the
+//! same way collectives are validated here.
+//!
 //! The global-tensor boundary is handled by [`shard_tensor`] (extract
 //! each device's shard from a global input per a dim→axes assignment)
 //! and [`unshard_tensor`] (reassemble a global result from shards);
@@ -198,6 +205,83 @@ pub fn shard_slice(mesh: &Mesh, axis: AxisId, dim: usize, input: &[Tensor]) -> V
             t.block(&starts, &sizes)
         })
         .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Point-to-point primitives (pipeline stages)
+//
+// A device's *stage coordinate* is its coordinate on the mesh's stage
+// axis (appended last by `crate::pipeline::staged_mesh`). Staged
+// execution keeps per-value slot vectors over the full mesh —
+// `Option<Tensor>` per device, `None` where a stage never held (or no
+// longer holds) the value — and moves data between stage coordinates
+// with `send`/`recv`, the point-to-point twins of the collectives above.
+// ---------------------------------------------------------------------------
+
+/// Materialize one tensor per subgroup of `axis` at stage coordinate
+/// `coord`: subgroup `i` of [`Mesh::groups`] (row-major order of the
+/// remaining coordinates) receives `tensors[i]` on its `coord`-th
+/// member; every other slot is `None`.
+pub fn place(mesh: &Mesh, axis: AxisId, coord: usize, tensors: &[Tensor]) -> Vec<Option<Tensor>> {
+    let groups = mesh.groups(axis);
+    assert_eq!(groups.len(), tensors.len(), "one tensor per subgroup");
+    let mut out: Vec<Option<Tensor>> = vec![None; mesh.num_devices()];
+    for (g, t) in groups.iter().zip(tensors) {
+        out[g[coord]] = Some(t.clone());
+    }
+    out
+}
+
+/// The receiving half of a point-to-point hop: every device at stage
+/// coordinate `coord` must hold a tensor; returns them in subgroup
+/// order (the device order of the mesh *without* `axis`). Errors when a
+/// device has nothing — a stage consuming a tensor its devices were
+/// never sent is a transfer-plan bug, surfaced loudly.
+pub fn recv(
+    mesh: &Mesh,
+    axis: AxisId,
+    coord: usize,
+    slots: &[Option<Tensor>],
+) -> Result<Vec<Tensor>> {
+    mesh.groups(axis)
+        .iter()
+        .map(|g| {
+            slots[g[coord]].clone().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "recv: device {} (axis {axis} coordinate {coord}) holds no tensor",
+                    g[coord]
+                )
+            })
+        })
+        .collect()
+}
+
+/// Point-to-point `send`: within every subgroup of `axis`, the tensor
+/// held at coordinate `src` *moves* to the device at coordinate `dst`
+/// (same remaining coordinates). Ownership moves with the data — the
+/// source slot empties — so every inter-stage transfer happens exactly
+/// once and a misrouted read fails in [`recv`] instead of silently
+/// reusing stale data.
+pub fn send(
+    mesh: &Mesh,
+    axis: AxisId,
+    src: usize,
+    dst: usize,
+    mut slots: Vec<Option<Tensor>>,
+) -> Result<Vec<Option<Tensor>>> {
+    anyhow::ensure!(src != dst, "send: source and destination coordinates coincide");
+    for g in mesh.groups(axis) {
+        let t = slots[g[src]].take().ok_or_else(|| {
+            anyhow::anyhow!("send: device {} (coordinate {src}) has nothing to send", g[src])
+        })?;
+        anyhow::ensure!(
+            slots[g[dst]].is_none(),
+            "send: destination device {} (coordinate {dst}) already holds a tensor",
+            g[dst]
+        );
+        slots[g[dst]] = Some(t);
+    }
+    Ok(slots)
 }
 
 /// Execute one instruction across all device states. `values[v][d]` is
@@ -552,6 +636,46 @@ mod tests {
                 assert_eq!(got.shape, want.shape, "case {ci} device {d}");
                 assert_eq!(got.data, want.data, "case {ci} device {d}");
             }
+        }
+    }
+
+    #[test]
+    fn send_moves_ownership_between_stage_coordinates() {
+        // 2 intra devices x 3 stages; stage axis is last (id 1).
+        let mesh = Mesh::grid(&[("d", 2), ("stage", 3)]);
+        let tensors: Vec<Tensor> =
+            (0..2).map(|i| Tensor::new(vec![2], vec![i as f32, 10.0 + i as f32])).collect();
+        let slots = place(&mesh, 1, 0, &tensors);
+        assert_eq!(slots.iter().filter(|s| s.is_some()).count(), 2);
+        // recv at the placed coordinate returns subgroup order.
+        let got = recv(&mesh, 1, 0, &slots).unwrap();
+        assert_eq!(got[0].data, tensors[0].data);
+        assert_eq!(got[1].data, tensors[1].data);
+        // hop 0 -> 1: source empties, destination fills.
+        let slots = send(&mesh, 1, 0, 1, slots).unwrap();
+        assert!(recv(&mesh, 1, 0, &slots).is_err(), "source slots must be empty");
+        let got = recv(&mesh, 1, 1, &slots).unwrap();
+        assert_eq!(got[1].data, tensors[1].data);
+        // hop again 1 -> 2.
+        let slots = send(&mesh, 1, 1, 2, slots).unwrap();
+        let got = recv(&mesh, 1, 2, &slots).unwrap();
+        assert_eq!(got[0].data, tensors[0].data);
+        // sending from an empty coordinate fails loudly.
+        assert!(send(&mesh, 1, 0, 1, slots).is_err());
+    }
+
+    #[test]
+    fn send_respects_subgroup_structure_on_2d_intra_meshes() {
+        // 2x2 intra mesh + 2 stages: each of the 4 subgroups moves its
+        // own tensor; nothing crosses subgroups.
+        let mesh = Mesh::grid(&[("a", 2), ("b", 2), ("stage", 2)]);
+        let tensors: Vec<Tensor> =
+            (0..4).map(|i| Tensor::new(vec![1], vec![i as f32])).collect();
+        let slots = place(&mesh, 2, 0, &tensors);
+        let slots = send(&mesh, 2, 0, 1, slots).unwrap();
+        let got = recv(&mesh, 2, 1, &slots).unwrap();
+        for (i, t) in got.iter().enumerate() {
+            assert_eq!(t.data, vec![i as f32], "subgroup {i} mixed with another");
         }
     }
 

@@ -47,6 +47,80 @@ impl Action {
     }
 }
 
+/// A pipeline-stage action: cut the function into
+/// `boundaries.len() + 1` contiguous stages (see
+/// [`crate::pipeline::cut_stages`]) and schedule `microbatches` GPipe
+/// microbatches. At most one stage action applies per trajectory; the
+/// joint search ([`crate::pipeline::joint_search`]) explores them in the
+/// same tree as the sharding actions, so (stages × sharding) is one
+/// decision space, not two sequenced ones.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageAction {
+    /// Stage count (`boundaries.len() + 1`).
+    pub stages: usize,
+    /// Instruction-index cut points, strictly increasing.
+    pub boundaries: Vec<usize>,
+    /// GPipe microbatch count the schedule is priced with.
+    pub microbatches: usize,
+}
+
+impl StageAction {
+    /// Short display form, e.g. `4 stages @ [12, 25, 40] (m=8)`.
+    pub fn describe(&self) -> String {
+        format!("{} stages @ {:?} (m={})", self.stages, self.boundaries, self.microbatches)
+    }
+}
+
+/// Configuration for stage-action construction.
+#[derive(Clone, Debug)]
+pub struct StageActionConfig {
+    /// Stage counts to offer (counts the legal boundaries cannot support
+    /// are skipped).
+    pub counts: Vec<usize>,
+    /// Microbatch count for the schedule cost model.
+    pub microbatches: usize,
+    /// Cap on distinct cut-point variants per stage count.
+    pub max_cuts_per_count: usize,
+}
+
+impl Default for StageActionConfig {
+    fn default() -> Self {
+        StageActionConfig { counts: vec![2, 4], microbatches: 8, max_cuts_per_count: 2 }
+    }
+}
+
+/// Build the stage-action space: for each requested stage count, up to
+/// `max_cuts_per_count` cut-point variants over the NDA-legal boundaries
+/// ([`crate::pipeline::legal_boundaries`]) — one balanced by
+/// compute weight, one by instruction count — deduplicated.
+pub fn build_stage_actions(func: &Func, nda: &Nda, cfg: &StageActionConfig) -> Vec<StageAction> {
+    use crate::pipeline::{balanced_boundaries, compute_weight, unit_weight, CutWeight};
+    let legal = crate::pipeline::legal_boundaries(func, nda);
+    let weights: [CutWeight; 2] = [compute_weight, unit_weight];
+    let mut out: Vec<StageAction> = Vec::new();
+    for &k in &cfg.counts {
+        if k < 2 {
+            continue;
+        }
+        let mut added = 0usize;
+        for weigh in weights {
+            if added >= cfg.max_cuts_per_count {
+                break;
+            }
+            let Some(boundaries) = balanced_boundaries(func, &legal, k, weigh) else {
+                continue;
+            };
+            let action =
+                StageAction { stages: k, boundaries, microbatches: cfg.microbatches };
+            if !out.contains(&action) {
+                out.push(action);
+                added += 1;
+            }
+        }
+    }
+    out
+}
+
 /// Configuration for action-space construction.
 #[derive(Clone, Debug)]
 pub struct ActionSpaceConfig {
@@ -135,7 +209,17 @@ pub fn build_actions(
                     expanded.insert(pair);
                 }
             }
-            let assignment: Vec<(ValueId, usize)> = expanded.into_iter().collect();
+            let mut assignment: Vec<(ValueId, usize)> = expanded.into_iter().collect();
+            // Mirroring must preserve the one-dim-per-value invariant the
+            // spec's `check_assignment` fast path (and GSPMD's one axis
+            // per value rule) rely on: chained same-shape layers can
+            // mirror a color onto *both* dims of one weight. Fall back to
+            // the unmirrored assignment in that case — `base` is
+            // dup-free by construction (P3).
+            let mut seen_values: BTreeSet<ValueId> = BTreeSet::new();
+            if assignment.iter().any(|&(v, _)| !seen_values.insert(v)) {
+                assignment = base.iter().copied().collect::<BTreeSet<_>>().into_iter().collect();
+            }
             if assignment.len() < cfg.min_color_dims {
                 continue;
             }
@@ -232,6 +316,65 @@ mod tests {
         assert_eq!(s_actions.len(), 2);
         assert_ne!(s_actions[0].order_bits, s_actions[1].order_bits);
         assert_ne!(s_actions[0].assignment, s_actions[1].assignment);
+    }
+
+    #[test]
+    fn chained_same_shape_layers_never_double_shard_a_value() {
+        // A chain of identical square weights groups every layer's weight
+        // into one param group while the hidden colors chain through
+        // them: naive mirroring would put BOTH dims of an interior
+        // weight into one action. The expansion must fall back to the
+        // unmirrored assignment instead.
+        let mut b = FuncBuilder::new("chain");
+        let mut x = b.param("x", TensorType::f32(vec![8, 16]));
+        for l in 0..4 {
+            let w = b.param(format!("w{l}"), TensorType::f32(vec![16, 16]));
+            let y = b.matmul(x, w);
+            x = b.relu(y);
+        }
+        let f = b.build(vec![x]);
+        let nda = Nda::analyze(&f);
+        let mesh = Mesh::grid(&[("d", 2)]);
+        let cfg = ActionSpaceConfig { min_color_dims: 1, ..Default::default() };
+        let actions = build_actions(&f, &nda, &mesh, &cfg);
+        assert!(!actions.is_empty());
+        for a in &actions {
+            let mut values: Vec<ValueId> = a.assignment.iter().map(|&(v, _)| v).collect();
+            let before = values.len();
+            values.sort_unstable();
+            values.dedup();
+            assert_eq!(
+                before,
+                values.len(),
+                "action {} shards a value on two dims",
+                a.describe(&mesh)
+            );
+        }
+    }
+
+    #[test]
+    fn stage_actions_enumerate_requested_counts() {
+        let mut b = FuncBuilder::new("chain");
+        let mut x = b.param("x", TensorType::f32(vec![8, 16]));
+        for l in 0..6 {
+            let w = b.param(format!("w{l}"), TensorType::f32(vec![16, 16]));
+            let y = b.matmul(x, w);
+            x = b.relu(y);
+        }
+        let f = b.build(vec![x]);
+        let nda = Nda::analyze(&f);
+        let cfg = StageActionConfig { counts: vec![2, 4], microbatches: 8, ..Default::default() };
+        let actions = build_stage_actions(&f, &nda, &cfg);
+        assert!(actions.iter().any(|a| a.stages == 2), "{actions:?}");
+        assert!(actions.iter().any(|a| a.stages == 4), "{actions:?}");
+        for a in &actions {
+            assert_eq!(a.boundaries.len(), a.stages - 1);
+            assert_eq!(a.microbatches, 8);
+            assert!(a.describe().contains("stages"));
+        }
+        // a 100-stage request is silently unsupportable, not a panic
+        let cfg = StageActionConfig { counts: vec![100], ..Default::default() };
+        assert!(build_stage_actions(&f, &nda, &cfg).is_empty());
     }
 
     #[test]

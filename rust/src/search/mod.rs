@@ -2,7 +2,9 @@
 //!
 //! * [`actions`] — the axis-aware, color-based action space (§4.2) built
 //!   once per model from the NDA, with precomputed conflict resolutions
-//!   and parameter-group mirroring.
+//!   and parameter-group mirroring — plus the pipeline stage-count /
+//!   cut-point actions ([`actions::StageAction`]) the joint search in
+//!   [`crate::pipeline`] explores alongside them.
 //! * [`mcts`] — the Monte-Carlo Tree Search with the colors-aware
 //!   canonical state (§4.3), early termination, and parallel rollouts.
 //! * [`incremental`] — the incremental state evaluator the rollouts use:
@@ -20,7 +22,9 @@ pub mod actions;
 pub mod incremental;
 pub mod mcts;
 
-pub use actions::{build_actions, Action, ActionSpaceConfig};
+pub use actions::{
+    build_actions, build_stage_actions, Action, ActionSpaceConfig, StageAction, StageActionConfig,
+};
 pub use incremental::IncrementalEvaluator;
 pub use mcts::{search, SearchConfig, SearchOutcome};
 

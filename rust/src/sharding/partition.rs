@@ -53,6 +53,16 @@ impl PartitionStats {
     pub fn total_collectives(&self) -> usize {
         self.all_reduce + self.all_gather + self.reduce_scatter + self.all_to_all
     }
+
+    /// Accumulate another rewrite's counters (the staged executor sums
+    /// the per-stage statistics into one report).
+    pub fn absorb(&mut self, other: &PartitionStats) {
+        self.all_reduce += other.all_reduce;
+        self.all_gather += other.all_gather;
+        self.reduce_scatter += other.reduce_scatter;
+        self.all_to_all += other.all_to_all;
+        self.shard_slice += other.shard_slice;
+    }
 }
 
 /// Shared read-only context threaded through the generic rewrite.

@@ -1,6 +1,8 @@
 //! Golden-snapshot tests pinning the §3 static analysis across the
 //! model zoo: per-model color count, conflict count, compatibility-set
-//! count, resolution-group count and parameter-group count.
+//! count, resolution-group count, parameter-group count, and the
+//! pipeline subsystem's legal stage-cut count (the boundaries
+//! `toast::pipeline::legal_boundaries` enumerates from the NDA).
 //!
 //! The snapshot lives at `rust/tests/golden/nda_zoo.snap`. On first run
 //! (or with `GOLDEN_BLESS=1`) the current analysis is written out and
@@ -16,8 +18,8 @@ use std::path::PathBuf;
 use toast::models::ModelKind;
 use toast::nda::Nda;
 
-const METRICS: [&str; 5] =
-    ["colors", "conflicts", "compat_sets", "resolution_groups", "param_groups"];
+const METRICS: [&str; 6] =
+    ["colors", "conflicts", "compat_sets", "resolution_groups", "param_groups", "stage_cuts"];
 
 fn snapshot_path() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/nda_zoo.snap")
@@ -34,6 +36,7 @@ fn summarize(kind: ModelKind) -> BTreeMap<&'static str, usize> {
     m.insert("compat_sets", nda.conflicts.compat_sets.len());
     m.insert("resolution_groups", nda.conflicts.num_groups());
     m.insert("param_groups", nda.param_groups.len());
+    m.insert("stage_cuts", toast::pipeline::legal_boundaries(&func, &nda).len());
     m
 }
 

@@ -539,7 +539,44 @@ fn prop_wire_roundtrip_p10() {
             ),
         }
 
-        // -- a full Solution artifact (inline model) round-trips -- 
+        // -- a staged spec prices bit-identically across the wire too --
+        // (extends P10 to the pipeline dimension: the reloaded spec +
+        // stage assignment reproduce the exact schedule price)
+        let nda = Nda::analyze(&func);
+        let legal = toast::pipeline::legal_boundaries(&func, &nda);
+        let stage_assignment = legal.first().map(|&b| toast::api::StageAssignment {
+            boundaries: vec![b],
+            microbatches: 2 + case % 7,
+        });
+        if let Some(sa) = &stage_assignment {
+            let sa_back = toast::api::StageAssignment::from_json(
+                &Json::parse(&sa.to_json().render()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(&sa_back, sa, "case {case}: StageAssignment drifted");
+            let sm = toast::pipeline::cut_stages(&func, &sa.boundaries).unwrap();
+            let before = toast::pipeline::schedule::price_staged_symbolic(
+                &sm, &spec, mesh, &model, sa.microbatches,
+            );
+            let after = toast::pipeline::schedule::price_staged_symbolic(
+                &sm, &spec_back, mesh, &model, sa_back.microbatches,
+            );
+            match (before, after) {
+                (Ok(a), Ok(b)) => assert_eq!(
+                    a.cost.runtime_s.to_bits(),
+                    b.cost.runtime_s.to_bits(),
+                    "case {case}: staged symbolic cost changed across the wire"
+                ),
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!(
+                    "case {case}: staged pricing verdict changed across the wire: {:?} vs {:?}",
+                    a.is_ok(),
+                    b.is_ok()
+                ),
+            }
+        }
+
+        // -- a full Solution artifact (inline model) round-trips --
         let (cost, base) = match (
             partition(&func, &spec, mesh),
             partition(&func, &ShardingSpec::unsharded(&func), mesh),
@@ -559,6 +596,8 @@ fn prop_wire_roundtrip_p10() {
             oom: !model.fits(&cost),
             cost,
             base,
+            // Half the artifacts carry a stage assignment on the wire.
+            stages: if case % 2 == 0 { stage_assignment } else { None },
             evals: case,
             search_time_s: 0.125 * case as f64,
             validation: (case % 3 == 0).then(|| ValidationRecord {
@@ -572,6 +611,7 @@ fn prop_wire_roundtrip_p10() {
         };
         let back = Solution::from_json_str(&sol.to_json_string()).unwrap();
         assert_eq!(back, sol, "case {case}: Solution drifted through JSON");
+        assert_eq!(back.stages, sol.stages, "case {case}: stage assignment drifted");
     }
 }
 

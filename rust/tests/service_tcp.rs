@@ -326,6 +326,106 @@ fn poison_request_is_failed_after_the_requeue_cap() {
     server.shutdown();
 }
 
+/// Kill-server/restart: a worker running the reconnect loop serves a
+/// request, survives the server being torn down, reconnects with
+/// exponential backoff to a fresh server on the *same* address, and
+/// serves again — the restarted server picks its fleet back up without
+/// anyone re-spawning worker processes.
+#[test]
+fn restarted_server_picks_the_fleet_back_up() {
+    use toast::coordinator::transport::{run_worker_reconnect, ReconnectPolicy};
+
+    let (addr, _metrics1, server1) = start_server(0, Duration::from_secs(5));
+    let policy = ReconnectPolicy {
+        initial: Duration::from_millis(20),
+        max: Duration::from_millis(200),
+        // Generous enough to ride out the restart window (the rebind
+        // happens within a few of the early 20-80ms retries), small
+        // enough that the worker exits promptly after the final
+        // shutdown instead of probing a freed port for seconds.
+        max_attempts: 12,
+    };
+    let worker = std::thread::spawn({
+        let addr = addr.to_string();
+        let opts = deterministic_worker("phoenix");
+        let policy = policy.clone();
+        move || {
+            // Spans BOTH server generations; returns Err("giving up...")
+            // once the final server is gone and attempts run out.
+            let err = run_worker_reconnect(&addr, &opts, &policy)
+                .expect_err("reconnect loop only ends by exhausting attempts");
+            assert!(format!("{err:#}").contains("giving up"), "{err:#}");
+        }
+    });
+
+    // Generation 1 serves a request through the reconnecting worker.
+    let mut req = default_request(ModelKind::Mlp, Method::Manual);
+    req.budget = 40;
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+    let id = client.submit(req.clone()).unwrap();
+    let resp = client.recv_response().unwrap();
+    assert_eq!(resp.id, id);
+    assert!(resp.result.expect("gen-1 job").validation.expect("verified").pass);
+
+    // Kill the server; the worker's connection drops and its backoff
+    // loop starts probing the dead address.
+    drop(client);
+    server1.shutdown();
+
+    // Restart on the SAME address. std listeners set SO_REUSEADDR on
+    // Unix, but retry briefly in case the port lingers.
+    let listener = {
+        let mut attempt = 0;
+        loop {
+            match TcpListener::bind(addr) {
+                Ok(l) => break l,
+                Err(e) => {
+                    attempt += 1;
+                    assert!(attempt < 100, "rebinding {addr} failed: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    };
+    let svc = Service::start_with(ServiceConfig {
+        workers: 0,
+        search_threads: 1,
+        ..Default::default()
+    });
+    let metrics2 = Arc::clone(&svc.metrics);
+    let server2 =
+        TcpServer::start(svc, listener, TcpServerConfig { dead_after: Duration::from_secs(5) })
+            .unwrap();
+    assert_eq!(server2.local_addr(), addr, "generation 2 must reuse the address");
+
+    // The SAME worker process reconnects (fail fast rather than hang if
+    // the backoff loop gave up early).
+    let mut waited = 0;
+    while metrics2.report().workers == 0 {
+        waited += 1;
+        assert!(waited < 200, "worker never reconnected to the restarted server");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // ...and completes generation 2's request.
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+    let id = client.submit(req).unwrap();
+    let resp = client.recv_response().unwrap();
+    assert_eq!(resp.id, id);
+    assert!(
+        resp.result.expect("gen-2 job, served by the reconnected worker")
+            .validation
+            .expect("verified")
+            .pass
+    );
+    let report = metrics2.report();
+    assert_eq!(report.workers, 1, "the restarted server sees the old fleet: {}", report.render_line());
+    assert_eq!(report.completed, 1, "{}", report.render_line());
+
+    server2.shutdown();
+    worker.join().unwrap();
+}
+
 /// The acceptance gate in miniature: for a fixed seed and model, the
 /// in-process thread mode and the socket mode produce byte-identical
 /// `Solution` JSON (modulo the wall-clock field both modes zero).
