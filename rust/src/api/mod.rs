@@ -464,6 +464,9 @@ pub trait Strategy: Send + Sync {
 
 /// TOAST's own method: MCTS over the cached NDA action space (§4).
 /// `template.budget`/`template.seed` are overridden by the session's.
+/// The default template runs the transposition-aware, batch-evaluated
+/// search; the budget is reservation-counted, so the reported `evals`
+/// never exceeds it and single-threaded runs reproduce exactly.
 #[derive(Clone, Debug, Default)]
 pub struct MctsStrategy {
     pub template: SearchConfig,

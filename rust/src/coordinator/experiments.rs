@@ -44,6 +44,14 @@ impl BenchScale {
             BenchScale::Paper => 300,
         }
     }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BenchScale::Tiny => "tiny",
+            BenchScale::Bench => "bench",
+            BenchScale::Paper => "paper",
+        }
+    }
 }
 
 /// Which experiment to run.
@@ -59,6 +67,11 @@ pub enum Experiment {
     /// Pipeline-stage sweep: staged execution vs. the interpreter oracle
     /// plus schedule-pricing agreement (see [`run_pipeline_suite`]).
     Pipeline,
+    /// Search-speed campaign: evaluator throughput, flat and joint MCTS
+    /// legacy-vs-optimized comparisons, zoo joint wall times (see
+    /// [`run_search_speed`]); `BENCH_search_speed.json` is its committed
+    /// baseline.
+    SearchSpeed,
 }
 
 impl std::str::FromStr for Experiment {
@@ -71,8 +84,10 @@ impl std::str::FromStr for Experiment {
             "ablations" => Ok(Experiment::Ablations),
             "differential" | "diff" => Ok(Experiment::Differential),
             "pipeline" | "stages" => Ok(Experiment::Pipeline),
+            "search-speed" | "search_speed" => Ok(Experiment::SearchSpeed),
             other => Err(format!(
-                "unknown experiment '{other}' (fig8|fig9|fig10|ablations|differential|pipeline)"
+                "unknown experiment '{other}' \
+                 (fig8|fig9|fig10|ablations|differential|pipeline|search-speed)"
             )),
         }
     }
@@ -369,9 +384,12 @@ pub fn measure_eval_throughput(
     }
     let symbolic_evals_per_s = n_states as f64 / t0.elapsed().as_secs_f64().max(1e-9);
 
-    // Incremental engine: walk the trajectory like the search does.
-    let mut eng = IncrementalEvaluator::new(func, mesh, model, base)
-        .expect("logical module");
+    // Incremental engine: walk the trajectory like the search does. Op
+    // rules depend only on `func`, so it reuses the symbolic
+    // evaluator's vector instead of deriving its own.
+    let mut eng =
+        IncrementalEvaluator::with_shared_rules(func, mesh, model, base, sym.shared_rules())
+            .expect("logical module");
     let t0 = Instant::now();
     for _ in 0..iters {
         eng.reset();
@@ -384,6 +402,475 @@ pub fn measure_eval_throughput(
     let incremental_evals_per_s = n_states as f64 / t0.elapsed().as_secs_f64().max(1e-9);
 
     EvalThroughput { oracle_evals_per_s, symbolic_evals_per_s, incremental_evals_per_s }
+}
+
+/// One legacy-vs-optimized search comparison, same model / action space /
+/// seed / eval budget on both sides. "Legacy" pins every PR-6 lever off
+/// (action-id state keys, eager per-visit evaluation, no pruning);
+/// "optimized" is the default configuration.
+#[derive(Clone, Debug)]
+pub struct SearchComparison {
+    pub legacy_nodes: usize,
+    pub legacy_evals: usize,
+    pub legacy_wall_s: f64,
+    /// Best relative cost the legacy search found.
+    pub legacy_best: f64,
+    pub opt_nodes: usize,
+    pub opt_evals: usize,
+    pub opt_wall_s: f64,
+    pub opt_best: f64,
+}
+
+impl SearchComparison {
+    pub fn legacy_nodes_per_s(&self) -> f64 {
+        self.legacy_nodes as f64 / self.legacy_wall_s.max(1e-9)
+    }
+
+    pub fn opt_nodes_per_s(&self) -> f64 {
+        self.opt_nodes as f64 / self.opt_wall_s.max(1e-9)
+    }
+
+    /// Effective nodes/sec ratio, the acceptance-gated speedup.
+    pub fn speedup(&self) -> f64 {
+        self.opt_nodes_per_s() / self.legacy_nodes_per_s().max(1e-12)
+    }
+
+    /// Same-or-better best cost (small epsilon for float noise).
+    pub fn cost_parity(&self) -> bool {
+        self.opt_best <= self.legacy_best + 1e-6
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("legacy_nodes", Json::n(self.legacy_nodes as f64)),
+            ("legacy_evals", Json::n(self.legacy_evals as f64)),
+            ("legacy_wall_s", Json::n(self.legacy_wall_s)),
+            ("legacy_best", Json::n(self.legacy_best)),
+            ("legacy_nodes_per_s", Json::n(self.legacy_nodes_per_s())),
+            ("opt_nodes", Json::n(self.opt_nodes as f64)),
+            ("opt_evals", Json::n(self.opt_evals as f64)),
+            ("opt_wall_s", Json::n(self.opt_wall_s)),
+            ("opt_best", Json::n(self.opt_best)),
+            ("opt_nodes_per_s", Json::n(self.opt_nodes_per_s())),
+            ("speedup", Json::n(self.speedup())),
+        ])
+    }
+}
+
+/// The search-speed report `bench --experiment search-speed` produces and
+/// `BENCH_search_speed.json` commits.
+#[derive(Clone, Debug)]
+pub struct SearchSpeedReport {
+    pub scale: BenchScale,
+    /// Set only on hand-authored baselines written without a local
+    /// toolchain: absolute numbers are estimates, and the CI check
+    /// downgrades the ±25% band to a warning until a measured baseline
+    /// replaces them.
+    pub provisional: bool,
+    /// Per-model evaluator throughput (oracle / symbolic / incremental).
+    pub eval_throughput: Vec<(ModelKind, EvalThroughput)>,
+    /// Flat MCTS on the transformer (informational).
+    pub flat: SearchComparison,
+    /// Joint (stages × sharding) on the transformer — the gated
+    /// comparison: ≥1.3× effective nodes/sec at same-or-better cost.
+    pub joint: SearchComparison,
+    /// `(model, wall seconds, best relative)` of the optimized joint
+    /// search across the zoo.
+    pub zoo_joint: Vec<(ModelKind, f64, f64)>,
+}
+
+impl SearchSpeedReport {
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::s("toast.bench.search_speed/v1")),
+            ("scale", Json::s(self.scale.name())),
+            ("provisional", Json::Bool(self.provisional)),
+            (
+                "eval_throughput",
+                Json::Arr(
+                    self.eval_throughput
+                        .iter()
+                        .map(|(mk, tp)| {
+                            Json::obj(vec![
+                                ("model", Json::s(mk.name())),
+                                ("oracle_evals_per_s", Json::n(tp.oracle_evals_per_s)),
+                                ("symbolic_evals_per_s", Json::n(tp.symbolic_evals_per_s)),
+                                (
+                                    "incremental_evals_per_s",
+                                    Json::n(tp.incremental_evals_per_s),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("flat", self.flat.json()),
+            ("joint", self.joint.json()),
+            (
+                "zoo_joint",
+                Json::Arr(
+                    self.zoo_joint
+                        .iter()
+                        .map(|(mk, wall, rel)| {
+                            Json::obj(vec![
+                                ("model", Json::s(mk.name())),
+                                ("wall_s", Json::n(*wall)),
+                                ("relative", Json::n(*rel)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Run the search-speed campaign: evaluator throughput over the zoo,
+/// flat and joint legacy-vs-optimized comparisons on the transformer
+/// (identical seed and eval budget on both sides), and optimized
+/// joint-search wall time across the zoo.
+pub fn run_search_speed(scale: BenchScale) -> SearchSpeedReport {
+    use crate::mesh::HardwareProfile;
+    use crate::pipeline::{joint_search, JointSearchConfig};
+    use crate::search::{
+        build_actions, build_stage_actions, search, ActionSpaceConfig, SearchConfig,
+        StageActionConfig,
+    };
+    use std::time::Instant;
+
+    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let mesh = match scale {
+        BenchScale::Tiny => Mesh::grid(&[("data", 2), ("model", 2)]),
+        _ => Mesh::grid(&[("data", 4), ("model", 4)]),
+    };
+    let zoo: Vec<ModelKind> = match scale {
+        BenchScale::Tiny => vec![ModelKind::Mlp],
+        _ => vec![ModelKind::T2B, ModelKind::Gns, ModelKind::Itx],
+    };
+    let iters = if scale == BenchScale::Tiny { 2 } else { 3 };
+    let space = ActionSpaceConfig { min_color_dims: 1, ..Default::default() };
+
+    let mut eval_throughput = Vec::new();
+    for &mk in &zoo {
+        let func = build_model(mk, scale);
+        let nda = crate::nda::Nda::analyze(&func);
+        let actions = build_actions(&func, &nda, &mesh, &space);
+        let tp = measure_eval_throughput(&func, &mesh, &model, &actions, 4, iters);
+        eval_throughput.push((mk, tp));
+    }
+
+    // Flat MCTS on the transformer: action-id keys + eager rollouts vs.
+    // signature keys + batched leaves. Single worker so both sides pay
+    // identical thread overhead and the comparison is reproducible.
+    let t2b = build_model(ModelKind::T2B, scale);
+    let nda = crate::nda::Nda::analyze(&t2b);
+    let actions = build_actions(&t2b, &nda, &mesh, &space);
+    let budget = scale.budget() * 2;
+    let leg = search(
+        &t2b,
+        &mesh,
+        &model,
+        &actions,
+        &SearchConfig {
+            budget,
+            seed: 17,
+            threads: 1,
+            transpositions: false,
+            batch_leaves: 0,
+            ..Default::default()
+        },
+    );
+    let opt = search(
+        &t2b,
+        &mesh,
+        &model,
+        &actions,
+        &SearchConfig { budget, seed: 17, threads: 1, ..Default::default() },
+    );
+    let flat = SearchComparison {
+        legacy_nodes: leg.nodes,
+        legacy_evals: leg.evals,
+        legacy_wall_s: leg.wall.as_secs_f64(),
+        legacy_best: leg.relative,
+        opt_nodes: opt.nodes,
+        opt_evals: opt.evals,
+        opt_wall_s: opt.wall.as_secs_f64(),
+        opt_best: opt.relative,
+    };
+
+    // Joint (stages × sharding) on the transformer — the gated
+    // comparison: transposition keys + leaf rollouts + candidate caching
+    // + stage-local pruning vs. the PR-5 configuration.
+    let stage_actions = build_stage_actions(&t2b, &nda, &StageActionConfig::default());
+    let t0 = Instant::now();
+    let jleg = joint_search(
+        &t2b,
+        &mesh,
+        &model,
+        &actions,
+        &stage_actions,
+        &JointSearchConfig {
+            budget,
+            seed: 17,
+            transpositions: false,
+            leaf_rollouts: false,
+            prune_stage_local: false,
+            ..Default::default()
+        },
+    )
+    .expect("legacy joint search runs");
+    let jleg_wall = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let jopt = joint_search(
+        &t2b,
+        &mesh,
+        &model,
+        &actions,
+        &stage_actions,
+        &JointSearchConfig { budget, seed: 17, ..Default::default() },
+    )
+    .expect("joint search runs");
+    let jopt_wall = t0.elapsed().as_secs_f64();
+    let joint = SearchComparison {
+        legacy_nodes: jleg.nodes,
+        legacy_evals: jleg.evals,
+        legacy_wall_s: jleg_wall,
+        legacy_best: jleg.relative,
+        opt_nodes: jopt.nodes,
+        opt_evals: jopt.evals,
+        opt_wall_s: jopt_wall,
+        opt_best: jopt.relative,
+    };
+
+    // Optimized joint-search wall time across the zoo.
+    let mut zoo_joint = Vec::new();
+    for &mk in &zoo {
+        let func = build_model(mk, scale);
+        let nda = crate::nda::Nda::analyze(&func);
+        let actions = build_actions(&func, &nda, &mesh, &space);
+        let stage_actions = build_stage_actions(
+            &func,
+            &nda,
+            &StageActionConfig { counts: vec![2], ..Default::default() },
+        );
+        let cfg = JointSearchConfig { budget: scale.budget(), seed: 17, ..Default::default() };
+        let t0 = Instant::now();
+        let out = joint_search(&func, &mesh, &model, &actions, &stage_actions, &cfg)
+            .expect("zoo joint search runs");
+        zoo_joint.push((mk, t0.elapsed().as_secs_f64(), out.relative));
+    }
+
+    SearchSpeedReport { scale, provisional: false, eval_throughput, flat, joint, zoo_joint }
+}
+
+/// Outcome of [`check_search_speed`]: `failures` fail the build,
+/// `warnings` are printed (improvements past the band, provisional
+/// baselines — things to re-bless deliberately, not regressions).
+#[derive(Clone, Debug, Default)]
+pub struct BenchCheck {
+    pub failures: Vec<String>,
+    pub warnings: Vec<String>,
+}
+
+/// Relative tolerance band of the baseline comparison (±25%).
+pub const BENCH_TOLERANCE: f64 = 0.25;
+
+fn band_check(
+    check: &mut BenchCheck,
+    name: &str,
+    current: f64,
+    baseline: Option<f64>,
+    higher_is_better: bool,
+) {
+    let Some(base) = baseline else {
+        check.warnings.push(format!("{name}: no baseline entry (skipped)"));
+        return;
+    };
+    if base <= 0.0 || !base.is_finite() || !current.is_finite() {
+        check
+            .failures
+            .push(format!("{name}: unusable values (current {current}, baseline {base})"));
+        return;
+    }
+    let lo = base * (1.0 - BENCH_TOLERANCE);
+    let hi = base * (1.0 + BENCH_TOLERANCE);
+    let (regressed, improved) =
+        if higher_is_better { (current < lo, current > hi) } else { (current > hi, current < lo) };
+    if regressed {
+        check.failures.push(format!(
+            "{name}: {current:.1} regressed past ±{:.0}% of baseline {base:.1}",
+            BENCH_TOLERANCE * 100.0
+        ));
+    } else if improved {
+        check.warnings.push(format!(
+            "{name}: {current:.1} improved past ±{:.0}% of baseline {base:.1} — re-bless the baseline",
+            BENCH_TOLERANCE * 100.0
+        ));
+    }
+}
+
+/// Gate a fresh report: (a) in-run acceptance gates — joint cost parity
+/// always, ≥1.3× joint effective nodes/sec when `enforce_speed_gate`
+/// (tiny-scale smoke runs relax it: toy models leave the optimizations
+/// little to amortize) — and (b) the ±25% band against the committed
+/// baseline. A baseline flagged `"provisional": true` (hand-authored
+/// estimates) downgrades the absolute band to a warning so the first
+/// toolchain-equipped run can re-bless it with measured numbers.
+pub fn check_search_speed(
+    current: &SearchSpeedReport,
+    baseline: Option<&Json>,
+    enforce_speed_gate: bool,
+) -> BenchCheck {
+    let mut check = BenchCheck::default();
+
+    if !current.joint.cost_parity() {
+        check.failures.push(format!(
+            "joint search cost parity: optimized best {} worse than legacy best {}",
+            current.joint.opt_best, current.joint.legacy_best
+        ));
+    }
+    if enforce_speed_gate && current.joint.speedup() < 1.3 {
+        check.failures.push(format!(
+            "joint search speedup {:.2}x below the 1.3x acceptance gate \
+             ({:.1} -> {:.1} nodes/s)",
+            current.joint.speedup(),
+            current.joint.legacy_nodes_per_s(),
+            current.joint.opt_nodes_per_s(),
+        ));
+    }
+
+    let Some(baseline) = baseline else {
+        return check;
+    };
+    match baseline.get("format").and_then(Json::as_str) {
+        Some("toast.bench.search_speed/v1") => {}
+        other => {
+            check
+                .failures
+                .push(format!("baseline format {other:?} is not toast.bench.search_speed/v1"));
+            return check;
+        }
+    }
+    if baseline.get("provisional").and_then(Json::as_bool) == Some(true) {
+        check.warnings.push(
+            "baseline is provisional (hand-authored estimates): ±25% band skipped — \
+             re-bless it with `toast bench --experiment search-speed --out BENCH_search_speed.json`"
+                .to_string(),
+        );
+        return check;
+    }
+
+    let arr_entry = |key: &str, model: &str| -> Option<Json> {
+        match baseline.get(key) {
+            Some(Json::Arr(rows)) => rows
+                .iter()
+                .find(|r| r.get("model").and_then(Json::as_str) == Some(model))
+                .cloned(),
+            _ => None,
+        }
+    };
+    for (mk, tp) in &current.eval_throughput {
+        let row = arr_entry("eval_throughput", mk.name());
+        let field = |f: &str| row.as_ref().and_then(|r| r.get(f)).and_then(Json::as_f64);
+        let name = mk.name();
+        band_check(
+            &mut check,
+            &format!("eval_throughput[{name}].oracle_evals_per_s"),
+            tp.oracle_evals_per_s,
+            field("oracle_evals_per_s"),
+            true,
+        );
+        band_check(
+            &mut check,
+            &format!("eval_throughput[{name}].symbolic_evals_per_s"),
+            tp.symbolic_evals_per_s,
+            field("symbolic_evals_per_s"),
+            true,
+        );
+        band_check(
+            &mut check,
+            &format!("eval_throughput[{name}].incremental_evals_per_s"),
+            tp.incremental_evals_per_s,
+            field("incremental_evals_per_s"),
+            true,
+        );
+    }
+    for (section, cmp) in [("flat", &current.flat), ("joint", &current.joint)] {
+        let base = baseline
+            .get(section)
+            .and_then(|s| s.get("opt_nodes_per_s"))
+            .and_then(Json::as_f64);
+        band_check(
+            &mut check,
+            &format!("{section}.opt_nodes_per_s"),
+            cmp.opt_nodes_per_s(),
+            base,
+            true,
+        );
+    }
+    for (mk, wall, _) in &current.zoo_joint {
+        let row = arr_entry("zoo_joint", mk.name());
+        let base = row.as_ref().and_then(|r| r.get("wall_s")).and_then(Json::as_f64);
+        band_check(
+            &mut check,
+            &format!("zoo_joint[{}].wall_s", mk.name()),
+            *wall,
+            base,
+            false,
+        );
+    }
+    check
+}
+
+/// Render the search-speed report as a table.
+pub fn format_search_speed(r: &SearchSpeedReport) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "== search speed ({} scale): transpositions + batched leaves + stage pruning ==",
+        r.scale.name()
+    );
+    let _ = writeln!(
+        out,
+        "{:<10} {:>14} {:>14} {:>14}",
+        "model", "oracle e/s", "symbolic e/s", "increm. e/s"
+    );
+    for (mk, tp) in &r.eval_throughput {
+        let _ = writeln!(
+            out,
+            "{:<10} {:>14.1} {:>14.1} {:>14.1}",
+            mk.name(),
+            tp.oracle_evals_per_s,
+            tp.symbolic_evals_per_s,
+            tp.incremental_evals_per_s
+        );
+    }
+    for (title, cmp) in [("flat MCTS (t2b)", &r.flat), ("joint search (t2b)", &r.joint)] {
+        let _ = writeln!(
+            out,
+            "{title}: legacy {:.0} nodes/s ({} evals, best {:.4}) -> optimized {:.0} nodes/s \
+             ({} evals, best {:.4}) = {:.2}x{}",
+            cmp.legacy_nodes_per_s(),
+            cmp.legacy_evals,
+            cmp.legacy_best,
+            cmp.opt_nodes_per_s(),
+            cmp.opt_evals,
+            cmp.opt_best,
+            cmp.speedup(),
+            if cmp.cost_parity() { "" } else { "  [COST REGRESSION]" },
+        );
+    }
+    for (mk, wall, rel) in &r.zoo_joint {
+        let _ = writeln!(
+            out,
+            "zoo joint {:<10} {:>8.2}s wall  best relative {:.4}",
+            mk.name(),
+            wall,
+            rel
+        );
+    }
+    out
 }
 
 /// One row of the differential-validation suite: a `(model, mesh, spec)`
@@ -587,7 +1074,8 @@ pub fn run_pipeline_suite(
         let nda = crate::nda::Nda::analyze(&func);
         let legal = pipeline::legal_boundaries(&func, &nda);
         for &k in stage_counts {
-            let Some(bounds) = pipeline::balanced_boundaries(&func, &legal, k, pipeline::compute_weight)
+            let Some(bounds) =
+                pipeline::balanced_boundaries(&func, &legal, k, pipeline::compute_weight)
             else {
                 rows.push(PipeRow {
                     model: mk,
@@ -787,8 +1275,9 @@ fn format_grid(
         seen.push(key);
         let _ = write!(out, "{:<10} {:<7}", r.model.name(), r.hardware.name());
         for m in &methods {
-            if let Some(row) =
-                rows.iter().find(|x| x.model == r.model && x.hardware == r.hardware && x.method == *m)
+            if let Some(row) = rows
+                .iter()
+                .find(|x| x.model == r.model && x.hardware == r.hardware && x.method == *m)
             {
                 let _ = write!(out, " {}", cell(row));
             } else {
@@ -905,5 +1394,37 @@ mod tests {
         assert_eq!(points.len(), 2);
         let table = format_fig10(&points);
         assert!(table.contains("sequence scaling"));
+    }
+
+    #[test]
+    fn search_speed_tiny_report_roundtrips_and_self_checks() {
+        let report = run_search_speed(BenchScale::Tiny);
+        assert_eq!(report.eval_throughput.len(), 1);
+        assert_eq!(report.zoo_joint.len(), 1);
+        assert!(report.joint.cost_parity(), "optimized joint search regressed cost");
+        assert!(report.flat.opt_evals <= BenchScale::Tiny.budget() * 2, "budget overshoot");
+
+        let rendered = report.json().render();
+        let parsed = Json::parse(&rendered).expect("report json parses");
+        assert_eq!(
+            parsed.get("format").and_then(Json::as_str),
+            Some("toast.bench.search_speed/v1")
+        );
+
+        // Self-comparison stays inside the ±25% band; the 1.3x speed gate
+        // is relaxed at tiny scale where toy models leave nothing to
+        // amortize.
+        let check = check_search_speed(&report, Some(&parsed), false);
+        assert!(check.failures.is_empty(), "self-check failed: {:?}", check.failures);
+
+        // A provisional baseline downgrades the band to a warning.
+        let mut provisional = report.clone();
+        provisional.provisional = true;
+        let base = Json::parse(&provisional.json().render()).unwrap();
+        let check = check_search_speed(&report, Some(&base), false);
+        assert!(check.failures.is_empty());
+        assert!(check.warnings.iter().any(|w| w.contains("provisional")));
+
+        assert!(format_search_speed(&report).contains("search speed"));
     }
 }

@@ -288,7 +288,13 @@ impl SymSink {
         (self.values.len() - 1) as u32
     }
 
-    fn emit(&mut self, class: PriceClass, operands: Vec<u32>, shape: Vec<i64>, dtype: DType) -> u32 {
+    fn emit(
+        &mut self,
+        class: PriceClass,
+        operands: Vec<u32>,
+        shape: Vec<i64>,
+        dtype: DType,
+    ) -> u32 {
         let v = self.push_value(shape, dtype);
         debug_assert_eq!(v as usize, self.n_params + self.records.len());
         self.records.push(SymRecord { class, operands });
@@ -442,18 +448,42 @@ impl PartitionSink for SymSink {
 
 /// Full-pass symbolic evaluator: prices a spec straight from the logical
 /// function, never materializing the device-local IR. Op rules are
-/// computed once at construction and amortized across evaluations.
+/// computed once at construction and amortized across evaluations; they
+/// depend only on `func`, so evaluators (and the incremental engine's
+/// [`crate::search::IncrementalEvaluator::with_shared_rules`]) working
+/// on the same function can share one rule vector via
+/// [`SymbolicEvaluator::with_shared_rules`] / [`SymbolicEvaluator::shared_rules`].
 pub struct SymbolicEvaluator<'a> {
     func: &'a Func,
     mesh: &'a Mesh,
     model: &'a CostModel,
-    rules: Vec<OpRule>,
+    rules: std::sync::Arc<Vec<OpRule>>,
 }
 
 impl<'a> SymbolicEvaluator<'a> {
     pub fn new(func: &'a Func, mesh: &'a Mesh, model: &'a CostModel) -> Self {
-        let rules = func.instrs.iter().map(|i| op_rule(func, i)).collect();
+        let rules = std::sync::Arc::new(
+            func.instrs.iter().map(|i| op_rule(func, i)).collect::<Vec<_>>(),
+        );
         SymbolicEvaluator { func, mesh, model, rules }
+    }
+
+    /// Build an evaluator around a pre-computed rule vector (must come
+    /// from this same `func` — rules are per-instruction).
+    pub fn with_shared_rules(
+        func: &'a Func,
+        mesh: &'a Mesh,
+        model: &'a CostModel,
+        rules: std::sync::Arc<Vec<OpRule>>,
+    ) -> Self {
+        debug_assert_eq!(rules.len(), func.instrs.len(), "rules are per-instruction");
+        SymbolicEvaluator { func, mesh, model, rules }
+    }
+
+    /// The evaluator's rule vector, for sharing with sibling evaluators
+    /// over the same function.
+    pub fn shared_rules(&self) -> std::sync::Arc<Vec<OpRule>> {
+        self.rules.clone()
     }
 
     /// Absolute cost + collective statistics of `spec`. Errors exactly

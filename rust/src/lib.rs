@@ -67,11 +67,16 @@
 //!   (no device-local IR), agreeing with the materialized oracle to
 //!   ≤1e-6 relative cost.
 //! * [`search`] — the MCTS partitioner with axis-aware, color-based
-//!   actions and the colors-aware canonical state (§4.1–4.3); its hot
-//!   path runs on [`search::incremental`], which re-prices only the
-//!   instructions an action's sharding delta touches (the NDA's
-//!   per-color incidence) and replays cached per-instruction plans
-//!   instead of re-partitioning.
+//!   actions and the colors-aware canonical state (§4.1–4.3); the tree
+//!   is transposition-aware (states keyed by the applied sharding set,
+//!   so action orderings share one node and one cached evaluation) and
+//!   leaves are batch-evaluated. Its hot path runs on
+//!   [`search::incremental`], which re-prices only the instructions an
+//!   action's sharding delta touches (the NDA's per-color incidence)
+//!   and replays cached per-instruction plans instead of
+//!   re-partitioning. `bench --experiment search-speed` tracks the
+//!   evals/sec and nodes/sec trajectory against
+//!   `BENCH_search_speed.json`.
 //! * [`baselines`] — Alpa-like, AutoMap-like and expert/manual
 //!   comparators (§5.1.1), each exposed as a `solve` core wrapped by an
 //!   [`api::Strategy`].

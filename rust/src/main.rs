@@ -18,8 +18,10 @@
 //! * `validate`  — numerically validate a TOAST partition on the
 //!   reference interpreter (scaled model).
 //! * `bench`     — regenerate the paper's figures
-//!   (fig8|fig9|fig10|ablations) or run the differential-validation
-//!   sweep (differential).
+//!   (fig8|fig9|fig10|ablations), run the differential-validation
+//!   sweep (differential), or the search-speed campaign (search-speed:
+//!   evaluator throughput, legacy-vs-optimized nodes/sec, joint-search
+//!   wall time; `--check` gates against `BENCH_search_speed.json`).
 //! * `models`    — list the model zoo with parameter counts.
 //! * `serve`     — run the trust-but-verify partition service: the
 //!   in-process demo by default, or `--listen HOST:PORT` to serve the
@@ -120,8 +122,15 @@ USAGE: toast <command> [--flag value]...
   apply      --spec spec.json [--validate]
   search     --model M --mesh 2x2 [--budget N] [--validate-best]
   validate   --model M --mesh 2x2 [--budget N]
-  bench      --experiment <fig8|fig9|fig10|ablations|differential|pipeline>
+  bench      --experiment <fig8|fig9|fig10|ablations|differential|pipeline
+                           |search-speed>
              [--scale tiny|bench|paper] [--json]
+             (search-speed also takes [--out report.json] and
+              [--check [baseline.json]]: measure evaluator throughput,
+              legacy-vs-optimized search nodes/sec, and joint-search wall
+              time over the zoo; --check gates cost parity, the 1.3x
+              joint speedup (bench/paper scale), and a +/-25% band
+              against the baseline — default BENCH_search_speed.json)
   models
   serve      [--workers N] [--no-verify] [--search-threads N]
              [--listen HOST:PORT] [--dead-after-ms N]
@@ -508,6 +517,50 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             print!("{}", exp::format_pipeline(&rows, tol));
             let failed = rows.iter().filter(|r| !r.pass).count();
             anyhow::ensure!(failed == 0, "{failed} pipeline rows failed");
+        }
+        exp::Experiment::SearchSpeed => {
+            let report = exp::run_search_speed(scale);
+            if json {
+                println!("{}", report.json().render());
+            } else {
+                print!("{}", exp::format_search_speed(&report));
+            }
+            if let Some(path) = flags.get("out") {
+                std::fs::write(path, report.json().render() + "\n")?;
+                eprintln!("wrote {path}");
+            }
+            if let Some(check) = flags.get("check") {
+                // Bare `--check` compares against the committed baseline;
+                // `--check PATH` against an arbitrary report file.
+                let path =
+                    if check == "true" { "BENCH_search_speed.json" } else { check.as_str() };
+                let baseline = match std::fs::read_to_string(path) {
+                    Ok(text) => Some(
+                        toast::util::json::Json::parse(&text)
+                            .map_err(|e| anyhow::anyhow!("{path}: {e:?}"))?,
+                    ),
+                    Err(e) => {
+                        eprintln!("warning: baseline {path} unreadable ({e}); gating in-run only");
+                        None
+                    }
+                };
+                // The 1.3x speedup gate needs models big enough to
+                // amortize: enforce it at bench/paper scale only.
+                let enforce = scale != exp::BenchScale::Tiny;
+                let result = exp::check_search_speed(&report, baseline.as_ref(), enforce);
+                for w in &result.warnings {
+                    eprintln!("warning: {w}");
+                }
+                for f in &result.failures {
+                    eprintln!("FAIL: {f}");
+                }
+                anyhow::ensure!(
+                    result.failures.is_empty(),
+                    "{} search-speed gate(s) failed",
+                    result.failures.len()
+                );
+                eprintln!("search-speed gates passed ({} warnings)", result.warnings.len());
+            }
         }
     }
     Ok(())

@@ -4,15 +4,39 @@
 //! "4 stages + batch sharding" — that neither axis finds alone (the
 //! Automap / PartIR composite-strategies result the ROADMAP targets).
 //!
-//! The state is the colors-aware canonical state of §4.3 extended with
-//! an optional stage choice: `(stage action | none, sorted sharding
-//! action ids)`. At most one stage action applies per trajectory, and it
-//! may be taken at any depth — staging is explored *with* sharding, not
-//! before or after it.
+//! The state is the flat search's transposition-aware canonical state
+//! extended with an optional stage choice: `(stage action | none,
+//! sorted (value, dim, axis) signature triples)` — see
+//! [`Action::signature_triples`]. Different action sets realizing the
+//! same sharded state under the same stage choice share one node, one
+//! cached evaluation, and one cached legal-action list
+//! ([`JointSearchConfig::transpositions`]). At most one stage action
+//! applies per trajectory, and it may be taken at any depth — staging is
+//! explored *with* sharding, not before or after it.
+//!
+//! Three search-speed levers (all on by default, all individually
+//! gated so `bench --experiment search-speed` can price them):
+//! * **Leaf rollouts** ([`JointSearchConfig::leaf_rollouts`]):
+//!   trajectories walk cached states and evaluate only the first novel
+//!   state (textbook MCTS expansion) — cache-hit visits cost a map
+//!   lookup plus a spec delta, and the eval budget is checked *before*
+//!   each evaluation, so `evals` is exact. The legacy mode re-evaluates
+//!   every visited state (all cache hits after the first trajectory
+//!   through them, but still one engine pass per step).
+//! * **Stage-aware action pruning**
+//!   ([`JointSearchConfig::prune_stage_local`]): at a staged state, a
+//!   sharding action whose values live entirely inside one stage is
+//!   skipped when an already-applied action is local to the *same stage
+//!   on the same mesh axis* — within a stage the axis is spent, and
+//!   spending it again on another stage-local color is the redundant
+//!   branching the joint space exploded (PR 5 follow-on).
+//! * **Candidate caching**: the spec-legal action list is a pure
+//!   function of the realized spec, so it is computed once per state
+//!   and shared by every revisit (and every merged trajectory).
 //!
 //! Evaluation is symbolic end to end: unstaged states price through
 //! [`SymbolicEvaluator`]; staged states price through
-//! [`schedule::price_staged_symbolic`] — per-stage symbolic costs
+//! [`schedule::price_staged_with`] — per-stage symbolic costs
 //! composed with the GPipe closed form. The final best state is
 //! re-priced through the materialized oracle
 //! ([`schedule::price_staged_oracle`] / partition + evaluate), exactly
@@ -24,16 +48,20 @@ use crate::cost::symbolic::SymbolicEvaluator;
 use crate::cost::{Cost, CostModel};
 use crate::ir::Func;
 use crate::mesh::Mesh;
-use crate::search::actions::{Action, StageAction};
+use crate::search::actions::{child_key, Action, StageAction};
 use crate::sharding::{partition, ShardingSpec};
 use crate::util::Rng;
 use anyhow::Result;
 use std::collections::HashMap;
+use std::rc::Rc;
 
 /// Joint-search configuration (mirrors the flat search's knobs).
 #[derive(Clone, Debug)]
 pub struct JointSearchConfig {
-    /// Total state-evaluation budget.
+    /// Total state-evaluation budget. Exact under `leaf_rollouts` (the
+    /// budget is checked before each evaluation); the legacy
+    /// evaluate-every-state mode can exceed it by the tail of one
+    /// trajectory.
     pub budget: usize,
     /// Max trajectory depth (stage choice counts as one step).
     pub max_depth: usize,
@@ -53,6 +81,18 @@ pub struct JointSearchConfig {
     /// gate) — without it, a flat trajectory legitimately wins whenever
     /// staging does not pay for the model at hand.
     pub require_stage: bool,
+    /// Key states by the realized sharding signature (merging different
+    /// action sets that reach the same spec) and cache the legal-action
+    /// list per state. `false` restores the PR-5 sorted-action-id keys
+    /// with per-visit legality scans — the bench baseline.
+    pub transpositions: bool,
+    /// Walk cached states and evaluate only one novel leaf per
+    /// trajectory. `false` restores the PR-5 evaluate-every-state
+    /// rollouts.
+    pub leaf_rollouts: bool,
+    /// Skip stage-local sharding actions whose (stage, axis) slot is
+    /// already spent by an applied stage-local action.
+    pub prune_stage_local: bool,
 }
 
 impl Default for JointSearchConfig {
@@ -66,6 +106,9 @@ impl Default for JointSearchConfig {
             length_penalty: 0.01,
             seed: 0,
             require_stage: false,
+            transpositions: true,
+            leaf_rollouts: true,
+            prune_stage_local: true,
         }
     }
 }
@@ -91,20 +134,19 @@ pub struct JointOutcome {
     pub oom: bool,
     /// State evaluations performed.
     pub evals: usize,
+    /// Tree-policy state visits across all trajectories (cache-hit
+    /// visits included); `nodes / wall` is the bench's effective
+    /// nodes-per-second metric.
+    pub nodes: usize,
 }
 
-/// Canonical joint state: stage choice (`u32::MAX` = none) + sorted
-/// applied sharding action ids.
-type Key = (u32, Vec<u32>);
+/// Canonical joint state: stage choice (`u32::MAX` = none) + the flat
+/// search's sharding state key (signature triples, or sorted action ids
+/// in legacy mode).
+type Key = (u32, Vec<u64>);
 
 const NO_STAGE: u32 = u32::MAX;
 const STOP: usize = usize::MAX;
-
-fn key_of(stage: Option<usize>, applied: &[usize]) -> Key {
-    let mut ids: Vec<u32> = applied.iter().map(|&a| a as u32).collect();
-    ids.sort_unstable();
-    (stage.map(|s| s as u32).unwrap_or(NO_STAGE), ids)
-}
 
 #[derive(Clone, Debug, Default)]
 struct NodeStats {
@@ -113,6 +155,11 @@ struct NodeStats {
     /// Edge id -> (visits, value_sum). Sharding action `i` has edge id
     /// `i`; stage action `j` has edge id `n_shard + j`; STOP is MAX.
     edges: HashMap<usize, (f64, f64)>,
+    /// Spec-legal sharding actions at this state (transposition mode
+    /// only), computed on first visit and shared by every revisit. No
+    /// applied-set filter is needed: an applied action's triples are in
+    /// the spec, so `check_assignment` rejects it.
+    candidates: Option<Rc<Vec<usize>>>,
 }
 
 struct Joint<'a> {
@@ -130,8 +177,13 @@ struct Joint<'a> {
     base: Cost,
     tree: HashMap<Key, NodeStats>,
     eval_cache: HashMap<Key, f64>,
+    /// `locality[stage_action][action]`: the single stage every value of
+    /// the action lives in, or `None` if it spans stages (see
+    /// [`action_localities`]). Empty when pruning is off.
+    locality: Vec<Vec<Option<u16>>>,
     best: (f64, Option<usize>, Vec<usize>),
     evals: usize,
+    nodes: usize,
     require_stage: bool,
 }
 
@@ -173,15 +225,123 @@ impl<'a> Joint<'a> {
     }
 }
 
-/// Legal sharding actions at a state (unapplied + spec-legal).
-fn legal_shardings(j: &Joint, applied: &[usize], spec: &ShardingSpec) -> Vec<usize> {
-    (0..j.actions.len())
-        .filter(|ai| !applied.contains(ai))
+/// Spec-legal sharding actions (pure function of the realized spec).
+fn spec_legal(actions: &[Action], func: &Func, mesh: &Mesh, spec: &ShardingSpec) -> Vec<usize> {
+    (0..actions.len())
         .filter(|&ai| {
-            let a = &j.actions[ai];
-            spec.check_assignment(j.func, j.mesh, &a.assignment, a.axis)
+            let a = &actions[ai];
+            spec.check_assignment(func, mesh, &a.assignment, a.axis)
         })
         .collect()
+}
+
+/// For each stage action, classify every sharding action: `Some(s)` if
+/// every value the action shards is referenced only inside stage `s`
+/// (and is not a module result — results cross the final boundary), else
+/// `None`. `None` actions span stages and are never pruned.
+fn action_localities(
+    func: &Func,
+    modules: &[StagedModule],
+    actions: &[Action],
+) -> Vec<Vec<Option<u16>>> {
+    fn touch(v: usize, s: u16, vstage: &mut [Option<u16>], seen: &mut [bool]) {
+        if !seen[v] {
+            seen[v] = true;
+            vstage[v] = Some(s);
+        } else if vstage[v] != Some(s) {
+            vstage[v] = None;
+        }
+    }
+    modules
+        .iter()
+        .map(|sm| {
+            let mut instr_stage = vec![0u16; func.instrs.len()];
+            for (s, st) in sm.stages.iter().enumerate() {
+                for i in st.range.0..st.range.1 {
+                    instr_stage[i] = s as u16;
+                }
+            }
+            // Per-value: Some(stage) while all defining/consuming
+            // references sit in one stage, None once it crosses. Unseen
+            // values (e.g. unused params) stay None — conservative.
+            let mut vstage: Vec<Option<u16>> = vec![None; func.num_values()];
+            let mut seen = vec![false; func.num_values()];
+            for (i, instr) in func.instrs.iter().enumerate() {
+                let s = instr_stage[i];
+                touch(instr.result.index(), s, &mut vstage, &mut seen);
+                for op in &instr.operands {
+                    touch(op.index(), s, &mut vstage, &mut seen);
+                }
+            }
+            for r in &func.results {
+                vstage[r.index()] = None;
+            }
+            actions
+                .iter()
+                .map(|a| {
+                    let mut loc: Option<u16> = None;
+                    for &(v, _) in &a.assignment {
+                        match vstage[v.index()] {
+                            None => return None,
+                            Some(s) => match loc {
+                                None => loc = Some(s),
+                                Some(p) if p == s => {}
+                                Some(_) => return None,
+                            },
+                        }
+                    }
+                    loc
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Append the sharding-action edges legal at the current state to
+/// `options`: cached spec-legal list (or a per-visit scan in legacy
+/// mode), then the stage-local pruning filter.
+fn push_shard_edges(
+    j: &mut Joint,
+    cfg: &JointSearchConfig,
+    key: &Key,
+    stage: Option<usize>,
+    applied: &[usize],
+    spec: &ShardingSpec,
+    options: &mut Vec<usize>,
+) {
+    let (actions, func, mesh) = (j.actions, j.func, j.mesh);
+    let legal: Rc<Vec<usize>> = if cfg.transpositions {
+        let node = j.tree.entry(key.clone()).or_default();
+        match &node.candidates {
+            Some(cs) => cs.clone(),
+            None => {
+                let rc = Rc::new(spec_legal(actions, func, mesh, spec));
+                node.candidates = Some(rc.clone());
+                rc
+            }
+        }
+    } else {
+        Rc::new(
+            spec_legal(actions, func, mesh, spec)
+                .into_iter()
+                .filter(|ai| !applied.contains(ai))
+                .collect(),
+        )
+    };
+    match stage {
+        Some(si) if cfg.prune_stage_local && !j.locality.is_empty() => {
+            let local = &j.locality[si];
+            let used: Vec<(u16, usize)> = applied
+                .iter()
+                .filter_map(|&aj| local[aj].map(|s| (s, actions[aj].axis)))
+                .collect();
+            options.extend(legal.iter().copied().filter(|&ai| match local[ai] {
+                Some(s) => !used.contains(&(s, actions[ai].axis)),
+                None => true,
+            }));
+        }
+        _ => options.extend(legal.iter().copied()),
+    }
 }
 
 fn backprop(j: &mut Joint, path: &[(Key, usize)], terminal: &Key, reward: f64) {
@@ -203,19 +363,29 @@ fn backprop(j: &mut Joint, path: &[(Key, usize)], terminal: &Key, reward: f64) {
     }
 }
 
-/// One trajectory from the root (same shape as the flat search: every
-/// visited state is evaluated and cached; UCT over STOP + legal edges).
+fn terminal_reward(min_c: f64, depth: usize, length_penalty: f64) -> f64 {
+    -min_c.min(2.0) - length_penalty * depth as f64
+}
+
+/// One trajectory from the root. Under `leaf_rollouts`, cached states
+/// are walked without engine work and exactly one novel leaf is
+/// evaluated; in legacy mode every visited state is (re-)evaluated,
+/// matching the PR-5 rollouts.
 fn trajectory(j: &mut Joint, cfg: &JointSearchConfig, rng: &mut Rng) {
     let n_shard = j.actions.len();
     let mut spec = ShardingSpec::unsharded(j.func);
     let mut stage: Option<usize> = None;
     let mut applied: Vec<usize> = Vec::new();
+    let mut key: Key = (NO_STAGE, Vec::new());
     let mut path: Vec<(Key, usize)> = Vec::new();
     let mut min_c = f64::INFINITY;
+    let mut c = *j.eval_cache.get(&key).expect("root state is seeded");
 
     loop {
-        let key = key_of(stage, &applied);
-        let c = j.evaluate(&key, stage, &spec);
+        j.nodes += 1;
+        if !cfg.leaf_rollouts {
+            c = j.evaluate(&key, stage, &spec);
+        }
         j.note_best(c, stage, &applied);
         min_c = min_c.min(c);
         let depth = applied.len() + usize::from(stage.is_some());
@@ -225,7 +395,7 @@ fn trajectory(j: &mut Joint, cfg: &JointSearchConfig, rng: &mut Rng) {
             if stage.is_none() {
                 options.extend((0..j.stage_actions.len()).map(|i| n_shard + i));
             }
-            options.extend(legal_shardings(j, &applied, &spec));
+            push_shard_edges(j, cfg, &key, stage, &applied, &spec, &mut options);
         }
 
         let chosen = {
@@ -250,24 +420,45 @@ fn trajectory(j: &mut Joint, cfg: &JointSearchConfig, rng: &mut Rng) {
         };
 
         if chosen == STOP {
-            let reward = -min_c.min(2.0) - cfg.length_penalty * depth as f64;
-            backprop(j, &path, &key, reward);
+            backprop(j, &path, &key, terminal_reward(min_c, depth, cfg.length_penalty));
             return;
         }
+        let child: Key;
         if chosen >= n_shard {
             stage = Some(chosen - n_shard);
+            child = ((chosen - n_shard) as u32, key.1.clone());
         } else {
             let a = &j.actions[chosen];
             if spec.apply_assignment(j.func, j.mesh, &a.assignment, a.axis).is_err() {
                 // Legality was just probed; defensive termination keeps
                 // the spec and `applied` in sync if it ever fails.
-                let reward = -min_c.min(2.0) - cfg.length_penalty * depth as f64;
-                backprop(j, &path, &key, reward);
+                backprop(j, &path, &key, terminal_reward(min_c, depth, cfg.length_penalty));
                 return;
             }
+            child = (key.0, child_key(cfg.transpositions, &key.1, chosen, a));
             applied.push(chosen);
         }
-        path.push((key, chosen));
+        path.push((std::mem::replace(&mut key, child), chosen));
+
+        if cfg.leaf_rollouts {
+            if let Some(&cc) = j.eval_cache.get(&key) {
+                c = cc;
+                continue;
+            }
+            // Novel state: expand exactly one leaf per trajectory. The
+            // budget check precedes the evaluation, so `evals` never
+            // overshoots and single-seed runs reproduce exactly.
+            j.nodes += 1;
+            let depth1 = applied.len() + usize::from(stage.is_some());
+            if j.evals >= cfg.budget {
+                backprop(j, &path, &key, terminal_reward(min_c, depth1, cfg.length_penalty));
+                return;
+            }
+            let cc = j.evaluate(&key, stage, &spec);
+            j.note_best(cc, stage, &applied);
+            backprop(j, &path, &key, terminal_reward(min_c.min(cc), depth1, cfg.length_penalty));
+            return;
+        }
     }
 }
 
@@ -293,6 +484,11 @@ pub fn joint_search(
         .collect::<Result<Vec<_>>>()?;
     let stage_syms: Vec<Vec<SymbolicEvaluator>> =
         modules.iter().map(|sm| schedule::stage_evaluators(sm, mesh, model)).collect();
+    let locality = if cfg.prune_stage_local && !modules.is_empty() {
+        action_localities(func, &modules, actions)
+    } else {
+        Vec::new()
+    };
     let c0 = model.relative(&base, &base);
     // Under require_stage the unstaged root may not win; the best
     // tracker starts empty and the search must find a staged state.
@@ -310,11 +506,13 @@ pub fn joint_search(
         base,
         tree: HashMap::new(),
         eval_cache: HashMap::new(),
+        locality,
         best: best0,
         evals: 0,
+        nodes: 0,
         require_stage: cfg.require_stage,
     };
-    j.eval_cache.insert(key_of(None, &[]), c0);
+    j.eval_cache.insert((NO_STAGE, Vec::new()), c0);
 
     let mut rng = Rng::new(cfg.seed ^ 0x57A6E5);
     let mut stale_rounds = 0usize;
@@ -398,13 +596,14 @@ pub fn joint_search(
         relative,
         oom,
         evals: j.evals,
+        nodes: j.nodes,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::{FuncBuilder, TensorType};
+    use crate::ir::{FuncBuilder, TensorType, ValueId};
     use crate::mesh::{HardwareKind, HardwareProfile};
     use crate::nda::Nda;
     use crate::search::actions::{build_actions, build_stage_actions};
@@ -444,6 +643,7 @@ mod tests {
             "sharding must not lose to unsharded: {}",
             out.relative
         );
+        assert!(out.nodes >= out.evals, "every eval is a visit");
     }
 
     // The OOM → feasible acceptance scenario (flat search stays oom,
@@ -475,5 +675,68 @@ mod tests {
         } else {
             assert_eq!(out.relative, 1.0, "no stage action chosen: unstaged baseline");
         }
+    }
+
+    #[test]
+    fn action_locality_classifies_params_and_results() {
+        let f = chain(4, 64);
+        let nda = Nda::analyze(&f);
+        let stage_actions = build_stage_actions(
+            &f,
+            &nda,
+            &StageActionConfig { counts: vec![2], microbatches: 4, ..Default::default() },
+        );
+        assert!(!stage_actions.is_empty());
+        let modules: Vec<StagedModule> =
+            stage_actions.iter().map(|sa| cut_stages(&f, &sa.boundaries).unwrap()).collect();
+        // w0 (param id 1) feeds only the first matmul → local to stage 0;
+        // the module result crosses the final boundary → never local.
+        let w0 = Action { color: 0, order_bits: 0, axis: 0, assignment: vec![(ValueId(1), 0)] };
+        let res =
+            Action { color: 1, order_bits: 0, axis: 0, assignment: vec![(f.results[0], 0)] };
+        let loc = action_localities(&f, &modules, &[w0, res]);
+        for per_action in &loc {
+            assert_eq!(per_action[0], Some(0), "w0 is referenced only in stage 0");
+            assert_eq!(per_action[1], None, "module results are never stage-local");
+        }
+    }
+
+    #[test]
+    fn pruning_preserves_the_optimum_on_a_chain() {
+        // The batch color spans every layer (never stage-local), so
+        // pruning only drops redundant stage-local duplicates and the
+        // best cost must not degrade.
+        let f = chain(6, 64);
+        let mesh = Mesh::grid(&[("b", 2)]);
+        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let nda = Nda::analyze(&f);
+        let actions = build_actions(
+            &f,
+            &nda,
+            &mesh,
+            &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        );
+        let stage_actions = build_stage_actions(
+            &f,
+            &nda,
+            &StageActionConfig { counts: vec![2], microbatches: 4, ..Default::default() },
+        );
+        let cfg = quick_cfg();
+        let pruned = joint_search(&f, &mesh, &model, &actions, &stage_actions, &cfg).unwrap();
+        let unpruned = joint_search(
+            &f,
+            &mesh,
+            &model,
+            &actions,
+            &stage_actions,
+            &JointSearchConfig { prune_stage_local: false, ..cfg },
+        )
+        .unwrap();
+        assert!(
+            pruned.relative <= unpruned.relative + 1e-9,
+            "pruning lost the optimum: {} vs {}",
+            pruned.relative,
+            unpruned.relative
+        );
     }
 }

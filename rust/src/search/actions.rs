@@ -45,6 +45,49 @@ impl Action {
             self.assignment.len()
         )
     }
+
+    /// Packed `(value, dim, axis)` triples of this action's sharding
+    /// effect. A [`crate::sharding::ShardingSpec`] is the unsharded spec
+    /// plus the *union* of the applied actions' triples (`check` rejects
+    /// any overlap), so the sorted triple set is an exact canonical key
+    /// for the realized sharded state — two different action *sets* that
+    /// shard the same dims along the same axes produce the same key. The
+    /// transposition-aware searches use this as their tree/eval-cache
+    /// state identity.
+    pub fn signature_triples(&self) -> impl Iterator<Item = u64> + '_ {
+        debug_assert!(self.axis < (1 << 8), "axis id exceeds signature packing");
+        let axis = self.axis as u64;
+        self.assignment.iter().map(move |&(v, d)| {
+            debug_assert!(d < (1 << 8), "tensor rank exceeds signature packing");
+            ((v.index() as u64) << 16) | ((d as u64) << 8) | axis
+        })
+    }
+}
+
+pub(crate) fn insert_sorted(v: &mut Vec<u64>, x: u64) {
+    let i = v.partition_point(|&y| y < x);
+    debug_assert!(v.get(i) != Some(&x), "duplicate state-key element");
+    v.insert(i, x);
+}
+
+/// Canonical key of the state reached by applying action `ai` at the
+/// state `key` — shared by the flat and joint searches, maintained
+/// incrementally along trajectories (an insert per applied triple, never
+/// a recanonicalization of the whole state). With `transpositions`, the
+/// key is the sorted [`Action::signature_triples`] set of the realized
+/// spec; without, the sorted applied action ids (permutation merging
+/// only — the pre-transposition baseline).
+pub(crate) fn child_key(transpositions: bool, key: &[u64], ai: usize, a: &Action) -> Vec<u64> {
+    let mut k = key.to_vec();
+    if transpositions {
+        k.reserve(a.assignment.len());
+        for t in a.signature_triples() {
+            insert_sorted(&mut k, t);
+        }
+    } else {
+        insert_sorted(&mut k, ai as u64);
+    }
+    k
 }
 
 /// A pipeline-stage action: cut the function into

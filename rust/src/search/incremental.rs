@@ -448,6 +448,14 @@ impl<'a> IncrementalEvaluator<'a> {
         while self.undo() {}
     }
 
+    /// Undo down to `depth` applied deltas (no-op if already at or below
+    /// it). The batched leaf evaluator uses this to reposition one shared
+    /// engine along the longest common prefix of consecutive leaves
+    /// instead of replaying every trajectory from the root.
+    pub fn undo_to(&mut self, depth: usize) {
+        while self.deltas.len() > depth && self.undo() {}
+    }
+
     fn mark_dirty(&mut self, delta: &SpecDelta) {
         let p = self.func.params.len();
         let mut changed: HashSet<u32> = HashSet::new();
@@ -632,7 +640,13 @@ mod tests {
         CostModel::new(HardwareProfile::new(HardwareKind::A100))
     }
 
-    fn oracle_relative(f: &Func, spec: &ShardingSpec, mesh: &Mesh, m: &CostModel, base: &Cost) -> f64 {
+    fn oracle_relative(
+        f: &Func,
+        spec: &ShardingSpec,
+        mesh: &Mesh,
+        m: &CostModel,
+        base: &Cost,
+    ) -> f64 {
         let (local, _) = partition(f, spec, mesh).unwrap();
         m.relative(&m.evaluate(&local, mesh), base)
     }

@@ -1,26 +1,43 @@
 //! Monte-Carlo Tree Search over partitioning actions (§4.1–4.3).
 //!
-//! * **State** is the colors-aware canonical representation: the sorted
-//!   set of applied action ids — used *directly* as the tree/eval-cache
-//!   key, so distinct states can never alias (a 64-bit digest could
-//!   collide silently). Because each action's sharding assignment is
-//!   precomputed and actions commute (the spec is a set of per-dim axis
-//!   assignments), any action ordering that yields the same sharded model
-//!   maps to the same state — duplicate-free by construction (§4.3), with
-//!   no transposition handling needed.
-//! * **Selection** is UCT over the available-action set; each state's
-//!   cost is evaluated once and cached. Evaluation runs on the
+//! * **State** is transposition-aware: the canonical key is the sorted
+//!   set of packed `(value, dim, axis)` triples the applied actions
+//!   realized ([`Action::signature_triples`]) — used *directly* as the
+//!   tree/eval-cache key, so distinct states can never alias (a 64-bit
+//!   digest could collide silently). Action permutations trivially merge
+//!   (the spec is a set of per-dim axis assignments), and so do
+//!   *different action sets* realizing the same sharded state — e.g. a
+//!   mirrored group action vs. the pair of per-tensor actions covering
+//!   the same dims. Merged states share one tree node, one cached
+//!   evaluation, and one cached legal-action list.
+//!   [`SearchConfig::transpositions`]` = false` restores the PR-1
+//!   sorted-action-id keys (permutation merging only) as a benchmark
+//!   baseline.
+//! * **Selection** is UCT over the state's legal-action set; each
+//!   state's cost is evaluated once and cached. Evaluation runs on the
 //!   [`IncrementalEvaluator`]: costs come straight from the logical
 //!   function + spec (no device-local IR is materialized), and extending
 //!   a trajectory re-prices only the instructions the action's colors
 //!   touch. The materialize-partition-evaluate path is kept as the
 //!   *validation oracle*: debug builds cross-check a sample of states,
 //!   and the final best spec is always re-costed through it.
+//! * **Batched leaf evaluation** (`batch_leaves > 0`, the default):
+//!   trajectories walk cached states with a plain [`ShardingSpec`] and
+//!   end at the first novel state (textbook MCTS expansion). Leaves
+//!   accumulate per worker and are evaluated in one pass over a shared
+//!   engine, sorted so consecutive leaves share the longest common
+//!   action-sequence prefix — apply/undo replay is amortized across the
+//!   batch instead of paid per trajectory step. `batch_leaves = 0`
+//!   restores the eager evaluate-every-visited-state rollouts.
 //! * **Termination**: explicit stop action, depth cap (30), or no legal
 //!   actions. Rewards subtract a small per-step penalty to prefer shorter
 //!   trajectories (better credit assignment, §4.1).
 //! * **Early stop**: the search ends when a full round of trajectories
 //!   fails to improve the best-known cost.
+//! * **Budget**: the eval counter is reservation-based — a worker
+//!   reserves a slot (`fetch_add`) *before* evaluating and returns it if
+//!   the slot is past the budget — so the reported `evals` is exact and
+//!   never overshoots, and single-threaded runs are reproducible.
 //! * **Parallelism**: rollouts run on worker threads. The tree and eval
 //!   cache are *striped* (lock per hash shard) so workers don't convoy on
 //!   a single mutex; an eval-cache entry is reserved (Pending) before the
@@ -28,16 +45,16 @@
 //!   evaluation — late arrivals block on the stripe's condvar for the
 //!   Done value.
 
-use super::actions::Action;
+use super::actions::{child_key, Action};
 use super::incremental::IncrementalEvaluator;
 use crate::cost::{Cost, CostModel};
 use crate::ir::Func;
 use crate::mesh::Mesh;
-use crate::sharding::{partition, ShardingSpec};
+use crate::sharding::{partition, ShardingSpec, SpecDelta};
 use crate::util::Rng;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Search configuration.
@@ -45,7 +62,7 @@ use std::time::{Duration, Instant};
 pub struct SearchConfig {
     /// Max trajectory depth (paper: 30).
     pub max_depth: usize,
-    /// Total state-evaluation budget.
+    /// Total state-evaluation budget (exact: reservation-based counter).
     pub budget: usize,
     /// Trajectories per round (early-stop granularity).
     pub round: usize,
@@ -66,6 +83,15 @@ pub struct SearchConfig {
     /// interpreter-sized (scaled) models — executing a paper-scale IR
     /// would take hours.
     pub validate_best: bool,
+    /// Key states by the realized sharding signature so different action
+    /// *sets* reaching the same sharded state merge (one node, one
+    /// cached eval). `false` keys by the sorted applied-action-id set
+    /// (permutation merging only) — the pre-transposition behavior, kept
+    /// as the `bench --experiment search-speed` baseline.
+    pub transpositions: bool,
+    /// Leaves collected per worker before a batched evaluation pass over
+    /// the shared engine; `0` restores eager per-visit evaluation.
+    pub batch_leaves: usize,
 }
 
 impl Default for SearchConfig {
@@ -80,6 +106,8 @@ impl Default for SearchConfig {
             length_penalty: 0.01,
             seed: 0,
             validate_best: false,
+            transpositions: true,
+            batch_leaves: 8,
         }
     }
 }
@@ -98,8 +126,16 @@ pub struct SearchOutcome {
     pub base: Cost,
     /// Relative cost C(s) (§4.5); 1.0 = unsharded.
     pub relative: f64,
-    /// Number of state evaluations performed.
+    /// Number of state evaluations performed (exact — the counter is
+    /// reservation-based and never overshoots the budget).
     pub evals: usize,
+    /// Tree-policy state visits across all trajectories (cache-hit
+    /// visits included — the "effective nodes" of the perf trajectory;
+    /// `nodes / wall` is the bench's nodes-per-second metric).
+    pub nodes: usize,
+    /// Distinct states in the search tree at the end (transposition
+    /// merging shrinks this relative to the trajectory count).
+    pub tree_nodes: usize,
     /// Wall-clock search time.
     pub wall: Duration,
     /// Max relative divergence between the SPMD-simulated execution of
@@ -110,24 +146,23 @@ pub struct SearchOutcome {
     pub validation: Option<f64>,
 }
 
-/// Canonical state key: the sorted applied-action ids themselves (exact —
-/// no hash collisions can alias two states).
-type StateKey = Vec<u32>;
+/// Canonical state key — exact, no hash collisions can alias two states.
+/// With [`SearchConfig::transpositions`]: the sorted packed
+/// `(value, dim, axis)` triples realized by the applied actions (see
+/// [`Action::signature_triples`]). Without: the sorted applied action
+/// ids. The root is the empty vector in both modes.
+type StateKey = Vec<u64>;
 
-fn state_key(applied: &[usize]) -> StateKey {
-    let mut key: Vec<u32> = applied.iter().map(|&a| a as u32).collect();
-    key.sort_unstable();
-    key
-}
+const STOP: usize = usize::MAX;
 
 /// Number of lock stripes for the shared tree/eval-cache maps.
 const STRIPES: usize = 32;
 
-fn stripe_of(key: &[u32]) -> usize {
-    // FNV-1a over the action ids; only stripe selection, not identity.
+fn stripe_of(key: &[u64]) -> usize {
+    // FNV-1a over the key elements; only stripe selection, not identity.
     let mut h: u64 = 0xcbf29ce484222325;
     for &x in key {
-        h ^= x as u64;
+        h ^= x;
         h = h.wrapping_mul(0x100000001b3);
     }
     (h % STRIPES as u64) as usize
@@ -139,6 +174,12 @@ struct NodeStats {
     value_sum: f64,
     /// Per-action child statistics: action id -> (visits, value_sum).
     edges: HashMap<usize, (f64, f64)>,
+    /// Spec-legal actions at this state, computed once on first visit
+    /// and shared by every revisit (and, under transpositions, by every
+    /// merged trajectory). Legality is a pure function of the realized
+    /// spec — an already-applied action's triples are in the spec, so
+    /// `check_assignment` rejects it without any applied-set filter.
+    candidates: Option<Arc<Vec<usize>>>,
 }
 
 /// Striped tree statistics: lock contention spread over `STRIPES` shards.
@@ -164,6 +205,18 @@ enum EvalSlot {
     Done(f64),
 }
 
+/// Non-blocking cache probe result (batched rollouts never block on the
+/// walk — a Pending hit defers the trajectory's reward to flush time).
+enum Probe {
+    Done(f64),
+    Pending,
+    /// Vacant: this thread reserved the slot (and a budget slot) and now
+    /// owns the evaluation.
+    Reserved,
+    /// Vacant, but the eval budget is spent; nothing was reserved.
+    Exhausted,
+}
+
 struct EvalCache {
     shards: Vec<(Mutex<HashMap<StateKey, EvalSlot>>, Condvar)>,
 }
@@ -184,6 +237,46 @@ impl EvalCache {
         lock.lock().unwrap().insert(key, EvalSlot::Done(value));
         cvar.notify_all();
     }
+
+    /// Probe without blocking; on a vacant slot, reserve it together with
+    /// a budget slot (the budget reservation is returned if the slot is
+    /// already past `budget`, keeping the counter exact).
+    fn probe_or_reserve(&self, evals: &AtomicUsize, budget: usize, key: &StateKey) -> Probe {
+        let (lock, _) = self.shard(key);
+        let mut slot = lock.lock().unwrap();
+        match slot.get(key).copied() {
+            Some(EvalSlot::Done(c)) => Probe::Done(c),
+            Some(EvalSlot::Pending) => Probe::Pending,
+            None => {
+                let n = evals.fetch_add(1, Ordering::Relaxed);
+                if n >= budget {
+                    evals.fetch_sub(1, Ordering::Relaxed);
+                    Probe::Exhausted
+                } else {
+                    slot.insert(key.clone(), EvalSlot::Pending);
+                    Probe::Reserved
+                }
+            }
+        }
+    }
+
+    /// Block until `key` is Done and return its value. Safe at flush
+    /// time only: every Pending key has exactly one owner, and owners
+    /// complete their own evaluations before waiting on anyone else's,
+    /// so the wait graph is acyclic.
+    fn wait_done(&self, key: &StateKey) -> f64 {
+        let (lock, cvar) = self.shard(key);
+        let mut slot = lock.lock().unwrap();
+        loop {
+            match slot.get(key).copied() {
+                Some(EvalSlot::Done(c)) => return c,
+                Some(EvalSlot::Pending) => slot = cvar.wait(slot).unwrap(),
+                // Unreachable (recorded keys are Done or Pending);
+                // defensively price it unusable rather than deadlock.
+                None => return f64::INFINITY,
+            }
+        }
+    }
 }
 
 struct Shared<'a> {
@@ -196,12 +289,15 @@ struct Shared<'a> {
     eval_cache: EvalCache,
     best: Mutex<(f64, Vec<usize>)>,
     evals: AtomicUsize,
+    /// Tree-policy state visits (see [`SearchOutcome::nodes`]).
+    nodes: AtomicUsize,
 }
 
-/// Legal actions at a state: `applied_mask` is the per-trajectory bitset
-/// of already-applied action ids (O(1) membership instead of scanning the
-/// applied list); legality is probed read-only against the trajectory's
-/// realized `spec` — no clones on the hot path (§Perf).
+/// Legal actions at a state, recomputed per visit: `applied_mask` is the
+/// per-trajectory bitset of already-applied action ids (O(1) membership
+/// pre-filter); legality is probed read-only against the trajectory's
+/// realized `spec`. The eager (`batch_leaves = 0`) baseline path — the
+/// batched path caches the list per state in [`NodeStats::candidates`].
 fn legal_actions(shared: &Shared, applied_mask: &[u64], spec: &ShardingSpec) -> Vec<usize> {
     (0..shared.actions.len())
         .filter(|&ai| applied_mask[ai >> 6] & (1u64 << (ai & 63)) == 0)
@@ -212,13 +308,39 @@ fn legal_actions(shared: &Shared, applied_mask: &[u64], spec: &ShardingSpec) -> 
         .collect()
 }
 
+/// The state's legal-action list, cached in its tree node: computed once
+/// on first visit, shared by every revisit. No applied-set filter is
+/// needed — an applied action's triples are already in the spec, so
+/// `check_assignment` rejects it (overlap = `AlreadySharded`).
+fn cached_candidates(
+    shared: &Shared,
+    key: &StateKey,
+    node: &NodeStats,
+    spec: &ShardingSpec,
+) -> Arc<Vec<usize>> {
+    if let Some(cs) = &node.candidates {
+        return cs.clone();
+    }
+    let list: Vec<usize> = (0..shared.actions.len())
+        .filter(|&ai| {
+            let a = &shared.actions[ai];
+            spec.check_assignment(shared.func, shared.mesh, &a.assignment, a.axis)
+        })
+        .collect();
+    let arc = Arc::new(list);
+    let mut shard = shared.tree.shard(key).lock().unwrap();
+    let n = shard.entry(key.clone()).or_default();
+    n.candidates.get_or_insert_with(|| arc.clone()).clone()
+}
+
 /// In debug builds, cross-check a sample of symbolic evaluations against
 /// the materialize-partition-evaluate oracle (≤1e-6 relative divergence).
 #[cfg(debug_assertions)]
 fn oracle_check(shared: &Shared, spec: &ShardingSpec, symbolic: f64) {
     match partition(shared.func, spec, shared.mesh) {
         Ok((local, _)) => {
-            let oracle = shared.model.relative(&shared.model.evaluate(&local, shared.mesh), &shared.base);
+            let oracle =
+                shared.model.relative(&shared.model.evaluate(&local, shared.mesh), &shared.base);
             debug_assert!(
                 (oracle - symbolic).abs() <= 1e-6 * oracle.abs().max(1.0),
                 "symbolic evaluator diverged from oracle: {symbolic} vs {oracle}"
@@ -255,26 +377,36 @@ impl Drop for PendingGuard<'_> {
 }
 
 /// Evaluate (with reservation-based cache) the engine's current state.
-/// The engine must be positioned at the state `key` denotes.
+/// The engine must be positioned at the state `key` denotes. Returns
+/// `None` — without evaluating or reserving anything — when the eval
+/// budget is exhausted; the budget counter reserves *before* evaluating,
+/// so the reported total is exact.
 fn eval_cached(
     shared: &Shared,
+    budget: usize,
     key: &StateKey,
     engine: &mut IncrementalEvaluator,
-    evals: &mut usize,
-) -> f64 {
+) -> Option<f64> {
     let shard = shared.eval_cache.shard(key);
     let (lock, cvar) = shard;
+    let slot_n;
     {
         let mut slot = lock.lock().unwrap();
         loop {
             match slot.get(key).copied() {
-                Some(EvalSlot::Done(c)) => return c,
+                Some(EvalSlot::Done(c)) => return Some(c),
                 Some(EvalSlot::Pending) => {
                     // another thread is evaluating this exact state; wait
                     // for its result instead of duplicating the work.
                     slot = cvar.wait(slot).unwrap();
                 }
                 None => {
+                    let n = shared.evals.fetch_add(1, Ordering::Relaxed);
+                    if n >= budget {
+                        shared.evals.fetch_sub(1, Ordering::Relaxed);
+                        return None;
+                    }
+                    slot_n = n;
                     slot.insert(key.clone(), EvalSlot::Pending);
                     break;
                 }
@@ -284,27 +416,21 @@ fn eval_cached(
     // Reserved: evaluate outside the lock, panic-safe.
     let mut guard = PendingGuard { shard, key, armed: true };
     let c = engine.relative();
-    *evals += 1;
-    let n = shared.evals.fetch_add(1, Ordering::Relaxed);
     #[cfg(debug_assertions)]
-    if n % 61 == 0 {
+    if slot_n % 61 == 0 {
         oracle_check(shared, engine.spec(), c);
     }
     #[cfg(not(debug_assertions))]
-    let _ = n;
+    let _ = slot_n;
     guard.armed = false;
     drop(guard);
-    {
-        let mut slot = lock.lock().unwrap();
-        slot.insert(key.clone(), EvalSlot::Done(c));
-    }
-    cvar.notify_all();
-    c
+    shared.eval_cache.insert_done(key.clone(), c);
+    Some(c)
 }
 
 /// Record `applied` as the best-known trajectory if its cost improves.
-/// (Separate from [`eval_cached`]: the cache only knows the canonical
-/// sorted key, while the best entry stores the ordered action sequence.)
+/// (Separate from the eval cache: the cache only knows the canonical
+/// key, while the best entry stores the ordered action sequence.)
 fn note_best(shared: &Shared, c: f64, applied: &[usize]) {
     if c.is_finite() {
         let mut best = shared.best.lock().unwrap();
@@ -317,7 +443,6 @@ fn note_best(shared: &Shared, c: f64, applied: &[usize]) {
 /// Backpropagate a terminal reward along the trajectory path (terminal
 /// stop edge included). Stripe locks are taken per node, sequentially.
 fn backprop(shared: &Shared, path: &[(StateKey, usize)], key: &StateKey, reward: f64) {
-    const STOP: usize = usize::MAX;
     {
         let mut shard = shared.tree.shard(key).lock().unwrap();
         let node = shard.entry(key.clone()).or_default();
@@ -338,83 +463,85 @@ fn backprop(shared: &Shared, path: &[(StateKey, usize)], key: &StateKey, reward:
     }
 }
 
-/// Run one trajectory; returns the number of evaluations spent.
-///
-/// Unlike textbook MCTS (evaluate only at rollout terminals), every state
-/// visited along the trajectory is evaluated (cached): the cost model is
-/// the value function, evaluations are cheap relative to rollouts, and
-/// per-state evaluation gives the precise credit assignment the paper's
-/// shorter-trajectory heuristic is after (§4.1).
-fn trajectory(
+fn terminal_reward(min_c: f64, depth: usize, length_penalty: f64) -> f64 {
+    // Clamp: a catastrophic state (rel cost 77) should not poison the
+    // path statistics more than a merely-bad one.
+    -min_c.min(2.0) - length_penalty * depth as f64
+}
+
+/// UCT selection over STOP + `candidates` at a state of cost `c`.
+fn select_uct(
+    node: &NodeStats,
+    candidates: &[usize],
+    c: f64,
+    exploration: f64,
+    rng: &mut Rng,
+) -> usize {
+    let total_visits = node.visits.max(1.0);
+    let mut best_a = STOP;
+    let mut best_score = f64::NEG_INFINITY;
+    for &a in std::iter::once(&STOP).chain(candidates.iter()) {
+        let (v, s) = node.edges.get(&a).copied().unwrap_or((0.0, 0.0));
+        // Unexplored edges default to the current state's own (negated,
+        // clamped) cost rather than 0: an optimistic but calibrated
+        // prior.
+        let mean = if v > 0.0 { s / v } else { -c.min(2.0) + 0.05 };
+        let explore = exploration * ((total_visits + 1.0).ln() / (v + 1.0)).sqrt();
+        // small jitter breaks ties randomly
+        let score = mean + explore + rng.f64() * 1e-9;
+        if score > best_score {
+            best_score = score;
+            best_a = a;
+        }
+    }
+    best_a
+}
+
+/// Run one eager trajectory (`batch_leaves = 0`): every visited state is
+/// evaluated (cached) on the spot — the cost model is the value function,
+/// and per-state evaluation gives the precise credit assignment the
+/// paper's shorter-trajectory heuristic is after (§4.1).
+fn trajectory_eager(
     shared: &Shared,
     cfg: &SearchConfig,
     rng: &mut Rng,
     engine: &mut IncrementalEvaluator,
-) -> usize {
-    const STOP: usize = usize::MAX;
+) {
     let mut applied: Vec<usize> = Vec::new();
     let mut applied_mask = vec![0u64; shared.actions.len().div_ceil(64).max(1)];
+    let mut key = StateKey::new();
     let mut path: Vec<(StateKey, usize)> = Vec::new(); // (state, action edge)
-    let mut evals = 0usize;
     let mut min_c = f64::INFINITY;
+    let mut visits = 0usize;
     debug_assert_eq!(engine.depth(), 0, "engine must start at the root");
 
-    let terminal_reward = |min_c: f64, depth: usize| -> f64 {
-        // Clamp: a catastrophic state (rel cost 77) should not poison the
-        // path statistics more than a merely-bad one.
-        -min_c.min(2.0) - cfg.length_penalty * depth as f64
-    };
-
     loop {
-        let key = state_key(&applied);
+        visits += 1;
         let depth = applied.len();
-        // Evaluate the current state (the paper's colors-aware state is
-        // duplicate-free, so the cache hits whenever any action ordering
-        // reaches the same sharding).
-        let c = eval_cached(shared, &key, engine, &mut evals);
+        let Some(c) = eval_cached(shared, cfg.budget, &key, engine) else {
+            // Budget exhausted mid-trajectory: credit what we saw. (The
+            // root is always cached, so `min_c` is finite here.)
+            backprop(shared, &path, &key, terminal_reward(min_c, depth, cfg.length_penalty));
+            break;
+        };
         note_best(shared, c, &applied);
         min_c = min_c.min(c);
 
-        let stop_here = depth >= cfg.max_depth;
-        let candidates = if stop_here {
+        let candidates = if depth >= cfg.max_depth {
             Vec::new()
         } else {
             legal_actions(shared, &applied_mask, engine.spec())
         };
-
-        // Choose among STOP + candidates by UCT.
         let chosen = {
             let shard = shared.tree.shard(&key).lock().unwrap();
             let node = shard.get(&key).cloned().unwrap_or_default();
             drop(shard);
-            let total_visits = node.visits.max(1.0);
-            let mut best_a = STOP;
-            let mut best_score = f64::NEG_INFINITY;
-            let mut options: Vec<usize> = Vec::with_capacity(candidates.len() + 1);
-            options.push(STOP);
-            options.extend(&candidates);
-            for &a in &options {
-                let (v, s) = node.edges.get(&a).copied().unwrap_or((0.0, 0.0));
-                // Unexplored edges default to the current state's own
-                // (negated, clamped) cost rather than 0: an optimistic
-                // but calibrated prior.
-                let mean = if v > 0.0 { s / v } else { -c.min(2.0) + 0.05 };
-                let explore =
-                    cfg.exploration * ((total_visits + 1.0).ln() / (v + 1.0)).sqrt();
-                // small jitter breaks ties randomly
-                let score = mean + explore + rng.f64() * 1e-9;
-                if score > best_score {
-                    best_score = score;
-                    best_a = a;
-                }
-            }
-            best_a
+            select_uct(&node, &candidates, c, cfg.exploration, rng)
         };
 
         if chosen == STOP {
-            backprop(shared, &path, &key, terminal_reward(min_c, depth));
-            engine.reset();
-            return evals;
+            backprop(shared, &path, &key, terminal_reward(min_c, depth, cfg.length_penalty));
+            break;
         }
 
         let a = &shared.actions[chosen];
@@ -422,13 +549,187 @@ fn trajectory(
         // apply succeeds; the defensive branch keeps a (hypothetical)
         // failure from desynchronizing engine state and `applied`.
         if engine.apply(&a.assignment, a.axis).is_err() {
-            backprop(shared, &path, &key, terminal_reward(min_c, depth));
-            engine.reset();
-            return evals;
+            backprop(shared, &path, &key, terminal_reward(min_c, depth, cfg.length_penalty));
+            break;
         }
-        path.push((key, chosen));
+        let ck = child_key(cfg.transpositions, &key, chosen, a);
+        path.push((std::mem::replace(&mut key, ck), chosen));
         applied.push(chosen);
         applied_mask[chosen >> 6] |= 1u64 << (chosen & 63);
+    }
+    engine.reset();
+    shared.nodes.fetch_add(visits, Ordering::Relaxed);
+}
+
+/// A trajectory leaf awaiting batched evaluation (or, for `owned =
+/// false`, awaiting another owner's result): backprop is deferred to
+/// flush time so the reward can include the leaf's cost.
+struct LeafJob {
+    key: StateKey,
+    /// Applied action ids in trajectory order (the engine replays these).
+    ordered: Vec<usize>,
+    /// This worker reserved the Pending slot and must evaluate it.
+    owned: bool,
+    path: Vec<(StateKey, usize)>,
+    /// Min cached cost seen along the path (finite — the root is cached).
+    min_c: f64,
+    depth: usize,
+}
+
+enum Walk {
+    /// STOP chosen (or defensive apply failure) at depth `usize`.
+    Stop(usize),
+    /// Ended at a novel or in-flight leaf; reward deferred to flush.
+    Leaf { owned: bool },
+    /// Ended at an unevaluated state with the budget spent.
+    Dead,
+}
+
+/// Run one batched-mode trajectory: walk cached states with the worker's
+/// plain `spec` (no engine on the walk), end at the first novel state,
+/// and queue it for the next flush. Cache-hit visits cost a map lookup
+/// plus a spec delta — no engine replay — which is where the effective
+/// nodes/sec headroom comes from.
+fn trajectory_batched(
+    shared: &Shared,
+    cfg: &SearchConfig,
+    rng: &mut Rng,
+    spec: &mut ShardingSpec,
+    batch: &mut Vec<LeafJob>,
+) {
+    let mut key = StateKey::new();
+    let mut c = match shared.eval_cache.probe_or_reserve(&shared.evals, cfg.budget, &key) {
+        Probe::Done(c) => c,
+        // The root is seeded Done before any worker starts.
+        _ => unreachable!("root state must be cached"),
+    };
+    let mut applied: Vec<usize> = Vec::new();
+    let mut path: Vec<(StateKey, usize)> = Vec::new();
+    let mut deltas: Vec<SpecDelta> = Vec::new();
+    let mut min_c = f64::INFINITY;
+    let mut visits = 0usize;
+
+    let outcome = loop {
+        visits += 1;
+        note_best(shared, c, &applied);
+        min_c = min_c.min(c);
+        let depth = applied.len();
+
+        let node = {
+            let shard = shared.tree.shard(&key).lock().unwrap();
+            shard.get(&key).cloned().unwrap_or_default()
+        };
+        let candidates: Arc<Vec<usize>> = if depth >= cfg.max_depth {
+            Arc::new(Vec::new())
+        } else {
+            cached_candidates(shared, &key, &node, spec)
+        };
+        let chosen = select_uct(&node, &candidates, c, cfg.exploration, rng);
+        if chosen == STOP {
+            break Walk::Stop(depth);
+        }
+
+        let a = &shared.actions[chosen];
+        let Ok(delta) = spec.apply_assignment_delta(shared.func, shared.mesh, &a.assignment, a.axis)
+        else {
+            // Legality was just probed; defensive termination keeps the
+            // spec and `applied` in sync if it ever fails.
+            break Walk::Stop(depth);
+        };
+        deltas.push(delta);
+        let ck = child_key(cfg.transpositions, &key, chosen, a);
+        path.push((std::mem::replace(&mut key, ck), chosen));
+        applied.push(chosen);
+
+        match shared.eval_cache.probe_or_reserve(&shared.evals, cfg.budget, &key) {
+            Probe::Done(cc) => c = cc,
+            Probe::Pending => break Walk::Leaf { owned: false },
+            Probe::Reserved => break Walk::Leaf { owned: true },
+            Probe::Exhausted => break Walk::Dead,
+        }
+    };
+
+    // Rewind the worker's walk spec to the root for the next trajectory.
+    for d in deltas.iter().rev() {
+        spec.undo_delta(d);
+    }
+
+    match outcome {
+        Walk::Stop(depth) => {
+            backprop(shared, &path, &key, terminal_reward(min_c, depth, cfg.length_penalty));
+        }
+        Walk::Dead => {
+            let depth = applied.len();
+            backprop(shared, &path, &key, terminal_reward(min_c, depth, cfg.length_penalty));
+        }
+        Walk::Leaf { owned } => {
+            let depth = applied.len();
+            batch.push(LeafJob { key, ordered: applied, owned, path, min_c, depth });
+        }
+    }
+    shared.nodes.fetch_add(visits, Ordering::Relaxed);
+}
+
+/// Evaluate a worker's collected leaves in one pass over its shared
+/// engine and backprop every deferred trajectory. Owned leaves are
+/// evaluated in lexicographic action-sequence order so consecutive
+/// leaves share the longest common prefix — the engine repositions by
+/// `undo_to` + suffix applies instead of replaying each trajectory from
+/// the root. Foreign (non-owned) leaves resolve by waiting for their
+/// owner's Done value — only after this worker's own evaluations are
+/// published, so the cross-worker wait graph stays acyclic.
+fn flush_batch(
+    shared: &Shared,
+    cfg: &SearchConfig,
+    engine: &mut IncrementalEvaluator,
+    engine_stack: &mut Vec<usize>,
+    batch: &mut Vec<LeafJob>,
+    local_evals: &mut usize,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let mut order: Vec<usize> = (0..batch.len()).filter(|&i| batch[i].owned).collect();
+    order.sort_by(|&x, &y| batch[x].ordered.cmp(&batch[y].ordered));
+    for &i in &order {
+        let job = &batch[i];
+        let lcp = job
+            .ordered
+            .iter()
+            .zip(engine_stack.iter())
+            .take_while(|(a, b)| a == b)
+            .count();
+        engine.undo_to(lcp);
+        engine_stack.truncate(lcp);
+        let mut ok = true;
+        for &ai in &job.ordered[lcp..] {
+            let a = &shared.actions[ai];
+            // The identical sequence applied on the walk spec from the
+            // root, so it re-applies here; price a (hypothetical)
+            // failure unusable instead of poisoning the engine state.
+            if engine.apply(&a.assignment, a.axis).is_err() {
+                ok = false;
+                break;
+            }
+            engine_stack.push(ai);
+        }
+        let shard = shared.eval_cache.shard(&job.key);
+        let mut guard = PendingGuard { shard, key: &job.key, armed: true };
+        let c = if ok { engine.relative() } else { f64::INFINITY };
+        *local_evals += 1;
+        #[cfg(debug_assertions)]
+        if ok && *local_evals % 61 == 0 {
+            oracle_check(shared, engine.spec(), c);
+        }
+        guard.armed = false;
+        drop(guard);
+        shared.eval_cache.insert_done(job.key.clone(), c);
+    }
+    for job in batch.drain(..) {
+        let c = shared.eval_cache.wait_done(&job.key);
+        note_best(shared, c, &job.ordered);
+        let reward = terminal_reward(job.min_c.min(c), job.depth, cfg.length_penalty);
+        backprop(shared, &job.path, &job.key, reward);
     }
 }
 
@@ -457,6 +758,7 @@ pub fn search(
         eval_cache: EvalCache::new(),
         best: Mutex::new((f64::INFINITY, Vec::new())),
         evals: AtomicUsize::new(0),
+        nodes: AtomicUsize::new(0),
     };
     // Op rules depend only on `func`: compute once, share across every
     // worker engine in every round.
@@ -468,7 +770,7 @@ pub fn search(
     // unsharded module *is* the base, so its relative cost needs no
     // evaluator run.
     let c0 = model.relative(&base, &base);
-    shared.eval_cache.insert_done(state_key(&[]), c0);
+    shared.eval_cache.insert_done(StateKey::new(), c0);
     *shared.best.lock().unwrap() = (c0, Vec::new());
 
     let mut rounds_without_improvement = 0usize;
@@ -500,11 +802,44 @@ pub fn search(
                         rules,
                     )
                     .expect("search input is a logical module");
-                    for _ in 0..per_thread {
-                        if shared.evals.load(Ordering::Relaxed) >= cfg2.budget {
-                            break;
+                    if cfg2.batch_leaves == 0 {
+                        for _ in 0..per_thread {
+                            if shared.evals.load(Ordering::Relaxed) >= cfg2.budget {
+                                break;
+                            }
+                            trajectory_eager(shared, &cfg2, &mut rng, &mut engine);
                         }
-                        trajectory(shared, &cfg2, &mut rng, &mut engine);
+                    } else {
+                        let mut engine_stack: Vec<usize> = Vec::new();
+                        let mut spec = ShardingSpec::unsharded(shared.func);
+                        let mut batch: Vec<LeafJob> = Vec::new();
+                        let mut local_evals = 0usize;
+                        for _ in 0..per_thread {
+                            if shared.evals.load(Ordering::Relaxed) >= cfg2.budget {
+                                break;
+                            }
+                            trajectory_batched(shared, &cfg2, &mut rng, &mut spec, &mut batch);
+                            if batch.len() >= cfg2.batch_leaves {
+                                flush_batch(
+                                    shared,
+                                    &cfg2,
+                                    &mut engine,
+                                    &mut engine_stack,
+                                    &mut batch,
+                                    &mut local_evals,
+                                );
+                            }
+                        }
+                        // Residual leaves: every Pending this worker owns
+                        // must be Done before the round joins.
+                        flush_batch(
+                            shared,
+                            &cfg2,
+                            &mut engine,
+                            &mut engine_stack,
+                            &mut batch,
+                            &mut local_evals,
+                        );
                     }
                 });
             }
@@ -584,6 +919,8 @@ pub fn search(
         base,
         relative: best_cost,
         evals: shared.evals.load(Ordering::Relaxed),
+        nodes: shared.nodes.load(Ordering::Relaxed),
+        tree_nodes: shared.tree.shards.iter().map(|s| s.lock().unwrap().len()).sum(),
         wall: t0.elapsed(),
         validation,
     }
@@ -592,7 +929,7 @@ pub fn search(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::{FuncBuilder, TensorType};
+    use crate::ir::{FuncBuilder, TensorType, ValueId};
     use crate::mesh::{HardwareKind, HardwareProfile};
     use crate::nda::Nda;
     use crate::search::actions::{build_actions, ActionSpaceConfig};
@@ -609,7 +946,14 @@ mod tests {
     }
 
     fn quick_cfg() -> SearchConfig {
-        SearchConfig { budget: 200, round: 32, threads: 2, patience: 2, seed: 7, ..Default::default() }
+        SearchConfig {
+            budget: 200,
+            round: 32,
+            threads: 2,
+            patience: 2,
+            seed: 7,
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -712,5 +1056,107 @@ mod tests {
         let b = search(&f, &mesh, &model, &actions, &cfg);
         assert_eq!(a.relative, b.relative);
         assert_eq!(a.actions, b.actions);
+        assert_eq!(a.evals, b.evals, "reservation-based counter must be exact");
+        assert_eq!(a.nodes, b.nodes);
+    }
+
+    #[test]
+    fn budget_is_never_overshot() {
+        let f = mlp(4096, 1024, 8192, 1024);
+        let mesh = Mesh::grid(&[("b", 4), ("m", 4)]);
+        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let nda = Nda::analyze(&f);
+        let actions = build_actions(
+            &f,
+            &nda,
+            &mesh,
+            &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        );
+        for batch_leaves in [0usize, 8] {
+            let cfg = SearchConfig {
+                budget: 50,
+                threads: 4,
+                batch_leaves,
+                ..quick_cfg()
+            };
+            let out = search(&f, &mesh, &model, &actions, &cfg);
+            assert!(
+                out.evals <= cfg.budget,
+                "batch_leaves={batch_leaves}: {} evals overshot budget {}",
+                out.evals,
+                cfg.budget
+            );
+        }
+    }
+
+    /// Hand-built overlapping action set: A shards x's batch dim, B
+    /// shards w1's output dim, C shards both at once. Under
+    /// transpositions, `{A,B}` (either order) and `{C}` all realize the
+    /// same spec and must share one state key; the legacy action-id keys
+    /// keep them distinct.
+    fn overlap_fixture() -> (Func, Vec<Action>) {
+        let mut b = FuncBuilder::new("tiny");
+        let x = b.param("x", TensorType::f32(vec![8, 16]));
+        let w1 = b.param("w1", TensorType::f32(vec![16, 16]));
+        let y = b.matmul(x, w1);
+        let f = b.build(vec![y]);
+        let a = Action { color: 0, order_bits: 0, axis: 0, assignment: vec![(ValueId(0), 0)] };
+        let bb = Action { color: 1, order_bits: 0, axis: 0, assignment: vec![(ValueId(1), 1)] };
+        let c = Action {
+            color: 2,
+            order_bits: 0,
+            axis: 0,
+            assignment: vec![(ValueId(0), 0), (ValueId(1), 1)],
+        };
+        (f, vec![a, bb, c])
+    }
+
+    #[test]
+    fn orderings_and_overlapping_sets_share_one_node() {
+        let (_, actions) = overlap_fixture();
+        let root = StateKey::new();
+        // Two orderings of the same set → one key.
+        let ab = child_key(true, &child_key(true, &root, 0, &actions[0]), 1, &actions[1]);
+        let ba = child_key(true, &child_key(true, &root, 1, &actions[1]), 0, &actions[0]);
+        assert_eq!(ab, ba, "action orderings must share one tree node");
+        // A different action *set* realizing the same spec → same key.
+        let c = child_key(true, &root, 2, &actions[2]);
+        assert_eq!(ab, c, "overlapping action sets realizing one spec must merge");
+        // The legacy keys keep them apart (permutations still merge).
+        let lab = child_key(false, &child_key(false, &root, 0, &actions[0]), 1, &actions[1]);
+        let lba = child_key(false, &child_key(false, &root, 1, &actions[1]), 0, &actions[0]);
+        let lc = child_key(false, &root, 2, &actions[2]);
+        assert_eq!(lab, lba);
+        assert_ne!(lab, lc);
+    }
+
+    #[test]
+    fn transpositions_share_cached_evaluations() {
+        let (f, actions) = overlap_fixture();
+        let mesh = Mesh::grid(&[("d", 2)]);
+        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let base = SearchConfig {
+            budget: 50,
+            round: 32,
+            threads: 1,
+            patience: 3,
+            seed: 5,
+            ..Default::default()
+        };
+        let t = search(&f, &mesh, &model, &actions, &base);
+        let l = search(
+            &f,
+            &mesh,
+            &model,
+            &actions,
+            &SearchConfig { transpositions: false, batch_leaves: 0, ..base.clone() },
+        );
+        // Non-root states: {A}, {B}, {A,B}≡{C} merged → at most 3 evals
+        // (the legacy action-set space has 4: {A},{B},{C},{A,B}).
+        assert!(t.evals <= 3, "transpositions must merge overlapping sets: {} evals", t.evals);
+        assert!(t.evals <= l.evals);
+        // root + 3 merged states
+        assert!(t.tree_nodes <= 4, "merged tree kept {} nodes", t.tree_nodes);
+        assert_eq!(t.relative, l.relative, "merging must not change the optimum");
     }
 }

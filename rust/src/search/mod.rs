@@ -7,6 +7,12 @@
 //!   [`crate::pipeline`] explores alongside them.
 //! * [`mcts`] — the Monte-Carlo Tree Search with the colors-aware
 //!   canonical state (§4.3), early termination, and parallel rollouts.
+//!   The tree is transposition-aware: states are keyed by the *set* of
+//!   applied `(value, dim, axis)` shardings, so action orderings (and
+//!   distinct action subsets realizing the same spec) share one node and
+//!   one cached evaluation. Leaves are batch-evaluated over a shared
+//!   incremental engine, and the eval budget is reservation-counted, so
+//!   the reported `evals` is exact.
 //! * [`incremental`] — the incremental state evaluator the rollouts use:
 //!   per-instruction emission plans re-priced only where an action's
 //!   NDA-color incidence touches, replayed without materializing

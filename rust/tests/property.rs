@@ -618,3 +618,57 @@ fn prop_wire_roundtrip_p10() {
 fn cost_model_for_wire() -> CostModel {
     CostModel::new(HardwareProfile::new(HardwareKind::A100))
 }
+
+/// P10: the transposition-aware, batch-evaluated search finds a
+/// same-or-better best cost than the legacy (action-id keys, eager
+/// rollouts) configuration at the same eval budget. Fixed seed and a
+/// single worker make both sides deterministic, so this is a real
+/// regression gate, not a statistical one. Covers the tiny zoo plus a
+/// handful of random programs.
+#[test]
+fn prop_transposition_search_same_or_better() {
+    use toast::coordinator::experiments::{build_model, BenchScale};
+    use toast::search::{build_actions, search, ActionSpaceConfig, SearchConfig};
+
+    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
+    let space = ActionSpaceConfig { min_color_dims: 1, ..Default::default() };
+
+    let mut funcs: Vec<(String, Func)> = vec![
+        ("mlp".into(), build_model(ModelKind::Mlp, BenchScale::Tiny)),
+        ("attention".into(), build_model(ModelKind::Attention, BenchScale::Tiny)),
+    ];
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..6 {
+        funcs.push((format!("random-{case}"), random_func(&mut rng)));
+    }
+
+    for (name, func) in &funcs {
+        let nda = Nda::analyze(func);
+        let actions = build_actions(func, &nda, &mesh, &space);
+        if actions.is_empty() {
+            continue;
+        }
+        let legacy_cfg = SearchConfig {
+            budget: 400,
+            threads: 1,
+            patience: 4,
+            seed: 23,
+            transpositions: false,
+            batch_leaves: 0,
+            ..Default::default()
+        };
+        let opt_cfg =
+            SearchConfig { transpositions: true, batch_leaves: 8, ..legacy_cfg.clone() };
+        let legacy = search(func, &mesh, &model, &actions, &legacy_cfg);
+        let opt = search(func, &mesh, &model, &actions, &opt_cfg);
+        assert!(
+            opt.relative <= legacy.relative + 1e-9,
+            "{name}: transposition search regressed: {} vs legacy {}",
+            opt.relative,
+            legacy.relative
+        );
+        assert!(opt.evals <= legacy_cfg.budget, "{name}: budget overshoot ({})", opt.evals);
+        assert!(legacy.evals <= legacy_cfg.budget, "{name}: legacy overshoot ({})", legacy.evals);
+    }
+}
