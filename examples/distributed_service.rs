@@ -42,8 +42,12 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     });
     let listener = TcpListener::bind("127.0.0.1:0")?;
-    let server =
-        TcpServer::start(svc, listener, TcpServerConfig { dead_after: Duration::from_secs(2) })?;
+    // Two pipelined jobs per worker connection, like CI's serve flags.
+    let server = TcpServer::start(
+        svc,
+        listener,
+        TcpServerConfig { dead_after: Duration::from_secs(2), capacity: 2, ..Default::default() },
+    )?;
     let addr = server.local_addr();
     println!("server listening on {addr}");
 

@@ -119,6 +119,22 @@ impl ModelSource {
         }
     }
 
+    /// Stable fingerprint of the model for solution-cache keying:
+    /// FNV-1a over the rendered wire form, so two requests hash equal
+    /// exactly when their serialized model sources are identical (zoo
+    /// name + scale, or the full inline IR).
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let rendered = self.to_json().render();
+        let mut hash = FNV_OFFSET;
+        for byte in rendered.as_bytes() {
+            hash ^= u64::from(*byte);
+            hash = hash.wrapping_mul(FNV_PRIME);
+        }
+        hash
+    }
+
     pub fn from_json(j: &Json) -> crate::Result<ModelSource> {
         if let Some(name) = j.get("zoo") {
             let name = name.as_str().ok_or_else(|| anyhow!("model source: 'zoo' not a string"))?;
@@ -156,6 +172,10 @@ pub struct PartitionRequest {
     /// Opt out of the trust-but-verify replay for this request (the
     /// service may still skip it for paper-scale models).
     pub verify: bool,
+    /// Bypass the server's solution cache: always run a fresh search
+    /// (`toast submit --no-cache`). The fresh result still lands in the
+    /// cache for later requests.
+    pub no_cache: bool,
 }
 
 impl PartitionRequest {
@@ -169,6 +189,7 @@ impl PartitionRequest {
             ("budget", Json::n(self.budget as f64)),
             ("seed", wire::u64_to_json(self.seed)),
             ("verify", Json::Bool(self.verify)),
+            ("no_cache", Json::Bool(self.no_cache)),
         ])
     }
 
@@ -187,6 +208,8 @@ impl PartitionRequest {
             budget: wire::usize_field(j, "budget", ctx)?,
             seed: wire::u64_field(j, "seed", ctx)?,
             verify: wire::bool_field(j, "verify", ctx)?,
+            // Absent in pre-cache requests; absence means "use the cache".
+            no_cache: j.get("no_cache").and_then(Json::as_bool).unwrap_or(false),
         })
     }
 }

@@ -525,10 +525,22 @@ pub struct StatusReport {
     /// Workers currently attached (threads or live socket connections).
     pub workers: u64,
     pub evaluations: u64,
+    /// Submits answered from the solution cache without a dispatch.
+    pub cache_hits: u64,
+    /// Submits that missed the cache and paid a full search.
+    pub cache_misses: u64,
+    /// Solutions currently held by the cache.
+    pub cache_size: u64,
+    /// Worker results sampled for server-side differential replay.
+    pub audited: u64,
+    /// Audited results whose claimed validation was not reproducible.
+    pub audit_rejected: u64,
+    /// Submits refused by admission control (queue at its bound).
+    pub overloaded: u64,
 }
 
 impl StatusReport {
-    const FIELDS: [&'static str; 10] = [
+    const FIELDS: [&'static str; 16] = [
         "requests",
         "queued",
         "in_flight",
@@ -539,9 +551,15 @@ impl StatusReport {
         "requeued",
         "workers",
         "evaluations",
+        "cache_hits",
+        "cache_misses",
+        "cache_size",
+        "audited",
+        "audit_rejected",
+        "overloaded",
     ];
 
-    fn values(&self) -> [u64; 10] {
+    fn values(&self) -> [u64; 16] {
         [
             self.requests,
             self.queued,
@@ -553,6 +571,12 @@ impl StatusReport {
             self.requeued,
             self.workers,
             self.evaluations,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_size,
+            self.audited,
+            self.audit_rejected,
+            self.overloaded,
         ]
     }
 
@@ -569,6 +593,12 @@ impl StatusReport {
     pub fn from_json(j: &Json) -> crate::Result<StatusReport> {
         let ctx = "status report";
         let g = |key| u64_field(j, key, ctx);
+        // PR-7 throughput counters parse tolerantly (default 0) so
+        // reports written by older servers still load.
+        let opt = |key| match j.get(key) {
+            Some(_) => u64_field(j, key, ctx),
+            None => Ok(0),
+        };
         Ok(StatusReport {
             requests: g("requests")?,
             queued: g("queued")?,
@@ -580,6 +610,12 @@ impl StatusReport {
             requeued: g("requeued")?,
             workers: g("workers")?,
             evaluations: g("evaluations")?,
+            cache_hits: opt("cache_hits")?,
+            cache_misses: opt("cache_misses")?,
+            cache_size: opt("cache_size")?,
+            audited: opt("audited")?,
+            audit_rejected: opt("audit_rejected")?,
+            overloaded: opt("overloaded")?,
         })
     }
 
@@ -626,6 +662,11 @@ pub enum Message {
     Status,
     /// Server → client: the counters.
     StatusReport(StatusReport),
+    /// Server → client: the submit was refused by admission control —
+    /// the queue sits at its bound. Structured (depth + limit) so
+    /// clients can distinguish backpressure from hard failures and
+    /// retry with backoff.
+    Overloaded { queued: u64, limit: u64 },
     /// Protocol-level failure report.
     Error { message: String },
 }
@@ -644,6 +685,7 @@ impl Message {
             Message::Response(_) => "response",
             Message::Status => "status",
             Message::StatusReport(_) => "status_report",
+            Message::Overloaded { .. } => "overloaded",
             Message::Error { .. } => "error",
         }
     }
@@ -665,6 +707,10 @@ impl Message {
             Message::Submitted { id } => fields.push(("id".into(), u64_to_json(*id))),
             Message::StatusReport(report) => {
                 fields.push(("report".into(), report.to_json()))
+            }
+            Message::Overloaded { queued, limit } => {
+                fields.push(("queued".into(), u64_to_json(*queued)));
+                fields.push(("limit".into(), u64_to_json(*limit)));
             }
             Message::Error { message } => {
                 fields.push(("message".into(), Json::s(message.clone())))
@@ -691,6 +737,10 @@ impl Message {
             "status_report" => {
                 Message::StatusReport(StatusReport::from_json(field(j, "report", ctx)?)?)
             }
+            "overloaded" => Message::Overloaded {
+                queued: u64_field(j, "queued", ctx)?,
+                limit: u64_field(j, "limit", ctx)?,
+            },
             "error" => Message::Error { message: str_field(j, "message", ctx)?.to_string() },
             other => bail!("unknown message tag '{other}'"),
         })
@@ -806,6 +856,12 @@ mod tests {
             requeued: 3,
             workers: 4,
             evaluations: 12345,
+            cache_hits: 6,
+            cache_misses: 3,
+            cache_size: 2,
+            audited: 4,
+            audit_rejected: 1,
+            overloaded: 2,
         };
         let back =
             StatusReport::from_json(&Json::parse(&report.to_json().render()).unwrap()).unwrap();
@@ -813,6 +869,21 @@ mod tests {
         let line = report.render_line();
         assert!(line.contains("requeued=3"), "{line}");
         assert!(line.contains("workers=4"), "{line}");
+        assert!(line.contains("cache_hits=6"), "{line}");
+        assert!(line.contains("overloaded=2"), "{line}");
+    }
+
+    #[test]
+    fn status_report_parses_pre_cache_reports() {
+        // A report written before the throughput counters existed must
+        // still parse, with the new fields defaulting to zero.
+        let old = r#"{"requests":9,"queued":1,"in_flight":2,"completed":5,"failed":1,
+            "verified":5,"rejected":0,"requeued":3,"workers":4,"evaluations":12345}"#;
+        let back = StatusReport::from_json(&Json::parse(old).unwrap()).unwrap();
+        assert_eq!(back.requests, 9);
+        assert_eq!(back.cache_hits, 0);
+        assert_eq!(back.audit_rejected, 0);
+        assert_eq!(back.overloaded, 0);
     }
 
     #[test]
@@ -824,6 +895,7 @@ mod tests {
             Message::Submitted { id: 42 },
             Message::Status,
             Message::StatusReport(StatusReport { requests: 7, ..Default::default() }),
+            Message::Overloaded { queued: 64, limit: 64 },
             Message::Error { message: "boom \"quoted\"".into() },
         ];
         for msg in msgs {
@@ -841,6 +913,13 @@ mod tests {
                     assert_eq!(a, b)
                 }
                 (Message::StatusReport(a), Message::StatusReport(b)) => assert_eq!(a, b),
+                (
+                    Message::Overloaded { queued: qa, limit: la },
+                    Message::Overloaded { queued: qb, limit: lb },
+                ) => {
+                    assert_eq!(qa, qb);
+                    assert_eq!(la, lb);
+                }
                 (Message::Error { message: a }, Message::Error { message: b }) => {
                     assert_eq!(a, b)
                 }

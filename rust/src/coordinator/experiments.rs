@@ -72,6 +72,12 @@ pub enum Experiment {
     /// [`run_search_speed`]); `BENCH_search_speed.json` is its committed
     /// baseline.
     SearchSpeed,
+    /// Service load generator: a repeated-request workload against an
+    /// in-process service, publishing requests/sec and p50/p99 latency
+    /// for the cold (search) and warm (solution-cache hit) phases (see
+    /// [`run_service_load`]); `BENCH_service_load.json` is its committed
+    /// baseline.
+    ServiceLoad,
 }
 
 impl std::str::FromStr for Experiment {
@@ -85,9 +91,10 @@ impl std::str::FromStr for Experiment {
             "differential" | "diff" => Ok(Experiment::Differential),
             "pipeline" | "stages" => Ok(Experiment::Pipeline),
             "search-speed" | "search_speed" => Ok(Experiment::SearchSpeed),
+            "service-load" | "service_load" => Ok(Experiment::ServiceLoad),
             other => Err(format!(
                 "unknown experiment '{other}' \
-                 (fig8|fig9|fig10|ablations|differential|pipeline|search-speed)"
+                 (fig8|fig9|fig10|ablations|differential|pipeline|search-speed|service-load)"
             )),
         }
     }
@@ -873,6 +880,283 @@ pub fn format_search_speed(r: &SearchSpeedReport) -> String {
     out
 }
 
+/// Latency aggregate over one phase of the service-load experiment.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyStats {
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl LatencyStats {
+    fn from_samples(mut ms: Vec<f64>) -> LatencyStats {
+        if ms.is_empty() {
+            return LatencyStats::default();
+        }
+        ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latency samples"));
+        let pct = |p: f64| {
+            let idx = ((ms.len() - 1) as f64 * p).round() as usize;
+            ms[idx.min(ms.len() - 1)]
+        };
+        LatencyStats {
+            mean_ms: ms.iter().sum::<f64>() / ms.len() as f64,
+            p50_ms: pct(0.50),
+            p99_ms: pct(0.99),
+        }
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("mean_ms", Json::n(self.mean_ms)),
+            ("p50_ms", Json::n(self.p50_ms)),
+            ("p99_ms", Json::n(self.p99_ms)),
+        ])
+    }
+
+    fn from_json(j: Option<&Json>) -> LatencyStats {
+        let field = |f: &str| j.and_then(|j| j.get(f)).and_then(Json::as_f64).unwrap_or(0.0);
+        LatencyStats {
+            mean_ms: field("mean_ms"),
+            p50_ms: field("p50_ms"),
+            p99_ms: field("p99_ms"),
+        }
+    }
+}
+
+/// The service-load report `bench --experiment service-load` produces
+/// and `BENCH_service_load.json` commits: the same request set submitted
+/// twice against an in-process service, so the cold phase prices the
+/// full search path and the warm phase prices a solution-cache hit.
+#[derive(Clone, Debug)]
+pub struct ServiceLoadReport {
+    pub scale: BenchScale,
+    /// Set only on hand-authored baselines written without a local
+    /// toolchain (see [`SearchSpeedReport::provisional`]).
+    pub provisional: bool,
+    /// Distinct `(model, seed)` requests per phase.
+    pub distinct_requests: usize,
+    /// Total submissions across both phases.
+    pub total_requests: usize,
+    /// Wall time of the whole campaign.
+    pub wall_s: f64,
+    /// End-to-end throughput across both phases.
+    pub requests_per_s: f64,
+    /// Cold-phase latency: every request misses the cache and runs a
+    /// verified search.
+    pub cold: LatencyStats,
+    /// Warm-phase latency: every request is a solution-cache hit.
+    pub warm: LatencyStats,
+    /// Counters read back from the service after the campaign.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// `cold.p50 / warm.p50` — how much a cache hit saves.
+    pub hit_speedup: f64,
+}
+
+impl ServiceLoadReport {
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::s("toast.bench.service_load/v1")),
+            ("scale", Json::s(self.scale.name())),
+            ("provisional", Json::Bool(self.provisional)),
+            ("distinct_requests", Json::n(self.distinct_requests as f64)),
+            ("total_requests", Json::n(self.total_requests as f64)),
+            ("wall_s", Json::n(self.wall_s)),
+            ("requests_per_s", Json::n(self.requests_per_s)),
+            ("cold", self.cold.json()),
+            ("warm", self.warm.json()),
+            ("cache_hits", Json::n(self.cache_hits as f64)),
+            ("cache_misses", Json::n(self.cache_misses as f64)),
+            ("hit_speedup", Json::n(self.hit_speedup)),
+        ])
+    }
+}
+
+/// Run the service-load campaign: start an in-process service
+/// (single-threaded deterministic searches, verification on, solution
+/// cache at its default capacity), submit a distinct-request workload
+/// (cold phase: every request is a cache miss and a full verified
+/// search), then submit the identical workload again (warm phase: every
+/// request is a cache hit). Latency is measured from just before
+/// `submit` to response receipt, so queueing and — for hits — the
+/// in-admission cache lookup are both priced.
+pub fn run_service_load(scale: BenchScale) -> ServiceLoadReport {
+    use super::service::{default_request, Service, ServiceConfig};
+    use std::collections::HashMap;
+    use std::time::Instant;
+
+    let (zoo, seeds, workers): (&[ModelKind], u64, usize) = match scale {
+        BenchScale::Tiny => (&[ModelKind::Mlp], 3, 2),
+        _ => (&[ModelKind::Mlp, ModelKind::Attention, ModelKind::Itx], 4, 4),
+    };
+    let svc = Service::start_with(ServiceConfig {
+        workers,
+        search_threads: 1,
+        ..Default::default()
+    });
+
+    let mut workload = Vec::new();
+    for &mk in zoo {
+        for seed in 0..seeds {
+            let mut req = default_request(mk, Method::Toast);
+            req.budget = scale.budget();
+            req.seed = seed;
+            workload.push(req);
+        }
+    }
+    let distinct = workload.len();
+
+    let t0 = Instant::now();
+    let mut phases: Vec<LatencyStats> = Vec::new();
+    for _ in 0..2 {
+        let mut submitted: HashMap<u64, Instant> = HashMap::new();
+        for req in &workload {
+            let t = Instant::now();
+            let id = svc.submit(req.clone()).expect("service accepts the load");
+            submitted.insert(id, t);
+        }
+        let mut latencies = Vec::with_capacity(distinct);
+        for _ in 0..distinct {
+            let resp = svc.responses.recv().expect("service answers the load");
+            let t = submitted.remove(&resp.id).expect("response matches a submission");
+            let sol = resp.result.expect("load request succeeds");
+            assert!(
+                sol.validation.as_ref().is_some_and(|v| v.pass),
+                "load request came back unverified"
+            );
+            latencies.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        phases.push(LatencyStats::from_samples(latencies));
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let warm = phases.pop().expect("warm phase ran");
+    let cold = phases.pop().expect("cold phase ran");
+    let cache_hits = svc.metrics.cache_hits.load(std::sync::atomic::Ordering::Relaxed);
+    let cache_misses = svc.metrics.cache_misses.load(std::sync::atomic::Ordering::Relaxed);
+    svc.shutdown();
+
+    let total = 2 * distinct;
+    ServiceLoadReport {
+        scale,
+        provisional: false,
+        distinct_requests: distinct,
+        total_requests: total,
+        wall_s,
+        requests_per_s: if wall_s > 0.0 { total as f64 / wall_s } else { 0.0 },
+        cold,
+        warm,
+        cache_hits,
+        cache_misses,
+        hit_speedup: cold.p50_ms / warm.p50_ms.max(1e-6),
+    }
+}
+
+/// Gate a fresh service-load report: (a) in-run acceptance gates — the
+/// warm phase must be all cache hits and the cold phase all misses
+/// (counter-verified), warm p50 below cold p50 always, and a ≥50×
+/// hit-speedup floor when `enforce_hit_gate` (tiny-scale smoke runs
+/// relax the floor: toy searches finish so fast there is less to save) —
+/// and (b) the ±25% band against the committed baseline, downgraded to
+/// a warning for `"provisional": true` baselines exactly as
+/// [`check_search_speed`] does.
+pub fn check_service_load(
+    current: &ServiceLoadReport,
+    baseline: Option<&Json>,
+    enforce_hit_gate: bool,
+) -> BenchCheck {
+    let mut check = BenchCheck::default();
+
+    if current.cache_misses != current.distinct_requests as u64 {
+        check.failures.push(format!(
+            "cold phase: expected {} cache misses, service counted {}",
+            current.distinct_requests, current.cache_misses
+        ));
+    }
+    if current.cache_hits != current.distinct_requests as u64 {
+        check.failures.push(format!(
+            "warm phase: expected {} cache hits, service counted {}",
+            current.distinct_requests, current.cache_hits
+        ));
+    }
+    if current.warm.p50_ms >= current.cold.p50_ms {
+        check.failures.push(format!(
+            "cache-hit p50 {:.3}ms is not below search p50 {:.3}ms",
+            current.warm.p50_ms, current.cold.p50_ms
+        ));
+    }
+    if enforce_hit_gate && current.hit_speedup < 50.0 {
+        check.failures.push(format!(
+            "cache-hit speedup {:.0}x below the 50x acceptance gate \
+             ({:.3}ms -> {:.3}ms p50)",
+            current.hit_speedup, current.cold.p50_ms, current.warm.p50_ms
+        ));
+    }
+
+    let Some(baseline) = baseline else {
+        return check;
+    };
+    match baseline.get("format").and_then(Json::as_str) {
+        Some("toast.bench.service_load/v1") => {}
+        other => {
+            check
+                .failures
+                .push(format!("baseline format {other:?} is not toast.bench.service_load/v1"));
+            return check;
+        }
+    }
+    if baseline.get("provisional").and_then(Json::as_bool) == Some(true) {
+        check.warnings.push(
+            "baseline is provisional (hand-authored estimates): ±25% band skipped — \
+             re-bless it with `toast bench --experiment service-load --out BENCH_service_load.json`"
+                .to_string(),
+        );
+        return check;
+    }
+
+    band_check(
+        &mut check,
+        "requests_per_s",
+        current.requests_per_s,
+        baseline.get("requests_per_s").and_then(Json::as_f64),
+        true,
+    );
+    let base_cold = LatencyStats::from_json(baseline.get("cold"));
+    let base_warm = LatencyStats::from_json(baseline.get("warm"));
+    band_check(&mut check, "cold.p50_ms", current.cold.p50_ms, Some(base_cold.p50_ms), false);
+    band_check(&mut check, "warm.p50_ms", current.warm.p50_ms, Some(base_warm.p50_ms), false);
+    check
+}
+
+/// Render the service-load report as a table.
+pub fn format_service_load(r: &ServiceLoadReport) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "== service load ({} scale): {} distinct requests x 2 phases ==",
+        r.scale.name(),
+        r.distinct_requests
+    );
+    let _ = writeln!(
+        out,
+        "throughput: {:.1} req/s over {:.2}s wall ({} submissions)",
+        r.requests_per_s, r.wall_s, r.total_requests
+    );
+    for (title, s) in [("cold (search)", &r.cold), ("warm (cache hit)", &r.warm)] {
+        let _ = writeln!(
+            out,
+            "{:<17} p50 {:>10.3}ms  p99 {:>10.3}ms  mean {:>10.3}ms",
+            title, s.p50_ms, s.p99_ms, s.mean_ms
+        );
+    }
+    let _ = writeln!(
+        out,
+        "cache: {} hits / {} misses, hit speedup {:.0}x at p50",
+        r.cache_hits, r.cache_misses, r.hit_speedup
+    );
+    out
+}
+
 /// One row of the differential-validation suite: a `(model, mesh, spec)`
 /// triple executed on both executors.
 #[derive(Clone, Debug)]
@@ -1426,5 +1710,44 @@ mod tests {
         assert!(check.warnings.iter().any(|w| w.contains("provisional")));
 
         assert!(format_search_speed(&report).contains("search speed"));
+    }
+
+    /// The service-load campaign self-checks at tiny scale: the warm
+    /// phase is all cache hits, the report round-trips through JSON, and
+    /// a provisional baseline downgrades the band to a warning.
+    #[test]
+    fn service_load_tiny_report_roundtrips_and_self_checks() {
+        let report = run_service_load(BenchScale::Tiny);
+        assert_eq!(report.distinct_requests, 3);
+        assert_eq!(report.total_requests, 6);
+        assert_eq!(report.cache_misses, 3, "cold phase must miss");
+        assert_eq!(report.cache_hits, 3, "warm phase must hit");
+        assert!(
+            report.warm.p50_ms < report.cold.p50_ms,
+            "cache hit p50 {} not below search p50 {}",
+            report.warm.p50_ms,
+            report.cold.p50_ms
+        );
+
+        let rendered = report.json().render();
+        let parsed = Json::parse(&rendered).expect("report json parses");
+        assert_eq!(
+            parsed.get("format").and_then(Json::as_str),
+            Some("toast.bench.service_load/v1")
+        );
+
+        // The 50x hit gate is relaxed at tiny scale (toy searches finish
+        // fast); self-comparison stays inside the ±25% band.
+        let check = check_service_load(&report, Some(&parsed), false);
+        assert!(check.failures.is_empty(), "self-check failed: {:?}", check.failures);
+
+        let mut provisional = report.clone();
+        provisional.provisional = true;
+        let base = Json::parse(&provisional.json().render()).unwrap();
+        let check = check_service_load(&report, Some(&base), false);
+        assert!(check.failures.is_empty());
+        assert!(check.warnings.iter().any(|w| w.contains("provisional")));
+
+        assert!(format_service_load(&report).contains("service load"));
     }
 }

@@ -38,6 +38,19 @@ pub struct Metrics {
     pub search_us_total: AtomicU64,
     /// Total state evaluations across searches.
     pub evaluations: AtomicU64,
+    /// Submits answered from the solution cache without a dispatch.
+    pub cache_hits: AtomicU64,
+    /// Submits that missed the cache (and went on to the queue).
+    pub cache_misses: AtomicU64,
+    /// Solutions currently held by the cache (gauge).
+    pub cache_size: AtomicU64,
+    /// Worker results sampled for server-side differential replay.
+    pub audited: AtomicU64,
+    /// Audited results whose claimed validation record could not be
+    /// reproduced (forged or wrong — converted to rejections).
+    pub audit_rejected: AtomicU64,
+    /// Submits refused by admission control (queue at its bound).
+    pub overloaded: AtomicU64,
 }
 
 /// Saturating decrement: gauges must never underflow into u64::MAX even
@@ -141,6 +154,45 @@ impl Metrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A submit was answered straight from the solution cache. Cache hits
+    /// never touch the queue/in-flight gauges (nothing was dispatched),
+    /// so this is deliberately *not* [`Metrics::record_response`]: it
+    /// counts the request, the completion, and the verification verdict
+    /// carried by the cached artifact.
+    pub fn record_cache_hit(&self, resp: &PartitionResponse) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        self.record_request();
+        if let Ok(sol) = &resp.result {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+            if sol.oom {
+                self.oom_solutions.fetch_add(1, Ordering::Relaxed);
+            }
+            if sol.validation.as_ref().is_some_and(|v| v.pass) {
+                self.record_verified();
+            }
+        }
+    }
+
+    pub fn record_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn set_cache_size(&self, size: u64) {
+        self.cache_size.store(size, Ordering::Relaxed);
+    }
+
+    pub fn record_audited(&self) {
+        self.audited.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_audit_rejected(&self) {
+        self.audit_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_overloaded(&self) {
+        self.overloaded.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn mean_search_ms(&self) -> f64 {
         let done = self.completed.load(Ordering::Relaxed);
         if done == 0 {
@@ -163,13 +215,21 @@ impl Metrics {
             requeued: g(&self.requeued),
             workers: g(&self.workers),
             evaluations: g(&self.evaluations),
+            cache_hits: g(&self.cache_hits),
+            cache_misses: g(&self.cache_misses),
+            cache_size: g(&self.cache_size),
+            audited: g(&self.audited),
+            audit_rejected: g(&self.audit_rejected),
+            overloaded: g(&self.overloaded),
         }
     }
 
     pub fn snapshot(&self) -> String {
         format!(
             "requests={} queued={} in_flight={} completed={} failed={} verified={} \
-             rejected={} requeued={} workers={} oom={} mean_search={:.1}ms evals={}",
+             rejected={} requeued={} workers={} oom={} mean_search={:.1}ms evals={} \
+             cache_hits={} cache_misses={} cache_size={} audited={} audit_rejected={} \
+             overloaded={}",
             self.requests.load(Ordering::Relaxed),
             self.queue_depth(),
             self.in_flight.load(Ordering::Relaxed),
@@ -182,6 +242,12 @@ impl Metrics {
             self.oom_solutions.load(Ordering::Relaxed),
             self.mean_search_ms(),
             self.evaluations.load(Ordering::Relaxed),
+            self.cache_hits.load(Ordering::Relaxed),
+            self.cache_misses.load(Ordering::Relaxed),
+            self.cache_size.load(Ordering::Relaxed),
+            self.audited.load(Ordering::Relaxed),
+            self.audit_rejected.load(Ordering::Relaxed),
+            self.overloaded.load(Ordering::Relaxed),
         )
     }
 }
@@ -252,5 +318,31 @@ mod tests {
         m.record_unqueue();
         assert_eq!(m.queue_depth(), 0);
         assert_eq!(m.in_flight.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn throughput_counters_flow_into_report_and_snapshot() {
+        let m = Metrics::default();
+        m.record_cache_miss();
+        m.record_cache_miss();
+        m.set_cache_size(1);
+        m.record_audited();
+        m.record_audit_rejected();
+        m.record_overloaded();
+        let r = m.report();
+        assert_eq!(r.cache_hits, 0);
+        assert_eq!(r.cache_misses, 2);
+        assert_eq!(r.cache_size, 1);
+        assert_eq!(r.audited, 1);
+        assert_eq!(r.audit_rejected, 1);
+        assert_eq!(r.overloaded, 1);
+        let snap = m.snapshot();
+        assert!(snap.contains("cache_misses=2"));
+        assert!(snap.contains("audit_rejected=1"));
+        assert!(snap.contains("overloaded=1"));
+        // A cache hit counts the request and completion but leaves the
+        // queue/in-flight gauges alone: nothing was ever dispatched.
+        assert_eq!(m.queue_depth(), 0);
+        assert_eq!(m.in_flight.load(Ordering::Relaxed), 0);
     }
 }

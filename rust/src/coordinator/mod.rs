@@ -18,7 +18,41 @@
 //! --listen`, with workers as OS processes (`toast worker --connect`)
 //! and a submit/status client (`toast submit --connect`). Both pull the
 //! same [`service::JobQueue`], both run [`service::process_request`],
-//! and both account through [`metrics::Metrics::record_response`].
+//! and both terminate every response through
+//! [`service::ServiceShared`]'s shared completion path.
+//!
+//! ## The cache-first request path
+//!
+//! Every submission — thread mode or socket mode — runs the same
+//! admission sequence:
+//!
+//! 1. **Solution cache** ([`service::SolutionCache`]): repeated requests
+//!    (same model fingerprint, mesh, hardware, method, budget, seed) are
+//!    answered with the cached, already-verified artifact in
+//!    microseconds, with zero dispatches. LRU-bounded; `--no-cache`
+//!    bypasses it per request. Because deterministic (single-threaded,
+//!    fixed-seed) searches reproduce bit-identically, a hit returns
+//!    byte-for-byte what a fresh search would.
+//! 2. **Admission control**: with a queue-depth bound configured, a
+//!    full queue refuses the submit with a structured
+//!    [`service::Overloaded`] error (an `overloaded` frame on the wire)
+//!    instead of queueing unbounded work.
+//! 3. **Queue + dispatch**: misses flow to the [`service::JobQueue`];
+//!    socket workers pipeline up to [`TcpServerConfig::capacity`] jobs
+//!    per connection, with per-job exactly-once requeue if the worker
+//!    dies.
+//!
+//! ## Trust model
+//!
+//! In-process workers are trusted (same address space). Socket workers
+//! run their *own* trust-but-verify replay, so a Byzantine worker could
+//! forge the validation record on a result; the server re-verifies a
+//! sampled fraction ([`TcpServerConfig::audit_fraction`]) of
+//! worker-claimed records by replaying them through the differential
+//! harness itself, rejecting — and never caching — any result whose
+//! claim does not reproduce. Auth and TLS for the listening port remain
+//! open follow-ons (ROADMAP); until then the port should stay on
+//! localhost or a trusted network.
 
 pub mod experiments;
 pub mod metrics;
@@ -27,6 +61,7 @@ pub mod transport;
 
 pub use experiments::{BenchScale, Experiment};
 pub use service::{
-    JobQueue, ModelCache, PartitionRequest, PartitionResponse, Popped, Service, ServiceConfig,
+    JobQueue, ModelCache, Overloaded, PartitionRequest, PartitionResponse, Popped, Service,
+    ServiceConfig, SolutionCache,
 };
 pub use transport::{ReconnectPolicy, ServiceClient, TcpServer, TcpServerConfig, WorkerOptions};

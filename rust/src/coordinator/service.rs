@@ -63,13 +63,50 @@ pub struct ServiceConfig {
     /// deterministic for a fixed seed — which is what lets CI diff the
     /// thread mode against the socket mode byte for byte.
     pub search_threads: usize,
+    /// Solution-cache capacity in entries (`0` disables the cache).
+    /// Repeated requests for the same (model, mesh, hardware, method,
+    /// budget, seed) are answered from the cache without a dispatch.
+    pub cache_capacity: usize,
+    /// Admission bound: submits are refused with [`Overloaded`] while
+    /// the queue holds this many requests (`0` = unbounded).
+    pub max_queue: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { workers: 4, verify: true, verify_seed: 7, search_threads: 0 }
+        ServiceConfig {
+            workers: 4,
+            verify: true,
+            verify_seed: 7,
+            search_threads: 0,
+            cache_capacity: 128,
+            max_queue: 0,
+        }
     }
 }
+
+/// Structured admission-control refusal: the queue sits at its bound.
+/// Carried through `anyhow` so both transports can downcast and answer
+/// with the wire-level `overloaded` message instead of a plain error.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Overloaded {
+    /// Queue depth observed at refusal time.
+    pub queued: u64,
+    /// The configured bound ([`ServiceConfig::max_queue`]).
+    pub limit: u64,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "service overloaded: {} requests queued (admission bound {}); retry later",
+            self.queued, self.limit
+        )
+    }
+}
+
+impl std::error::Error for Overloaded {}
 
 // ---------------------------------------------------------------------------
 // JobQueue — the dispatch queue both transports pull from
@@ -234,6 +271,122 @@ impl ModelCache {
 }
 
 // ---------------------------------------------------------------------------
+// SolutionCache — already-verified artifacts for repeated requests
+// ---------------------------------------------------------------------------
+
+/// What makes two requests interchangeable for caching purposes: same
+/// serialized model (by fingerprint), mesh layout, hardware, method,
+/// budget, and seed. `verify` is deliberately *not* part of the key —
+/// a verified artifact can serve both verifying and non-verifying
+/// requests; the reverse is gated per entry.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct CacheKey {
+    model_fp: u64,
+    mesh: Vec<(String, usize)>,
+    hardware: &'static str,
+    method: &'static str,
+    budget: usize,
+    seed: u64,
+}
+
+impl CacheKey {
+    fn of(req: &PartitionRequest) -> CacheKey {
+        CacheKey {
+            model_fp: req.model.fingerprint(),
+            mesh: req.mesh.axes.iter().map(|a| (a.name.clone(), a.size)).collect(),
+            hardware: req.hardware.name(),
+            method: req.method.name(),
+            budget: req.budget,
+            seed: req.seed,
+        }
+    }
+}
+
+struct CacheEntry {
+    solution: Solution,
+    /// True when serving this artifact honors a `verify: true` request:
+    /// it carries a passing validation record, or the producing request
+    /// was exempt from verification (paper-scale IR / verify disabled
+    /// service-wide) so a fresh search would not be verified either.
+    satisfies_verify: bool,
+    /// Monotonic tick of the last hit or insert (LRU eviction order).
+    tick: u64,
+}
+
+/// LRU-bounded cache of already-completed [`Solution`] artifacts, keyed
+/// by [`CacheKey`]. Because single-threaded searches are deterministic
+/// for a fixed seed, a cached artifact is byte-identical to what a fresh
+/// search would return — the cache changes latency, never results.
+///
+/// Only *accepted* solutions enter (rejected or failed responses never
+/// do), so a hit short-circuits the queue, the search, and the verify
+/// replay in one step.
+pub struct SolutionCache {
+    capacity: usize,
+    inner: Mutex<SolutionCacheInner>,
+}
+
+#[derive(Default)]
+struct SolutionCacheInner {
+    entries: HashMap<CacheKey, CacheEntry>,
+    tick: u64,
+}
+
+impl SolutionCache {
+    pub fn new(capacity: usize) -> SolutionCache {
+        SolutionCache { capacity, inner: Mutex::new(SolutionCacheInner::default()) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up a request. `None` when disabled, missing, or when the
+    /// entry cannot satisfy the request's verification demand.
+    fn lookup(&self, req: &PartitionRequest) -> Option<Solution> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let key = CacheKey::of(req);
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        let entry = g.entries.get_mut(&key)?;
+        if req.verify && !entry.satisfies_verify {
+            return None;
+        }
+        entry.tick = tick;
+        Some(entry.solution.clone())
+    }
+
+    /// Insert a completed solution, evicting the least-recently-used
+    /// entry at capacity. Returns the resulting cache size.
+    fn insert(&self, req: &PartitionRequest, sol: &Solution) -> usize {
+        if self.capacity == 0 {
+            return 0;
+        }
+        let key = CacheKey::of(req);
+        let satisfies_verify = sol.validation.as_ref().is_some_and(|v| v.pass) || !req.verify;
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if !g.entries.contains_key(&key) && g.entries.len() >= self.capacity {
+            if let Some(oldest) =
+                g.entries.iter().min_by_key(|(_, e)| e.tick).map(|(k, _)| k.clone())
+            {
+                g.entries.remove(&oldest);
+            }
+        }
+        g.entries.insert(key, CacheEntry { solution: sol.clone(), satisfies_verify, tick });
+        g.entries.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
 // process_request — THE worker code path (threads and processes alike)
 // ---------------------------------------------------------------------------
 
@@ -313,6 +466,7 @@ pub(crate) struct ServiceShared {
     pub(crate) queue: JobQueue,
     pub(crate) metrics: Arc<Metrics>,
     pub(crate) models: ModelCache,
+    pub(crate) cache: SolutionCache,
     pub(crate) cfg: ServiceConfig,
     next_id: AtomicU64,
     pub(crate) next_worker_id: AtomicU64,
@@ -376,6 +530,61 @@ impl ServiceShared {
         self.metrics.record_request();
         Ok(())
     }
+
+    /// The admission path shared by both transports: cache lookup first,
+    /// then the queue-depth bound, then the queue. Returns
+    /// `Ok(Some(response))` on a cache hit — the response is fully
+    /// formed and *nothing was queued or dispatched* — `Ok(None)` when
+    /// the request entered the queue, and `Err` when it was refused
+    /// (shutdown, no workers, or [`Overloaded`], which callers can
+    /// downcast to distinguish backpressure from hard failures).
+    pub(crate) fn admit(
+        &self,
+        req: PartitionRequest,
+    ) -> crate::Result<Option<PartitionResponse>> {
+        if !req.no_cache {
+            if let Some(sol) = self.cache.lookup(&req) {
+                let result = Ok(sol);
+                let resp = PartitionResponse { id: req.id, request: req, result, rejected: false };
+                self.metrics.record_cache_hit(&resp);
+                return Ok(Some(resp));
+            }
+            self.metrics.record_cache_miss();
+        }
+        if self.cfg.max_queue > 0 {
+            let queued = self.metrics.queue_depth();
+            if queued >= self.cfg.max_queue as u64 {
+                self.metrics.record_overloaded();
+                return Err(anyhow::Error::new(Overloaded {
+                    queued,
+                    limit: self.cfg.max_queue as u64,
+                }));
+            }
+        }
+        self.enqueue(req)?;
+        Ok(None)
+    }
+
+    /// The single terminal path for a dispatched request, shared by the
+    /// in-process worker loop and every socket-side completion (matched
+    /// result, poison-request fail-back): populate the solution cache,
+    /// clear the request's requeue ledger entry, then account the
+    /// response. Centralizing the ledger clear is what keeps
+    /// `requeue_counts` from leaking entries on any terminal path.
+    pub(crate) fn complete_response(&self, resp: &PartitionResponse) {
+        if let Ok(sol) = &resp.result {
+            let size = self.cache.insert(&resp.request, sol);
+            self.metrics.set_cache_size(size as u64);
+        }
+        self.requeue_counts.lock().unwrap().remove(&resp.id);
+        self.metrics.record_response(resp);
+    }
+
+    /// Requeue-ledger entries still outstanding (tests assert 0 after
+    /// terminal scenarios — a nonzero steady-state value is a leak).
+    pub(crate) fn pending_requeue_entries(&self) -> usize {
+        self.requeue_counts.lock().unwrap().len()
+    }
 }
 
 /// Decrements a liveness gauge when dropped — worker threads hold one so
@@ -419,6 +628,7 @@ impl Service {
             queue: JobQueue::new(),
             metrics: Arc::clone(&metrics),
             models: ModelCache::default(),
+            cache: SolutionCache::new(cfg.cache_capacity),
             cfg: cfg.clone(),
             next_id: AtomicU64::new(1),
             next_worker_id: AtomicU64::new(1),
@@ -438,7 +648,7 @@ impl Service {
                 while let Some(req) = shared.queue.pop() {
                     shared.metrics.record_dispatch();
                     let resp = process_request(&req, &shared.models, &shared.cfg);
-                    shared.metrics.record_response(&resp);
+                    shared.complete_response(&resp);
                     if tx.send(resp).is_err() {
                         break;
                     }
@@ -449,13 +659,33 @@ impl Service {
     }
 
     /// Submit a request; returns its id, or an error if the service has
-    /// shut down (queue closed / workers gone) — submission after
-    /// shutdown is a caller error, not a panic.
+    /// shut down (queue closed / workers gone), or — when an admission
+    /// bound is configured — an [`Overloaded`] refusal (downcastable) if
+    /// the queue sits at its bound. Cache hits are answered immediately:
+    /// the cached response arrives on [`Service::responses`] without any
+    /// worker dispatch.
     pub fn submit(&self, mut req: PartitionRequest) -> crate::Result<u64> {
         let id = self.shared.allocate_id();
         req.id = id;
-        self.shared.enqueue(req)?;
+        if let Some(resp) = self.shared.admit(req)? {
+            let tx = self
+                .shared
+                .response_sender()
+                .ok_or_else(|| anyhow!("partition service is shut down; request {id} dropped"))?;
+            tx.send(resp).map_err(|_| anyhow!("response channel closed; request {id} dropped"))?;
+        }
         Ok(id)
+    }
+
+    /// Solutions currently held by the server-side cache.
+    pub fn cache_len(&self) -> usize {
+        self.shared.cache.len()
+    }
+
+    /// Requeue-ledger entries still outstanding (0 once every dispatched
+    /// request reached a terminal path).
+    pub fn pending_requeue_entries(&self) -> usize {
+        self.shared.pending_requeue_entries()
     }
 
     /// Close the queue without consuming the handle: queued jobs still
@@ -488,6 +718,7 @@ pub fn default_request(model: ModelKind, method: Method) -> PartitionRequest {
         budget: 150,
         seed: 0,
         verify: true,
+        no_cache: false,
     }
 }
 
@@ -619,5 +850,130 @@ mod tests {
         let t0 = Instant::now();
         assert!(matches!(q.pop_timeout(Duration::from_millis(30)), Popped::Empty));
         assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn solution_cache_is_lru_bounded_and_gates_on_verification() {
+        // Produce one real artifact cheaply (manual strategy, no verify).
+        let models = ModelCache::default();
+        let cfg = ServiceConfig { verify: false, ..Default::default() };
+        let mut req = default_request(ModelKind::Mlp, Method::Manual);
+        req.verify = false;
+        let sol = process_request(&req, &models, &cfg).result.expect("manual partition");
+
+        let cache = SolutionCache::new(2);
+        let reqs: Vec<PartitionRequest> = (0..3u64)
+            .map(|seed| {
+                let mut r = req.clone();
+                r.seed = seed;
+                r
+            })
+            .collect();
+        assert_eq!(cache.insert(&reqs[0], &sol), 1);
+        assert_eq!(cache.insert(&reqs[1], &sol), 2);
+        // Touch entry 0 so entry 1 becomes the LRU victim.
+        assert!(cache.lookup(&reqs[0]).is_some());
+        assert_eq!(cache.insert(&reqs[2], &sol), 2);
+        assert!(cache.lookup(&reqs[0]).is_some());
+        assert!(cache.lookup(&reqs[1]).is_none(), "LRU victim must be evicted");
+        assert!(cache.lookup(&reqs[2]).is_some());
+
+        // An artifact produced without verification never serves a
+        // verify=true request.
+        let mut verifying = reqs[0].clone();
+        verifying.verify = true;
+        assert!(cache.lookup(&verifying).is_none());
+
+        // Capacity 0 disables the cache entirely.
+        let off = SolutionCache::new(0);
+        assert_eq!(off.insert(&reqs[0], &sol), 0);
+        assert!(off.lookup(&reqs[0]).is_none());
+    }
+
+    #[test]
+    fn cache_hit_returns_byte_identical_artifact_without_a_dispatch() {
+        let svc = Service::start_with(ServiceConfig {
+            workers: 1,
+            search_threads: 1,
+            ..Default::default()
+        });
+        let req = default_request(ModelKind::Mlp, Method::Toast);
+        svc.submit(req.clone()).unwrap();
+        let first = svc.responses.recv().unwrap();
+        let sol1 = first.result.expect("search succeeds");
+        assert_eq!(svc.cache_len(), 1, "accepted solution entered the cache");
+        let evals_after_search = svc.metrics.evaluations.load(Ordering::Relaxed);
+        assert!(evals_after_search > 0);
+
+        // Identical request: answered from the cache, byte for byte,
+        // with zero additional search work.
+        svc.submit(req.clone()).unwrap();
+        let second = svc.responses.recv().unwrap();
+        let sol2 = second.result.expect("cache hit succeeds");
+        assert_eq!(
+            sol1.to_json().render(),
+            sol2.to_json().render(),
+            "cached artifact must be byte-identical"
+        );
+        assert_eq!(svc.metrics.cache_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.metrics.cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            svc.metrics.evaluations.load(Ordering::Relaxed),
+            evals_after_search,
+            "a cache hit runs no search"
+        );
+        assert_eq!(svc.metrics.queue_depth(), 0);
+        assert_eq!(svc.metrics.in_flight.load(Ordering::Relaxed), 0);
+
+        // --no-cache forces a fresh dispatch even with a warm cache.
+        let mut fresh = req.clone();
+        fresh.no_cache = true;
+        svc.submit(fresh).unwrap();
+        let third = svc.responses.recv().unwrap();
+        let sol3 = third.result.expect("fresh search succeeds");
+        assert_eq!(svc.metrics.cache_hits.load(Ordering::Relaxed), 1, "bypassed");
+        assert!(svc.metrics.evaluations.load(Ordering::Relaxed) > evals_after_search);
+        // Determinism check rides along: the fresh single-threaded
+        // search reproduces the cached artifact exactly (modulo wall
+        // time, which the canonical form zeroes).
+        let mut c1 = sol1.clone();
+        let mut c3 = sol3.clone();
+        c1.search_time_s = 0.0;
+        c3.search_time_s = 0.0;
+        assert_eq!(c1.to_json().render(), c3.to_json().render());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn admission_bound_refuses_with_overloaded_and_drains() {
+        // Transport-attached service with no local workers: requests
+        // park in the queue, so the bound is deterministic.
+        let svc = Service::start_with(ServiceConfig {
+            workers: 0,
+            max_queue: 2,
+            ..Default::default()
+        });
+        svc.shared.attach_transport();
+        let mk_req = |seed: u64| {
+            let mut r = default_request(ModelKind::Mlp, Method::Manual);
+            r.seed = seed;
+            r.no_cache = true;
+            r
+        };
+        svc.submit(mk_req(1)).unwrap();
+        svc.submit(mk_req(2)).unwrap();
+        let err = svc.submit(mk_req(3)).unwrap_err();
+        let over = err.downcast_ref::<Overloaded>().expect("structured overload refusal");
+        assert_eq!(over.queued, 2);
+        assert_eq!(over.limit, 2);
+        assert_eq!(svc.metrics.overloaded.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.metrics.queue_depth(), 2, "refused request never queued");
+
+        // Drain one (as a worker pickup would) and admission reopens.
+        let _job = svc.shared.queue.pop().expect("queued job");
+        svc.metrics.record_dispatch();
+        svc.submit(mk_req(4)).expect("below the bound again");
+        assert_eq!(svc.metrics.queue_depth(), 2);
+        svc.shutdown();
     }
 }

@@ -30,27 +30,42 @@
 //!
 //! The server tracks `last_seen` per worker. A worker that goes silent
 //! for longer than [`TcpServerConfig::dead_after`] — or whose socket
-//! errors or closes — is declared dead: its in-flight request is put
-//! back at the *front* of the shared [`JobQueue`] (counted in
-//! [`Metrics::requeued`]) and completed by a surviving worker, so a
+//! errors or closes — is declared dead: *all* of its in-flight requests
+//! (a worker holds up to [`TcpServerConfig::capacity`] pipelined jobs)
+//! are put back at the *front* of the shared [`JobQueue`] (counted in
+//! [`Metrics::requeued`]) and completed by surviving workers, so a
 //! `kill -9` mid-search loses zero requests. A request that keeps
 //! killing its workers is capped at [`MAX_REQUEUES`] retries and then
 //! failed back to its client — one poison request cannot serially take
 //! down the fleet.
 //!
-//! Dispatch and verification share the in-process mode's code path:
-//! remote workers run [`process_request`] (compiled-model cache +
+//! ## Throughput and trust
+//!
+//! Submissions run the cache-first admission path shared with the
+//! thread mode ([`ServiceShared::admit`]): a repeated request is
+//! answered from the server's solution cache without touching the
+//! queue, and a queue at its admission bound refuses the submit with a
+//! structured `overloaded` frame the client can back off on. Dispatch
+//! and verification share the in-process mode's code path: remote
+//! workers run [`process_request`] (compiled-model cache +
 //! trust-but-verify differential replay) and the server accounts every
-//! response through [`Metrics::record_response`] — exactly what the
-//! thread mode does, so the transports cannot drift.
+//! response through the same terminal path the thread mode uses — so
+//! the transports cannot drift. Because workers run their *own*
+//! differential replay, a Byzantine worker could forge the validation
+//! record; the server therefore replays a sampled fraction
+//! ([`TcpServerConfig::audit_fraction`]) of worker-claimed records
+//! itself and rejects any result whose claim does not reproduce.
 
 use super::metrics::Metrics;
 use super::service::{
-    process_request, ModelCache, Popped, Service, ServiceConfig, ServiceShared,
+    process_request, ModelCache, Overloaded, Popped, Service, ServiceConfig, ServiceShared,
 };
 use crate::api::wire::{Message, StatusReport};
-use crate::api::{PartitionRequest, PartitionResponse};
+use crate::api::{
+    validate_solution_spec, validate_staged_solution_spec, PartitionRequest, PartitionResponse,
+};
 use crate::util::json::Json;
+use crate::util::Rng;
 use anyhow::{anyhow, bail, ensure, Context as _};
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
@@ -71,6 +86,12 @@ pub const HEARTBEAT_INTERVAL: Duration = Duration::from_millis(500);
 
 /// Default silence window after which the server declares a worker dead.
 pub const DEFAULT_DEAD_AFTER: Duration = Duration::from_secs(5);
+
+/// Bound on a worker's socket writes (heartbeats and results): a dead or
+/// wedged server connection fails the write within this window instead
+/// of blocking a thread forever, which is what keeps the heartbeat
+/// thread joinable and reconnect cycles prompt.
+pub const WORKER_WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Poison-request guard: how many times a request may be requeued after
 /// killing its worker before the server gives up and fails it. Without a
@@ -177,13 +198,23 @@ pub fn read_message(r: &mut impl Read, cap: usize) -> crate::Result<Option<Messa
 #[derive(Clone, Debug)]
 pub struct TcpServerConfig {
     /// Silence window after which a worker is declared dead and its
-    /// in-flight request requeued.
+    /// in-flight requests requeued.
     pub dead_after: Duration,
+    /// Jobs pipelined per worker connection: the feeder keeps up to this
+    /// many requests in flight on one socket, so a worker never sits
+    /// idle waiting for the next dispatch round-trip (`0` is treated as
+    /// `1`).
+    pub capacity: usize,
+    /// Fraction of worker-claimed results the server re-verifies itself
+    /// by differential replay (`0.0` = trust workers, `1.0` = audit
+    /// everything). Results whose claimed validation record does not
+    /// reproduce are rejected.
+    pub audit_fraction: f64,
 }
 
 impl Default for TcpServerConfig {
     fn default() -> Self {
-        TcpServerConfig { dead_after: DEFAULT_DEAD_AFTER }
+        TcpServerConfig { dead_after: DEFAULT_DEAD_AFTER, capacity: 1, audit_fraction: 0.0 }
     }
 }
 
@@ -219,11 +250,14 @@ impl Router {
 struct RemoteWorker {
     id: u64,
     name: String,
-    /// The request dispatched to this worker, if any. `take()` under the
-    /// lock is the exactly-once requeue guard: whichever of the feeder
-    /// or reader observes the death first wins.
-    in_flight: Mutex<Option<PartitionRequest>>,
-    /// Signals the feeder when the slot empties (result arrived) or the
+    /// Pipelining depth: how many jobs may sit in `in_flight` at once.
+    capacity: usize,
+    /// Every request dispatched to this worker whose result has not
+    /// arrived, keyed by request id. Draining the map under the lock is
+    /// the exactly-once requeue guard: whichever of the feeder or reader
+    /// observes the death first takes all of them.
+    in_flight: Mutex<HashMap<u64, PartitionRequest>>,
+    /// Signals the feeder when a slot frees (result arrived) or the
     /// worker dies.
     idle_cv: Condvar,
     dead: AtomicBool,
@@ -240,13 +274,23 @@ impl RemoteWorker {
         self.dead.load(Ordering::Relaxed)
     }
 
-    /// Requeue the in-flight request, if any — exactly once, and at most
+    /// Requeue every in-flight request — each exactly once, and at most
     /// [`MAX_REQUEUES`] times per request: a request that keeps killing
     /// workers is failed back to its client instead of taking down the
     /// fleet.
     fn requeue_in_flight(&self, shared: &ServiceShared) {
-        let taken = self.in_flight.lock().unwrap().take();
-        if let Some(req) = taken {
+        let mut taken: Vec<PartitionRequest> = {
+            let mut slots = self.in_flight.lock().unwrap();
+            slots.drain().map(|(_, req)| req).collect()
+        };
+        if taken.is_empty() {
+            return;
+        }
+        // Requeue newest first: each push goes to the queue's front, so
+        // the *oldest* dispatched request ends up at the very head and
+        // head-of-line priority survives a multi-job worker death.
+        taken.sort_by_key(|r| std::cmp::Reverse(r.id));
+        for req in taken {
             let id = req.id;
             let attempts = {
                 let mut counts = shared.requeue_counts.lock().unwrap();
@@ -255,7 +299,6 @@ impl RemoteWorker {
                 *c
             };
             if attempts > MAX_REQUEUES {
-                shared.requeue_counts.lock().unwrap().remove(&id);
                 eprintln!(
                     "[serve] request {id} was in flight on {attempts} workers that died — \
                      failing it (poison request?)"
@@ -269,7 +312,9 @@ impl RemoteWorker {
                     )),
                     rejected: false,
                 };
-                shared.metrics.record_response(&resp);
+                // The shared terminal path clears the requeue ledger
+                // entry and accounts the failure.
+                shared.complete_response(&resp);
                 if let Some(tx) = shared.response_sender() {
                     let _ = tx.send(resp);
                 }
@@ -282,12 +327,15 @@ impl RemoteWorker {
                         self.id, self.name
                     );
                 } else {
-                    // Shutdown race: the queue is closed, nothing to do.
+                    // Shutdown race: the queue is closed. The request
+                    // reaches no other terminal path, so its ledger
+                    // entry must be cleared here or it leaks.
                     shared.metrics.record_unqueue();
+                    shared.requeue_counts.lock().unwrap().remove(&id);
                 }
             }
-            self.idle_cv.notify_all();
         }
+        self.idle_cv.notify_all();
     }
 }
 
@@ -349,6 +397,13 @@ impl TcpServer {
     /// The bound address (resolves `:0` to the actual port).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Requeue-ledger entries still outstanding (0 once every dispatched
+    /// request reached a terminal path — tests assert this after the
+    /// poison-request scenario).
+    pub fn pending_requeue_entries(&self) -> usize {
+        self.shared.pending_requeue_entries()
     }
 
     /// Block on the accept loop — the CLI server mode runs here until
@@ -471,7 +526,8 @@ fn worker_connection(
     let worker = Arc::new(RemoteWorker {
         id,
         name,
-        in_flight: Mutex::new(None),
+        capacity: cfg.capacity.max(1),
+        in_flight: Mutex::new(HashMap::new()),
         idle_cv: Condvar::new(),
         dead: AtomicBool::new(false),
         last_seen: Mutex::new(Instant::now()),
@@ -483,7 +539,7 @@ fn worker_connection(
         let writer = Arc::clone(&writer);
         move || feeder_loop(&worker, &writer, &shared)
     });
-    reader_loop(&worker, reader, &shared, resp_tx, cfg.dead_after);
+    reader_loop(&worker, reader, &shared, resp_tx, &cfg);
     // Reader exited (death, protocol violation, or shutdown): make sure
     // the feeder unblocks and any in-flight request survives.
     worker.mark_dead();
@@ -493,10 +549,24 @@ fn worker_connection(
     eprintln!("[serve] worker #{} ({}) disconnected", worker.id, worker.name);
 }
 
-/// Pulls jobs off the shared queue and ships them to one worker, one at
-/// a time, waiting for each result before dispatching the next.
+/// Pulls jobs off the shared queue and ships them to one worker,
+/// keeping up to `worker.capacity` requests pipelined on the socket:
+/// the worker process consumes them sequentially, but the next job is
+/// already buffered when a result comes back, so a multi-job worker
+/// never idles on the dispatch round-trip.
 fn feeder_loop(worker: &RemoteWorker, writer: &SharedWriter, shared: &ServiceShared) {
     loop {
+        // Wait for a free slot (a result arrived) or death.
+        {
+            let mut slots = worker.in_flight.lock().unwrap();
+            while slots.len() >= worker.capacity && !worker.is_dead() {
+                slots = worker
+                    .idle_cv
+                    .wait_timeout(slots, Duration::from_millis(100))
+                    .unwrap()
+                    .0;
+            }
+        }
         if worker.is_dead() {
             break;
         }
@@ -510,7 +580,7 @@ fn feeder_loop(worker: &RemoteWorker, writer: &SharedWriter, shared: &ServiceSha
             Popped::Empty => continue,
             Popped::Job(req) => {
                 shared.metrics.record_dispatch();
-                *worker.in_flight.lock().unwrap() = Some(req.clone());
+                worker.in_flight.lock().unwrap().insert(req.id, req.clone());
                 let sent = {
                     let mut w = writer.lock().unwrap();
                     write_message(&mut *w, &Message::Job(req)).is_ok()
@@ -520,33 +590,28 @@ fn feeder_loop(worker: &RemoteWorker, writer: &SharedWriter, shared: &ServiceSha
                     worker.requeue_in_flight(shared);
                     break;
                 }
-                // Wait until the reader clears the slot (result arrived)
-                // or the worker dies.
-                let mut slot = worker.in_flight.lock().unwrap();
-                while slot.is_some() && !worker.is_dead() {
-                    slot = worker
-                        .idle_cv
-                        .wait_timeout(slot, Duration::from_millis(100))
-                        .unwrap()
-                        .0;
-                }
             }
         }
     }
-    // Safety net (exactly-once via the slot's `take`).
+    // Safety net (exactly-once via the map drain).
     worker.requeue_in_flight(shared);
 }
 
 /// Consumes one worker's frames: heartbeats refresh liveness, results
-/// clear the in-flight slot and flow into the shared response channel.
-/// Returns when the worker is dead by any definition.
+/// free their in-flight slot, run the sampled server-side audit, and
+/// flow into the shared response channel. Returns when the worker is
+/// dead by any definition.
 fn reader_loop(
     worker: &RemoteWorker,
     mut reader: TcpStream,
     shared: &ServiceShared,
     resp_tx: Sender<PartitionResponse>,
-    dead_after: Duration,
+    cfg: &TcpServerConfig,
 ) {
+    let dead_after = cfg.dead_after;
+    // Deterministic per-connection sampler: worker id seeds it, so test
+    // runs with a fixed fleet audit reproducibly.
+    let mut audit_rng = Rng::new(0xA0D1_7000 ^ worker.id);
     // Wake at least a few times per dead_after window to check liveness;
     // a timeout before a frame's first byte is just "quiet", mid-frame
     // it means the peer stalled (handled as an error below).
@@ -572,22 +637,27 @@ fn reader_loop(
                     Message::Heartbeat => {}
                     Message::Result(resp) => {
                         let matched = {
-                            let mut slot = worker.in_flight.lock().unwrap();
-                            match slot.as_ref() {
-                                Some(req) if req.id == resp.id => {
-                                    slot.take();
-                                    worker.idle_cv.notify_all();
-                                    true
-                                }
-                                _ => false,
+                            let mut slots = worker.in_flight.lock().unwrap();
+                            let hit = slots.remove(&resp.id).is_some();
+                            if hit {
+                                worker.idle_cv.notify_all();
                             }
+                            hit
                         };
                         if matched {
-                            // The request completed; forget any requeue
-                            // history so the poison guard never misfires
-                            // on a recycled id space.
-                            shared.requeue_counts.lock().unwrap().remove(&resp.id);
-                            shared.metrics.record_response(&resp);
+                            // Sampled server-side audit *before* the
+                            // terminal path: a rejected result must
+                            // never enter the solution cache.
+                            let resp = if cfg.audit_fraction > 0.0
+                                && audit_rng.f64() < cfg.audit_fraction
+                            {
+                                audit_response(resp, shared, worker.id)
+                            } else {
+                                resp
+                            };
+                            // Shared terminal path: cache insert, requeue
+                            // ledger clear, metrics.
+                            shared.complete_response(&resp);
                             let _ = resp_tx.send(resp);
                         } else {
                             eprintln!(
@@ -625,6 +695,120 @@ fn reader_loop(
     }
 }
 
+/// Server-side sampled re-verification. Workers run their own
+/// differential replay, so a Byzantine worker could return a fabricated
+/// [`crate::api::ValidationRecord`] (or a spec that was never executed
+/// at all) and the claim would flow to the client unchallenged. For a
+/// sampled result the server replays the spec through the same
+/// differential harness itself — deterministic given the record's seed,
+/// so an honest worker's record reproduces byte for byte — and converts
+/// any result whose claim does not reproduce into a rejection.
+fn audit_response(
+    resp: PartitionResponse,
+    shared: &ServiceShared,
+    worker_id: u64,
+) -> PartitionResponse {
+    let Ok(sol) = &resp.result else {
+        return resp; // failures carry no verification claim to audit
+    };
+    let claimed = sol.validation.clone();
+    // Nothing claimed and nothing owed (the request opted out of
+    // verification): there is no claim to challenge.
+    if claimed.is_none() && !(shared.cfg.verify && resp.request.verify) {
+        return resp;
+    }
+    shared.metrics.record_audited();
+    let compiled = match shared.models.resolve(&resp.request.model) {
+        Ok(c) => c,
+        Err(e) => {
+            return reject_audited(
+                resp,
+                &format!("its model does not compile on the server: {e:#}"),
+                shared,
+                worker_id,
+            );
+        }
+    };
+    if !compiled.interpreter_sized() {
+        return if claimed.is_some() {
+            // Thread mode never attaches a record to IR it cannot
+            // execute — a claim here is inherently unverifiable forgery.
+            reject_audited(
+                resp,
+                "it claims a validation record for a model too large to replay",
+                shared,
+                worker_id,
+            )
+        } else {
+            resp // verification exempt, same as the worker-side gate
+        };
+    }
+    let seed = claimed.as_ref().map_or(shared.cfg.verify_seed, |v| v.seed);
+    let replay = match &sol.stages {
+        Some(sa) => validate_staged_solution_spec(
+            compiled.func(),
+            &sol.spec,
+            sa,
+            &resp.request.mesh,
+            seed,
+        ),
+        None => validate_solution_spec(compiled.func(), &sol.spec, &resp.request.mesh, seed),
+    };
+    match replay {
+        Ok(record) if record.pass => {
+            // The spec replays clean. Stamp the *server's* record onto
+            // the response so even the numbers are server-attested —
+            // byte-identical to an honest worker's record, since the
+            // replay is deterministic in (spec, mesh, seed).
+            let mut resp = resp;
+            if let Ok(sol) = &mut resp.result {
+                sol.validation = Some(record);
+            }
+            resp
+        }
+        Ok(record) => reject_audited(
+            resp,
+            &format!(
+                "its claimed validation does not reproduce: max relative divergence \
+                 {:.3e} exceeds tol {:.1e}",
+                record.max_rel_err, record.tol
+            ),
+            shared,
+            worker_id,
+        ),
+        Err(e) => reject_audited(
+            resp,
+            &format!("its claimed validation does not replay: {e:#}"),
+            shared,
+            worker_id,
+        ),
+    }
+}
+
+/// Convert an audited result that failed re-verification into a
+/// rejection (counted in [`Metrics::audit_rejected`]).
+fn reject_audited(
+    resp: PartitionResponse,
+    why: &str,
+    shared: &ServiceShared,
+    worker_id: u64,
+) -> PartitionResponse {
+    shared.metrics.record_audit_rejected();
+    eprintln!(
+        "[serve] audit: rejecting request {} from worker #{worker_id}: {why}",
+        resp.id
+    );
+    PartitionResponse {
+        id: resp.id,
+        result: Err(anyhow!(
+            "server-side audit rejected request {} from worker #{worker_id}: {why}",
+            resp.id
+        )),
+        request: resp.request,
+        rejected: true,
+    }
+}
+
 // ---- client connections ---------------------------------------------------
 
 fn client_connection(
@@ -652,20 +836,41 @@ fn client_connection(
             Message::Submit(mut req) => {
                 let id = shared.allocate_id();
                 req.id = id;
-                // Register the route *before* enqueueing: a fast worker
+                // Register the route *before* admission: a fast worker
                 // may answer before this thread runs again.
                 router.register(id, Arc::clone(&writer));
-                match shared.enqueue(req) {
-                    Ok(()) => {
+                match shared.admit(req) {
+                    Ok(None) => {
                         my_ids.push(id);
                         let mut w = writer.lock().unwrap();
                         if write_message(&mut *w, &Message::Submitted { id }).is_err() {
                             break;
                         }
                     }
+                    Ok(Some(resp)) => {
+                        // Cache hit: ack, then answer on this connection
+                        // immediately — no queue, no worker, no router.
+                        router.deregister(id);
+                        let mut w = writer.lock().unwrap();
+                        if write_message(&mut *w, &Message::Submitted { id }).is_err()
+                            || write_message(&mut *w, &Message::Response(resp)).is_err()
+                        {
+                            break;
+                        }
+                    }
                     Err(e) => {
                         router.deregister(id);
-                        send_error(&writer, &format!("{e:#}"));
+                        if let Some(o) = e.downcast_ref::<Overloaded>() {
+                            // Structured backpressure, not a hard error:
+                            // the client may retry after draining.
+                            let mut w = writer.lock().unwrap();
+                            let msg = Message::Overloaded { queued: o.queued, limit: o.limit };
+                            if write_message(&mut *w, &msg).is_err() {
+                                break;
+                            }
+                        } else {
+                            send_error(&writer, &format!("{e:#}"));
+                        }
                     }
                 }
             }
@@ -817,6 +1022,11 @@ pub fn run_worker_reconnect(
 /// connection.
 pub fn run_worker_on(stream: TcpStream, opts: &WorkerOptions) -> crate::Result<()> {
     stream.set_nodelay(true).ok();
+    // Bounded writes: a dead or wedged server socket fails heartbeat and
+    // result writes within the timeout instead of blocking forever —
+    // without this, the heartbeat thread could pin `heartbeat.join()`
+    // and stall a reconnect cycle indefinitely.
+    stream.set_write_timeout(Some(WORKER_WRITE_TIMEOUT)).ok();
     let mut reader = stream.try_clone()?;
     let writer = Arc::new(Mutex::new(stream));
     {
@@ -833,15 +1043,24 @@ pub fn run_worker_on(stream: TcpStream, opts: &WorkerOptions) -> crate::Result<(
 
     // Heartbeats flow from a dedicated thread so a long search cannot
     // silence them — the server must be able to tell "busy" from "dead".
-    let stop = Arc::new(AtomicBool::new(false));
+    // Shutdown is a (flag, condvar) pair instead of a bare sleep loop:
+    // the main loop's notify wakes the thread *immediately*, so
+    // `heartbeat.join()` below never stalls a reconnect cycle for up to
+    // a heartbeat interval (or, with the write timeout above, spins
+    // writes against a socket the session already abandoned).
+    let stop = Arc::new((Mutex::new(false), Condvar::new()));
     let heartbeat = std::thread::spawn({
         let writer = Arc::clone(&writer);
         let stop = Arc::clone(&stop);
         move || {
-            while !stop.load(Ordering::Relaxed) {
-                std::thread::sleep(HEARTBEAT_INTERVAL);
-                if stop.load(Ordering::Relaxed) {
-                    break;
+            let (flag, cv) = &*stop;
+            loop {
+                {
+                    let guard = flag.lock().unwrap();
+                    let (guard, _) = cv.wait_timeout(guard, HEARTBEAT_INTERVAL).unwrap();
+                    if *guard {
+                        break;
+                    }
                 }
                 let mut w = writer.lock().unwrap();
                 if write_message(&mut *w, &Message::Heartbeat).is_err() {
@@ -871,7 +1090,11 @@ pub fn run_worker_on(stream: TcpStream, opts: &WorkerOptions) -> crate::Result<(
             }
         }
     })();
-    stop.store(true, Ordering::Relaxed);
+    // Signal, wake, then join: the condvar wakes the heartbeat thread
+    // immediately instead of letting it sleep out its interval.
+    let (flag, cv) = &*stop;
+    *flag.lock().unwrap() = true;
+    cv.notify_all();
     let _ = heartbeat.join();
     result
 }
@@ -906,13 +1129,19 @@ impl ServiceClient {
             .ok_or_else(|| anyhow!("server closed the connection"))
     }
 
-    /// Submit a request; returns the id the server assigned.
+    /// Submit a request; returns the id the server assigned. An
+    /// admission-control refusal surfaces as an [`Overloaded`] error
+    /// (downcastable), distinguishable from hard failures so callers can
+    /// back off and retry.
     pub fn submit(&mut self, req: PartitionRequest) -> crate::Result<u64> {
         write_message(&mut self.writer, &Message::Submit(req))?;
         loop {
             match self.next_message()? {
                 Message::Submitted { id } => return Ok(id),
                 Message::Response(resp) => self.buffered.push_back(resp),
+                Message::Overloaded { queued, limit } => {
+                    return Err(anyhow::Error::new(Overloaded { queued, limit }))
+                }
                 Message::Error { message } => bail!("server refused the submission: {message}"),
                 other => bail!("unexpected '{}' while awaiting submission ack", other.tag()),
             }

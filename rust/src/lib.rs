@@ -104,14 +104,21 @@
 //! * [`coordinator`] — the L3 service: a partition-request queue with
 //!   model-agnostic requests, a compiled-model cache, the
 //!   trust-but-verify acceptance gate, metrics (queue depth, in-flight,
-//!   requeues, live workers), and **two transports over one
-//!   dispatch/verify path**: the in-process thread pool
-//!   ([`coordinator::Service`], the default) and the socket mode
+//!   requeues, cache hits/misses, audits, live workers), and **two
+//!   transports over one dispatch/verify path**: the in-process thread
+//!   pool ([`coordinator::Service`], the default) and the socket mode
 //!   ([`coordinator::transport`]) — length-prefixed JSON frames over
 //!   TCP, `toast serve --listen` / `toast worker --connect` /
 //!   `toast submit --connect`, with per-worker heartbeat liveness and
 //!   dead-worker requeue so killing a worker process mid-search loses
-//!   no requests.
+//!   no requests. Admission runs cache-first: an LRU **solution cache**
+//!   answers repeated requests with the already-verified artifact
+//!   (byte-identical, microseconds, zero dispatches), a queue-depth
+//!   bound refuses overload with a structured
+//!   [`coordinator::Overloaded`] error, socket workers pipeline several
+//!   jobs per connection, and a sampled server-side audit replays
+//!   worker-claimed validation records so a Byzantine worker cannot
+//!   forge verification.
 
 pub mod api;
 pub mod baselines;

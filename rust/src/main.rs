@@ -19,14 +19,25 @@
 //!   reference interpreter (scaled model).
 //! * `bench`     — regenerate the paper's figures
 //!   (fig8|fig9|fig10|ablations), run the differential-validation
-//!   sweep (differential), or the search-speed campaign (search-speed:
+//!   sweep (differential), the search-speed campaign (search-speed:
 //!   evaluator throughput, legacy-vs-optimized nodes/sec, joint-search
-//!   wall time; `--check` gates against `BENCH_search_speed.json`).
+//!   wall time; `--check` gates against `BENCH_search_speed.json`), or
+//!   the service-load campaign (service-load: req/sec and cold-search vs
+//!   cache-hit p50/p99 latency; `--check` gates against
+//!   `BENCH_service_load.json`).
 //! * `models`    — list the model zoo with parameter counts.
 //! * `serve`     — run the trust-but-verify partition service: the
 //!   in-process demo by default, or `--listen HOST:PORT` to serve the
 //!   socket protocol (workers and clients connect over TCP; the bound
 //!   address is printed to stdout so `--listen 127.0.0.1:0` works).
+//!   Admission runs cache-first: repeated requests are answered from the
+//!   LRU solution cache (`--cache N` entries) without a dispatch, and a
+//!   full queue (`--max-queue N`) refuses submits with a structured
+//!   `overloaded` error instead of queueing unbounded work. Socket
+//!   workers pipeline up to `--capacity N` jobs each, and
+//!   `--audit-fraction F` re-verifies that fraction of worker-claimed
+//!   validation records server-side (a forged record is rejected, never
+//!   cached).
 //! * `worker`    — `--connect HOST:PORT`: run the compiled-model-cache +
 //!   differential-replay worker loop as a standalone process against a
 //!   `serve --listen` server. Lost connections reconnect with
@@ -123,23 +134,33 @@ USAGE: toast <command> [--flag value]...
   search     --model M --mesh 2x2 [--budget N] [--validate-best]
   validate   --model M --mesh 2x2 [--budget N]
   bench      --experiment <fig8|fig9|fig10|ablations|differential|pipeline
-                           |search-speed>
+                           |search-speed|service-load>
              [--scale tiny|bench|paper] [--json]
-             (search-speed also takes [--out report.json] and
-              [--check [baseline.json]]: measure evaluator throughput,
-              legacy-vs-optimized search nodes/sec, and joint-search wall
-              time over the zoo; --check gates cost parity, the 1.3x
-              joint speedup (bench/paper scale), and a +/-25% band
-              against the baseline — default BENCH_search_speed.json)
+             (search-speed and service-load also take [--out report.json]
+              and [--check [baseline.json]]: search-speed measures
+              evaluator throughput, legacy-vs-optimized search nodes/sec,
+              and joint-search wall time, gating cost parity, the 1.3x
+              joint speedup (bench/paper scale), and a +/-25% band against
+              BENCH_search_speed.json; service-load drives a repeated
+              workload through an in-process service and publishes req/sec
+              plus cold-search vs cache-hit p50/p99 latency, gating the
+              hit counters, the 50x hit speedup (bench/paper scale), and a
+              +/-25% band against BENCH_service_load.json)
   models
   serve      [--workers N] [--no-verify] [--search-threads N]
+             [--cache N] (solution-cache entries; 0 disables)
+             [--max-queue N] (admission bound; full queue refuses submits
+              with an 'overloaded' error; 0 = unbounded)
              [--listen HOST:PORT] [--dead-after-ms N]
+             [--capacity N] (pipelined jobs per socket worker)
+             [--audit-fraction F] (server-side re-verification of
+              worker-claimed validation records; 0.0-1.0)
   worker     --connect HOST:PORT [--name ID] [--no-verify] [--search-threads N]
              [--reconnect-max N] (0 = retry forever; exponential backoff)
   submit     (--connect HOST:PORT | --workers N) [--models a,b] [--methods x,y]
              [--mesh 2x2] [--hw a100] [--budget N] [--seed N]
              [--search-threads N] [--out-dir DIR] [--canonical]
-             [--expect-verified] [--status]
+             [--no-cache] [--expect-verified] [--status]
   e2e        [--devices N] [--steps N] [--artifacts DIR]"
     );
 }
@@ -562,6 +583,48 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 eprintln!("search-speed gates passed ({} warnings)", result.warnings.len());
             }
         }
+        exp::Experiment::ServiceLoad => {
+            let report = exp::run_service_load(scale);
+            if json {
+                println!("{}", report.json().render());
+            } else {
+                print!("{}", exp::format_service_load(&report));
+            }
+            if let Some(path) = flags.get("out") {
+                std::fs::write(path, report.json().render() + "\n")?;
+                eprintln!("wrote {path}");
+            }
+            if let Some(check) = flags.get("check") {
+                let path =
+                    if check == "true" { "BENCH_service_load.json" } else { check.as_str() };
+                let baseline = match std::fs::read_to_string(path) {
+                    Ok(text) => Some(
+                        toast::util::json::Json::parse(&text)
+                            .map_err(|e| anyhow::anyhow!("{path}: {e:?}"))?,
+                    ),
+                    Err(e) => {
+                        eprintln!("warning: baseline {path} unreadable ({e}); gating in-run only");
+                        None
+                    }
+                };
+                // The 50x hit-speedup gate needs searches long enough to
+                // dominate fixed costs: enforce at bench/paper scale only.
+                let enforce = scale != exp::BenchScale::Tiny;
+                let result = exp::check_service_load(&report, baseline.as_ref(), enforce);
+                for w in &result.warnings {
+                    eprintln!("warning: {w}");
+                }
+                for f in &result.failures {
+                    eprintln!("FAIL: {f}");
+                }
+                anyhow::ensure!(
+                    result.failures.is_empty(),
+                    "{} service-load gate(s) failed",
+                    result.failures.len()
+                );
+                eprintln!("service-load gates passed ({} warnings)", result.warnings.len());
+            }
+        }
     }
     Ok(())
 }
@@ -634,10 +697,19 @@ fn cmd_models() -> anyhow::Result<()> {
 /// The `workers`/`no-verify`/`search-threads` flags shared by `serve`,
 /// `worker` and `submit`, folded into a [`ServiceConfig`].
 fn service_config(flags: &HashMap<String, String>, default_workers: usize) -> ServiceConfig {
+    let defaults = ServiceConfig::default();
     ServiceConfig {
         workers: flags.get("workers").and_then(|s| s.parse().ok()).unwrap_or(default_workers),
         verify: !flags.contains_key("no-verify"),
         search_threads: flags.get("search-threads").and_then(|s| s.parse().ok()).unwrap_or(0),
+        cache_capacity: flags
+            .get("cache")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(defaults.cache_capacity),
+        max_queue: flags
+            .get("max-queue")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(defaults.max_queue),
         ..Default::default()
     }
 }
@@ -650,13 +722,26 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         let svc_cfg = service_config(flags, 0);
         let dead_after_ms: u64 =
             flags.get("dead-after-ms").and_then(|s| s.parse().ok()).unwrap_or(5000);
+        let capacity: usize = flags.get("capacity").and_then(|s| s.parse().ok()).unwrap_or(1);
+        let audit_fraction: f64 =
+            flags.get("audit-fraction").and_then(|s| s.parse().ok()).unwrap_or(0.0);
         let tcp_cfg = toast::coordinator::TcpServerConfig {
             dead_after: std::time::Duration::from_millis(dead_after_ms),
+            capacity,
+            audit_fraction,
         };
         eprintln!(
-            "socket service: {} local workers, verify gate {}, dead-after {dead_after_ms}ms",
+            "socket service: {} local workers, verify gate {}, dead-after {dead_after_ms}ms, \
+             {capacity} jobs/worker, audit fraction {audit_fraction}, cache {} entries, \
+             queue bound {}",
             svc_cfg.workers,
-            if svc_cfg.verify { "on" } else { "off" }
+            if svc_cfg.verify { "on" } else { "off" },
+            svc_cfg.cache_capacity,
+            if svc_cfg.max_queue == 0 {
+                "off".to_string()
+            } else {
+                svc_cfg.max_queue.to_string()
+            }
         );
         return toast::coordinator::transport::serve_listen(addr, svc_cfg, tcp_cfg);
     }
@@ -737,6 +822,7 @@ fn cmd_submit(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let budget: usize = flags.get("budget").and_then(|s| s.parse().ok()).unwrap_or(150);
     let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(5);
     let canonical = flags.contains_key("canonical");
+    let no_cache = flags.contains_key("no-cache");
     let expect_verified = flags.contains_key("expect-verified");
     let out_dir = flags.get("out-dir");
     if let Some(dir) = out_dir {
@@ -751,6 +837,7 @@ fn cmd_submit(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             req.hardware = hw;
             req.budget = budget;
             req.seed = seed;
+            req.no_cache = no_cache;
             requests.push(req);
         }
     }

@@ -216,6 +216,7 @@ fn service_runs_mixed_workload() {
                 budget: 60,
                 seed: 2,
                 verify: true,
+                no_cache: false,
             })
             .expect("service accepts requests");
             n += 1;

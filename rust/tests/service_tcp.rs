@@ -9,7 +9,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use toast::api::wire::{Message, StatusReport};
-use toast::api::{CompiledModel, ModelSource, PartitionRequest, PartitionResponse, Solution};
+use toast::api::{
+    CompiledModel, ModelSource, PartitionRequest, PartitionResponse, Solution, ValidationRecord,
+};
 use toast::baselines::Method;
 use toast::coordinator::metrics::Metrics;
 use toast::coordinator::service::default_request;
@@ -17,25 +19,33 @@ use toast::coordinator::transport::{
     read_frame, read_message, run_worker_on, write_frame, write_message, MAX_FRAME_LEN,
 };
 use toast::coordinator::{
-    Service, ServiceClient, ServiceConfig, TcpServer, TcpServerConfig, WorkerOptions,
+    Overloaded, Service, ServiceClient, ServiceConfig, TcpServer, TcpServerConfig, WorkerOptions,
 };
 use toast::mesh::{HardwareKind, Mesh};
 use toast::models::ModelKind;
 use toast::util::rng::Rng;
 
-/// Start a socket server over a fresh service. Returns the bound
-/// address, a metrics handle, and the server (shut it down to end the
-/// worker loops cleanly).
-fn start_server(local_workers: usize, dead_after: Duration) -> (SocketAddr, Arc<Metrics>, TcpServer) {
-    let svc = Service::start_with(ServiceConfig {
-        workers: local_workers,
-        search_threads: 1,
-        ..Default::default()
-    });
+/// Start a socket server over an explicitly configured service. Returns
+/// the bound address, a metrics handle, and the server (shut it down to
+/// end the worker loops cleanly).
+fn start_server_with(
+    svc_cfg: ServiceConfig,
+    tcp_cfg: TcpServerConfig,
+) -> (SocketAddr, Arc<Metrics>, TcpServer) {
+    let svc = Service::start_with(svc_cfg);
     let metrics = Arc::clone(&svc.metrics);
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind an ephemeral port");
-    let server = TcpServer::start(svc, listener, TcpServerConfig { dead_after }).unwrap();
+    let server = TcpServer::start(svc, listener, tcp_cfg).unwrap();
     (server.local_addr(), metrics, server)
+}
+
+/// The common shape: deterministic single-threaded searches, default
+/// cache/admission, single-slot workers.
+fn start_server(local_workers: usize, dead_after: Duration) -> (SocketAddr, Arc<Metrics>, TcpServer) {
+    start_server_with(
+        ServiceConfig { workers: local_workers, search_threads: 1, ..Default::default() },
+        TcpServerConfig { dead_after, ..Default::default() },
+    )
 }
 
 fn deterministic_worker(name: &str) -> WorkerOptions {
@@ -63,6 +73,7 @@ fn random_request(rng: &mut Rng) -> PartitionRequest {
         // Half the seeds exceed 2^53 to exercise the string encoding.
         seed: if rng.below(2) == 0 { rng.below(1000) as u64 } else { rng.next_u64() | (1 << 60) },
         verify: rng.below(2) == 0,
+        no_cache: rng.below(2) == 0,
     }
 }
 
@@ -75,6 +86,7 @@ fn assert_request_eq(a: &PartitionRequest, b: &PartitionRequest) {
     assert_eq!(a.budget, b.budget);
     assert_eq!(a.seed, b.seed);
     assert_eq!(a.verify, b.verify);
+    assert_eq!(a.no_cache, b.no_cache);
 }
 
 /// Property-style round-trip of request/response/status frames through a
@@ -323,6 +335,14 @@ fn poison_request_is_failed_after_the_requeue_cap() {
     assert_eq!(report.queued, 0, "{}", report.render_line());
     assert_eq!(report.in_flight, 0, "{}", report.render_line());
     assert_eq!(metrics.report().requeued, u64::from(MAX_REQUEUES));
+    // The regression this test pins down: every terminal path — the
+    // give-up failure included — must clear the request's requeue-count
+    // ledger entry, or a long-lived server leaks one entry per poison.
+    assert_eq!(
+        server.pending_requeue_entries(),
+        0,
+        "requeue ledger must be empty once the poison request is failed"
+    );
     server.shutdown();
 }
 
@@ -393,19 +413,33 @@ fn restarted_server_picks_the_fleet_back_up() {
         ..Default::default()
     });
     let metrics2 = Arc::clone(&svc.metrics);
-    let server2 =
-        TcpServer::start(svc, listener, TcpServerConfig { dead_after: Duration::from_secs(5) })
-            .unwrap();
+    let server2 = TcpServer::start(
+        svc,
+        listener,
+        TcpServerConfig { dead_after: Duration::from_secs(5), ..Default::default() },
+    )
+    .unwrap();
     assert_eq!(server2.local_addr(), addr, "generation 2 must reuse the address");
 
     // The SAME worker process reconnects (fail fast rather than hang if
     // the backoff loop gave up early).
+    let rebind = std::time::Instant::now();
     let mut waited = 0;
     while metrics2.report().workers == 0 {
         waited += 1;
         assert!(waited < 200, "worker never reconnected to the restarted server");
         std::thread::sleep(Duration::from_millis(25));
     }
+    // Reconnect latency is bounded by the backoff schedule (max 200ms),
+    // not by a heartbeat thread wedged in a blocking write to the dead
+    // server: the worker sets a write timeout and joins the heartbeat
+    // thread through a shutdown flag, so a torn-down server can never
+    // hold a worker hostage past its backoff.
+    assert!(
+        rebind.elapsed() < Duration::from_secs(3),
+        "reconnect took {:?} — heartbeat teardown is blocking the retry loop",
+        rebind.elapsed()
+    );
 
     // ...and completes generation 2's request.
     let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
@@ -467,4 +501,254 @@ fn socket_mode_and_thread_mode_produce_identical_solution_json() {
         canonical(remote),
         "the two transports drifted — they must share one dispatch/verify path"
     );
+}
+
+/// A repeated socket submission is answered from the server-side
+/// solution cache: the artifact is byte-identical (wall-clock field
+/// included — an exact clone, so no second search ran), the hit/miss
+/// counters move, and `--no-cache` still forces a fresh search.
+#[test]
+fn warm_cache_socket_submit_is_byte_identical_with_zero_extra_searches() {
+    let (addr, _metrics, server) = start_server(0, Duration::from_secs(5));
+    let worker = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        run_worker_on(stream, &deterministic_worker("w0")).unwrap();
+    });
+
+    let mut req = default_request(ModelKind::Mlp, Method::Toast);
+    req.budget = 60;
+    req.seed = 9;
+
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+    client.submit(req.clone()).unwrap();
+    let cold = client.recv_response().unwrap().result.expect("cold request succeeds");
+
+    client.submit(req.clone()).unwrap();
+    let warm = client.recv_response().unwrap().result.expect("warm request succeeds");
+
+    assert_eq!(
+        cold.to_json_string(),
+        warm.to_json_string(),
+        "a cache hit must be byte-identical to the search it replays"
+    );
+    assert!(warm.validation.as_ref().is_some_and(|v| v.pass), "hits stay verified");
+
+    let report = client.status().unwrap();
+    assert_eq!(report.cache_hits, 1, "{}", report.render_line());
+    assert_eq!(report.cache_misses, 1, "{}", report.render_line());
+    assert_eq!(report.cache_size, 1, "{}", report.render_line());
+    assert_eq!(report.completed, 2, "{}", report.render_line());
+
+    // --no-cache bypasses the cache: a fresh deterministic search runs
+    // and agrees with the cached artifact modulo wall clock.
+    req.no_cache = true;
+    client.submit(req).unwrap();
+    let fresh = client.recv_response().unwrap().result.expect("no-cache request succeeds");
+    let canonical = |mut sol: Solution| {
+        sol.search_time_s = 0.0;
+        sol.to_json_string()
+    };
+    assert_eq!(canonical(cold), canonical(fresh), "deterministic searches must agree");
+    let report = client.status().unwrap();
+    assert_eq!(report.cache_hits, 1, "no-cache must not hit: {}", report.render_line());
+    assert_eq!(report.cache_misses, 1, "no-cache skips the lookup: {}", report.render_line());
+
+    server.shutdown();
+    worker.join().unwrap();
+}
+
+/// A Byzantine worker cannot forge its validation record: with
+/// `audit_fraction` 1.0 the server replays every worker-claimed record
+/// through its own differential harness and rejects — and never caches —
+/// a response whose claim does not reproduce.
+#[test]
+fn forged_validation_record_is_rejected_by_the_server_audit() {
+    let (addr, metrics, server) = start_server_with(
+        ServiceConfig { workers: 0, search_threads: 1, ..Default::default() },
+        TcpServerConfig { audit_fraction: 1.0, ..Default::default() },
+    );
+
+    // The forger answers an MLP request with a solution searched on a
+    // *different* model, stapling on a pass=true record it never earned.
+    // Without the server-side replay this would be accepted, cached, and
+    // served to every future client of the same request key.
+    let byzantine = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut rd = stream.try_clone().unwrap();
+        let mut wr = stream;
+        write_message(&mut wr, &Message::Register { name: "byzantine".into() }).unwrap();
+        match read_message(&mut rd, MAX_FRAME_LEN).unwrap() {
+            Some(Message::Registered { .. }) => {}
+            other => panic!("expected registration ack, got {:?}", other.map(|m| m.tag())),
+        }
+        let req = loop {
+            match read_message(&mut rd, MAX_FRAME_LEN).unwrap() {
+                Some(Message::Job(req)) => break req,
+                Some(_) => continue,
+                None => panic!("server closed before dispatching the job"),
+            }
+        };
+        let compiled = CompiledModel::from_kind(ModelKind::Attention, false).unwrap();
+        let mut sol = compiled
+            .partition(&req.mesh)
+            .budget(40)
+            .seed(3)
+            .run()
+            .expect("the forger can run an honest search on the wrong model");
+        sol.validation = Some(ValidationRecord {
+            max_rel_err: 0.0,
+            max_abs_diff: 0.0,
+            collectives: 0,
+            tol: 1e-3,
+            pass: true,
+            seed: req.seed,
+        });
+        let resp =
+            PartitionResponse { id: req.id, request: req, result: Ok(sol), rejected: false };
+        write_message(&mut wr, &Message::Result(resp)).unwrap();
+        // Stay connected until the server tears the socket down, so the
+        // liveness monitor never mistakes this for a crash-and-requeue.
+        while let Ok(Some(_)) = read_message(&mut rd, MAX_FRAME_LEN) {}
+    });
+
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+    let id = client.submit(default_request(ModelKind::Mlp, Method::Toast)).unwrap();
+    let resp = client.recv_response().unwrap();
+    assert_eq!(resp.id, id);
+    assert!(resp.rejected, "a forged record must come back rejected");
+    let err = resp.result.expect_err("the forged response must fail, not pass through");
+    assert!(format!("{err:#}").contains("audit rejected"), "{err:#}");
+
+    let report = client.status().unwrap();
+    assert_eq!(report.audited, 1, "{}", report.render_line());
+    assert_eq!(report.audit_rejected, 1, "{}", report.render_line());
+    assert_eq!(report.completed, 0, "{}", report.render_line());
+    assert_eq!(report.failed, 1, "{}", report.render_line());
+    assert_eq!(metrics.report().audit_rejected, 1);
+    server.shutdown();
+    byzantine.join().unwrap();
+}
+
+/// With an admission bound configured, a full queue refuses socket
+/// submissions with a structured, typed `overloaded` error — and once
+/// the queue drains, the same client's retry is accepted.
+#[test]
+fn overloaded_submission_is_refused_and_accepted_after_draining() {
+    let (addr, _metrics, server) = start_server_with(
+        ServiceConfig { workers: 0, search_threads: 1, max_queue: 1, ..Default::default() },
+        TcpServerConfig::default(),
+    );
+
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+    let mut req = default_request(ModelKind::Mlp, Method::Manual);
+    req.budget = 40;
+    let first = client.submit(req.clone()).unwrap();
+
+    // No worker is connected, so the first request sits in the queue and
+    // a second, distinct submission hits the bound.
+    let mut retry = req.clone();
+    retry.seed = 99;
+    let err = client.submit(retry.clone()).expect_err("the admission bound must refuse");
+    let overloaded = err.downcast_ref::<Overloaded>().expect("typed overload error");
+    assert_eq!(overloaded.queued, 1);
+    assert_eq!(overloaded.limit, 1);
+    assert!(format!("{err:#}").contains("overloaded"), "{err:#}");
+
+    // A worker drains the queue...
+    let worker = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        run_worker_on(stream, &deterministic_worker("drainer")).unwrap();
+    });
+    let resp = client.recv_response().unwrap();
+    assert_eq!(resp.id, first);
+    assert!(resp.result.expect("first request completes").validation.expect("verified").pass);
+
+    // ...and the refused request is accepted on retry.
+    let id = client.submit(retry).unwrap();
+    let resp = client.recv_response().unwrap();
+    assert_eq!(resp.id, id);
+    assert!(resp.result.expect("retried request completes").validation.is_some());
+
+    let report = client.status().unwrap();
+    assert_eq!(report.overloaded, 1, "{}", report.render_line());
+    assert_eq!(report.completed, 2, "{}", report.render_line());
+    server.shutdown();
+    worker.join().unwrap();
+}
+
+/// A capacity-2 worker that dies with two pipelined jobs in flight gets
+/// BOTH requeued — each exactly once — a survivor completes them, and
+/// the requeue ledger is empty afterwards.
+#[test]
+fn multi_job_worker_death_requeues_every_in_flight_job_exactly_once() {
+    let (addr, metrics, server) = start_server_with(
+        ServiceConfig { workers: 0, search_threads: 1, ..Default::default() },
+        TcpServerConfig {
+            capacity: 2,
+            dead_after: Duration::from_millis(1500),
+            ..Default::default()
+        },
+    );
+
+    // A crasher that accepts both pipelined jobs before dying.
+    let crasher = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut rd = stream.try_clone().unwrap();
+        let mut wr = stream;
+        write_message(&mut wr, &Message::Register { name: "crasher".into() }).unwrap();
+        match read_message(&mut rd, MAX_FRAME_LEN).unwrap() {
+            Some(Message::Registered { .. }) => {}
+            other => panic!("expected registration ack, got {:?}", other.map(|m| m.tag())),
+        }
+        let mut got = Vec::new();
+        while got.len() < 2 {
+            match read_message(&mut rd, MAX_FRAME_LEN).unwrap() {
+                Some(Message::Job(req)) => got.push(req.id),
+                Some(_) => continue,
+                None => panic!("server closed before pipelining both jobs"),
+            }
+        }
+        got
+    });
+
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+    let mut req1 = default_request(ModelKind::Mlp, Method::Toast);
+    req1.budget = 60;
+    let mut req2 = default_request(ModelKind::Mlp, Method::Manual);
+    req2.budget = 60;
+    let id1 = client.submit(req1).unwrap();
+    let id2 = client.submit(req2).unwrap();
+
+    // Capacity 2 pipelines both jobs onto the one connection; then it
+    // dies with both in flight.
+    let mut dispatched = crasher.join().unwrap();
+    dispatched.sort_unstable();
+    let mut expected = vec![id1, id2];
+    expected.sort_unstable();
+    assert_eq!(dispatched, expected, "both jobs must be in flight on the crasher");
+
+    let survivor = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        run_worker_on(stream, &deterministic_worker("survivor")).unwrap();
+    });
+
+    let mut seen = Vec::new();
+    for _ in 0..2 {
+        let resp = client.recv_response().unwrap();
+        assert!(resp.result.expect("completed by the survivor").validation.is_some());
+        seen.push(resp.id);
+    }
+    seen.sort_unstable();
+    assert_eq!(seen, expected, "every in-flight job completes after the requeue");
+
+    let report = client.status().unwrap();
+    assert_eq!(report.requeued, 2, "each job requeued exactly once: {}", report.render_line());
+    assert_eq!(report.completed, 2, "{}", report.render_line());
+    assert_eq!(report.failed, 0, "{}", report.render_line());
+    assert_eq!(report.queued, 0, "{}", report.render_line());
+    assert_eq!(report.in_flight, 0, "{}", report.render_line());
+    assert_eq!(metrics.report().requeued, 2);
+    assert_eq!(server.pending_requeue_entries(), 0, "ledger clears on completion");
+    server.shutdown();
+    survivor.join().unwrap();
 }
