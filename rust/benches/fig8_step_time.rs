@@ -23,16 +23,17 @@ fn scale_from_env() -> BenchScale {
 fn main() {
     let scale = scale_from_env();
     let models = ModelKind::paper_eval_set();
-    println!("fig8: step time, scale {scale:?}, models {:?}", models.map(|m| m.name()));
+    let names: Vec<_> = models.iter().map(|m| m.name()).collect();
+    println!("fig8: step time, scale {scale:?}, models {names:?}");
     let t0 = std::time::Instant::now();
-    let rows = run_grid(scale, &models, &HardwareKind::all(), &Method::all());
+    let rows = run_grid(scale, models, &HardwareKind::all(), &Method::all());
     println!("grid completed in {:?}\n", t0.elapsed());
     print!("{}", format_fig8(&rows));
 
     // Shape checks mirroring the paper's claims (§5.2): TOAST never OOMs
     // and is never far behind the best baseline.
     let mut violations = 0;
-    for &mk in &models {
+    for &mk in models {
         for &hw in &HardwareKind::all() {
             let get = |m: Method| {
                 rows.iter().find(|r| r.model == mk && r.hardware == hw && r.method == m)

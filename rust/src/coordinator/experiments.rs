@@ -78,6 +78,13 @@ pub enum Experiment {
     /// [`run_service_load`]); `BENCH_service_load.json` is its committed
     /// baseline.
     ServiceLoad,
+    /// MoE expert-parallel smoke: on meshes with a dedicated expert
+    /// axis, compare the best expert(×data)-sharded plan (routed
+    /// `all_to_all` at dispatch/combine) against the best pure-data
+    /// plan, pin symbolic pricing to the materialize-and-evaluate
+    /// oracle, and differentially validate the winner (see
+    /// [`run_moe_suite`]).
+    Moe,
 }
 
 impl std::str::FromStr for Experiment {
@@ -92,9 +99,10 @@ impl std::str::FromStr for Experiment {
             "pipeline" | "stages" => Ok(Experiment::Pipeline),
             "search-speed" | "search_speed" => Ok(Experiment::SearchSpeed),
             "service-load" | "service_load" => Ok(Experiment::ServiceLoad),
+            "moe" => Ok(Experiment::Moe),
             other => Err(format!(
                 "unknown experiment '{other}' \
-                 (fig8|fig9|fig10|ablations|differential|pipeline|search-speed|service-load)"
+                 (fig8|fig9|fig10|ablations|differential|pipeline|search-speed|service-load|moe)"
             )),
         }
     }
@@ -1474,6 +1482,191 @@ pub fn format_pipeline(rows: &[PipeRow], tol: f32) -> String {
     out
 }
 
+/// One row of the MoE expert-parallel comparison (`bench --experiment
+/// moe`): on a mesh whose first axis is a dedicated expert axis, the
+/// best expert(×data)-sharded plan against the best pure-data plan.
+#[derive(Clone, Debug)]
+pub struct MoeRow {
+    pub mesh: String,
+    /// Priced relative cost of the expert(×data) plan.
+    pub expert_rel: f64,
+    /// Priced relative cost of the pure-data plan.
+    pub data_rel: f64,
+    /// `all_to_all` count in the partitioned expert plan (the routed
+    /// dispatch/combine reshards).
+    pub all_to_all: usize,
+    /// Relative gap between the expert plan's symbolic price and the
+    /// materialize-and-evaluate oracle (gated at 1e-6).
+    pub price_gap: f64,
+    /// Differential error of the expert plan on the SPMD simulator.
+    pub max_rel_err: f64,
+    pub pass: bool,
+    pub error: Option<String>,
+}
+
+/// Run the MoE expert-parallel smoke (tiny scale, forward graph): for a
+/// 1-D `expert` mesh and a 2-D `expert × data` mesh, build the NDA
+/// action space, assemble (a) the cheapest plan that shards the expert
+/// dim (layer-0 `w1` dim 0) on the expert axis — completed with
+/// token-sharding on any remaining axis — and (b) the cheapest pure-data
+/// plan (token dim on every axis that accepts it). The expert plan must
+/// price below the data plan, carry `all_to_all` reshards, agree with
+/// the pricing oracle to 1e-6, and pass the differential gate.
+pub fn run_moe_suite(seed: u64, tol: f32) -> Vec<MoeRow> {
+    use crate::models::moe;
+    let cfg = moe::MoeConfig { training: false, ..moe::MoeConfig::tiny() };
+    let (func, _, _) = moe::forward(&cfg);
+    let nda = crate::nda::Nda::analyze(&func);
+    let meshes = [Mesh::grid(&[("expert", 2)]), Mesh::grid(&[("expert", 2), ("data", 2)])];
+    meshes.iter().map(|mesh| moe_row(&func, &nda, mesh, seed, tol)).collect()
+}
+
+fn moe_row(
+    func: &Func,
+    nda: &crate::nda::Nda,
+    mesh: &Mesh,
+    seed: u64,
+    tol: f32,
+) -> MoeRow {
+    use crate::ir::ValueId;
+    let fail = |err: String| MoeRow {
+        mesh: mesh.describe(),
+        expert_rel: f64::INFINITY,
+        data_rel: f64::INFINITY,
+        all_to_all: 0,
+        price_gap: f64::INFINITY,
+        max_rel_err: f64::INFINITY,
+        pass: false,
+        error: Some(err),
+    };
+    // Stable param layout: x, then (wg, w1, w2, route) per layer.
+    let Some(w1) = func.params.iter().position(|p| p.name == "l0_w1") else {
+        return fail("no l0_w1 param".to_string());
+    };
+    let (w1, x) = (ValueId(w1 as u32), ValueId(0));
+    let model = CostModel::new(crate::mesh::HardwareProfile::new(HardwareKind::A100));
+    let actions = crate::search::build_actions(
+        func,
+        nda,
+        mesh,
+        &crate::search::ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+    );
+    let shards = |a: &Action, v: ValueId, d: usize| a.assignment.contains(&(v, d));
+    // Greedily extend `spec` with the first applicable token-sharding
+    // action on each axis in `axes` (pure data parallelism).
+    let add_data = |spec: &mut ShardingSpec, axes: &[usize]| {
+        for &ax in axes {
+            for a in actions.iter().filter(|a| a.axis == ax && shards(a, x, 1)) {
+                if spec.check_assignment(func, mesh, &a.assignment, a.axis)
+                    && spec.apply_assignment(func, mesh, &a.assignment, a.axis).is_ok()
+                {
+                    break;
+                }
+            }
+        }
+    };
+    let seval = SymbolicEvaluator::new(func, mesh, &model);
+    let base = match seval.evaluate(&ShardingSpec::unsharded(func)) {
+        Ok((c, _)) => c,
+        Err(e) => return fail(format!("base evaluation failed: {e:#}")),
+    };
+    let data_axes: Vec<usize> = (1..mesh.axes.len()).collect();
+    let all_axes: Vec<usize> = (0..mesh.axes.len()).collect();
+
+    // Expert plan: each expert-dim resolution on axis 0, completed with
+    // token sharding on the remaining axes; keep the cheapest.
+    let mut expert: Option<(f64, ShardingSpec)> = None;
+    for a in actions.iter().filter(|a| a.axis == 0 && shards(a, w1, 0)) {
+        let mut spec = ShardingSpec::unsharded(func);
+        if !spec.check_assignment(func, mesh, &a.assignment, a.axis)
+            || spec.apply_assignment(func, mesh, &a.assignment, a.axis).is_err()
+        {
+            continue;
+        }
+        add_data(&mut spec, &data_axes);
+        let Ok((c, _)) = seval.evaluate(&spec) else { continue };
+        let rel = model.relative(&c, &base);
+        if expert.as_ref().map_or(true, |(best, _)| rel < *best) {
+            expert = Some((rel, spec));
+        }
+    }
+    let Some((expert_rel, expert_spec)) = expert else {
+        return fail("no applicable expert-sharding action on the expert axis".to_string());
+    };
+
+    // Pure-data plan: token sharding on every axis that accepts it.
+    let mut data_spec = ShardingSpec::unsharded(func);
+    add_data(&mut data_spec, &all_axes);
+    let data_rel = match seval.evaluate(&data_spec) {
+        Ok((c, _)) => model.relative(&c, &base),
+        Err(e) => return fail(format!("data plan evaluation failed: {e:#}")),
+    };
+
+    // Pin the symbolic price to the materialize-and-evaluate oracle.
+    let (local, stats) = match partition(func, &expert_spec, mesh) {
+        Ok(r) => r,
+        Err(e) => return fail(format!("expert plan partition failed: {e:#}")),
+    };
+    let oracle_rel = model.relative(&model.evaluate(&local, mesh), &base);
+    let price_gap = (expert_rel - oracle_rel).abs() / oracle_rel.max(1e-12);
+
+    let report = match crate::runtime::diff::differential_test(func, &expert_spec, mesh, seed) {
+        Ok(r) => r,
+        Err(e) => return fail(format!("differential execution failed: {e:#}")),
+    };
+    let max_rel_err = report.max_rel_err as f64;
+    MoeRow {
+        mesh: mesh.describe(),
+        expert_rel,
+        data_rel,
+        all_to_all: stats.all_to_all,
+        price_gap,
+        max_rel_err,
+        pass: expert_rel < data_rel
+            && stats.all_to_all >= 2
+            && price_gap <= 1e-6
+            && max_rel_err as f32 <= tol,
+        error: None,
+    }
+}
+
+/// Render the MoE suite as a table.
+pub fn format_moe(rows: &[MoeRow], tol: f32) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "== MoE expert parallelism (expert(xdata) plan vs pure-data plan) ==");
+    let _ = writeln!(
+        out,
+        "{:<22} {:>12} {:>12} {:>6} {:>12} {:>12} {:>6}",
+        "mesh", "expert_rel", "data_rel", "a2a", "price_gap", "max_rel_err", "ok"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<22} {:>12.4} {:>12.4} {:>6} {:>12.3e} {:>12.3e} {:>6}",
+            r.mesh,
+            r.expert_rel,
+            r.data_rel,
+            r.all_to_all,
+            r.price_gap,
+            r.max_rel_err,
+            if r.pass { "pass" } else { "FAIL" }
+        );
+        if let Some(err) = &r.error {
+            let _ = writeln!(out, "    ^ {err}");
+        }
+    }
+    let failed = rows.iter().filter(|r| !r.pass).count();
+    let _ = writeln!(
+        out,
+        "{} meshes, {} failed (exec tol {:.1e}, price tol 1e-6)",
+        rows.len(),
+        failed,
+        tol
+    );
+    out
+}
+
 /// Render the differential suite as a table. `tol` must be the
 /// tolerance the rows' pass/FAIL column was computed with.
 pub fn format_differential(rows: &[DiffRow], tol: f32) -> String {
@@ -1657,6 +1850,19 @@ mod tests {
             format_differential(&rows, DEFAULT_REL_TOL)
         );
         assert!(format_differential(&rows, DEFAULT_REL_TOL).contains("differential validation"));
+    }
+
+    #[test]
+    fn moe_suite_expert_plan_beats_data_plan() {
+        use crate::runtime::diff::DEFAULT_REL_TOL;
+        let rows = run_moe_suite(13, DEFAULT_REL_TOL);
+        assert_eq!(rows.len(), 2);
+        assert!(
+            rows.iter().all(|r| r.pass),
+            "moe suite failed:\n{}",
+            format_moe(&rows, DEFAULT_REL_TOL)
+        );
+        assert!(format_moe(&rows, DEFAULT_REL_TOL).contains("expert parallelism"));
     }
 
     #[test]

@@ -89,7 +89,14 @@
 //!   from sessions via [`api::Partitioner::stages`] and from the CLI via
 //!   `toast partition --stages`.
 //! * [`models`] — IR builders for the paper's evaluation models (§5.1):
-//!   T2B/T7B Gemma-like transformers, GNS, U-Net, ITX.
+//!   T2B/T7B Gemma-like transformers, GNS, U-Net, ITX — plus a
+//!   mixture-of-experts transformer ([`models::moe`]) whose top-k
+//!   routing is approximated as a static capacity-factor dispatch
+//!   through a one-hot `DotGeneral`, so the NDA derives the expert dim
+//!   as a shardable factor group ([`nda::rules`]'s routed-dot rule ties
+//!   it to the token-group dim) and the partitioner realizes expert
+//!   parallelism as routed `all_to_all` reshards at dispatch and
+//!   combine.
 //! * [`runtime`] — the two-executor correctness subsystem: the SPMD
 //!   simulation runtime ([`runtime::spmd`]) executes partitioned modules
 //!   on simulated device states with real collective semantics, and the

@@ -24,7 +24,9 @@
 //!   wall time; `--check` gates against `BENCH_search_speed.json`), or
 //!   the service-load campaign (service-load: req/sec and cold-search vs
 //!   cache-hit p50/p99 latency; `--check` gates against
-//!   `BENCH_service_load.json`).
+//!   `BENCH_service_load.json`), or the MoE expert-parallel smoke (moe:
+//!   expert(×data) vs pure-data plan pricing with routed `all_to_all`
+//!   and differential gates).
 //! * `models`    — list the model zoo with parameter counts.
 //! * `serve`     — run the trust-but-verify partition service: the
 //!   in-process demo by default, or `--listen HOST:PORT` to serve the
@@ -122,7 +124,7 @@ fn usage() {
     eprintln!(
         "toast — auto-partitioning via named-dimension analysis + MCTS
 USAGE: toast <command> [--flag value]...
-  analyze    --model <mlp|attention|t2b|t7b|gns|unet|itx> [--paper]
+  analyze    --model <mlp|attention|t2b|t7b|gns|unet|itx|moe> [--paper]
   partition  --model M --mesh 4x2 --hw <a100|p100|tpuv3>
              [--method <toast|alpa|automap|manual>] [--budget N] [--seed N]
              [--stages K[,K...]] [--microbatches M] [--require-stages]
@@ -134,8 +136,11 @@ USAGE: toast <command> [--flag value]...
   search     --model M --mesh 2x2 [--budget N] [--validate-best]
   validate   --model M --mesh 2x2 [--budget N]
   bench      --experiment <fig8|fig9|fig10|ablations|differential|pipeline
-                           |search-speed|service-load>
+                           |search-speed|service-load|moe>
              [--scale tiny|bench|paper] [--json]
+             (moe compares expert(xdata) vs pure-data plans on dedicated
+              expert-axis meshes, gates the routed all_to_all count, the
+              1e-6 pricing gap, and the differential check)
              (search-speed and service-load also take [--out report.json]
               and [--check [baseline.json]]: search-speed measures
               evaluator throughput, legacy-vs-optimized search nodes/sec,
@@ -539,6 +544,15 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             let failed = rows.iter().filter(|r| !r.pass).count();
             anyhow::ensure!(failed == 0, "{failed} pipeline rows failed");
         }
+        exp::Experiment::Moe => {
+            // The MoE smoke always runs interpreter-sized: it compares
+            // priced plans and differentially validates the winner.
+            let tol = toast::runtime::diff::DEFAULT_REL_TOL;
+            let rows = exp::run_moe_suite(17, tol);
+            print!("{}", exp::format_moe(&rows, tol));
+            let failed = rows.iter().filter(|r| !r.pass).count();
+            anyhow::ensure!(failed == 0, "{failed} moe rows failed");
+        }
         exp::Experiment::SearchSpeed => {
             let report = exp::run_search_speed(scale);
             if json {
@@ -678,7 +692,7 @@ fn run_ablations(scale: exp::BenchScale) -> anyhow::Result<()> {
 
 fn cmd_models() -> anyhow::Result<()> {
     println!("{:<12} {:>10} {:>10}  {}", "model", "instrs", "params", "notes");
-    for kind in ModelKind::all() {
+    for &kind in ModelKind::all() {
         let f = kind.build_scaled();
         let paper_note = match kind {
             ModelKind::T2B => "Gemma1-2B shapes (§5.1)",
@@ -688,6 +702,7 @@ fn cmd_models() -> anyhow::Result<()> {
             ModelKind::Itx => "KV-cache MQA decode (§5.1)",
             ModelKind::Mlp => "paper Figure 2 example",
             ModelKind::Attention => "paper Figure 5 example",
+            ModelKind::Moe => "capacity-factor MoE (routed all_to_all)",
         };
         println!("{:<12} {:>10} {:>10}  {}", kind.name(), f.instrs.len(), f.params.len(), paper_note);
     }
@@ -754,7 +769,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         if verify { "on" } else { "off" }
     );
     let mut n = 0;
-    for kind in ModelKind::paper_eval_set() {
+    for &kind in ModelKind::paper_eval_set() {
         for method in [Method::Toast, Method::Manual] {
             let mut req = service::default_request(kind, method);
             req.budget = 100;

@@ -1,7 +1,22 @@
 //! The evaluation model zoo (§5.1): Gemma-like transformers (T2B/T7B), a
 //! graph network simulator (GNS), a U-Net, and an inference-optimized
 //! transformer with a KV cache (ITX) — plus the paper's worked examples
-//! (two-layer MLP, simplified attention).
+//! (two-layer MLP, simplified attention) and a mixture-of-experts
+//! transformer (MoE) that extends the zoo beyond the paper's eval set.
+//!
+//! | kind | paper mapping | scaled | notes |
+//! |------|---------------|--------|-------|
+//! | `mlp` | §2 worked example | tiny | two-layer MLP |
+//! | `attention` | §2 worked example | tiny | simplified attention |
+//! | `T2B` / `T7B` | §5.1 eval set | tiny | Gemma-like training steps |
+//! | `GNS` | §5.1 eval set | tiny | graph network simulator |
+//! | `U-Net` | §5.1 eval set | tiny | conv-ish encoder/decoder |
+//! | `ITX` | §5.1 eval set | tiny | KV-cache inference step |
+//! | `MoE` | beyond §5.1 (ROADMAP item 1) | tiny | expert-parallel: top-k
+//!   routing approximated as a static capacity-factor dispatch through a
+//!   one-hot `DotGeneral`, so routing stays static, the IR stays dense,
+//!   and the oracle stays exact; sharding the derived expert dim emits
+//!   routed `all_to_all` reshards (see [`moe`]) |
 //!
 //! Each model is an IR *builder*: analysis and cost estimation never
 //! materialize tensors, so the paper-size configurations (2B/7B/...)
@@ -16,6 +31,7 @@
 pub mod gns;
 pub mod itx;
 pub mod mlp;
+pub mod moe;
 pub mod training;
 pub mod transformer;
 pub mod unet;
@@ -34,6 +50,7 @@ pub enum ModelKind {
     Gns,
     UNet,
     Itx,
+    Moe,
 }
 
 impl ModelKind {
@@ -46,11 +63,14 @@ impl ModelKind {
             ModelKind::Gns => "GNS",
             ModelKind::UNet => "U-Net",
             ModelKind::Itx => "ITX",
+            ModelKind::Moe => "MoE",
         }
     }
 
-    pub fn all() -> [ModelKind; 7] {
-        [
+    /// Every model in the zoo. Returns a slice (not a fixed-length
+    /// array) so adding a model can never silently miss a sweep site.
+    pub fn all() -> &'static [ModelKind] {
+        &[
             ModelKind::Mlp,
             ModelKind::Attention,
             ModelKind::T2B,
@@ -58,12 +78,14 @@ impl ModelKind {
             ModelKind::Gns,
             ModelKind::UNet,
             ModelKind::Itx,
+            ModelKind::Moe,
         ]
     }
 
-    /// The paper's evaluation set (§5.1).
-    pub fn paper_eval_set() -> [ModelKind; 5] {
-        [ModelKind::T2B, ModelKind::T7B, ModelKind::Gns, ModelKind::UNet, ModelKind::Itx]
+    /// The paper's evaluation set (§5.1). MoE is deliberately excluded:
+    /// it extends the zoo beyond the paper's figures.
+    pub fn paper_eval_set() -> &'static [ModelKind] {
+        &[ModelKind::T2B, ModelKind::T7B, ModelKind::Gns, ModelKind::UNet, ModelKind::Itx]
     }
 
     /// Build the model at paper-scale configuration (IR only — cheap).
@@ -76,6 +98,7 @@ impl ModelKind {
             ModelKind::Gns => gns::training_step(&gns::GnsConfig::paper()),
             ModelKind::UNet => unet::training_step(&unet::UNetConfig::paper()),
             ModelKind::Itx => itx::inference_step(&itx::ItxConfig::paper()),
+            ModelKind::Moe => moe::training_step(&moe::MoeConfig::paper()),
         }
     }
 
@@ -93,6 +116,7 @@ impl ModelKind {
             ModelKind::Gns => gns::training_step(&gns::GnsConfig::tiny()),
             ModelKind::UNet => unet::training_step(&unet::UNetConfig::tiny()),
             ModelKind::Itx => itx::inference_step(&itx::ItxConfig::tiny()),
+            ModelKind::Moe => moe::training_step(&moe::MoeConfig::tiny()),
         }
     }
 }
@@ -108,6 +132,7 @@ impl std::str::FromStr for ModelKind {
             "gns" => Ok(ModelKind::Gns),
             "unet" | "u-net" => Ok(ModelKind::UNet),
             "itx" => Ok(ModelKind::Itx),
+            "moe" => Ok(ModelKind::Moe),
             other => Err(format!("unknown model '{other}'")),
         }
     }

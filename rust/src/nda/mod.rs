@@ -121,6 +121,16 @@ impl Nda {
                     identities.push((this_uses[oi0][od0], this_uses[oi1][od1]));
                 }
             }
+            // Routed-dot (MoE) identities: tie the mask's expert dim to
+            // its token-group dim at this use. Entering `I` (not just
+            // `I ∪ M`) is what makes expert-parallel layouts reachable:
+            // the two dims join one rules-root class, so same-color dim
+            // pairs at the dispatch/combine occurrences stop registering
+            // as conflicts and the expert block's resolutions decouple
+            // from the gating chain's.
+            for &((oi0, od0), (oi1, od1)) in &rule.routing_identities {
+                identities.push((this_uses[oi0][od0], this_uses[oi1][od1]));
+            }
             debug_assert_eq!(ii, use_dims.len());
             use_dims.push(this_uses);
             def_dims.push(res_names);
@@ -303,7 +313,7 @@ impl Nda {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::{FuncBuilder, TensorType};
+    use crate::ir::{CompareOp, DType, FuncBuilder, TensorType};
 
     /// Paper Figure 2a / Figure 4.
     fn mlp() -> Func {
@@ -428,5 +438,50 @@ mod tests {
         assert!(nda.significant_colors(10).is_empty());
         assert_eq!(nda.significant_colors(1).len(), 4);
         assert_eq!(nda.significant_colors(4).len(), 2); // B and U
+    }
+
+    #[test]
+    fn routed_dispatch_merges_expert_and_group_into_one_color() {
+        // The MoE dispatch pattern: a one-hot mask contracted against the
+        // token dim. The routing identity must merge the expert dim (E)
+        // with the token-group dim (G) into one color — reaching layouts
+        // where tokens arrive grouped and leave expert-sharded — without
+        // registering a conflict at the dispatch occurrence itself.
+        let (e, g, c, s, d) = (4i64, 4, 2, 8, 16);
+        let mut b = FuncBuilder::new("moe_dispatch");
+        let x = b.param("x", TensorType::f32(vec![g, s, d]));
+        let route = b.param("route", TensorType::new(vec![e, g, c], DType::I32));
+        let io = b.iota(3, TensorType::new(vec![e, g, c, s], DType::I32));
+        let rb = b.broadcast(route, &[e, g, c, s], &[0, 1, 2]);
+        let cmp = b.compare(CompareOp::Eq, io, rb);
+        let ones = b.constant(1.0, TensorType::f32(vec![e, g, c, s]));
+        let zeros = b.constant(0.0, TensorType::f32(vec![e, g, c, s]));
+        let m = b.select(cmp, ones, zeros);
+        // xd[g,e,c,d] = sum_s m[e,g,c,s] x[g,s,d]
+        let xd = b.dot_general(m, x, &[1], &[0], &[3], &[1]);
+        let f = b.build(vec![xd]);
+        let nda = Nda::analyze(&f);
+
+        // E and G are one color across the pattern.
+        let merged = nda.color_of(x, 0);
+        assert_eq!(nda.color_of(route, 0), merged, "route's expert dim joins the group color");
+        assert_eq!(nda.color_of(m, 0), merged);
+        assert_eq!(nda.color_of(m, 1), merged);
+        assert_eq!(nda.color_of(xd, 0), merged);
+        assert_eq!(nda.color_of(xd, 1), merged);
+
+        // The identity lives in `I`, so the two same-color dims of the
+        // dispatch result share a rules-root class: no conflict there.
+        let has_def_conflict = nda.conflicts.conflicts.iter().any(|cf| {
+            cf.occurrences.iter().any(|o| matches!(o, Occurrence::Def(v) if *v == xd))
+        });
+        assert!(!has_def_conflict, "dispatch result must not be a conflict site");
+
+        // An action on the merged color still resolves xd to exactly one
+        // sharded dim.
+        let assign = nda.sharding_assignment(merged, 0);
+        let xd_dims: Vec<usize> =
+            assign.iter().filter(|&&(v, _)| v == xd).map(|&(_, d)| d).collect();
+        assert_eq!(xd_dims.len(), 1, "one sharded dim per value: {xd_dims:?}");
     }
 }

@@ -15,7 +15,7 @@
 //! This mirrors how production partitioners (GSPMD, PartIR, Shardy) keep
 //! one op-semantics registry for both propagation and lowering.
 
-use crate::ir::{Func, Instr, OpKind, ReduceKind};
+use crate::ir::{BinaryOp, CompareOp, Func, Instr, OpKind, ReduceKind, ValueId};
 
 /// An operand dimension: `(operand index, dimension index)`.
 pub type OperandDim = (usize, usize);
@@ -40,6 +40,17 @@ pub struct OpRule {
     /// Operand dims that *must* be replicated (gathered) before the op:
     /// everything not mentioned in `maps` or `contracts`.
     pub gather_operand_dims: Vec<OperandDim>,
+    /// NDA-only identities for *routed* (mixture-of-experts) dots: pairs
+    /// of operand dims tied because a one-hot routing mask makes the
+    /// expert dim and the token-group dim interchangeable sharding
+    /// targets — sharding either one partitions the same token traffic,
+    /// and realizing a layout change between them is exactly an
+    /// `all_to_all`. Consumed exclusively by [`crate::nda::Nda::analyze`]
+    /// when building identities `I`; the partitioner derives sharding
+    /// requirements from `maps`/`contracts` alone, so these never change
+    /// emission or pricing — only which layouts the analysis exposes as
+    /// one color with extra conflict resolutions.
+    pub routing_identities: Vec<(OperandDim, OperandDim)>,
 }
 
 impl OpRule {
@@ -101,6 +112,47 @@ pub fn op_rule(func: &Func, instr: &Instr) -> OpRule {
             debug_assert_eq!(r, out_rank);
             for (&lc, &rc) in lhs_contract.iter().zip(rhs_contract) {
                 rule.contracts.push((vec![(0, lc), (1, rc)], ReduceKind::Add));
+            }
+            // Routed (mixture-of-experts) dots: when an operand is a
+            // one-hot routing mask, the mask ties its token-group batch
+            // dim to the equal-sized expert dim. Dispatch contracts the
+            // one-hot (token) dim and leaves the expert dim free;
+            // combine maps the one-hot dim through and contracts the
+            // expert dim. Either way the tie is between two dims of the
+            // mask operand itself.
+            for mi in 0..2usize {
+                let Some(k) = routing_mask_onehot_dim(func, instr.operands[mi]) else {
+                    continue;
+                };
+                let (mask_batch, mask_contract) = if mi == 0 {
+                    (lhs_batch, lhs_contract)
+                } else {
+                    (rhs_batch, rhs_contract)
+                };
+                let mshape = &func.ty(instr.operands[mi]).shape;
+                for &bd in mask_batch {
+                    if bd == k {
+                        continue;
+                    }
+                    let tied = if mask_contract.contains(&k) {
+                        // Dispatch: one-hot dim contracted; the expert dim
+                        // is the equal-sized non-batch, non-contract dim.
+                        (0..mshape.len()).find(|&d| {
+                            d != k
+                                && d != bd
+                                && !mask_batch.contains(&d)
+                                && !mask_contract.contains(&d)
+                                && mshape[d] == mshape[bd]
+                        })
+                    } else {
+                        // Combine: one-hot dim maps through; the expert
+                        // dim is the equal-sized contracted dim.
+                        mask_contract.iter().copied().find(|&d| d != k && mshape[d] == mshape[bd])
+                    };
+                    if let Some(e) = tied {
+                        rule.routing_identities.push(((mi, e), (mi, bd)));
+                    }
+                }
             }
         }
         OpKind::Transpose { perm } => {
@@ -216,6 +268,52 @@ pub fn op_rule(func: &Func, instr: &Instr) -> OpRule {
     rule
 }
 
+/// The one-hot dimension of a *routing mask*, if `v` is one.
+///
+/// A routing mask is the static capacity-factor dispatch tensor of a
+/// mixture-of-experts layer, built in-IR as
+///
+/// ```text
+/// select(compare(Eq, iota(k), broadcast(route)), ones, zeros)
+/// ```
+///
+/// so it is one-hot along dimension `k` by construction (or all-zero on
+/// `k`-rows of dropped tokens — the broadcast of the integer route table
+/// must *not* cover `k`). The mask may be scaled elementwise by gating
+/// probabilities — `mul(mask, probs)`, either operand order — which is
+/// how the combine mask (and the masks appearing in backward-pass dots)
+/// arrive here, so `Mul` recurses into both operands.
+fn routing_mask_onehot_dim(func: &Func, v: ValueId) -> Option<usize> {
+    let def = func.def(v)?;
+    match &def.kind {
+        OpKind::Binary(BinaryOp::Mul) => routing_mask_onehot_dim(func, def.operands[0])
+            .or_else(|| routing_mask_onehot_dim(func, def.operands[1])),
+        OpKind::Select => onehot_compare_dim(func, def.operands[0]),
+        _ => None,
+    }
+}
+
+/// `compare(Eq, iota(k), broadcast(..))` (either operand order) where
+/// the broadcast's covered output dims exclude `k` → `Some(k)`.
+fn onehot_compare_dim(func: &Func, v: ValueId) -> Option<usize> {
+    let def = func.def(v)?;
+    let OpKind::Compare(CompareOp::Eq) = def.kind else {
+        return None;
+    };
+    for (a, b) in [(0usize, 1usize), (1, 0)] {
+        if let (
+            Some(Instr { kind: OpKind::Iota { dim }, .. }),
+            Some(Instr { kind: OpKind::Broadcast { dims }, .. }),
+        ) = (func.def(def.operands[a]), func.def(def.operands[b]))
+        {
+            if !dims.contains(dim) {
+                return Some(*dim);
+            }
+        }
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -311,5 +409,82 @@ mod tests {
             vec![(0, vec![(0, 0), (1, 0)]), (1, vec![(0, 1)]), (2, vec![(1, 1)])]
         );
         assert_eq!(rule.contracts[0].0, vec![(0, 2), (1, 2)]);
+        // A plain batched dot is not a routed dot.
+        assert!(rule.routing_identities.is_empty());
+    }
+
+    /// The MoE one-hot routing mask: `[e, g, c, s]`, one-hot over `s`.
+    fn onehot_mask(
+        b: &mut FuncBuilder,
+        route: crate::ir::ValueId,
+        e: i64,
+        g: i64,
+        c: i64,
+        s: i64,
+    ) -> crate::ir::ValueId {
+        let io = b.iota(3, TensorType::new(vec![e, g, c, s], DType::I32));
+        let rb = b.broadcast(route, &[e, g, c, s], &[0, 1, 2]);
+        let cmp = b.compare(CompareOp::Eq, io, rb);
+        let ones = b.constant(1.0, TensorType::f32(vec![e, g, c, s]));
+        let zeros = b.constant(0.0, TensorType::f32(vec![e, g, c, s]));
+        b.select(cmp, ones, zeros)
+    }
+
+    #[test]
+    fn routed_dispatch_dot_ties_expert_to_group() {
+        let (e, g, c, s, d) = (4i64, 4, 2, 8, 16);
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![g, s, d]));
+        let route = b.param("route", TensorType::new(vec![e, g, c], DType::I32));
+        let mask = onehot_mask(&mut b, route, e, g, c, s);
+        // dispatch: xd[g,e,c,d] = sum_s mask[e,g,c,s] x[g,s,d]
+        let xd = b.dot_general(mask, x, &[1], &[0], &[3], &[1]);
+        let f = b.build(vec![xd]);
+        let rule = op_rule(&f, f.instrs.last().unwrap());
+        // the mask's expert dim (0) is tied to its group batch dim (1)
+        assert_eq!(rule.routing_identities, vec![((0, 0), (0, 1))]);
+        // ordinary maps and contracts are untouched by the mask
+        assert_eq!(rule.contracts.len(), 1);
+        assert_eq!(rule.contracts[0].0, vec![(0, 3), (1, 1)]);
+        assert_eq!(rule.map_for_result_dim(0), Some(&[(0, 1), (1, 0)][..]));
+    }
+
+    #[test]
+    fn routed_combine_dot_ties_expert_to_group_through_mul() {
+        let (e, g, c, s, d) = (4i64, 4, 2, 8, 16);
+        let mut b = FuncBuilder::new("f");
+        let h2 = b.param("h2", TensorType::f32(vec![e, g, c, d]));
+        let route = b.param("route", TensorType::new(vec![e, g, c], DType::I32));
+        let mask = onehot_mask(&mut b, route, e, g, c, s);
+        // gate-prob scaling wraps the mask in a mul (constant first, so
+        // detection must recurse past a non-mask operand)
+        let scale = b.constant(0.5, TensorType::f32(vec![e, g, c, s]));
+        let comb = b.mul(scale, mask);
+        // combine: y[g,s,d] = sum_{e,c} comb[e,g,c,s] h2[e,g,c,d]
+        let y = b.dot_general(comb, h2, &[1], &[1], &[0, 2], &[0, 2]);
+        let f = b.build(vec![y]);
+        let rule = op_rule(&f, f.instrs.last().unwrap());
+        // one-hot dim s maps through; the contracted expert dim (0) is
+        // tied to the group batch dim (1)
+        assert_eq!(rule.routing_identities, vec![((0, 0), (0, 1))]);
+        assert_eq!(rule.contracts.len(), 2);
+    }
+
+    #[test]
+    fn select_without_iota_compare_is_not_a_routing_mask() {
+        let (e, g, c, s, d) = (4i64, 4, 2, 8, 16);
+        let mut b = FuncBuilder::new("f");
+        let x = b.param("x", TensorType::f32(vec![g, s, d]));
+        let route = b.param("route", TensorType::new(vec![e, g, c], DType::I32));
+        // pred compares two broadcasts — no iota, so no one-hot structure
+        let rb = b.broadcast(route, &[e, g, c, s], &[0, 1, 2]);
+        let cmp = b.compare(CompareOp::Eq, rb, rb);
+        let ones = b.constant(1.0, TensorType::f32(vec![e, g, c, s]));
+        let zeros = b.constant(0.0, TensorType::f32(vec![e, g, c, s]));
+        let m = b.select(cmp, ones, zeros);
+        let xd = b.dot_general(m, x, &[1], &[0], &[3], &[1]);
+        let f = b.build(vec![xd]);
+        let rule = op_rule(&f, f.instrs.last().unwrap());
+        assert!(rule.routing_identities.is_empty());
     }
 }

@@ -680,6 +680,85 @@ mod tests {
     }
 
     #[test]
+    fn all_to_all_moe_shapes_on_2d_mesh() {
+        // Routed reshards in MoE shapes: on an expert x data mesh, an
+        // all_to_all along one axis must only mix devices sharing the
+        // other axis' coordinate, for split/concat on distinct dims of a
+        // rank-4 dispatch tensor [G, E, C, D].
+        let (g, e, c, d) = (4usize, 2, 2, 8);
+        let mesh = Mesh::grid(&[("expert", 2), ("data", 2)]);
+        let t = Tensor::randn(vec![g, e, c, d], 77);
+        // expert axis moves G -> E while the data axis stays on D
+        let cur: Vec<Vec<AxisId>> = vec![vec![0], vec![], vec![], vec![1]];
+        let want: Vec<Vec<AxisId>> = vec![vec![], vec![0], vec![], vec![1]];
+        let got = all_to_all(&mesh, 0, 1, 0, &shard_tensor(&t, &cur, &mesh));
+        let expected = shard_tensor(&t, &want, &mesh);
+        for (dev, (a, b)) in got.iter().zip(&expected).enumerate() {
+            assert_eq!(a.shape, b.shape, "device {dev}");
+            assert_eq!(a.data, b.data, "device {dev}");
+        }
+        // data axis moves D -> C while the expert axis stays on G
+        let want2: Vec<Vec<AxisId>> = vec![vec![0], vec![], vec![1], vec![]];
+        let got = all_to_all(&mesh, 1, 2, 3, &shard_tensor(&t, &cur, &mesh));
+        let expected = shard_tensor(&t, &want2, &mesh);
+        for (dev, (a, b)) in got.iter().zip(&expected).enumerate() {
+            assert_eq!(a.shape, b.shape, "device {dev}");
+            assert_eq!(a.data, b.data, "device {dev}");
+        }
+    }
+
+    #[test]
+    fn all_to_all_on_singleton_expert_axis_is_identity() {
+        // An expert axis of size 1 makes the routed reshard a no-op —
+        // the degenerate mesh the partitioner may still emit it on.
+        let mesh = Mesh::grid(&[("expert", 1), ("data", 2)]);
+        let t = Tensor::randn(vec![2, 2, 2, 4], 9);
+        let axes: Vec<Vec<AxisId>> = vec![vec![], vec![], vec![], vec![1]];
+        let shards = shard_tensor(&t, &axes, &mesh);
+        let moved = all_to_all(&mesh, 0, 1, 0, &shards);
+        for (a, b) in moved.iter().zip(&shards) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn moe_dispatch_expert_combine_reshard_chain() {
+        // The expert plan's routed chain on a dispatch tensor
+        // [G, E, C, D]: token-major (G sharded on the expert axis) ->
+        // all_to_all -> expert-major (E sharded) -> device-local expert
+        // compute -> all_to_all -> token-major again. Every element must
+        // land where a full-tensor run puts it, with the data axis
+        // sharding D throughout.
+        let (g, e, c, d) = (4usize, 4, 2, 6);
+        let mesh = Mesh::grid(&[("expert", 2), ("data", 2)]);
+        let t = Tensor::randn(vec![g, e, c, d], 123);
+        let token_major: Vec<Vec<AxisId>> = vec![vec![0], vec![], vec![], vec![1]];
+        let expert_major: Vec<Vec<AxisId>> = vec![vec![], vec![0], vec![], vec![1]];
+        // dispatch reshard: tokens travel to their expert's devices
+        let mut shards = all_to_all(&mesh, 0, 1, 0, &shard_tensor(&t, &token_major, &mesh));
+        let expected = shard_tensor(&t, &expert_major, &mesh);
+        for (dev, (a, b)) in shards.iter().zip(&expected).enumerate() {
+            assert_eq!(a.shape, b.shape, "dispatch, device {dev}");
+            assert_eq!(a.data, b.data, "dispatch, device {dev}");
+        }
+        // expert compute is device-local in the expert-major layout
+        for s in &mut shards {
+            for v in &mut s.data {
+                *v *= 2.0;
+            }
+        }
+        // combine reshard: expert outputs travel back to their tokens
+        let shards = all_to_all(&mesh, 0, 0, 1, &shards);
+        let full = Tensor::new(t.shape.clone(), t.data.iter().map(|v| v * 2.0).collect());
+        let expected = shard_tensor(&full, &token_major, &mesh);
+        for (dev, (a, b)) in shards.iter().zip(&expected).enumerate() {
+            assert_eq!(a.shape, b.shape, "combine, device {dev}");
+            assert_eq!(a.data, b.data, "combine, device {dev}");
+        }
+    }
+
+    #[test]
     fn singleton_axes_are_harmless() {
         // A mesh axis of size 1 makes every collective an identity (or a
         // trivial slice); shard/unshard must round-trip too.

@@ -42,7 +42,7 @@ fn summarize(kind: ModelKind) -> BTreeMap<&'static str, usize> {
 
 fn render() -> String {
     let mut out = String::new();
-    for kind in ModelKind::all() {
+    for &kind in ModelKind::all() {
         let m = summarize(kind);
         let _ = write!(out, "{}", kind.name());
         for key in METRICS {

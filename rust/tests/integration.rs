@@ -257,7 +257,7 @@ fn paper_scale_analysis_is_fast() {
 /// unchanged (shape-wise) and verifies as device-local.
 #[test]
 fn identity_partition_roundtrips_model_zoo() {
-    for kind in ModelKind::all() {
+    for &kind in ModelKind::all() {
         let func = kind.build_scaled();
         let mesh = Mesh::grid(&[("d", 2)]);
         let spec = ShardingSpec::unsharded(&func);

@@ -1,0 +1,244 @@
+//! MoE-subsystem acceptance tests (ISSUE 8):
+//!
+//! * **Routed reshards** — on meshes with a dedicated expert axis, the
+//!   NDA-derived expert shardings partition with `all_to_all` reshards
+//!   at dispatch and combine, and every such plan matches the
+//!   interpreter oracle within 1e-4 relative tolerance on 1-D and 2-D
+//!   meshes.
+//! * **Search** — the flat MCTS's winning spec shards the expert
+//!   dimension on the expert axis (tokens stay with their expert's
+//!   devices; the `all_to_all`s are cheaper than gathering weights).
+//! * **Pricing** — symbolic and incremental prices of routed plans pin
+//!   to the materialize-and-evaluate oracle within 1e-6.
+//! * **Composition** — on a memory-constrained config, the joint
+//!   (stages × sharding) MCTS finds an (experts-in-stage ×
+//!   pipeline-stages) plan that beats both the best flat expert plan
+//!   and the best pipeline-only plan.
+
+use toast::cost::symbolic::SymbolicEvaluator;
+use toast::cost::CostModel;
+use toast::ir::{Func, ValueId};
+use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::models::moe::{forward, MoeConfig};
+use toast::nda::Nda;
+use toast::pipeline::{joint_search, JointSearchConfig};
+use toast::runtime::diff::{differential_test, DEFAULT_REL_TOL};
+use toast::search::{build_actions, build_stage_actions, search, Action, ActionSpaceConfig,
+    SearchConfig, StageActionConfig};
+use toast::sharding::{partition, ShardingSpec};
+
+fn tiny_forward() -> Func {
+    let cfg = MoeConfig { training: false, ..MoeConfig::tiny() };
+    forward(&cfg).0
+}
+
+/// Layer-0 expert FFN weight — its dim 0 is the expert dim. Params are
+/// laid out x, then (wg, w1, w2, route) per layer.
+fn w1_of(func: &Func) -> ValueId {
+    ValueId(func.params.iter().position(|p| p.name == "l0_w1").unwrap() as u32)
+}
+
+fn actions_for(func: &Func, nda: &Nda, mesh: &Mesh) -> Vec<Action> {
+    build_actions(func, nda, mesh, &ActionSpaceConfig { min_color_dims: 1, ..Default::default() })
+}
+
+/// Expert-dim resolutions of the merged routing color on `axis`.
+fn expert_actions<'a>(actions: &'a [Action], w1: ValueId, axis: usize) -> Vec<&'a Action> {
+    actions.iter().filter(|a| a.axis == axis && a.assignment.contains(&(w1, 0))).collect()
+}
+
+/// Acceptance: expert shardings exist, partition with routed
+/// `all_to_all` reshards at dispatch and combine (≥ 2 per plan in the
+/// aligned resolution), and every one differentially validates on both
+/// a 1-D expert mesh and a 2-D expert × data mesh.
+#[test]
+fn expert_sharding_emits_routed_all_to_all_and_validates() {
+    let func = tiny_forward();
+    let nda = Nda::analyze(&func);
+    let w1 = w1_of(&func);
+    for mesh in [Mesh::grid(&[("expert", 2)]), Mesh::grid(&[("expert", 2), ("data", 2)])] {
+        let actions = actions_for(&func, &nda, &mesh);
+        let experts = expert_actions(&actions, w1, 0);
+        assert!(
+            !experts.is_empty(),
+            "{}: the NDA must derive an expert-dim sharding action",
+            mesh.describe()
+        );
+        let mut max_a2a = 0usize;
+        for (ai, a) in experts.iter().enumerate() {
+            let mut spec = ShardingSpec::unsharded(&func);
+            assert!(
+                spec.check_assignment(&func, &mesh, &a.assignment, a.axis),
+                "{} action {ai}: assignment must be legal",
+                mesh.describe()
+            );
+            spec.apply_assignment(&func, &mesh, &a.assignment, a.axis).unwrap();
+            let (_, stats) = partition(&func, &spec, &mesh).unwrap_or_else(|e| {
+                panic!("{} action {ai}: partition failed: {e:#}", mesh.describe())
+            });
+            max_a2a = max_a2a.max(stats.all_to_all);
+            let r = differential_test(&func, &spec, &mesh, 29).unwrap_or_else(|e| {
+                panic!("{} action {ai}: differential failed: {e:#}", mesh.describe())
+            });
+            assert!(
+                r.within(DEFAULT_REL_TOL),
+                "{} action {ai}: rel {} (collectives {})",
+                mesh.describe(),
+                r.max_rel_err,
+                r.stats.total_collectives()
+            );
+        }
+        // The aligned resolution reshards the routed tensors at dispatch
+        // AND combine — at least two all_to_alls (tiny has 2 layers, so
+        // the aligned plan carries more; ≥ 2 is the structural floor).
+        assert!(
+            max_a2a >= 2,
+            "{}: expected routed all_to_all at dispatch and combine, best plan had {max_a2a}",
+            mesh.describe()
+        );
+    }
+}
+
+/// Acceptance: the flat search's winning spec shards the expert dim on
+/// the dedicated expert axis, and the winner validates differentially.
+#[test]
+fn flat_search_shards_the_expert_dimension() {
+    let func = tiny_forward();
+    let nda = Nda::analyze(&func);
+    let w1 = w1_of(&func);
+    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    for mesh in [Mesh::grid(&[("expert", 2)]), Mesh::grid(&[("expert", 2), ("data", 2)])] {
+        let actions = actions_for(&func, &nda, &mesh);
+        let out = search(
+            &func,
+            &mesh,
+            &model,
+            &actions,
+            &SearchConfig { budget: 300, threads: 1, seed: 7, ..Default::default() },
+        );
+        assert!(out.relative < 1.0, "{}: search must improve on replicated", mesh.describe());
+        assert!(
+            !out.spec.dims[w1.0 as usize][0].is_empty(),
+            "{}: winning spec must shard the expert dim of w1 (spec relative {})",
+            mesh.describe(),
+            out.relative
+        );
+        let (_, stats) = partition(&func, &out.spec, &mesh).unwrap();
+        assert!(
+            stats.all_to_all >= 2,
+            "{}: winning plan must route tokens (all_to_all {})",
+            mesh.describe(),
+            stats.all_to_all
+        );
+        let r = differential_test(&func, &out.spec, &mesh, 31).unwrap();
+        assert!(r.within(DEFAULT_REL_TOL), "{}: rel {}", mesh.describe(), r.max_rel_err);
+    }
+}
+
+/// Acceptance: symbolic pricing of routed plans pins to the
+/// materialize-and-evaluate oracle within 1e-6 relative.
+#[test]
+fn routed_plans_price_to_the_oracle() {
+    let func = tiny_forward();
+    let nda = Nda::analyze(&func);
+    let w1 = w1_of(&func);
+    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    for mesh in [Mesh::grid(&[("expert", 2)]), Mesh::grid(&[("expert", 2), ("data", 2)])] {
+        let actions = actions_for(&func, &nda, &mesh);
+        let sym = SymbolicEvaluator::new(&func, &mesh, &model);
+        let (ulocal, _) = partition(&func, &ShardingSpec::unsharded(&func), &mesh).unwrap();
+        let base = model.evaluate(&ulocal, &mesh);
+        for a in expert_actions(&actions, w1, 0) {
+            let mut spec = ShardingSpec::unsharded(&func);
+            spec.apply_assignment(&func, &mesh, &a.assignment, a.axis).unwrap();
+            let (local, _) = partition(&func, &spec, &mesh).unwrap();
+            let oracle = model.relative(&model.evaluate(&local, &mesh), &base);
+            let s = sym.relative(&spec, &base);
+            assert!(
+                (s - oracle).abs() <= 1e-6 * oracle.max(1.0),
+                "{}: symbolic {s} vs oracle {oracle}",
+                mesh.describe()
+            );
+        }
+    }
+}
+
+/// Acceptance: on a memory-constrained config, the joint MCTS finds an
+/// (experts-in-stage × pipeline-stages) composition that beats both the
+/// best flat (expert-only) plan and the best pipeline-only plan.
+#[test]
+fn joint_search_composes_experts_with_stages() {
+    let cfg = MoeConfig { layers: 6, training: false, ..MoeConfig::tiny() };
+    let (func, _, _) = forward(&cfg);
+    let nda = Nda::analyze(&func);
+    let intra = Mesh::grid(&[("expert", 2)]);
+    let mut model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let actions = actions_for(&func, &nda, &intra);
+    let stage_actions = build_stage_actions(
+        &func,
+        &nda,
+        &StageActionConfig { counts: vec![2, 4], microbatches: 8, ..Default::default() },
+    );
+    assert!(!stage_actions.is_empty(), "MoE layers must offer legal stage cuts");
+
+    // Constrain memory so no flat plan fits: one mesh axis at best
+    // halves the weights, so 40% of the unsharded peak is out of reach
+    // flat, while stages divide the weights further.
+    let (ulocal, _) = partition(&func, &ShardingSpec::unsharded(&func), &intra).unwrap();
+    let base = model.evaluate(&ulocal, &intra);
+    model.hw.memory_bytes = base.peak_bytes * 2 / 5;
+
+    let flat = search(
+        &func,
+        &intra,
+        &model,
+        &actions,
+        &SearchConfig { budget: 300, threads: 1, seed: 5, ..Default::default() },
+    );
+    assert!(
+        !model.fits(&flat.cost),
+        "flat expert-only search must OOM here (peak {}, limit {})",
+        flat.cost.peak_bytes,
+        model.hw.memory_bytes
+    );
+
+    // Pipeline-only comparator: stages without any sharding actions.
+    let pipe_only = joint_search(
+        &func,
+        &intra,
+        &model,
+        &[],
+        &stage_actions,
+        &JointSearchConfig { budget: 300, seed: 5, require_stage: true, ..Default::default() },
+    )
+    .unwrap();
+    assert!(pipe_only.stage_action.is_some());
+
+    let joint = joint_search(
+        &func,
+        &intra,
+        &model,
+        &actions,
+        &stage_actions,
+        &JointSearchConfig { budget: 400, seed: 5, require_stage: true, ..Default::default() },
+    )
+    .unwrap();
+    assert!(joint.stage_action.is_some(), "joint search must stage the model");
+    assert!(
+        joint.spec.sharded_dim_count() > 0 && !joint.actions.is_empty(),
+        "joint search must shard inside the stage"
+    );
+    assert!(!joint.oom, "the composition must fit (peak {})", joint.cost.peak_bytes);
+    assert!(
+        joint.relative < flat.relative,
+        "composition ({}) must beat the memory-penalized flat expert plan ({})",
+        joint.relative,
+        flat.relative
+    );
+    assert!(
+        joint.relative < pipe_only.relative,
+        "composition ({}) must beat the pipeline-only plan ({})",
+        joint.relative,
+        pipe_only.relative
+    );
+}

@@ -16,7 +16,9 @@
 //!   penalizes memory overflow;
 //! * **P9**: the SPMD simulation runtime matches the interpreter oracle
 //!   for random (program, spec, mesh) triples within 1e-4 relative
-//!   tolerance, with shrink-and-report on failure.
+//!   tolerance, with shrink-and-report on failure;
+//! * **P11**: the routed-dispatch rule derives sound expert shardings
+//!   (routed `all_to_all`) for random MoE configurations.
 
 use toast::cost::symbolic::SymbolicEvaluator;
 use toast::cost::CostModel;
@@ -451,6 +453,70 @@ fn prop_spmd_differential_p9() {
     // The sweep must actually exercise data movement, not just
     // replicated re-execution.
     assert!(with_collectives >= 5, "only {with_collectives} cases had collectives");
+}
+
+/// P11: the routed-dispatch NDA rule — for random expert counts,
+/// capacities, and group sizes, the MoE dispatch pattern merges the
+/// expert and group dims into one color, and every expert-sharding
+/// action the space derives for it partitions and matches the
+/// interpreter oracle, with routed `all_to_all` reshards appearing
+/// somewhere in the sweep.
+#[test]
+fn prop_routed_dispatch_p11() {
+    use toast::models::moe::{forward, MoeConfig};
+    use toast::runtime::diff::{differential_test, DEFAULT_REL_TOL};
+    let mut rng = Rng::new(0xA2A);
+    let mesh = Mesh::grid(&[("expert", 2)]);
+    let mut routed = 0usize;
+    for case in 0..8 {
+        let experts = [2i64, 4, 8][rng.below(3)];
+        let capacity = 1 + rng.below(2) as i64;
+        let group_size = experts * capacity * (1 + rng.below(2) as i64);
+        let cfg = MoeConfig {
+            experts,
+            group_size,
+            capacity,
+            d_model: 4,
+            hidden: 8,
+            layers: 1,
+            training: false,
+        };
+        let (func, _, _) = forward(&cfg);
+        let nda = Nda::analyze(&func);
+        // params: x, l0_wg, l0_w1, ...
+        let (x, w1) = (ValueId(0), ValueId(2));
+        assert_eq!(
+            nda.color_of(x, 0),
+            nda.color_of(w1, 0),
+            "case {case} ({cfg:?}): expert dim not merged with group dim"
+        );
+        let actions = toast::search::build_actions(
+            &func,
+            &nda,
+            &mesh,
+            &toast::search::ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        );
+        let mut found = false;
+        for a in actions.iter().filter(|a| a.axis == 0 && a.assignment.contains(&(w1, 0))) {
+            let mut spec = ShardingSpec::unsharded(&func);
+            if spec.apply_assignment(&func, &mesh, &a.assignment, a.axis).is_err() {
+                continue;
+            }
+            let report = differential_test(&func, &spec, &mesh, 0xE0 + case as u64)
+                .unwrap_or_else(|e| panic!("case {case}: differential execution failed: {e:#}"));
+            assert!(
+                report.within(DEFAULT_REL_TOL),
+                "case {case} ({cfg:?}): routed spec diverged: rel {}",
+                report.max_rel_err
+            );
+            if report.stats.all_to_all > 0 {
+                routed += 1;
+            }
+            found = true;
+        }
+        assert!(found, "case {case} ({cfg:?}): no expert-sharding action derived");
+    }
+    assert!(routed > 0, "sweep never emitted a routed all_to_all");
 }
 
 /// P6: the SPMD simulator agrees with plain evaluation for replicated
