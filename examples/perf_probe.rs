@@ -3,7 +3,7 @@ use std::time::Instant;
 use toast::coordinator::experiments::{build_model, measure_eval_throughput, BenchScale};
 use toast::cost::symbolic::SymbolicEvaluator;
 use toast::cost::CostModel;
-use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::mesh::{HardwareKind, Mesh, Topology};
 use toast::models::ModelKind;
 use toast::nda::Nda;
 use toast::search::*;
@@ -12,7 +12,7 @@ use toast::sharding::{partition, ShardingSpec};
 fn main() {
     let func = build_model(ModelKind::T2B, BenchScale::Bench);
     let mesh = Mesh::grid(&[("data", 4), ("model", 4)]);
-    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
     let nda = Nda::analyze(&func);
     let actions = build_actions(&func, &nda, &mesh, &ActionSpaceConfig::default());
     println!("{} actions, {} instrs", actions.len(), func.instrs.len());

@@ -15,7 +15,7 @@ use bench_harness::bench;
 use std::time::Duration;
 use toast::coordinator::experiments::{build_model, BenchScale};
 use toast::cost::CostModel;
-use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::mesh::{HardwareKind, Mesh, Topology};
 use toast::models::ModelKind;
 use toast::nda::Nda;
 use toast::search::{build_actions, ActionSpaceConfig};
@@ -24,7 +24,7 @@ use toast::sharding::{partition, ShardingSpec};
 fn main() {
     let budget = Duration::from_secs(20);
     let mesh = Mesh::grid(&[("data", 4), ("model", 4)]);
-    let cost = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let cost = CostModel::new(Topology::from_kind(HardwareKind::A100));
 
     // --- NDA analysis
     for kind in [ModelKind::T2B, ModelKind::T7B, ModelKind::Gns, ModelKind::UNet] {

@@ -39,7 +39,7 @@ pub mod wire;
 use crate::baselines::Method;
 use crate::cost::{Cost, CostModel};
 use crate::ir::Func;
-use crate::mesh::{HardwareKind, HardwareProfile, Mesh};
+use crate::mesh::{HardwareKind, Mesh, Topology};
 use crate::models::ModelKind;
 use crate::nda::Nda;
 use crate::pipeline::{cut_stages, joint_search, schedule, JointSearchConfig};
@@ -164,7 +164,11 @@ pub struct PartitionRequest {
     /// The model to partition: zoo reference or inline IR.
     pub model: ModelSource,
     pub mesh: Mesh,
-    pub hardware: HardwareKind,
+    /// The machine to price against (preset or custom). On the wire an
+    /// absent `topology` field falls back to the legacy `hardware` enum
+    /// name, and both absent mean the A100 preset — old clients and
+    /// artifacts keep parsing.
+    pub topology: Topology,
     pub method: Method,
     /// Search budget (state evaluations).
     pub budget: usize,
@@ -180,17 +184,25 @@ pub struct PartitionRequest {
 
 impl PartitionRequest {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("id", wire::u64_to_json(self.id)),
             ("model", self.model.to_json()),
             ("mesh", self.mesh.to_json()),
-            ("hardware", Json::s(self.hardware.name())),
+            ("topology", self.topology.to_json()),
+        ];
+        // Legacy readers require a `hardware` enum name; emit it
+        // whenever the topology is one of the enum presets.
+        if let Some(kind) = self.topology.kind_hint() {
+            fields.push(("hardware", Json::s(kind.name())));
+        }
+        fields.extend([
             ("method", Json::s(self.method.name())),
             ("budget", Json::n(self.budget as f64)),
             ("seed", wire::u64_to_json(self.seed)),
             ("verify", Json::Bool(self.verify)),
             ("no_cache", Json::Bool(self.no_cache)),
-        ])
+        ]);
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> crate::Result<PartitionRequest> {
@@ -199,9 +211,7 @@ impl PartitionRequest {
             id: wire::u64_field(j, "id", ctx)?,
             model: ModelSource::from_json(wire::field(j, "model", ctx)?)?,
             mesh: Mesh::from_json(wire::field(j, "mesh", ctx)?)?,
-            hardware: wire::str_field(j, "hardware", ctx)?
-                .parse()
-                .map_err(|e: String| anyhow!(e))?,
+            topology: topology_from_wire(j)?,
             method: wire::str_field(j, "method", ctx)?
                 .parse()
                 .map_err(|e: String| anyhow!(e))?,
@@ -211,6 +221,23 @@ impl PartitionRequest {
             // Absent in pre-cache requests; absence means "use the cache".
             no_cache: j.get("no_cache").and_then(Json::as_bool).unwrap_or(false),
         })
+    }
+}
+
+/// Read the machine off a wire object: prefer the `topology` field,
+/// fall back to the legacy `hardware` enum name, and treat both absent
+/// as the A100 preset — so pre-topology artifacts and clients still
+/// parse.
+fn topology_from_wire(j: &Json) -> crate::Result<Topology> {
+    if let Some(t) = j.get("topology") {
+        return Topology::from_json(t);
+    }
+    match j.get("hardware").and_then(Json::as_str) {
+        Some(h) => {
+            let kind: HardwareKind = h.parse().map_err(|e: String| anyhow!(e))?;
+            Ok(Topology::from_kind(kind))
+        }
+        None => Ok(Topology::from_kind(HardwareKind::A100)),
     }
 }
 
@@ -410,13 +437,14 @@ impl CompiledModel {
     }
 
     /// Start a partitioning session on `mesh`. Defaults: MCTS strategy,
-    /// A100 hardware, budget 300, seed 0, no post-hoc validation, and
-    /// the service's action-space pruning (`min_color_dims = 4`).
+    /// the `a100` topology preset, budget 300, seed 0, no post-hoc
+    /// validation, and the service's action-space pruning
+    /// (`min_color_dims = 4`).
     pub fn partition(&self, mesh: &Mesh) -> Partitioner<'_> {
         Partitioner {
             model: self,
             mesh: mesh.clone(),
-            hardware: HardwareKind::A100,
+            topology: Topology::from_kind(HardwareKind::A100),
             strategy: Box::new(MctsStrategy::default()),
             action_cfg: ActionSpaceConfig { min_color_dims: 4, ..Default::default() },
             budget: 300,
@@ -600,7 +628,7 @@ impl Default for StageOptions {
 pub struct Partitioner<'a> {
     model: &'a CompiledModel,
     mesh: Mesh,
-    hardware: HardwareKind,
+    topology: Topology,
     strategy: Box<dyn Strategy>,
     action_cfg: ActionSpaceConfig,
     budget: usize,
@@ -623,9 +651,18 @@ impl<'a> Partitioner<'a> {
         self
     }
 
-    pub fn hardware(mut self, hw: HardwareKind) -> Self {
-        self.hardware = hw;
+    /// Price against a hardware [`Topology`] — a named preset
+    /// ([`Topology::named`]) or a custom machine loaded from JSON.
+    pub fn topology(mut self, topo: Topology) -> Self {
+        self.topology = topo;
         self
+    }
+
+    /// Legacy enum entry point; maps the kind onto its named preset.
+    #[deprecated(note = "use Partitioner::topology(Topology::from_kind(..)) \
+                         or Topology::named(..)")]
+    pub fn hardware(self, hw: HardwareKind) -> Self {
+        self.topology(Topology::from_kind(hw))
     }
 
     pub fn budget(mut self, budget: usize) -> Self {
@@ -679,11 +716,14 @@ impl<'a> Partitioner<'a> {
             "validate(true) executes the model numerically; this IR is production-size \
              and would take hours — validate a scaled build instead"
         );
+        // A mesh axis the topology does not describe must fail here,
+        // as an error, not as a panic deep inside pricing.
+        self.topology.check_mesh(&self.mesh)?;
         if self.stage_opts.is_some() {
             return self.run_with_stages();
         }
         let func = self.model.func();
-        let cost_model = CostModel::new(HardwareProfile::new(self.hardware));
+        let cost_model = CostModel::new(self.topology.clone());
         let t0 = Instant::now();
         let cx = StrategyContext {
             model: self.model,
@@ -708,7 +748,7 @@ impl<'a> Partitioner<'a> {
         Ok(Solution {
             model: self.model.source(),
             mesh: self.mesh,
-            hardware: self.hardware,
+            topology: self.topology,
             strategy: self.strategy.name().to_string(),
             spec: out.spec,
             cost,
@@ -736,7 +776,7 @@ impl<'a> Partitioner<'a> {
             crate::pipeline::STAGE_AXIS_NAME
         );
         let func = self.model.func();
-        let cost_model = CostModel::new(HardwareProfile::new(self.hardware));
+        let cost_model = CostModel::new(self.topology.clone());
         let t0 = Instant::now();
         let actions = self.model.actions(&self.mesh, &self.action_cfg);
         let stage_actions = build_stage_actions(
@@ -783,7 +823,7 @@ impl<'a> Partitioner<'a> {
         Ok(Solution {
             model: self.model.source(),
             mesh: self.mesh,
-            hardware: self.hardware,
+            topology: self.topology,
             strategy: "TOAST+stages".to_string(),
             spec: out.spec,
             cost,
@@ -1000,7 +1040,10 @@ pub struct Solution {
     /// The model the spec was computed for (zoo reference or inline IR).
     pub model: ModelSource,
     pub mesh: Mesh,
-    pub hardware: HardwareKind,
+    /// The machine the costs were priced against. On the wire an absent
+    /// `topology` field falls back to the legacy `hardware` enum name,
+    /// and both absent mean the A100 preset — old artifacts still parse.
+    pub topology: Topology,
     /// Display name of the strategy that produced the spec.
     pub strategy: String,
     pub spec: ShardingSpec,
@@ -1029,11 +1072,18 @@ pub const SOLUTION_FORMAT: &str = "toast.solution/v1";
 
 impl Solution {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("format", Json::s(SOLUTION_FORMAT)),
             ("model", self.model.to_json()),
             ("mesh", self.mesh.to_json()),
-            ("hardware", Json::s(self.hardware.name())),
+            ("topology", self.topology.to_json()),
+        ];
+        // Legacy readers require a `hardware` enum name; emit it
+        // whenever the topology is one of the enum presets.
+        if let Some(kind) = self.topology.kind_hint() {
+            fields.push(("hardware", Json::s(kind.name())));
+        }
+        fields.extend([
             ("strategy", Json::s(self.strategy.clone())),
             ("spec", self.spec.to_json()),
             ("cost", self.cost.to_json()),
@@ -1056,7 +1106,8 @@ impl Solution {
                     None => Json::Null,
                 },
             ),
-        ])
+        ]);
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> crate::Result<Solution> {
@@ -1078,9 +1129,7 @@ impl Solution {
         Ok(Solution {
             model: ModelSource::from_json(wire::field(j, "model", ctx)?)?,
             mesh: Mesh::from_json(wire::field(j, "mesh", ctx)?)?,
-            hardware: wire::str_field(j, "hardware", ctx)?
-                .parse()
-                .map_err(|e: String| anyhow!(e))?,
+            topology: topology_from_wire(j)?,
             strategy: wire::str_field(j, "strategy", ctx)?.to_string(),
             spec: ShardingSpec::from_json(wire::field(j, "spec", ctx)?)?,
             cost: Cost::from_json(wire::field(j, "cost", ctx)?)?,
@@ -1207,7 +1256,7 @@ mod tests {
         assert_eq!(back, sol, "wire round-trip must be exact");
         // And the reloaded spec re-prices to the identical relative cost.
         let func = back.model.build();
-        let cost_model = CostModel::new(HardwareProfile::new(back.hardware));
+        let cost_model = CostModel::new(back.topology.clone());
         let (_, _, relative) = price_spec(&func, &back.spec, &back.mesh, &cost_model).unwrap();
         assert_eq!(relative, back.relative, "re-priced relative cost must match exactly");
     }
@@ -1256,7 +1305,7 @@ mod tests {
         // The reloaded artifact re-prices to the identical cost through
         // the same staged/flat path the producer used.
         let func = back.model.build();
-        let cm = CostModel::new(HardwareProfile::new(back.hardware));
+        let cm = CostModel::new(back.topology.clone());
         let (cost, _base, relative) = match &back.stages {
             Some(sa) => price_staged_spec(&func, &back.spec, sa, &back.mesh, &cm).unwrap(),
             None => price_spec(&func, &back.spec, &back.mesh, &cm).unwrap(),
@@ -1279,6 +1328,66 @@ mod tests {
         let back = Solution::from_json(&j).unwrap();
         assert_eq!(back.stages, None);
         assert_eq!(back.spec, sol.spec);
+    }
+
+    #[test]
+    fn pre_topology_artifacts_reload_as_the_a100_preset() {
+        // Simulate artifacts written before the topology redesign: a
+        // legacy `hardware` enum name must map onto its preset, and a
+        // document with neither field must default to the A100 preset.
+        let compiled = CompiledModel::from_kind(ModelKind::Mlp, false).unwrap();
+        let mesh = Mesh::grid(&[("d", 2)]);
+        let sol = compiled.partition(&mesh).budget(30).run().unwrap();
+        let mut j = Json::parse(&sol.to_json_string()).unwrap();
+        if let Json::Obj(fields) = &mut j {
+            fields.retain(|(k, _)| k != "topology");
+        }
+        let back = Solution::from_json(&j).unwrap();
+        assert_eq!(back.topology, Topology::from_kind(HardwareKind::A100));
+        if let Json::Obj(fields) = &mut j {
+            fields.retain(|(k, _)| k != "hardware");
+        }
+        let back = Solution::from_json(&j).unwrap();
+        assert_eq!(back.topology, Topology::from_kind(HardwareKind::A100));
+    }
+
+    #[test]
+    fn custom_topologies_round_trip_on_the_wire() {
+        // A non-preset topology has no legacy enum name: the `hardware`
+        // field must be absent and the reload must be exact.
+        let compiled = CompiledModel::from_kind(ModelKind::Mlp, false).unwrap();
+        let mesh = Mesh::grid(&[("d", 2)]);
+        let topo = Topology::named("a100-2x4-islands").unwrap();
+        let sol = compiled
+            .partition(&mesh)
+            .topology(topo.clone())
+            .budget(30)
+            .run()
+            .unwrap();
+        let j = Json::parse(&sol.to_json_string()).unwrap();
+        assert!(j.get("hardware").is_none(), "island profile is not an enum preset");
+        let back = Solution::from_json(&j).unwrap();
+        assert_eq!(back, sol, "custom-topology round-trip must be exact");
+        assert_eq!(back.topology, topo);
+    }
+
+    #[test]
+    fn deprecated_hardware_shim_maps_onto_the_preset() {
+        #[allow(deprecated)]
+        fn via_shim(compiled: &CompiledModel, mesh: &Mesh) -> Solution {
+            compiled
+                .partition(mesh)
+                .hardware(HardwareKind::P100)
+                .budget(30)
+                .seed(7)
+                .run()
+                .unwrap()
+        }
+        let compiled = CompiledModel::from_kind(ModelKind::Mlp, false).unwrap();
+        let mesh = Mesh::grid(&[("d", 2)]);
+        let shimmed = via_shim(&compiled, &mesh);
+        assert_eq!(shimmed.topology, Topology::from_kind(HardwareKind::P100));
+        assert_eq!(shimmed.topology.kind_hint(), Some(HardwareKind::P100));
     }
 
     #[test]

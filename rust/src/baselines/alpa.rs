@@ -89,10 +89,7 @@ pub fn solve(
 
     // TPU-tuned solver: GPU targets need far more sweeps to converge
     // (the paper's §5.3 platform asymmetry).
-    let sweeps = match model.hw.kind {
-        HardwareKind::TPUv3 => 2,
-        _ => 8,
-    };
+    let sweeps = if model.hw.kind_hint() == Some(HardwareKind::TPUv3) { 2 } else { 8 };
 
     // Alpa's ILP scales with the per-tensor problem size (every value is
     // a variable); the relaxation budget follows suit, with the TPU-tuned
@@ -155,7 +152,7 @@ pub fn run(func: &Func, mesh: &Mesh, model: &CostModel, budget: usize) -> Method
 mod tests {
     use super::*;
     use crate::ir::{FuncBuilder, TensorType};
-    use crate::mesh::HardwareProfile;
+    use crate::mesh::Topology;
 
     fn mlp() -> Func {
         let mut b = FuncBuilder::new("mlp");
@@ -172,7 +169,7 @@ mod tests {
     fn alpa_improves_over_replicated() {
         let f = mlp();
         let mesh = Mesh::grid(&[("d", 4)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let r = run(&f, &mesh, &model, 400);
         assert!(r.relative < 1.0, "relative {}", r.relative);
     }
@@ -181,8 +178,8 @@ mod tests {
     fn tpu_converges_with_fewer_evals_than_gpu() {
         let f = mlp();
         let mesh = Mesh::grid(&[("d", 4)]);
-        let tpu = CostModel::new(HardwareProfile::new(HardwareKind::TPUv3));
-        let gpu = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let tpu = CostModel::new(Topology::from_kind(HardwareKind::TPUv3));
+        let gpu = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let rt = run(&f, &mesh, &tpu, 100_000);
         let rg = run(&f, &mesh, &gpu, 100_000);
         // GPU run does more sweeps -> more wall time (bounded check: both

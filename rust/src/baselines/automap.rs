@@ -215,7 +215,7 @@ pub fn run(
 mod tests {
     use super::*;
     use crate::ir::{FuncBuilder, TensorType};
-    use crate::mesh::{HardwareKind, HardwareProfile};
+    use crate::mesh::{HardwareKind, Topology};
 
     fn mlp() -> Func {
         let mut b = FuncBuilder::new("mlp");
@@ -245,7 +245,7 @@ mod tests {
     fn automap_finds_data_parallelism() {
         let f = mlp();
         let mesh = Mesh::grid(&[("b", 4)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let r = run(&f, &mesh, &model, 100, 3);
         assert!(r.relative < 0.6, "relative {}", r.relative);
         assert!(!r.oom);

@@ -226,7 +226,7 @@ pub fn run(kind: ModelKind, func: &Func, mesh: &Mesh, model: &CostModel) -> Meth
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mesh::{HardwareKind, HardwareProfile};
+    use crate::mesh::{HardwareKind, Topology};
     use crate::models::{mlp::MlpConfig, transformer::TransformerConfig};
 
     #[test]
@@ -235,7 +235,7 @@ mod tests {
         cfg.layers = 1;
         let f = crate::models::mlp::mlp(&cfg);
         let mesh = Mesh::grid(&[("data", 4), ("model", 2)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let r = run(ModelKind::Mlp, &f, &mesh, &model);
         assert!(r.relative < 1.0, "relative {}", r.relative);
     }
@@ -252,7 +252,7 @@ mod tests {
         cfg.key_size = 32;
         let f = crate::models::transformer::training_step(&cfg);
         let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::TPUv3));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::TPUv3));
         let r = run(ModelKind::T2B, &f, &mesh, &model);
         assert!(r.relative < 1.0, "relative {}", r.relative);
         assert!(!r.oom);

@@ -21,11 +21,9 @@
 //! All methods share the cost model and the SPMD partitioner, so step-time
 //! comparisons isolate *search quality*, exactly as in the paper.
 //!
-//! Every method is exposed two ways: a `solve` core (spec in, spec out —
-//! what the [`crate::api::Strategy`] implementations wrap so all methods
-//! run through one trait and one session), and a legacy [`run_method`]
-//! shim kept for existing callers, which re-analyzes per call and is
-//! deprecated in favor of the session API.
+//! Every method exposes a `solve` core (spec in, spec out) — what the
+//! [`crate::api::Strategy`] implementations wrap so all methods run
+//! through one trait and one session.
 
 pub mod alpa;
 pub mod automap;
@@ -34,10 +32,8 @@ pub mod manual;
 use crate::cost::{Cost, CostModel};
 use crate::ir::Func;
 use crate::mesh::Mesh;
-use crate::models::ModelKind;
-use crate::search::{ActionSpaceConfig, SearchConfig};
 use crate::sharding::{partition, ShardingSpec};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// A partitioning method under evaluation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -119,46 +115,4 @@ pub fn finish(
         search_time,
         spec,
     }
-}
-
-/// Run `method` on `(func, mesh, hardware)`.
-///
-/// Legacy shim: re-runs the NDA on every call. The session API builds a
-/// [`crate::api::CompiledModel`] once and runs any
-/// [`crate::api::Strategy`] against it.
-#[deprecated(note = "use toast::api::CompiledModel::partition(..) — the session API \
-                     analyzes once and caches action spaces")]
-pub fn run_method(
-    method: Method,
-    kind: ModelKind,
-    func: &Func,
-    mesh: &Mesh,
-    model: &CostModel,
-    budget: usize,
-    seed: u64,
-) -> MethodResult {
-    let t0 = Instant::now();
-    let nda = crate::nda::Nda::analyze(func);
-    let spec = match method {
-        Method::Manual => manual::solve(Some(kind), func, &nda, mesh, model),
-        Method::Alpa => alpa::solve(func, mesh, model, budget).0,
-        Method::AutoMap => automap::solve(func, mesh, model, budget, seed).0,
-        Method::Toast => {
-            let actions = crate::search::build_actions(
-                func,
-                &nda,
-                mesh,
-                &ActionSpaceConfig { min_color_dims: 4, ..Default::default() },
-            );
-            crate::search::search(
-                func,
-                mesh,
-                model,
-                &actions,
-                &SearchConfig { budget, seed, ..Default::default() },
-            )
-            .spec
-        }
-    };
-    finish(method, func, mesh, model, spec, t0.elapsed())
 }

@@ -18,7 +18,7 @@ use crate::baselines::Method;
 use crate::cost::symbolic::SymbolicEvaluator;
 use crate::cost::CostModel;
 use crate::ir::Func;
-use crate::mesh::{HardwareKind, Mesh};
+use crate::mesh::{HardwareKind, Mesh, Topology};
 use crate::models::{gns, itx, transformer, unet, ModelKind};
 use crate::search::{Action, IncrementalEvaluator};
 use crate::sharding::{partition, ShardingSpec};
@@ -85,6 +85,12 @@ pub enum Experiment {
     /// oracle, and differentially validate the winner (see
     /// [`run_moe_suite`]).
     Moe,
+    /// Topology sweep: the same model priced on a flat NVLink profile vs
+    /// a two-island profile must pick *different* winning plans, with the
+    /// island-aware winner cheaper under island pricing, and symbolic,
+    /// incremental, and oracle pricing agreeing on every plan (see
+    /// [`run_topology_suite`]).
+    Topology,
 }
 
 impl std::str::FromStr for Experiment {
@@ -100,9 +106,10 @@ impl std::str::FromStr for Experiment {
             "search-speed" | "search_speed" => Ok(Experiment::SearchSpeed),
             "service-load" | "service_load" => Ok(Experiment::ServiceLoad),
             "moe" => Ok(Experiment::Moe),
+            "topology" | "topo" => Ok(Experiment::Topology),
             other => Err(format!(
-                "unknown experiment '{other}' \
-                 (fig8|fig9|fig10|ablations|differential|pipeline|search-speed|service-load|moe)"
+                "unknown experiment '{other}' (fig8|fig9|fig10|ablations|differential|\
+                 pipeline|search-speed|service-load|moe|topology)"
             )),
         }
     }
@@ -236,7 +243,7 @@ pub fn run_grid(
                 let sol = compiled
                     .partition(&mesh)
                     .method(method)
-                    .hardware(hw)
+                    .topology(Topology::from_kind(hw))
                     .budget(scale.budget())
                     .seed(17)
                     .run()
@@ -303,7 +310,7 @@ pub fn run_seq_scaling(scale: BenchScale) -> Vec<(i64, String, Vec<GridRow>)> {
             let sol = compiled
                 .partition(&mesh)
                 .method(method)
-                .hardware(HardwareKind::A100)
+                .topology(Topology::from_kind(HardwareKind::A100))
                 .budget(scale.budget())
                 .seed(29)
                 .run()
@@ -545,7 +552,6 @@ impl SearchSpeedReport {
 /// (identical seed and eval budget on both sides), and optimized
 /// joint-search wall time across the zoo.
 pub fn run_search_speed(scale: BenchScale) -> SearchSpeedReport {
-    use crate::mesh::HardwareProfile;
     use crate::pipeline::{joint_search, JointSearchConfig};
     use crate::search::{
         build_actions, build_stage_actions, search, ActionSpaceConfig, SearchConfig,
@@ -553,7 +559,7 @@ pub fn run_search_speed(scale: BenchScale) -> SearchSpeedReport {
     };
     use std::time::Instant;
 
-    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
     let mesh = match scale {
         BenchScale::Tiny => Mesh::grid(&[("data", 2), ("model", 2)]),
         _ => Mesh::grid(&[("data", 4), ("model", 4)]),
@@ -1357,10 +1363,9 @@ pub fn run_pipeline_suite(
     seed: u64,
     tol: f32,
 ) -> Vec<PipeRow> {
-    use crate::mesh::HardwareProfile;
     use crate::pipeline::{self, schedule};
     let mut rows = Vec::new();
-    let cost_model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let cost_model = CostModel::new(Topology::from_kind(HardwareKind::A100));
     for &mk in models {
         let func = mk.build_scaled();
         let nda = crate::nda::Nda::analyze(&func);
@@ -1544,7 +1549,7 @@ fn moe_row(
         return fail("no l0_w1 param".to_string());
     };
     let (w1, x) = (ValueId(w1 as u32), ValueId(0));
-    let model = CostModel::new(crate::mesh::HardwareProfile::new(HardwareKind::A100));
+    let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
     let actions = crate::search::build_actions(
         func,
         nda,
@@ -1664,6 +1669,282 @@ pub fn format_moe(rows: &[MoeRow], tol: f32) -> String {
         failed,
         tol
     );
+    out
+}
+
+/// One row of the topology sweep (`bench --experiment topology`). Three
+/// arm kinds share the table: one row per committed profile (winning
+/// plan plus the worst pricing-path gaps over every plan), a
+/// `cross-profile` row (the two profiles must crown different winners,
+/// with the island winner clearly cheaper under island pricing), and a
+/// `staged` row (stage-to-stage transfers priced against the stage tier
+/// on both profiles).
+#[derive(Clone, Debug)]
+pub struct TopologyRow {
+    /// Profile name, `cross-profile`, or `staged`.
+    pub arm: String,
+    /// Winning plan (profile rows), winner pairing (cross row), or the
+    /// staged cut (staged row).
+    pub detail: String,
+    /// Winner's relative cost (profile rows), the flat winner's relative
+    /// cost under island pricing (cross row), or the island/flat staged
+    /// runtime ratio (staged row).
+    pub rel: f64,
+    /// Worst symbolic-vs-oracle relative gap in the arm (gated at 1e-6).
+    pub price_gap: f64,
+    /// Worst incremental-vs-oracle relative gap (profile rows only).
+    pub incr_gap: f64,
+    pub pass: bool,
+    pub error: Option<String>,
+}
+
+/// Run the topology sweep: a wide MLP on a 2-D `intra × island` mesh,
+/// priced against the two committed profiles `a100-flat-8` (all-NVLink)
+/// and `a100-2x4-islands` (NVLink inside a 4-GPU island, a 25 GB/s
+/// spine between the two islands). The batch (771 = 3·257) is divisible
+/// by neither mesh axis, so every legal plan is Megatron hidden
+/// sharding on some axis subset and the winner is decided purely by
+/// where the resolving `all_reduce` rides: the flat profile spreads the
+/// hidden dim over all 8 devices, the island profile keeps the
+/// collective inside the NVLink island. Each profile arm pins symbolic
+/// and incremental pricing to the materialize-and-evaluate oracle on
+/// every plan; the cross arm requires different winners with the island
+/// choice clearly cheaper under island pricing; the staged arm requires
+/// the stage hop to price at the stage tier on both profiles.
+pub fn run_topology_suite() -> Vec<TopologyRow> {
+    use crate::ir::{FuncBuilder, TensorType, ValueId};
+
+    let mut b = FuncBuilder::new("topo_mlp");
+    let x = b.param("x", TensorType::f32(vec![771, 4096]));
+    let w1 = b.param("w1", TensorType::f32(vec![4096, 8192]));
+    let w2 = b.param("w2", TensorType::f32(vec![8192, 1024]));
+    let y = b.matmul(x, w1);
+    let z = b.relu(y);
+    let out = b.matmul(z, w2);
+    let func = b.build(vec![out]);
+    let mesh = Mesh::grid(&[("intra", 4), ("island", 2)]);
+    // Megatron hidden sharding: w1 cols, the activations, w2 rows — the
+    // contraction of the second matmul, resolved by one all_reduce per
+    // sharding axis.
+    let megatron: Vec<(ValueId, usize)> = vec![(w1, 1), (y, 1), (z, 1), (w2, 0)];
+    let plans: [(&str, &[usize]); 3] = [
+        ("hidden:intra", &[0]),
+        ("hidden:island", &[1]),
+        ("hidden:intra+island", &[0, 1]),
+    ];
+
+    let fail = |arm: &str, err: String| TopologyRow {
+        arm: arm.to_string(),
+        detail: String::new(),
+        rel: f64::INFINITY,
+        price_gap: f64::INFINITY,
+        incr_gap: f64::INFINITY,
+        pass: false,
+        error: Some(err),
+    };
+
+    let mut rows = Vec::new();
+    let mut winners = Vec::new();
+    for name in ["a100-flat-8", "a100-2x4-islands"] {
+        let topo = Topology::named(name).expect("committed preset");
+        match topology_profile_row(&func, &mesh, &megatron, &plans, topo) {
+            Ok((row, wi)) => {
+                winners.push((wi, row.rel));
+                rows.push(row);
+            }
+            Err(e) => rows.push(fail(name, e)),
+        }
+    }
+
+    // Cross-profile arm: hierarchical pricing must change the decision,
+    // not just the number — different winners, and the island profile's
+    // choice must clearly beat the flat profile's choice *under island
+    // pricing*.
+    if let [(flat_wi, _), (island_wi, island_rel)] = winners[..] {
+        let model =
+            CostModel::new(Topology::named("a100-2x4-islands").expect("committed preset"));
+        let sym = SymbolicEvaluator::new(&func, &mesh, &model);
+        let row = match partition(&func, &ShardingSpec::unsharded(&func), &mesh) {
+            Ok((local, _)) => {
+                let base = model.evaluate(&local, &mesh);
+                let mut spec = ShardingSpec::unsharded(&func);
+                let ok = plans[flat_wi]
+                    .1
+                    .iter()
+                    .all(|&ax| spec.apply_assignment(&func, &mesh, &megatron, ax).is_ok());
+                if ok {
+                    let flat_on_island = sym.relative(&spec, &base);
+                    TopologyRow {
+                        arm: "cross-profile".to_string(),
+                        detail: format!(
+                            "flat picks {}, islands pick {}",
+                            plans[flat_wi].0, plans[island_wi].0
+                        ),
+                        rel: flat_on_island,
+                        price_gap: 0.0,
+                        incr_gap: 0.0,
+                        pass: flat_wi != island_wi && island_rel < 0.9 * flat_on_island,
+                        error: None,
+                    }
+                } else {
+                    fail("cross-profile", "flat winner does not re-apply".to_string())
+                }
+            }
+            Err(e) => fail("cross-profile", format!("identity partition failed: {e:#}")),
+        };
+        rows.push(row);
+    } else {
+        rows.push(fail(
+            "cross-profile",
+            "profile arms failed; nothing to compare".to_string(),
+        ));
+    }
+
+    rows.push(staged_topology_row(&func, &mesh));
+    rows
+}
+
+/// One profile arm of the topology sweep: price every plan through all
+/// three paths, return the arm row plus the winning plan's index.
+fn topology_profile_row(
+    func: &Func,
+    mesh: &Mesh,
+    megatron: &[(crate::ir::ValueId, usize)],
+    plans: &[(&str, &[usize])],
+    topo: Topology,
+) -> Result<(TopologyRow, usize), String> {
+    let arm = topo.name.clone();
+    let model = CostModel::new(topo);
+    let sym = SymbolicEvaluator::new(func, mesh, &model);
+    let base = partition(func, &ShardingSpec::unsharded(func), mesh)
+        .map(|(local, _)| model.evaluate(&local, mesh))
+        .map_err(|e| format!("identity partition failed: {e:#}"))?;
+    let mut eng =
+        IncrementalEvaluator::with_shared_rules(func, mesh, &model, base, sym.shared_rules())
+            .map_err(|e| format!("incremental engine failed: {e:#}"))?;
+
+    let mut best: Option<(f64, usize)> = None;
+    let (mut price_gap, mut incr_gap) = (0.0f64, 0.0f64);
+    for (i, (name, axes)) in plans.iter().enumerate() {
+        let mut spec = ShardingSpec::unsharded(func);
+        eng.reset();
+        for &ax in *axes {
+            spec.apply_assignment(func, mesh, megatron, ax)
+                .map_err(|e| format!("plan {name}: {e}"))?;
+            eng.apply(megatron, ax).map_err(|e| format!("plan {name}: {e}"))?;
+        }
+        let (local, _) = partition(func, &spec, mesh)
+            .map_err(|e| format!("plan {name}: partition failed: {e:#}"))?;
+        let oracle_rel = model.relative(&model.evaluate(&local, mesh), &base);
+        let sym_rel = sym.relative(&spec, &base);
+        let incr_rel = eng.relative();
+        price_gap = price_gap.max((sym_rel - oracle_rel).abs() / oracle_rel.max(1e-12));
+        incr_gap = incr_gap.max((incr_rel - oracle_rel).abs() / oracle_rel.max(1e-12));
+        if best.map_or(true, |(r, _)| sym_rel < r) {
+            best = Some((sym_rel, i));
+        }
+    }
+    let (winner_rel, wi) = best.ok_or_else(|| "no plans enumerated".to_string())?;
+    Ok((
+        TopologyRow {
+            arm,
+            detail: plans[wi].0.to_string(),
+            rel: winner_rel,
+            price_gap,
+            incr_gap,
+            pass: price_gap <= 1e-6 && incr_gap <= 1e-6,
+            error: None,
+        },
+        wi,
+    ))
+}
+
+/// The staged arm: cut the sweep MLP at its first legal boundary, price
+/// the two-stage schedule symbolically and through the materialized
+/// oracle on both profiles, and require (a) both paths agree to 1e-6 on
+/// each profile and (b) the island profile prices the schedule strictly
+/// higher — its stage-to-stage hop rides the outermost (spine) tier.
+fn staged_topology_row(func: &Func, mesh: &Mesh) -> TopologyRow {
+    use crate::pipeline::{self, schedule};
+    let fail = |err: String| TopologyRow {
+        arm: "staged".to_string(),
+        detail: String::new(),
+        rel: f64::INFINITY,
+        price_gap: f64::INFINITY,
+        incr_gap: 0.0,
+        pass: false,
+        error: Some(err),
+    };
+    let nda = crate::nda::Nda::analyze(func);
+    let legal = pipeline::legal_boundaries(func, &nda);
+    let Some(&cut) = legal.first() else {
+        return fail("no legal stage boundary".to_string());
+    };
+    let sm = match pipeline::cut_stages(func, &[cut]) {
+        Ok(sm) => sm,
+        Err(e) => return fail(format!("cut failed: {e:#}")),
+    };
+    let spec = ShardingSpec::unsharded(func);
+    let mut runtimes = Vec::new();
+    let mut gap: f64 = 0.0;
+    for name in ["a100-flat-8", "a100-2x4-islands"] {
+        let model = CostModel::new(Topology::named(name).expect("committed preset"));
+        let sc_sym = match schedule::price_staged_symbolic(&sm, &spec, mesh, &model, 4) {
+            Ok(sc) => sc,
+            Err(e) => return fail(format!("{name}: symbolic staged pricing failed: {e:#}")),
+        };
+        let sc_or = match schedule::price_staged_oracle(&sm, &spec, mesh, &model, 4) {
+            Ok(sc) => sc,
+            Err(e) => return fail(format!("{name}: oracle staged pricing failed: {e:#}")),
+        };
+        gap = gap.max(
+            (sc_sym.cost.runtime_s - sc_or.cost.runtime_s).abs()
+                / sc_or.cost.runtime_s.max(1e-12),
+        );
+        runtimes.push(sc_or.cost.runtime_s);
+    }
+    let ratio = runtimes[1] / runtimes[0].max(1e-12);
+    TopologyRow {
+        arm: "staged".to_string(),
+        detail: format!("2 stages, cut at {cut}, m=4"),
+        rel: ratio,
+        price_gap: gap,
+        incr_gap: 0.0,
+        pass: gap <= 1e-6 && ratio > 1.0,
+        error: None,
+    }
+}
+
+/// Render the topology sweep as a table.
+pub fn format_topology(rows: &[TopologyRow]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "== topology sweep (flat NVLink vs 2x4 islands; three pricing paths) =="
+    );
+    let _ = writeln!(
+        out,
+        "{:<18} {:<36} {:>10} {:>12} {:>12} {:>6}",
+        "arm", "detail", "rel", "price_gap", "incr_gap", "ok"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<18} {:<36} {:>10.4} {:>12.3e} {:>12.3e} {:>6}",
+            r.arm,
+            r.detail,
+            r.rel,
+            r.price_gap,
+            r.incr_gap,
+            if r.pass { "pass" } else { "FAIL" }
+        );
+        if let Some(err) = &r.error {
+            let _ = writeln!(out, "    ^ {err}");
+        }
+    }
+    let failed = rows.iter().filter(|r| !r.pass).count();
+    let _ = writeln!(out, "{} arms, {} failed (price tol 1e-6)", rows.len(), failed);
     out
 }
 
@@ -1801,7 +2082,6 @@ pub fn grid_json(rows: &[GridRow]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mesh::HardwareProfile;
 
     #[test]
     fn tiny_grid_runs_all_methods() {
@@ -1823,7 +2103,7 @@ mod tests {
     fn eval_throughput_measures_all_three_evaluators() {
         let func = build_model(ModelKind::Mlp, BenchScale::Tiny);
         let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let nda = crate::nda::Nda::analyze(&func);
         let actions = crate::search::build_actions(
             &func,
@@ -1863,6 +2143,18 @@ mod tests {
             format_moe(&rows, DEFAULT_REL_TOL)
         );
         assert!(format_moe(&rows, DEFAULT_REL_TOL).contains("expert parallelism"));
+    }
+
+    #[test]
+    fn topology_suite_flat_and_island_pick_different_winners() {
+        let rows = run_topology_suite();
+        assert_eq!(rows.len(), 4, "two profile arms + cross-profile + staged");
+        assert!(
+            rows.iter().all(|r| r.pass),
+            "topology suite failed:\n{}",
+            format_topology(&rows)
+        );
+        assert!(format_topology(&rows).contains("topology sweep"));
     }
 
     #[test]

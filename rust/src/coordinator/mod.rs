@@ -27,7 +27,8 @@
 //! admission sequence:
 //!
 //! 1. **Solution cache** ([`service::SolutionCache`]): repeated requests
-//!    (same model fingerprint, mesh, hardware, method, budget, seed) are
+//!    (same model fingerprint, mesh, topology fingerprint, method,
+//!    budget, seed) are
 //!    answered with the cached, already-verified artifact in
 //!    microseconds, with zero dispatches. LRU-bounded; `--no-cache`
 //!    bypasses it per request. Because deterministic (single-threaded,

@@ -30,7 +30,7 @@
 use super::metrics::Metrics;
 use crate::api::{validate_solution_spec, CompiledModel, MctsStrategy, ModelSource, Solution};
 use crate::baselines::Method;
-use crate::mesh::{HardwareKind, Mesh};
+use crate::mesh::{HardwareKind, Mesh, Topology};
 use crate::models::ModelKind;
 use crate::search::SearchConfig;
 use anyhow::anyhow;
@@ -64,7 +64,7 @@ pub struct ServiceConfig {
     /// thread mode against the socket mode byte for byte.
     pub search_threads: usize,
     /// Solution-cache capacity in entries (`0` disables the cache).
-    /// Repeated requests for the same (model, mesh, hardware, method,
+    /// Repeated requests for the same (model, mesh, topology, method,
     /// budget, seed) are answered from the cache without a dispatch.
     pub cache_capacity: usize,
     /// Admission bound: submits are refused with [`Overloaded`] while
@@ -275,7 +275,8 @@ impl ModelCache {
 // ---------------------------------------------------------------------------
 
 /// What makes two requests interchangeable for caching purposes: same
-/// serialized model (by fingerprint), mesh layout, hardware, method,
+/// serialized model (by fingerprint), mesh layout, topology (by
+/// fingerprint — custom machines cache separately from presets), method,
 /// budget, and seed. `verify` is deliberately *not* part of the key —
 /// a verified artifact can serve both verifying and non-verifying
 /// requests; the reverse is gated per entry.
@@ -283,7 +284,7 @@ impl ModelCache {
 struct CacheKey {
     model_fp: u64,
     mesh: Vec<(String, usize)>,
-    hardware: &'static str,
+    topology_fp: u64,
     method: &'static str,
     budget: usize,
     seed: u64,
@@ -294,7 +295,7 @@ impl CacheKey {
         CacheKey {
             model_fp: req.model.fingerprint(),
             mesh: req.mesh.axes.iter().map(|a| (a.name.clone(), a.size)).collect(),
-            hardware: req.hardware.name(),
+            topology_fp: req.topology.fingerprint(),
             method: req.method.name(),
             budget: req.budget,
             seed: req.seed,
@@ -406,7 +407,7 @@ pub fn process_request(
         let compiled = models.resolve(&req.model)?;
         let mut session = compiled
             .partition(&req.mesh)
-            .hardware(req.hardware)
+            .topology(req.topology.clone())
             .budget(req.budget)
             .seed(req.seed);
         // Deterministic mode: pin the search's internal thread count so a
@@ -713,7 +714,7 @@ pub fn default_request(model: ModelKind, method: Method) -> PartitionRequest {
         id: 0,
         model: ModelSource::zoo(model),
         mesh: Mesh::grid(&[("data", 2), ("model", 2)]),
-        hardware: HardwareKind::A100,
+        topology: Topology::from_kind(HardwareKind::A100),
         method,
         budget: 150,
         seed: 0,
@@ -805,7 +806,7 @@ mod tests {
         assert_eq!(back.model, req.model);
         assert_eq!(back.mesh, req.mesh);
         assert_eq!(back.method, req.method);
-        assert_eq!(back.hardware, req.hardware);
+        assert_eq!(back.topology, req.topology);
         assert_eq!(back.budget, req.budget);
         assert_eq!(back.verify, req.verify);
 

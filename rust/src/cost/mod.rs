@@ -6,8 +6,11 @@
 //! * matrix-multiplication ops (`dot_general`, `conv2d`) cost
 //!   `flops / effective_flops`, floored by their HBM traffic;
 //! * all other compute ops are memory-bound: `bytes / hbm_bandwidth`;
-//! * collectives use ring-algorithm estimates with per-axis link
-//!   bandwidth and per-hop latency;
+//! * collectives use ring-algorithm estimates over the mesh's
+//!   [`Topology`]: a collective is priced against the *slowest
+//!   participating link* of the axes it spans (a cross-island
+//!   all-gather pays the IB spine, not the NVLink island), with
+//!   per-hop latency from each axis's own tier;
 //!
 //! plus a live-range analysis that approximates peak per-device memory.
 //!
@@ -25,7 +28,7 @@
 pub mod symbolic;
 
 use crate::ir::{Func, OpKind};
-use crate::mesh::{HardwareProfile, Mesh};
+use crate::mesh::{Mesh, Topology};
 use crate::util::json::Json;
 
 /// Absolute cost estimate of a device-local function.
@@ -78,16 +81,16 @@ impl Cost {
     }
 }
 
-/// The cost model: hardware profile + tuning constants.
+/// The cost model: hardware topology + tuning constants.
 #[derive(Clone, Debug)]
 pub struct CostModel {
-    pub hw: HardwareProfile,
+    pub hw: Topology,
     /// Memory-penalty constant `C` of §4.5.
     pub mem_penalty: f64,
 }
 
 impl CostModel {
-    pub fn new(hw: HardwareProfile) -> Self {
+    pub fn new(hw: Topology) -> Self {
         CostModel { hw, mem_penalty: 10.0 }
     }
 
@@ -171,23 +174,43 @@ impl CostModel {
     /// traffic.
     pub fn matmul_time(&self, flops: f64, in_bytes: f64, out_bytes: f64) -> f64 {
         let t_compute = flops / self.hw.effective_flops();
-        let t_mem = (in_bytes + out_bytes) / self.hw.hbm_bandwidth;
+        let t_mem = (in_bytes + out_bytes) / self.hw.device.hbm_bandwidth;
         t_compute.max(t_mem)
     }
 
     /// Time of a memory-bound op (everything that is not matmul-like or a
     /// collective).
     pub fn membound_time(&self, in_bytes: f64, out_bytes: f64) -> f64 {
-        (in_bytes + out_bytes) / self.hw.hbm_bandwidth
+        (in_bytes + out_bytes) / self.hw.device.hbm_bandwidth
     }
 
     /// Time of a zero-communication shard slice (local copy).
     pub fn shard_slice_time(&self, out_bytes: f64) -> f64 {
-        out_bytes / self.hw.hbm_bandwidth
+        out_bytes / self.hw.device.hbm_bandwidth
+    }
+
+    /// The bandwidth a collective spanning `axes` is priced at: the
+    /// slowest participating link — the step rate of a ring (or any
+    /// bandwidth-optimal schedule) crossing several fabrics is set by
+    /// its slowest hop. Singleton axes do not participate. With all
+    /// tiers equal this degenerates to the flat per-axis bandwidth
+    /// bit-for-bit (`min` over equal values is the identity), which P12
+    /// pins.
+    pub fn collective_bandwidth(&self, axes: &[usize], mesh: &Mesh) -> f64 {
+        let mut bw = f64::INFINITY;
+        for &a in axes {
+            if mesh.axis_size(a) > 1 {
+                bw = bw.min(self.hw.axis_bandwidth(a));
+            }
+        }
+        bw
     }
 
     /// Ring all-reduce over `axes`, sequentially: `(seconds, bytes)`.
+    /// Bytes move at the slowest participating link; each axis pays its
+    /// own tier's per-hop latency.
     pub fn all_reduce_cost(&self, axes: &[usize], mesh: &Mesh, out_bytes: f64) -> (f64, f64) {
+        let bw = self.collective_bandwidth(axes, mesh);
         let mut t = 0.0;
         let mut bytes = 0.0;
         for &a in axes {
@@ -196,7 +219,7 @@ impl CostModel {
                 continue;
             }
             let moved = 2.0 * out_bytes * (n - 1.0) / n;
-            t += moved / self.hw.axis_bandwidth(a) + 2.0 * (n - 1.0) * self.hw.link_latency;
+            t += moved / bw + 2.0 * (n - 1.0) * self.hw.axis_latency(a);
             bytes += moved;
         }
         (t, bytes)
@@ -210,7 +233,7 @@ impl CostModel {
             return (0.0, 0.0);
         }
         let moved = out_bytes * (n - 1.0) / n;
-        (moved / self.hw.axis_bandwidth(axis) + (n - 1.0) * self.hw.link_latency, moved)
+        (moved / self.hw.axis_bandwidth(axis) + (n - 1.0) * self.hw.axis_latency(axis), moved)
     }
 
     /// Reduce-scatter along `axis`; `in_bytes` is the full partial tensor.
@@ -220,7 +243,7 @@ impl CostModel {
             return (0.0, 0.0);
         }
         let moved = in_bytes * (n - 1.0) / n;
-        (moved / self.hw.axis_bandwidth(axis) + (n - 1.0) * self.hw.link_latency, moved)
+        (moved / self.hw.axis_bandwidth(axis) + (n - 1.0) * self.hw.axis_latency(axis), moved)
     }
 
     /// All-to-all along `axis`.
@@ -230,14 +253,14 @@ impl CostModel {
             return (0.0, 0.0);
         }
         let moved = in_bytes * (n - 1.0) / n;
-        (moved / self.hw.axis_bandwidth(axis) + (n - 1.0) * self.hw.link_latency, moved)
+        (moved / self.hw.axis_bandwidth(axis) + (n - 1.0) * self.hw.axis_latency(axis), moved)
     }
 
     /// Relative cost `C(s) = RT(s) + MP(s)` (§4.5). `base` is the
     /// unsharded module's cost; `dm` the per-device memory.
     pub fn relative(&self, sharded: &Cost, base: &Cost) -> f64 {
         let rt = sharded.runtime_s / base.runtime_s.max(1e-12);
-        let dm = self.hw.memory_bytes as f64;
+        let dm = self.hw.device.memory_bytes as f64;
         let mp = if (sharded.peak_bytes as f64) > dm {
             self.mem_penalty * ((sharded.peak_bytes as f64) - dm)
                 / (base.peak_bytes as f64).max(1.0)
@@ -249,7 +272,7 @@ impl CostModel {
 
     /// Does the sharded module fit in device memory?
     pub fn fits(&self, cost: &Cost) -> bool {
-        cost.peak_bytes <= self.hw.memory_bytes
+        cost.peak_bytes <= self.hw.device.memory_bytes
     }
 }
 
@@ -288,7 +311,7 @@ mod tests {
     use super::*;
     use crate::ir::{FuncBuilder, ReduceKind, TensorType, ValueId};
 
-    use crate::mesh::HardwareKind;
+    use crate::mesh::{HardwareKind, LinkTier};
     use crate::sharding::{partition, ShardingSpec};
 
     fn mlp(batch: i64, din: i64, dh: i64, dout: i64) -> Func {
@@ -303,7 +326,7 @@ mod tests {
     }
 
     fn model() -> CostModel {
-        CostModel::new(HardwareProfile::new(HardwareKind::A100))
+        CostModel::new(Topology::from_kind(HardwareKind::A100))
     }
 
     #[test]
@@ -368,13 +391,82 @@ mod tests {
     #[test]
     fn memory_penalty_applies_above_limit() {
         let mut m = model();
-        m.hw.memory_bytes = 1; // force overflow
+        m.hw.device.memory_bytes = 1; // force overflow
         let f = mlp(256, 32, 64, 16);
         let mesh = Mesh::grid(&[("d", 1)]);
         let c = m.evaluate(&f, &mesh);
         let rel = m.relative(&c, &c);
         assert!(rel > 1.0, "penalized relative cost must exceed RT=1, got {rel}");
         assert!(!m.fits(&c));
+    }
+
+    #[test]
+    fn cross_island_all_gather_prices_at_the_slow_tier() {
+        // On the 2x4-island profile, axis 0 stays inside an NVLink
+        // island and axis 1 crosses the IB spine: the same all_gather
+        // must pay the spine's bandwidth and latency when it spans
+        // islands.
+        let m = CostModel::new(Topology::named("a100-2x4-islands").unwrap());
+        let mesh = Mesh::grid(&[("gpu", 4), ("island", 2)]);
+        let out_bytes = 64.0 * (1 << 20) as f64;
+        let (t_isl, b_isl) = m.all_gather_cost(0, &mesh, out_bytes);
+        let (t_spine, b_spine) = m.all_gather_cost(1, &mesh, out_bytes);
+        let moved_spine = out_bytes * 0.5;
+        assert_eq!(t_spine, moved_spine / 25e9 + 5e-6, "spine tier sets the price");
+        assert_eq!(b_spine, moved_spine);
+        assert_eq!(t_isl, out_bytes * 0.75 / 300e9 + 3.0 * 2e-6);
+        assert_eq!(b_isl, out_bytes * 0.75);
+        // Per byte moved, crossing islands is strictly slower.
+        assert!(t_spine / b_spine > t_isl / b_isl);
+    }
+
+    #[test]
+    fn multi_axis_all_reduce_pays_the_slowest_participating_link() {
+        let m = CostModel::new(Topology::named("a100-2x4-islands").unwrap());
+        let mesh = Mesh::grid(&[("gpu", 4), ("island", 2)]);
+        let out_bytes = 8.0 * (1 << 20) as f64;
+        assert_eq!(m.collective_bandwidth(&[0], &mesh), 300e9);
+        assert_eq!(m.collective_bandwidth(&[0, 1], &mesh), 25e9);
+        let (t, bytes) = m.all_reduce_cost(&[0, 1], &mesh, out_bytes);
+        let moved0 = 2.0 * out_bytes * 0.75;
+        let moved1 = 2.0 * out_bytes * 0.5;
+        // Every byte rides the spine rate; latency stays per-axis.
+        // (Grouped per axis, matching the accumulation order.)
+        let expect = (moved0 / 25e9 + 2.0 * 3.0 * 2e-6) + (moved1 / 25e9 + 2.0 * 5e-6);
+        assert_eq!(t, expect);
+        assert_eq!(bytes, moved0 + moved1);
+        // A singleton axis never drags the price down or up.
+        let mesh1 = Mesh::grid(&[("gpu", 4), ("island", 1)]);
+        let (t1, _) = m.all_reduce_cost(&[0, 1], &mesh1, out_bytes);
+        let (t0, _) = m.all_reduce_cost(&[0], &mesh1, out_bytes);
+        assert_eq!(t1, t0);
+    }
+
+    #[test]
+    fn equal_tiers_price_like_the_flat_model() {
+        // The hierarchical rules collapse to flat per-axis pricing when
+        // every tier is identical — bit-for-bit (P12 pins this on random
+        // programs; this is the closed-form corner).
+        let m = CostModel::new(Topology::named("a100-flat-8").unwrap());
+        let mesh = Mesh::grid(&[("a", 2), ("b", 4)]);
+        let out_bytes = 3.0 * (1 << 20) as f64 + 0.37;
+        let (joint, _) = m.all_reduce_cost(&[0, 1], &mesh, out_bytes);
+        let (a, _) = m.all_reduce_cost(&[0], &mesh, out_bytes);
+        let (b, _) = m.all_reduce_cost(&[1], &mesh, out_bytes);
+        assert_eq!(joint.to_bits(), (a + b).to_bits());
+    }
+
+    #[test]
+    fn custom_topology_prices_collectives() {
+        let custom = Topology::new(
+            "lab",
+            crate::mesh::DeviceClass::a100(),
+            vec![LinkTier::new(200e9, 1e-6), LinkTier::new(10e9, 8e-6)],
+        );
+        let m = CostModel::new(custom);
+        let mesh = Mesh::grid(&[("x", 2), ("y", 2)]);
+        let (t, _) = m.all_to_all_cost(1, &mesh, 1e6);
+        assert_eq!(t, 0.5e6 / 10e9 + 8e-6);
     }
 
     #[test]

@@ -510,7 +510,7 @@ impl<'a> SymbolicEvaluator<'a> {
 mod tests {
     use super::*;
     use crate::ir::{FuncBuilder, TensorType};
-    use crate::mesh::{HardwareKind, HardwareProfile};
+    use crate::mesh::{HardwareKind, Topology};
     use crate::sharding::partition;
 
     fn mlp() -> Func {
@@ -525,7 +525,7 @@ mod tests {
     }
 
     fn model() -> CostModel {
-        CostModel::new(HardwareProfile::new(HardwareKind::A100))
+        CostModel::new(Topology::from_kind(HardwareKind::A100))
     }
 
     fn assert_costs_match(f: &Func, spec: &ShardingSpec, mesh: &Mesh) {

@@ -42,9 +42,6 @@
 //! ([`runtime::diff`]) against the interpreter oracle before being
 //! accepted.
 //!
-//! The pre-session entry points ([`search::auto_partition`],
-//! [`baselines::run_method`]) remain as thin deprecated shims.
-//!
 //! ## Layers, bottom-up
 //!
 //! * [`util`] — RNG and the JSON emit/parse layer the wire formats ride
@@ -56,8 +53,10 @@
 //!   Analysis* (§3), its sharding-conflict detection (§3.3), compatible
 //!   conflicts and compatibility sets (§3.5), and cross-layer grouping
 //!   (§3.6, §4.4).
-//! * [`mesh`] — logical device meshes and hardware profiles (A100, P100,
-//!   TPUv3) used by the cost model.
+//! * [`mesh`] — logical device meshes and the serializable
+//!   [`mesh::Topology`] model (named presets such as `a100`, `p100`,
+//!   `tpuv3`, and the hierarchical island profiles; per-axis link tiers
+//!   plus a device class) the cost model prices against.
 //! * [`sharding`] — sharding specs (serializable, with untrusted-input
 //!   structural checking), rule-driven propagation, and the SPMD rewriter
 //!   that emits device-local IR with collectives.

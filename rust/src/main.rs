@@ -77,7 +77,7 @@ use toast::baselines::Method;
 use toast::coordinator::experiments as exp;
 use toast::coordinator::{service, Service, ServiceConfig};
 use toast::cost::CostModel;
-use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::mesh::{HardwareKind, Mesh, Topology};
 use toast::models::ModelKind;
 use toast::nda::Nda;
 use toast::search::ActionSpaceConfig;
@@ -125,7 +125,8 @@ fn usage() {
         "toast — auto-partitioning via named-dimension analysis + MCTS
 USAGE: toast <command> [--flag value]...
   analyze    --model <mlp|attention|t2b|t7b|gns|unet|itx|moe> [--paper]
-  partition  --model M --mesh 4x2 --hw <a100|p100|tpuv3>
+  partition  --model M --mesh 4x2 [--topology <name|file.json>]
+             [--hw <a100|p100|tpuv3>] (legacy preset shorthand)
              [--method <toast|alpa|automap|manual>] [--budget N] [--seed N]
              [--stages K[,K...]] [--microbatches M] [--require-stages]
              [--paper] [--validate] [--out spec.json]
@@ -136,11 +137,16 @@ USAGE: toast <command> [--flag value]...
   search     --model M --mesh 2x2 [--budget N] [--validate-best]
   validate   --model M --mesh 2x2 [--budget N]
   bench      --experiment <fig8|fig9|fig10|ablations|differential|pipeline
-                           |search-speed|service-load|moe>
+                           |search-speed|service-load|moe|topology>
              [--scale tiny|bench|paper] [--json]
              (moe compares expert(xdata) vs pure-data plans on dedicated
               expert-axis meshes, gates the routed all_to_all count, the
               1e-6 pricing gap, and the differential check)
+             (topology prices the same model on a100-flat-8 vs
+              a100-2x4-islands, gating that the profiles pick different
+              winning specs, that the island winner is cheaper under
+              hierarchical pricing, and the 1e-6 oracle/symbolic/
+              incremental agreement)
              (search-speed and service-load also take [--out report.json]
               and [--check [baseline.json]]: search-speed measures
               evaluator throughput, legacy-vs-optimized search nodes/sec,
@@ -163,7 +169,8 @@ USAGE: toast <command> [--flag value]...
   worker     --connect HOST:PORT [--name ID] [--no-verify] [--search-threads N]
              [--reconnect-max N] (0 = retry forever; exponential backoff)
   submit     (--connect HOST:PORT | --workers N) [--models a,b] [--methods x,y]
-             [--mesh 2x2] [--hw a100] [--budget N] [--seed N]
+             [--mesh 2x2] [--topology <name|file.json>] [--hw a100]
+             [--budget N] [--seed N]
              [--search-threads N] [--out-dir DIR] [--canonical]
              [--no-cache] [--expect-verified] [--status]
   e2e        [--devices N] [--steps N] [--artifacts DIR]"
@@ -215,6 +222,21 @@ fn get_hw(flags: &HashMap<String, String>) -> anyhow::Result<HardwareKind> {
         .unwrap_or(Ok(HardwareKind::A100))
 }
 
+/// Resolve `--topology <name|file.json>` — a named preset
+/// ([`Topology::named`]) or a custom machine serialized as JSON — with
+/// the legacy `--hw` enum as fallback; defaults to the `a100` preset.
+fn get_topology(flags: &HashMap<String, String>) -> anyhow::Result<Topology> {
+    if let Some(spec) = flags.get("topology") {
+        if spec.ends_with(".json") || std::path::Path::new(spec).exists() {
+            let text = std::fs::read_to_string(spec)
+                .map_err(|e| anyhow::anyhow!("--topology {spec}: {e}"))?;
+            return Topology::from_json_str(&text);
+        }
+        return Topology::named(spec);
+    }
+    Ok(Topology::from_kind(get_hw(flags)?))
+}
+
 fn cmd_analyze(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let kind = get_model(flags)?;
     let func =
@@ -258,7 +280,7 @@ fn cmd_partition(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let kind = get_model(flags)?;
     let paper = flags.contains_key("paper");
     let mesh = get_mesh(flags)?;
-    let hw = get_hw(flags)?;
+    let topo = get_topology(flags)?;
     let method: Method = flags
         .get("method")
         .map(|s| s.parse().map_err(|e: String| anyhow::anyhow!(e)))
@@ -272,12 +294,12 @@ fn cmd_partition(flags: &HashMap<String, String>) -> anyhow::Result<()> {
          (drop --paper or --validate)"
     );
 
-    println!("partitioning {} on {} / {}", kind.name(), mesh.describe(), hw.name());
+    println!("partitioning {} on {} / {}", kind.name(), mesh.describe(), topo.name);
     let compiled = CompiledModel::from_kind(kind, paper)?;
     let mut session = compiled
         .partition(&mesh)
         .method(method)
-        .hardware(hw)
+        .topology(topo)
         .budget(budget)
         .seed(seed)
         .validate(validate);
@@ -349,7 +371,7 @@ fn cmd_apply(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         sol.model.name(),
         sol.strategy,
         sol.mesh.describe(),
-        sol.hardware.name()
+        sol.topology.name
     );
 
     // Rebuild the model the artifact references — through the session
@@ -362,7 +384,7 @@ fn cmd_apply(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     // Re-price through the same oracle path the producer used: the GPipe
     // schedule model for staged artifacts, partition + evaluate for flat
     // ones.
-    let cost_model = CostModel::new(HardwareProfile::new(sol.hardware));
+    let cost_model = CostModel::new(sol.topology.clone());
     let (cost, _base, relative) = match &sol.stages {
         Some(sa) => {
             println!(
@@ -425,7 +447,7 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let compiled = CompiledModel::from_kind(kind, false)?;
     let sol = compiled
         .partition(&mesh)
-        .hardware(get_hw(flags)?)
+        .topology(get_topology(flags)?)
         .action_config(acfg.clone())
         .budget(budget)
         .validate(validate_best)
@@ -552,6 +574,15 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             print!("{}", exp::format_moe(&rows, tol));
             let failed = rows.iter().filter(|r| !r.pass).count();
             anyhow::ensure!(failed == 0, "{failed} moe rows failed");
+        }
+        exp::Experiment::Topology => {
+            // Deterministic (search-free) hierarchical-pricing sweep:
+            // the same model must pick different winners on the flat
+            // and island profiles, with all pricing paths agreeing.
+            let rows = exp::run_topology_suite();
+            print!("{}", exp::format_topology(&rows));
+            let failed = rows.iter().filter(|r| !r.pass).count();
+            anyhow::ensure!(failed == 0, "{failed} topology arms failed");
         }
         exp::Experiment::SearchSpeed => {
             let report = exp::run_search_speed(scale);
@@ -833,7 +864,7 @@ fn cmd_submit(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         .map(|m| m.trim().parse().map_err(|e: String| anyhow::anyhow!(e)))
         .collect::<anyhow::Result<_>>()?;
     let mesh = get_mesh(flags)?;
-    let hw = get_hw(flags)?;
+    let topo = get_topology(flags)?;
     let budget: usize = flags.get("budget").and_then(|s| s.parse().ok()).unwrap_or(150);
     let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(5);
     let canonical = flags.contains_key("canonical");
@@ -849,7 +880,7 @@ fn cmd_submit(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         for &method in &methods {
             let mut req = service::default_request(model, method);
             req.mesh = mesh.clone();
-            req.hardware = hw;
+            req.topology = topo.clone();
             req.budget = budget;
             req.seed = seed;
             req.no_cache = no_cache;

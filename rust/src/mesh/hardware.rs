@@ -1,12 +1,45 @@
-//! Hardware profiles for the platforms in the paper's evaluation (§5.1):
-//! NVIDIA A100 (NVLink), NVIDIA P100 (PCIe-era NVLink), and Google TPUv3
-//! (ICI). Numbers are public peak specs; the cost model only relies on
+//! Hardware topology model: per-device-class compute/memory plus
+//! per-mesh-axis interconnect tiers.
+//!
+//! A [`Topology`] is the first-class, serializable description of the
+//! machine the cost model prices against. It pairs one [`DeviceClass`]
+//! (peak FLOPs, HBM bandwidth, memory capacity, matmul efficiency) with
+//! one [`LinkTier`] per mesh axis: `tiers[i]` is the fabric collectives
+//! on mesh axis `i` traverse. Tiers are ordered inner (fastest) to
+//! outer (slowest) by convention — NVLink/ICI islands first, IB/DCN
+//! spines behind them — so hierarchical machines are described directly
+//! and the search can place pipeline stages on the slow axis while
+//! sharding rides the fast one.
+//!
+//! Built-in profiles (resolve via [`Topology::named`]):
+//!
+//! | name               | device | tiers (bandwidth, latency)                   |
+//! |--------------------|--------|----------------------------------------------|
+//! | `a100`             | A100   | (300 GB/s, 2 µs) (100 GB/s, 2 µs) (25 GB/s, 2 µs) |
+//! | `p100`             | P100   | (80 GB/s, 5 µs) (32 GB/s, 5 µs) (12 GB/s, 5 µs)   |
+//! | `tpuv3`            | TPUv3  | (140 GB/s, 1 µs) (140 GB/s, 1 µs) (70 GB/s, 1 µs) |
+//! | `a100-flat-8`      | A100   | (300 GB/s, 2 µs) × 3 — idealized flat NVLink fabric |
+//! | `a100-2x4-islands` | A100   | (300 GB/s, 2 µs) (25 GB/s, 5 µs) (25 GB/s, 5 µs) — NVLink islands of 4, IB spine |
+//!
+//! Numbers are public peak specs; the cost model only relies on
 //! *relative* magnitudes (§4.5 uses relative runtime), so modest
-//! inaccuracies do not change method rankings.
+//! inaccuracies do not change method rankings. Custom machines load
+//! from JSON ([`Topology::from_json`]) with exact `f64` round-trips.
+//!
+//! A mesh axis beyond the described tiers is a hard error in
+//! [`Topology::axis_tier`] (the mesh must fit the machine); the one
+//! deliberate exception is the pipeline *stage* axis, which
+//! [`Topology::stage_tier`] maps to the outermost tier when the intra
+//! mesh already consumes every described tier — inter-stage traffic
+//! crosses at least the slowest fabric.
 
+use crate::mesh::Mesh;
+use crate::util::json::Json;
+use anyhow::{anyhow, ensure};
 
-
-/// Supported accelerator platforms.
+/// The platform enum of the paper's evaluation (§5.1). Kept as the
+/// legacy spelling of the three classic profiles; new code should name
+/// topologies directly ([`Topology::named`] / [`Topology::from_kind`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum HardwareKind {
     A100,
@@ -40,79 +73,366 @@ impl std::str::FromStr for HardwareKind {
     }
 }
 
-/// Per-device characteristics plus interconnect parameters.
-#[derive(Clone, Debug)]
-pub struct HardwareProfile {
-    pub kind: HardwareKind,
+/// One interconnect tier: the link collectives on a mesh axis traverse.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkTier {
+    /// Per-link bandwidth in one direction, bytes/s.
+    pub bandwidth: f64,
+    /// Per-hop collective latency, seconds.
+    pub latency: f64,
+}
+
+impl LinkTier {
+    pub fn new(bandwidth: f64, latency: f64) -> LinkTier {
+        LinkTier { bandwidth, latency }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("bandwidth", Json::n(self.bandwidth)),
+            ("latency", Json::n(self.latency)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> crate::Result<LinkTier> {
+        let tier = LinkTier {
+            bandwidth: f64_field(j, "bandwidth", "link tier")?,
+            latency: f64_field(j, "latency", "link tier")?,
+        };
+        ensure!(tier.bandwidth > 0.0, "link tier: bandwidth must be > 0");
+        ensure!(tier.latency >= 0.0, "link tier: latency must be >= 0");
+        Ok(tier)
+    }
+}
+
+/// Per-device compute and memory characteristics (one class per
+/// topology; mixed generations within a mesh are a planned extension).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceClass {
     /// Peak dense matmul throughput at the model dtype, FLOP/s.
     pub flops: f64,
     /// HBM bandwidth, bytes/s.
     pub hbm_bandwidth: f64,
     /// Per-device memory capacity, bytes.
     pub memory_bytes: u64,
-    /// Interconnect (all-reduce ring) bandwidth per link, bytes/s.
-    /// `link_bandwidth[i]` applies to mesh axis `i`; axes beyond the list
-    /// reuse the last entry (e.g. DCN-ish outer axes are slower).
-    pub link_bandwidth: Vec<f64>,
-    /// Per-hop collective latency, seconds.
-    pub link_latency: f64,
     /// Achievable fraction of peak FLOPs for large matmuls.
     pub matmul_efficiency: f64,
 }
 
-impl HardwareProfile {
-    /// Public peak numbers; `link_bandwidth[0]` is the fast inner axis
-    /// (NVLink / ICI), later entries model slower outer axes.
-    pub fn new(kind: HardwareKind) -> Self {
-        match kind {
-            // A100 SXM: 312 TFLOP/s bf16, 2.0 TB/s HBM2e, 80 GB,
-            // NVLink3 600 GB/s total (~300 GB/s per direction).
-            HardwareKind::A100 => HardwareProfile {
-                kind,
-                flops: 312e12,
-                hbm_bandwidth: 2.0e12,
-                memory_bytes: 80 * (1 << 30),
-                link_bandwidth: vec![300e9, 100e9, 25e9],
-                link_latency: 2e-6,
-                matmul_efficiency: 0.55,
-            },
-            // P100: 21.2 TFLOP/s fp16, 732 GB/s HBM2, 16 GB, NVLink1
-            // 160 GB/s total (~80 GB/s per direction).
-            HardwareKind::P100 => HardwareProfile {
-                kind,
-                flops: 21.2e12,
-                hbm_bandwidth: 732e9,
-                memory_bytes: 16 * (1 << 30),
-                link_bandwidth: vec![80e9, 32e9, 12e9],
-                link_latency: 5e-6,
-                matmul_efficiency: 0.50,
-            },
-            // TPUv3: 123 TFLOP/s bf16 per chip, 900 GB/s HBM, 32 GB (16
-            // per core x2), ICI ~70 GB/s per link x multiple links.
-            HardwareKind::TPUv3 => HardwareProfile {
-                kind,
-                flops: 123e12,
-                hbm_bandwidth: 900e9,
-                memory_bytes: 32 * (1 << 30),
-                link_bandwidth: vec![140e9, 140e9, 70e9],
-                link_latency: 1e-6,
-                matmul_efficiency: 0.65,
-            },
-        }
-    }
-
-    /// Link bandwidth for mesh axis `axis`.
-    pub fn axis_bandwidth(&self, axis: usize) -> f64 {
-        *self
-            .link_bandwidth
-            .get(axis)
-            .unwrap_or_else(|| self.link_bandwidth.last().expect("non-empty link_bandwidth"))
-    }
-
+impl DeviceClass {
     /// Effective matmul FLOP/s after efficiency derating.
     pub fn effective_flops(&self) -> f64 {
         self.flops * self.matmul_efficiency
     }
+
+    /// A100 SXM: 312 TFLOP/s bf16, 2.0 TB/s HBM2e, 80 GB.
+    pub fn a100() -> DeviceClass {
+        DeviceClass {
+            flops: 312e12,
+            hbm_bandwidth: 2.0e12,
+            memory_bytes: 80 * (1 << 30),
+            matmul_efficiency: 0.55,
+        }
+    }
+
+    /// P100: 21.2 TFLOP/s fp16, 732 GB/s HBM2, 16 GB.
+    pub fn p100() -> DeviceClass {
+        DeviceClass {
+            flops: 21.2e12,
+            hbm_bandwidth: 732e9,
+            memory_bytes: 16 * (1 << 30),
+            matmul_efficiency: 0.50,
+        }
+    }
+
+    /// TPUv3: 123 TFLOP/s bf16 per chip, 900 GB/s HBM, 32 GB (16 per
+    /// core x2).
+    pub fn tpuv3() -> DeviceClass {
+        DeviceClass {
+            flops: 123e12,
+            hbm_bandwidth: 900e9,
+            memory_bytes: 32 * (1 << 30),
+            matmul_efficiency: 0.65,
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("flops", Json::n(self.flops)),
+            ("hbm_bandwidth", Json::n(self.hbm_bandwidth)),
+            ("memory_bytes", u64_to_json(self.memory_bytes)),
+            ("matmul_efficiency", Json::n(self.matmul_efficiency)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> crate::Result<DeviceClass> {
+        let ctx = "device class";
+        let dc = DeviceClass {
+            flops: f64_field(j, "flops", ctx)?,
+            hbm_bandwidth: f64_field(j, "hbm_bandwidth", ctx)?,
+            memory_bytes: u64_field(j, "memory_bytes", ctx)?,
+            matmul_efficiency: f64_field(j, "matmul_efficiency", ctx)?,
+        };
+        ensure!(dc.flops > 0.0, "{ctx}: flops must be > 0");
+        ensure!(dc.hbm_bandwidth > 0.0, "{ctx}: hbm_bandwidth must be > 0");
+        ensure!(
+            dc.matmul_efficiency > 0.0 && dc.matmul_efficiency <= 1.0,
+            "{ctx}: matmul_efficiency must be in (0, 1]"
+        );
+        Ok(dc)
+    }
+}
+
+/// A machine description: one device class plus one link tier per mesh
+/// axis, inner (fastest) to outer (slowest). See the module docs for
+/// the built-in profiles and the JSON wire form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    /// Profile name; presets use their [`Topology::named`] spelling,
+    /// custom files carry whatever their author wrote.
+    pub name: String,
+    pub device: DeviceClass,
+    /// `tiers[i]` prices collectives on mesh axis `i`. Must cover every
+    /// mesh axis ([`Topology::check_mesh`]); may describe more tiers
+    /// than the mesh uses (e.g. one for an appended pipeline stage
+    /// axis).
+    pub tiers: Vec<LinkTier>,
+}
+
+impl Topology {
+    pub fn new(name: impl Into<String>, device: DeviceClass, tiers: Vec<LinkTier>) -> Topology {
+        assert!(!tiers.is_empty(), "topology needs at least one link tier");
+        Topology { name: name.into(), device, tiers }
+    }
+
+    /// The preset a [`HardwareKind`] maps to — the legacy enum's pricing
+    /// is preserved exactly (same bandwidths, one shared latency across
+    /// tiers).
+    pub fn from_kind(kind: HardwareKind) -> Topology {
+        match kind {
+            HardwareKind::A100 => Topology::new(
+                "a100",
+                DeviceClass::a100(),
+                vec![
+                    LinkTier::new(300e9, 2e-6),
+                    LinkTier::new(100e9, 2e-6),
+                    LinkTier::new(25e9, 2e-6),
+                ],
+            ),
+            HardwareKind::P100 => Topology::new(
+                "p100",
+                DeviceClass::p100(),
+                vec![
+                    LinkTier::new(80e9, 5e-6),
+                    LinkTier::new(32e9, 5e-6),
+                    LinkTier::new(12e9, 5e-6),
+                ],
+            ),
+            HardwareKind::TPUv3 => Topology::new(
+                "tpuv3",
+                DeviceClass::tpuv3(),
+                vec![
+                    LinkTier::new(140e9, 1e-6),
+                    LinkTier::new(140e9, 1e-6),
+                    LinkTier::new(70e9, 1e-6),
+                ],
+            ),
+        }
+    }
+
+    /// Resolve a named preset (see the module-doc table).
+    pub fn named(name: &str) -> crate::Result<Topology> {
+        match name.to_ascii_lowercase().as_str() {
+            "a100" => Ok(Topology::from_kind(HardwareKind::A100)),
+            "p100" => Ok(Topology::from_kind(HardwareKind::P100)),
+            "tpuv3" | "tpu" => Ok(Topology::from_kind(HardwareKind::TPUv3)),
+            // Idealized fully switched NVLink fabric over 8 GPUs: every
+            // axis — including an appended pipeline stage axis — rides
+            // the fast tier.
+            "a100-flat-8" => Ok(Topology::new(
+                "a100-flat-8",
+                DeviceClass::a100(),
+                vec![LinkTier::new(300e9, 2e-6); 3],
+            )),
+            // Two NVLink islands of four GPUs: mesh axis 0 stays inside
+            // an island (NVLink), axis 1 crosses islands over the IB
+            // spine, and a pipeline stage axis rides the spine too.
+            "a100-2x4-islands" => Ok(Topology::new(
+                "a100-2x4-islands",
+                DeviceClass::a100(),
+                vec![
+                    LinkTier::new(300e9, 2e-6),
+                    LinkTier::new(25e9, 5e-6),
+                    LinkTier::new(25e9, 5e-6),
+                ],
+            )),
+            other => Err(anyhow!(
+                "unknown topology '{other}' (presets: {}; or pass a JSON topology file)",
+                Topology::preset_names().join("|")
+            )),
+        }
+    }
+
+    /// Names [`Topology::named`] resolves.
+    pub fn preset_names() -> [&'static str; 5] {
+        ["a100", "p100", "tpuv3", "a100-flat-8", "a100-2x4-islands"]
+    }
+
+    /// The legacy enum this topology is the preset of, if any — used to
+    /// emit the backward-compatible `hardware` wire field and by the
+    /// Alpa baseline's platform tuning.
+    pub fn kind_hint(&self) -> Option<HardwareKind> {
+        match self.name.as_str() {
+            "a100" => Some(HardwareKind::A100),
+            "p100" => Some(HardwareKind::P100),
+            "tpuv3" => Some(HardwareKind::TPUv3),
+            _ => None,
+        }
+    }
+
+    /// Effective matmul FLOP/s after efficiency derating.
+    pub fn effective_flops(&self) -> f64 {
+        self.device.effective_flops()
+    }
+
+    /// The link tier of mesh axis `axis`. Hard error (panic) when the
+    /// axis is not described: the mesh must fit the machine — use
+    /// [`Topology::check_mesh`] at API boundaries to surface this as a
+    /// `Result` before pricing starts.
+    pub fn axis_tier(&self, axis: usize) -> &LinkTier {
+        match self.tiers.get(axis) {
+            Some(t) => t,
+            None => panic!(
+                "mesh axis {axis} has no link tier: topology '{}' describes {} tier(s); \
+                 the mesh rank must not exceed the tier count",
+                self.name,
+                self.tiers.len()
+            ),
+        }
+    }
+
+    /// Link bandwidth of mesh axis `axis` (see [`Topology::axis_tier`]).
+    pub fn axis_bandwidth(&self, axis: usize) -> f64 {
+        self.axis_tier(axis).bandwidth
+    }
+
+    /// Per-hop latency of mesh axis `axis` (see [`Topology::axis_tier`]).
+    pub fn axis_latency(&self, axis: usize) -> f64 {
+        self.axis_tier(axis).latency
+    }
+
+    /// The tier stage-to-stage point-to-point transfers ride. The stage
+    /// axis is appended *behind* the intra mesh, so when the intra mesh
+    /// already consumes every described tier the stage axis maps to the
+    /// outermost (slowest) one — inter-stage traffic crosses at least
+    /// the slowest fabric.
+    pub fn stage_tier(&self, stage_axis: usize) -> &LinkTier {
+        self.tiers
+            .get(stage_axis)
+            .unwrap_or_else(|| self.tiers.last().expect("topology has at least one tier"))
+    }
+
+    /// Does this topology describe every axis of `mesh`? Call at API
+    /// boundaries so a mesh/topology mismatch is a friendly error
+    /// instead of a panic deep inside pricing.
+    pub fn check_mesh(&self, mesh: &Mesh) -> crate::Result<()> {
+        ensure!(
+            mesh.rank() <= self.tiers.len(),
+            "mesh {} has {} axes but topology '{}' describes only {} link tier(s); \
+             every mesh axis needs a tier",
+            mesh.describe(),
+            mesh.rank(),
+            self.name,
+            self.tiers.len()
+        );
+        Ok(())
+    }
+
+    /// Wire form: `{"name":..,"device":{..},"tiers":[{..},..]}`. Numbers
+    /// round-trip exactly (the JSON layer renders `f64` losslessly).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::s(self.name.clone())),
+            ("device", self.device.to_json()),
+            ("tiers", Json::Arr(self.tiers.iter().map(|t| t.to_json()).collect())),
+        ])
+    }
+
+    /// Inverse of [`Topology::to_json`].
+    pub fn from_json(j: &Json) -> crate::Result<Topology> {
+        let ctx = "topology";
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{ctx}: missing field 'name'"))?
+            .to_string();
+        let device =
+            DeviceClass::from_json(j.get("device").ok_or_else(|| {
+                anyhow!("{ctx} '{name}': missing field 'device'")
+            })?)?;
+        let tiers = match j.get("tiers") {
+            Some(Json::Arr(items)) => {
+                items.iter().map(LinkTier::from_json).collect::<crate::Result<Vec<_>>>()?
+            }
+            _ => return Err(anyhow!("{ctx} '{name}': missing or non-array field 'tiers'")),
+        };
+        ensure!(!tiers.is_empty(), "{ctx} '{name}': needs at least one link tier");
+        Ok(Topology { name, device, tiers })
+    }
+
+    /// Render as a JSON document (the `--topology file.json` format).
+    pub fn to_json_string(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Parse a JSON document produced by [`Topology::to_json_string`].
+    pub fn from_json_str(s: &str) -> crate::Result<Topology> {
+        Topology::from_json(&Json::parse(s)?)
+    }
+
+    /// Stable fingerprint for solution-cache keying: FNV-1a over the
+    /// rendered wire form, so two requests hash equal exactly when their
+    /// serialized topologies are identical.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let rendered = self.to_json().render();
+        let mut hash = FNV_OFFSET;
+        for byte in rendered.as_bytes() {
+            hash ^= u64::from(*byte);
+            hash = hash.wrapping_mul(FNV_PRIME);
+        }
+        hash
+    }
+}
+
+// ---- local wire helpers (the mesh layer cannot depend on api::wire) -----
+
+fn f64_field(j: &Json, key: &str, ctx: &str) -> crate::Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("{ctx}: field '{key}' missing or not a number"))
+}
+
+/// Exact u64 on the wire: plain number when representable in f64,
+/// decimal string beyond 2^53.
+fn u64_to_json(v: u64) -> Json {
+    if v <= (1u64 << 53) {
+        Json::n(v as f64)
+    } else {
+        Json::s(v.to_string())
+    }
+}
+
+fn u64_field(j: &Json, key: &str, ctx: &str) -> crate::Result<u64> {
+    let v = j.get(key).ok_or_else(|| anyhow!("{ctx}: missing field '{key}'"))?;
+    if let Some(s) = v.as_str() {
+        return s.parse().map_err(|_| anyhow!("{ctx}: field '{key}' is not a u64"));
+    }
+    v.as_f64()
+        .filter(|f| *f >= 0.0 && f.fract() == 0.0)
+        .map(|f| f as u64)
+        .ok_or_else(|| anyhow!("{ctx}: field '{key}' is not a u64"))
 }
 
 #[cfg(test)]
@@ -120,29 +440,126 @@ mod tests {
     use super::*;
 
     #[test]
-    fn profiles_are_sane() {
-        for kind in HardwareKind::all() {
-            let p = HardwareProfile::new(kind);
-            assert!(p.flops > 1e12);
-            assert!(p.hbm_bandwidth > 1e11);
-            assert!(p.memory_bytes >= 16 * (1 << 30));
-            assert!(!p.link_bandwidth.is_empty());
-            assert!(p.matmul_efficiency > 0.0 && p.matmul_efficiency <= 1.0);
+    fn presets_are_sane() {
+        for name in Topology::preset_names() {
+            let t = Topology::named(name).unwrap();
+            assert_eq!(t.name, name);
+            assert!(t.device.flops > 1e12);
+            assert!(t.device.hbm_bandwidth > 1e11);
+            assert!(t.device.memory_bytes >= 16 * (1 << 30));
+            assert!(!t.tiers.is_empty());
+            assert!(t.device.matmul_efficiency > 0.0 && t.device.matmul_efficiency <= 1.0);
+            for tier in &t.tiers {
+                assert!(tier.bandwidth > 0.0 && tier.latency >= 0.0);
+            }
         }
+        assert!(Topology::named("h100").is_err());
     }
 
     #[test]
     fn a100_faster_than_p100() {
-        let a = HardwareProfile::new(HardwareKind::A100);
-        let p = HardwareProfile::new(HardwareKind::P100);
+        let a = Topology::from_kind(HardwareKind::A100);
+        let p = Topology::from_kind(HardwareKind::P100);
         assert!(a.effective_flops() > p.effective_flops());
         assert!(a.axis_bandwidth(0) > p.axis_bandwidth(0));
     }
 
     #[test]
-    fn axis_bandwidth_clamps_to_last() {
-        let a = HardwareProfile::new(HardwareKind::A100);
-        assert_eq!(a.axis_bandwidth(7), *a.link_bandwidth.last().unwrap());
+    fn kind_presets_keep_legacy_numbers() {
+        // The deprecated enum path must price exactly as it always did.
+        let a = Topology::from_kind(HardwareKind::A100);
+        assert_eq!(
+            a.tiers.iter().map(|t| t.bandwidth).collect::<Vec<_>>(),
+            vec![300e9, 100e9, 25e9]
+        );
+        assert!(a.tiers.iter().all(|t| t.latency == 2e-6));
+        assert_eq!(a.kind_hint(), Some(HardwareKind::A100));
+        assert_eq!(Topology::named("a100-2x4-islands").unwrap().kind_hint(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "has no link tier")]
+    fn axis_beyond_tiers_is_a_hard_error() {
+        // The pre-topology model silently clamped axis 7 to the last
+        // bandwidth entry; explicit tiers make that a hard error.
+        let a = Topology::from_kind(HardwareKind::A100);
+        let _ = a.axis_bandwidth(7);
+    }
+
+    #[test]
+    fn check_mesh_rejects_undescribed_axes() {
+        // Regression: a 3-axis mesh over a 2-tier profile must fail
+        // loudly, not clamp to the last tier.
+        let two_tier = Topology::new(
+            "island-pair",
+            DeviceClass::a100(),
+            vec![LinkTier::new(300e9, 2e-6), LinkTier::new(25e9, 5e-6)],
+        );
+        let three = Mesh::grid(&[("a", 2), ("b", 2), ("c", 2)]);
+        let err = two_tier.check_mesh(&three).unwrap_err().to_string();
+        assert!(err.contains("3 axes") && err.contains("2 link tier(s)"), "{err}");
+        assert!(two_tier.check_mesh(&Mesh::grid(&[("a", 2), ("b", 2)])).is_ok());
+    }
+
+    #[test]
+    fn stage_tier_clamps_to_outermost() {
+        let t = Topology::named("a100-2x4-islands").unwrap();
+        // Within the described tiers: exact.
+        assert_eq!(t.stage_tier(1).bandwidth, 25e9);
+        // Beyond them (intra mesh consumed all tiers): outermost.
+        assert_eq!(t.stage_tier(5).bandwidth, t.tiers.last().unwrap().bandwidth);
+    }
+
+    #[test]
+    fn topology_json_roundtrips_exactly() {
+        let custom = Topology::new(
+            "weird-lab-rig",
+            DeviceClass {
+                flops: 197.3e12,
+                hbm_bandwidth: 1.63e12,
+                memory_bytes: (1u64 << 53) + 7, // exercises the string path
+                matmul_efficiency: 0.47,
+            },
+            vec![LinkTier::new(123.456e9, 1.7e-6), LinkTier::new(9.87e9, 11.1e-6)],
+        );
+        let back = Topology::from_json_str(&custom.to_json_string()).unwrap();
+        assert_eq!(back.name, custom.name);
+        assert_eq!(back.device.memory_bytes, custom.device.memory_bytes);
+        assert_eq!(back.device.flops.to_bits(), custom.device.flops.to_bits());
+        assert_eq!(
+            back.device.matmul_efficiency.to_bits(),
+            custom.device.matmul_efficiency.to_bits()
+        );
+        for (a, b) in back.tiers.iter().zip(&custom.tiers) {
+            assert_eq!(a.bandwidth.to_bits(), b.bandwidth.to_bits());
+            assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+        }
+        assert_eq!(back, custom);
+        assert_eq!(back.fingerprint(), custom.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_separates_profiles() {
+        let names = Topology::preset_names();
+        let fps: Vec<u64> =
+            names.iter().map(|n| Topology::named(n).unwrap().fingerprint()).collect();
+        for i in 0..fps.len() {
+            for j in (i + 1)..fps.len() {
+                assert_ne!(fps[i], fps[j], "{} vs {}", names[i], names[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn from_json_validates() {
+        assert!(Topology::from_json_str(r#"{"name":"x"}"#).is_err());
+        let no_tiers = r#"{"name":"x","device":{"flops":1e12,"hbm_bandwidth":1e12,
+            "memory_bytes":1000000,"matmul_efficiency":0.5},"tiers":[]}"#;
+        assert!(Topology::from_json_str(no_tiers).is_err());
+        let bad_bw = r#"{"name":"x","device":{"flops":1e12,"hbm_bandwidth":1e12,
+            "memory_bytes":1000000,"matmul_efficiency":0.5},
+            "tiers":[{"bandwidth":0.0,"latency":1e-6}]}"#;
+        assert!(Topology::from_json_str(bad_bw).is_err());
     }
 
     #[test]

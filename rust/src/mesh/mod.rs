@@ -1,14 +1,15 @@
-//! Logical device meshes and hardware profiles (§2.1, §5.1).
+//! Logical device meshes and hardware topologies (§2.1, §5.1).
 //!
 //! A mesh is an n-dimensional lattice of devices spanned by named axes
 //! (e.g. `2x32x2` over `batch × seq × model`). Devices are numbered
-//! row-major over the axis coordinates. The [`HardwareProfile`] attaches
-//! per-device compute/memory characteristics and per-axis interconnect
-//! bandwidth, which drive the cost model ([`crate::cost`]).
+//! row-major over the axis coordinates. The [`Topology`] attaches
+//! per-device-class compute/memory characteristics and one interconnect
+//! [`LinkTier`] per mesh axis (NVLink-island inner axes vs IB/DCN outer
+//! axes), which drive the cost model ([`crate::cost`]).
 
 pub mod hardware;
 
-pub use hardware::{HardwareKind, HardwareProfile};
+pub use hardware::{DeviceClass, HardwareKind, LinkTier, Topology};
 
 use crate::ir::AxisId;
 use crate::util::json::Json;

@@ -5,8 +5,13 @@
 //! slot time of stage `s` is its full-batch runtime (compute +
 //! collectives, from the existing [`CostModel`]) divided by `m`, plus
 //! the per-microbatch point-to-point transfer of its boundary tensors
-//! over the mesh's *stage axis* (bandwidth of the axis behind the intra
-//! mesh, one link latency per hop). The pipeline completes in
+//! over the mesh's *stage axis* (the topology tier of the axis behind
+//! the intra mesh — [`crate::mesh::Topology::stage_tier`] — one link
+//! latency per hop). Per-stage compute prices against the stage's own
+//! placement: its collectives ride the intra-mesh tiers, its p2p the
+//! stage tier, so on hierarchical machines the joint search can put
+//! the pipeline on the slow fabric and sharding on the fast one. The
+//! pipeline completes in
 //! `(m + k - 1)` slots of the slowest stage — the closed-form bubble
 //! overhead [`bubble_fraction`]` = (k-1)/(m+k-1)` of the steady-state
 //! rate.
@@ -92,8 +97,13 @@ pub fn compose(
     let k = per_stage.len();
     debug_assert_eq!(xfer_bytes.len(), k.saturating_sub(1));
     let m = microbatches.max(1) as f64;
-    let bw = model.hw.axis_bandwidth(stage_axis);
-    let lat = model.hw.link_latency;
+    // Stage-to-stage p2p rides the stage axis's tier of the topology:
+    // on hierarchical machines the stage axis is the slow outer fabric
+    // (IB/DCN), which is exactly why pipelining there while sharding
+    // rides the fast inner tier can win.
+    let tier = model.hw.stage_tier(stage_axis);
+    let bw = tier.bandwidth;
+    let lat = tier.latency;
 
     let mut slot = 0.0f64;
     let mut bottleneck = 0usize;
@@ -213,7 +223,7 @@ pub fn price_staged_oracle(
 mod tests {
     use super::*;
     use crate::ir::{FuncBuilder, TensorType};
-    use crate::mesh::{HardwareKind, HardwareProfile};
+    use crate::mesh::{HardwareKind, Topology};
     use crate::nda::Nda;
     use crate::pipeline::{balanced_boundaries, compute_weight, cut_stages, legal_boundaries};
 
@@ -232,7 +242,7 @@ mod tests {
     }
 
     fn model() -> CostModel {
-        CostModel::new(HardwareProfile::new(HardwareKind::A100))
+        CostModel::new(Topology::from_kind(HardwareKind::A100))
     }
 
     #[test]
@@ -301,6 +311,33 @@ mod tests {
         // total device work is preserved (same instructions, no reshard
         // needed for the replicated spec)
         assert!((sc.cost.flops - unstaged.flops).abs() < 1.0);
+    }
+
+    #[test]
+    fn stage_transfers_price_against_the_stage_axis_tier() {
+        // Same staged module, same spec: on the island profile the
+        // stage axis (appended behind the 1-axis intra mesh) rides the
+        // IB spine, on the flat profile it rides NVLink — the schedule
+        // must charge transfers accordingly, and both pricing paths
+        // must still agree on the hierarchical profile.
+        let f = chain(6);
+        let nda = Nda::analyze(&f);
+        let legal = legal_boundaries(&f, &nda);
+        let intra = Mesh::grid(&[("d", 2)]);
+        let bounds = balanced_boundaries(&f, &legal, 3, compute_weight).unwrap();
+        let sm = cut_stages(&f, &bounds).unwrap();
+        let spec = ShardingSpec::unsharded(&f);
+        let flat = CostModel::new(Topology::named("a100-flat-8").unwrap());
+        let isl = CostModel::new(Topology::named("a100-2x4-islands").unwrap());
+        let sc_flat = price_staged_oracle(&sm, &spec, &intra, &flat, 8).unwrap();
+        let sc_isl = price_staged_oracle(&sm, &spec, &intra, &isl, 8).unwrap();
+        for (tf, ti) in sc_flat.transfer_s.iter().zip(&sc_isl.transfer_s) {
+            assert!(ti > tf, "island stage hop {ti} must cost more than flat {tf}");
+        }
+        assert!(sc_isl.cost.runtime_s > sc_flat.cost.runtime_s);
+        let sym = price_staged_symbolic(&sm, &spec, &intra, &isl, 8).unwrap();
+        let tol = 1e-6 * sc_isl.cost.runtime_s.abs().max(1e-30);
+        assert!((sym.cost.runtime_s - sc_isl.cost.runtime_s).abs() <= tol);
     }
 
     #[test]

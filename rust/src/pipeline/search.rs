@@ -604,7 +604,7 @@ pub fn joint_search(
 mod tests {
     use super::*;
     use crate::ir::{FuncBuilder, TensorType, ValueId};
-    use crate::mesh::{HardwareKind, HardwareProfile};
+    use crate::mesh::{HardwareKind, Topology};
     use crate::nda::Nda;
     use crate::search::actions::{build_actions, build_stage_actions};
     use crate::search::{ActionSpaceConfig, StageActionConfig};
@@ -628,7 +628,7 @@ mod tests {
     fn joint_search_without_stage_actions_matches_flat_behavior() {
         let f = chain(4, 64);
         let mesh = Mesh::grid(&[("b", 2)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let nda = Nda::analyze(&f);
         let actions = build_actions(
             &f,
@@ -660,7 +660,7 @@ mod tests {
         // schedule beats the unstaged baseline.
         let f = chain(6, 64);
         let mesh = Mesh::grid(&[("b", 2)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let nda = Nda::analyze(&f);
         let stage_actions = build_stage_actions(
             &f,
@@ -708,7 +708,7 @@ mod tests {
         // best cost must not degrade.
         let f = chain(6, 64);
         let mesh = Mesh::grid(&[("b", 2)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let nda = Nda::analyze(&f);
         let actions = build_actions(
             &f,

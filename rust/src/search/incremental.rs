@@ -622,7 +622,7 @@ mod tests {
     use super::*;
     use crate::cost::symbolic::SymbolicEvaluator;
     use crate::ir::{FuncBuilder, TensorType};
-    use crate::mesh::{HardwareKind, HardwareProfile};
+    use crate::mesh::{HardwareKind, Topology};
     use crate::sharding::partition;
 
     fn mlp() -> Func {
@@ -637,7 +637,7 @@ mod tests {
     }
 
     fn model() -> CostModel {
-        CostModel::new(HardwareProfile::new(HardwareKind::A100))
+        CostModel::new(Topology::from_kind(HardwareKind::A100))
     }
 
     fn oracle_relative(

@@ -930,7 +930,7 @@ pub fn search(
 mod tests {
     use super::*;
     use crate::ir::{FuncBuilder, TensorType, ValueId};
-    use crate::mesh::{HardwareKind, HardwareProfile};
+    use crate::mesh::{HardwareKind, Topology};
     use crate::nda::Nda;
     use crate::search::actions::{build_actions, ActionSpaceConfig};
 
@@ -960,7 +960,7 @@ mod tests {
     fn finds_batch_sharding_for_mlp() {
         let f = mlp(4096, 512, 2048, 512);
         let mesh = Mesh::grid(&[("b", 8)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let nda = Nda::analyze(&f);
         let actions = build_actions(
             &f,
@@ -979,7 +979,7 @@ mod tests {
     fn two_axis_mesh_uses_both() {
         let f = mlp(4096, 1024, 8192, 1024);
         let mesh = Mesh::grid(&[("b", 4), ("m", 4)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let nda = Nda::analyze(&f);
         let actions = build_actions(
             &f,
@@ -1002,7 +1002,7 @@ mod tests {
     fn empty_action_space_returns_identity() {
         let f = mlp(17, 13, 11, 7); // primes: nothing divides
         let mesh = Mesh::grid(&[("b", 4)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let nda = Nda::analyze(&f);
         let actions = build_actions(
             &f,
@@ -1022,7 +1022,7 @@ mod tests {
         // SPMD simulator within float noise of the oracle.
         let f = mlp(64, 16, 32, 8);
         let mesh = Mesh::grid(&[("b", 4)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let nda = Nda::analyze(&f);
         let actions = build_actions(
             &f,
@@ -1043,7 +1043,7 @@ mod tests {
     fn search_with_fixed_seed_is_reproducible() {
         let f = mlp(2048, 512, 2048, 512);
         let mesh = Mesh::grid(&[("b", 4)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let nda = Nda::analyze(&f);
         let actions = build_actions(
             &f,
@@ -1064,7 +1064,7 @@ mod tests {
     fn budget_is_never_overshot() {
         let f = mlp(4096, 1024, 8192, 1024);
         let mesh = Mesh::grid(&[("b", 4), ("m", 4)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let nda = Nda::analyze(&f);
         let actions = build_actions(
             &f,
@@ -1134,7 +1134,7 @@ mod tests {
     fn transpositions_share_cached_evaluations() {
         let (f, actions) = overlap_fixture();
         let mesh = Mesh::grid(&[("d", 2)]);
-        let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
         let base = SearchConfig {
             budget: 50,
             round: 32,

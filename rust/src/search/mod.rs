@@ -19,10 +19,9 @@
 //!   device-local IR. The materialize-partition-evaluate path remains the
 //!   validation oracle.
 //!
-//! The staged entry point is the session API
+//! The entry point is the session API
 //! ([`crate::api::CompiledModel::partition`]), which analyzes once and
-//! caches per-mesh action spaces; the legacy one-call [`auto_partition`]
-//! remains as a thin deprecated shim.
+//! caches per-mesh action spaces.
 
 pub mod actions;
 pub mod incremental;
@@ -33,27 +32,3 @@ pub use actions::{
 };
 pub use incremental::IncrementalEvaluator;
 pub use mcts::{search, SearchConfig, SearchOutcome};
-
-use crate::cost::CostModel;
-use crate::ir::Func;
-use crate::mesh::Mesh;
-use crate::nda::Nda;
-
-/// Analyze `func`, build the action space, and run the MCTS search.
-///
-/// Legacy shim: re-runs the NDA and action construction on every call.
-/// The session API ([`crate::api::CompiledModel::partition`]) does both
-/// once per model and returns a serializable [`crate::api::Solution`].
-#[deprecated(note = "use toast::api::CompiledModel::partition(..) — the session API \
-                     analyzes once and caches action spaces")]
-pub fn auto_partition(
-    func: &Func,
-    mesh: &Mesh,
-    model: &CostModel,
-    action_cfg: &ActionSpaceConfig,
-    search_cfg: &SearchConfig,
-) -> SearchOutcome {
-    let nda = Nda::analyze(func);
-    let actions = build_actions(func, &nda, mesh, action_cfg);
-    search(func, mesh, model, &actions, search_cfg)
-}

@@ -120,10 +120,10 @@ mod tests {
 
     #[test]
     fn symbolic_cost_agrees_on_mlp_specs() {
-        use crate::mesh::{HardwareKind, HardwareProfile};
+        use crate::mesh::{HardwareKind, Topology};
         let f = mlp();
         let mesh = Mesh::grid(&[("b", 2), ("m", 2)]);
-        let model = crate::cost::CostModel::new(HardwareProfile::new(HardwareKind::A100));
+        let model = crate::cost::CostModel::new(Topology::from_kind(HardwareKind::A100));
         let mut spec = ShardingSpec::unsharded(&f);
         assert!(validate_symbolic_cost(&f, &spec, &mesh, &model).unwrap() < 1e-6);
         spec.apply_assignment(

@@ -1,20 +1,20 @@
 //! Cross-module integration tests: NDA → actions → MCTS → partitioner →
 //! interpreter, end to end on the model zoo (scaled configurations) via
-//! the session API, plus method-comparison sanity on the experiment grid
-//! and the legacy-shim compatibility paths.
+//! the session API, plus method-comparison sanity on the experiment
+//! grid.
 
 use toast::api::{CompiledModel, MctsStrategy, Solution};
 use toast::baselines::Method;
 use toast::coordinator::experiments::{run_grid, BenchScale};
 use toast::cost::CostModel;
-use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::mesh::{HardwareKind, Mesh, Topology};
 use toast::models::ModelKind;
 use toast::nda::Nda;
 use toast::search::{ActionSpaceConfig, SearchConfig};
 use toast::sharding::{partition, validate_spec, ShardingSpec};
 
 fn cost_model() -> CostModel {
-    CostModel::new(HardwareProfile::new(HardwareKind::A100))
+    CostModel::new(Topology::from_kind(HardwareKind::A100))
 }
 
 fn quick_search() -> SearchConfig {
@@ -25,8 +25,7 @@ fn loose_actions() -> ActionSpaceConfig {
     ActionSpaceConfig { min_color_dims: 1, ..Default::default() }
 }
 
-/// A quick MCTS session against a compiled model (the old
-/// `auto_partition` call sites, restaged through the session API).
+/// A quick MCTS session against a compiled model.
 fn quick_session(compiled: &CompiledModel, mesh: &Mesh) -> Solution {
     compiled
         .partition(mesh)
@@ -168,33 +167,27 @@ fn toast_at_least_matches_automated_baselines_on_gns() {
     }
 }
 
-/// The deprecated one-call shims still work (compat gate for
-/// out-of-tree callers). Specs are not compared across calls — parallel
-/// MCTS rollouts race benignly, so only single-threaded runs are
-/// bit-deterministic — but every shim must produce a valid, finite,
-/// numerically correct outcome.
+/// Every method produces a valid, finite, numerically correct outcome
+/// through the session API on one compiled model. Specs are not
+/// compared across calls — parallel MCTS rollouts race benignly, so
+/// only single-threaded runs are bit-deterministic.
 #[test]
-#[allow(deprecated)]
-fn legacy_shims_still_work() {
+fn every_method_validates_through_the_session_api() {
     let func = ModelKind::Mlp.build_scaled();
     let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
-    let model = cost_model();
+    let compiled = CompiledModel::from_kind(ModelKind::Mlp, false).unwrap();
     for method in Method::all() {
-        let r = toast::baselines::run_method(method, ModelKind::Mlp, &func, &mesh, &model, 60, 3);
-        assert!(r.relative.is_finite(), "{}: {}", method.name(), r.relative);
-        let v = validate_spec(&func, &r.spec, &mesh, 7).unwrap();
+        let sol = compiled
+            .partition(&mesh)
+            .method(method)
+            .budget(60)
+            .seed(3)
+            .run()
+            .unwrap_or_else(|e| panic!("{}: {e:#}", method.name()));
+        assert!(sol.relative.is_finite(), "{}: {}", method.name(), sol.relative);
+        let v = validate_spec(&func, &sol.spec, &mesh, 7).unwrap();
         assert!(v.max_abs_diff < 5e-2, "{}: diff {}", method.name(), v.max_abs_diff);
     }
-
-    let out = toast::search::auto_partition(
-        &func,
-        &mesh,
-        &model,
-        &ActionSpaceConfig { min_color_dims: 4, ..Default::default() },
-        &SearchConfig { budget: 60, seed: 3, ..Default::default() },
-    );
-    assert!(out.relative.is_finite());
-    assert!(validate_spec(&func, &out.spec, &mesh, 9).unwrap().max_abs_diff < 5e-2);
 }
 
 /// The partition service handles a mixed workload concurrently, with
@@ -211,7 +204,7 @@ fn service_runs_mixed_workload() {
                 id: 0,
                 model: ModelSource::zoo(kind),
                 mesh: Mesh::grid(&[("data", 2), ("model", 2)]),
-                hardware: HardwareKind::A100,
+                topology: Topology::from_kind(HardwareKind::A100),
                 method,
                 budget: 60,
                 seed: 2,

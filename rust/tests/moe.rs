@@ -18,7 +18,7 @@
 use toast::cost::symbolic::SymbolicEvaluator;
 use toast::cost::CostModel;
 use toast::ir::{Func, ValueId};
-use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::mesh::{HardwareKind, Mesh, Topology};
 use toast::models::moe::{forward, MoeConfig};
 use toast::nda::Nda;
 use toast::pipeline::{joint_search, JointSearchConfig};
@@ -106,7 +106,7 @@ fn flat_search_shards_the_expert_dimension() {
     let func = tiny_forward();
     let nda = Nda::analyze(&func);
     let w1 = w1_of(&func);
-    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
     for mesh in [Mesh::grid(&[("expert", 2)]), Mesh::grid(&[("expert", 2), ("data", 2)])] {
         let actions = actions_for(&func, &nda, &mesh);
         let out = search(
@@ -142,7 +142,7 @@ fn routed_plans_price_to_the_oracle() {
     let func = tiny_forward();
     let nda = Nda::analyze(&func);
     let w1 = w1_of(&func);
-    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
     for mesh in [Mesh::grid(&[("expert", 2)]), Mesh::grid(&[("expert", 2), ("data", 2)])] {
         let actions = actions_for(&func, &nda, &mesh);
         let sym = SymbolicEvaluator::new(&func, &mesh, &model);
@@ -172,7 +172,7 @@ fn joint_search_composes_experts_with_stages() {
     let (func, _, _) = forward(&cfg);
     let nda = Nda::analyze(&func);
     let intra = Mesh::grid(&[("expert", 2)]);
-    let mut model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let mut model = CostModel::new(Topology::from_kind(HardwareKind::A100));
     let actions = actions_for(&func, &nda, &intra);
     let stage_actions = build_stage_actions(
         &func,
@@ -186,7 +186,7 @@ fn joint_search_composes_experts_with_stages() {
     // flat, while stages divide the weights further.
     let (ulocal, _) = partition(&func, &ShardingSpec::unsharded(&func), &intra).unwrap();
     let base = model.evaluate(&ulocal, &intra);
-    model.hw.memory_bytes = base.peak_bytes * 2 / 5;
+    model.hw.device.memory_bytes = base.peak_bytes * 2 / 5;
 
     let flat = search(
         &func,
@@ -199,7 +199,7 @@ fn joint_search_composes_experts_with_stages() {
         !model.fits(&flat.cost),
         "flat expert-only search must OOM here (peak {}, limit {})",
         flat.cost.peak_bytes,
-        model.hw.memory_bytes
+        model.hw.device.memory_bytes
     );
 
     // Pipeline-only comparator: stages without any sharding actions.

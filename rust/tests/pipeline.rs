@@ -17,7 +17,7 @@
 use toast::cost::CostModel;
 use toast::ir::interp::eval_func;
 use toast::ir::{Func, FuncBuilder, ReduceKind, TensorType, UnaryOp, ValueId};
-use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::mesh::{HardwareKind, Mesh, Topology};
 use toast::models::ModelKind;
 use toast::nda::Nda;
 use toast::pipeline::{
@@ -186,7 +186,7 @@ fn walk_spec(func: &Func, nda: &Nda, mesh: &Mesh) -> ShardingSpec {
 /// simulate-then-price oracle to ≤ 1e-6 relative.
 #[test]
 fn schedule_pricing_agrees_with_the_oracle_on_zoo_models() {
-    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
     for kind in [ModelKind::Mlp, ModelKind::T2B] {
         let func = kind.build_scaled();
         let nda = Nda::analyze(&func);
@@ -239,7 +239,7 @@ fn deep_chain(layers: usize, batch: i64, d: i64) -> Func {
 fn stage_actions_turn_oom_into_feasible() {
     let func = deep_chain(10, 512, 2048);
     let intra = Mesh::grid(&[("d", 2)]);
-    let mut model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let mut model = CostModel::new(Topology::from_kind(HardwareKind::A100));
     let nda = Nda::analyze(&func);
     let actions = build_actions(
         &func,
@@ -260,7 +260,7 @@ fn stage_actions_turn_oom_into_feasible() {
     // of the 10 layers per stage and fits.
     let (ulocal, _) = partition(&func, &ShardingSpec::unsharded(&func), &intra).unwrap();
     let base = model.evaluate(&ulocal, &intra);
-    model.hw.memory_bytes = base.peak_bytes * 2 / 5;
+    model.hw.device.memory_bytes = base.peak_bytes * 2 / 5;
 
     let flat = toast::search::search(
         &func,
@@ -273,7 +273,7 @@ fn stage_actions_turn_oom_into_feasible() {
         !model.fits(&flat.cost),
         "pure SPMD search must report OOM here (peak {}, limit {})",
         flat.cost.peak_bytes,
-        model.hw.memory_bytes
+        model.hw.device.memory_bytes
     );
 
     let joint = toast::pipeline::joint_search(
@@ -290,7 +290,7 @@ fn stage_actions_turn_oom_into_feasible() {
         !joint.oom,
         "staged solution must fit (peak {}, limit {})",
         joint.cost.peak_bytes,
-        model.hw.memory_bytes
+        model.hw.device.memory_bytes
     );
     assert!(
         joint.relative < flat.relative,

@@ -18,13 +18,18 @@
 //!   for random (program, spec, mesh) triples within 1e-4 relative
 //!   tolerance, with shrink-and-report on failure;
 //! * **P11**: the routed-dispatch rule derives sound expert shardings
-//!   (routed `all_to_all`) for random MoE configurations.
+//!   (routed `all_to_all`) for random MoE configurations;
+//! * **P10 (wire)**: specs, meshes, stage assignments, custom
+//!   topologies and whole solution artifacts round-trip through JSON to
+//!   equal values that price bit-identically;
+//! * **P12**: with all link tiers equal, hierarchical topology pricing
+//!   is flat — blind to which same-size mesh axis carries a sharding.
 
 use toast::cost::symbolic::SymbolicEvaluator;
 use toast::cost::CostModel;
 use toast::ir::interp::Tensor;
 use toast::ir::{DType, Func, FuncBuilder, ReduceKind, TensorType, ValueId};
-use toast::mesh::{HardwareKind, HardwareProfile, Mesh};
+use toast::mesh::{HardwareKind, Mesh, Topology};
 use toast::models::ModelKind;
 use toast::nda::Nda;
 use toast::search::IncrementalEvaluator;
@@ -262,7 +267,7 @@ fn prop_action_order_irrelevant() {
 fn prop_cost_model_sane() {
     let mut rng = Rng::new(0xABBA);
     let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
-    let model = toast::cost::CostModel::new(HardwareProfile::new(HardwareKind::TPUv3));
+    let model = toast::cost::CostModel::new(Topology::from_kind(HardwareKind::TPUv3));
     for _ in 0..80 {
         let func = random_func(&mut rng);
         let spec = ShardingSpec::unsharded(&func);
@@ -309,7 +314,7 @@ fn oracle_base(func: &Func, mesh: &Mesh, model: &CostModel) -> toast::cost::Cost
 fn prop_symbolic_cost_matches_materialized() {
     let mut rng = Rng::new(0x70A57);
     let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
-    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
     for kind in [ModelKind::Mlp, ModelKind::T2B, ModelKind::UNet] {
         let func = kind.build_scaled();
         let base = oracle_base(&func, &mesh, &model);
@@ -354,7 +359,7 @@ fn prop_symbolic_cost_matches_materialized() {
 fn prop_incremental_matches_oracle_on_action_walks() {
     let mut rng = Rng::new(0x17C4);
     let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
-    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
     for kind in [ModelKind::Mlp, ModelKind::T2B, ModelKind::UNet] {
         let func = kind.build_scaled();
         let nda = Nda::analyze(&func);
@@ -588,6 +593,36 @@ fn prop_wire_roundtrip_p10() {
             ShardingSpec::from_json(&Json::parse(&spec.to_json().render()).unwrap()).unwrap();
         assert_eq!(spec_back, spec, "case {case}: ShardingSpec drifted");
 
+        // -- a custom topology round-trips exactly and prices identically --
+        let mut topo = Topology::from_kind(HardwareKind::A100);
+        topo.name = format!("rand-{case}");
+        topo.tiers = (0..3)
+            .map(|_| {
+                toast::mesh::LinkTier::new(
+                    1e9 * (1.0 + rng.below(400) as f64) + 0.125,
+                    1e-7 * (1.0 + rng.below(50) as f64) + 1e-9,
+                )
+            })
+            .collect();
+        let topo_back = Topology::from_json_str(&topo.to_json_string()).unwrap();
+        assert_eq!(topo_back, topo, "case {case}: Topology drifted through JSON");
+        let (tm, tm_back) = (CostModel::new(topo), CostModel::new(topo_back));
+        let custom = SymbolicEvaluator::new(&func, mesh, &tm);
+        let custom_back = SymbolicEvaluator::new(&func, mesh, &tm_back);
+        match (custom.evaluate(&spec), custom_back.evaluate(&spec)) {
+            (Ok((a, _)), Ok((b, _))) => assert_eq!(
+                a.runtime_s.to_bits(),
+                b.runtime_s.to_bits(),
+                "case {case}: reloaded topology priced differently"
+            ),
+            (Err(_), Err(_)) => {}
+            (a, b) => panic!(
+                "case {case}: topology reload changed the verdict: {:?} vs {:?}",
+                a.is_ok(),
+                b.is_ok()
+            ),
+        }
+
         // -- identical symbolic cost on both sides of the wire --
         let sym = SymbolicEvaluator::new(&func, mesh, &model);
         let (before, after) = (sym.evaluate(&spec), sym.evaluate(&spec_back));
@@ -655,7 +690,7 @@ fn prop_wire_roundtrip_p10() {
         let sol = Solution {
             model: ModelSource::Inline(func.clone()),
             mesh: mesh.clone(),
-            hardware: HardwareKind::A100,
+            topology: Topology::from_kind(HardwareKind::A100),
             strategy: "TOAST".to_string(),
             spec,
             relative: model.relative(&cost, &base),
@@ -682,7 +717,60 @@ fn prop_wire_roundtrip_p10() {
 }
 
 fn cost_model_for_wire() -> CostModel {
-    CostModel::new(HardwareProfile::new(HardwareKind::A100))
+    CostModel::new(Topology::from_kind(HardwareKind::A100))
+}
+
+/// P12: with every link tier equal, the hierarchical rules price flat —
+/// a spec costs bit-identically no matter which (same-size) mesh axis
+/// carries each sharding, because min-over-participating-links and
+/// per-axis tier lookups all resolve to the same tier. The island
+/// profile must notice the swap on at least some programs, or the
+/// property would be vacuous.
+#[test]
+fn prop_equal_tiers_price_flat_p12() {
+    let mesh = Mesh::grid(&[("a", 2), ("b", 2)]);
+    let flat = CostModel::new(Topology::named("a100-flat-8").unwrap());
+    let island = CostModel::new(Topology::named("a100-2x4-islands").unwrap());
+    let mut rng = Rng::new(0xF12);
+    let (mut checked, mut island_diverged) = (0, 0);
+    for case in 0..80 {
+        let func = random_func(&mut rng);
+        let spec = random_spec(&func, &mesh, &mut rng);
+        // Swap which axis carries every sharding. Both axes have size 2,
+        // so legality is unchanged; only the link tiers differ.
+        let mut swapped = spec.clone();
+        for dims in &mut swapped.dims {
+            for axes in dims {
+                for a in axes.iter_mut() {
+                    *a = 1 - *a;
+                }
+            }
+        }
+        let price = |m: &CostModel, s: &ShardingSpec| {
+            SymbolicEvaluator::new(&func, &mesh, m)
+                .evaluate(s)
+                .map(|(c, _)| (c.runtime_s.to_bits(), c.peak_bytes))
+        };
+        match (price(&flat, &spec), price(&flat, &swapped)) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a, b, "case {case}: equal tiers noticed an axis swap\n{func}");
+                checked += 1;
+            }
+            (Err(_), Err(_)) => continue,
+            (a, b) => panic!(
+                "case {case}: pricing verdict changed under the axis swap: {:?} vs {:?}",
+                a.is_ok(),
+                b.is_ok()
+            ),
+        }
+        if let (Ok(a), Ok(b)) = (price(&island, &spec), price(&island, &swapped)) {
+            if a != b {
+                island_diverged += 1;
+            }
+        }
+    }
+    assert!(checked >= 40, "only {checked} cases priced on both sides");
+    assert!(island_diverged > 0, "island profile never noticed the swap — vacuous property");
 }
 
 /// P10: the transposition-aware, batch-evaluated search finds a
@@ -696,7 +784,7 @@ fn prop_transposition_search_same_or_better() {
     use toast::coordinator::experiments::{build_model, BenchScale};
     use toast::search::{build_actions, search, ActionSpaceConfig, SearchConfig};
 
-    let model = CostModel::new(HardwareProfile::new(HardwareKind::A100));
+    let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
     let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
     let space = ActionSpaceConfig { min_color_dims: 1, ..Default::default() };
 

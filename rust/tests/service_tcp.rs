@@ -21,7 +21,7 @@ use toast::coordinator::transport::{
 use toast::coordinator::{
     Overloaded, Service, ServiceClient, ServiceConfig, TcpServer, TcpServerConfig, WorkerOptions,
 };
-use toast::mesh::{HardwareKind, Mesh};
+use toast::mesh::{HardwareKind, Mesh, Topology};
 use toast::models::ModelKind;
 use toast::util::rng::Rng;
 
@@ -67,7 +67,7 @@ fn random_request(rng: &mut Rng) -> PartitionRequest {
         id: rng.next_u64(),
         model: ModelSource::zoo(*rng.choose(&kinds).unwrap()),
         mesh: rng.choose(&meshes).unwrap().clone(),
-        hardware: *rng.choose(&HardwareKind::all()).unwrap(),
+        topology: Topology::from_kind(*rng.choose(&HardwareKind::all()).unwrap()),
         method: *rng.choose(&methods).unwrap(),
         budget: rng.below(2000),
         // Half the seeds exceed 2^53 to exercise the string encoding.
@@ -81,7 +81,7 @@ fn assert_request_eq(a: &PartitionRequest, b: &PartitionRequest) {
     assert_eq!(a.id, b.id);
     assert_eq!(a.model, b.model);
     assert_eq!(a.mesh, b.mesh);
-    assert_eq!(a.hardware, b.hardware);
+    assert_eq!(a.topology, b.topology);
     assert_eq!(a.method, b.method);
     assert_eq!(a.budget, b.budget);
     assert_eq!(a.seed, b.seed);
