@@ -42,6 +42,7 @@ use crate::ir::Func;
 use crate::mesh::{HardwareKind, Mesh, Topology};
 use crate::models::ModelKind;
 use crate::nda::Nda;
+use crate::obs::SearchTrace;
 use crate::pipeline::{cut_stages, joint_search, schedule, JointSearchConfig};
 use crate::search::{
     build_actions, build_stage_actions, Action, ActionSpaceConfig, SearchConfig,
@@ -452,6 +453,7 @@ impl CompiledModel {
             validate: false,
             validate_seed: 7,
             stage_opts: None,
+            trace: false,
         }
     }
 }
@@ -471,6 +473,9 @@ pub struct StrategyContext<'a> {
     /// Search budget (state evaluations / sweeps — strategy-defined).
     pub budget: usize,
     pub seed: u64,
+    /// Collect per-search telemetry ([`SearchTrace`]). Timing
+    /// observation only — must never change what the strategy returns.
+    pub trace: bool,
 }
 
 impl<'a> StrategyContext<'a> {
@@ -500,6 +505,9 @@ pub struct StrategyOutcome {
     pub spec: ShardingSpec,
     /// State evaluations performed (0 when the notion does not apply).
     pub evals: usize,
+    /// Per-search telemetry, when the session asked for it and the
+    /// strategy supports it (the baselines return `None`).
+    pub trace: Option<SearchTrace>,
 }
 
 /// A partitioning method: consumes a compiled model + session context,
@@ -530,9 +538,14 @@ impl Strategy for MctsStrategy {
 
     fn solve(&self, cx: &StrategyContext<'_>) -> crate::Result<StrategyOutcome> {
         let actions = cx.actions();
-        let cfg = SearchConfig { budget: cx.budget, seed: cx.seed, ..self.template.clone() };
+        let cfg = SearchConfig {
+            budget: cx.budget,
+            seed: cx.seed,
+            trace: cx.trace || self.template.trace,
+            ..self.template.clone()
+        };
         let out = crate::search::search(cx.func(), cx.mesh, cx.cost, &actions, &cfg);
-        Ok(StrategyOutcome { spec: out.spec, evals: out.evals })
+        Ok(StrategyOutcome { spec: out.spec, evals: out.evals, trace: out.trace })
     }
 }
 
@@ -549,7 +562,7 @@ impl Strategy for ManualStrategy {
     fn solve(&self, cx: &StrategyContext<'_>) -> crate::Result<StrategyOutcome> {
         let spec =
             crate::baselines::manual::solve(cx.kind(), cx.func(), cx.nda(), cx.mesh, cx.cost);
-        Ok(StrategyOutcome { spec, evals: 0 })
+        Ok(StrategyOutcome { spec, evals: 0, trace: None })
     }
 }
 
@@ -564,7 +577,7 @@ impl Strategy for AlpaStrategy {
 
     fn solve(&self, cx: &StrategyContext<'_>) -> crate::Result<StrategyOutcome> {
         let (spec, evals) = crate::baselines::alpa::solve(cx.func(), cx.mesh, cx.cost, cx.budget);
-        Ok(StrategyOutcome { spec, evals })
+        Ok(StrategyOutcome { spec, evals, trace: None })
     }
 }
 
@@ -580,7 +593,7 @@ impl Strategy for AutoMapStrategy {
     fn solve(&self, cx: &StrategyContext<'_>) -> crate::Result<StrategyOutcome> {
         let (spec, evals) =
             crate::baselines::automap::solve(cx.func(), cx.mesh, cx.cost, cx.budget, cx.seed);
-        Ok(StrategyOutcome { spec, evals })
+        Ok(StrategyOutcome { spec, evals, trace: None })
     }
 }
 
@@ -636,6 +649,7 @@ pub struct Partitioner<'a> {
     validate: bool,
     validate_seed: u64,
     stage_opts: Option<StageOptions>,
+    trace: bool,
 }
 
 impl<'a> Partitioner<'a> {
@@ -693,6 +707,15 @@ impl<'a> Partitioner<'a> {
         self
     }
 
+    /// Collect per-search telemetry: the winning [`Solution`] carries a
+    /// [`SearchTrace`] (best-cost curve, cache/transposition counters,
+    /// per-phase time breakdown). Pure observation — a traced session
+    /// returns the same spec, cost and evals as an untraced one.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+
     /// Enable the pipeline-stage dimension: the session runs the joint
     /// (stages × sharding) MCTS ([`crate::pipeline::joint_search`])
     /// instead of the configured strategy, offering stage-count/cut
@@ -732,6 +755,7 @@ impl<'a> Partitioner<'a> {
             action_cfg: &self.action_cfg,
             budget: self.budget,
             seed: self.seed,
+            trace: self.trace,
         };
         let out = self.strategy.solve(&cx)?;
         let search_time_s = t0.elapsed().as_secs_f64();
@@ -759,6 +783,7 @@ impl<'a> Partitioner<'a> {
             evals: out.evals,
             search_time_s,
             validation,
+            trace: out.trace,
         })
     }
 
@@ -792,6 +817,7 @@ impl<'a> Partitioner<'a> {
             budget: self.budget,
             seed: self.seed,
             require_stage: opts.require,
+            trace: self.trace,
             ..Default::default()
         };
         let out = joint_search(func, &self.mesh, &cost_model, &actions, &stage_actions, &jcfg)?;
@@ -834,6 +860,7 @@ impl<'a> Partitioner<'a> {
             evals: out.evals,
             search_time_s,
             validation,
+            trace: out.trace,
         })
     }
 }
@@ -1065,6 +1092,11 @@ pub struct Solution {
     pub search_time_s: f64,
     /// Differential-validation record, when the session validated.
     pub validation: Option<ValidationRecord>,
+    /// Per-search telemetry, when the session ran with
+    /// [`Partitioner::trace`]. The wire field is *omitted* (not null)
+    /// when absent, so untraced solutions are byte-identical to
+    /// artifacts written before tracing existed.
+    pub trace: Option<SearchTrace>,
 }
 
 /// Wire-format tag; bump on breaking changes to [`Solution::to_json`].
@@ -1107,6 +1139,11 @@ impl Solution {
                 },
             ),
         ]);
+        // Omitted entirely when absent: untraced solutions must stay
+        // byte-identical to pre-tracing artifacts.
+        if let Some(tr) = &self.trace {
+            fields.push(("trace", tr.to_json()));
+        }
         Json::obj(fields)
     }
 
@@ -1126,6 +1163,11 @@ impl Solution {
             None | Some(Json::Null) => None,
             Some(v) => Some(StageAssignment::from_json(v)?),
         };
+        // Absent in untraced solutions and pre-tracing artifacts.
+        let trace = match j.get("trace") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(SearchTrace::from_json(v)?),
+        };
         Ok(Solution {
             model: ModelSource::from_json(wire::field(j, "model", ctx)?)?,
             mesh: Mesh::from_json(wire::field(j, "mesh", ctx)?)?,
@@ -1140,6 +1182,7 @@ impl Solution {
             evals: wire::usize_field(j, "evals", ctx)?,
             search_time_s: wire::f64_field(j, "search_time_s", ctx)?,
             validation,
+            trace,
         })
     }
 
@@ -1328,6 +1371,43 @@ mod tests {
         let back = Solution::from_json(&j).unwrap();
         assert_eq!(back.stages, None);
         assert_eq!(back.spec, sol.spec);
+    }
+
+    #[test]
+    fn untraced_solutions_omit_the_trace_field_and_traced_ones_round_trip() {
+        let compiled = CompiledModel::from_kind(ModelKind::Mlp, false).unwrap();
+        let mesh = Mesh::grid(&[("d", 2)]);
+        // Single-threaded sessions so traced and untraced runs are
+        // exactly comparable (parallel rollouts race benignly).
+        let single = || MctsStrategy {
+            template: SearchConfig { threads: 1, ..Default::default() },
+        };
+        // Untraced: the field is absent on the wire (pre-tracing readers
+        // and byte-comparison against old artifacts both depend on it),
+        // and absence reloads as None.
+        let plain =
+            compiled.partition(&mesh).strategy(single()).budget(30).seed(5).run().unwrap();
+        assert!(plain.trace.is_none());
+        let j = Json::parse(&plain.to_json_string()).unwrap();
+        assert!(j.get("trace").is_none(), "untraced solutions must omit the field");
+        assert_eq!(Solution::from_json(&j).unwrap(), plain);
+        // Traced: same spec/cost (observation only), telemetry attached,
+        // exact wire round-trip, curve monotone and pinned to the cost.
+        let traced = compiled
+            .partition(&mesh)
+            .strategy(single())
+            .trace(true)
+            .budget(30)
+            .seed(5)
+            .run()
+            .unwrap();
+        assert_eq!(traced.spec, plain.spec, "tracing must not change the search");
+        assert_eq!(traced.relative, plain.relative);
+        let tr = traced.trace.as_ref().expect("trace requested");
+        assert!(tr.curve.windows(2).all(|w| w[0].1 >= w[1].1), "curve must be non-increasing");
+        assert_eq!(tr.curve.last().map(|&(_, c)| c), Some(traced.relative));
+        let back = Solution::from_json_str(&traced.to_json_string()).unwrap();
+        assert_eq!(back, traced, "traced wire round-trip must be exact");
     }
 
     #[test]

@@ -506,10 +506,85 @@ pub fn func_from_json(j: &Json) -> crate::Result<Func> {
 
 use super::{PartitionRequest, PartitionResponse};
 
+/// One attached worker as the server sees it — the per-worker row of
+/// the status table, so a stuck worker (jobs in flight, stale
+/// heartbeat) is visible from `toast submit --status` instead of only
+/// as an aggregate gauge.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WorkerDetail {
+    pub id: u64,
+    pub name: String,
+    /// Pipelining depth (jobs the feeder keeps in flight at once).
+    pub capacity: u64,
+    /// Jobs dispatched whose results have not arrived.
+    pub in_flight: u64,
+    pub completed: u64,
+    /// Milliseconds since the last frame (heartbeat or result).
+    pub last_heartbeat_ms: u64,
+}
+
+impl WorkerDetail {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", u64_to_json(self.id)),
+            ("name", Json::s(self.name.clone())),
+            ("capacity", u64_to_json(self.capacity)),
+            ("in_flight", u64_to_json(self.in_flight)),
+            ("completed", u64_to_json(self.completed)),
+            ("last_heartbeat_ms", u64_to_json(self.last_heartbeat_ms)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<WorkerDetail> {
+        let ctx = "worker detail";
+        Ok(WorkerDetail {
+            id: u64_field(j, "id", ctx)?,
+            name: str_field(j, "name", ctx)?.to_string(),
+            capacity: u64_field(j, "capacity", ctx)?,
+            in_flight: u64_field(j, "in_flight", ctx)?,
+            completed: u64_field(j, "completed", ctx)?,
+            last_heartbeat_ms: u64_field(j, "last_heartbeat_ms", ctx)?,
+        })
+    }
+}
+
+/// A latency-histogram digest for one request phase (`queue_wait`,
+/// `search_cold`, `cache_hit`, `verify`): sample count plus log-bucket
+/// p50/p99 in microseconds (each within one power-of-two bucket of the
+/// exact sorted quantile).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LatencySummary {
+    pub phase: String,
+    pub count: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+impl LatencySummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("phase", Json::s(self.phase.clone())),
+            ("count", u64_to_json(self.count)),
+            ("p50_us", u64_to_json(self.p50_us)),
+            ("p99_us", u64_to_json(self.p99_us)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<LatencySummary> {
+        let ctx = "latency summary";
+        Ok(LatencySummary {
+            phase: str_field(j, "phase", ctx)?.to_string(),
+            count: u64_field(j, "count", ctx)?,
+            p50_us: u64_field(j, "p50_us", ctx)?,
+            p99_us: u64_field(j, "p99_us", ctx)?,
+        })
+    }
+}
+
 /// The counters a server reports for a `status` request: the
 /// coordinator's metrics flattened to plain numbers so they survive the
 /// wire without dragging the metrics type across the process boundary.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct StatusReport {
     pub requests: u64,
     /// Accepted but not yet dispatched to any worker.
@@ -537,10 +612,19 @@ pub struct StatusReport {
     pub audit_rejected: u64,
     /// Submits refused by admission control (queue at its bound).
     pub overloaded: u64,
+    /// Solutions whose plan exceeded the per-device memory budget.
+    pub oom_solutions: u64,
+    /// Total search wall time across completed requests, microseconds
+    /// (`snapshot()`'s `mean_search` is this over `completed`).
+    pub search_us_total: u64,
+    /// Per-worker rows (empty on reports from older servers).
+    pub workers_detail: Vec<WorkerDetail>,
+    /// Per-phase latency digests (empty on reports from older servers).
+    pub latency: Vec<LatencySummary>,
 }
 
 impl StatusReport {
-    const FIELDS: [&'static str; 16] = [
+    const FIELDS: [&'static str; 18] = [
         "requests",
         "queued",
         "in_flight",
@@ -557,9 +641,11 @@ impl StatusReport {
         "audited",
         "audit_rejected",
         "overloaded",
+        "oom_solutions",
+        "search_us_total",
     ];
 
-    fn values(&self) -> [u64; 16] {
+    fn values(&self) -> [u64; 18] {
         [
             self.requests,
             self.queued,
@@ -577,27 +663,62 @@ impl StatusReport {
             self.audited,
             self.audit_rejected,
             self.overloaded,
+            self.oom_solutions,
+            self.search_us_total,
         ]
     }
 
     pub fn to_json(&self) -> Json {
-        Json::Obj(
-            Self::FIELDS
-                .iter()
-                .zip(self.values())
-                .map(|(k, v)| (k.to_string(), u64_to_json(v)))
-                .collect(),
-        )
+        let mut fields: Vec<(String, Json)> = Self::FIELDS
+            .iter()
+            .zip(self.values())
+            .map(|(k, v)| (k.to_string(), u64_to_json(v)))
+            .collect();
+        // Structured sections are emitted only when present, so reports
+        // from servers without workers/latency data stay byte-stable
+        // and pre-PR-10 parsers never see unknown-shaped fields.
+        if !self.workers_detail.is_empty() {
+            fields.push((
+                "workers_detail".to_string(),
+                Json::Arr(self.workers_detail.iter().map(WorkerDetail::to_json).collect()),
+            ));
+        }
+        if !self.latency.is_empty() {
+            fields.push((
+                "latency".to_string(),
+                Json::Arr(self.latency.iter().map(LatencySummary::to_json).collect()),
+            ));
+        }
+        Json::Obj(fields)
     }
 
     pub fn from_json(j: &Json) -> crate::Result<StatusReport> {
         let ctx = "status report";
         let g = |key| u64_field(j, key, ctx);
-        // PR-7 throughput counters parse tolerantly (default 0) so
-        // reports written by older servers still load.
+        // PR-7 throughput counters and PR-10 observability fields parse
+        // tolerantly (default 0 / empty) so reports written by older
+        // servers still load.
         let opt = |key| match j.get(key) {
             Some(_) => u64_field(j, key, ctx),
             None => Ok(0),
+        };
+        let workers_detail = match j.get("workers_detail") {
+            Some(arr) => arr
+                .as_arr()
+                .ok_or_else(|| anyhow!("{ctx}: 'workers_detail' is not an array"))?
+                .iter()
+                .map(WorkerDetail::from_json)
+                .collect::<crate::Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        let latency = match j.get("latency") {
+            Some(arr) => arr
+                .as_arr()
+                .ok_or_else(|| anyhow!("{ctx}: 'latency' is not an array"))?
+                .iter()
+                .map(LatencySummary::from_json)
+                .collect::<crate::Result<Vec<_>>>()?,
+            None => Vec::new(),
         };
         Ok(StatusReport {
             requests: g("requests")?,
@@ -616,6 +737,10 @@ impl StatusReport {
             audited: opt("audited")?,
             audit_rejected: opt("audit_rejected")?,
             overloaded: opt("overloaded")?,
+            oom_solutions: opt("oom_solutions")?,
+            search_us_total: opt("search_us_total")?,
+            workers_detail,
+            latency,
         })
     }
 
@@ -629,15 +754,32 @@ impl StatusReport {
             .collect::<Vec<_>>()
             .join(" ")
     }
+
+    /// Multi-line per-worker table (one row per attached worker), or a
+    /// placeholder note when the server reported no rows.
+    pub fn render_workers(&self) -> String {
+        if self.workers_detail.is_empty() {
+            return "(no per-worker detail reported)".to_string();
+        }
+        let mut out = String::from("worker  capacity  in_flight  completed  heartbeat_ms  name");
+        for w in &self.workers_detail {
+            out.push_str(&format!(
+                "\n#{:<6} {:<9} {:<10} {:<10} {:<13} {}",
+                w.id, w.capacity, w.in_flight, w.completed, w.last_heartbeat_ms, w.name
+            ));
+        }
+        out
+    }
 }
 
 /// A message on the coordinator's socket protocol. One message per
 /// frame; see [`crate::coordinator::transport`] for the frame layout.
 ///
 /// Directions: workers send `Register`/`Heartbeat`/`Result` and receive
-/// `Registered`/`Job`; clients send `Submit`/`Status` and receive
-/// `Submitted`/`Response`/`StatusReport`. `Error` flows server→peer when
-/// a request cannot be honored (and poisons only that connection).
+/// `Registered`/`Job`; clients send `Submit`/`Status`/`Metrics` and
+/// receive `Submitted`/`Response`/`StatusReport`/`MetricsReport`.
+/// `Error` flows server→peer when a request cannot be honored (and
+/// poisons only that connection).
 // Payload variants dominate the control variants by design; messages are
 // transient (decoded, dispatched, dropped), so boxing would buy nothing.
 #[allow(clippy::large_enum_variant)]
@@ -662,6 +804,12 @@ pub enum Message {
     Status,
     /// Server → client: the counters.
     StatusReport(StatusReport),
+    /// Client → server: ask for the Prometheus text exposition
+    /// (counters plus per-phase latency histogram buckets).
+    Metrics,
+    /// Server → client: the exposition body, ready to serve to a
+    /// Prometheus scrape (text format, UTF-8).
+    MetricsReport { text: String },
     /// Server → client: the submit was refused by admission control —
     /// the queue sits at its bound. Structured (depth + limit) so
     /// clients can distinguish backpressure from hard failures and
@@ -685,6 +833,8 @@ impl Message {
             Message::Response(_) => "response",
             Message::Status => "status",
             Message::StatusReport(_) => "status_report",
+            Message::Metrics => "metrics",
+            Message::MetricsReport { .. } => "metrics_report",
             Message::Overloaded { .. } => "overloaded",
             Message::Error { .. } => "error",
         }
@@ -697,7 +847,10 @@ impl Message {
             Message::Registered { worker_id } => {
                 fields.push(("worker_id".into(), u64_to_json(*worker_id)))
             }
-            Message::Heartbeat | Message::Status => {}
+            Message::Heartbeat | Message::Status | Message::Metrics => {}
+            Message::MetricsReport { text } => {
+                fields.push(("text".into(), Json::s(text.clone())))
+            }
             Message::Job(req) | Message::Submit(req) => {
                 fields.push(("request".into(), req.to_json()))
             }
@@ -736,6 +889,10 @@ impl Message {
             "status" => Message::Status,
             "status_report" => {
                 Message::StatusReport(StatusReport::from_json(field(j, "report", ctx)?)?)
+            }
+            "metrics" => Message::Metrics,
+            "metrics_report" => {
+                Message::MetricsReport { text: str_field(j, "text", ctx)?.to_string() }
             }
             "overloaded" => Message::Overloaded {
                 queued: u64_field(j, "queued", ctx)?,
@@ -862,6 +1019,22 @@ mod tests {
             audited: 4,
             audit_rejected: 1,
             overloaded: 2,
+            oom_solutions: 1,
+            search_us_total: 987654,
+            workers_detail: vec![WorkerDetail {
+                id: 3,
+                name: "w3".into(),
+                capacity: 2,
+                in_flight: 1,
+                completed: 8,
+                last_heartbeat_ms: 120,
+            }],
+            latency: vec![LatencySummary {
+                phase: "cache_hit".into(),
+                count: 6,
+                p50_us: 63,
+                p99_us: 255,
+            }],
         };
         let back =
             StatusReport::from_json(&Json::parse(&report.to_json().render()).unwrap()).unwrap();
@@ -871,6 +1044,11 @@ mod tests {
         assert!(line.contains("workers=4"), "{line}");
         assert!(line.contains("cache_hits=6"), "{line}");
         assert!(line.contains("overloaded=2"), "{line}");
+        assert!(line.contains("oom_solutions=1"), "{line}");
+        assert!(line.contains("search_us_total=987654"), "{line}");
+        let table = report.render_workers();
+        assert!(table.contains("#3"), "{table}");
+        assert!(table.contains("w3"), "{table}");
     }
 
     #[test]
@@ -884,6 +1062,17 @@ mod tests {
         assert_eq!(back.cache_hits, 0);
         assert_eq!(back.audit_rejected, 0);
         assert_eq!(back.overloaded, 0);
+        // PR-10 observability fields: absent scalars parse as zero,
+        // absent structured sections as empty.
+        assert_eq!(back.oom_solutions, 0);
+        assert_eq!(back.search_us_total, 0);
+        assert!(back.workers_detail.is_empty());
+        assert!(back.latency.is_empty());
+        // And a report without them serializes without the keys, so
+        // old-for-old stays byte-stable.
+        let rendered = back.to_json().render();
+        assert!(!rendered.contains("workers_detail"), "{rendered}");
+        assert!(!rendered.contains("latency"), "{rendered}");
     }
 
     #[test]
@@ -895,6 +1084,8 @@ mod tests {
             Message::Submitted { id: 42 },
             Message::Status,
             Message::StatusReport(StatusReport { requests: 7, ..Default::default() }),
+            Message::Metrics,
+            Message::MetricsReport { text: "toast_requests_total 7\n".into() },
             Message::Overloaded { queued: 64, limit: 64 },
             Message::Error { message: "boom \"quoted\"".into() },
         ];
@@ -914,6 +1105,10 @@ mod tests {
                 }
                 (Message::StatusReport(a), Message::StatusReport(b)) => assert_eq!(a, b),
                 (
+                    Message::MetricsReport { text: a },
+                    Message::MetricsReport { text: b },
+                ) => assert_eq!(a, b),
+                (
                     Message::Overloaded { queued: qa, limit: la },
                     Message::Overloaded { queued: qb, limit: lb },
                 ) => {
@@ -924,7 +1119,8 @@ mod tests {
                     assert_eq!(a, b)
                 }
                 (Message::Heartbeat, Message::Heartbeat)
-                | (Message::Status, Message::Status) => {}
+                | (Message::Status, Message::Status)
+                | (Message::Metrics, Message::Metrics) => {}
                 _ => unreachable!("variant drifted through the wire"),
             }
         }

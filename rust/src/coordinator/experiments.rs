@@ -965,6 +965,11 @@ pub struct ServiceLoadReport {
     pub cache_misses: u64,
     /// `cold.p50 / warm.p50` — how much a cache hit saves.
     pub hit_speedup: f64,
+    /// The service's own live log-bucket histogram digests
+    /// (queue-wait / cold search / cache hit / verify), read back after
+    /// the campaign. Informational: printed, never serialized or gated,
+    /// so committed baselines are untouched.
+    pub live_latency: Vec<crate::api::wire::LatencySummary>,
 }
 
 impl ServiceLoadReport {
@@ -1047,6 +1052,7 @@ pub fn run_service_load(scale: BenchScale) -> ServiceLoadReport {
     let cold = phases.pop().expect("cold phase ran");
     let cache_hits = svc.metrics.cache_hits.load(std::sync::atomic::Ordering::Relaxed);
     let cache_misses = svc.metrics.cache_misses.load(std::sync::atomic::Ordering::Relaxed);
+    let live_latency = svc.metrics.latency_summaries();
     svc.shutdown();
 
     let total = 2 * distinct;
@@ -1062,6 +1068,7 @@ pub fn run_service_load(scale: BenchScale) -> ServiceLoadReport {
         cache_hits,
         cache_misses,
         hit_speedup: cold.p50_ms / warm.p50_ms.max(1e-6),
+        live_latency,
     }
 }
 
@@ -1168,6 +1175,15 @@ pub fn format_service_load(r: &ServiceLoadReport) -> String {
         "cache: {} hits / {} misses, hit speedup {:.0}x at p50",
         r.cache_hits, r.cache_misses, r.hit_speedup
     );
+    // The service's own log-bucket histograms, measured server-side
+    // (client-side stats above include channel hand-off). Informational.
+    for l in &r.live_latency {
+        let _ = writeln!(
+            out,
+            "service histogram {:<12} n={:<6} p50 {:>9}us  p99 {:>9}us",
+            l.phase, l.count, l.p50_us, l.p99_us
+        );
+    }
     out
 }
 

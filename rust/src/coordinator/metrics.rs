@@ -6,9 +6,18 @@
 //! [`Metrics::record_response`] when the worker's response is received.
 //! [`Metrics::report`] flattens everything into the serializable
 //! [`StatusReport`] a `status` request returns over the wire.
+//!
+//! Latency lives in lock-free log-bucketed [`Histogram`]s (one per
+//! request phase: queue wait, cold search, cache-hit answer, verify),
+//! so the running service reports *true* p50/p99 — not an average —
+//! both as [`LatencySummary`] rows in the status report and as
+//! Prometheus text exposition via [`Metrics::prometheus_text`]
+//! (`toast status --prom`, or the `metrics` wire request).
 
-use crate::api::wire::StatusReport;
+use crate::api::wire::{LatencySummary, StatusReport};
 use crate::api::PartitionResponse;
+use crate::obs::Histogram;
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
@@ -51,6 +60,14 @@ pub struct Metrics {
     pub audit_rejected: AtomicU64,
     /// Submits refused by admission control (queue at its bound).
     pub overloaded: AtomicU64,
+    /// Time a request sat between admission and dispatch, microseconds.
+    pub hist_queue_wait: Histogram,
+    /// Full search latency for cache-miss ("cold") requests.
+    pub hist_search_cold: Histogram,
+    /// Admission-to-answer latency for cache-hit requests.
+    pub hist_cache_hit: Histogram,
+    /// Differential verify / server audit replay latency.
+    pub hist_verify: Histogram,
 }
 
 /// Saturating decrement: gauges must never underflow into u64::MAX even
@@ -193,6 +210,104 @@ impl Metrics {
         self.overloaded.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Admission-to-dispatch wait for one request.
+    pub fn record_queue_wait(&self, wait: Duration) {
+        self.hist_queue_wait.record(wait.as_micros() as u64);
+    }
+
+    /// Full search latency for a cache-miss request.
+    pub fn record_search_latency(&self, search: Duration) {
+        self.hist_search_cold.record(search.as_micros() as u64);
+    }
+
+    /// Admission-to-answer latency for a cache-hit request.
+    pub fn record_cache_hit_latency(&self, latency: Duration) {
+        self.hist_cache_hit.record(latency.as_micros() as u64);
+    }
+
+    /// One differential verify (or server-side audit) replay.
+    pub fn record_verify_latency(&self, verify: Duration) {
+        self.hist_verify.record(verify.as_micros() as u64);
+    }
+
+    /// Per-phase latency digests for the status report: one row per
+    /// phase that has recorded at least one sample.
+    pub fn latency_summaries(&self) -> Vec<LatencySummary> {
+        let phases: [(&str, &Histogram); 4] = [
+            ("queue_wait", &self.hist_queue_wait),
+            ("search_cold", &self.hist_search_cold),
+            ("cache_hit", &self.hist_cache_hit),
+            ("verify", &self.hist_verify),
+        ];
+        phases
+            .into_iter()
+            .filter_map(|(phase, hist)| {
+                let snap = hist.snapshot();
+                (snap.count > 0).then(|| LatencySummary {
+                    phase: phase.to_string(),
+                    count: snap.count,
+                    p50_us: snap.quantile(0.5),
+                    p99_us: snap.quantile(0.99),
+                })
+            })
+            .collect()
+    }
+
+    /// Prometheus text exposition: every counter/gauge as a
+    /// `toast_*`-prefixed metric plus the per-phase latency histograms
+    /// as cumulative `_bucket`/`_sum`/`_count` series under one family
+    /// (`toast_request_latency_us{phase=...}`). Serve verbatim to a
+    /// scrape (text format 0.0.4).
+    pub fn prometheus_text(&self) -> String {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        let mut out = String::new();
+        let counters: [(&str, u64); 14] = [
+            ("toast_requests_total", g(&self.requests)),
+            ("toast_completed_total", g(&self.completed)),
+            ("toast_failed_total", g(&self.failed)),
+            ("toast_verified_total", g(&self.verified)),
+            ("toast_rejected_total", g(&self.rejected)),
+            ("toast_requeued_total", g(&self.requeued)),
+            ("toast_evaluations_total", g(&self.evaluations)),
+            ("toast_cache_hits_total", g(&self.cache_hits)),
+            ("toast_cache_misses_total", g(&self.cache_misses)),
+            ("toast_audited_total", g(&self.audited)),
+            ("toast_audit_rejected_total", g(&self.audit_rejected)),
+            ("toast_overloaded_total", g(&self.overloaded)),
+            ("toast_oom_solutions_total", g(&self.oom_solutions)),
+            ("toast_search_us_total", g(&self.search_us_total)),
+        ];
+        for (name, v) in counters {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        let gauges: [(&str, u64); 4] = [
+            ("toast_queue_depth", g(&self.queued)),
+            ("toast_in_flight", g(&self.in_flight)),
+            ("toast_workers", g(&self.workers)),
+            ("toast_cache_size", g(&self.cache_size)),
+        ];
+        for (name, v) in gauges {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        let _ = writeln!(out, "# TYPE toast_request_latency_us histogram");
+        let phases: [(&str, &Histogram); 4] = [
+            ("queue_wait", &self.hist_queue_wait),
+            ("search_cold", &self.hist_search_cold),
+            ("cache_hit", &self.hist_cache_hit),
+            ("verify", &self.hist_verify),
+        ];
+        for (phase, hist) in phases {
+            hist.snapshot().render_prometheus(
+                "toast_request_latency_us",
+                &format!("phase=\"{phase}\""),
+                &mut out,
+            );
+        }
+        out
+    }
+
     pub fn mean_search_ms(&self) -> f64 {
         let done = self.completed.load(Ordering::Relaxed);
         if done == 0 {
@@ -221,6 +336,12 @@ impl Metrics {
             audited: g(&self.audited),
             audit_rejected: g(&self.audit_rejected),
             overloaded: g(&self.overloaded),
+            oom_solutions: g(&self.oom_solutions),
+            search_us_total: g(&self.search_us_total),
+            // Per-worker rows need the worker registry, which lives on
+            // the service — `ServiceShared::status_report` fills them.
+            workers_detail: Vec::new(),
+            latency: self.latency_summaries(),
         }
     }
 
@@ -344,5 +465,54 @@ mod tests {
         // queue/in-flight gauges alone: nothing was ever dispatched.
         assert_eq!(m.queue_depth(), 0);
         assert_eq!(m.in_flight.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn oom_and_search_time_flow_into_the_wire_report() {
+        let m = Metrics::default();
+        m.record_completion(Duration::from_millis(10), 100, true);
+        m.record_completion(Duration::from_millis(30), 200, false);
+        let r = m.report();
+        assert_eq!(r.oom_solutions, 1);
+        assert_eq!(r.search_us_total, 40_000);
+        // The wire report and the human snapshot can no longer drift:
+        // both carry the OOM count and the search-time total.
+        assert!(m.snapshot().contains("oom=1"));
+        assert!(r.render_line().contains("oom_solutions=1"));
+        assert!(r.render_line().contains("search_us_total=40000"));
+    }
+
+    #[test]
+    fn latency_histograms_summarize_and_expose() {
+        let m = Metrics::default();
+        assert!(m.latency_summaries().is_empty(), "no samples, no rows");
+        m.record_queue_wait(Duration::from_micros(100));
+        m.record_search_latency(Duration::from_millis(20));
+        m.record_search_latency(Duration::from_millis(21));
+        m.record_cache_hit_latency(Duration::from_micros(40));
+        m.record_verify_latency(Duration::from_millis(3));
+        let rows = m.latency_summaries();
+        assert_eq!(rows.len(), 4);
+        let cold = rows.iter().find(|r| r.phase == "search_cold").unwrap();
+        assert_eq!(cold.count, 2);
+        assert!(cold.p50_us >= 16_384 && cold.p50_us <= 65_535, "{cold:?}");
+        assert!(cold.p99_us >= cold.p50_us, "{cold:?}");
+        let report = m.report();
+        assert_eq!(report.latency, rows);
+
+        m.record_request();
+        let prom = m.prometheus_text();
+        assert!(prom.contains("# TYPE toast_requests_total counter"), "{prom}");
+        assert!(prom.contains("toast_requests_total 1"), "{prom}");
+        assert!(prom.contains("# TYPE toast_request_latency_us histogram"), "{prom}");
+        assert!(
+            prom.contains("toast_request_latency_us_bucket{phase=\"search_cold\",le="),
+            "{prom}"
+        );
+        assert!(
+            prom.contains("toast_request_latency_us_bucket{phase=\"cache_hit\",le=\"+Inf\"} 1"),
+            "{prom}"
+        );
+        assert!(prom.contains("toast_request_latency_us_count{phase=\"verify\"} 1"), "{prom}");
     }
 }

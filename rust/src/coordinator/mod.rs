@@ -54,6 +54,44 @@
 //! claim does not reproduce. Auth and TLS for the listening port remain
 //! open follow-ons (ROADMAP); until then the port should stay on
 //! localhost or a trusted network.
+//!
+//! ## Observability
+//!
+//! Three zero-dependency layers, all rooted in [`crate::obs`]:
+//!
+//! 1. **Structured tracing**: the search hot path (select/expand,
+//!    batched leaf flush, backprop, incremental replay), the
+//!    partitioner, and the full request lifecycle (admit → queue wait →
+//!    dispatch → search → verify/audit → respond) carry
+//!    [`crate::obs::span`]/[`crate::obs::event`] probes. Disabled by
+//!    default at near-zero cost (one relaxed atomic load); when enabled
+//!    ([`crate::obs::set_enabled`]) events land in a bounded
+//!    lock-striped ring that drops oldest and never blocks.
+//!    `toast trace --out trace.json` drains the ring as Chrome
+//!    trace-event JSON (Perfetto / `chrome://tracing`).
+//! 2. **Per-search telemetry**: sessions run with
+//!    [`crate::api::Partitioner::trace`] attach a
+//!    [`crate::obs::SearchTrace`] (best-cost-over-evals curve, tree
+//!    size, transposition merges, eval-cache hit rates, per-phase time)
+//!    to the [`crate::api::Solution`]; the wire field is omitted when
+//!    absent so untraced artifacts are byte-identical to pre-tracing
+//!    ones. Tracing observes, never steers: solutions are byte-identical
+//!    with it on or off.
+//! 3. **Live latency histograms**: lock-free log-bucketed
+//!    [`crate::obs::Histogram`]s in [`metrics::Metrics`] record
+//!    queue-wait, cold-search, cache-hit and verify latency per
+//!    request. Digests (true p50/p99 within one log bucket) flow into
+//!    every status report (`workers_detail` rides along), and a
+//!    `metrics` wire request answers the Prometheus text exposition —
+//!    `toast status --prom` serves it verbatim to a scrape job.
+//!
+//! Opening a trace: `toast trace --model attention --mesh 2x2 --out
+//! trace.json`, then load the file at <https://ui.perfetto.dev> (or
+//! `chrome://tracing`). Scraping: the exposition has no HTTP endpoint
+//! (the wire protocol is framed JSON), so point a textfile collector at
+//! it — e.g. a cron'd `toast status --connect HOST:PORT --prom >
+//! /var/lib/node_exporter/toast.prom` picked up by node_exporter's
+//! textfile module, or any sidecar that shells out per scrape.
 
 pub mod experiments;
 pub mod metrics;

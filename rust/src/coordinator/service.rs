@@ -28,10 +28,12 @@
 //! validation record on the solution.)
 
 use super::metrics::Metrics;
+use crate::api::wire::{StatusReport, WorkerDetail};
 use crate::api::{validate_solution_spec, CompiledModel, MctsStrategy, ModelSource, Solution};
 use crate::baselines::Method;
 use crate::mesh::{HardwareKind, Mesh, Topology};
 use crate::models::ModelKind;
+use crate::obs;
 use crate::search::SearchConfig;
 use anyhow::anyhow;
 use std::collections::{HashMap, VecDeque};
@@ -402,6 +404,22 @@ pub fn process_request(
     models: &ModelCache,
     cfg: &ServiceConfig,
 ) -> PartitionResponse {
+    process_request_metered(req, models, cfg, None)
+}
+
+/// [`process_request`] with latency accounting: when `metrics` is
+/// present, the search and verify phases feed the live latency
+/// histograms ([`Metrics::record_search_latency`] /
+/// [`Metrics::record_verify_latency`]). Worker processes on the far end
+/// of a socket pass `None` — their latencies are observed server-side,
+/// where the response is received.
+pub fn process_request_metered(
+    req: &PartitionRequest,
+    models: &ModelCache,
+    cfg: &ServiceConfig,
+    metrics: Option<&Metrics>,
+) -> PartitionResponse {
+    let _sp = obs::span("service", "request.process");
     let mut rejected = false;
     let result = (|| -> crate::Result<Solution> {
         let compiled = models.resolve(&req.model)?;
@@ -419,14 +437,28 @@ pub fn process_request(
         } else {
             session.method(req.method)
         };
-        let mut sol = session.run()?;
+        let t_search = Instant::now();
+        let mut sol = {
+            let _sp = obs::span("service", "request.search");
+            session.run()?
+        };
+        if let Some(m) = metrics {
+            m.record_search_latency(t_search.elapsed());
+        }
         // Trust-but-verify: replay the returned spec through the
         // differential harness before accepting it. The strategy's own
         // claims (cost, spec) are not trusted until the executed sharded
         // module matches the interpreter oracle.
         if cfg.verify && req.verify && compiled.interpreter_sized() {
-            match validate_solution_spec(compiled.func(), &sol.spec, &req.mesh, cfg.verify_seed)
-            {
+            let t_verify = Instant::now();
+            let replay = {
+                let _sp = obs::span("service", "request.verify");
+                validate_solution_spec(compiled.func(), &sol.spec, &req.mesh, cfg.verify_seed)
+            };
+            if let Some(m) = metrics {
+                m.record_verify_latency(t_verify.elapsed());
+            }
+            match replay {
                 Ok(record) if record.pass => {
                     sol.validation = Some(record);
                 }
@@ -461,6 +493,38 @@ pub fn process_request(
 // Service
 // ---------------------------------------------------------------------------
 
+/// Live bookkeeping for one worker — an in-process thread or a remote
+/// `toast worker` connection — feeding the `workers_detail` section of
+/// [`StatusReport`]. Counters are relaxed atomics: the detail list is an
+/// operator snapshot, not an accounting source of truth (that is
+/// [`Metrics`]).
+pub(crate) struct WorkerEntry {
+    pub(crate) name: String,
+    /// Pipelining depth (1 for thread workers; the feeder capacity for
+    /// socket workers).
+    pub(crate) capacity: u64,
+    pub(crate) in_flight: AtomicU64,
+    pub(crate) completed: AtomicU64,
+    /// Last observed activity (spawn/heartbeat/result).
+    pub(crate) last_seen: Mutex<Instant>,
+}
+
+impl WorkerEntry {
+    pub(crate) fn new(name: String, capacity: u64) -> WorkerEntry {
+        WorkerEntry {
+            name,
+            capacity,
+            in_flight: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            last_seen: Mutex::new(Instant::now()),
+        }
+    }
+
+    pub(crate) fn touch(&self) {
+        *self.last_seen.lock().unwrap() = Instant::now();
+    }
+}
+
 /// State shared between the service handle, its worker threads, and (in
 /// socket mode) the TCP transport layer.
 pub(crate) struct ServiceShared {
@@ -477,6 +541,14 @@ pub(crate) struct ServiceShared {
     /// [`super::transport`]'s `MAX_REQUEUES` guard. Entries are removed
     /// when a request completes.
     pub(crate) requeue_counts: Mutex<HashMap<u64, u32>>,
+    /// Admission timestamps of queued requests; taken at dispatch to
+    /// feed the queue-wait latency histogram. Entries for requeued
+    /// requests were consumed at first dispatch, so a requeue's second
+    /// wait is deliberately not double-counted.
+    enqueue_times: Mutex<HashMap<u64, Instant>>,
+    /// Live workers by id — thread workers register at spawn, socket
+    /// workers at their `Register` frame; both deregister on exit/death.
+    pub(crate) worker_registry: Mutex<HashMap<u64, Arc<WorkerEntry>>>,
     /// Master response sender; worker/transport threads clone it. Taken
     /// (set to `None`) at shutdown so the response channel disconnects
     /// once the last worker drops its clone.
@@ -522,10 +594,14 @@ impl ServiceShared {
         }
         // Enqueue gauge goes up *before* the push: once the request is
         // in the queue a worker may dispatch it immediately, and its
-        // decrement must always pair with this increment.
+        // decrement must always pair with this increment. The queue-wait
+        // clock starts here for the same reason.
         self.metrics.record_enqueue();
+        self.enqueue_times.lock().unwrap().insert(id, Instant::now());
+        obs::event("service", "request.enqueue");
         if !self.queue.push(req) {
             self.metrics.record_unqueue();
+            self.enqueue_times.lock().unwrap().remove(&id);
             return Err(anyhow!("partition service is shut down; request {id} dropped"));
         }
         self.metrics.record_request();
@@ -543,11 +619,14 @@ impl ServiceShared {
         &self,
         req: PartitionRequest,
     ) -> crate::Result<Option<PartitionResponse>> {
+        let _sp = obs::span("service", "request.admit");
+        let t0 = Instant::now();
         if !req.no_cache {
             if let Some(sol) = self.cache.lookup(&req) {
                 let result = Ok(sol);
                 let resp = PartitionResponse { id: req.id, request: req, result, rejected: false };
                 self.metrics.record_cache_hit(&resp);
+                self.metrics.record_cache_hit_latency(t0.elapsed());
                 return Ok(Some(resp));
             }
             self.metrics.record_cache_miss();
@@ -573,11 +652,15 @@ impl ServiceShared {
     /// response. Centralizing the ledger clear is what keeps
     /// `requeue_counts` from leaking entries on any terminal path.
     pub(crate) fn complete_response(&self, resp: &PartitionResponse) {
+        obs::event("service", "request.respond");
         if let Ok(sol) = &resp.result {
             let size = self.cache.insert(&resp.request, sol);
             self.metrics.set_cache_size(size as u64);
         }
         self.requeue_counts.lock().unwrap().remove(&resp.id);
+        // Defensive: dispatch already consumed the queue-wait entry;
+        // this only matters for a request failed back without one.
+        self.enqueue_times.lock().unwrap().remove(&resp.id);
         self.metrics.record_response(resp);
     }
 
@@ -586,16 +669,81 @@ impl ServiceShared {
     pub(crate) fn pending_requeue_entries(&self) -> usize {
         self.requeue_counts.lock().unwrap().len()
     }
+
+    /// Account a dispatch: the in-flight gauge, plus the request's queue
+    /// wait (admission → dispatch) into the latency histogram. Requeued
+    /// requests consumed their ledger entry at first dispatch and record
+    /// nothing further.
+    pub(crate) fn note_dispatch(&self, id: u64) {
+        obs::event("service", "request.dispatch");
+        self.metrics.record_dispatch();
+        let waited = self.enqueue_times.lock().unwrap().remove(&id);
+        if let Some(t0) = waited {
+            self.metrics.record_queue_wait(t0.elapsed());
+        }
+    }
+
+    /// Register a worker under `id`. The returned entry is shared: the
+    /// caller updates its counters, the registry renders them.
+    pub(crate) fn register_worker(
+        &self,
+        id: u64,
+        name: String,
+        capacity: u64,
+    ) -> Arc<WorkerEntry> {
+        let entry = Arc::new(WorkerEntry::new(name, capacity));
+        self.worker_registry.lock().unwrap().insert(id, Arc::clone(&entry));
+        entry
+    }
+
+    pub(crate) fn deregister_worker(&self, id: u64) {
+        self.worker_registry.lock().unwrap().remove(&id);
+    }
+
+    /// Per-worker operator snapshot, ordered by worker id.
+    pub(crate) fn workers_detail(&self) -> Vec<WorkerDetail> {
+        let g = self.worker_registry.lock().unwrap();
+        let mut v: Vec<WorkerDetail> = g
+            .iter()
+            .map(|(&id, e)| WorkerDetail {
+                id,
+                name: e.name.clone(),
+                capacity: e.capacity,
+                in_flight: e.in_flight.load(Ordering::Relaxed),
+                completed: e.completed.load(Ordering::Relaxed),
+                last_heartbeat_ms: e.last_seen.lock().unwrap().elapsed().as_millis() as u64,
+            })
+            .collect();
+        v.sort_by_key(|w| w.id);
+        v
+    }
+
+    /// The full status document: counter totals and latency digests from
+    /// [`Metrics::report`], plus the live per-worker detail only this
+    /// layer knows.
+    pub(crate) fn status_report(&self) -> StatusReport {
+        let mut report = self.metrics.report();
+        report.workers_detail = self.workers_detail();
+        report
+    }
+
+    /// Prometheus text exposition of every counter, gauge and histogram.
+    pub(crate) fn prometheus_text(&self) -> String {
+        self.metrics.prometheus_text()
+    }
 }
 
 /// Decrements a liveness gauge when dropped — worker threads hold one so
-/// even a panicking worker is accounted as gone.
+/// even a panicking worker is accounted as gone (and deregistered from
+/// the worker detail list).
 struct AliveGuard {
     shared: Arc<ServiceShared>,
+    worker_id: u64,
 }
 
 impl Drop for AliveGuard {
     fn drop(&mut self) {
+        self.shared.deregister_worker(self.worker_id);
         self.shared.local_alive.fetch_sub(1, Ordering::Relaxed);
         self.shared.metrics.record_worker_lost();
     }
@@ -634,6 +782,8 @@ impl Service {
             next_id: AtomicU64::new(1),
             next_worker_id: AtomicU64::new(1),
             requeue_counts: Mutex::new(HashMap::new()),
+            enqueue_times: Mutex::new(HashMap::new()),
+            worker_registry: Mutex::new(HashMap::new()),
             resp_tx: Mutex::new(Some(resp_tx)),
             local_alive: AtomicU64::new(0),
             transport_attached: AtomicBool::new(false),
@@ -642,13 +792,24 @@ impl Service {
         for _ in 0..cfg.workers {
             shared.local_alive.fetch_add(1, Ordering::Relaxed);
             shared.metrics.record_worker_connected();
+            let worker_id = shared.next_worker_id.fetch_add(1, Ordering::Relaxed);
+            let entry = shared.register_worker(worker_id, format!("local-{worker_id}"), 1);
             let tx = shared.response_sender().expect("sender alive at startup");
             let shared = Arc::clone(&shared);
             workers.push(std::thread::spawn(move || {
-                let _guard = AliveGuard { shared: Arc::clone(&shared) };
+                let _guard = AliveGuard { shared: Arc::clone(&shared), worker_id };
                 while let Some(req) = shared.queue.pop() {
-                    shared.metrics.record_dispatch();
-                    let resp = process_request(&req, &shared.models, &shared.cfg);
+                    shared.note_dispatch(req.id);
+                    entry.in_flight.store(1, Ordering::Relaxed);
+                    let resp = process_request_metered(
+                        &req,
+                        &shared.models,
+                        &shared.cfg,
+                        Some(&shared.metrics),
+                    );
+                    entry.in_flight.store(0, Ordering::Relaxed);
+                    entry.completed.fetch_add(1, Ordering::Relaxed);
+                    entry.touch();
                     shared.complete_response(&resp);
                     if tx.send(resp).is_err() {
                         break;
@@ -681,6 +842,17 @@ impl Service {
     /// Solutions currently held by the server-side cache.
     pub fn cache_len(&self) -> usize {
         self.shared.cache.len()
+    }
+
+    /// The same status document a socket `status` request answers with:
+    /// counter totals, per-phase latency digests, per-worker detail.
+    pub fn status_report(&self) -> StatusReport {
+        self.shared.status_report()
+    }
+
+    /// Prometheus text exposition of the service's live metrics.
+    pub fn prometheus_text(&self) -> String {
+        self.shared.prometheus_text()
     }
 
     /// Requeue-ledger entries still outstanding (0 once every dispatched
@@ -942,6 +1114,40 @@ mod tests {
         c1.search_time_s = 0.0;
         c3.search_time_s = 0.0;
         assert_eq!(c1.to_json().render(), c3.to_json().render());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn status_report_carries_worker_detail_and_latency_digests() {
+        let svc = Service::start_with(ServiceConfig {
+            workers: 2,
+            search_threads: 1,
+            ..Default::default()
+        });
+        let req = default_request(ModelKind::Mlp, Method::Toast);
+        svc.submit(req.clone()).unwrap();
+        let _ = svc.responses.recv().unwrap();
+        // The identical request hits the cache: the cache_hit phase gets
+        // its first sample while search_cold keeps exactly one.
+        svc.submit(req).unwrap();
+        let _ = svc.responses.recv().unwrap();
+
+        let report = svc.shared.status_report();
+        assert_eq!(report.workers_detail.len(), 2, "both thread workers registered");
+        assert!(report.workers_detail.iter().all(|w| w.capacity == 1 && w.in_flight == 0));
+        assert_eq!(report.workers_detail.iter().map(|w| w.completed).sum::<u64>(), 1);
+        let phases: Vec<&str> = report.latency.iter().map(|l| l.phase.as_str()).collect();
+        for phase in ["queue_wait", "search_cold", "cache_hit", "verify"] {
+            assert!(phases.contains(&phase), "missing {phase} in {phases:?}");
+        }
+        // The report round-trips (socket mode ships it as a frame).
+        let back =
+            StatusReport::from_json(&Json::parse(&report.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back, report);
+
+        let prom = svc.shared.prometheus_text();
+        assert!(prom.contains("toast_requests_total 2"), "{prom}");
+        assert!(prom.contains("toast_request_latency_us_bucket{phase=\"search_cold\""), "{prom}");
         svc.shutdown();
     }
 

@@ -22,9 +22,10 @@
 //!   [`run_worker_reconnect`]: a lost connection retries with
 //!   exponential backoff ([`ReconnectPolicy`]), so a restarted server
 //!   picks its fleet back up without re-spawning worker processes.
-//! * **Clients** connect and send `submit` (acked with `submitted`) and
-//!   `status` (answered with `status_report`); completed `response`
-//!   frames arrive as workers finish.
+//! * **Clients** connect and send `submit` (acked with `submitted`),
+//!   `status` (answered with `status_report`) and `metrics` (answered
+//!   with `metrics_report` — the Prometheus text exposition); completed
+//!   `response` frames arrive as workers finish.
 //!
 //! ## Liveness and requeue
 //!
@@ -59,6 +60,7 @@
 use super::metrics::Metrics;
 use super::service::{
     process_request, ModelCache, Overloaded, Popped, Service, ServiceConfig, ServiceShared,
+    WorkerEntry,
 };
 use crate::api::wire::{Message, StatusReport};
 use crate::api::{
@@ -485,12 +487,15 @@ fn handle_connection(
     // The first frame declares the peer's role.
     match read_message(&mut reader, MAX_FRAME_LEN) {
         Ok(Some(Message::Register { name })) => worker_connection(name, reader, writer, shared, cfg),
-        Ok(Some(first @ (Message::Submit(_) | Message::Status))) => {
+        Ok(Some(first @ (Message::Submit(_) | Message::Status | Message::Metrics))) => {
             client_connection(first, reader, writer, shared, router)
         }
         Ok(Some(other)) => send_error(
             &writer,
-            &format!("protocol error: expected register, submit or status, got '{}'", other.tag()),
+            &format!(
+                "protocol error: expected register, submit, status or metrics, got '{}'",
+                other.tag()
+            ),
         ),
         Ok(None) => {}
         Err(e) => {
@@ -523,6 +528,7 @@ fn worker_connection(
     }
     shared.metrics.record_worker_connected();
     eprintln!("[serve] worker #{id} ({name}) registered");
+    let entry = shared.register_worker(id, name.clone(), cfg.capacity.max(1) as u64);
     let worker = Arc::new(RemoteWorker {
         id,
         name,
@@ -535,16 +541,18 @@ fn worker_connection(
 
     let feeder = std::thread::spawn({
         let worker = Arc::clone(&worker);
+        let entry = Arc::clone(&entry);
         let shared = Arc::clone(&shared);
         let writer = Arc::clone(&writer);
-        move || feeder_loop(&worker, &writer, &shared)
+        move || feeder_loop(&worker, &entry, &writer, &shared)
     });
-    reader_loop(&worker, reader, &shared, resp_tx, &cfg);
+    reader_loop(&worker, &entry, reader, &shared, resp_tx, &cfg);
     // Reader exited (death, protocol violation, or shutdown): make sure
     // the feeder unblocks and any in-flight request survives.
     worker.mark_dead();
     worker.requeue_in_flight(&shared);
     let _ = feeder.join();
+    shared.deregister_worker(id);
     shared.metrics.record_worker_lost();
     eprintln!("[serve] worker #{} ({}) disconnected", worker.id, worker.name);
 }
@@ -554,7 +562,12 @@ fn worker_connection(
 /// the worker process consumes them sequentially, but the next job is
 /// already buffered when a result comes back, so a multi-job worker
 /// never idles on the dispatch round-trip.
-fn feeder_loop(worker: &RemoteWorker, writer: &SharedWriter, shared: &ServiceShared) {
+fn feeder_loop(
+    worker: &RemoteWorker,
+    entry: &WorkerEntry,
+    writer: &SharedWriter,
+    shared: &ServiceShared,
+) {
     loop {
         // Wait for a free slot (a result arrived) or death.
         {
@@ -579,8 +592,13 @@ fn feeder_loop(worker: &RemoteWorker, writer: &SharedWriter, shared: &ServiceSha
             }
             Popped::Empty => continue,
             Popped::Job(req) => {
-                shared.metrics.record_dispatch();
-                worker.in_flight.lock().unwrap().insert(req.id, req.clone());
+                shared.note_dispatch(req.id);
+                let depth = {
+                    let mut slots = worker.in_flight.lock().unwrap();
+                    slots.insert(req.id, req.clone());
+                    slots.len()
+                };
+                entry.in_flight.store(depth as u64, Ordering::Relaxed);
                 let sent = {
                     let mut w = writer.lock().unwrap();
                     write_message(&mut *w, &Message::Job(req)).is_ok()
@@ -603,6 +621,7 @@ fn feeder_loop(worker: &RemoteWorker, writer: &SharedWriter, shared: &ServiceSha
 /// dead by any definition.
 fn reader_loop(
     worker: &RemoteWorker,
+    entry: &WorkerEntry,
     mut reader: TcpStream,
     shared: &ServiceShared,
     resp_tx: Sender<PartitionResponse>,
@@ -623,6 +642,7 @@ fn reader_loop(
         match read_frame_event(&mut reader, MAX_FRAME_LEN) {
             Ok(FrameEvent::Frame(bytes)) => {
                 *worker.last_seen.lock().unwrap() = Instant::now();
+                entry.touch();
                 let msg = match Json::parse_slice(&bytes)
                     .map_err(anyhow::Error::from)
                     .and_then(|j| Message::from_json(&j))
@@ -640,11 +660,22 @@ fn reader_loop(
                             let mut slots = worker.in_flight.lock().unwrap();
                             let hit = slots.remove(&resp.id).is_some();
                             if hit {
+                                entry.in_flight.store(slots.len() as u64, Ordering::Relaxed);
                                 worker.idle_cv.notify_all();
                             }
                             hit
                         };
                         if matched {
+                            entry.completed.fetch_add(1, Ordering::Relaxed);
+                            // The worker measured its own search; feed it
+                            // into the search_cold histogram so socket
+                            // mode reports the same latency phases the
+                            // thread mode does.
+                            if let Ok(sol) = &resp.result {
+                                shared.metrics.record_search_latency(
+                                    Duration::from_secs_f64(sol.search_time_s),
+                                );
+                            }
                             // Sampled server-side audit *before* the
                             // terminal path: a rejected result must
                             // never enter the solution cache.
@@ -744,16 +775,21 @@ fn audit_response(
         };
     }
     let seed = claimed.as_ref().map_or(shared.cfg.verify_seed, |v| v.seed);
-    let replay = match &sol.stages {
-        Some(sa) => validate_staged_solution_spec(
-            compiled.func(),
-            &sol.spec,
-            sa,
-            &resp.request.mesh,
-            seed,
-        ),
-        None => validate_solution_spec(compiled.func(), &sol.spec, &resp.request.mesh, seed),
+    let t_verify = Instant::now();
+    let replay = {
+        let _sp = crate::obs::span("service", "request.audit");
+        match &sol.stages {
+            Some(sa) => validate_staged_solution_spec(
+                compiled.func(),
+                &sol.spec,
+                sa,
+                &resp.request.mesh,
+                seed,
+            ),
+            None => validate_solution_spec(compiled.func(), &sol.spec, &resp.request.mesh, seed),
+        }
     };
+    shared.metrics.record_verify_latency(t_verify.elapsed());
     match replay {
         Ok(record) if record.pass => {
             // The spec replays clean. Stamp the *server's* record onto
@@ -875,9 +911,16 @@ fn client_connection(
                 }
             }
             Message::Status => {
-                let report = shared.metrics.report();
+                let report = shared.status_report();
                 let mut w = writer.lock().unwrap();
                 if write_message(&mut *w, &Message::StatusReport(report)).is_err() {
+                    break;
+                }
+            }
+            Message::Metrics => {
+                let text = shared.prometheus_text();
+                let mut w = writer.lock().unwrap();
+                if write_message(&mut *w, &Message::MetricsReport { text }).is_err() {
                     break;
                 }
             }
@@ -1171,6 +1214,20 @@ impl ServiceClient {
                 Message::Response(resp) => self.buffered.push_back(resp),
                 Message::Error { message } => bail!("server error: {message}"),
                 other => bail!("unexpected '{}' while awaiting status", other.tag()),
+            }
+        }
+    }
+
+    /// Fetch the server's Prometheus text exposition (`toast status
+    /// --prom` serves this verbatim to a scrape).
+    pub fn metrics_prom(&mut self) -> crate::Result<String> {
+        write_message(&mut self.writer, &Message::Metrics)?;
+        loop {
+            match self.next_message()? {
+                Message::MetricsReport { text } => return Ok(text),
+                Message::Response(resp) => self.buffered.push_back(resp),
+                Message::Error { message } => bail!("server error: {message}"),
+                other => bail!("unexpected '{}' while awaiting metrics", other.tag()),
             }
         }
     }

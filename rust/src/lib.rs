@@ -103,6 +103,16 @@
 //!   tolerance-equivalence against the interpreter oracle (both share
 //!   [`ir::interp::eval_op`] for compute) — plus the PJRT (XLA)
 //!   execution path for AOT artifacts.
+//! * [`obs`] — the zero-dependency observability layer: a bounded
+//!   lock-striped trace ring (spans/events → Chrome trace-event JSON
+//!   loadable in Perfetto), the per-search [`obs::SearchTrace`]
+//!   telemetry artifact attached to solutions behind `--trace`
+//!   (best-cost-over-evals curve, transposition merges, cache hit
+//!   rates, per-phase time), and lock-free log-bucketed
+//!   [`obs::Histogram`]s backing the service's live p50/p99 latency
+//!   reporting and Prometheus text exposition (`toast status --prom`).
+//!   Disabled by default at near-zero cost, and decision-neutral:
+//!   solutions with tracing on and off are byte-identical.
 //! * [`api`] — the session facade described above, including the
 //!   wire-level job unit ([`api::PartitionRequest`] /
 //!   [`api::PartitionResponse`]) and the socket protocol's message
@@ -134,6 +144,7 @@ pub mod ir;
 pub mod mesh;
 pub mod models;
 pub mod nda;
+pub mod obs;
 pub mod pipeline;
 pub mod runtime;
 pub mod search;

@@ -52,6 +52,15 @@
 //!   which is how CI proves the two transports produce byte-identical
 //!   artifacts.
 //! * `e2e`       — PJRT data-parallel training over AOT artifacts.
+//! * `trace`     — run one traced search with the observability ring
+//!   enabled and write the Chrome trace-event JSON (`--out trace.json`,
+//!   loadable in Perfetto / `chrome://tracing`); prints the attached
+//!   `SearchTrace` telemetry. `partition`/`search` take `--trace` to
+//!   attach the same telemetry to their solutions without the ring.
+//! * `status`    — query a running `serve --listen` server:
+//!   `--connect HOST:PORT` prints the status line, per-worker table and
+//!   latency digests; `--prom` prints the Prometheus text exposition
+//!   instead (pipe it straight into a scrape job).
 //!
 //! ## Wire protocol (socket mode)
 //!
@@ -60,8 +69,8 @@
 //! garbage prefix cannot trigger unbounded allocation). A message is a
 //! tagged object `{"msg": TAG, ...}`: workers send
 //! `register`/`heartbeat`/`result` and receive `registered`/`job`;
-//! clients send `submit`/`status` and receive
-//! `submitted`/`response`/`status_report`; `error` reports a rejected
+//! clients send `submit`/`status`/`metrics` and receive
+//! `submitted`/`response`/`status_report`/`metrics_report`; `error` reports a rejected
 //! frame and poisons only its own connection. Dead workers (no
 //! heartbeat within `--dead-after-ms`, or a closed socket) get their
 //! in-flight request requeued at the front of the shared queue.
@@ -101,6 +110,8 @@ fn main() -> ExitCode {
         "worker" => cmd_worker(&flags),
         "submit" => cmd_submit(&flags),
         "e2e" => cmd_e2e(&flags),
+        "trace" => cmd_trace(&flags),
+        "status" => cmd_status(&flags),
         "help" | "--help" | "-h" => {
             usage();
             Ok(())
@@ -129,12 +140,12 @@ USAGE: toast <command> [--flag value]...
              [--hw <a100|p100|tpuv3>] (legacy preset shorthand)
              [--method <toast|alpa|automap|manual>] [--budget N] [--seed N]
              [--stages K[,K...]] [--microbatches M] [--require-stages]
-             [--paper] [--validate] [--out spec.json]
+             [--paper] [--validate] [--trace] [--out spec.json]
              (--stages runs the joint stages x sharding MCTS; the mesh is
               the intra-stage mesh, the stage axis is appended behind it;
               --require-stages forces a staged solution or errors)
   apply      --spec spec.json [--validate]
-  search     --model M --mesh 2x2 [--budget N] [--validate-best]
+  search     --model M --mesh 2x2 [--budget N] [--validate-best] [--trace]
   validate   --model M --mesh 2x2 [--budget N]
   bench      --experiment <fig8|fig9|fig10|ablations|differential|pipeline
                            |search-speed|service-load|moe|topology>
@@ -173,7 +184,12 @@ USAGE: toast <command> [--flag value]...
              [--budget N] [--seed N]
              [--search-threads N] [--out-dir DIR] [--canonical]
              [--no-cache] [--expect-verified] [--status]
-  e2e        [--devices N] [--steps N] [--artifacts DIR]"
+  e2e        [--devices N] [--steps N] [--artifacts DIR]
+  trace      --model M --mesh 2x2 [--budget N] [--seed N] [--out trace.json]
+             (runs a traced search; writes Chrome trace-event JSON for
+              Perfetto and prints the SearchTrace telemetry)
+  status     --connect HOST:PORT [--prom]
+             (--prom prints the Prometheus text exposition)"
     );
 }
 
@@ -302,7 +318,8 @@ fn cmd_partition(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         .topology(topo)
         .budget(budget)
         .seed(seed)
-        .validate(validate);
+        .validate(validate)
+        .trace(flags.contains_key("trace"));
     if let Some(spec) = flags.get("stages") {
         // --stages enables the joint (stages x sharding) search; the
         // chosen --method is superseded by the joint MCTS.
@@ -325,6 +342,9 @@ fn cmd_partition(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     }
     let sol = session.run()?;
     println!("{}", sol.summarize());
+    if let Some(tr) = &sol.trace {
+        print_search_trace(tr);
+    }
     if let Some(sa) = &sol.stages {
         println!(
             "pipeline: {} stages cut at instruction boundaries {:?}, {} microbatches \
@@ -451,6 +471,7 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         .action_config(acfg.clone())
         .budget(budget)
         .validate(validate_best)
+        .trace(flags.contains_key("trace"))
         .run()?;
     println!(
         "search: relative cost {:.4}, {} actions, {} evals, {:.2}s",
@@ -459,6 +480,9 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         sol.evals,
         sol.search_time_s
     );
+    if let Some(tr) = &sol.trace {
+        print_search_trace(tr);
+    }
     if let Some(v) = &sol.validation {
         println!(
             "validate-best: max relative divergence vs. interpreter oracle {:.3e} (tol {:.1e})",
@@ -923,7 +947,7 @@ fn cmd_submit(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         Ok(())
     };
 
-    let status_line = if let Some(addr) = flags.get("connect") {
+    let report = if let Some(addr) = flags.get("connect") {
         if flags.contains_key("search-threads") || flags.contains_key("no-verify") {
             eprintln!(
                 "note: --search-threads/--no-verify configure the process the search runs in; \
@@ -938,7 +962,7 @@ fn cmd_submit(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         for _ in 0..n {
             handle(client.recv_response()?)?;
         }
-        client.status()?.render_line()
+        client.status()?
     } else {
         let cfg = service_config(flags, 2);
         println!("submitting {n} requests to an in-process service ({} workers)", cfg.workers);
@@ -949,15 +973,113 @@ fn cmd_submit(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         for _ in 0..n {
             handle(svc.responses.recv()?)?;
         }
-        let line = svc.metrics.report().render_line();
+        // Snapshot before shutdown so the worker table still shows the
+        // fleet that did the work.
+        let report = svc.status_report();
         svc.shutdown();
-        line
+        report
     };
     if flags.contains_key("status") {
-        println!("status: {status_line}");
+        println!("status: {}", report.render_line());
+        println!("{}", report.render_workers());
     }
     anyhow::ensure!(failures == 0, "{failures}/{n} jobs failed or arrived unverified");
     println!("OK — {n}/{n} responses arrived{}", if expect_verified { ", all verified" } else { "" });
+    Ok(())
+}
+
+/// Print the per-search telemetry attached to a traced solution.
+fn print_search_trace(tr: &toast::obs::SearchTrace) {
+    let total = tr.cache_hits + tr.cache_misses;
+    let hit_pct = if total == 0 { 0.0 } else { tr.cache_hit_rate() * 100.0 };
+    println!(
+        "search telemetry: {} curve points, {} tree nodes, {} transposition merges, \
+         eval cache {}/{total} hits ({hit_pct:.0}%)",
+        tr.curve.len(),
+        tr.tree_nodes,
+        tr.transposition_merges,
+        tr.cache_hits,
+    );
+    if let (Some(&(_, first)), Some(&(e, last))) = (tr.curve.first(), tr.curve.last()) {
+        println!("  best cost {first:.4} -> {last:.4} over {e} evals");
+    }
+    for (phase, us) in &tr.phase_us {
+        println!("  phase {phase:<14} {:>10.3} ms", *us as f64 / 1e3);
+    }
+}
+
+/// Run one search with the trace ring enabled and write the Chrome
+/// trace-event document. The emitted JSON is round-tripped through the
+/// same parser before it is written, so a file that lands on disk is
+/// guaranteed to reload.
+fn cmd_trace(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let kind = get_model(flags)?;
+    let mesh = get_mesh(flags)?;
+    let budget: usize = flags.get("budget").and_then(|s| s.parse().ok()).unwrap_or(150);
+    let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(17);
+    let out = flags.get("out").map(String::as_str).unwrap_or("trace.json");
+
+    println!("tracing {} (scaled) on {}", kind.name(), mesh.describe());
+    toast::obs::set_enabled(true);
+    let compiled = CompiledModel::from_kind(kind, false)?;
+    let sol = compiled
+        .partition(&mesh)
+        .topology(get_topology(flags)?)
+        .budget(budget)
+        .seed(seed)
+        .trace(true)
+        .run()?;
+    toast::obs::set_enabled(false);
+    println!("{}", sol.summarize());
+    let tr = sol.trace.as_ref().expect("trace(true) attaches telemetry");
+    print_search_trace(tr);
+
+    let doc = toast::obs::drain_chrome_trace();
+    let text = doc.render();
+    // Round-trip gate: the document must reload through our own parser.
+    let reparsed = toast::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("emitted trace does not re-parse: {e:?}"))?;
+    anyhow::ensure!(reparsed == doc, "trace JSON round-trip changed the document");
+    let n_events = reparsed
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .map(|a| a.len())
+        .unwrap_or(0);
+    std::fs::write(out, text + "\n")?;
+    let dropped = toast::obs::dropped_events();
+    println!(
+        "wrote {n_events} trace events to {out} (load in Perfetto / chrome://tracing){}",
+        if dropped > 0 {
+            format!("; ring dropped {dropped} oldest events")
+        } else {
+            String::new()
+        }
+    );
+    Ok(())
+}
+
+/// Query a running `serve --listen` server for its status report or,
+/// with `--prom`, its Prometheus text exposition.
+fn cmd_status(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let addr = flags
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("status needs --connect HOST:PORT"))?;
+    let mut client = toast::coordinator::ServiceClient::connect(addr)?;
+    if flags.contains_key("prom") {
+        // Verbatim exposition text: `toast status --prom` is what a
+        // Prometheus scrape job shells out to.
+        print!("{}", client.metrics_prom()?);
+        return Ok(());
+    }
+    let report = client.status()?;
+    println!("{}", report.render_line());
+    println!("{}", report.render_workers());
+    for l in &report.latency {
+        println!(
+            "latency {:<12} n={:<6} p50={}us p99={}us",
+            l.phase, l.count, l.p50_us, l.p99_us
+        );
+    }
     Ok(())
 }
 

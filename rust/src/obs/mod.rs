@@ -1,0 +1,698 @@
+//! Zero-dependency observability: structured tracing, per-search
+//! telemetry, and lock-free latency histograms.
+//!
+//! Three layers, all hand-rolled on `std` (no crates):
+//!
+//! * **Tracing core** — [`span`]/[`event`] record into a bounded,
+//!   lock-striped ring buffer of [`TraceEvent`]s with monotonic
+//!   microsecond timestamps. Tracing is *disabled by default*: the only
+//!   cost on a hot path is one relaxed atomic load ([`is_enabled`]).
+//!   When the ring fills, the **oldest** events in a stripe are dropped
+//!   (counted, never blocking a recorder). [`drain_chrome_trace`]
+//!   serializes the buffer via [`crate::util::json`] to Chrome
+//!   trace-event JSON (`ph: "X"` complete events) that loads directly
+//!   in Perfetto / `chrome://tracing`.
+//! * **[`SearchTrace`]** — per-search telemetry (best-cost-over-evals
+//!   curve, tree size, transposition merges, eval-cache hit rates,
+//!   per-phase time breakdown) attached to a solution behind
+//!   `--trace`. Round-trips bit-identically through JSON like every
+//!   other artifact.
+//! * **[`Histogram`]** — lock-free log-bucketed latency histograms
+//!   (64 power-of-two buckets of relaxed `AtomicU64`s) giving running
+//!   p50/p99 within one log bucket of the exact sorted quantile, and
+//!   rendering Prometheus text-exposition `_bucket`/`_sum`/`_count`
+//!   lines for scraping.
+//!
+//! Determinism contract: nothing here feeds back into search decisions
+//! — enabling tracing changes *timing observations only*, so solutions
+//! with tracing on and off are byte-identical (tested).
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Global enable switch + monotonic epoch
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn event recording on or off process-wide. Off by default.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// One relaxed load — the entire disabled-path cost of instrumentation.
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Monotonic microseconds since the first observability call in this
+/// process. All trace timestamps share this epoch, so events from
+/// different threads line up on one Perfetto timeline.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Small dense per-thread id (first-use order), used as the Chrome
+/// trace `tid` and as the ring-stripe selector.
+pub fn thread_tid() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+// ---------------------------------------------------------------------------
+// Trace events and the bounded lock-striped ring
+// ---------------------------------------------------------------------------
+
+/// One completed span (or instant event, `dur_us == 0`). Names and
+/// categories are `&'static str` so recording never allocates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub cat: &'static str,
+    /// Start, microseconds since the process trace epoch.
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub tid: u64,
+}
+
+/// Stripe count: recorders on different threads almost never contend
+/// on the same mutex, and each critical section is a bounded
+/// push/pop — a recorder can be delayed, never blocked indefinitely.
+pub const RING_STRIPES: usize = 8;
+
+/// Default total event capacity (split across stripes).
+pub const DEFAULT_RING_CAPACITY: usize = 1 << 16;
+
+/// Bounded lock-striped ring buffer. When a stripe is full the oldest
+/// event in that stripe is dropped (and counted) to make room — the
+/// tail of a trace is always the most recent activity.
+pub struct Ring {
+    stripes: Vec<Mutex<VecDeque<TraceEvent>>>,
+    per_stripe: usize,
+    dropped: AtomicU64,
+}
+
+impl Ring {
+    pub fn with_capacity(total: usize) -> Ring {
+        let per_stripe = (total / RING_STRIPES).max(1);
+        Ring {
+            stripes: (0..RING_STRIPES)
+                .map(|_| Mutex::new(VecDeque::with_capacity(per_stripe)))
+                .collect(),
+            per_stripe,
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn push(&self, ev: TraceEvent) {
+        let stripe = (ev.tid as usize) % RING_STRIPES;
+        let mut q = self.stripes[stripe].lock().unwrap();
+        if q.len() >= self.per_stripe {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(ev);
+    }
+
+    /// Take every buffered event, oldest first (stable across threads:
+    /// sorted by timestamp, then tid, then name).
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for stripe in &self.stripes {
+            out.extend(stripe.lock().unwrap().drain(..));
+        }
+        out.sort_by(|a, b| {
+            (a.ts_us, a.tid, a.name).cmp(&(b.ts_us, b.tid, b.name))
+        });
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted to make room since construction.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+fn ring() -> &'static Ring {
+    static RING: OnceLock<Ring> = OnceLock::new();
+    RING.get_or_init(|| Ring::with_capacity(DEFAULT_RING_CAPACITY))
+}
+
+/// Record a finished event into the global ring (no-op when disabled).
+pub fn record(ev: TraceEvent) {
+    if is_enabled() {
+        ring().push(ev);
+    }
+}
+
+/// Record an instant event (zero duration) on the calling thread.
+pub fn event(cat: &'static str, name: &'static str) {
+    if is_enabled() {
+        ring().push(TraceEvent { name, cat, ts_us: now_us(), dur_us: 0, tid: thread_tid() });
+    }
+}
+
+/// RAII span: records a complete (`ph: "X"`) event covering its
+/// lifetime when dropped. Constructed inert when tracing is disabled —
+/// the whole cost is one relaxed load.
+#[must_use = "a span records its duration when dropped"]
+pub struct Span {
+    name: &'static str,
+    cat: &'static str,
+    start_us: u64,
+    active: bool,
+}
+
+/// Open a span. Nest freely: each span records independently, and the
+/// containment shows up as nesting on the Perfetto timeline.
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    if is_enabled() {
+        Span { name, cat, start_us: now_us(), active: true }
+    } else {
+        Span { name, cat, start_us: 0, active: false }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.active {
+            let end = now_us();
+            ring().push(TraceEvent {
+                name: self.name,
+                cat: self.cat,
+                ts_us: self.start_us,
+                dur_us: end.saturating_sub(self.start_us),
+                tid: thread_tid(),
+            });
+        }
+    }
+}
+
+/// Serialize events as Chrome trace-event JSON: an object with a
+/// `traceEvents` array of `ph: "X"` complete events — the format
+/// Perfetto and `chrome://tracing` load directly.
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    Json::obj(vec![(
+        "traceEvents",
+        Json::Arr(
+            events
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("name", Json::s(e.name)),
+                        ("cat", Json::s(e.cat)),
+                        ("ph", Json::s("X")),
+                        ("ts", Json::n(e.ts_us as f64)),
+                        ("dur", Json::n(e.dur_us as f64)),
+                        ("pid", Json::n(1.0)),
+                        ("tid", Json::n(e.tid as f64)),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
+}
+
+/// Drain the global ring into Chrome trace-event JSON.
+pub fn drain_chrome_trace() -> Json {
+    chrome_trace(&ring().drain())
+}
+
+/// Events evicted from the global ring so far.
+pub fn dropped_events() -> u64 {
+    ring().dropped()
+}
+
+// ---------------------------------------------------------------------------
+// Per-search telemetry
+// ---------------------------------------------------------------------------
+
+/// Serializable per-search telemetry, attached to a
+/// [`crate::api::Solution`] behind `--trace`. The curve samples
+/// `(evals_so_far, best_relative_cost)` at every strict improvement, so
+/// it is monotone non-increasing by construction and its last point is
+/// the reported solution cost.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SearchTrace {
+    /// `(evals, best_cost)` at each improvement, ending at the final
+    /// reported cost.
+    pub curve: Vec<(u64, f64)>,
+    /// Tree nodes allocated over the whole search.
+    pub tree_nodes: u64,
+    /// Trajectories that landed on a node another trajectory created
+    /// (transposition-table merges).
+    pub transposition_merges: u64,
+    /// Eval-cache hits (completed entries reused).
+    pub cache_hits: u64,
+    /// Eval-cache misses (fresh evaluations reserved).
+    pub cache_misses: u64,
+    /// `(phase, microseconds)` wall-time breakdown, fixed phase order.
+    pub phase_us: Vec<(String, u64)>,
+}
+
+impl SearchTrace {
+    /// Append an improvement sample, keeping the curve monotone
+    /// non-increasing (non-improvements are ignored).
+    pub fn push_improvement(&mut self, evals: u64, cost: f64) {
+        if !cost.is_finite() {
+            return;
+        }
+        match self.curve.last() {
+            Some(&(_, last)) if cost >= last => {}
+            _ => self.curve.push((evals, cost)),
+        }
+    }
+
+    /// Pin the curve's endpoint to the reported solution cost: appends
+    /// a final `(evals, cost)` sample unless the curve already ends
+    /// there.
+    pub fn finish(&mut self, evals: u64, cost: f64) {
+        if !cost.is_finite() {
+            return;
+        }
+        match self.curve.last() {
+            Some(&(_, last)) if last == cost => {}
+            _ => self.curve.push((evals, cost)),
+        }
+    }
+
+    /// Fraction of eval-cache probes answered from the cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "curve",
+                Json::Arr(
+                    self.curve
+                        .iter()
+                        .map(|&(e, c)| Json::Arr(vec![Json::n(e as f64), Json::n(c)]))
+                        .collect(),
+                ),
+            ),
+            ("tree_nodes", Json::n(self.tree_nodes as f64)),
+            ("transposition_merges", Json::n(self.transposition_merges as f64)),
+            ("cache_hits", Json::n(self.cache_hits as f64)),
+            ("cache_misses", Json::n(self.cache_misses as f64)),
+            (
+                "phase_us",
+                Json::Arr(
+                    self.phase_us
+                        .iter()
+                        .map(|(p, us)| {
+                            Json::Arr(vec![Json::s(p.clone()), Json::n(*us as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<SearchTrace> {
+        use anyhow::Context as _;
+        let num = |key: &str| -> crate::Result<u64> {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("search trace missing '{key}'"))
+        };
+        let curve = j
+            .get("curve")
+            .and_then(Json::as_arr)
+            .context("search trace missing 'curve'")?
+            .iter()
+            .map(|pt| {
+                let pt = pt.as_arr().context("curve point is not a pair")?;
+                anyhow::ensure!(pt.len() == 2, "curve point is not a pair");
+                Ok((
+                    pt[0].as_u64().context("curve evals")?,
+                    pt[1].as_f64().context("curve cost")?,
+                ))
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        let phase_us = j
+            .get("phase_us")
+            .and_then(Json::as_arr)
+            .context("search trace missing 'phase_us'")?
+            .iter()
+            .map(|pt| {
+                let pt = pt.as_arr().context("phase entry is not a pair")?;
+                anyhow::ensure!(pt.len() == 2, "phase entry is not a pair");
+                Ok((
+                    pt[0].as_str().context("phase name")?.to_string(),
+                    pt[1].as_u64().context("phase us")?,
+                ))
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(SearchTrace {
+            curve,
+            tree_nodes: num("tree_nodes")?,
+            transposition_merges: num("transposition_merges")?,
+            cache_hits: num("cache_hits")?,
+            cache_misses: num("cache_misses")?,
+            phase_us,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lock-free log-bucketed histograms
+// ---------------------------------------------------------------------------
+
+/// Bucket count: one bucket per significant-bit count of a `u64`.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Log bucket holding `v`: bucket 0 holds 0, bucket `i` holds
+/// `[2^(i-1), 2^i - 1]`.
+pub fn bucket_index(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `i` (used as the Prometheus `le`).
+pub fn bucket_upper_bound(i: usize) -> u64 {
+    if i >= HIST_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Lock-free log-bucketed histogram: 64 power-of-two buckets of
+/// relaxed atomics. Quantile estimates are exact to within one log
+/// bucket (a factor of two) of the true sorted quantile — plenty for
+/// latency p50/p99, and recording is wait-free (two relaxed
+/// `fetch_add`s plus one on the bucket).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one sample (by convention, microseconds).
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// A consistent-enough point-in-time copy (relaxed loads; exact
+    /// once recorders quiesce).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-value copy of a [`Histogram`].
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    /// The `q`-quantile (`0.0..=1.0`), reported as the upper bound of
+    /// the bucket holding the rank-`ceil(q*n)` sample — within one log
+    /// bucket of the exact sorted quantile.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper_bound(i);
+            }
+        }
+        bucket_upper_bound(HIST_BUCKETS - 1)
+    }
+
+    /// Append Prometheus text-exposition lines for this histogram:
+    /// cumulative `_bucket{...,le="..."}` lines over the non-empty
+    /// buckets, the mandatory `+Inf` bucket, then `_sum` and `_count`.
+    /// `label` is a ready-made label pair like `phase="cold"`.
+    pub fn render_prometheus(&self, name: &str, label: &str, out: &mut String) {
+        let mut cumulative = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cumulative += c;
+            let _ = writeln!(
+                out,
+                "{name}_bucket{{{label},le=\"{}\"}} {cumulative}",
+                bucket_upper_bound(i)
+            );
+        }
+        let _ = writeln!(out, "{name}_bucket{{{label},le=\"+Inf\"}} {}", self.count);
+        let _ = writeln!(out, "{name}_sum{{{label}}} {}", self.sum);
+        let _ = writeln!(out, "{name}_count{{{label}}} {}", self.count);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Tests that flip the global enable switch must not interleave.
+    fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+        static GUARD: Mutex<()> = Mutex::new(());
+        GUARD.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_tracing_records_nothing() {
+        let _g = test_guard();
+        set_enabled(false);
+        let before = ring().len();
+        {
+            let _s = span("test", "disabled_span");
+            event("test", "disabled_event");
+        }
+        assert_eq!(ring().len(), before, "disabled tracing must not record");
+    }
+
+    #[test]
+    fn span_nesting_is_contained_and_drains_in_order() {
+        let _g = test_guard();
+        set_enabled(true);
+        let my_tid = thread_tid();
+        {
+            let _outer = span("test", "outer");
+            {
+                let _inner = span("test", "inner");
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        set_enabled(false);
+        let mine: Vec<TraceEvent> =
+            ring().drain().into_iter().filter(|e| e.tid == my_tid).collect();
+        let outer = mine.iter().find(|e| e.name == "outer").expect("outer recorded");
+        let inner = mine.iter().find(|e| e.name == "inner").expect("inner recorded");
+        assert!(outer.ts_us <= inner.ts_us, "outer starts first");
+        assert!(
+            inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us,
+            "inner ends within outer"
+        );
+        // Drain order is oldest-first.
+        let ts: Vec<u64> = mine.iter().map(|e| e.ts_us).collect();
+        let mut sorted = ts.clone();
+        sorted.sort_unstable();
+        assert_eq!(ts, sorted);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_without_blocking() {
+        let ring = Ring::with_capacity(RING_STRIPES * 4); // 4 per stripe
+        for i in 0..10u64 {
+            ring.push(TraceEvent { name: "e", cat: "t", ts_us: i, dur_us: 0, tid: 0 });
+        }
+        // All ten landed in stripe 0 (tid 0): only the newest 4 remain.
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.dropped(), 6);
+        let kept: Vec<u64> = ring.drain().iter().map(|e| e.ts_us).collect();
+        assert_eq!(kept, vec![6, 7, 8, 9], "oldest events are the ones dropped");
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn chrome_trace_json_roundtrips_through_the_parser() {
+        let events = [
+            TraceEvent { name: "select", cat: "mcts", ts_us: 10, dur_us: 5, tid: 1 },
+            TraceEvent { name: "flush", cat: "mcts", ts_us: 16, dur_us: 40, tid: 2 },
+        ];
+        let rendered = chrome_trace(&events).render();
+        let parsed = Json::parse(&rendered).expect("chrome trace parses");
+        let arr = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(arr[0].get("name").and_then(Json::as_str), Some("select"));
+        assert_eq!(arr[1].get("dur").and_then(Json::as_u64), Some(40));
+        assert_eq!(parsed.render(), rendered, "render is stable");
+    }
+
+    #[test]
+    fn search_trace_roundtrips_bit_identically() {
+        let mut t = SearchTrace {
+            curve: vec![],
+            tree_nodes: 123,
+            transposition_merges: 7,
+            cache_hits: 40,
+            cache_misses: 60,
+            phase_us: vec![("select".into(), 12), ("eval".into(), 3400)],
+        };
+        t.push_improvement(0, 1.5);
+        t.push_improvement(3, 1.25);
+        t.push_improvement(5, 1.3); // non-improvement: ignored
+        t.push_improvement(9, 0.75);
+        t.finish(20, 0.75); // already the endpoint: no duplicate
+        assert_eq!(t.curve, vec![(0, 1.5), (3, 1.25), (9, 0.75)]);
+        assert!((t.cache_hit_rate() - 0.4).abs() < 1e-12);
+        let rendered = t.to_json().render();
+        let back = SearchTrace::from_json(&Json::parse(&rendered).unwrap()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.to_json().render(), rendered, "bit-identical round-trip");
+    }
+
+    #[test]
+    fn search_trace_curve_is_monotone_non_increasing() {
+        let mut t = SearchTrace::default();
+        let mut rng = Rng::new(0xC0FFEE);
+        for i in 0..200u64 {
+            t.push_improvement(i, 1.0 + rng.f64());
+        }
+        t.finish(200, t.curve.last().map_or(1.0, |&(_, c)| c));
+        for pair in t.curve.windows(2) {
+            assert!(pair[1].1 < pair[0].1, "curve must strictly improve: {:?}", pair);
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_and_bounds_agree() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        for i in 0..HIST_BUCKETS - 1 {
+            assert_eq!(bucket_index(bucket_upper_bound(i)), i.max(0));
+            assert_eq!(bucket_index(bucket_upper_bound(i) + 1), i + 1);
+        }
+    }
+
+    /// Property: p50/p99 estimates land within one log bucket of the
+    /// exact sorted quantile, across several random sample shapes.
+    #[test]
+    fn histogram_quantiles_within_one_log_bucket_of_exact() {
+        let mut rng = Rng::new(0x0B5E_5EED);
+        for case in 0..20 {
+            let n = 100 + (rng.f64() * 4000.0) as usize;
+            let hist = Histogram::default();
+            let mut samples: Vec<u64> = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Mix of shapes: uniform, heavy-tailed, and clustered.
+                let v = match case % 3 {
+                    0 => (rng.f64() * 1.0e6) as u64,
+                    1 => (rng.f64().powi(6) * 1.0e9) as u64,
+                    _ => 500 + (rng.f64() * 50.0) as u64,
+                };
+                samples.push(v);
+                hist.record(v);
+            }
+            samples.sort_unstable();
+            let snap = hist.snapshot();
+            assert_eq!(snap.count, n as u64);
+            assert_eq!(snap.sum, samples.iter().sum::<u64>());
+            for &q in &[0.5, 0.99] {
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let exact = samples[rank - 1];
+                let est = snap.quantile(q);
+                let db = bucket_index(est) as i64 - bucket_index(exact) as i64;
+                assert!(
+                    db.abs() <= 1,
+                    "case {case}: q={q} exact={exact} est={est} bucket delta {db}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        let snap = Histogram::default().snapshot();
+        assert_eq!(snap.quantile(0.5), 0);
+        assert_eq!(snap.quantile(0.99), 0);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_wellformed_and_cumulative() {
+        let hist = Histogram::default();
+        for v in [1u64, 2, 3, 100, 100, 5000] {
+            hist.record(v);
+        }
+        let mut out = String::new();
+        hist.snapshot().render_prometheus("toast_test_us", "phase=\"cold\"", &mut out);
+        let bucket_lines: Vec<&str> =
+            out.lines().filter(|l| l.starts_with("toast_test_us_bucket")).collect();
+        assert!(bucket_lines.len() >= 4, "non-empty buckets plus +Inf: {out}");
+        // Cumulative counts are non-decreasing and end at the total.
+        let counts: Vec<u64> = bucket_lines
+            .iter()
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        for pair in counts.windows(2) {
+            assert!(pair[1] >= pair[0], "cumulative: {out}");
+        }
+        assert_eq!(*counts.last().unwrap(), 6);
+        assert!(out.contains("le=\"+Inf\"} 6"), "{out}");
+        assert!(out.contains("toast_test_us_sum{phase=\"cold\"} 5206"), "{out}");
+        assert!(out.contains("toast_test_us_count{phase=\"cold\"} 6"), "{out}");
+    }
+}

@@ -48,12 +48,14 @@ use crate::cost::symbolic::SymbolicEvaluator;
 use crate::cost::{Cost, CostModel};
 use crate::ir::Func;
 use crate::mesh::Mesh;
+use crate::obs::{self, SearchTrace};
 use crate::search::actions::{child_key, Action, StageAction};
 use crate::sharding::{partition, ShardingSpec};
 use crate::util::Rng;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::time::Instant;
 
 /// Joint-search configuration (mirrors the flat search's knobs).
 #[derive(Clone, Debug)]
@@ -93,6 +95,10 @@ pub struct JointSearchConfig {
     /// Skip stage-local sharding actions whose (stage, axis) slot is
     /// already spent by an applied stage-local action.
     pub prune_stage_local: bool,
+    /// Collect a [`SearchTrace`] in [`JointOutcome::trace`]. Pure
+    /// observation — the joint search's decisions are identical with
+    /// tracing on or off.
+    pub trace: bool,
 }
 
 impl Default for JointSearchConfig {
@@ -109,6 +115,7 @@ impl Default for JointSearchConfig {
             transpositions: true,
             leaf_rollouts: true,
             prune_stage_local: true,
+            trace: false,
         }
     }
 }
@@ -138,6 +145,10 @@ pub struct JointOutcome {
     /// visits included); `nodes / wall` is the bench's effective
     /// nodes-per-second metric.
     pub nodes: usize,
+    /// Per-search telemetry when [`JointSearchConfig::trace`] is set.
+    /// The curve tracks the symbolic best; its pinned tail is the oracle
+    /// re-priced `relative` (they agree to ≤1e-6 relative cost).
+    pub trace: Option<SearchTrace>,
 }
 
 /// Canonical joint state: stage choice (`u32::MAX` = none) + the flat
@@ -185,14 +196,22 @@ struct Joint<'a> {
     evals: usize,
     nodes: usize,
     require_stage: bool,
+    /// Telemetry ([`JointSearchConfig::trace`]): curve appended on every
+    /// best improvement; probe counters kept unconditionally (cheap).
+    trace: bool,
+    curve: Vec<(u64, f64)>,
+    cache_hits: u64,
+    cache_misses: u64,
 }
 
 impl<'a> Joint<'a> {
     /// Symbolic relative cost of the current trajectory state.
     fn evaluate(&mut self, key: &Key, stage: Option<usize>, spec: &ShardingSpec) -> f64 {
         if let Some(&c) = self.eval_cache.get(key) {
+            self.cache_hits += 1;
             return c;
         }
+        self.cache_misses += 1;
         let c = match stage {
             None => self.sym.relative(spec, &self.base),
             Some(i) => {
@@ -221,6 +240,9 @@ impl<'a> Joint<'a> {
         }
         if c.is_finite() && c < self.best.0 {
             self.best = (c, stage, applied.to_vec());
+            if self.trace {
+                self.curve.push((self.evals as u64, c));
+            }
         }
     }
 }
@@ -442,6 +464,7 @@ fn trajectory(j: &mut Joint, cfg: &JointSearchConfig, rng: &mut Rng) {
 
         if cfg.leaf_rollouts {
             if let Some(&cc) = j.eval_cache.get(&key) {
+                j.cache_hits += 1;
                 c = cc;
                 continue;
             }
@@ -474,6 +497,7 @@ pub fn joint_search(
     stage_actions: &[StageAction],
     cfg: &JointSearchConfig,
 ) -> Result<JointOutcome> {
+    let _sp = obs::span("search", "joint.search");
     let base = {
         let (local, _) = partition(func, &ShardingSpec::unsharded(func), mesh)?;
         model.evaluate(&local, mesh)
@@ -511,9 +535,18 @@ pub fn joint_search(
         evals: 0,
         nodes: 0,
         require_stage: cfg.require_stage,
+        trace: cfg.trace,
+        curve: Vec::new(),
+        cache_hits: 0,
+        cache_misses: 0,
     };
     j.eval_cache.insert((NO_STAGE, Vec::new()), c0);
+    if cfg.trace && !cfg.require_stage {
+        // The curve's floor: the unstaged, unsharded root.
+        j.curve.push((0, c0));
+    }
 
+    let t_search = cfg.trace.then(Instant::now);
     let mut rng = Rng::new(cfg.seed ^ 0x57A6E5);
     let mut stale_rounds = 0usize;
     while j.evals < cfg.budget && stale_rounds < cfg.patience {
@@ -531,6 +564,8 @@ pub fn joint_search(
         }
     }
 
+    let search_us = t_search.map(|t| t.elapsed().as_micros() as u64);
+    let t_final = cfg.trace.then(Instant::now);
     let (_, mut stage_choice, mut best_actions) = j.best.clone();
     if cfg.require_stage && stage_choice.is_none() {
         anyhow::bail!(
@@ -587,6 +622,23 @@ pub fn joint_search(
     };
     let relative = model.relative(&cost, &base);
     let oom = !model.fits(&cost);
+    let trace = t_final.map(|tf| {
+        let mut tr = SearchTrace {
+            curve: j.curve.clone(),
+            tree_nodes: j.tree.len() as u64,
+            // Single-threaded: revisit hits are cache hits, never
+            // concurrent merges.
+            transposition_merges: 0,
+            cache_hits: j.cache_hits,
+            cache_misses: j.cache_misses,
+            phase_us: vec![
+                ("select_expand".to_string(), search_us.unwrap_or(0)),
+                ("finalize".to_string(), tf.elapsed().as_micros() as u64),
+            ],
+        };
+        tr.finish(j.evals as u64, relative);
+        tr
+    });
     Ok(JointOutcome {
         actions: best_actions,
         stage_action: stage_choice,
@@ -597,6 +649,7 @@ pub fn joint_search(
         oom,
         evals: j.evals,
         nodes: j.nodes,
+        trace,
     })
 }
 

@@ -509,7 +509,11 @@ impl<'a> IncrementalEvaluator<'a> {
 
     /// Evaluate the current state's absolute cost.
     pub fn evaluate(&mut self) -> Result<Cost> {
-        self.rebuild_dirty()?;
+        {
+            let _sp = crate::obs::span("search", "incremental.rebuild");
+            self.rebuild_dirty()?;
+        }
+        let _sp = crate::obs::span("search", "incremental.replay");
         Ok(self.replay())
     }
 

@@ -50,10 +50,11 @@ use super::incremental::IncrementalEvaluator;
 use crate::cost::{Cost, CostModel};
 use crate::ir::Func;
 use crate::mesh::Mesh;
+use crate::obs::{self, SearchTrace};
 use crate::sharding::{partition, ShardingSpec, SpecDelta};
 use crate::util::Rng;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -92,6 +93,13 @@ pub struct SearchConfig {
     /// Leaves collected per worker before a batched evaluation pass over
     /// the shared engine; `0` restores eager per-visit evaluation.
     pub batch_leaves: usize,
+    /// Collect a [`SearchTrace`] (best-cost-over-evals curve, probe
+    /// outcome counters, per-phase wall time) in
+    /// [`SearchOutcome::trace`]. Timing observations only — the search's
+    /// decisions are identical with tracing on or off, so a traced
+    /// single-threaded run still reproduces the untraced solution bit
+    /// for bit.
+    pub trace: bool,
 }
 
 impl Default for SearchConfig {
@@ -108,6 +116,7 @@ impl Default for SearchConfig {
             validate_best: false,
             transpositions: true,
             batch_leaves: 8,
+            trace: false,
         }
     }
 }
@@ -144,6 +153,12 @@ pub struct SearchOutcome {
     /// module failed to execute); `None` when validation was not
     /// requested.
     pub validation: Option<f64>,
+    /// Per-search telemetry, collected when [`SearchConfig::trace`] is
+    /// set: the best-relative-cost-over-evals curve (ending at the
+    /// reported cost), probe outcome counters (eval-cache hits vs
+    /// transposition merges vs misses) and a coarse per-phase time
+    /// breakdown. `None` when tracing was off.
+    pub trace: Option<SearchTrace>,
 }
 
 /// Canonical state key — exact, no hash collisions can alias two states.
@@ -291,6 +306,26 @@ struct Shared<'a> {
     evals: AtomicUsize,
     /// Tree-policy state visits (see [`SearchOutcome::nodes`]).
     nodes: AtomicUsize,
+    /// Telemetry collection is on ([`SearchConfig::trace`]): the curve
+    /// and phase timers below are populated. Probe counters are always
+    /// maintained (a relaxed add per visit) but only reported then.
+    trace: bool,
+    /// Best-cost improvements as `(evals at improvement, relative cost)`
+    /// — appended under the `best` lock, so strictly decreasing in cost.
+    curve: Mutex<Vec<(u64, f64)>>,
+    /// Probe found a Done slot: the state was already evaluated.
+    cache_hits: AtomicUsize,
+    /// Probe found a Pending slot: merged with another worker's
+    /// in-flight evaluation of the same transposed state.
+    transposition_merges: AtomicUsize,
+    /// Probe reserved a vacant slot: a fresh evaluation.
+    cache_misses: AtomicUsize,
+    /// Per-phase wall time (µs), summed across workers. `select_expand`
+    /// and `leaf_flush` include the backprop calls they trigger;
+    /// `backprop` is also broken out on its own for the breakdown.
+    phase_select_us: AtomicU64,
+    phase_flush_us: AtomicU64,
+    phase_backprop_us: AtomicU64,
 }
 
 /// Legal actions at a state, recomputed per visit: `applied_mask` is the
@@ -391,13 +426,23 @@ fn eval_cached(
     let (lock, cvar) = shard;
     let slot_n;
     {
+        let mut first_look = true;
         let mut slot = lock.lock().unwrap();
         loop {
             match slot.get(key).copied() {
-                Some(EvalSlot::Done(c)) => return Some(c),
+                Some(EvalSlot::Done(c)) => {
+                    if first_look {
+                        shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Some(c);
+                }
                 Some(EvalSlot::Pending) => {
                     // another thread is evaluating this exact state; wait
                     // for its result instead of duplicating the work.
+                    if first_look {
+                        shared.transposition_merges.fetch_add(1, Ordering::Relaxed);
+                        first_look = false;
+                    }
                     slot = cvar.wait(slot).unwrap();
                 }
                 None => {
@@ -407,6 +452,7 @@ fn eval_cached(
                         return None;
                     }
                     slot_n = n;
+                    shared.cache_misses.fetch_add(1, Ordering::Relaxed);
                     slot.insert(key.clone(), EvalSlot::Pending);
                     break;
                 }
@@ -436,6 +482,12 @@ fn note_best(shared: &Shared, c: f64, applied: &[usize]) {
         let mut best = shared.best.lock().unwrap();
         if c < best.0 {
             *best = (c, applied.to_vec());
+            if shared.trace {
+                // Appended while still holding `best`, so the curve is
+                // strictly decreasing in cost even across workers.
+                let n = shared.evals.load(Ordering::Relaxed) as u64;
+                shared.curve.lock().unwrap().push((n, c));
+            }
         }
     }
 }
@@ -443,6 +495,7 @@ fn note_best(shared: &Shared, c: f64, applied: &[usize]) {
 /// Backpropagate a terminal reward along the trajectory path (terminal
 /// stop edge included). Stripe locks are taken per node, sequentially.
 fn backprop(shared: &Shared, path: &[(StateKey, usize)], key: &StateKey, reward: f64) {
+    let t0 = shared.trace.then(Instant::now);
     {
         let mut shard = shared.tree.shard(key).lock().unwrap();
         let node = shard.entry(key.clone()).or_default();
@@ -460,6 +513,9 @@ fn backprop(shared: &Shared, path: &[(StateKey, usize)], key: &StateKey, reward:
         let e = node.edges.entry(*edge).or_insert((0.0, 0.0));
         e.0 += 1.0;
         e.1 += reward;
+    }
+    if let Some(t0) = t0 {
+        shared.phase_backprop_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
     }
 }
 
@@ -642,9 +698,18 @@ fn trajectory_batched(
         applied.push(chosen);
 
         match shared.eval_cache.probe_or_reserve(&shared.evals, cfg.budget, &key) {
-            Probe::Done(cc) => c = cc,
-            Probe::Pending => break Walk::Leaf { owned: false },
-            Probe::Reserved => break Walk::Leaf { owned: true },
+            Probe::Done(cc) => {
+                shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+                c = cc;
+            }
+            Probe::Pending => {
+                shared.transposition_merges.fetch_add(1, Ordering::Relaxed);
+                break Walk::Leaf { owned: false };
+            }
+            Probe::Reserved => {
+                shared.cache_misses.fetch_add(1, Ordering::Relaxed);
+                break Walk::Leaf { owned: true };
+            }
             Probe::Exhausted => break Walk::Dead,
         }
     };
@@ -689,6 +754,7 @@ fn flush_batch(
     if batch.is_empty() {
         return;
     }
+    let _sp = obs::span("search", "mcts.flush_batch");
     let mut order: Vec<usize> = (0..batch.len()).filter(|&i| batch[i].owned).collect();
     order.sort_by(|&x, &y| batch[x].ordered.cmp(&batch[y].ordered));
     for &i in &order {
@@ -743,6 +809,7 @@ pub fn search(
     cfg: &SearchConfig,
 ) -> SearchOutcome {
     let t0 = Instant::now();
+    let _sp = obs::span("search", "mcts.search");
     let base = {
         let unsharded = ShardingSpec::unsharded(func);
         let (local, _) = partition(func, &unsharded, mesh).expect("identity partition");
@@ -759,6 +826,14 @@ pub fn search(
         best: Mutex::new((f64::INFINITY, Vec::new())),
         evals: AtomicUsize::new(0),
         nodes: AtomicUsize::new(0),
+        trace: cfg.trace,
+        curve: Mutex::new(Vec::new()),
+        cache_hits: AtomicUsize::new(0),
+        transposition_merges: AtomicUsize::new(0),
+        cache_misses: AtomicUsize::new(0),
+        phase_select_us: AtomicU64::new(0),
+        phase_flush_us: AtomicU64::new(0),
+        phase_backprop_us: AtomicU64::new(0),
     };
     // Op rules depend only on `func`: compute once, share across every
     // worker engine in every round.
@@ -772,6 +847,10 @@ pub fn search(
     let c0 = model.relative(&base, &base);
     shared.eval_cache.insert_done(StateKey::new(), c0);
     *shared.best.lock().unwrap() = (c0, Vec::new());
+    if cfg.trace {
+        // The curve's floor: "do nothing" at zero evaluations.
+        shared.curve.lock().unwrap().push((0, c0));
+    }
 
     let mut rounds_without_improvement = 0usize;
     let mut round_idx = 0usize;
@@ -807,7 +886,13 @@ pub fn search(
                             if shared.evals.load(Ordering::Relaxed) >= cfg2.budget {
                                 break;
                             }
+                            let tw = cfg2.trace.then(Instant::now);
                             trajectory_eager(shared, &cfg2, &mut rng, &mut engine);
+                            if let Some(tw) = tw {
+                                shared
+                                    .phase_select_us
+                                    .fetch_add(tw.elapsed().as_micros() as u64, Ordering::Relaxed);
+                            }
                         }
                     } else {
                         let mut engine_stack: Vec<usize> = Vec::new();
@@ -818,8 +903,15 @@ pub fn search(
                             if shared.evals.load(Ordering::Relaxed) >= cfg2.budget {
                                 break;
                             }
+                            let tw = cfg2.trace.then(Instant::now);
                             trajectory_batched(shared, &cfg2, &mut rng, &mut spec, &mut batch);
+                            if let Some(tw) = tw {
+                                shared
+                                    .phase_select_us
+                                    .fetch_add(tw.elapsed().as_micros() as u64, Ordering::Relaxed);
+                            }
                             if batch.len() >= cfg2.batch_leaves {
+                                let tf = cfg2.trace.then(Instant::now);
                                 flush_batch(
                                     shared,
                                     &cfg2,
@@ -828,10 +920,17 @@ pub fn search(
                                     &mut batch,
                                     &mut local_evals,
                                 );
+                                if let Some(tf) = tf {
+                                    shared.phase_flush_us.fetch_add(
+                                        tf.elapsed().as_micros() as u64,
+                                        Ordering::Relaxed,
+                                    );
+                                }
                             }
                         }
                         // Residual leaves: every Pending this worker owns
                         // must be Done before the round joins.
+                        let tf = cfg2.trace.then(Instant::now);
                         flush_batch(
                             shared,
                             &cfg2,
@@ -840,6 +939,11 @@ pub fn search(
                             &mut batch,
                             &mut local_evals,
                         );
+                        if let Some(tf) = tf {
+                            shared
+                                .phase_flush_us
+                                .fetch_add(tf.elapsed().as_micros() as u64, Ordering::Relaxed);
+                        }
                     }
                 });
             }
@@ -853,6 +957,7 @@ pub fn search(
         round_idx += 1;
     }
 
+    let t_final = cfg.trace.then(Instant::now);
     let (mut best_cost, mut best_actions) = shared.best.lock().unwrap().clone();
     // Rebuild the winning spec and re-cost it through the materialized
     // oracle (partition + CostModel::evaluate). A best trajectory that
@@ -912,17 +1017,43 @@ pub fn search(
         None
     };
 
+    let evals = shared.evals.load(Ordering::Relaxed);
+    let tree_nodes: usize = shared.tree.shards.iter().map(|s| s.lock().unwrap().len()).sum();
+    let trace = t_final.map(|tf| {
+        let g = |a: &AtomicUsize| a.load(Ordering::Relaxed) as u64;
+        let us = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let mut tr = SearchTrace {
+            curve: shared.curve.lock().unwrap().clone(),
+            tree_nodes: tree_nodes as u64,
+            transposition_merges: g(&shared.transposition_merges),
+            cache_hits: g(&shared.cache_hits),
+            cache_misses: g(&shared.cache_misses),
+            phase_us: vec![
+                ("select_expand".to_string(), us(&shared.phase_select_us)),
+                ("backprop".to_string(), us(&shared.phase_backprop_us)),
+                ("leaf_flush".to_string(), us(&shared.phase_flush_us)),
+                ("finalize".to_string(), tf.elapsed().as_micros() as u64),
+            ],
+        };
+        // Pin the curve's tail to the cost the outcome reports, so a
+        // degraded (unsharded-fallback) search still yields a curve that
+        // ends where the solution says it does.
+        tr.finish(evals as u64, best_cost);
+        tr
+    });
+
     SearchOutcome {
         actions: best_actions,
         spec,
         cost,
         base,
         relative: best_cost,
-        evals: shared.evals.load(Ordering::Relaxed),
+        evals,
         nodes: shared.nodes.load(Ordering::Relaxed),
-        tree_nodes: shared.tree.shards.iter().map(|s| s.lock().unwrap().len()).sum(),
+        tree_nodes,
         wall: t0.elapsed(),
         validation,
+        trace,
     }
 }
 
@@ -1058,6 +1189,40 @@ mod tests {
         assert_eq!(a.actions, b.actions);
         assert_eq!(a.evals, b.evals, "reservation-based counter must be exact");
         assert_eq!(a.nodes, b.nodes);
+    }
+
+    #[test]
+    fn trace_records_curve_and_counters_without_changing_the_search() {
+        let f = mlp(2048, 512, 2048, 512);
+        let mesh = Mesh::grid(&[("b", 4)]);
+        let model = CostModel::new(Topology::from_kind(HardwareKind::A100));
+        let nda = Nda::analyze(&f);
+        let actions = build_actions(
+            &f,
+            &nda,
+            &mesh,
+            &ActionSpaceConfig { min_color_dims: 1, ..Default::default() },
+        );
+        let cfg = SearchConfig { threads: 1, ..quick_cfg() };
+        let plain = search(&f, &mesh, &model, &actions, &cfg);
+        let traced =
+            search(&f, &mesh, &model, &actions, &SearchConfig { trace: true, ..cfg });
+        assert!(plain.trace.is_none(), "tracing is opt-in");
+        let tr = traced.trace.expect("trace requested");
+        // Tracing observes; it never steers the search.
+        assert_eq!(traced.actions, plain.actions);
+        assert_eq!(traced.relative, plain.relative);
+        assert_eq!(traced.evals, plain.evals);
+        // The curve starts at the do-nothing floor, never worsens, and
+        // ends at the cost the outcome reports.
+        assert_eq!(tr.curve.first().unwrap(), &(0, 1.0));
+        assert!(tr.curve.windows(2).all(|w| w[0].0 <= w[1].0 && w[1].1 < w[0].1));
+        assert_eq!(tr.curve.last().unwrap().1, traced.relative);
+        assert_eq!(tr.tree_nodes, traced.tree_nodes as u64);
+        // Every evaluation was a probe miss; revisits hit the cache.
+        assert_eq!(tr.cache_misses, traced.evals as u64);
+        assert!(tr.cache_hits > 0, "revisited states must hit the eval cache");
+        assert_eq!(tr.phase_us.len(), 4, "select/backprop/flush/finalize breakdown");
     }
 
     #[test]

@@ -59,6 +59,18 @@ impl Json {
         }
     }
 
+    /// Number as u64; None if negative, fractional or not a number.
+    /// (Counters above 2^53 lose f64 precision — the wire layer
+    /// string-encodes those; this accessor is for in-range telemetry.)
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(v) if *v >= 0.0 && *v == v.trunc() && *v <= u64::MAX as f64 => {
+                Some(*v as u64)
+            }
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -527,6 +539,9 @@ mod tests {
         assert_eq!(Json::n(7.0).as_usize(), Some(7));
         assert_eq!(Json::n(-1.0).as_usize(), None);
         assert_eq!(Json::n(1.5).as_usize(), None);
+        assert_eq!(Json::n(7.0).as_u64(), Some(7));
+        assert_eq!(Json::n(-1.0).as_u64(), None);
+        assert_eq!(Json::n(1.5).as_u64(), None);
         assert_eq!(Json::Bool(true).as_bool(), Some(true));
         assert_eq!(Json::s("x").as_f64(), None);
     }

@@ -1,0 +1,113 @@
+//! Integration tests for the observability subsystem: tracing must be
+//! a pure observer (identical solutions with it on or off), and a
+//! traced zoo search must emit a Chrome trace-event document that
+//! round-trips through the hand-rolled JSON parser.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use toast::api::{CompiledModel, MctsStrategy, Solution};
+use toast::mesh::Mesh;
+use toast::models::ModelKind;
+use toast::search::SearchConfig;
+use toast::util::json::Json;
+
+/// The trace ring and its enable flag are process-global; serialize the
+/// tests that touch them (cargo runs tests in this binary in parallel).
+fn obs_guard() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+fn run_zoo_search(kind: ModelKind, mesh: &Mesh, trace: bool) -> Solution {
+    let compiled = CompiledModel::from_kind(kind, false).unwrap();
+    compiled
+        .partition(mesh)
+        // Single-threaded search: bit-reproducible, so byte-identity is
+        // a meaningful assertion.
+        .strategy(MctsStrategy { template: SearchConfig { threads: 1, ..Default::default() } })
+        .budget(80)
+        .seed(11)
+        .trace(trace)
+        .run()
+        .expect("zoo search succeeds")
+}
+
+/// Tracing is observation, never steering: the same deterministic
+/// search with telemetry on — and the global ring enabled — produces a
+/// byte-identical solution artifact once the trace attachment itself is
+/// stripped. (Wall clock is zeroed the same way the transport-parity
+/// tests do; it is nondeterministic with or without tracing.)
+#[test]
+fn solutions_with_tracing_on_and_off_are_byte_identical() {
+    let _g = obs_guard();
+    let canonical = |mut sol: Solution| {
+        sol.search_time_s = 0.0;
+        sol.trace = None;
+        sol.to_json_string()
+    };
+    let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
+
+    let plain = run_zoo_search(ModelKind::Attention, &mesh, false);
+    assert!(plain.trace.is_none(), "untraced sessions must not attach telemetry");
+
+    toast::obs::set_enabled(true);
+    let traced = run_zoo_search(ModelKind::Attention, &mesh, true);
+    toast::obs::set_enabled(false);
+    toast::obs::drain_chrome_trace(); // leave the global ring empty
+    let tr = traced.trace.clone().expect("traced sessions attach telemetry");
+
+    assert_eq!(
+        canonical(plain),
+        canonical(traced.clone()),
+        "tracing changed the solution — it must be a pure observer"
+    );
+    // The telemetry itself is self-consistent: a monotone non-increasing
+    // improvement curve ending at exactly the reported relative cost.
+    assert!(!tr.curve.is_empty(), "a traced search records its curve");
+    assert!(
+        tr.curve.windows(2).all(|w| w[0].1 >= w[1].1),
+        "curve must be monotone non-increasing: {:?}",
+        tr.curve
+    );
+    assert_eq!(tr.curve.last().map(|&(_, c)| c), Some(traced.relative));
+    assert!(!tr.phase_us.is_empty(), "a traced search records its phase breakdown");
+}
+
+/// A traced zoo search with the ring enabled emits a Chrome trace-event
+/// document (the `toast trace` path): nonempty, round-trips through
+/// `util/json.rs`, and every event carries the required fields.
+#[test]
+fn traced_zoo_search_emits_chrome_trace_json_that_roundtrips() {
+    let _g = obs_guard();
+    toast::obs::drain_chrome_trace(); // start from an empty ring
+    toast::obs::set_enabled(true);
+    let mesh = Mesh::grid(&[("data", 2), ("model", 2)]);
+    let sol = run_zoo_search(ModelKind::Mlp, &mesh, true);
+    toast::obs::set_enabled(false);
+    assert!(sol.trace.is_some());
+
+    let doc = toast::obs::drain_chrome_trace();
+    let text = doc.render();
+    let back = Json::parse(&text).expect("chrome trace re-parses");
+    assert_eq!(back, doc, "render/parse must round-trip the document");
+
+    let events = back
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("chrome trace document has a traceEvents array");
+    assert!(!events.is_empty(), "a traced search must emit events");
+    for ev in events {
+        for field in ["name", "cat", "ph", "ts", "pid", "tid"] {
+            assert!(ev.get(field).is_some(), "event missing '{field}': {}", ev.render());
+        }
+    }
+    // The search hot path is represented: at least one search-category
+    // span made it into the ring.
+    assert!(
+        events.iter().any(|e| e.get("cat").and_then(Json::as_str) == Some("search")),
+        "expected search-category events in the trace"
+    );
+}

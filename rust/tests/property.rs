@@ -709,6 +709,18 @@ fn prop_wire_roundtrip_p10() {
                 pass: true,
                 seed: 7,
             }),
+            // A third of the artifacts carry search telemetry.
+            trace: (case % 3 == 1).then(|| {
+                let mut tr = toast::obs::SearchTrace::default();
+                tr.push_improvement(0, 1.0);
+                tr.push_improvement(case as u64 + 1, 0.5);
+                tr.cache_hits = case as u64;
+                tr.cache_misses = case as u64 + 2;
+                tr.tree_nodes = 3 * case as u64;
+                tr.transposition_merges = case as u64 / 2;
+                tr.phase_us = vec![("select_expand".to_string(), 123), ("finalize".to_string(), 4)];
+                tr
+            }),
         };
         let back = Solution::from_json_str(&sol.to_json_string()).unwrap();
         assert_eq!(back, sol, "case {case}: Solution drifted through JSON");

@@ -154,7 +154,7 @@ fn frames_roundtrip_through_a_real_socket_pair() {
         other => panic!("expected response back, got '{}'", other.tag()),
     }
     let report = StatusReport { requests: 5, requeued: 2, workers: 3, ..Default::default() };
-    write_message(&mut wr, &Message::StatusReport(report)).unwrap();
+    write_message(&mut wr, &Message::StatusReport(report.clone())).unwrap();
     match read_message(&mut rd, MAX_FRAME_LEN).unwrap().unwrap() {
         Message::StatusReport(back) => assert_eq!(back, report),
         other => panic!("expected status report back, got '{}'", other.tag()),
@@ -751,4 +751,61 @@ fn multi_job_worker_death_requeues_every_in_flight_job_exactly_once() {
     assert_eq!(server.pending_requeue_entries(), 0, "ledger clears on completion");
     server.shutdown();
     survivor.join().unwrap();
+}
+
+/// The observability surface over the socket: after a cold search and a
+/// cache hit, a `metrics` request answers well-formed Prometheus text
+/// exposition with histogram buckets for BOTH latency phases, and the
+/// status report carries per-worker detail for the connected fleet.
+#[test]
+fn metrics_request_serves_prometheus_exposition_with_phase_histograms() {
+    let (addr, _metrics, server) = start_server(0, Duration::from_secs(5));
+    let worker = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        run_worker_on(stream, &deterministic_worker("prom-worker")).unwrap();
+    });
+
+    let mut req = default_request(ModelKind::Mlp, Method::Toast);
+    req.budget = 60;
+    req.seed = 21;
+    let mut client = ServiceClient::connect(&addr.to_string()).unwrap();
+    client.submit(req.clone()).unwrap();
+    client.recv_response().unwrap().result.expect("cold request succeeds");
+    client.submit(req).unwrap();
+    client.recv_response().unwrap().result.expect("cache hit succeeds");
+
+    let prom = client.metrics_prom().unwrap();
+    assert!(prom.contains("# TYPE toast_requests_total counter"), "{prom}");
+    assert!(prom.contains("toast_requests_total 2"), "{prom}");
+    assert!(prom.contains("# TYPE toast_request_latency_us histogram"), "{prom}");
+    assert!(
+        prom.contains("toast_request_latency_us_bucket{phase=\"search_cold\",le="),
+        "cold search latency must be in the exposition: {prom}"
+    );
+    assert!(
+        prom.contains("toast_request_latency_us_bucket{phase=\"cache_hit\",le="),
+        "cache-hit latency must be in the exposition: {prom}"
+    );
+    assert!(prom.contains("toast_request_latency_us_count{phase=\"search_cold\"} 1"), "{prom}");
+    assert!(prom.contains("toast_request_latency_us_count{phase=\"cache_hit\"} 1"), "{prom}");
+    // Well-formed: every non-comment line is `name{labels} value` with a
+    // parseable numeric value.
+    for line in prom.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (_, value) = line.rsplit_once(' ').expect("metric line has a value");
+        assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+    }
+
+    // The same client sees the fleet in the status report.
+    let report = client.status().unwrap();
+    assert_eq!(report.workers_detail.len(), 1, "{}", report.render_workers());
+    let w = &report.workers_detail[0];
+    assert_eq!(w.name, "prom-worker");
+    assert_eq!(w.capacity, 1);
+    assert_eq!(w.in_flight, 0);
+    assert_eq!(w.completed, 1, "the cache hit never reached the worker");
+    assert!(report.latency.iter().any(|l| l.phase == "search_cold" && l.count == 1));
+    assert!(report.latency.iter().any(|l| l.phase == "cache_hit" && l.count == 1));
+
+    server.shutdown();
+    worker.join().unwrap();
 }
